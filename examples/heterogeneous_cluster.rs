@@ -1,0 +1,64 @@
+//! Heterogeneous-cluster walkthrough: the paper's §6.4 testbed
+//! (2× Jetson TX2 NX + 6× Raspberry-Pi at mixed frequencies) running
+//! VGG16 and YOLOv2 under every parallelisation scheme, reporting the
+//! Table-5 metrics (utilisation, redundancy, memory) and Fig.-16 energy.
+//!
+//! ```bash
+//! cargo run --release --example heterogeneous_cluster
+//! ```
+
+use pico::cluster::Cluster;
+use pico::util::{fmt_secs, Table};
+use pico::{baselines, modelzoo, partition, pipeline, sim};
+
+fn main() -> anyhow::Result<()> {
+    let cluster = Cluster::paper_heterogeneous();
+    println!(
+        "cluster: {}",
+        cluster.devices.iter().map(|d| d.name.clone()).collect::<Vec<_>>().join(", ")
+    );
+    for model in ["vgg16", "yolov2"] {
+        let g = modelzoo::by_name(model)?;
+        println!("\n=== {} ===", g.name);
+        let pieces = partition::partition(&g, 5, None)?.pieces;
+        let n = 50;
+
+        let ce = sim::simulate_sync(&g, &cluster, &baselines::coedge(&g, &cluster), n);
+        let efl = sim::simulate_sync(&g, &cluster, &baselines::early_fused(&g, &cluster, 2), n);
+        let ofl =
+            sim::simulate_sync(&g, &cluster, &baselines::optimal_fused(&g, &pieces, &cluster), n);
+        let plan = pipeline::plan(&g, &pieces, &cluster, f64::INFINITY)?;
+        let pico_r = sim::simulate_pipeline(&g, &cluster, &plan, n);
+
+        let mut t = Table::new(&[
+            "scheme", "thpt /s", "latency", "avg util %", "avg redu %", "avg mem MB",
+            "energy/task J",
+        ]);
+        for r in [&ce, &efl, &ofl, &pico_r] {
+            t.row(&[
+                r.scheme.clone(),
+                format!("{:.3}", r.throughput),
+                fmt_secs(r.latency),
+                format!("{:.1}", r.avg_utilization() * 100.0),
+                format!("{:.2}", r.avg_redundancy() * 100.0),
+                format!("{:.1}", r.avg_mem() / 1e6),
+                format!("{:.1}", r.energy_per_task()),
+            ]);
+        }
+        t.print();
+
+        // Per-device drill-down for PICO (Table 5's per-device columns).
+        let mut pd = Table::new(&["device", "util %", "redu %", "mem MB"]);
+        for d in &pico_r.per_device {
+            pd.row(&[
+                cluster.devices[d.device].name.clone(),
+                format!("{:.1}", d.utilization * 100.0),
+                format!("{:.2}", d.redundancy * 100.0),
+                format!("{:.1}", (d.mem_model + d.mem_feature) as f64 / 1e6),
+            ]);
+        }
+        println!("PICO per-device:");
+        pd.print();
+    }
+    Ok(())
+}

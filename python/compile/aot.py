@@ -1,0 +1,246 @@
+"""AOT compile path: lower the e2e models to HLO text for the rust runtime.
+
+Run once at build time (`make artifacts`); python never runs at request
+time. For every artifact we:
+
+    lowered = jax.jit(fn).lower(example_input)
+    stablehlo = lowered.compiler_ir("stablehlo")
+    comp = xla_client mlir->XlaComputation (return_tuple=True)
+    write comp.as_hlo_text()
+
+HLO *text* is the interchange format — the `xla` crate's xla_extension
+0.5.1 rejects jax>=0.5 serialized HloModuleProtos (64-bit instruction ids);
+the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Exported per model (weights baked in as HLO constants, seed-deterministic):
+  artifacts/<model>/spec.json            layer DAG for the rust graph loader
+  artifacts/<model>/full.hlo.txt         whole model, single device
+  artifacts/<model>/io/input.bin         golden input  (f32 LE, CHW)
+  artifacts/<model>/io/expected.bin      golden output (f32 LE)
+  artifacts/<model>/pipeline/plan.json   default pipeline plan (stages,
+                                         device splits) for the e2e example
+  artifacts/<model>/pipeline/<key>.hlo.txt
+                                         per-(layer x tile-shape) stage
+                                         executables for that plan
+  artifacts/manifest.json                index of everything above
+
+Artifact keys match rust/src/runtime/engine.rs::artifact_key():
+  conv/pool:  <layer>__r<in_rows>_pt<pad_top>_pb<pad_bottom>
+  dense:      <layer>__full
+(add/concat/flatten/split/stitch are executed natively by the rust runtime;
+they are data movement, not compute — paper §5.3 does the same in C++.)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .plan import row_splits, stage_tile_geometry
+
+# Default e2e pipeline plans (stage layer lists + device counts per stage).
+# The tinyvgg plan is the 3-stage / 4-device configuration used by
+# examples/e2e_serve.rs; stage 1 is feature-split across 2 devices.
+DEFAULT_PLANS: dict[str, dict] = {
+    "tinyvgg": {
+        "stages": [
+            {"layers": ["conv1", "conv2", "pool1"], "devices": 2},
+            {"layers": ["conv3", "conv4", "pool2"], "devices": 1},
+            {"layers": ["conv5", "pool3", "flatten", "fc1", "fc2"], "devices": 1},
+        ]
+    },
+    "tinyresnet": {
+        "stages": [
+            {"layers": ["stem", "b1_conv1", "b1_conv2", "b1_add"], "devices": 2},
+            {
+                "layers": [
+                    "b2_conv1", "b2_conv2", "b2_proj", "b2_add",
+                    "pool", "flatten", "fc",
+                ],
+                "devices": 1,
+            },
+        ]
+    },
+    "tinyinception": {
+        "stages": [
+            {
+                "layers": [
+                    "stem", "a_1x1", "b_1x1", "b_3x3", "c_1x7", "c_7x1",
+                    "d_pool", "d_1x1", "cat",
+                ],
+                "devices": 2,
+            },
+            {"layers": ["tail", "pool", "flatten", "fc"], "devices": 1},
+        ]
+    },
+}
+
+SEED = 0
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: baked weights must survive the text round-trip.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_fn(fn, *example_args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+def artifact_key(layer: str, in_rows: int, pad_top: int, pad_bottom: int) -> str:
+    return f"{layer}__r{in_rows}_pt{pad_top}_pb{pad_bottom}"
+
+
+def export_full_model(spec: M.ModelSpec, params, outdir: str) -> dict:
+    """Whole-model executable + golden io vectors."""
+    fn = M.forward_fn(spec, params, impl="pallas")
+    x_spec = jax.ShapeDtypeStruct(spec.input_shape, jnp.float32)
+    hlo = lower_fn(fn, x_spec)
+    full_path = os.path.join(outdir, "full.hlo.txt")
+    with open(full_path, "w") as f:
+        f.write(hlo)
+
+    rng = np.random.default_rng(42)
+    x = rng.standard_normal(spec.input_shape).astype(np.float32)
+    y = np.asarray(M.forward(spec, params, jnp.asarray(x), impl="ref"))
+    io_dir = os.path.join(outdir, "io")
+    os.makedirs(io_dir, exist_ok=True)
+    x.tofile(os.path.join(io_dir, "input.bin"))
+    y.tofile(os.path.join(io_dir, "expected.bin"))
+    return {
+        "full": "full.hlo.txt",
+        "input": "io/input.bin",
+        "expected": "io/expected.bin",
+        "input_shape": list(spec.input_shape),
+        "output_shape": list(y.shape),
+    }
+
+
+def export_pipeline(spec: M.ModelSpec, params, plan: dict, outdir: str) -> dict:
+    """Per-(layer x tile-shape) executables for the default plan."""
+    shapes = spec.shapes()
+    pipe_dir = os.path.join(outdir, "pipeline")
+    os.makedirs(pipe_dir, exist_ok=True)
+    artifacts: dict[str, str] = {}
+    stages_json = []
+
+    for stage in plan["stages"]:
+        layers = stage["layers"]
+        ndev = stage["devices"]
+        sinks = [
+            n
+            for n in layers
+            if all(c.name not in layers for c in spec.consumers(n))
+        ]
+        # Row-split every (spatial) sink's output equally across devices.
+        splits = {
+            s: (
+                row_splits(shapes[s][1], ndev)
+                if len(shapes[s]) == 3
+                else [(0, 1)] * ndev
+            )
+            for s in sinks
+        }
+        stages_json.append(
+            {
+                "layers": layers,
+                "devices": ndev,
+                "sinks": sinks,
+                "splits": {s: [list(iv) for iv in splits[s]] for s in sinks},
+            }
+        )
+        for k in range(ndev):
+            sink_out = {s: splits[s][k] for s in sinks}
+            tiles = stage_tile_geometry(spec, layers, sink_out)
+            for name in layers:
+                l = spec.layer(name)
+                t = tiles[name]
+                if l.op in ("conv", "maxpool", "avgpool"):
+                    key = artifact_key(name, t.in_rows, t.pad_top, t.pad_bottom)
+                    if key in artifacts:
+                        continue
+                    c_in, _, w_in = shapes[l.inputs[0]]
+                    pad = (t.pad_top, t.pad_bottom, l.padding[1], l.padding[1])
+
+                    def fn(x, l=l, pad=pad):
+                        return (M.layer_forward(l, params, [x], "pallas", pad),)
+
+                    x_spec = jax.ShapeDtypeStruct((c_in, t.in_rows, w_in), jnp.float32)
+                    hlo = lower_fn(fn, x_spec)
+                    fname = f"{key}.hlo.txt"
+                    with open(os.path.join(pipe_dir, fname), "w") as f:
+                        f.write(hlo)
+                    artifacts[key] = f"pipeline/{fname}"
+                elif l.op == "dense":
+                    key = f"{name}__full"
+                    if key in artifacts:
+                        continue
+                    (f_in,) = shapes[l.inputs[0]]
+
+                    def fn(x, l=l):
+                        return (M.layer_forward(l, params, [x], "pallas"),)
+
+                    x_spec = jax.ShapeDtypeStruct((f_in,), jnp.float32)
+                    hlo = lower_fn(fn, x_spec)
+                    fname = f"{key}.hlo.txt"
+                    with open(os.path.join(pipe_dir, fname), "w") as f:
+                        f.write(hlo)
+                    artifacts[key] = f"pipeline/{fname}"
+                # add/concat/flatten: rust-native data movement, no artifact.
+
+    plan_json = {"model": spec.name, "stages": stages_json, "artifacts": artifacts}
+    with open(os.path.join(pipe_dir, "plan.json"), "w") as f:
+        json.dump(plan_json, f, indent=1)
+    return plan_json
+
+
+def export_model(name: str, outdir: str) -> dict:
+    spec = M.E2E_MODELS[name]()
+    params = M.init_params(spec, seed=SEED)
+    model_dir = os.path.join(outdir, name)
+    os.makedirs(model_dir, exist_ok=True)
+    spec.save(os.path.join(model_dir, "spec.json"))
+    entry = {"spec": "spec.json"}
+    entry.update(export_full_model(spec, params, model_dir))
+    plan_json = export_pipeline(spec, params, DEFAULT_PLANS[name], model_dir)
+    entry["plan"] = "pipeline/plan.json"
+    entry["pipeline_artifacts"] = len(plan_json["artifacts"])
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument(
+        "--models",
+        default=",".join(M.E2E_MODELS),
+        help="comma-separated subset of models to export",
+    )
+    args = ap.parse_args()
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+    manifest: dict = {"seed": SEED, "models": {}}
+    for name in args.models.split(","):
+        name = name.strip()
+        print(f"[aot] exporting {name} ...", flush=True)
+        manifest["models"][name] = export_model(name, outdir)
+        print(f"[aot] {name}: {manifest['models'][name]['pipeline_artifacts']} pipeline artifacts")
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {os.path.join(outdir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

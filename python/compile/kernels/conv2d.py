@@ -1,0 +1,143 @@
+"""Pallas conv2d kernel — the L1 compute hot-spot of a PICO device.
+
+One pipeline-stage device executes its model segment over a spatial tile of
+the feature map. The dominant cost (>99% of FLOPs for VGG16/YOLOv2, paper
+Fig. 2) is the conv layer, implemented here as a Pallas kernel.
+
+Tiling scheme
+-------------
+The grid walks row-tiles of the *output* feature map: grid step `i` produces
+output rows [i*TH, (i+1)*TH). Because consecutive output tiles need
+*overlapping* input rows (the halo: TH*sh + KH - sh input rows per tile,
+shifted by TH*sh), the input cannot be expressed as a disjoint BlockSpec
+partition; we therefore keep the input resident (memory_space ANY) and load
+each tile's halo window with `pl.dslice` inside the kernel. On a real TPU
+this becomes a manual HBM→VMEM DMA schedule (double-buffering the next halo
+window while the MXU contracts the current one); under `interpret=True` the
+same structure runs as numpy and is validated against `ref.conv2d`.
+
+Within a tile the contraction is laid out MXU-friendly: a static (KH, KW)
+unroll of `einsum('chw,oc->ohw')` — i.e. KH*KW dot products over C_in with
+the spatial dims vectorised, which lowers to the same contraction shape an
+im2col×weights matmul would feed the systolic array.
+
+VMEM accounting (per grid step, f32):
+  input window  C_in  * (TH*sh + KH - sh) * W_in
+  weights       C_out * C_in * KH * KW
+  output tile   C_out * TH * W_out
+`vmem_bytes()` below computes this; the kernel picker keeps it under the
+16 MiB VMEM budget documented in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _pick_row_tile(h_out: int, target: int = 8) -> int:
+    """Largest divisor of h_out that is <= target (so the grid is exact)."""
+    best = 1
+    for th in range(1, min(h_out, target) + 1):
+        if h_out % th == 0:
+            best = th
+    return best
+
+
+def _conv_kernel(x_ref, w_ref, b_ref, o_ref, *, th, sh, sw, kh, kw, activation):
+    """Grid step: produce output rows [i*th, (i+1)*th) for all channels."""
+    i = pl.program_id(0)
+    c_out, _, w_out = o_ref.shape
+    c_in = x_ref.shape[0]
+    # Halo window of input rows feeding this output tile.
+    in_rows = th * sh + kh - sh
+    x = x_ref[:, pl.dslice(i * th * sh, in_rows), :]
+    acc = jnp.zeros((c_out, th, w_out), dtype=jnp.float32)
+    # Static unroll over kernel taps; each tap is a C_in contraction with the
+    # spatial dims vectorised (MXU-shaped under a real TPU lowering).
+    for dh in range(kh):
+        for dw in range(kw):
+            # rows dh, dh+sh, ..., cols dw, dw+sw, ...
+            patch = jax.lax.slice(
+                x,
+                (0, dh, dw),
+                (c_in, dh + (th - 1) * sh + 1, dw + (w_out - 1) * sw + 1),
+                (1, sh, sw),
+            )
+            acc = acc + jnp.einsum(
+                "chw,oc->ohw", patch, w_ref[:, :, dh, dw],
+                preferred_element_type=jnp.float32,
+            )
+    acc = acc + b_ref[...][:, None, None]
+    o_ref[...] = ref.apply_activation(acc, activation)
+
+
+def vmem_bytes(
+    c_in: int,
+    c_out: int,
+    h_out: int,
+    w_in: int,
+    w_out: int,
+    kernel: tuple[int, int],
+    stride: tuple[int, int],
+    row_tile: int | None = None,
+) -> int:
+    """Per-grid-step VMEM footprint estimate in bytes (f32)."""
+    kh, kw = kernel
+    sh, _ = stride
+    th = row_tile if row_tile is not None else _pick_row_tile(h_out)
+    in_rows = th * sh + kh - sh
+    return 4 * (c_in * in_rows * w_in + c_out * c_in * kh * kw + c_out * th * w_out)
+
+
+def conv2d(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray | None = None,
+    stride: tuple[int, int] = (1, 1),
+    padding: tuple[int, int] = (0, 0),
+    activation: str = "linear",
+    row_tile: int | None = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Pallas conv2d matching `ref.conv2d` exactly.
+
+    x: (C_in, H, W); w: (C_out, C_in, KH, KW); b: (C_out,) or None.
+    `interpret=True` is mandatory for CPU-PJRT execution (real TPU lowering
+    emits a Mosaic custom-call the CPU plugin cannot run).
+    """
+    c_out, c_in, kh, kw = w.shape
+    assert x.shape[0] == c_in, f"C_in mismatch: {x.shape[0]} vs {c_in}"
+    sh, sw = stride
+    ph, pw = padding
+    if ph or pw:
+        x = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw)))
+    _, h_in, w_in = x.shape
+    h_out = (h_in - kh) // sh + 1
+    w_out = (w_in - kw) // sw + 1
+    assert h_out >= 1 and w_out >= 1, "kernel larger than padded input"
+    if b is None:
+        b = jnp.zeros((c_out,), dtype=x.dtype)
+    th = row_tile if row_tile is not None else _pick_row_tile(h_out)
+    assert h_out % th == 0, f"row tile {th} must divide H_out {h_out}"
+
+    kern = functools.partial(
+        _conv_kernel, th=th, sh=sh, sw=sw, kh=kh, kw=kw, activation=activation
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(h_out // th,),
+        in_specs=[
+            pl.BlockSpec(x.shape, lambda i: (0, 0, 0)),  # halo: resident input
+            pl.BlockSpec(w.shape, lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec(b.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((c_out, th, w_out), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((c_out, h_out, w_out), x.dtype),
+        interpret=interpret,
+    )(x, w, b)

@@ -1,0 +1,61 @@
+"""Pallas dense (fully-connected) kernel.
+
+Classifier heads (VGG16's three fc layers, Tiny models' head) are a plain
+matmul. The grid tiles output rows of the weight matrix; each step computes
+one (TO,)-slice of the output as a (TO, F) x (F,) contraction — the
+MXU-shaped primitive — then adds bias and activation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _pick_row_tile(n: int, target: int = 128) -> int:
+    best = 1
+    for t in range(1, min(n, target) + 1):
+        if n % t == 0:
+            best = t
+    return best
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, activation):
+    y = jnp.dot(w_ref[...], x_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = ref.apply_activation(y + b_ref[...], activation)
+
+
+def dense(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray | None = None,
+    activation: str = "linear",
+    row_tile: int | None = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Pallas dense layer matching `ref.dense`. x: (F,), w: (O, F)."""
+    o, f = w.shape
+    assert x.shape == (f,), f"shape mismatch: x {x.shape} vs w {w.shape}"
+    if b is None:
+        b = jnp.zeros((o,), dtype=x.dtype)
+    to = row_tile if row_tile is not None else _pick_row_tile(o)
+    assert o % to == 0, f"row tile {to} must divide O {o}"
+
+    kern = functools.partial(_dense_kernel, activation=activation)
+    return pl.pallas_call(
+        kern,
+        grid=(o // to,),
+        in_specs=[
+            pl.BlockSpec((f,), lambda i: (0,)),
+            pl.BlockSpec((to, f), lambda i: (i, 0)),
+            pl.BlockSpec((to,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((to,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((o,), x.dtype),
+        interpret=interpret,
+    )(x, w, b)

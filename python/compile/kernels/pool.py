@@ -1,0 +1,91 @@
+"""Pallas pooling kernels (max / average).
+
+Same row-tile grid and halo-window scheme as conv2d.py: the grid walks
+output row tiles, the (much smaller) input stays resident and each step
+loads its overlapping window with `pl.dslice`. Pool layers are <1% of the
+FLOPs (paper Fig. 2) but change the feature geometry, so the rust cost
+model and these kernels must agree exactly on output shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_row_tile(h_out: int, target: int = 8) -> int:
+    best = 1
+    for th in range(1, min(h_out, target) + 1):
+        if h_out % th == 0:
+            best = th
+    return best
+
+
+def _pool_kernel(x_ref, o_ref, *, th, sh, sw, kh, kw, op):
+    i = pl.program_id(0)
+    c, _, w_out = o_ref.shape
+    in_rows = th * sh + kh - sh
+    x = x_ref[:, pl.dslice(i * th * sh, in_rows), :]
+    if op == "max":
+        acc = jnp.full((c, th, w_out), -jnp.inf, dtype=jnp.float32)
+    else:
+        acc = jnp.zeros((c, th, w_out), dtype=jnp.float32)
+    for dh in range(kh):
+        for dw in range(kw):
+            patch = jax.lax.slice(
+                x,
+                (0, dh, dw),
+                (c, dh + (th - 1) * sh + 1, dw + (w_out - 1) * sw + 1),
+                (1, sh, sw),
+            )
+            acc = jnp.maximum(acc, patch) if op == "max" else acc + patch
+    o_ref[...] = acc if op == "max" else acc / float(kh * kw)
+
+
+def _pool(x, kernel, stride, padding, op, interpret):
+    kh, kw = kernel
+    sh, sw = stride if stride is not None else kernel
+    ph, pw = padding
+    if ph or pw:
+        pad_value = -jnp.inf if op == "max" else 0.0
+        x = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw)), constant_values=pad_value)
+    c, h_in, w_in = x.shape
+    h_out = (h_in - kh) // sh + 1
+    w_out = (w_in - kw) // sw + 1
+    assert h_out >= 1 and w_out >= 1, "pool window larger than padded input"
+    th = _pick_row_tile(h_out)
+
+    kern = functools.partial(_pool_kernel, th=th, sh=sh, sw=sw, kh=kh, kw=kw, op=op)
+    return pl.pallas_call(
+        kern,
+        grid=(h_out // th,),
+        in_specs=[pl.BlockSpec(x.shape, lambda i: (0, 0, 0))],
+        out_specs=pl.BlockSpec((c, th, w_out), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, h_out, w_out), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def maxpool2d(
+    x: jnp.ndarray,
+    kernel: tuple[int, int] = (2, 2),
+    stride: tuple[int, int] | None = None,
+    padding: tuple[int, int] = (0, 0),
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Pallas max-pool matching `ref.maxpool2d`. x: (C, H, W)."""
+    return _pool(x, kernel, stride, padding, "max", interpret)
+
+
+def avgpool2d(
+    x: jnp.ndarray,
+    kernel: tuple[int, int] = (2, 2),
+    stride: tuple[int, int] | None = None,
+    padding: tuple[int, int] = (0, 0),
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Pallas average-pool matching `ref.avgpool2d`. x: (C, H, W)."""
+    return _pool(x, kernel, stride, padding, "avg", interpret)

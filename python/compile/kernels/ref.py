@@ -1,0 +1,123 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth for the L1 kernels: every Pallas
+kernel in this package must match its oracle to float32 tolerance on all
+shapes the e2e models use (and on the hypothesis sweeps in python/tests).
+
+Conventions (shared with kernels and with the rust runtime):
+  * features are CHW float32, no batch dimension — the serving pipeline
+    moves single frames (tiles) between devices, batching happens upstream;
+  * conv weights are (C_out, C_in, KH, KW), bias (C_out,);
+  * padding is explicit (ph, pw) zero padding, stride (sh, sw);
+  * activations: "linear", "relu", "leaky" (YOLO-style slope 0.1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def apply_activation(y: jnp.ndarray, activation: str) -> jnp.ndarray:
+    """Apply one of the supported activation functions."""
+    if activation == "linear":
+        return y
+    if activation == "relu":
+        return jnp.maximum(y, 0.0)
+    if activation == "leaky":
+        return jnp.where(y > 0, y, 0.1 * y)
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def conv2d(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray | None = None,
+    stride: tuple[int, int] = (1, 1),
+    padding: tuple[int, int] = (0, 0),
+    activation: str = "linear",
+) -> jnp.ndarray:
+    """2D convolution oracle.
+
+    x: (C_in, H, W); w: (C_out, C_in, KH, KW); b: (C_out,) or None.
+    Returns (C_out, H_out, W_out) with H_out = (H + 2ph - KH)//sh + 1.
+    """
+    sh, sw = stride
+    ph, pw = padding
+    y = jax.lax.conv_general_dilated(
+        x[None],  # NCHW
+        w,  # OIHW
+        window_strides=(sh, sw),
+        padding=((ph, ph), (pw, pw)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )[0]
+    if b is not None:
+        y = y + b[:, None, None]
+    return apply_activation(y, activation)
+
+
+def maxpool2d(
+    x: jnp.ndarray,
+    kernel: tuple[int, int] = (2, 2),
+    stride: tuple[int, int] | None = None,
+    padding: tuple[int, int] = (0, 0),
+) -> jnp.ndarray:
+    """Max-pooling oracle. x: (C, H, W)."""
+    kh, kw = kernel
+    sh, sw = stride if stride is not None else kernel
+    ph, pw = padding
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, kh, kw),
+        window_strides=(1, sh, sw),
+        padding=((0, 0), (ph, ph), (pw, pw)),
+    )
+
+
+def avgpool2d(
+    x: jnp.ndarray,
+    kernel: tuple[int, int] = (2, 2),
+    stride: tuple[int, int] | None = None,
+    padding: tuple[int, int] = (0, 0),
+) -> jnp.ndarray:
+    """Average-pooling oracle (count_include_pad=True, matches rust runtime)."""
+    kh, kw = kernel
+    sh, sw = stride if stride is not None else kernel
+    ph, pw = padding
+    summed = jax.lax.reduce_window(
+        x,
+        0.0,
+        jax.lax.add,
+        window_dimensions=(1, kh, kw),
+        window_strides=(1, sh, sw),
+        padding=((0, 0), (ph, ph), (pw, pw)),
+    )
+    return summed / float(kh * kw)
+
+
+def dense(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray | None = None,
+    activation: str = "linear",
+) -> jnp.ndarray:
+    """Fully-connected oracle. x: (F,), w: (O, F), b: (O,)."""
+    y = w @ x
+    if b is not None:
+        y = y + b
+    return apply_activation(y, activation)
+
+
+def add(xs: list[jnp.ndarray]) -> jnp.ndarray:
+    """Elementwise sum connector (ResNet skip connections)."""
+    out = xs[0]
+    for x in xs[1:]:
+        out = out + x
+    return out
+
+
+def concat(xs: list[jnp.ndarray]) -> jnp.ndarray:
+    """Channel-dimension concat connector (Inception blocks)."""
+    return jnp.concatenate(xs, axis=0)

@@ -1,0 +1,331 @@
+"""L2: CNN models as layer-spec DAGs executed with the L1 Pallas kernels.
+
+A model is a `ModelSpec`: an ordered list of `LayerSpec`s forming a DAG
+(inputs reference earlier layer names). The same spec is exported as JSON
+and loaded by the rust coordinator (`rust/src/graph/`), so python (numerics)
+and rust (scheduling/runtime) agree layer-for-layer.
+
+Three e2e models are defined here, small enough to AOT-lower per-tile on
+CPU, each exercising one structure class from the paper's §2.3:
+  * tiny_vgg       — chain structure (VGG16-style conv/pool body + fc head);
+  * tiny_resnet    — block structure with Add skip connections (ResNet34);
+  * tiny_inception — block structure with multi-branch Concat and the
+                     unbalanced 1x7/7x1 kernels of InceptionV3's Fig. 6 case.
+
+`forward()` runs a spec either with the Pallas kernels (impl="pallas", the
+lowering used for AOT artifacts) or the pure-jnp oracles (impl="ref").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import conv2d as kconv
+from .kernels import matmul as kmatmul
+from .kernels import pool as kpool
+from .kernels import ref
+
+OPS = ("input", "conv", "maxpool", "avgpool", "add", "concat", "flatten", "dense")
+
+
+@dataclasses.dataclass
+class LayerSpec:
+    """One vertex of the CNN DAG (paper notation: layer l_i)."""
+
+    name: str
+    op: str
+    inputs: list[str] = dataclasses.field(default_factory=list)
+    out_channels: int = 0  # conv: C_out; dense: units
+    kernel: tuple[int, int] = (1, 1)
+    stride: tuple[int, int] = (1, 1)
+    padding: tuple[int, int] = (0, 0)
+    activation: str = "linear"
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name,
+            "op": self.op,
+            "inputs": list(self.inputs),
+            "out_channels": self.out_channels,
+            "kernel": list(self.kernel),
+            "stride": list(self.stride),
+            "padding": list(self.padding),
+            "activation": self.activation,
+        }
+
+
+@dataclasses.dataclass
+class ModelSpec:
+    """A CNN model: DAG of layers, topologically ordered."""
+
+    name: str
+    input_shape: tuple[int, int, int]  # (C, H, W)
+    layers: list[LayerSpec]
+
+    def layer(self, name: str) -> LayerSpec:
+        for l in self.layers:
+            if l.name == name:
+                return l
+        raise KeyError(name)
+
+    def consumers(self, name: str) -> list[LayerSpec]:
+        return [l for l in self.layers if name in l.inputs]
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name,
+            "input_shape": list(self.input_shape),
+            "layers": [l.to_json() for l in self.layers],
+        }
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1)
+
+    # ---- shape inference (must agree with rust/src/graph/shape.rs) ----
+
+    def shapes(self) -> dict[str, tuple[int, ...]]:
+        """Output shape of every layer."""
+        out: dict[str, tuple[int, ...]] = {}
+        for l in self.layers:
+            if l.op == "input":
+                out[l.name] = self.input_shape
+                continue
+            ins = [out[i] for i in l.inputs]
+            if l.op == "conv":
+                c, h, w = ins[0]
+                kh, kw = l.kernel
+                sh, sw = l.stride
+                ph, pw = l.padding
+                out[l.name] = (
+                    l.out_channels,
+                    (h + 2 * ph - kh) // sh + 1,
+                    (w + 2 * pw - kw) // sw + 1,
+                )
+            elif l.op in ("maxpool", "avgpool"):
+                c, h, w = ins[0]
+                kh, kw = l.kernel
+                sh, sw = l.stride
+                ph, pw = l.padding
+                out[l.name] = (c, (h + 2 * ph - kh) // sh + 1, (w + 2 * pw - kw) // sw + 1)
+            elif l.op == "add":
+                assert len(set(ins)) == 1, f"add inputs differ: {ins}"
+                out[l.name] = ins[0]
+            elif l.op == "concat":
+                c = sum(s[0] for s in ins)
+                assert len({s[1:] for s in ins}) == 1, f"concat spatial differ: {ins}"
+                out[l.name] = (c, ins[0][1], ins[0][2])
+            elif l.op == "flatten":
+                n = 1
+                for d in ins[0]:
+                    n *= d
+                out[l.name] = (n,)
+            elif l.op == "dense":
+                out[l.name] = (l.out_channels,)
+            else:
+                raise ValueError(f"unknown op {l.op}")
+        return out
+
+
+# ----------------------------------------------------------------- params
+
+
+def init_params(spec: ModelSpec, seed: int = 0) -> dict[str, dict[str, np.ndarray]]:
+    """He-style random weights, deterministic per (model, seed)."""
+    rng = np.random.default_rng(seed)
+    shapes = spec.shapes()
+    params: dict[str, dict[str, np.ndarray]] = {}
+    for l in spec.layers:
+        if l.op == "conv":
+            c_in = shapes[l.inputs[0]][0]
+            kh, kw = l.kernel
+            fan_in = c_in * kh * kw
+            params[l.name] = {
+                "w": (rng.standard_normal((l.out_channels, c_in, kh, kw)) * np.sqrt(2.0 / fan_in)).astype(np.float32),
+                "b": (rng.standard_normal((l.out_channels,)) * 0.01).astype(np.float32),
+            }
+        elif l.op == "dense":
+            f = shapes[l.inputs[0]][0]
+            params[l.name] = {
+                "w": (rng.standard_normal((l.out_channels, f)) * np.sqrt(2.0 / f)).astype(np.float32),
+                "b": (rng.standard_normal((l.out_channels,)) * 0.01).astype(np.float32),
+            }
+    return params
+
+
+# ---------------------------------------------------------------- forward
+
+
+def layer_forward(
+    l: LayerSpec,
+    params: dict[str, dict[str, np.ndarray]],
+    xs: list[jnp.ndarray],
+    impl: str = "pallas",
+    pad_override: tuple[int, int, int, int] | None = None,
+) -> jnp.ndarray:
+    """Execute one layer. `pad_override` = (top, bottom, left, right): used
+    for tile execution where border tiles get asymmetric padding (interior
+    halo rows come from the neighbouring tile instead of zero padding)."""
+    use_pallas = impl == "pallas"
+    if l.op == "input":
+        return xs[0]
+    if l.op == "conv":
+        w = jnp.asarray(params[l.name]["w"])
+        b = jnp.asarray(params[l.name]["b"])
+        x = xs[0]
+        if pad_override is not None:
+            pt, pb, pleft, pright = pad_override
+            x = jnp.pad(x, ((0, 0), (pt, pb), (pleft, pright)))
+            pad = (0, 0)
+        else:
+            pad = l.padding
+        if use_pallas:
+            return kconv.conv2d(x, w, b, l.stride, pad, l.activation)
+        return ref.conv2d(x, w, b, l.stride, pad, l.activation)
+    if l.op in ("maxpool", "avgpool"):
+        x = xs[0]
+        if pad_override is not None:
+            pt, pb, pleft, pright = pad_override
+            cval = -jnp.inf if l.op == "maxpool" else 0.0
+            x = jnp.pad(x, ((0, 0), (pt, pb), (pleft, pright)), constant_values=cval)
+            pad = (0, 0)
+        else:
+            pad = l.padding
+        fn_pallas = kpool.maxpool2d if l.op == "maxpool" else kpool.avgpool2d
+        fn_ref = ref.maxpool2d if l.op == "maxpool" else ref.avgpool2d
+        if use_pallas:
+            return fn_pallas(x, l.kernel, l.stride, pad)
+        return fn_ref(x, l.kernel, l.stride, pad)
+    if l.op == "add":
+        return ref.add(xs)
+    if l.op == "concat":
+        return ref.concat(xs)
+    if l.op == "flatten":
+        return xs[0].reshape(-1)
+    if l.op == "dense":
+        w = jnp.asarray(params[l.name]["w"])
+        b = jnp.asarray(params[l.name]["b"])
+        if use_pallas:
+            return kmatmul.dense(xs[0], w, b, l.activation)
+        return ref.dense(xs[0], w, b, l.activation)
+    raise ValueError(f"unknown op {l.op}")
+
+
+def forward(
+    spec: ModelSpec,
+    params: dict[str, dict[str, np.ndarray]],
+    x: jnp.ndarray,
+    impl: str = "pallas",
+) -> jnp.ndarray:
+    """Full-model forward pass; returns the last layer's output."""
+    acts: dict[str, jnp.ndarray] = {}
+    for l in spec.layers:
+        if l.op == "input":
+            acts[l.name] = x
+        else:
+            acts[l.name] = layer_forward(l, params, [acts[i] for i in l.inputs], impl)
+    return acts[spec.layers[-1].name]
+
+
+def forward_fn(
+    spec: ModelSpec, params: dict[str, dict[str, np.ndarray]], impl: str = "pallas"
+) -> Callable[[jnp.ndarray], tuple[jnp.ndarray, ...]]:
+    """Closure (weights baked) suitable for jax.jit().lower() — AOT entry."""
+
+    def fn(x):
+        return (forward(spec, params, x, impl),)
+
+    return fn
+
+
+# ------------------------------------------------------------ e2e models
+
+
+def tiny_vgg(input_hw: int = 32) -> ModelSpec:
+    """Chain-structure e2e model (VGG16 body shrunk to 32x32)."""
+    L = LayerSpec
+    return ModelSpec(
+        name="tinyvgg",
+        input_shape=(3, input_hw, input_hw),
+        layers=[
+            L("input", "input"),
+            L("conv1", "conv", ["input"], 16, (3, 3), (1, 1), (1, 1), "relu"),
+            L("conv2", "conv", ["conv1"], 16, (3, 3), (1, 1), (1, 1), "relu"),
+            L("pool1", "maxpool", ["conv2"], kernel=(2, 2), stride=(2, 2)),
+            L("conv3", "conv", ["pool1"], 32, (3, 3), (1, 1), (1, 1), "relu"),
+            L("conv4", "conv", ["conv3"], 32, (3, 3), (1, 1), (1, 1), "relu"),
+            L("pool2", "maxpool", ["conv4"], kernel=(2, 2), stride=(2, 2)),
+            L("conv5", "conv", ["pool2"], 64, (3, 3), (1, 1), (1, 1), "relu"),
+            L("pool3", "maxpool", ["conv5"], kernel=(2, 2), stride=(2, 2)),
+            L("flatten", "flatten", ["pool3"]),
+            L("fc1", "dense", ["flatten"], 64, activation="relu"),
+            L("fc2", "dense", ["fc1"], 10),
+        ],
+    )
+
+
+def tiny_resnet(input_hw: int = 32) -> ModelSpec:
+    """Block-structure e2e model with ResNet-style Add skip connections."""
+    L = LayerSpec
+    return ModelSpec(
+        name="tinyresnet",
+        input_shape=(3, input_hw, input_hw),
+        layers=[
+            L("input", "input"),
+            L("stem", "conv", ["input"], 16, (3, 3), (1, 1), (1, 1), "relu"),
+            # residual block 1 (identity skip)
+            L("b1_conv1", "conv", ["stem"], 16, (3, 3), (1, 1), (1, 1), "relu"),
+            L("b1_conv2", "conv", ["b1_conv1"], 16, (3, 3), (1, 1), (1, 1)),
+            L("b1_add", "add", ["b1_conv2", "stem"]),
+            # residual block 2 (strided, 1x1 projection skip)
+            L("b2_conv1", "conv", ["b1_add"], 32, (3, 3), (2, 2), (1, 1), "relu"),
+            L("b2_conv2", "conv", ["b2_conv1"], 32, (3, 3), (1, 1), (1, 1)),
+            L("b2_proj", "conv", ["b1_add"], 32, (1, 1), (2, 2), (0, 0)),
+            L("b2_add", "add", ["b2_conv2", "b2_proj"]),
+            L("pool", "maxpool", ["b2_add"], kernel=(2, 2), stride=(2, 2)),
+            L("flatten", "flatten", ["pool"]),
+            L("fc", "dense", ["flatten"], 10),
+        ],
+    )
+
+
+def tiny_inception(input_hw: int = 32) -> ModelSpec:
+    """Block-structure e2e model with multi-branch Concat, including the
+    unbalanced 1x7 / 7x1 kernel pair from the paper's Fig. 6."""
+    L = LayerSpec
+    return ModelSpec(
+        name="tinyinception",
+        input_shape=(3, input_hw, input_hw),
+        layers=[
+            L("input", "input"),
+            L("stem", "conv", ["input"], 16, (3, 3), (2, 2), (1, 1), "relu"),
+            # branch a: pointwise
+            L("a_1x1", "conv", ["stem"], 8, (1, 1), (1, 1), (0, 0), "relu"),
+            # branch b: 1x1 -> 3x3
+            L("b_1x1", "conv", ["stem"], 8, (1, 1), (1, 1), (0, 0), "relu"),
+            L("b_3x3", "conv", ["b_1x1"], 8, (3, 3), (1, 1), (1, 1), "relu"),
+            # branch c: the Fig. 6 unbalanced pair 1x7 then 7x1
+            L("c_1x7", "conv", ["stem"], 8, (1, 7), (1, 1), (0, 3), "relu"),
+            L("c_7x1", "conv", ["c_1x7"], 8, (7, 1), (1, 1), (3, 0), "relu"),
+            # branch d: pooled shortcut
+            L("d_pool", "maxpool", ["stem"], kernel=(3, 3), stride=(1, 1), padding=(1, 1)),
+            L("d_1x1", "conv", ["d_pool"], 8, (1, 1), (1, 1), (0, 0), "relu"),
+            L("cat", "concat", ["a_1x1", "b_3x3", "c_7x1", "d_1x1"]),
+            L("tail", "conv", ["cat"], 32, (3, 3), (2, 2), (1, 1), "relu"),
+            L("pool", "maxpool", ["tail"], kernel=(2, 2), stride=(2, 2)),
+            L("flatten", "flatten", ["pool"]),
+            L("fc", "dense", ["flatten"], 10),
+        ],
+    )
+
+
+E2E_MODELS: dict[str, Callable[[], ModelSpec]] = {
+    "tinyvgg": tiny_vgg,
+    "tinyresnet": tiny_resnet,
+    "tinyinception": tiny_inception,
+}

@@ -1,0 +1,217 @@
+"""Pipeline-plan tile geometry: the paper's Eq. (2)-(3) in global row
+coordinates, shared contract between the AOT exporter and the rust runtime.
+
+PICO splits feature maps across devices by *rows* (1-D spatial partition,
+full width). For a stage S = (segment M, devices D, output splits F^k) each
+device k must produce rows F^k of every sink layer of M; the rows of every
+interior layer it must compute follow from the top-down propagation of
+§3.2.1:
+
+    in_start = out_start * s - p            (global, may be < 0)
+    in_end   = (out_end - 1) * s - p + k    (global, may exceed H)
+
+Out-of-range rows are zero padding (the consumer's own conv padding at the
+feature border); in-range rows outside the device's slice are the *halo*
+fetched from the stage input. A layer consumed by several in-stage layers
+produces the union (Eq. 2 max) and each consumer slices its sub-window.
+
+The rust side implements the identical arithmetic in
+`rust/src/cost/feature.rs`; `python/tests/test_plan.py` and the rust
+integration tests pin both to the same golden values.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from .model import LayerSpec, ModelSpec, layer_forward
+
+# A row interval [start, end) in a layer's *output* grid, global coords.
+Interval = tuple[int, int]
+
+
+def required_rows(l: LayerSpec, out_iv: Interval) -> Interval:
+    """Input rows (global, unclipped) needed to produce output rows out_iv.
+
+    Eq. (3) of the paper, generalised with padding so border tiles know how
+    much of their requirement is zero padding rather than neighbour halo.
+    """
+    s, e = out_iv
+    assert e > s, f"empty interval {out_iv}"
+    if l.op in ("conv", "maxpool", "avgpool"):
+        sh = l.stride[0]
+        kh = l.kernel[0]
+        ph = l.padding[0]
+        return (s * sh - ph, (e - 1) * sh - ph + kh)
+    if l.op in ("add", "concat", "input"):
+        return (s, e)
+    raise ValueError(f"required_rows undefined for op {l.op}")
+
+
+@dataclasses.dataclass
+class LayerTile:
+    """What one device computes for one layer of its stage segment."""
+
+    layer: str
+    out_iv: Interval  # rows of this layer's output the device produces (clipped)
+    in_rows: int  # height of the (clipped) input slab fed to the layer
+    pad_top: int  # zero rows added above (border padding)
+    pad_bottom: int  # zero rows added below
+
+
+def stage_tile_geometry(
+    spec: ModelSpec,
+    stage_layers: list[str],
+    sink_out: dict[str, Interval],
+) -> dict[str, LayerTile]:
+    """Propagate required output intervals through a stage segment.
+
+    `stage_layers` is a contiguous segment of the model DAG (topo order
+    preserved); `sink_out` assigns the device's output rows for each sink
+    layer (a layer whose consumers are all outside the segment).
+    Returns per-layer tiles, including tiles for the segment's *source
+    feeds* (layers outside the segment whose output the segment reads) —
+    those entries have op "feed" semantics: out_iv = rows the device must
+    fetch from the previous stage.
+    """
+    shapes = spec.shapes()
+    in_stage = set(stage_layers)
+    # Required output interval per layer = union over in-stage consumers.
+    need: dict[str, Interval] = dict(sink_out)
+    for name in reversed(stage_layers):
+        l = spec.layer(name)
+        if l.op in ("flatten", "dense"):
+            # Heads need the full feature; only valid on an unsplit tile.
+            src = l.inputs[0]
+            h = shapes[src][1] if len(shapes[src]) == 3 else 1
+            full = (0, h)
+            if name in need:
+                pass  # dense/flatten sinks produce their whole output
+            for src_name in l.inputs:
+                prev = need.get(src_name)
+                iv = full if len(shapes[src_name]) == 3 else (0, 1)
+                need[src_name] = _union(prev, iv)
+            continue
+        out_iv = need.get(name)
+        if out_iv is None:
+            raise ValueError(f"layer {name} has no consumer requirement")
+        h_out = shapes[name][1]
+        out_iv = _clip(out_iv, h_out)
+        need[name] = out_iv
+        req = required_rows(l, out_iv)
+        for src_name in l.inputs:
+            h_src = shapes[src_name][1] if len(shapes[src_name]) == 3 else 1
+            prev = need.get(src_name)
+            need[src_name] = _union(prev, _clip(req, h_src))
+
+    tiles: dict[str, LayerTile] = {}
+    for name in stage_layers:
+        l = spec.layer(name)
+        out_iv = _clip(need[name], shapes[name][1] if len(shapes[name]) == 3 else 1)
+        if l.op in ("conv", "maxpool", "avgpool"):
+            req = required_rows(l, out_iv)
+            h_in = shapes[l.inputs[0]][1]
+            pad_top = max(0, -req[0])
+            pad_bottom = max(0, req[1] - h_in)
+            in_rows = min(req[1], h_in) - max(req[0], 0)
+            tiles[name] = LayerTile(name, out_iv, in_rows, pad_top, pad_bottom)
+        else:
+            in_rows = 0
+            if l.inputs:
+                src = l.inputs[0]
+                if len(shapes[src]) == 3:
+                    in_rows = _clip(need[src], shapes[src][1])[1] - _clip(need[src], shapes[src][1])[0]
+            tiles[name] = LayerTile(name, out_iv, in_rows, 0, 0)
+    # Source feeds: rows to fetch from the previous stage.
+    for name in stage_layers:
+        for src_name in spec.layer(name).inputs:
+            if src_name not in in_stage and src_name not in tiles:
+                h_src = shapes[src_name][1] if len(shapes[src_name]) == 3 else 1
+                iv = _clip(need[src_name], h_src)
+                tiles[src_name] = LayerTile(src_name, iv, 0, 0, 0)
+    return tiles
+
+
+def _union(a: Interval | None, b: Interval) -> Interval:
+    if a is None:
+        return b
+    return (min(a[0], b[0]), max(a[1], b[1]))
+
+
+def _clip(iv: Interval, h: int) -> Interval:
+    s, e = max(iv[0], 0), min(iv[1], h)
+    assert e > s, f"interval {iv} empty after clipping to height {h}"
+    return (s, e)
+
+
+def run_stage_tile(
+    spec: ModelSpec,
+    params,
+    stage_layers: list[str],
+    tiles: dict[str, LayerTile],
+    feeds: dict[str, jnp.ndarray],
+    impl: str = "pallas",
+) -> dict[str, jnp.ndarray]:
+    """Execute one device's share of a stage.
+
+    `feeds` maps each segment source-feed layer name to the tensor slab
+    covering tiles[feed].out_iv rows of that layer's output. Returns the
+    produced slab for every in-stage layer (keyed by name); callers read
+    the sink entries. This is the python twin of the rust stage executor —
+    used to generate golden vectors and to validate the AOT artifacts.
+    """
+    shapes = spec.shapes()
+    avail: dict[str, tuple[jnp.ndarray, Interval]] = {
+        name: (feeds[name], tiles[name].out_iv) for name in feeds
+    }
+    out: dict[str, jnp.ndarray] = {}
+    for name in stage_layers:
+        l = spec.layer(name)
+        t = tiles[name]
+        if l.op in ("conv", "maxpool", "avgpool"):
+            req = required_rows(l, t.out_iv)
+            src_t, src_iv = avail[l.inputs[0]]
+            lo = max(req[0], 0)
+            hi = min(req[1], shapes[l.inputs[0]][1])
+            x = src_t[:, lo - src_iv[0] : hi - src_iv[0], :]
+            pad = (t.pad_top, t.pad_bottom, l.padding[1], l.padding[1])
+            y = layer_forward(l, params, [x], impl, pad_override=pad)
+        elif l.op == "add":
+            xs = []
+            for src in l.inputs:
+                src_t, src_iv = avail[src]
+                xs.append(src_t[:, t.out_iv[0] - src_iv[0] : t.out_iv[1] - src_iv[0], :])
+            y = layer_forward(l, params, xs, impl)
+        elif l.op == "concat":
+            xs = []
+            for src in l.inputs:
+                src_t, src_iv = avail[src]
+                xs.append(src_t[:, t.out_iv[0] - src_iv[0] : t.out_iv[1] - src_iv[0], :])
+            y = layer_forward(l, params, xs, impl)
+        elif l.op in ("flatten", "dense"):
+            src_t, src_iv = avail[l.inputs[0]]
+            if l.op == "flatten":
+                h = shapes[l.inputs[0]][1]
+                assert src_iv == (0, h), "flatten requires the full feature"
+            y = layer_forward(l, params, [src_t], impl)
+        else:
+            raise ValueError(f"unexpected op {l.op}")
+        avail[name] = (y, t.out_iv)
+        out[name] = y
+    return out
+
+
+def row_splits(h: int, parts: int) -> list[Interval]:
+    """Equal row split of an output height (remainder spread from the top),
+    identical to rust `runtime::tensor::row_splits`."""
+    assert 1 <= parts <= h, f"cannot split {h} rows into {parts} parts"
+    base, rem = divmod(h, parts)
+    ivs = []
+    s = 0
+    for i in range(parts):
+        e = s + base + (1 if i < rem else 0)
+        ivs.append((s, e))
+        s = e
+    return ivs

@@ -1,0 +1,104 @@
+"""AOT artifact validation: the exported artifact set must exactly cover
+the tile shapes the default plans need (python side of the contract that
+rust/tests/integration.rs checks from the rust side).
+
+These tests validate the artifacts/ directory produced by `make
+artifacts`; they skip when it does not exist (pure-kernel CI runs).
+"""
+
+import json
+import os
+import pathlib
+
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.aot import DEFAULT_PLANS, artifact_key
+from compile.plan import row_splits, stage_tile_geometry
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+pytestmark = pytest.mark.skipif(
+    not (ARTIFACTS / "manifest.json").exists(), reason="run `make artifacts` first"
+)
+
+
+def load_manifest():
+    return json.loads((ARTIFACTS / "manifest.json").read_text())
+
+
+def test_manifest_lists_all_models():
+    m = load_manifest()
+    assert set(m["models"]) == set(M.E2E_MODELS)
+    for name, entry in m["models"].items():
+        for key in ["spec", "full", "input", "expected", "plan"]:
+            assert (ARTIFACTS / name / entry[key]).exists(), f"{name}:{key}"
+
+
+@pytest.mark.parametrize("name", list(M.E2E_MODELS))
+def test_spec_matches_builder(name):
+    spec_file = json.loads((ARTIFACTS / name / "spec.json").read_text())
+    spec = M.E2E_MODELS[name]()
+    assert spec_file["name"] == spec.name
+    assert [l["name"] for l in spec_file["layers"]] == [l.name for l in spec.layers]
+    assert tuple(spec_file["input_shape"]) == spec.input_shape
+
+
+@pytest.mark.parametrize("name", list(M.E2E_MODELS))
+def test_plan_artifacts_cover_required_tiles(name):
+    spec = M.E2E_MODELS[name]()
+    shapes = spec.shapes()
+    plan = json.loads((ARTIFACTS / name / "pipeline" / "plan.json").read_text())
+    artifacts = plan["artifacts"]
+    for file in artifacts.values():
+        assert (ARTIFACTS / name / file).exists()
+    # Recompute the geometry; every spatial layer tile must have a key.
+    for stage in DEFAULT_PLANS[name]["stages"]:
+        layers = stage["layers"]
+        ndev = stage["devices"]
+        sinks = [
+            n for n in layers if all(c.name not in layers for c in spec.consumers(n))
+        ]
+        for k in range(ndev):
+            sink_out = {}
+            for s in sinks:
+                if len(shapes[s]) == 3:
+                    sink_out[s] = row_splits(shapes[s][1], ndev)[k]
+                else:
+                    sink_out[s] = (0, 1)
+            tiles = stage_tile_geometry(spec, layers, sink_out)
+            for n in layers:
+                l = spec.layer(n)
+                if l.op in ("conv", "maxpool", "avgpool"):
+                    key = artifact_key(n, tiles[n].in_rows, tiles[n].pad_top, tiles[n].pad_bottom)
+                    assert key in artifacts, f"{name}: missing {key}"
+                elif l.op == "dense":
+                    assert f"{n}__full" in artifacts, f"{name}: missing {n}__full"
+
+
+@pytest.mark.parametrize("name", list(M.E2E_MODELS))
+def test_golden_io_shapes(name):
+    spec = M.E2E_MODELS[name]()
+    c, h, w = spec.input_shape
+    x = np.fromfile(ARTIFACTS / name / "io" / "input.bin", dtype=np.float32)
+    assert x.size == c * h * w
+    y = np.fromfile(ARTIFACTS / name / "io" / "expected.bin", dtype=np.float32)
+    out_shape = spec.shapes()[spec.layers[-1].name]
+    assert y.size == int(np.prod(out_shape))
+    # Golden output must match a fresh ref-forward with the same seed.
+    params = M.init_params(spec, seed=0)
+    import jax.numpy as jnp
+
+    got = M.forward(spec, params, jnp.asarray(x.reshape(c, h, w)), impl="ref")
+    np.testing.assert_allclose(np.asarray(got).ravel(), y, rtol=1e-5, atol=1e-6)
+
+
+def test_hlo_text_has_constants_not_elided():
+    # Weight baking: the exported HLO must carry real constant payloads
+    # ("{...}" means as_hlo_text dropped them and the rust runtime would
+    # compute garbage).
+    for name in M.E2E_MODELS:
+        full = (ARTIFACTS / name / "full.hlo.txt").read_text()
+        assert "{...}" not in full, f"{name}: elided constants"
+        assert "HloModule" in full

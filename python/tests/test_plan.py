@@ -1,0 +1,188 @@
+"""L2 geometry + stage-execution tests: the python side of the
+python↔rust tile contract (rust/tests/integration.rs pins the same
+golden values)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.plan import (
+    required_rows,
+    row_splits,
+    run_stage_tile,
+    stage_tile_geometry,
+)
+
+RNG = np.random.default_rng(7)
+
+
+def rand_input(spec):
+    return jnp.asarray(RNG.standard_normal(spec.input_shape), jnp.float32)
+
+
+# ------------------------------------------------------ required_rows
+
+
+def test_required_rows_conv3x3():
+    spec = M.tiny_vgg()
+    conv1 = spec.layer("conv1")  # 3x3 s1 p1
+    assert required_rows(conv1, (0, 16)) == (-1, 17)
+    assert required_rows(conv1, (5, 9)) == (4, 10)
+
+
+def test_required_rows_pool():
+    spec = M.tiny_vgg()
+    pool = spec.layer("pool1")  # 2x2 s2 p0
+    assert required_rows(pool, (0, 8)) == (0, 16)
+    assert required_rows(pool, (4, 8)) == (8, 16)
+
+
+def test_required_rows_unbalanced_kernels():
+    spec = M.tiny_inception()
+    c17 = spec.layer("c_1x7")  # kh=1: no row halo
+    assert required_rows(c17, (3, 7)) == (3, 7)
+    c71 = spec.layer("c_7x1")  # kh=7 p3
+    assert required_rows(c71, (3, 7)) == (0, 10)
+
+
+# ----------------------------------------------- golden tile geometry
+
+
+def test_golden_tinyvgg_stage1():
+    """Must match rust cost::feature golden tests and the artifact keys
+    (conv1__r18_pt1_pb0 etc.)."""
+    spec = M.tiny_vgg()
+    layers = ["conv1", "conv2", "pool1"]
+    t = stage_tile_geometry(spec, layers, {"pool1": (0, 8)})
+    assert (t["conv2"].in_rows, t["conv2"].pad_top, t["conv2"].pad_bottom) == (17, 1, 0)
+    assert (t["conv1"].in_rows, t["conv1"].pad_top, t["conv1"].pad_bottom) == (18, 1, 0)
+    assert t["input"].out_iv == (0, 18)
+
+    t = stage_tile_geometry(spec, layers, {"pool1": (8, 16)})
+    assert (t["conv2"].in_rows, t["conv2"].pad_top, t["conv2"].pad_bottom) == (17, 0, 1)
+    assert (t["conv1"].in_rows, t["conv1"].pad_top, t["conv1"].pad_bottom) == (18, 0, 1)
+    assert t["input"].out_iv == (14, 32)
+
+
+def test_row_splits():
+    assert row_splits(32, 2) == [(0, 16), (16, 32)]
+    assert row_splits(7, 3) == [(0, 3), (3, 5), (5, 7)]
+    with pytest.raises(AssertionError):
+        row_splits(3, 4)
+
+
+# ------------------------------------- split-equals-whole (per model)
+
+
+def pipeline_outputs(spec, stages, devices_per_stage, impl="ref"):
+    """Drive the staged execution exactly like the rust coordinator."""
+    params = M.init_params(spec)
+    x = rand_input(spec)
+    shapes = spec.shapes()
+    avail = {"input": x}
+    for layers, ndv in zip(stages, devices_per_stage):
+        sinks = [
+            n for n in layers if all(c.name not in layers for c in spec.consumers(n))
+        ]
+        splits = {
+            s: (row_splits(shapes[s][1], ndv) if len(shapes[s]) == 3 else [(0, 1)] * ndv)
+            for s in sinks
+        }
+        parts = {s: [] for s in sinks}
+        for k in range(ndv):
+            tiles = stage_tile_geometry(spec, layers, {s: splits[s][k] for s in sinks})
+            feeds = {}
+            for name, t in tiles.items():
+                if name not in layers or name == "input":
+                    src = avail[name]
+                    feeds[name] = (
+                        src[:, t.out_iv[0] : t.out_iv[1], :] if src.ndim == 3 else src
+                    )
+            res = run_stage_tile(spec, params, layers, tiles, feeds, impl=impl)
+            for s in sinks:
+                parts[s].append(res[s])
+        for s in sinks:
+            avail[s] = (
+                jnp.concatenate(parts[s], axis=1) if len(shapes[s]) == 3 else parts[s][0]
+            )
+    want = M.forward(spec, params, x, impl="ref")
+    got = avail[stages[-1][-1]]
+    return got, want
+
+
+TINY_STAGE_PLANS = {
+    "tinyvgg": (
+        [["conv1", "conv2", "pool1"], ["conv3", "conv4", "pool2"],
+         ["conv5", "pool3", "flatten", "fc1", "fc2"]],
+        [2, 2, 1],
+    ),
+    "tinyresnet": (
+        [["stem", "b1_conv1", "b1_conv2", "b1_add"],
+         ["b2_conv1", "b2_conv2", "b2_proj", "b2_add", "pool", "flatten", "fc"]],
+        [3, 1],
+    ),
+    "tinyinception": (
+        [["stem", "a_1x1", "b_1x1", "b_3x3", "c_1x7", "c_7x1", "d_pool", "d_1x1", "cat"],
+         ["tail", "pool", "flatten", "fc"]],
+        [2, 1],
+    ),
+}
+
+
+@pytest.mark.parametrize("name", list(TINY_STAGE_PLANS))
+def test_staged_equals_whole(name):
+    spec = M.E2E_MODELS[name]()
+    stages, ndv = TINY_STAGE_PLANS[name]
+    got, want = pipeline_outputs(spec, stages, ndv)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+@settings(deadline=None, max_examples=10)
+@given(d1=st.integers(1, 4), d2=st.integers(1, 4))
+def test_staged_equals_whole_hypothesis_splits(d1, d2):
+    spec = M.tiny_vgg()
+    stages = [["conv1", "conv2", "pool1"], ["conv3", "conv4", "pool2"],
+              ["conv5", "pool3", "flatten", "fc1", "fc2"]]
+    got, want = pipeline_outputs(spec, stages, [d1, d2, 1])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------- model structure
+
+
+def test_shapes_match_expected():
+    spec = M.tiny_vgg()
+    s = spec.shapes()
+    assert s["pool1"] == (16, 16, 16)
+    assert s["pool3"] == (64, 4, 4)
+    assert s["fc2"] == (10,)
+    inc = M.tiny_inception()
+    si = inc.shapes()
+    assert si["cat"] == (32, 16, 16)
+
+
+def test_forward_pallas_matches_ref():
+    for name, build in M.E2E_MODELS.items():
+        spec = build()
+        params = M.init_params(spec)
+        x = rand_input(spec)
+        got = M.forward(spec, params, x, impl="pallas")
+        want = M.forward(spec, params, x, impl="ref")
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4,
+            err_msg=name,
+        )
+
+
+def test_spec_json_roundtrip(tmp_path):
+    spec = M.tiny_resnet()
+    p = tmp_path / "spec.json"
+    spec.save(str(p))
+    import json
+
+    loaded = json.loads(p.read_text())
+    assert loaded["name"] == "tinyresnet"
+    assert [l["name"] for l in loaded["layers"]][0] == "input"
+    assert loaded["input_shape"] == [3, 32, 32]

@@ -1,0 +1,59 @@
+//! Fig. 5 reproduction: VGG16 FLOPs under the fused-layer scheme as the
+//! number of fused layers and devices grows.
+//!
+//! (a) per-device FLOPs — drops with devices, rises with fused depth;
+//! (b) total FLOPs across devices — the redundant recompute blow-up the
+//! paper uses to motivate pipelining (fused-layer "performs well at the
+//! start, but the redundant calculation quickly grows").
+
+use std::collections::BTreeMap;
+
+use pico::cost::{ideal_segment_flops, row_splits, segment_flops, segment_sinks, segment_tiles};
+use pico::graph::LayerId;
+use pico::modelzoo;
+use pico::util::Table;
+
+fn main() {
+    let g = modelzoo::vgg16();
+    // Spatial layers in order (fused-depth axis of Fig. 5).
+    let convs: Vec<LayerId> =
+        (0..g.n_layers()).filter(|&i| g.layer(i).op.is_spatial()).collect();
+    let device_counts = [1usize, 2, 4, 6, 8];
+
+    let mut per_dev = Table::new(&["fused layers", "1 dev GFLOP", "2", "4", "6", "8"]);
+    let mut total = Table::new(&["fused layers", "1 dev total", "2", "4", "6", "8", "redundancy @8"]);
+    for depth in 1..=13usize {
+        let segment: Vec<LayerId> = convs.iter().copied().take(depth).collect();
+        let ideal = ideal_segment_flops(&g, &segment);
+        let sinks = segment_sinks(&g, &segment);
+        let mut row_p = vec![format!("{depth}")];
+        let mut row_t = vec![format!("{depth}")];
+        let mut redu8 = 0.0;
+        for &d in &device_counts {
+            let mut worst = 0.0f64;
+            let mut sum = 0.0f64;
+            for k in 0..d {
+                let sink_out: BTreeMap<LayerId, (usize, usize)> = sinks
+                    .iter()
+                    .map(|&s| (s, row_splits(g.shape(s).height(), d)[k]))
+                    .collect();
+                let tiles = segment_tiles(&g, &segment, &sink_out);
+                let f = segment_flops(&g, &segment, &tiles);
+                worst = worst.max(f);
+                sum += f;
+            }
+            row_p.push(format!("{:.2}", worst / 1e9));
+            row_t.push(format!("{:.2}", sum / 1e9));
+            if d == 8 {
+                redu8 = (sum - ideal) / ideal * 100.0;
+            }
+        }
+        row_t.push(format!("{redu8:.1}%"));
+        per_dev.row(&row_p);
+        total.row(&row_t);
+    }
+    println!("=== Fig. 5a: FLOPs per device (GFLOPs, worst device) ===");
+    per_dev.print();
+    println!("\n=== Fig. 5b: total FLOPs across all devices (GFLOPs) ===");
+    total.print();
+}

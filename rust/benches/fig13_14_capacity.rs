@@ -1,0 +1,67 @@
+//! Figs. 13–14 reproduction: cluster capacity executing VGG16 (Fig. 13)
+//! and YOLOv2 (Fig. 14) under LW / EFL / OFL / CE / PICO.
+//!
+//! First three panels: inference period vs number of devices at 0.6, 1.0
+//! and 1.5 GHz. Last panel: completed inferences per minute with 8
+//! devices (the throughput bar chart).
+//!
+//! Expected shape (paper): PICO lowest period everywhere; OFL > EFL;
+//! LW hurt by per-layer round-trips, worst at high frequency; CE between
+//! LW and fused schemes.
+
+use pico::cluster::Cluster;
+use pico::sim::SimReport;
+use pico::util::Table;
+use pico::{baselines, modelzoo, partition, pipeline, sim};
+
+fn run_scheme(
+    g: &pico::graph::ModelGraph,
+    pieces: &pico::partition::PieceChain,
+    c: &Cluster,
+    scheme: &str,
+) -> SimReport {
+    match scheme {
+        "LW" => sim::simulate_sync(g, c, &baselines::layer_wise(g, c), 100),
+        "EFL" => sim::simulate_sync(g, c, &baselines::early_fused(g, c, 2), 100),
+        "OFL" => sim::simulate_sync(g, c, &baselines::optimal_fused(g, pieces, c), 100),
+        "CE" => sim::simulate_sync(g, c, &baselines::coedge(g, c), 100),
+        "PICO" => {
+            let plan = pipeline::plan(g, pieces, c, f64::INFINITY).unwrap();
+            sim::simulate_pipeline(g, c, &plan, 100)
+        }
+        _ => unreachable!(),
+    }
+}
+
+fn main() {
+    let schemes = ["LW", "EFL", "OFL", "CE", "PICO"];
+    for model in ["vgg16", "yolov2"] {
+        let g = modelzoo::by_name(model).unwrap();
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        println!("\n=== Fig. {}: {} ===", if model == "vgg16" { 13 } else { 14 }, g.name);
+        for ghz in [0.6, 1.0, 1.5] {
+            println!("-- period (s) at {ghz} GHz --");
+            let mut t = Table::new(&["devices", "LW", "EFL", "OFL", "CE", "PICO"]);
+            for devices in [2usize, 4, 6, 8] {
+                let c = Cluster::homogeneous_rpi(devices, ghz);
+                let mut row = vec![format!("{devices}")];
+                for s in schemes {
+                    row.push(format!("{:.2}", run_scheme(&g, &pieces, &c, s).period));
+                }
+                t.row(&row);
+            }
+            t.print();
+        }
+        println!("-- throughput with 8 devices (inferences / minute) --");
+        let mut t = Table::new(&["freq GHz", "LW", "EFL", "OFL", "CE", "PICO"]);
+        for ghz in [0.6, 1.0, 1.5] {
+            let c = Cluster::homogeneous_rpi(8, ghz);
+            let mut row = vec![format!("{ghz}")];
+            for s in schemes {
+                row.push(format!("{:.1}", run_scheme(&g, &pieces, &c, s).throughput * 60.0));
+            }
+            t.row(&row);
+        }
+        t.print();
+    }
+}

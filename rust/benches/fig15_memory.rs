@@ -1,0 +1,53 @@
+//! Fig. 15 reproduction: average per-device memory footprint by scheme
+//! and device count, decomposed into Model (parameters) and Feature
+//! (activations) parts.
+//!
+//! Expected shape (paper): LW/EFL/OFL replicate the whole model on every
+//! device, so only the feature share shrinks with more devices; PICO
+//! distributes model segments, dropping total memory far below the
+//! replicating schemes.
+
+use pico::cluster::Cluster;
+use pico::util::Table;
+use pico::{baselines, modelzoo, partition, pipeline, sim};
+
+fn main() {
+    for model in ["vgg16", "yolov2"] {
+        let g = modelzoo::by_name(model).unwrap();
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        println!("\n=== Fig. 15: {} (avg per-device MB: model + feature) ===", g.name);
+        let mut t =
+            Table::new(&["devices", "LW", "EFL", "OFL", "PICO", "PICO model", "PICO feature"]);
+        for devices in [2usize, 4, 6, 8] {
+            let c = Cluster::homogeneous_rpi(devices, 1.0);
+            let lw = sim::simulate_sync(&g, &c, &baselines::layer_wise(&g, &c), 10);
+            let efl = sim::simulate_sync(&g, &c, &baselines::early_fused(&g, &c, 2), 10);
+            let ofl = sim::simulate_sync(&g, &c, &baselines::optimal_fused(&g, &pieces, &c), 10);
+            let plan = pipeline::plan(&g, &pieces, &c, f64::INFINITY).unwrap();
+            let pico_r = sim::simulate_pipeline(&g, &c, &plan, 10);
+            let model_avg = pico_r
+                .per_device
+                .iter()
+                .map(|d| d.mem_model as f64)
+                .sum::<f64>()
+                / pico_r.per_device.len() as f64;
+            let feat_avg = pico_r
+                .per_device
+                .iter()
+                .map(|d| d.mem_feature as f64)
+                .sum::<f64>()
+                / pico_r.per_device.len() as f64;
+            t.row(&[
+                format!("{devices}"),
+                format!("{:.0}", lw.avg_mem() / 1e6),
+                format!("{:.0}", efl.avg_mem() / 1e6),
+                format!("{:.0}", ofl.avg_mem() / 1e6),
+                format!("{:.0}", pico_r.avg_mem() / 1e6),
+                format!("{:.0}", model_avg / 1e6),
+                format!("{:.0}", feat_avg / 1e6),
+            ]);
+        }
+        t.print();
+    }
+    println!("\nshape check: PICO column must sit far below LW/EFL/OFL and fall with devices.");
+}

@@ -1,0 +1,110 @@
+//! §Perf microbenchmarks: the L3 hot paths, timed with std::time.
+//!
+//! Targets (DESIGN.md §Perf):
+//!   * split/stitch negligible vs compute (paper §5.3);
+//!   * Algorithm 1 on InceptionV3 ≲ 3s (paper: 3.01s on an i9);
+//!   * Algorithms 2+3 < 1s on every Table 6/7 case (paper: <1s on a Pi);
+//!   * stage-cost evaluation (the DP leaf) cheap enough for the
+//!     O(nL²D²) bound;
+//!   * PJRT dispatch overhead per tile (when artifacts exist).
+
+use std::time::Instant;
+
+use pico::cluster::Cluster;
+use pico::runtime::Tensor;
+use pico::util::Table;
+use pico::{modelzoo, partition, pipeline};
+
+fn time<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
+fn main() {
+    let mut t = Table::new(&["hot path", "time", "reps", "note"]);
+
+    // 1. split/stitch on a VGG16-sized feature map (64x224x224).
+    let feat = Tensor::new(vec![64, 224, 224], vec![1.0; 64 * 224 * 224]);
+    let split = time(20, || {
+        let parts: Vec<Tensor> = (0..8)
+            .map(|k| feat.slice_rows(k * 28, (k + 1) * 28))
+            .collect();
+        let _ = Tensor::stitch_rows(&parts);
+    });
+    t.row(&["split+stitch 64x224x224 into 8".into(), format!("{:.2}ms", split * 1e3), "20".into(),
+        "must be << stage compute (seconds)".into()]);
+
+    // 2. segment_tiles on a deep segment.
+    let g = modelzoo::vgg16();
+    let seg: Vec<usize> = (1..=8).collect();
+    let tiles = time(2000, || {
+        let sink: std::collections::BTreeMap<usize, (usize, usize)> = [(8usize, (0usize, 28usize))].into();
+        let _ = pico::cost::segment_tiles(&g, &seg, &sink);
+    });
+    t.row(&["segment_tiles (8-layer segment)".into(), format!("{:.1}us", tiles * 1e6), "2000".into(),
+        "DP leaf geometry".into()]);
+
+    // 3. stage_cost (the Algorithm-2 leaf).
+    let c = Cluster::homogeneous_rpi(8, 1.0);
+    let devs: Vec<&pico::cluster::Device> = c.devices.iter().collect();
+    let sc = time(500, || {
+        let _ = pico::cost::stage_cost(&g, &seg, &devs, &c.network);
+    });
+    t.row(&["stage_cost (8 layers x 8 devices)".into(), format!("{:.1}us", sc * 1e6), "500".into(),
+        "O(nL^2 D^2) leaf".into()]);
+
+    // 4. Algorithm 1 on InceptionV3 (paper: 3.01s).
+    let inc = modelzoo::inception_v3();
+    let a1 = time(3, || {
+        let _ = partition::partition(&inc, 5, None).unwrap();
+    });
+    t.row(&["Algorithm 1, InceptionV3".into(), format!("{:.1}ms", a1 * 1e3), "3".into(),
+        "paper 3.01s on i9".into()]);
+
+    // 5. Algorithms 2+3 end to end on VGG16 x 8 heterogeneous devices.
+    let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+    let hc = Cluster::paper_heterogeneous();
+    let a23 = time(5, || {
+        let _ = pipeline::plan(&g, &pieces, &hc, f64::INFINITY).unwrap();
+    });
+    t.row(&["Algorithms 2+3, VGG16 x 8 devices".into(), format!("{:.1}ms", a23 * 1e3), "5".into(),
+        "paper <1s on a Raspberry-Pi".into()]);
+
+    // 6. Native conv tile (the per-device compute the coordinator drives).
+    let tiny = modelzoo::synthetic_chain(1);
+    let wts = pico::runtime::executor::model_weights(&tiny, 0);
+    let x = Tensor::new(vec![3, 66, 64], vec![0.5; 3 * 66 * 64]);
+    let conv = time(50, || {
+        let padded = x.pad(0, 0, 1, 1, 0.0);
+        let _ = pico::runtime::reference::conv2d(&padded, tiny.layer(1), &wts[&1]);
+    });
+    t.row(&["native conv 3->16 ch, 64-row tile".into(), format!("{:.2}ms", conv * 1e3), "50".into(),
+        "reference backend".into()]);
+
+    // 7. PJRT dispatch (skipped without artifacts).
+    let dir = std::path::PathBuf::from("artifacts");
+    if dir.join("tinyvgg").exists() {
+        let engine = pico::runtime::Engine::cpu().unwrap();
+        let arts = pico::runtime::PipelineArtifacts::load(&dir, "tinyvgg").unwrap();
+        let exe = arts.executable(&engine, "conv3__r16_pt1_pb1").unwrap();
+        let xin = Tensor::new(vec![16, 16, 16], vec![0.1; 16 * 16 * 16]);
+        exe.run(&xin).unwrap(); // warm
+        let pjrt = time(100, || {
+            let _ = exe.run(&xin).unwrap();
+        });
+        t.row(&["PJRT dispatch conv3 tile (warm)".into(), format!("{:.2}ms", pjrt * 1e3), "100".into(),
+            "AOT artifact".into()]);
+        let compile = time(1, || {
+            let e2 = pico::runtime::Engine::cpu().unwrap();
+            let _ = arts.executable(&e2, "conv4__r16_pt1_pb1").unwrap();
+        });
+        t.row(&["PJRT cold compile (1 artifact)".into(), format!("{:.0}ms", compile * 1e3), "1".into(),
+            "one-time per executable".into()]);
+    } else {
+        t.row(&["PJRT dispatch".into(), "skipped".into(), "0".into(), "run `make artifacts`".into()]);
+    }
+    t.print();
+}

@@ -1,0 +1,60 @@
+//! Table 5 reproduction: utilisation, redundancy ratio and memory
+//! footprint of every device in the heterogeneous cluster (2x TX2 NX +
+//! 6x Rpi at 1.5/1.2/0.8 GHz) executing VGG16 and YOLOv2 under CE, EFL,
+//! OFL and PICO.
+//!
+//! Expected shape (paper): PICO's utilisation highest on average with
+//! balanced per-device load; CE's redundancy lowest but utilisation
+//! skewed toward fast devices; EFL's redundancy worst; PICO's memory
+//! footprint the smallest (model distributed, not replicated).
+
+use pico::cluster::Cluster;
+use pico::sim::SimReport;
+use pico::util::Table;
+use pico::{baselines, modelzoo, partition, pipeline, sim};
+
+fn print_block(r: &SimReport, c: &Cluster) {
+    let mut t = Table::new(&["metric", "NX0", "NX1", "Rpi1.5", "Rpi1.5", "Rpi1.2", "Rpi1.2", "Rpi0.8", "Rpi0.8", "Average"]);
+    let get = |f: &dyn Fn(&pico::sim::DeviceMetrics) -> f64| -> Vec<f64> {
+        let mut vals = vec![0.0; c.len()];
+        for d in &r.per_device {
+            vals[d.device] = f(d);
+        }
+        vals
+    };
+    let rows: Vec<(&str, Vec<f64>, f64)> = vec![
+        ("Utili. %", get(&|d| d.utilization * 100.0), r.avg_utilization() * 100.0),
+        ("Redu. %", get(&|d| d.redundancy * 100.0), r.avg_redundancy() * 100.0),
+        ("Mem. MB", get(&|d| (d.mem_model + d.mem_feature) as f64 / 1e6), r.avg_mem() / 1e6),
+    ];
+    for (name, vals, avg) in rows {
+        let mut row = vec![name.to_string()];
+        row.extend(vals.iter().map(|v| format!("{v:.1}")));
+        row.push(format!("{avg:.1}"));
+        t.row(&row);
+    }
+    t.print();
+}
+
+fn main() {
+    let c = Cluster::paper_heterogeneous();
+    for model in ["vgg16", "yolov2"] {
+        let g = modelzoo::by_name(model).unwrap();
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        let n = 100;
+        println!("\n=== Table 5: {} on the heterogeneous cluster ===", g.name);
+        for scheme in ["CE", "EFL", "OFL", "PICO"] {
+            let r = match scheme {
+                "CE" => sim::simulate_sync(&g, &c, &baselines::coedge(&g, &c), n),
+                "EFL" => sim::simulate_sync(&g, &c, &baselines::early_fused(&g, &c, 2), n),
+                "OFL" => sim::simulate_sync(&g, &c, &baselines::optimal_fused(&g, &pieces, &c), n),
+                _ => {
+                    let plan = pipeline::plan(&g, &pieces, &c, f64::INFINITY).unwrap();
+                    sim::simulate_pipeline(&g, &c, &plan, n)
+                }
+            };
+            println!("-- {scheme} --");
+            print_block(&r, &c);
+        }
+    }
+}

@@ -1,0 +1,298 @@
+//! BFS — exhaustive search over pipeline configurations (§6.5's
+//! optimality reference). Enumerates every split of the piece chain into
+//! contiguous stages × every assignment of the (distinct) devices to the
+//! stages, costing each with the same Eq. 7–12 model PICO uses. The
+//! space is exponential — Tables 6–7 measure exactly that blowup — so a
+//! wall-clock budget can cut the run (reported via `completed`).
+
+use std::time::{Duration, Instant};
+
+use crate::cluster::Cluster;
+use crate::cost::pipeline_cost;
+use crate::graph::{LayerId, ModelGraph};
+use crate::partition::PieceChain;
+use crate::pipeline::{PipelinePlan, Stage};
+
+#[derive(Debug, Clone)]
+pub struct BfsResult {
+    pub plan: Option<PipelinePlan>,
+    pub period: f64,
+    pub latency: f64,
+    /// Configurations fully costed.
+    pub explored: u64,
+    pub elapsed: Duration,
+    /// False when the budget expired before the space was exhausted.
+    pub completed: bool,
+}
+
+struct Search<'a> {
+    g: &'a ModelGraph,
+    pieces: &'a PieceChain,
+    cluster: &'a Cluster,
+    t_lim: f64,
+    deadline: Option<Instant>,
+    best: f64,
+    best_cfg: Option<Vec<(usize, usize, Vec<usize>)>>,
+    best_latency: f64,
+    explored: u64,
+    timed_out: bool,
+}
+
+impl<'a> Search<'a> {
+    fn segment(&self, i: usize, j: usize) -> Vec<LayerId> {
+        let mut ids: Vec<LayerId> = self.pieces[i..=j].iter().flatten().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Recurse over stage boundaries, then device assignments.
+    fn stages(&mut self, from: usize, acc: &mut Vec<(usize, usize)>) {
+        if self.timed_out() {
+            return;
+        }
+        let l = self.pieces.len();
+        if from == l {
+            let bounds = acc.clone();
+            let mut remaining: Vec<usize> = (0..self.cluster.len()).collect();
+            let mut assign: Vec<Vec<usize>> = Vec::new();
+            self.devices(&bounds, 0, &mut remaining, &mut assign);
+            return;
+        }
+        for j in from..l {
+            acc.push((from, j));
+            self.stages(j + 1, acc);
+            acc.pop();
+            if self.timed_out() {
+                return;
+            }
+        }
+    }
+
+    /// Assign every remaining device to stages `si..`: each stage takes
+    /// any non-empty subset (stages are *ordered*, so every subset of the
+    /// remaining pool is a distinct configuration — no symmetry to
+    /// break; device order inside a stage is canonicalised at evaluate).
+    fn devices(
+        &mut self,
+        bounds: &[(usize, usize)],
+        si: usize,
+        remaining: &mut Vec<usize>,
+        assign: &mut Vec<Vec<usize>>,
+    ) {
+        if self.timed_out() {
+            return;
+        }
+        if si == bounds.len() {
+            if remaining.is_empty() {
+                self.evaluate(bounds, assign);
+            }
+            return;
+        }
+        let stages_left = bounds.len() - si;
+        if remaining.len() < stages_left {
+            return;
+        }
+        let max_take = remaining.len() - (stages_left - 1);
+        let pool = remaining.clone();
+        let mut picked = vec![false; pool.len()];
+        for size in 1..=max_take {
+            self.choose(bounds, si, &pool, &mut picked, 0, size, assign);
+            if self.timed_out() {
+                return;
+            }
+        }
+    }
+
+    /// Pick `need` more devices from `pool[from..]` for stage `si`.
+    #[allow(clippy::too_many_arguments)]
+    fn choose(
+        &mut self,
+        bounds: &[(usize, usize)],
+        si: usize,
+        pool: &[usize],
+        picked: &mut Vec<bool>,
+        from: usize,
+        need: usize,
+        assign: &mut Vec<Vec<usize>>,
+    ) {
+        if self.timed_out() {
+            return;
+        }
+        if need == 0 {
+            let stage_devs: Vec<usize> =
+                pool.iter().enumerate().filter(|(k, _)| picked[*k]).map(|(_, &d)| d).collect();
+            let mut next_remaining: Vec<usize> =
+                pool.iter().enumerate().filter(|(k, _)| !picked[*k]).map(|(_, &d)| d).collect();
+            assign.push(stage_devs);
+            self.devices(bounds, si + 1, &mut next_remaining, assign);
+            assign.pop();
+            return;
+        }
+        if from + need > pool.len() {
+            return;
+        }
+        for k in from..pool.len() {
+            picked[k] = true;
+            self.choose(bounds, si, pool, picked, k + 1, need - 1, assign);
+            picked[k] = false;
+            if self.timed_out() {
+                return;
+            }
+        }
+    }
+
+    fn evaluate(&mut self, bounds: &[(usize, usize)], assign: &[Vec<usize>]) {
+        self.explored += 1;
+        let stages: Vec<(Vec<LayerId>, Vec<usize>)> = bounds
+            .iter()
+            .zip(assign)
+            .map(|(&(i, j), devs)| {
+                // Fastest device leads the stage (its tile is excluded
+                // from the distribute/gather traffic — always optimal),
+                // matching Algorithm 3's ordering so the search space
+                // strictly contains PICO's plans.
+                let mut devs = devs.clone();
+                devs.sort_by(|&a, &b| {
+                    self.cluster.devices[b]
+                        .flops
+                        .partial_cmp(&self.cluster.devices[a].flops)
+                        .unwrap()
+                });
+                (self.segment(i, j), devs)
+            })
+            .collect();
+        let pc = pipeline_cost(self.g, self.cluster, &stages);
+        if pc.latency <= self.t_lim && pc.period < self.best {
+            self.best = pc.period;
+            self.best_latency = pc.latency;
+            self.best_cfg = Some(
+                bounds
+                    .iter()
+                    .zip(assign)
+                    .map(|(&(i, j), d)| (i, j, d.clone()))
+                    .collect(),
+            );
+        }
+    }
+
+    fn timed_out(&mut self) -> bool {
+        if self.timed_out {
+            return true;
+        }
+        if let Some(dl) = self.deadline {
+            // Check the clock every 256 evaluations to stay cheap.
+            if self.explored % 256 == 0 && Instant::now() > dl {
+                self.timed_out = true;
+            }
+        }
+        self.timed_out
+    }
+}
+
+/// Exhaustively find the best pipeline for `pieces` on `cluster`.
+pub fn bfs_optimal(
+    g: &ModelGraph,
+    pieces: &PieceChain,
+    cluster: &Cluster,
+    t_lim: f64,
+    budget: Option<Duration>,
+) -> BfsResult {
+    let start = Instant::now();
+    let mut s = Search {
+        g,
+        pieces,
+        cluster,
+        t_lim,
+        deadline: budget.map(|b| start + b),
+        best: f64::INFINITY,
+        best_cfg: None,
+        best_latency: f64::INFINITY,
+        explored: 0,
+        timed_out: false,
+    };
+    let mut acc = Vec::new();
+    s.stages(0, &mut acc);
+    let best_cfg = s.best_cfg.take();
+    let plan = best_cfg.map(|cfg| PipelinePlan {
+        stages: cfg
+            .into_iter()
+            .map(|(i, j, devices)| Stage { pieces: (i, j), layers: s.segment(i, j), devices })
+            .collect(),
+    });
+    BfsResult {
+        plan,
+        period: s.best,
+        latency: s.best_latency,
+        explored: s.explored,
+        elapsed: start.elapsed(),
+        completed: !s.timed_out,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modelzoo;
+    use crate::partition;
+    use crate::pipeline;
+
+    #[test]
+    fn bfs_matches_dp_on_homogeneous_chain() {
+        // Theorem 4: Algorithm 2 is optimal for homogeneous devices on a
+        // chain — BFS must agree with it exactly.
+        let g = modelzoo::synthetic_chain(6);
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        let c = Cluster::homogeneous_rpi(3, 1.0);
+        let dp = pipeline::dp_pipeline(&g, &pieces, &c, f64::INFINITY).unwrap();
+        let bfs = bfs_optimal(&g, &pieces, &c, f64::INFINITY, None);
+        assert!(bfs.completed);
+        assert!(
+            (dp.period - bfs.period).abs() < 1e-9 * dp.period.max(1e-30),
+            "DP {} vs BFS {}",
+            dp.period,
+            bfs.period
+        );
+    }
+
+    #[test]
+    fn bfs_never_worse_than_pico_heterogeneous() {
+        let g = modelzoo::synthetic_chain(5);
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        let mut c = Cluster::homogeneous_rpi(3, 1.0);
+        c.devices[1].flops *= 0.6;
+        c.devices[2].flops *= 1.5;
+        let plan = pipeline::plan(&g, &pieces, &c, f64::INFINITY).unwrap();
+        let pico_period = plan.cost(&g, &c).period;
+        let bfs = bfs_optimal(&g, &pieces, &c, f64::INFINITY, None);
+        assert!(bfs.completed);
+        assert!(
+            bfs.period <= pico_period + 1e-12,
+            "BFS {} must lower-bound PICO {}",
+            bfs.period,
+            pico_period
+        );
+    }
+
+    #[test]
+    fn budget_cuts_search() {
+        let g = modelzoo::synthetic_chain(12);
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        let c = Cluster::homogeneous_rpi(8, 1.0);
+        let bfs = bfs_optimal(&g, &pieces, &c, f64::INFINITY, Some(Duration::from_millis(30)));
+        assert!(!bfs.completed, "12 pieces x 8 devices must exceed 30ms");
+        assert!(bfs.explored > 0);
+    }
+
+    #[test]
+    fn explored_count_grows_with_devices() {
+        let g = modelzoo::synthetic_chain(4);
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        let mut counts = Vec::new();
+        for d in [2usize, 3, 4] {
+            let c = Cluster::homogeneous_rpi(d, 1.0);
+            let r = bfs_optimal(&g, &pieces, &c, f64::INFINITY, None);
+            counts.push(r.explored);
+        }
+        assert!(counts[0] < counts[1] && counts[1] < counts[2], "{counts:?}");
+    }
+}

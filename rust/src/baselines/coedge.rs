@@ -1,0 +1,105 @@
+//! CE — CoEdge (Zeng et al. [22]): layer-wise execution with
+//! (1) workload partition proportional to device capability,
+//! (2) halo-only synchronisation with neighbour devices, and
+//! (3) a *dynamic* number of working devices per layer — small feature
+//! maps run on fewer (faster) devices to dodge communication overhead.
+
+use super::{SyncGroup, SyncSchedule};
+use crate::cluster::{Cluster, Device};
+use crate::cost::stage_cost;
+use crate::graph::{ModelGraph, Op};
+
+/// Build the CoEdge schedule: for every layer pick the device subset
+/// (fastest-first prefix) minimising that layer's halo-sync cost.
+pub fn coedge(g: &ModelGraph, cluster: &Cluster) -> SyncSchedule {
+    // Fastest-first device order; prefixes of it are the candidate sets.
+    let mut order: Vec<usize> = (0..cluster.len()).collect();
+    order.sort_by(|&a, &b| {
+        cluster.devices[b].flops.partial_cmp(&cluster.devices[a].flops).unwrap()
+    });
+    let mut groups = Vec::new();
+    for id in 0..g.n_layers() {
+        if g.layer(id).op == Op::Input {
+            continue;
+        }
+        let mut best_cost = f64::INFINITY;
+        let mut best_m = 1;
+        for m in 1..=order.len() {
+            let devs: Vec<&Device> = order[..m].iter().map(|&i| &cluster.devices[i]).collect();
+            let mut c = stage_cost(g, &[id], &devs, &cluster.network);
+            // Halo-only sync: replace the full gather/scatter comm with
+            // the overlap traffic (see sim::sync for the same model).
+            c.t_comm_stage *= halo_fraction(g, id);
+            let total = c.t_comp_stage + c.t_comm_stage;
+            if total < best_cost {
+                best_cost = total;
+                best_m = m;
+            }
+        }
+        groups.push(SyncGroup {
+            layers: vec![id],
+            devices: order[..best_m].to_vec(),
+            halo_sync: true,
+        });
+    }
+    SyncSchedule { name: "CE", groups }
+}
+
+/// Fraction of a layer's feature traffic that halo-only sync moves:
+/// (kernel overlap rows) / (full tile rows). Connectors and 1x1 convs
+/// sync nothing.
+pub fn halo_fraction(g: &ModelGraph, id: usize) -> f64 {
+    let l = g.layer(id);
+    if !l.op.is_spatial() {
+        return 0.0;
+    }
+    let halo = (l.kernel.0.saturating_sub(l.stride.0)) as f64;
+    let h = g.shape(id).height() as f64;
+    (halo / h).min(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modelzoo;
+
+    #[test]
+    fn coedge_uses_fewer_devices_on_small_features() {
+        let g = modelzoo::vgg16();
+        let c = Cluster::paper_heterogeneous();
+        let s = coedge(&g, &c);
+        // CoEdge's defining behaviour: the working set is *dynamic* —
+        // wide mid-network features use more devices than the tiny 7x7
+        // tail (which should collapse toward one fast device).
+        let spatial: Vec<(&SyncGroup, usize)> = s
+            .groups
+            .iter()
+            .filter(|gr| g.layer(gr.layers[0]).op.is_spatial())
+            .map(|gr| (gr, g.shape(gr.layers[0]).height()))
+            .collect();
+        let widest = spatial.iter().max_by_key(|(_, h)| *h).unwrap();
+        let narrowest = spatial.iter().min_by_key(|(_, h)| *h).unwrap();
+        assert!(
+            widest.0.devices.len() >= narrowest.0.devices.len(),
+            "CE: {}-row layer uses {} devices but {}-row layer uses {}",
+            widest.1,
+            widest.0.devices.len(),
+            narrowest.1,
+            narrowest.0.devices.len()
+        );
+        let counts: std::collections::HashSet<usize> =
+            s.groups.iter().map(|gr| gr.devices.len()).collect();
+        assert!(counts.len() > 1, "device count must vary across layers");
+        assert!(s.groups.iter().all(|gr| gr.halo_sync));
+    }
+
+    #[test]
+    fn coedge_prefers_fast_devices() {
+        let g = modelzoo::vgg16();
+        let c = Cluster::paper_heterogeneous(); // 0,1 are TX2s
+        let s = coedge(&g, &c);
+        for gr in &s.groups {
+            assert!(gr.devices.contains(&0), "fastest device always works");
+        }
+    }
+}

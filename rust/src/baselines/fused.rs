@@ -1,0 +1,139 @@
+//! EFL and OFL — fused-layer schemes.
+//!
+//! EFL (DeepThings [5]): fuse the early conv stack (through the
+//! `fuse_pools`-th pooling layer), feature-split it across all devices,
+//! then run the rest of the model on a single device. OFL (AOFL [6]):
+//! choose fusion boundaries by DP so the sum of group costs is minimal —
+//! all devices execute every group, synchronising between groups.
+
+use super::{SyncGroup, SyncSchedule};
+use crate::cluster::{Cluster, Device};
+use crate::cost::stage_cost;
+use crate::graph::{ModelGraph, Op};
+use crate::partition::PieceChain;
+
+/// EFL: fuse everything up to (and including) the `fuse_pools`-th pool
+/// layer across all devices; the tail runs on device 0. DeepThings fuses
+/// "the first few layers"; two pool levels is its canonical setting.
+pub fn early_fused(g: &ModelGraph, cluster: &Cluster, fuse_pools: usize) -> SyncSchedule {
+    let all: Vec<usize> = (0..cluster.len()).collect();
+    let mut cut = g.n_layers();
+    let mut pools = 0;
+    for id in 0..g.n_layers() {
+        if matches!(g.layer(id).op, Op::MaxPool | Op::AvgPool) {
+            pools += 1;
+            if pools == fuse_pools {
+                cut = id + 1;
+                break;
+            }
+        }
+    }
+    let head: Vec<usize> = (0..cut).filter(|&i| g.layer(i).op != Op::Input).collect();
+    let tail: Vec<usize> = (cut..g.n_layers()).collect();
+    let mut groups = vec![SyncGroup { layers: head, devices: all, halo_sync: false }];
+    if !tail.is_empty() {
+        groups.push(SyncGroup { layers: tail, devices: vec![0], halo_sync: false });
+    }
+    SyncSchedule { name: "EFL", groups }
+}
+
+/// OFL: DP over the piece chain choosing fusion boundaries that minimise
+/// the summed group cost (computation + per-group sync), every group on
+/// all devices. `pieces` usually comes from Algorithm 1 so OFL handles
+/// DAG models exactly like the paper's AOFL-at-block-level comparison.
+pub fn optimal_fused(g: &ModelGraph, pieces: &PieceChain, cluster: &Cluster) -> SyncSchedule {
+    let all: Vec<usize> = (0..cluster.len()).collect();
+    let devs: Vec<&Device> = cluster.devices.iter().collect();
+    let l = pieces.len();
+    let seg = |i: usize, j: usize| -> Vec<usize> {
+        let mut ids: Vec<usize> = pieces[i..=j].iter().flatten().copied().collect();
+        ids.sort_unstable();
+        ids
+    };
+    // cost[i][j]: executing pieces i..=j as one fused group on all devices
+    let group_cost = |i: usize, j: usize| -> f64 {
+        stage_cost(g, &seg(i, j), &devs, &cluster.network).total
+    };
+    // DP: best[j] = min over i<=j of best[i-1] + cost(i, j)
+    let mut best = vec![f64::INFINITY; l + 1];
+    let mut back = vec![0usize; l + 1];
+    best[0] = 0.0;
+    for j in 1..=l {
+        for i in 1..=j {
+            let c = best[i - 1] + group_cost(i - 1, j - 1);
+            if c < best[j] {
+                best[j] = c;
+                back[j] = i - 1;
+            }
+        }
+    }
+    let mut bounds = Vec::new();
+    let mut j = l;
+    while j > 0 {
+        bounds.push((back[j], j - 1));
+        j = back[j];
+    }
+    bounds.reverse();
+    let groups = bounds
+        .into_iter()
+        .map(|(i, jj)| SyncGroup { layers: seg(i, jj), devices: all.clone(), halo_sync: false })
+        .collect();
+    SyncSchedule { name: "OFL", groups }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modelzoo;
+    use crate::partition;
+
+    #[test]
+    fn efl_splits_head_and_tail() {
+        let g = modelzoo::vgg16();
+        let c = Cluster::homogeneous_rpi(4, 1.0);
+        let s = early_fused(&g, &c, 2);
+        assert_eq!(s.groups.len(), 2);
+        assert_eq!(s.groups[0].devices.len(), 4);
+        assert_eq!(s.groups[1].devices, vec![0]);
+        // head ends at pool2
+        let pool2 = g.by_name("pool2").unwrap();
+        assert!(s.groups[0].layers.contains(&pool2));
+        assert!(!s.groups[0].layers.iter().any(|&i| i > pool2));
+    }
+
+    #[test]
+    fn ofl_groups_tile_the_model() {
+        let g = modelzoo::vgg16();
+        let c = Cluster::homogeneous_rpi(4, 1.0);
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        let s = optimal_fused(&g, &pieces, &c);
+        let mut covered: Vec<usize> = s.groups.iter().flat_map(|gr| gr.layers.clone()).collect();
+        covered.sort();
+        let expect: Vec<usize> = (0..g.n_layers()).filter(|&i| !pieces.is_empty() && i != 0 || pieces[0].contains(&0)).collect();
+        // groups cover every layer exactly once (input layer belongs to
+        // the first piece if Algorithm 1 placed it there)
+        let mut all_pieces: Vec<usize> = pieces.iter().flatten().copied().collect();
+        all_pieces.sort();
+        assert_eq!(covered, all_pieces);
+        let _ = expect;
+        assert!(s.groups.len() > 1, "OFL should choose several groups on VGG16");
+    }
+
+    #[test]
+    fn ofl_not_worse_than_single_fused_group() {
+        let g = modelzoo::vgg16();
+        let c = Cluster::homogeneous_rpi(8, 1.0);
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        let ofl = optimal_fused(&g, &pieces, &c);
+        let devs: Vec<&Device> = c.devices.iter().collect();
+        let total_ofl: f64 = ofl
+            .groups
+            .iter()
+            .map(|gr| stage_cost(&g, &gr.layers, &devs, &c.network).total)
+            .sum();
+        let mut whole: Vec<usize> = pieces.iter().flatten().copied().collect();
+        whole.sort();
+        let single = stage_cost(&g, &whole, &devs, &c.network).total;
+        assert!(total_ofl <= single + 1e-9, "OFL {total_ofl} vs single fused {single}");
+    }
+}

@@ -1,0 +1,32 @@
+//! LW — layer-wise parallelisation (MoDNN, [4] in the paper): every
+//! layer's output feature is split over all devices; after each layer the
+//! leader gathers and re-distributes. Maximum parallelism, maximum
+//! communication.
+
+use super::{SyncGroup, SyncSchedule};
+use crate::cluster::Cluster;
+use crate::graph::{ModelGraph, Op};
+
+pub fn layer_wise(g: &ModelGraph, cluster: &Cluster) -> SyncSchedule {
+    let all: Vec<usize> = (0..cluster.len()).collect();
+    let groups = (0..g.n_layers())
+        .filter(|&id| g.layer(id).op != Op::Input)
+        .map(|id| SyncGroup { layers: vec![id], devices: all.clone(), halo_sync: false })
+        .collect();
+    SyncSchedule { name: "LW", groups }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modelzoo;
+
+    #[test]
+    fn one_group_per_layer() {
+        let g = modelzoo::synthetic_chain(8);
+        let c = Cluster::homogeneous_rpi(4, 1.0);
+        let s = layer_wise(&g, &c);
+        assert_eq!(s.groups.len(), g.n_layers() - 1);
+        assert!(s.groups.iter().all(|gr| gr.devices.len() == 4 && !gr.halo_sync));
+    }
+}

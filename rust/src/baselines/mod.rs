@@ -1,0 +1,48 @@
+//! The compared parallelisation schemes of §6.1:
+//!
+//! * **LW** (layer-wise, MoDNN): every layer split over all devices,
+//!   features gathered+re-scattered between layers.
+//! * **EFL** (early-fused-layer, DeepThings): the first few conv layers
+//!   fused and feature-split over all devices, the remainder on one.
+//! * **OFL** (optimal-fused-layer, AOFL): DP-chosen fusion boundaries;
+//!   every fused group runs on all devices with a sync between groups.
+//! * **CE** (CoEdge): layer-wise with a *dynamic* device count per layer
+//!   and halo-only neighbour synchronisation.
+//! * **BFS**: exhaustive search over pipeline configurations — the
+//!   optimality reference of §6.5 (exponential; bounded by a budget).
+//!
+//! LW/EFL/OFL/CE produce a [`SyncSchedule`] (groups executed in sequence
+//! for every inference — no pipelining); PICO and BFS produce
+//! [`crate::pipeline::PipelinePlan`]s. The simulator consumes either.
+
+mod bfs;
+mod coedge;
+mod fused;
+mod layerwise;
+
+pub use bfs::{bfs_optimal, BfsResult};
+pub use coedge::{coedge, halo_fraction};
+pub use fused::{early_fused, optimal_fused};
+pub use layerwise::layer_wise;
+
+use crate::graph::LayerId;
+
+/// One synchronously executed group: `layers` fused (no communication
+/// inside), feature-split across `device_count` devices; after the group
+/// completes, outputs are gathered (or halo-exchanged for CoEdge).
+#[derive(Debug, Clone)]
+pub struct SyncGroup {
+    pub layers: Vec<LayerId>,
+    /// Cluster device indices executing this group.
+    pub devices: Vec<usize>,
+    /// CoEdge-style neighbour sync: only halo rows are exchanged instead
+    /// of full gather+scatter.
+    pub halo_sync: bool,
+}
+
+/// A non-pipelined schedule: groups run in sequence per inference.
+#[derive(Debug, Clone)]
+pub struct SyncSchedule {
+    pub name: &'static str,
+    pub groups: Vec<SyncGroup>,
+}

@@ -1,0 +1,187 @@
+//! Heterogeneous device cluster `D` (paper §3.1.2) — the simulated
+//! substitute for the paper's 8×Raspberry-Pi-4B + 2×Jetson-TX2-NX testbed.
+//!
+//! The paper's cost model consumes devices only through their computing
+//! capacity ϑ(d_k) (FLOPS), the regression coefficient α_k (Eq. 7) and a
+//! uniform WLAN bandwidth b, so a simulated device is exactly that tuple
+//! plus the power/memory attributes used by the §6.3–6.4 experiments.
+
+use crate::util::Rng;
+
+/// One mobile device `d_k`.
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub id: usize,
+    pub name: String,
+    /// ϑ(d_k): effective floating-point throughput (FLOP/s).
+    pub flops: f64,
+    /// α_k: measured-vs-model regression coefficient (Eq. 7); 1.0 = ideal.
+    pub alpha: f64,
+    /// Power draw while executing (W) — Monsoon HVPM substitute.
+    pub active_power_w: f64,
+    /// Power draw while idle in the pipeline (W).
+    pub standby_power_w: f64,
+    /// Onboard memory (bytes); exceeding it forces swap (paper §6.3.2).
+    pub mem_bytes: usize,
+}
+
+impl Device {
+    /// Raspberry-Pi 4B, one Cortex-A72 core at `ghz` (paper caps CPU
+    /// frequency with cGroup to emulate heterogeneity). Effective FLOPS
+    /// calibrated at ~2 flop/cycle single-core NEON fp32.
+    pub fn rpi(id: usize, ghz: f64) -> Device {
+        Device {
+            id,
+            name: format!("Rpi@{ghz:.1}"),
+            flops: ghz * 1e9 * 2.0,
+            alpha: 1.0,
+            active_power_w: 3.4 * (0.5 + ghz / 3.0), // freq-scaled core power
+            standby_power_w: 1.9,
+            mem_bytes: 2 * 1024 * 1024 * 1024, // 2 GB LPDDR2
+        }
+    }
+
+    /// Nvidia Jetson TX2 NX CPU (Denver/A57 class) at `ghz`.
+    pub fn tx2(id: usize, ghz: f64) -> Device {
+        Device {
+            id,
+            name: format!("NX@{ghz:.1}"),
+            flops: ghz * 1e9 * 4.0, // wider core: ~2x rpi per GHz
+            alpha: 1.0,
+            active_power_w: 7.5,
+            standby_power_w: 3.0,
+            mem_bytes: 4 * 1024 * 1024 * 1024,
+        }
+    }
+
+    /// Eq. (7): computation time for `flops` work on this device.
+    pub fn t_comp(&self, flops: f64) -> f64 {
+        self.alpha * flops / self.flops
+    }
+}
+
+/// Uniform-bandwidth WLAN (paper assumption §3.1.2: devices share one
+/// Wi-Fi AP; 50 Mbps in the testbed).
+#[derive(Debug, Clone, Copy)]
+pub struct Network {
+    /// b: bandwidth between any device pair (bytes/s).
+    pub bandwidth_bps: f64,
+    /// Per-message latency floor (s) — Wi-Fi MAC + Gloo overhead.
+    pub latency_s: f64,
+}
+
+impl Network {
+    /// 50 Mbps shared AP; the per-message floor models Wi-Fi MAC
+    /// contention + Gloo rendezvous (the paper's §6.3 observation that
+    /// per-layer schemes drown in round-trips at WLAN latencies).
+    pub fn wifi_50mbps() -> Network {
+        Network { bandwidth_bps: 50e6 / 8.0, latency_s: 8e-3 }
+    }
+
+    /// Eq. (9): transfer time for `bytes` between two devices.
+    pub fn t_comm(&self, bytes: usize) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth_bps
+    }
+}
+
+/// A cluster: devices + shared network.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub devices: Vec<Device>,
+    pub network: Network,
+}
+
+impl Cluster {
+    pub fn new(devices: Vec<Device>, network: Network) -> Cluster {
+        Cluster { devices, network }
+    }
+
+    /// Homogeneous Raspberry-Pi cluster (Figs. 12–15 setup).
+    pub fn homogeneous_rpi(n: usize, ghz: f64) -> Cluster {
+        Cluster::new((0..n).map(|i| Device::rpi(i, ghz)).collect(), Network::wifi_50mbps())
+    }
+
+    /// The paper's heterogeneous testbed (§6.1 + Table 5): 2× TX2 NX at
+    /// 2.2 GHz and 6× Rpi at {1.5, 1.5, 1.2, 1.2, 0.8, 0.8} GHz.
+    pub fn paper_heterogeneous() -> Cluster {
+        let mut devices = vec![Device::tx2(0, 2.2), Device::tx2(1, 2.2)];
+        for (i, ghz) in [1.5, 1.5, 1.2, 1.2, 0.8, 0.8].iter().enumerate() {
+            devices.push(Device::rpi(2 + i, *ghz));
+        }
+        Cluster::new(devices, Network::wifi_50mbps())
+    }
+
+    /// Random heterogeneous cluster for property tests / sweeps.
+    pub fn random(n: usize, rng: &mut Rng) -> Cluster {
+        let freqs = [0.6, 0.8, 1.0, 1.2, 1.5];
+        let devices = (0..n).map(|i| Device::rpi(i, freqs[rng.below(freqs.len())])).collect();
+        Cluster::new(devices, Network::wifi_50mbps())
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Eq. (14): the homogenised twin cluster D′ — same size, every
+    /// device gets the average capacity. Algorithm 2 plans against this.
+    pub fn homogenized(&self) -> Cluster {
+        let avg_flops = self.devices.iter().map(|d| d.flops).sum::<f64>() / self.len() as f64;
+        let avg_alpha = self.devices.iter().map(|d| d.alpha).sum::<f64>() / self.len() as f64;
+        let devices = self
+            .devices
+            .iter()
+            .map(|d| Device { flops: avg_flops, alpha: avg_alpha, ..d.clone() })
+            .collect();
+        Cluster { devices, network: self.network }
+    }
+
+    /// Total capacity (FLOP/s) of the cluster.
+    pub fn total_flops(&self) -> f64 {
+        self.devices.iter().map(|d| d.flops).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rpi_scales_with_freq() {
+        let fast = Device::rpi(0, 1.5);
+        let slow = Device::rpi(1, 0.8);
+        assert!(fast.flops > slow.flops);
+        assert!((fast.flops / slow.flops - 1.5 / 0.8).abs() < 1e-9);
+        // t_comp inversely proportional to capacity
+        assert!(fast.t_comp(1e9) < slow.t_comp(1e9));
+    }
+
+    #[test]
+    fn network_cost_linear() {
+        let n = Network::wifi_50mbps();
+        let t1 = n.t_comm(1_000_000);
+        let t2 = n.t_comm(2_000_000);
+        assert!(t2 > t1);
+        assert!((t2 - t1 - 1_000_000.0 / n.bandwidth_bps).abs() < 1e-12);
+    }
+
+    #[test]
+    fn homogenized_preserves_total_capacity() {
+        let c = Cluster::paper_heterogeneous();
+        let h = c.homogenized();
+        assert_eq!(h.len(), c.len());
+        assert!((h.total_flops() - c.total_flops()).abs() < 1.0);
+        let first = h.devices[0].flops;
+        assert!(h.devices.iter().all(|d| (d.flops - first).abs() < 1e-6));
+    }
+
+    #[test]
+    fn paper_cluster_composition() {
+        let c = Cluster::paper_heterogeneous();
+        assert_eq!(c.len(), 8);
+        assert_eq!(c.devices.iter().filter(|d| d.name.starts_with("NX")).count(), 2);
+    }
+}

@@ -1,0 +1,135 @@
+//! Framework configuration: the deploy-facing knobs, loadable from a
+//! JSON file (see `examples/configs/`) and overridable from the CLI.
+
+use crate::cluster::{Cluster, Device, Network};
+use crate::json::Value;
+
+/// One device entry in a cluster config.
+#[derive(Debug, Clone)]
+pub struct DeviceConfig {
+    /// "rpi" or "tx2".
+    pub kind: String,
+    pub ghz: f64,
+    pub count: usize,
+}
+
+/// Full planning/serving configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Zoo model name, or a path to a spec.json.
+    pub model: String,
+    pub devices: Vec<DeviceConfig>,
+    /// WLAN bandwidth, Mbps (paper testbed: 50).
+    pub bandwidth_mbps: f64,
+    /// Algorithm 1 diameter bound d (paper default 5).
+    pub diameter: usize,
+    /// Eq. (1) latency cap in seconds (None = unconstrained).
+    pub t_lim: Option<f64>,
+    /// Divide-and-conquer parts for Algorithm 1 (1 = direct).
+    pub dc_parts: usize,
+    /// Requests to drive through the pipeline.
+    pub n_requests: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            model: "vgg16".into(),
+            devices: vec![DeviceConfig { kind: "rpi".into(), ghz: 1.0, count: 4 }],
+            bandwidth_mbps: 50.0,
+            diameter: 5,
+            t_lim: None,
+            dc_parts: 1,
+            n_requests: 64,
+        }
+    }
+}
+
+impl Config {
+    pub fn from_json(v: &Value) -> anyhow::Result<Config> {
+        let mut c = Config::default();
+        if let Some(m) = v.get("model").as_str() {
+            c.model = m.to_string();
+        }
+        if let Some(arr) = v.get("devices").as_arr() {
+            c.devices = arr
+                .iter()
+                .map(|d| DeviceConfig {
+                    kind: d.get("kind").as_str().unwrap_or("rpi").to_string(),
+                    ghz: d.get("ghz").as_f64().unwrap_or(1.0),
+                    count: d.get("count").as_usize().unwrap_or(1),
+                })
+                .collect();
+        }
+        if let Some(b) = v.get("bandwidth_mbps").as_f64() {
+            c.bandwidth_mbps = b;
+        }
+        if let Some(d) = v.get("diameter").as_usize() {
+            c.diameter = d;
+        }
+        if let Some(t) = v.get("t_lim").as_f64() {
+            c.t_lim = Some(t);
+        }
+        if let Some(p) = v.get("dc_parts").as_usize() {
+            c.dc_parts = p.max(1);
+        }
+        if let Some(n) = v.get("n_requests").as_usize() {
+            c.n_requests = n;
+        }
+        Ok(c)
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Config> {
+        Config::from_json(&Value::from_file(path)?)
+    }
+
+    /// Materialise the cluster described by `devices`.
+    pub fn cluster(&self) -> Cluster {
+        let mut devs = Vec::new();
+        for dc in &self.devices {
+            for _ in 0..dc.count {
+                let id = devs.len();
+                devs.push(match dc.kind.as_str() {
+                    "tx2" => Device::tx2(id, dc.ghz),
+                    _ => Device::rpi(id, dc.ghz),
+                });
+            }
+        }
+        let mut network = Network::wifi_50mbps();
+        network.bandwidth_bps = self.bandwidth_mbps * 1e6 / 8.0;
+        Cluster::new(devs, network)
+    }
+
+    pub fn t_lim_or_inf(&self) -> f64 {
+        self.t_lim.unwrap_or(f64::INFINITY)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_config() {
+        let v = Value::from_str(
+            r#"{"model":"yolov2","devices":[{"kind":"tx2","ghz":2.2,"count":2},
+                {"kind":"rpi","ghz":1.5,"count":6}],"bandwidth_mbps":25,
+                "diameter":4,"t_lim":2.5,"dc_parts":2,"n_requests":10}"#,
+        )
+        .unwrap();
+        let c = Config::from_json(&v).unwrap();
+        assert_eq!(c.model, "yolov2");
+        let cluster = c.cluster();
+        assert_eq!(cluster.len(), 8);
+        assert!(cluster.devices[0].name.starts_with("NX"));
+        assert!((cluster.network.bandwidth_bps - 25e6 / 8.0).abs() < 1.0);
+        assert_eq!(c.t_lim, Some(2.5));
+    }
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = Config::default();
+        assert_eq!(c.cluster().len(), 4);
+        assert_eq!(c.t_lim_or_inf(), f64::INFINITY);
+    }
+}

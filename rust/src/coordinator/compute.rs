@@ -1,0 +1,70 @@
+//! Numeric backends for the coordinator's stage workers.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+
+use crate::cost::LayerTile;
+use crate::graph::{LayerId, ModelGraph};
+use crate::runtime::reference::Weights;
+use crate::runtime::{run_stage, Backend, Engine, PipelineArtifacts, Tensor};
+
+/// A thread-safe stage computer.
+pub trait Compute: Send + Sync {
+    fn run(
+        &self,
+        g: &ModelGraph,
+        segment: &[LayerId],
+        tiles: &BTreeMap<LayerId, LayerTile>,
+        feeds: &HashMap<LayerId, Tensor>,
+    ) -> anyhow::Result<HashMap<LayerId, Tensor>>;
+}
+
+/// Pure-rust kernels (any tile shape).
+pub struct NativeCompute {
+    pub weights: HashMap<LayerId, Weights>,
+}
+
+impl Compute for NativeCompute {
+    fn run(
+        &self,
+        g: &ModelGraph,
+        segment: &[LayerId],
+        tiles: &BTreeMap<LayerId, LayerTile>,
+        feeds: &HashMap<LayerId, Tensor>,
+    ) -> anyhow::Result<HashMap<LayerId, Tensor>> {
+        run_stage(g, segment, tiles, feeds, &Backend::Native { weights: &self.weights })
+    }
+}
+
+/// PJRT-backed compute using the AOT artifacts.
+///
+/// SAFETY: the `xla` crate's PJRT types wrap raw pointers and are not
+/// auto-Send/Sync, but the underlying XLA *CPU* PJRT client is
+/// documented thread-safe for concurrent compile + execute (each call
+/// builds its own buffers); the executable cache is behind a mutex in
+/// [`Engine`]. We therefore assert Send + Sync for this wrapper.
+pub struct PjrtCompute {
+    pub engine: Arc<Engine>,
+    pub artifacts: Arc<PipelineArtifacts>,
+}
+
+unsafe impl Send for PjrtCompute {}
+unsafe impl Sync for PjrtCompute {}
+
+impl Compute for PjrtCompute {
+    fn run(
+        &self,
+        g: &ModelGraph,
+        segment: &[LayerId],
+        tiles: &BTreeMap<LayerId, LayerTile>,
+        feeds: &HashMap<LayerId, Tensor>,
+    ) -> anyhow::Result<HashMap<LayerId, Tensor>> {
+        run_stage(
+            g,
+            segment,
+            tiles,
+            feeds,
+            &Backend::Pjrt { engine: &self.engine, artifacts: &self.artifacts },
+        )
+    }
+}

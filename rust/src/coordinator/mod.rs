@@ -1,0 +1,21 @@
+//! Serving coordinator: the paper's Fig. 8 stage workflow as a threaded
+//! pipeline over real tensors.
+//!
+//! One worker thread per stage, connected by channels. Each stage's main
+//! loop: take the feature map from the input queue, split it into tiles
+//! (per the capacity-proportional partition from [`crate::cost::
+//! stage_splits`] — identical to the cost model's), run every simulated
+//! device's share through the numeric backend, gather + stitch the sink
+//! tiles, and send the result to the next stage.
+//!
+//! Time is *virtual*: device compute and network transfer advance a
+//! simulated clock through the same Eq. 7–11 cost model the planner
+//! optimises (one physical core cannot host 8 devices), while tensors
+//! flow for real — so the coordinator validates both the schedule and
+//! the numerics. Wall-clock time is also recorded for the §Perf work.
+
+mod compute;
+mod serve;
+
+pub use compute::{Compute, NativeCompute, PjrtCompute};
+pub use serve::{serve, Request, Response, ServeReport};

@@ -1,0 +1,389 @@
+//! The threaded serving pipeline.
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::sync::mpsc;
+use std::time::Instant;
+
+use super::compute::Compute;
+use crate::cluster::Cluster;
+use crate::cost::{segment_tiles, stage_cost, stage_splits};
+use crate::graph::{LayerId, ModelGraph};
+use crate::pipeline::PipelinePlan;
+use crate::runtime::Tensor;
+
+/// An inference request entering the pipeline.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub input: Tensor,
+    /// Virtual submission time (seconds).
+    pub t_submit: f64,
+}
+
+/// A completed inference.
+#[derive(Debug)]
+pub struct Response {
+    pub id: u64,
+    pub output: Tensor,
+    /// Virtual completion time.
+    pub t_done: f64,
+    /// Virtual end-to-end latency (t_done − t_submit).
+    pub latency: f64,
+}
+
+/// Serving run outcome.
+#[derive(Debug)]
+pub struct ServeReport {
+    pub responses: Vec<Response>,
+    /// Virtual makespan (time the last response left the pipeline).
+    pub makespan: f64,
+    /// Observed steady-state period (median inter-completion gap).
+    pub period: f64,
+    /// (n−1) / (last − first completion): steady-state throughput.
+    pub throughput: f64,
+    /// Mean virtual latency.
+    pub mean_latency: f64,
+    /// Median virtual latency.
+    pub p50_latency: f64,
+    /// 95th-percentile virtual latency (queueing shows up here when
+    /// arrivals outpace the pipeline period).
+    pub p95_latency: f64,
+    /// Wall-clock seconds the run took on this host.
+    pub wall_secs: f64,
+}
+
+/// Messages between stage workers: the request id, the virtual time the
+/// payload is ready, and every live tensor downstream stages still need.
+/// Tensors are `Arc`-shared: forwarding a skip-connection feature to a
+/// later stage must not deep-copy megabytes per frame (§Perf log in
+/// EXPERIMENTS.md — this halved the coordinator's wall time).
+struct Msg {
+    id: u64,
+    t_ready: f64,
+    t_submit: f64,
+    live: HashMap<LayerId, std::sync::Arc<Tensor>>,
+}
+
+/// Run `requests` through the pipeline plan on the virtual `cluster`,
+/// computing real tensors via `compute` (shared by all stage threads).
+pub fn serve(
+    g: &ModelGraph,
+    plan: &PipelinePlan,
+    cluster: &Cluster,
+    compute: &dyn Compute,
+    requests: Vec<Request>,
+) -> anyhow::Result<ServeReport> {
+    let n_stages = plan.stages.len();
+    anyhow::ensure!(n_stages > 0, "empty plan");
+    let wall_start = Instant::now();
+
+    // Pre-compute per-stage virtual costs (Eq. 7-11) and feature splits.
+    let stage_t: Vec<f64> = plan
+        .stages
+        .iter()
+        .map(|s| {
+            let devs: Vec<&crate::cluster::Device> =
+                s.devices.iter().map(|&i| &cluster.devices[i]).collect();
+            stage_cost(g, &s.layers, &devs, &cluster.network).total
+        })
+        .collect();
+    // Live set after each stage: layers produced at or before it that
+    // stages after it still consume (handles cross-stage skip edges).
+    let mut live_after: Vec<HashSet<LayerId>> = vec![HashSet::new(); n_stages];
+    for (si, _) in plan.stages.iter().enumerate() {
+        let produced: HashSet<LayerId> = plan.stages[..=si]
+            .iter()
+            .flat_map(|s| s.layers.iter().copied())
+            .chain([0usize])
+            .collect();
+        let needed: HashSet<LayerId> = plan.stages[si + 1..]
+            .iter()
+            .flat_map(|s| s.layers.iter())
+            .flat_map(|&id| g.layer(id).inputs.iter().copied())
+            .collect();
+        live_after[si] = produced
+            .intersection(&needed)
+            .copied()
+            .filter(|&id| !plan.stages[si + 1..].iter().any(|s| s.layers.contains(&id)))
+            .collect();
+    }
+
+    std::thread::scope(|scope| -> anyhow::Result<ServeReport> {
+        // Channel chain: feeder -> stage 0 -> ... -> stage S-1 -> collector.
+        let mut senders: Vec<mpsc::Sender<Msg>> = Vec::new();
+        let mut receivers: Vec<mpsc::Receiver<Msg>> = Vec::new();
+        for _ in 0..=n_stages {
+            let (tx, rx) = mpsc::channel::<Msg>();
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        // Spawn stage workers (stage si reads receivers[si], writes
+        // senders[si+1]).
+        let mut handles = Vec::new();
+        for (si, stage) in plan.stages.iter().enumerate() {
+            let rx = receivers.remove(0);
+            let tx = senders[si + 1].clone();
+            let devs: Vec<&crate::cluster::Device> =
+                stage.devices.iter().map(|&i| &cluster.devices[i]).collect();
+            let splits = stage_splits(g, &stage.layers, &devs);
+            let t_s = stage_t[si];
+            let live = live_after[si].clone();
+            let seg = stage.layers.clone();
+            handles.push(scope.spawn(move || -> anyhow::Result<()> {
+                let mut stage_free = 0.0f64;
+                while let Ok(msg) = rx.recv() {
+                    // Virtual pipeline timing: the stage is busy T_s per
+                    // frame, frames queue FIFO.
+                    let t_start = msg.t_ready.max(stage_free);
+                    let t_done = t_start + t_s;
+                    stage_free = t_done;
+
+                    // Real numerics: per-device tiles, gather, stitch.
+                    let sinks = crate::cost::segment_sinks(g, &seg);
+                    let mut sink_parts: BTreeMap<LayerId, Vec<(usize, Tensor)>> = BTreeMap::new();
+                    for sink_out in splits.iter().filter(|s| !s.is_empty()) {
+                        let tiles = segment_tiles(g, &seg, sink_out);
+                        // Slice this device's feed slabs from the live map.
+                        let mut feeds: HashMap<LayerId, Tensor> = HashMap::new();
+                        for (&id, tile) in &tiles {
+                            // Feed external producers AND an in-segment
+                            // model input (its "compute" is the raw frame).
+                            if seg.contains(&id) && g.layer(id).op != crate::graph::Op::Input {
+                                continue;
+                            }
+                            let full = msg
+                                .live
+                                .get(&id)
+                                .ok_or_else(|| anyhow::anyhow!("stage {si}: missing feed {id}"))?;
+                            let slab = if full.dims.len() == 3 {
+                                full.slice_rows(tile.out_iv.0, tile.out_iv.1)
+                            } else {
+                                (**full).clone()
+                            };
+                            feeds.insert(id, slab);
+                        }
+                        let mut out = compute.run(g, &seg, &tiles, &feeds)?;
+                        for &s in &sinks {
+                            if let Some(t) = out.remove(&s) {
+                                // take ownership — no tile copy
+                                sink_parts.entry(s).or_default().push((tiles[&s].out_iv.0, t));
+                            }
+                        }
+                    }
+                    // Stitch sink tiles (row order) into full features.
+                    let mut live_next: HashMap<LayerId, std::sync::Arc<Tensor>> = HashMap::new();
+                    for (s, mut parts) in sink_parts {
+                        parts.sort_by_key(|(r0, _)| *r0);
+                        let slabs: Vec<Tensor> = parts.into_iter().map(|(_, t)| t).collect();
+                        let full = if slabs.len() == 1 {
+                            slabs.into_iter().next().unwrap()
+                        } else {
+                            Tensor::stitch_rows(&slabs)
+                        };
+                        live_next.insert(s, std::sync::Arc::new(full));
+                    }
+                    // Forward upstream tensors still needed downstream
+                    // (Arc clone: refcount bump, no copy).
+                    for (&id, t) in &msg.live {
+                        if live.contains(&id) && !live_next.contains_key(&id) {
+                            live_next.insert(id, t.clone());
+                        }
+                    }
+                    if tx
+                        .send(Msg { id: msg.id, t_ready: t_done, t_submit: msg.t_submit, live: live_next })
+                        .is_err()
+                    {
+                        break;
+                    }
+                }
+                Ok(())
+            }));
+        }
+        drop(senders.drain(1..)); // workers hold their own clones
+
+        // Feed requests.
+        let feeder = senders.remove(0);
+        let out_id = g.output_id();
+        let n = requests.len();
+        for r in requests {
+            feeder.send(Msg {
+                id: r.id,
+                t_ready: r.t_submit,
+                t_submit: r.t_submit,
+                live: [(0usize, std::sync::Arc::new(r.input))].into(),
+            })?;
+        }
+        drop(feeder);
+
+        // Collect.
+        let collector = receivers.remove(0);
+        let mut responses = Vec::with_capacity(n);
+        while let Ok(msg) = collector.recv() {
+            let output = msg
+                .live
+                .get(&out_id)
+                .map(|t| (**t).clone())
+                .ok_or_else(|| anyhow::anyhow!("response missing model output"))?;
+            responses.push(Response {
+                id: msg.id,
+                output,
+                t_done: msg.t_ready,
+                latency: msg.t_ready - msg.t_submit,
+            });
+        }
+        // Join workers BEFORE the completeness check so a compute error
+        // surfaces as itself, not as "lost responses".
+        for h in handles {
+            h.join().map_err(|_| anyhow::anyhow!("stage worker panicked"))??;
+        }
+        responses.sort_by_key(|r| r.id);
+        anyhow::ensure!(responses.len() == n, "lost responses: {} of {n}", responses.len());
+
+        let makespan = responses.iter().map(|r| r.t_done).fold(0.0, f64::max);
+        let mut gaps: Vec<f64> = responses.windows(2).map(|w| w[1].t_done - w[0].t_done).collect();
+        gaps.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let period = if gaps.is_empty() { makespan } else { gaps[gaps.len() / 2] };
+        let throughput = if responses.len() > 1 {
+            (responses.len() - 1) as f64 / (makespan - responses[0].t_done)
+        } else {
+            1.0 / makespan.max(f64::MIN_POSITIVE)
+        };
+        let mean_latency =
+            responses.iter().map(|r| r.latency).sum::<f64>() / responses.len().max(1) as f64;
+        let mut lats: Vec<f64> = responses.iter().map(|r| r.latency).collect();
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| -> f64 {
+            if lats.is_empty() {
+                0.0
+            } else {
+                lats[((lats.len() - 1) as f64 * p).round() as usize]
+            }
+        };
+        Ok(ServeReport {
+            responses,
+            makespan,
+            period,
+            throughput,
+            mean_latency,
+            p50_latency: pct(0.5),
+            p95_latency: pct(0.95),
+            wall_secs: wall_start.elapsed().as_secs_f64(),
+        })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::NativeCompute;
+    use crate::modelzoo;
+    use crate::partition;
+    use crate::pipeline;
+    use crate::runtime::executor::{model_weights, run_full_native};
+    use crate::sim;
+    use crate::util::Rng;
+
+    fn requests(g: &ModelGraph, n: usize) -> Vec<Request> {
+        let (c, h, w) = g.input_shape;
+        let mut rng = Rng::new(5);
+        (0..n)
+            .map(|i| Request {
+                id: i as u64,
+                input: Tensor::new(
+                    vec![c, h, w],
+                    (0..c * h * w).map(|_| rng.normal() as f32).collect(),
+                ),
+                t_submit: 0.0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn serve_matches_reference_numerics() {
+        let g = modelzoo::synthetic_chain(6);
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        let c = Cluster::homogeneous_rpi(4, 1.0);
+        let plan = pipeline::plan(&g, &pieces, &c, f64::INFINITY).unwrap();
+        assert!(plan.stages.len() > 1, "want a real pipeline");
+        let weights = model_weights(&g, 11);
+        let reqs = requests(&g, 8);
+        let expect: Vec<Tensor> = reqs
+            .iter()
+            .map(|r| run_full_native(&g, &weights, &r.input).unwrap())
+            .collect();
+        let compute = NativeCompute { weights };
+        let report = serve(&g, &plan, &c, &compute, reqs).unwrap();
+        assert_eq!(report.responses.len(), 8);
+        for (resp, want) in report.responses.iter().zip(&expect) {
+            assert!(
+                resp.output.max_abs_diff(want) < 1e-4,
+                "request {}: diff {}",
+                resp.id,
+                resp.output.max_abs_diff(want)
+            );
+        }
+    }
+
+    #[test]
+    fn serve_timing_matches_simulator() {
+        let g = modelzoo::synthetic_chain(8);
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        let c = Cluster::paper_heterogeneous();
+        let plan = pipeline::plan(&g, &pieces, &c, f64::INFINITY).unwrap();
+        let n = 20;
+        let predicted = sim::simulate_pipeline(&g, &c, &plan, n);
+        let compute = NativeCompute { weights: model_weights(&g, 1) };
+        let report = serve(&g, &plan, &c, &compute, requests(&g, n)).unwrap();
+        // The coordinator's virtual clock implements the same recurrence
+        // as the simulator: makespan and period must agree closely.
+        assert!(
+            (report.makespan - predicted.makespan).abs() / predicted.makespan < 1e-9,
+            "coordinator {} vs simulator {}",
+            report.makespan,
+            predicted.makespan
+        );
+        assert!((report.period - predicted.period).abs() / predicted.period < 1e-9);
+    }
+
+    #[test]
+    fn serve_handles_dag_models_with_skips() {
+        // Force a 2-stage cut through a residual region: cross-stage skip
+        // tensors must be forwarded by the live-set logic.
+        let g = modelzoo::synthetic_graph(3, 9);
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        let c = Cluster::homogeneous_rpi(3, 1.0);
+        let plan = pipeline::plan(&g, &pieces, &c, f64::INFINITY).unwrap();
+        let weights = model_weights(&g, 23);
+        let reqs = requests(&g, 4);
+        let expect: Vec<Tensor> = reqs
+            .iter()
+            .map(|r| run_full_native(&g, &weights, &r.input).unwrap())
+            .collect();
+        let compute = NativeCompute { weights };
+        let report = serve(&g, &plan, &c, &compute, reqs).unwrap();
+        for (resp, want) in report.responses.iter().zip(&expect) {
+            assert!(resp.output.max_abs_diff(want) < 1e-4);
+        }
+    }
+
+    #[test]
+    fn pipelining_overlaps_stages() {
+        let g = modelzoo::synthetic_chain(8);
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        let c = Cluster::homogeneous_rpi(4, 1.0);
+        let plan = pipeline::plan(&g, &pieces, &c, f64::INFINITY).unwrap();
+        if plan.stages.len() < 2 {
+            return;
+        }
+        let compute = NativeCompute { weights: model_weights(&g, 2) };
+        let r1 = serve(&g, &plan, &c, &compute, requests(&g, 1)).unwrap();
+        let r10 = serve(&g, &plan, &c, &compute, requests(&g, 10)).unwrap();
+        // 10 frames must take far less than 10x one frame (overlap).
+        assert!(
+            r10.makespan < 10.0 * r1.makespan * 0.9,
+            "no overlap: {} vs 10x{}",
+            r10.makespan,
+            r1.makespan
+        );
+    }
+}

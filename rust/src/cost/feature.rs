@@ -1,0 +1,322 @@
+//! Feature-row geometry: the paper's Eq. (2)–(3) in global coordinates.
+//!
+//! PICO splits feature maps across devices by rows (1-D spatial partition,
+//! full width). Given a segment and the output rows each sink must
+//! produce, `segment_tiles` propagates the requirement top-down through
+//! the segment DAG: a layer's required output interval is the union
+//! (Eq. 2 max) of what its in-segment consumers need; conv/pool inputs
+//! follow Eq. 3 with padding made explicit so border tiles know how much
+//! of the requirement is zero padding versus halo rows fetched from the
+//! previous stage.
+//!
+//! This module is the *contract* between the planner, the simulator, the
+//! runtime executor, and the python AOT exporter (`python/compile/plan.py`
+//! implements the identical arithmetic); integration tests pin the two to
+//! shared golden values.
+
+use std::collections::BTreeMap;
+
+use crate::graph::{LayerId, ModelGraph, Op, Shape};
+
+/// Row interval `[start, end)` in a layer's output grid (clipped, global).
+pub type Interval = (usize, usize);
+
+/// What one device computes for one layer of its stage segment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerTile {
+    /// Rows of this layer's output the device produces (clipped, global).
+    pub out_iv: Interval,
+    /// Height of the clipped input slab fed to the layer.
+    pub in_rows: usize,
+    /// Zero rows added above/below (border padding of THIS tile).
+    pub pad_top: usize,
+    pub pad_bottom: usize,
+}
+
+/// Eq. (3): input rows (global, unclipped — may be negative or exceed H)
+/// needed to produce output rows `out_iv` of layer `l`.
+pub fn required_rows(g: &ModelGraph, id: LayerId, out_iv: Interval) -> (isize, isize) {
+    let l = g.layer(id);
+    let (s, e) = (out_iv.0 as isize, out_iv.1 as isize);
+    debug_assert!(e > s, "empty interval");
+    match l.op {
+        Op::Conv | Op::MaxPool | Op::AvgPool => {
+            let sh = l.stride.0 as isize;
+            let kh = l.kernel.0 as isize;
+            let ph = l.padding.0 as isize;
+            (s * sh - ph, (e - 1) * sh - ph + kh)
+        }
+        Op::Add | Op::Concat | Op::Input => (s, e),
+        Op::Flatten | Op::Dense => (s, e),
+    }
+}
+
+fn clip(iv: (isize, isize), h: usize) -> Interval {
+    let s = iv.0.max(0) as usize;
+    let e = (iv.1.min(h as isize)) as usize;
+    assert!(e > s, "interval {iv:?} empty after clipping to height {h}");
+    (s, e)
+}
+
+fn union(a: Option<(isize, isize)>, b: (isize, isize)) -> (isize, isize) {
+    match a {
+        None => b,
+        Some((s, e)) => (s.min(b.0), e.max(b.1)),
+    }
+}
+
+/// Propagate required output intervals through a stage segment.
+///
+/// `segment` must be topologically ordered layer ids; `sink_out` assigns
+/// the device's output rows for each sink. The result contains a
+/// [`LayerTile`] for every segment member *plus* entries for external
+/// feed layers (out_iv = rows the device must fetch from the previous
+/// stage; in_rows/pads zero).
+pub fn segment_tiles(
+    g: &ModelGraph,
+    segment: &[LayerId],
+    sink_out: &BTreeMap<LayerId, Interval>,
+) -> BTreeMap<LayerId, LayerTile> {
+    let in_seg: std::collections::HashSet<LayerId> = segment.iter().copied().collect();
+    // Required output interval per layer (global, clipped progressively).
+    let mut need: BTreeMap<LayerId, (isize, isize)> = sink_out
+        .iter()
+        .map(|(&k, &(s, e))| (k, (s as isize, e as isize)))
+        .collect();
+    for &id in segment.iter().rev() {
+        let l = g.layer(id);
+        if matches!(l.op, Op::Flatten | Op::Dense) {
+            // Heads need the full input feature (only valid unsplit).
+            for &src in &l.inputs {
+                let h = g.shape(src).height();
+                let prev = need.get(&src).copied();
+                need.insert(src, union(prev, (0, h as isize)));
+            }
+            continue;
+        }
+        let out_iv = *need
+            .get(&id)
+            .unwrap_or_else(|| panic!("layer {} ({}) has no consumer requirement", id, l.name));
+        let h_out = g.shape(id).height();
+        let out_iv = clip(out_iv, h_out);
+        need.insert(id, (out_iv.0 as isize, out_iv.1 as isize));
+        let req = required_rows(g, id, out_iv);
+        for &src in &l.inputs {
+            let h_src = g.shape(src).height();
+            let clipped = clip(req, h_src);
+            let prev = need.get(&src).copied();
+            need.insert(src, union(prev, (clipped.0 as isize, clipped.1 as isize)));
+        }
+    }
+
+    let mut tiles = BTreeMap::new();
+    for &id in segment {
+        let l = g.layer(id);
+        let h_out = g.shape(id).height();
+        let out_iv = clip(need[&id], h_out);
+        let tile = match l.op {
+            Op::Conv | Op::MaxPool | Op::AvgPool => {
+                let req = required_rows(g, id, out_iv);
+                let h_in = g.shape(l.inputs[0]).height();
+                let pad_top = (-req.0).max(0) as usize;
+                let pad_bottom = (req.1 - h_in as isize).max(0) as usize;
+                let in_rows = (req.1.min(h_in as isize) - req.0.max(0)) as usize;
+                LayerTile { out_iv, in_rows, pad_top, pad_bottom }
+            }
+            _ => {
+                let in_rows = l
+                    .inputs
+                    .first()
+                    .map(|&src| {
+                        let h = g.shape(src).height();
+                        if matches!(g.shape(src), Shape::Flat(_)) {
+                            0
+                        } else {
+                            let iv = clip(need[&src], h);
+                            iv.1 - iv.0
+                        }
+                    })
+                    .unwrap_or(0);
+                LayerTile { out_iv, in_rows, pad_top: 0, pad_bottom: 0 }
+            }
+        };
+        tiles.insert(id, tile);
+    }
+    // External feeds: rows to fetch from the previous stage.
+    for &id in segment {
+        for &src in &g.layer(id).inputs {
+            if !in_seg.contains(&src) && !tiles.contains_key(&src) {
+                let h = g.shape(src).height();
+                let iv = clip(need[&src], h.max(1));
+                tiles.insert(src, LayerTile { out_iv: iv, in_rows: 0, pad_top: 0, pad_bottom: 0 });
+            }
+        }
+    }
+    tiles
+}
+
+/// Equal row split with the remainder spread from the top — identical to
+/// `python/compile/plan.py::row_splits`.
+pub fn row_splits(h: usize, parts: usize) -> Vec<Interval> {
+    assert!(parts >= 1 && parts <= h, "cannot split {h} rows into {parts} parts");
+    let base = h / parts;
+    let rem = h % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut s = 0;
+    for i in 0..parts {
+        let e = s + base + usize::from(i < rem);
+        out.push((s, e));
+        s = e;
+    }
+    out
+}
+
+/// Split `h` rows proportionally to `weights` (Algorithm 3's feature
+/// adjustment for heterogeneous devices). Every device gets ≥1 row;
+/// rounding remainders go to the largest fractional parts.
+pub fn proportional_splits(h: usize, weights: &[f64]) -> Vec<Interval> {
+    let parts = weights.len();
+    assert!(parts >= 1 && parts <= h, "cannot split {h} rows into {parts} parts");
+    let total: f64 = weights.iter().sum();
+    assert!(total > 0.0, "weights must be positive");
+    // Largest-remainder rounding with a floor of 1 row per device.
+    let ideal: Vec<f64> = weights.iter().map(|w| w / total * h as f64).collect();
+    let mut rows: Vec<usize> = ideal.iter().map(|x| (x.floor() as usize).max(1)).collect();
+    let mut assigned: usize = rows.iter().sum();
+    // Fix overshoot from the 1-row floor by shaving the largest shares.
+    while assigned > h {
+        let i = (0..parts).filter(|&i| rows[i] > 1).max_by(|&a, &b| rows[a].cmp(&rows[b])).unwrap();
+        rows[i] -= 1;
+        assigned -= 1;
+    }
+    // Distribute the remainder by largest fractional part.
+    let mut order: Vec<usize> = (0..parts).collect();
+    order.sort_by(|&a, &b| {
+        let fa = ideal[a] - ideal[a].floor();
+        let fb = ideal[b] - ideal[b].floor();
+        fb.partial_cmp(&fa).unwrap()
+    });
+    let mut k = 0;
+    while assigned < h {
+        rows[order[k % parts]] += 1;
+        assigned += 1;
+        k += 1;
+    }
+    let mut out = Vec::with_capacity(parts);
+    let mut s = 0;
+    for r in rows {
+        out.push((s, s + r));
+        s += r;
+    }
+    debug_assert_eq!(s, h);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Activation, Layer};
+
+    /// TinyVGG stage 1 (conv1, conv2, pool1) on 3x32x32 — the shapes the
+    /// python exporter produced for the default plan; golden values below
+    /// match artifacts/tinyvgg/pipeline/*.hlo.txt keys.
+    fn tinyvgg_head() -> ModelGraph {
+        let layers = vec![
+            Layer::input("input"),
+            Layer::conv("conv1", 0, 16, (3, 3), (1, 1), (1, 1), Activation::Relu),
+            Layer::conv("conv2", 1, 16, (3, 3), (1, 1), (1, 1), Activation::Relu),
+            Layer::maxpool("pool1", 2, (2, 2), (2, 2), (0, 0)),
+        ];
+        ModelGraph::new("tinyvgg_head", (3, 32, 32), layers).unwrap()
+    }
+
+    #[test]
+    fn golden_tinyvgg_stage1_device0() {
+        let g = tinyvgg_head();
+        let seg = vec![1, 2, 3];
+        let sink: BTreeMap<_, _> = [(3usize, (0usize, 8usize))].into();
+        let t = segment_tiles(&g, &seg, &sink);
+        // pool1 out rows [0,8) ← in rows [0,16)
+        assert_eq!(t[&3], LayerTile { out_iv: (0, 8), in_rows: 16, pad_top: 0, pad_bottom: 0 });
+        // conv2 out [0,16) ← req [-1,17) → 17 in-rows, pad_top 1
+        // (matches artifact key conv2__r17_pt1_pb0)
+        assert_eq!(t[&2], LayerTile { out_iv: (0, 16), in_rows: 17, pad_top: 1, pad_bottom: 0 });
+        // conv1 out [0,17) ← req [-1,18) → 18 in-rows, pad_top 1
+        // (matches artifact key conv1__r18_pt1_pb0)
+        assert_eq!(t[&1], LayerTile { out_iv: (0, 17), in_rows: 18, pad_top: 1, pad_bottom: 0 });
+        // feed: input rows [0,18)
+        assert_eq!(t[&0].out_iv, (0, 18));
+    }
+
+    #[test]
+    fn golden_tinyvgg_stage1_device1() {
+        let g = tinyvgg_head();
+        let seg = vec![1, 2, 3];
+        let sink: BTreeMap<_, _> = [(3usize, (8usize, 16usize))].into();
+        let t = segment_tiles(&g, &seg, &sink);
+        assert_eq!(t[&3], LayerTile { out_iv: (8, 16), in_rows: 16, pad_top: 0, pad_bottom: 0 });
+        // conv2 out [16,32) ← req [15,33) → clip [15,32): 17 rows, pad_bottom 1
+        assert_eq!(t[&2], LayerTile { out_iv: (16, 32), in_rows: 17, pad_top: 0, pad_bottom: 1 });
+        // conv1 out [15,32) ← req [14,33) → clip [14,32): 18 rows, pad_bottom 1
+        assert_eq!(t[&1], LayerTile { out_iv: (15, 32), in_rows: 18, pad_top: 0, pad_bottom: 1 });
+        assert_eq!(t[&0].out_iv, (14, 32));
+    }
+
+    #[test]
+    fn dag_union_takes_max() {
+        // stem feeds two branches with different halo needs; the stem's
+        // produced interval must cover the union (Eq. 2).
+        let layers = vec![
+            Layer::input("in"),
+            Layer::conv("stem", 0, 8, (3, 3), (1, 1), (1, 1), Activation::Relu),
+            Layer::conv("narrow", 1, 8, (1, 1), (1, 1), (0, 0), Activation::Relu),
+            Layer::conv("wide", 1, 8, (5, 5), (1, 1), (2, 2), Activation::Relu),
+            Layer::concat("cat", vec![2, 3]),
+        ];
+        let g = ModelGraph::new("u", (3, 24, 24), layers).unwrap();
+        let seg = vec![1, 2, 3, 4];
+        let sink: BTreeMap<_, _> = [(4usize, (10usize, 14usize))].into();
+        let t = segment_tiles(&g, &seg, &sink);
+        // narrow needs stem rows [10,14); wide needs [8,16) → union [8,16)
+        assert_eq!(t[&1].out_iv, (8, 16));
+        // stem input: rows [7,17)
+        assert_eq!(t[&0].out_iv, (7, 17));
+        assert_eq!(t[&1].in_rows, 10);
+    }
+
+    #[test]
+    fn strided_geometry() {
+        let layers = vec![
+            Layer::input("in"),
+            Layer::conv("s2", 0, 8, (3, 3), (2, 2), (1, 1), Activation::Relu),
+        ];
+        let g = ModelGraph::new("s", (3, 32, 32), layers).unwrap();
+        let sink: BTreeMap<_, _> = [(1usize, (4usize, 8usize))].into();
+        let t = segment_tiles(&g, &[1], &sink);
+        // req = [4*2-1, 7*2-1+3) = [7, 16): 9 rows, no padding
+        assert_eq!(t[&1], LayerTile { out_iv: (4, 8), in_rows: 9, pad_top: 0, pad_bottom: 0 });
+    }
+
+    #[test]
+    fn row_splits_even_and_remainder() {
+        assert_eq!(row_splits(32, 2), vec![(0, 16), (16, 32)]);
+        assert_eq!(row_splits(7, 3), vec![(0, 3), (3, 5), (5, 7)]);
+        assert_eq!(row_splits(5, 5), vec![(0, 1), (1, 2), (2, 3), (3, 4), (4, 5)]);
+    }
+
+    #[test]
+    fn proportional_split_follows_weights() {
+        let s = proportional_splits(30, &[3.0, 1.0, 2.0]);
+        assert_eq!(s, vec![(0, 15), (15, 20), (20, 30)]);
+        // floor of 1 row even for tiny weights
+        let s = proportional_splits(4, &[100.0, 0.001, 0.001, 100.0]);
+        assert!(s.iter().all(|(a, b)| b > a));
+        assert_eq!(s.last().unwrap().1, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot split")]
+    fn too_many_parts_panics() {
+        row_splits(3, 4);
+    }
+}

@@ -1,0 +1,260 @@
+//! FLOPs accounting (Eq. 4, 6) and the redundancy measure C(M) that
+//! Algorithm 1 minimises.
+
+use std::collections::BTreeMap;
+
+use super::feature::{row_splits, segment_tiles, LayerTile};
+use crate::graph::{LayerId, ModelGraph, Op, Shape};
+
+/// Eq. (4): FLOPs for layer `id` producing `out_rows` output rows at full
+/// width. Conv dominates (paper Fig. 2); pool/add are counted with their
+/// (small) true cost so per-layer profiles match the paper's figure.
+pub fn layer_flops(g: &ModelGraph, id: LayerId, out_rows: usize) -> f64 {
+    let l = g.layer(id);
+    match l.op {
+        Op::Input | Op::Flatten => 0.0,
+        Op::Conv => {
+            let (kh, kw) = l.kernel;
+            let c_in_eff = g.in_channels(id) / l.groups;
+            let w_out = g.shape(id).width();
+            // k_w * k_h * c_in' * w * h * c_out  (multiply–accumulate pairs → 2x)
+            2.0 * (kh * kw * c_in_eff * w_out * out_rows * l.out_channels) as f64
+        }
+        Op::MaxPool | Op::AvgPool => {
+            let (kh, kw) = l.kernel;
+            let c = g.shape(id).channels();
+            let w_out = g.shape(id).width();
+            (kh * kw * c * w_out * out_rows) as f64
+        }
+        Op::Add => {
+            let s = g.shape(id);
+            let per_row = s.elems() / s.height().max(1);
+            ((l.inputs.len() - 1) * per_row * out_rows) as f64
+        }
+        Op::Concat => 0.0,
+        Op::Dense => {
+            let f_in = match g.shape(l.inputs[0]) {
+                Shape::Flat(n) => n,
+                s => s.elems(),
+            };
+            2.0 * (f_in * l.out_channels) as f64
+        }
+    }
+}
+
+/// Eq. (6): θ(M; F^k) — FLOPs a device spends executing segment tiles
+/// (actual produced rows, halo included).
+pub fn segment_flops(g: &ModelGraph, segment: &[LayerId], tiles: &BTreeMap<LayerId, LayerTile>) -> f64 {
+    segment
+        .iter()
+        .map(|&id| {
+            let t = &tiles[&id];
+            layer_flops(g, id, t.out_iv.1 - t.out_iv.0)
+        })
+        .sum()
+}
+
+/// FLOPs of a segment executed unsplit (the ideal, redundancy-free cost).
+pub fn ideal_segment_flops(g: &ModelGraph, segment: &[LayerId]) -> f64 {
+    segment.iter().map(|&id| layer_flops(g, id, g.shape(id).height())).sum()
+}
+
+/// Whole-model FLOPs for one inference.
+pub fn total_flops(g: &ModelGraph) -> f64 {
+    ideal_segment_flops(g, &(0..g.n_layers()).collect::<Vec<_>>())
+}
+
+/// Sink layers of a segment (consumers outside or none).
+pub fn segment_sinks(g: &ModelGraph, segment: &[LayerId]) -> Vec<LayerId> {
+    let set: std::collections::HashSet<_> = segment.iter().copied().collect();
+    segment
+        .iter()
+        .copied()
+        .filter(|&u| {
+            let cons = g.consumers(u);
+            cons.is_empty() || cons.iter().any(|v| !set.contains(v))
+        })
+        .collect()
+}
+
+/// Redundant FLOPs of piece `M` when its output is row-split `parts` ways
+/// (Eq. 6 difference): Σ_k θ(M; F^k) − θ(M; full).
+///
+/// Algorithm 1 needs a device-count-independent measure; following §4.3
+/// ("the difference of required FLOPs for the two inputs") we use the
+/// canonical 2-way split — the redundancy of a single partition boundary.
+/// More parts scale it by ≈(parts−1), which the stage planner accounts
+/// for exactly later.
+pub fn piece_redundancy(g: &ModelGraph, segment: &[LayerId], parts: usize) -> f64 {
+    let sinks = segment_sinks(g, segment);
+    // Pieces ending in flatten/dense (or 1-row features) cannot be split:
+    // no partition boundary, no redundancy.
+    let min_h = sinks.iter().map(|&s| g.shape(s).height()).min().unwrap_or(1);
+    if min_h < parts || sinks.iter().any(|&s| matches!(g.shape(s), Shape::Flat(_))) {
+        return 0.0;
+    }
+    let mut split_total = 0.0;
+    for k in 0..parts {
+        let sink_out: BTreeMap<LayerId, (usize, usize)> = sinks
+            .iter()
+            .map(|&s| {
+                let h = g.shape(s).height();
+                (s, row_splits(h, parts)[k])
+            })
+            .collect();
+        let tiles = segment_tiles(g, segment, &sink_out);
+        split_total += segment_flops(g, segment, &tiles);
+    }
+    (split_total - ideal_segment_flops(g, segment)).max(0.0)
+}
+
+/// Halo length (paper Fig. 11's "pixel length redundancy"): extra input
+/// rows a piece needs beyond the stride-scaled output rows. Computed by
+/// propagating Eq. (3) in *unclipped* interval space (as if the tile were
+/// interior), where the feed length is linear in the output rows t:
+/// len(t) = S·t + halo with S the cumulative stride product.
+pub fn halo_rows(g: &ModelGraph, segment: &[LayerId]) -> usize {
+    let sinks = segment_sinks(g, segment);
+    if sinks.iter().any(|&s| !matches!(g.shape(s), Shape::Chw(..))) {
+        return 0;
+    }
+    let set: std::collections::HashSet<_> = segment.iter().copied().collect();
+    let feed_len = |t: isize| -> isize {
+        let mut need: BTreeMap<LayerId, (isize, isize)> =
+            sinks.iter().map(|&s| (s, (0isize, t))).collect();
+        for &id in segment.iter().rev() {
+            let Some(&out_iv) = need.get(&id) else { continue };
+            let l = g.layer(id);
+            if matches!(l.op, Op::Flatten | Op::Dense) {
+                continue;
+            }
+            let req = match l.op {
+                Op::Conv | Op::MaxPool | Op::AvgPool => {
+                    let sh = l.stride.0 as isize;
+                    let kh = l.kernel.0 as isize;
+                    let ph = l.padding.0 as isize;
+                    (out_iv.0 * sh - ph, (out_iv.1 - 1) * sh - ph + kh)
+                }
+                _ => out_iv,
+            };
+            for &src in &l.inputs {
+                let e = need.entry(src).or_insert(req);
+                e.0 = e.0.min(req.0);
+                e.1 = e.1.max(req.1);
+            }
+        }
+        need.iter()
+            .filter(|(id, _)| !set.contains(*id))
+            .map(|(_, (s, e))| e - s)
+            .max()
+            .unwrap_or(t)
+    };
+    let l1 = feed_len(1);
+    let l2 = feed_len(2);
+    let stride = l2 - l1; // cumulative stride product S
+    (l1 - stride).max(0) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Activation, Layer};
+
+    fn vggish() -> ModelGraph {
+        let layers = vec![
+            Layer::input("in"),
+            Layer::conv("c1", 0, 16, (3, 3), (1, 1), (1, 1), Activation::Relu),
+            Layer::conv("c2", 1, 16, (3, 3), (1, 1), (1, 1), Activation::Relu),
+            Layer::maxpool("p1", 2, (2, 2), (2, 2), (0, 0)),
+        ];
+        ModelGraph::new("v", (3, 32, 32), layers).unwrap()
+    }
+
+    #[test]
+    fn conv_flops_formula() {
+        let g = vggish();
+        // c1: 2 * 3*3 * 3 * 32 cols * 1 row * 16
+        assert_eq!(layer_flops(&g, 1, 1), 2.0 * (9 * 3 * 32 * 16) as f64);
+        // full: x32 rows
+        assert_eq!(layer_flops(&g, 1, 32), 2.0 * (9 * 3 * 32 * 32 * 16) as f64);
+    }
+
+    #[test]
+    fn grouped_conv_divides_cin() {
+        let layers = vec![
+            Layer::input("in"),
+            Layer::conv_grouped("dw", 0, 8, (3, 3), (1, 1), (1, 1), Activation::Relu, 8),
+        ];
+        let g = ModelGraph::new("g", (8, 16, 16), layers).unwrap();
+        // depthwise: c_in' = 1
+        assert_eq!(layer_flops(&g, 1, 16), 2.0 * (9 * 16 * 16 * 8) as f64);
+    }
+
+    #[test]
+    fn redundancy_positive_for_3x3_piece() {
+        let g = vggish();
+        let red = piece_redundancy(&g, &[1, 2, 3], 2);
+        assert!(red > 0.0, "3x3 chain must have halo redundancy, got {red}");
+        // Single 1x1-style piece: no halo.
+        let layers = vec![
+            Layer::input("in"),
+            Layer::conv("pw", 0, 8, (1, 1), (1, 1), (0, 0), Activation::Relu),
+        ];
+        let g1 = ModelGraph::new("pw", (3, 16, 16), layers).unwrap();
+        assert_eq!(piece_redundancy(&g1, &[1], 2), 0.0);
+    }
+
+    #[test]
+    fn redundancy_grows_with_depth() {
+        let g = vggish();
+        let r1 = piece_redundancy(&g, &[1], 2);
+        let r12 = piece_redundancy(&g, &[1, 2], 2);
+        assert!(r12 > r1, "fusing more 3x3 layers must grow redundancy ({r12} vs {r1})");
+    }
+
+    #[test]
+    fn halo_matches_hand_computation() {
+        let g = vggish();
+        // one 3x3 s1 conv: halo = 2
+        assert_eq!(halo_rows(&g, &[1]), 2);
+        // two 3x3 convs: halo = 4
+        assert_eq!(halo_rows(&g, &[1, 2]), 4);
+        // conv,conv,pool(2x2 s2): S=2; len(1)=2*1+? — halo 4 still
+        assert_eq!(halo_rows(&g, &[1, 2, 3]), 4);
+    }
+
+    #[test]
+    fn unbalanced_kernels_fig6() {
+        // 1x7 conv: no row halo; 7x1 conv: 6-row halo. The Fig. 6 insight:
+        // splitting them into two pieces removes the (1x7) piece's row
+        // redundancy entirely.
+        let layers = vec![
+            Layer::input("in"),
+            Layer::conv("a_1x7", 0, 8, (1, 7), (1, 1), (0, 3), Activation::Relu),
+            Layer::conv("b_7x1", 1, 8, (7, 1), (1, 1), (3, 0), Activation::Relu),
+        ];
+        let g = ModelGraph::new("fig6", (3, 28, 28), layers).unwrap();
+        assert_eq!(halo_rows(&g, &[1]), 0);
+        assert_eq!(halo_rows(&g, &[2]), 6);
+        assert_eq!(halo_rows(&g, &[1, 2]), 6);
+        // A single-layer piece has no redundant *computation* — each
+        // device computes exactly its own output rows; the halo shows up
+        // as communication only. Redundancy appears once layers fuse:
+        // fusing the 1x7 behind the 7x1 makes every device recompute the
+        // 1x7 on 6 halo rows.
+        assert_eq!(piece_redundancy(&g, &[1], 2), 0.0);
+        assert_eq!(piece_redundancy(&g, &[2], 2), 0.0);
+        let fused = piece_redundancy(&g, &[1, 2], 2);
+        assert!(fused > 0.0, "fused piece must pay 1x7 halo recompute, got {fused}");
+    }
+
+    #[test]
+    fn total_flops_vgg_scale() {
+        let g = vggish();
+        let t = total_flops(&g);
+        let by_hand = 2.0 * (9 * 3 * 32 * 32 * 16) as f64
+            + 2.0 * (9 * 16 * 32 * 32 * 16) as f64
+            + (4 * 16 * 16 * 16) as f64;
+        assert_eq!(t, by_hand);
+    }
+}

@@ -1,0 +1,20 @@
+//! The paper's cost model (§3.2, Eq. 2–12).
+//!
+//! * [`feature`] — required-input-row propagation over segments (Eq. 2–3
+//!   top-down, Eq. 5 bottom-up), the geometry contract shared with
+//!   `python/compile/plan.py` and the runtime's split/stitch.
+//! * [`flops`] — per-layer and per-segment FLOPs (Eq. 4, 6) and the
+//!   redundancy measure C(M) driving Algorithm 1.
+//! * [`stage`] — stage execution cost T(S) (Eq. 7–11) and pipeline
+//!   period/latency (Eq. 12).
+
+pub mod feature;
+pub mod flops;
+pub mod stage;
+
+pub use feature::{proportional_splits, required_rows, row_splits, segment_tiles, Interval, LayerTile};
+pub use flops::{
+    halo_rows, ideal_segment_flops, layer_flops, piece_redundancy, segment_flops, segment_sinks,
+    total_flops,
+};
+pub use stage::{pipeline_cost, stage_cost, stage_splits, PipelineCost, StageCost};

@@ -1,0 +1,274 @@
+//! Stage and pipeline costs: Eq. (7)–(12).
+//!
+//! A stage S = (M, D, F) executes segment M over devices D, device k
+//! producing output rows F^k of every sink. Its cost is
+//! T(S) = T_comp(S) + T_comm(S), with T_comp the slowest device (Eq. 8)
+//! and T_comm the leader's distribute+gather traffic (Eq. 9–10). The
+//! pipeline period is the max stage cost, the latency the sum (Eq. 12).
+
+use std::collections::BTreeMap;
+
+use super::feature::{proportional_splits, segment_tiles, Interval};
+use super::flops::{segment_flops, segment_sinks};
+use crate::cluster::{Cluster, Device, Network};
+use crate::graph::{LayerId, ModelGraph, Shape};
+
+/// Cost breakdown of one stage (Eq. 8–11).
+#[derive(Debug, Clone)]
+pub struct StageCost {
+    /// t_comp per device (Eq. 7).
+    pub t_comp: Vec<f64>,
+    /// t_comm per device (Eq. 9); the leader's own share is 0.
+    pub t_comm: Vec<f64>,
+    /// θ(M; F^k) per device.
+    pub flops: Vec<f64>,
+    /// Redundant FLOPs per device (beyond the unsplit share).
+    pub redundant_flops: Vec<f64>,
+    /// Input + output feature bytes per device.
+    pub feature_bytes: Vec<usize>,
+    /// T_comp(S) = max_k t_comp (Eq. 8).
+    pub t_comp_stage: f64,
+    /// T_comm(S) = Σ_{k≠f} t_comm (Eq. 10).
+    pub t_comm_stage: f64,
+    /// T(S) (Eq. 11).
+    pub total: f64,
+}
+
+/// Per-device sink splits for a stage: every spatial sink row-split
+/// proportionally to capacity over the first min(n, h) devices; flat
+/// sinks pinned to device 0. This is the single source of truth for the
+/// intra-stage feature partition — the cost model, the simulator and the
+/// serving coordinator all call it (Algorithm 3's divide-and-conquer
+/// feature adjustment; equal capacities reduce to Algorithm 2's equal
+/// split).
+pub fn stage_splits(
+    g: &ModelGraph,
+    segment: &[LayerId],
+    devices: &[&Device],
+) -> Vec<BTreeMap<LayerId, Interval>> {
+    let sinks = segment_sinks(g, segment);
+    let weights: Vec<f64> = devices.iter().map(|d| d.flops / d.alpha).collect();
+    let n = devices.len();
+    (0..n)
+        .map(|k| {
+            let mut sink_out: BTreeMap<LayerId, Interval> = BTreeMap::new();
+            for &s in &sinks {
+                match g.shape(s) {
+                    Shape::Chw(_, h, _) if n > 1 && h >= 2 => {
+                        let m = n.min(h);
+                        if k < m {
+                            sink_out.insert(s, proportional_splits(h, &weights[..m])[k]);
+                        }
+                    }
+                    _ => {
+                        if k == 0 {
+                            sink_out.insert(s, (0, g.shape(s).height().max(1)));
+                        }
+                    }
+                }
+            }
+            sink_out
+        })
+        .collect()
+}
+
+/// Compute the cost of a stage executing `segment` over `devices` with
+/// the [`stage_splits`] feature partition.
+pub fn stage_cost(
+    g: &ModelGraph,
+    segment: &[LayerId],
+    devices: &[&Device],
+    network: &Network,
+) -> StageCost {
+    assert!(!devices.is_empty());
+    let sinks = segment_sinks(g, segment);
+    let weights: Vec<f64> = devices.iter().map(|d| d.flops / d.alpha).collect();
+    let n = devices.len();
+    let splits = stage_splits(g, segment, devices);
+    let mut t_comp = vec![0.0; n];
+    let mut t_comm = vec![0.0; n];
+    let mut flops = vec![0.0; n];
+    let mut redundant = vec![0.0; n];
+    let mut feature_bytes = vec![0usize; n];
+
+    let ideal: f64 = super::flops::ideal_segment_flops(g, segment);
+
+    for k in 0..n {
+        let sink_out = &splits[k];
+        if sink_out.is_empty() {
+            // Device has no work in this stage (e.g. head stage with an
+            // unsplittable sink): zero cost row.
+            continue;
+        }
+        let tiles = segment_tiles(g, segment, sink_out);
+        let th = segment_flops(g, segment, &tiles);
+        flops[k] = th;
+        t_comp[k] = devices[k].t_comp(th);
+        // Feature traffic φ(F_in^k) + φ(F_out^k) (Eq. 9): feed slabs in,
+        // sink slabs out. Device 0 acts as the stage leader d_f.
+        let set: std::collections::HashSet<_> = segment.iter().copied().collect();
+        let mut bytes = 0usize;
+        for (&id, tile) in &tiles {
+            let rows = tile.out_iv.1 - tile.out_iv.0;
+            if !set.contains(&id) {
+                // feed slab fetched from the leader
+                if let Shape::Chw(c, _, w) = g.shape(id) {
+                    bytes += c * rows * w * 4;
+                } else {
+                    bytes += g.shape(id).bytes();
+                }
+            } else if sinks.contains(&id) {
+                if let Shape::Chw(c, _, w) = g.shape(id) {
+                    bytes += c * rows * w * 4;
+                } else {
+                    bytes += g.shape(id).bytes();
+                }
+            }
+        }
+        feature_bytes[k] = bytes;
+        if k > 0 {
+            t_comm[k] = network.t_comm(bytes);
+        }
+    }
+    // Stage leader d_f: receives the full stage input from the previous
+    // stage's leader (the Fig. 8 inter-stage transfer). Eq. 10 covers
+    // only the intra-stage distribute/gather; without this term a chain
+    // of single-device stages would communicate for free.
+    let in_seg: std::collections::HashSet<LayerId> = segment.iter().copied().collect();
+    let mut feed_srcs: Vec<LayerId> = segment
+        .iter()
+        .flat_map(|&id| g.layer(id).inputs.iter().copied())
+        .filter(|src| !in_seg.contains(src))
+        .collect();
+    feed_srcs.sort_unstable();
+    feed_srcs.dedup();
+    let feed_bytes: usize = feed_srcs.iter().map(|&src| g.shape(src).bytes()).sum();
+    if feed_bytes > 0 {
+        t_comm[0] += network.t_comm(feed_bytes);
+    }
+
+    // Redundancy per device: actual minus capacity-proportional ideal share.
+    let total_w: f64 = weights.iter().sum();
+    for k in 0..n {
+        if flops[k] > 0.0 {
+            let share = ideal * weights[k] / total_w;
+            redundant[k] = (flops[k] - share).max(0.0);
+        }
+    }
+
+    let t_comp_stage = t_comp.iter().cloned().fold(0.0, f64::max);
+    let t_comm_stage: f64 = t_comm.iter().sum();
+    StageCost {
+        total: t_comp_stage + t_comm_stage,
+        t_comp,
+        t_comm,
+        flops,
+        redundant_flops: redundant,
+        feature_bytes,
+        t_comp_stage,
+        t_comm_stage,
+    }
+}
+
+/// Period + latency of a pipeline configuration (Eq. 12).
+#[derive(Debug, Clone)]
+pub struct PipelineCost {
+    pub stage_costs: Vec<StageCost>,
+    /// P(G, D, S): max stage cost — the pipeline period.
+    pub period: f64,
+    /// T(G, D, S): sum of stage costs — the pipeline latency.
+    pub latency: f64,
+}
+
+/// Cost a whole pipeline: `stages[i]` = (segment, device indices into the
+/// cluster).
+pub fn pipeline_cost(
+    g: &ModelGraph,
+    cluster: &Cluster,
+    stages: &[(Vec<LayerId>, Vec<usize>)],
+) -> PipelineCost {
+    let stage_costs: Vec<StageCost> = stages
+        .iter()
+        .map(|(segment, dev_ids)| {
+            let devs: Vec<&Device> = dev_ids.iter().map(|&i| &cluster.devices[i]).collect();
+            stage_cost(g, segment, &devs, &cluster.network)
+        })
+        .collect();
+    let period = stage_costs.iter().map(|s| s.total).fold(0.0, f64::max);
+    let latency = stage_costs.iter().map(|s| s.total).sum();
+    PipelineCost { stage_costs, period, latency }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Activation, Layer};
+
+    fn vggish() -> ModelGraph {
+        let layers = vec![
+            Layer::input("in"),
+            Layer::conv("c1", 0, 16, (3, 3), (1, 1), (1, 1), Activation::Relu),
+            Layer::conv("c2", 1, 16, (3, 3), (1, 1), (1, 1), Activation::Relu),
+            Layer::maxpool("p1", 2, (2, 2), (2, 2), (0, 0)),
+            Layer::conv("c3", 3, 32, (3, 3), (1, 1), (1, 1), Activation::Relu),
+        ];
+        ModelGraph::new("v", (3, 32, 32), layers).unwrap()
+    }
+
+    #[test]
+    fn two_devices_halve_compute() {
+        let g = vggish();
+        let c = Cluster::homogeneous_rpi(2, 1.0);
+        let devs: Vec<&Device> = c.devices.iter().collect();
+        let one = stage_cost(&g, &[1, 2, 3], &devs[..1], &c.network);
+        let two = stage_cost(&g, &[1, 2, 3], &devs, &c.network);
+        assert!(two.t_comp_stage < one.t_comp_stage);
+        assert!(two.t_comp_stage > one.t_comp_stage / 2.0, "halo prevents perfect scaling");
+        // single device: only the inter-stage feed transfer, no redundancy
+        let feed = c.network.t_comm(3 * 32 * 32 * 4);
+        assert!((one.t_comm_stage - feed).abs() < 1e-12, "{} vs {}", one.t_comm_stage, feed);
+        assert!(one.redundant_flops[0] < 1e-9);
+        assert!(two.redundant_flops.iter().sum::<f64>() > 0.0);
+    }
+
+    #[test]
+    fn faster_device_gets_more_rows() {
+        let g = vggish();
+        let mut c = Cluster::homogeneous_rpi(2, 1.0);
+        c.devices[0].flops *= 3.0;
+        let devs: Vec<&Device> = c.devices.iter().collect();
+        let sc = stage_cost(&g, &[1, 2, 3], &devs, &c.network);
+        assert!(sc.flops[0] > sc.flops[1] * 1.5, "capacity-proportional split");
+        // compute times roughly balanced
+        let ratio = sc.t_comp[0] / sc.t_comp[1];
+        assert!((0.5..2.0).contains(&ratio), "balance ratio {ratio}");
+    }
+
+    #[test]
+    fn pipeline_period_is_max_latency_is_sum() {
+        let g = vggish();
+        let c = Cluster::homogeneous_rpi(2, 1.0);
+        let stages = vec![(vec![1, 2, 3], vec![0]), (vec![4], vec![1])];
+        let pc = pipeline_cost(&g, &c, &stages);
+        let t0 = pc.stage_costs[0].total;
+        let t1 = pc.stage_costs[1].total;
+        assert!((pc.period - t0.max(t1)).abs() < 1e-12);
+        assert!((pc.latency - (t0 + t1)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn comm_counts_nonleader_only() {
+        let g = vggish();
+        let c = Cluster::homogeneous_rpi(3, 1.0);
+        let devs: Vec<&Device> = c.devices.iter().collect();
+        let sc = stage_cost(&g, &[1, 2, 3], &devs, &c.network);
+        // Leader pays only the inter-stage feed transfer, not the
+        // intra-stage distribute/gather it orchestrates.
+        let feed = c.network.t_comm(3 * 32 * 32 * 4);
+        assert!((sc.t_comm[0] - feed).abs() < 1e-12);
+        assert!(sc.t_comm[1] > 0.0 && sc.t_comm[2] > 0.0);
+        assert!(
+            (sc.t_comm_stage - (sc.t_comm[0] + sc.t_comm[1] + sc.t_comm[2])).abs() < 1e-12
+        );
+    }
+}

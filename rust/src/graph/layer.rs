@@ -1,0 +1,204 @@
+//! Layer (DAG vertex) definitions, mirroring `python/compile/model.py`.
+
+use super::LayerId;
+
+/// Layer operation kind. `Add`/`Concat` are the paper's *connectors*
+/// (Fig. 3); norm/activation layers are folded into conv's `activation`
+/// as the paper does (§2.3: "the norm layer and activation layer are
+/// ignored since they do not change the input and output shape").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Op {
+    Input,
+    Conv,
+    MaxPool,
+    AvgPool,
+    Add,
+    Concat,
+    Flatten,
+    Dense,
+}
+
+impl Op {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Op::Input => "input",
+            Op::Conv => "conv",
+            Op::MaxPool => "maxpool",
+            Op::AvgPool => "avgpool",
+            Op::Add => "add",
+            Op::Concat => "concat",
+            Op::Flatten => "flatten",
+            Op::Dense => "dense",
+        }
+    }
+
+    pub fn from_str(s: &str) -> anyhow::Result<Op> {
+        Ok(match s {
+            "input" => Op::Input,
+            "conv" => Op::Conv,
+            "maxpool" => Op::MaxPool,
+            "avgpool" => Op::AvgPool,
+            "add" => Op::Add,
+            "concat" => Op::Concat,
+            "flatten" => Op::Flatten,
+            "dense" => Op::Dense,
+            other => anyhow::bail!("unknown op {other:?}"),
+        })
+    }
+
+    /// Spatial ops have (kernel, stride, padding) row geometry (Eq. 3).
+    pub fn is_spatial(&self) -> bool {
+        matches!(self, Op::Conv | Op::MaxPool | Op::AvgPool)
+    }
+
+    /// Connectors pass rows through unchanged (k=1, s=1, p=0).
+    pub fn is_connector(&self) -> bool {
+        matches!(self, Op::Add | Op::Concat)
+    }
+}
+
+/// Activation fused into conv/dense layers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Activation {
+    #[default]
+    Linear,
+    Relu,
+    /// Leaky ReLU, slope 0.1 (YOLO convention).
+    Leaky,
+}
+
+impl Activation {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Activation::Linear => "linear",
+            Activation::Relu => "relu",
+            Activation::Leaky => "leaky",
+        }
+    }
+
+    pub fn from_str(s: &str) -> anyhow::Result<Activation> {
+        Ok(match s {
+            "linear" => Activation::Linear,
+            "relu" => Activation::Relu,
+            "leaky" => Activation::Leaky,
+            other => anyhow::bail!("unknown activation {other:?}"),
+        })
+    }
+
+    pub fn apply(&self, x: f32) -> f32 {
+        match self {
+            Activation::Linear => x,
+            Activation::Relu => x.max(0.0),
+            Activation::Leaky => {
+                if x > 0.0 {
+                    x
+                } else {
+                    0.1 * x
+                }
+            }
+        }
+    }
+}
+
+/// One vertex `l_i` of the CNN DAG.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub name: String,
+    pub op: Op,
+    /// Producers of this layer's inputs (must precede it topologically).
+    pub inputs: Vec<LayerId>,
+    /// Conv: output channels `c_i`; Dense: output units.
+    pub out_channels: usize,
+    /// (kh, kw) — `k_i` in Eq. (3)-(4).
+    pub kernel: (usize, usize),
+    /// (sh, sw) — `s_i`.
+    pub stride: (usize, usize),
+    /// (ph, pw) — `p_i`.
+    pub padding: (usize, usize),
+    pub activation: Activation,
+    /// Grouped convolution factor (1 = dense conv; c_in = depthwise).
+    /// Used by MobileNet-style models; affects FLOPs (Eq. 4 with
+    /// c_in' = c_in / groups) and weight memory.
+    pub groups: usize,
+}
+
+impl Layer {
+    /// Generic constructor; prefer the op-specific helpers below.
+    pub fn new(name: &str, op: Op) -> Layer {
+        Layer {
+            name: name.to_string(),
+            op,
+            inputs: Vec::new(),
+            out_channels: 0,
+            kernel: (1, 1),
+            stride: (1, 1),
+            padding: (0, 0),
+            activation: Activation::Linear,
+            groups: 1,
+        }
+    }
+
+    pub fn input(name: &str) -> Layer {
+        Layer::new(name, Op::Input)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv(
+        name: &str,
+        input: LayerId,
+        out_channels: usize,
+        kernel: (usize, usize),
+        stride: (usize, usize),
+        padding: (usize, usize),
+        activation: Activation,
+    ) -> Layer {
+        Layer {
+            inputs: vec![input],
+            out_channels,
+            kernel,
+            stride,
+            padding,
+            activation,
+            ..Layer::new(name, Op::Conv)
+        }
+    }
+
+    /// Depthwise/grouped conv (MobileNet, NASNet separable convs).
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv_grouped(
+        name: &str,
+        input: LayerId,
+        out_channels: usize,
+        kernel: (usize, usize),
+        stride: (usize, usize),
+        padding: (usize, usize),
+        activation: Activation,
+        groups: usize,
+    ) -> Layer {
+        Layer { groups, ..Layer::conv(name, input, out_channels, kernel, stride, padding, activation) }
+    }
+
+    pub fn maxpool(name: &str, input: LayerId, kernel: (usize, usize), stride: (usize, usize), padding: (usize, usize)) -> Layer {
+        Layer { inputs: vec![input], kernel, stride, padding, ..Layer::new(name, Op::MaxPool) }
+    }
+
+    pub fn avgpool(name: &str, input: LayerId, kernel: (usize, usize), stride: (usize, usize), padding: (usize, usize)) -> Layer {
+        Layer { inputs: vec![input], kernel, stride, padding, ..Layer::new(name, Op::AvgPool) }
+    }
+
+    pub fn add(name: &str, inputs: Vec<LayerId>) -> Layer {
+        Layer { inputs, ..Layer::new(name, Op::Add) }
+    }
+
+    pub fn concat(name: &str, inputs: Vec<LayerId>) -> Layer {
+        Layer { inputs, ..Layer::new(name, Op::Concat) }
+    }
+
+    pub fn flatten(name: &str, input: LayerId) -> Layer {
+        Layer { inputs: vec![input], ..Layer::new(name, Op::Flatten) }
+    }
+
+    pub fn dense(name: &str, input: LayerId, units: usize, activation: Activation) -> Layer {
+        Layer { inputs: vec![input], out_channels: units, activation, ..Layer::new(name, Op::Dense) }
+    }
+}

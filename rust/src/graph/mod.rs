@@ -1,0 +1,19 @@
+//! CNN model graphs: the paper's `G : (V, E)` (§3.1.1).
+//!
+//! A [`ModelGraph`] is a DAG of [`Layer`]s stored in topological order,
+//! with shape inference matching `python/compile/model.py` exactly, width
+//! computation (Definition 6, via Dilworth / maximum antichain) and
+//! [`Segment`] views (Definitions 1–3: sources, sinks, ending pieces).
+
+mod layer;
+mod model;
+mod segment;
+mod width;
+
+pub use layer::{Activation, Layer, Op};
+pub use model::{ModelGraph, Shape};
+pub use segment::Segment;
+pub use width::width;
+
+/// Layer id: index into `ModelGraph::layers` (topological order).
+pub type LayerId = usize;

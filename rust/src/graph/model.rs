@@ -1,0 +1,363 @@
+//! `ModelGraph`: the CNN DAG with shape inference and JSON interchange.
+
+use std::collections::BTreeMap;
+
+use super::{Activation, Layer, LayerId, Op};
+use crate::json::{obj, Value};
+
+/// Output shape of a layer: spatial feature map or flat vector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Shape {
+    /// (C, H, W)
+    Chw(usize, usize, usize),
+    /// (N,)
+    Flat(usize),
+}
+
+impl Shape {
+    pub fn elems(&self) -> usize {
+        match self {
+            Shape::Chw(c, h, w) => c * h * w,
+            Shape::Flat(n) => *n,
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.elems() * 4 // f32
+    }
+
+    /// Feature-map height (1 for flat vectors).
+    pub fn height(&self) -> usize {
+        match self {
+            Shape::Chw(_, h, _) => *h,
+            Shape::Flat(_) => 1,
+        }
+    }
+
+    pub fn channels(&self) -> usize {
+        match self {
+            Shape::Chw(c, _, _) => *c,
+            Shape::Flat(n) => *n,
+        }
+    }
+
+    pub fn width(&self) -> usize {
+        match self {
+            Shape::Chw(_, _, w) => *w,
+            Shape::Flat(_) => 1,
+        }
+    }
+}
+
+/// The CNN DAG `G : (V, E)`. Layers are stored in topological order
+/// (builders append producers before consumers; `from_json` validates).
+#[derive(Debug, Clone)]
+pub struct ModelGraph {
+    pub name: String,
+    /// Input feature shape (C, H, W).
+    pub input_shape: (usize, usize, usize),
+    pub layers: Vec<Layer>,
+    /// consumers[i] = layers that read layer i's output.
+    consumers: Vec<Vec<LayerId>>,
+    /// Cached per-layer output shapes.
+    shapes: Vec<Shape>,
+}
+
+impl ModelGraph {
+    /// Build from topologically ordered layers; computes shapes eagerly
+    /// and validates the DAG invariants.
+    pub fn new(name: &str, input_shape: (usize, usize, usize), layers: Vec<Layer>) -> anyhow::Result<ModelGraph> {
+        let mut g = ModelGraph {
+            name: name.to_string(),
+            input_shape,
+            consumers: vec![Vec::new(); layers.len()],
+            shapes: Vec::with_capacity(layers.len()),
+            layers,
+        };
+        for (i, l) in g.layers.iter().enumerate() {
+            for &src in &l.inputs {
+                anyhow::ensure!(src < i, "layer {} ({}) reads later layer {}", i, l.name, src);
+            }
+            if l.op == Op::Input {
+                anyhow::ensure!(l.inputs.is_empty(), "input layer {} has inputs", l.name);
+                anyhow::ensure!(i == 0, "input layer {} must be first", l.name);
+            }
+        }
+        anyhow::ensure!(!g.layers.is_empty(), "empty model");
+        anyhow::ensure!(g.layers[0].op == Op::Input, "first layer must be input");
+        for (i, l) in g.layers.iter().enumerate() {
+            for &src in &l.inputs {
+                g.consumers[src].push(i);
+            }
+        }
+        g.shapes = g.infer_shapes()?;
+        Ok(g)
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Paper's n: conv + pool vertices only (§6.2.3, Table 4 footnote).
+    pub fn n_conv_pool(&self) -> usize {
+        self.layers.iter().filter(|l| l.op.is_spatial()).count()
+    }
+
+    pub fn layer(&self, id: LayerId) -> &Layer {
+        &self.layers[id]
+    }
+
+    pub fn consumers(&self, id: LayerId) -> &[LayerId] {
+        &self.consumers[id]
+    }
+
+    pub fn shape(&self, id: LayerId) -> Shape {
+        self.shapes[id]
+    }
+
+    pub fn output_id(&self) -> LayerId {
+        self.layers.len() - 1
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<LayerId> {
+        self.layers.iter().position(|l| l.name == name)
+    }
+
+    /// Input channel count seen by layer `id` (sum over concat inputs).
+    pub fn in_channels(&self, id: LayerId) -> usize {
+        let l = &self.layers[id];
+        if l.inputs.is_empty() {
+            return self.input_shape.0;
+        }
+        match l.op {
+            Op::Concat => l.inputs.iter().map(|&i| self.shapes[i].channels()).sum(),
+            _ => self.shapes[l.inputs[0]].channels(),
+        }
+    }
+
+    fn infer_shapes(&self) -> anyhow::Result<Vec<Shape>> {
+        let mut shapes: Vec<Shape> = Vec::with_capacity(self.layers.len());
+        for (i, l) in self.layers.iter().enumerate() {
+            let ins: Vec<Shape> = l.inputs.iter().map(|&j| shapes[j]).collect();
+            let s = match l.op {
+                Op::Input => {
+                    let (c, h, w) = self.input_shape;
+                    Shape::Chw(c, h, w)
+                }
+                Op::Conv | Op::MaxPool | Op::AvgPool => {
+                    let Shape::Chw(c, h, w) = ins[0] else {
+                        anyhow::bail!("{}: spatial op on flat input", l.name)
+                    };
+                    let (kh, kw) = l.kernel;
+                    let (sh, sw) = l.stride;
+                    let (ph, pw) = l.padding;
+                    anyhow::ensure!(h + 2 * ph >= kh && w + 2 * pw >= kw, "{}: window exceeds input", l.name);
+                    let ho = (h + 2 * ph - kh) / sh + 1;
+                    let wo = (w + 2 * pw - kw) / sw + 1;
+                    let co = if l.op == Op::Conv { l.out_channels } else { c };
+                    Shape::Chw(co, ho, wo)
+                }
+                Op::Add => {
+                    anyhow::ensure!(
+                        ins.iter().all(|s| *s == ins[0]),
+                        "{}: add inputs disagree: {ins:?}",
+                        l.name
+                    );
+                    ins[0]
+                }
+                Op::Concat => {
+                    let Shape::Chw(_, h, w) = ins[0] else {
+                        anyhow::bail!("{}: concat on flat input", l.name)
+                    };
+                    let mut c = 0;
+                    for s in &ins {
+                        let Shape::Chw(ci, hi, wi) = s else {
+                            anyhow::bail!("{}: concat on flat input", l.name)
+                        };
+                        anyhow::ensure!(*hi == h && *wi == w, "{}: concat spatial mismatch", l.name);
+                        c += ci;
+                    }
+                    Shape::Chw(c, h, w)
+                }
+                Op::Flatten => Shape::Flat(ins[0].elems()),
+                Op::Dense => {
+                    anyhow::ensure!(matches!(ins[0], Shape::Flat(_)), "{}: dense on spatial input", l.name);
+                    Shape::Flat(l.out_channels)
+                }
+            };
+            if l.op != Op::Input {
+                anyhow::ensure!(!l.inputs.is_empty(), "{}: non-input layer without inputs", l.name);
+            }
+            let _ = i;
+            shapes.push(s);
+        }
+        Ok(shapes)
+    }
+
+    // ------------------------------------------------------------ JSON
+
+    /// Load from the spec.json format produced by `python/compile/model.py`.
+    pub fn from_json(v: &Value) -> anyhow::Result<ModelGraph> {
+        let name = v.get("name").as_str().unwrap_or("model").to_string();
+        let ishape = v.get("input_shape");
+        let input_shape = (
+            ishape.idx(0).as_usize().ok_or_else(|| anyhow::anyhow!("bad input_shape"))?,
+            ishape.idx(1).as_usize().unwrap_or(1),
+            ishape.idx(2).as_usize().unwrap_or(1),
+        );
+        let mut ids: BTreeMap<String, LayerId> = BTreeMap::new();
+        let mut layers = Vec::new();
+        for lv in v.get("layers").as_arr().ok_or_else(|| anyhow::anyhow!("missing layers"))? {
+            let lname = lv.get("name").as_str().ok_or_else(|| anyhow::anyhow!("layer without name"))?;
+            let op = Op::from_str(lv.get("op").as_str().unwrap_or(""))?;
+            let mut inputs = Vec::new();
+            for iv in lv.get("inputs").as_arr().unwrap_or(&[]) {
+                let iname = iv.as_str().ok_or_else(|| anyhow::anyhow!("bad input ref"))?;
+                inputs.push(
+                    *ids.get(iname)
+                        .ok_or_else(|| anyhow::anyhow!("{lname}: unknown input {iname} (not topo-ordered?)"))?,
+                );
+            }
+            let pair = |key: &str, default: usize| -> (usize, usize) {
+                let a = lv.get(key);
+                (
+                    a.idx(0).as_usize().unwrap_or(default),
+                    a.idx(1).as_usize().unwrap_or(default),
+                )
+            };
+            let layer = Layer {
+                name: lname.to_string(),
+                op,
+                inputs,
+                out_channels: lv.get("out_channels").as_usize().unwrap_or(0),
+                kernel: pair("kernel", 1),
+                stride: pair("stride", 1),
+                padding: pair("padding", 0),
+                activation: Activation::from_str(lv.get("activation").as_str().unwrap_or("linear"))?,
+                groups: lv.get("groups").as_usize().unwrap_or(1),
+            };
+            ids.insert(lname.to_string(), layers.len());
+            layers.push(layer);
+        }
+        ModelGraph::new(&name, input_shape, layers)
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<ModelGraph> {
+        ModelGraph::from_json(&Value::from_file(path)?)
+    }
+
+    pub fn to_json(&self) -> Value {
+        let layers: Vec<Value> = self
+            .layers
+            .iter()
+            .map(|l| {
+                obj(vec![
+                    ("name", l.name.as_str().into()),
+                    ("op", l.op.as_str().into()),
+                    (
+                        "inputs",
+                        Value::Arr(l.inputs.iter().map(|&i| self.layers[i].name.as_str().into()).collect()),
+                    ),
+                    ("out_channels", l.out_channels.into()),
+                    ("kernel", vec![l.kernel.0, l.kernel.1].into()),
+                    ("stride", vec![l.stride.0, l.stride.1].into()),
+                    ("padding", vec![l.padding.0, l.padding.1].into()),
+                    ("activation", l.activation.as_str().into()),
+                    ("groups", l.groups.into()),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("name", self.name.as_str().into()),
+            (
+                "input_shape",
+                vec![self.input_shape.0, self.input_shape.1, self.input_shape.2].into(),
+            ),
+            ("layers", Value::Arr(layers)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain() -> ModelGraph {
+        let l = vec![
+            Layer::input("in"),
+            Layer::conv("c1", 0, 8, (3, 3), (1, 1), (1, 1), Activation::Relu),
+            Layer::maxpool("p1", 1, (2, 2), (2, 2), (0, 0)),
+            Layer::conv("c2", 2, 16, (3, 3), (1, 1), (1, 1), Activation::Relu),
+            Layer::flatten("f", 3),
+            Layer::dense("d", 4, 10, Activation::Linear),
+        ];
+        ModelGraph::new("chain", (3, 32, 32), l).unwrap()
+    }
+
+    #[test]
+    fn shapes_chain() {
+        let g = chain();
+        assert_eq!(g.shape(1), Shape::Chw(8, 32, 32));
+        assert_eq!(g.shape(2), Shape::Chw(8, 16, 16));
+        assert_eq!(g.shape(3), Shape::Chw(16, 16, 16));
+        assert_eq!(g.shape(4), Shape::Flat(16 * 16 * 16));
+        assert_eq!(g.shape(5), Shape::Flat(10));
+        assert_eq!(g.n_conv_pool(), 3);
+    }
+
+    #[test]
+    fn consumers_tracked() {
+        let g = chain();
+        assert_eq!(g.consumers(0), &[1]);
+        assert_eq!(g.consumers(1), &[2]);
+        assert_eq!(g.consumers(5), &[] as &[usize]);
+    }
+
+    #[test]
+    fn dag_shapes() {
+        let l = vec![
+            Layer::input("in"),
+            Layer::conv("stem", 0, 8, (3, 3), (1, 1), (1, 1), Activation::Relu),
+            Layer::conv("a", 1, 4, (1, 1), (1, 1), (0, 0), Activation::Relu),
+            Layer::conv("b", 1, 4, (3, 3), (1, 1), (1, 1), Activation::Relu),
+            Layer::concat("cat", vec![2, 3]),
+            Layer::add("skip", vec![4, 1]),
+        ];
+        let g = ModelGraph::new("dag", (3, 16, 16), l).unwrap();
+        assert_eq!(g.shape(4), Shape::Chw(8, 16, 16));
+        assert_eq!(g.shape(5), Shape::Chw(8, 16, 16));
+        assert_eq!(g.in_channels(4), 8);
+    }
+
+    #[test]
+    fn add_mismatch_rejected() {
+        let l = vec![
+            Layer::input("in"),
+            Layer::conv("a", 0, 4, (3, 3), (1, 1), (1, 1), Activation::Relu),
+            Layer::conv("b", 0, 8, (3, 3), (1, 1), (1, 1), Activation::Relu),
+            Layer::add("bad", vec![1, 2]),
+        ];
+        assert!(ModelGraph::new("bad", (3, 16, 16), l).is_err());
+    }
+
+    #[test]
+    fn forward_ref_rejected() {
+        let mut c1 = Layer::conv("c1", 0, 8, (3, 3), (1, 1), (1, 1), Activation::Relu);
+        c1.inputs = vec![2]; // reads a later layer
+        let l = vec![Layer::input("in"), c1, Layer::conv("c2", 0, 8, (3, 3), (1, 1), (1, 1), Activation::Relu)];
+        assert!(ModelGraph::new("bad", (3, 16, 16), l).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let g = chain();
+        let v = g.to_json();
+        let g2 = ModelGraph::from_json(&v).unwrap();
+        assert_eq!(g2.n_layers(), g.n_layers());
+        for i in 0..g.n_layers() {
+            assert_eq!(g2.shape(i), g.shape(i));
+            assert_eq!(g2.layer(i).name, g.layer(i).name);
+            assert_eq!(g2.layer(i).op, g.layer(i).op);
+        }
+    }
+}

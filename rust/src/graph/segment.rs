@@ -1,0 +1,182 @@
+//! Segments (paper §3.1.1, Definitions 1–4): subsets of the CNN DAG that
+//! keep the edges crossing their boundary, with source/sink/ending-piece
+//! queries and the diameter used by Algorithm 1's pruning (Definition 5).
+
+use super::{LayerId, ModelGraph};
+use crate::util::BitSet;
+
+/// A segment `M : (V, E)` of a model graph — a set of vertices plus, by
+/// Definition 1, every edge incident to them (boundary edges included,
+/// which is why sources/sinks are defined via edges whose other endpoint
+/// lies outside).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Segment {
+    pub members: BitSet,
+}
+
+impl Segment {
+    pub fn new(members: BitSet) -> Segment {
+        Segment { members }
+    }
+
+    pub fn from_ids(ids: impl IntoIterator<Item = LayerId>) -> Segment {
+        Segment { members: ids.into_iter().collect() }
+    }
+
+    pub fn contains(&self, id: LayerId) -> bool {
+        self.members.contains(id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    pub fn ids(&self) -> Vec<LayerId> {
+        self.members.iter().collect()
+    }
+
+    /// Definition 2: v is a *source* if some edge (u, v) has u outside the
+    /// segment. Layers with no inputs at all (the model input) also count
+    /// as sources — they are fed from outside the model.
+    pub fn sources(&self, g: &ModelGraph) -> Vec<LayerId> {
+        self.members
+            .iter()
+            .filter(|&v| {
+                let l = g.layer(v);
+                l.inputs.is_empty() || l.inputs.iter().any(|u| !self.members.contains(*u))
+            })
+            .collect()
+    }
+
+    /// Definition 3: u is a *sink* if some edge (u, v) has v outside the
+    /// segment; the model output layer is a sink of any segment holding it.
+    pub fn sinks(&self, g: &ModelGraph) -> Vec<LayerId> {
+        self.members
+            .iter()
+            .filter(|&u| {
+                let cons = g.consumers(u);
+                cons.is_empty() || cons.iter().any(|v| !self.members.contains(*v))
+            })
+            .collect()
+    }
+
+    /// External producers feeding this segment (the previous stage's
+    /// sinks, from this segment's point of view).
+    pub fn feeds(&self, g: &ModelGraph) -> Vec<LayerId> {
+        let mut out = BitSet::new(g.n_layers());
+        for v in self.members.iter() {
+            for &u in &g.layer(v).inputs {
+                if !self.members.contains(u) {
+                    out.insert(u);
+                }
+            }
+        }
+        out.iter().collect()
+    }
+
+    /// Definition 4: an *ending piece* of `g` restricted to `universe` —
+    /// for any edge (u, v) with both endpoints in the universe, u in the
+    /// piece implies v in the piece (no edge leaves the piece forward).
+    pub fn is_ending_piece(&self, g: &ModelGraph, universe: &BitSet) -> bool {
+        for u in self.members.iter() {
+            for &v in g.consumers(u) {
+                if universe.contains(v) && !self.members.contains(v) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Definition 5: the diameter of a piece — the greatest path length
+    /// (in edges) between any vertex pair inside the piece. Algorithm 1
+    /// bounds this by `d` to prune the DFS enumeration.
+    pub fn diameter(&self, g: &ModelGraph) -> usize {
+        // Longest path in the induced sub-DAG; layers are topo-ordered so
+        // one forward sweep suffices.
+        let mut dist: Vec<usize> = vec![0; g.n_layers()];
+        let mut best = 0;
+        for v in self.members.iter() {
+            for &u in &g.layer(v).inputs {
+                if self.members.contains(u) {
+                    dist[v] = dist[v].max(dist[u] + 1);
+                }
+            }
+            best = best.max(dist[v]);
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Activation, Layer};
+
+    /// Fig. 7's 8-vertex graph:
+    /// A→B→C→E→G, A→D→F→H, C→F, E→H wired as a conv DAG.
+    fn fig7() -> ModelGraph {
+        let c = |n: &str, i: Vec<usize>| -> Layer {
+            if i.len() == 1 {
+                Layer::conv(n, i[0], 4, (3, 3), (1, 1), (1, 1), Activation::Relu)
+            } else {
+                Layer::add(n, i)
+            }
+        };
+        let layers = vec![
+            Layer::input("in"),      // 0
+            c("a", vec![0]),         // 1
+            c("b", vec![1]),         // 2
+            c("c", vec![2]),         // 3
+            c("d", vec![1]),         // 4
+            c("e", vec![3]),         // 5
+            c("f", vec![3, 4]),      // 6 (add: C, D)
+            c("g", vec![5]),         // 7
+            c("h", vec![5, 6]),      // 8 (add: E, F)
+        ];
+        ModelGraph::new("fig7", (3, 16, 16), layers).unwrap()
+    }
+
+    #[test]
+    fn sources_and_sinks() {
+        let g = fig7();
+        let m = Segment::from_ids([5, 7, 8]); // {E, G, H}
+        assert_eq!(m.sources(&g), vec![5, 8]); // E fed by C; H fed by F
+        assert_eq!(m.sinks(&g), vec![7, 8]);
+        assert_eq!(m.feeds(&g), vec![3, 6]);
+    }
+
+    #[test]
+    fn ending_piece_fig7() {
+        let g = fig7();
+        let universe = BitSet::full(g.n_layers());
+        // {E, G, H} is an ending piece (Fig. 7b).
+        assert!(Segment::from_ids([5, 7, 8]).is_ending_piece(&g, &universe));
+        // {E, F, H} is not: E's consumer G is outside (Fig. 7c).
+        assert!(!Segment::from_ids([5, 6, 8]).is_ending_piece(&g, &universe));
+        // Restricted universe: once {E,G,H} removed, {B,C,F} is ending.
+        let rest = universe.minus(&Segment::from_ids([5, 7, 8]).members);
+        assert!(Segment::from_ids([2, 3, 6]).is_ending_piece(&g, &rest));
+    }
+
+    #[test]
+    fn diameter_counts_edges() {
+        let g = fig7();
+        assert_eq!(Segment::from_ids([5, 7, 8]).diameter(&g), 1);
+        assert_eq!(Segment::from_ids([1, 2, 3, 5]).diameter(&g), 3);
+        assert_eq!(Segment::from_ids([4]).diameter(&g), 0);
+        // Disconnected members: no in-piece path, diameter 0.
+        assert_eq!(Segment::from_ids([2, 4]).diameter(&g), 0);
+    }
+
+    #[test]
+    fn whole_graph_is_ending_piece() {
+        let g = fig7();
+        let universe = BitSet::full(g.n_layers());
+        assert!(Segment::new(universe.clone()).is_ending_piece(&g, &universe));
+    }
+}

@@ -1,0 +1,124 @@
+//! Width of a CNN (paper Definition 6): the largest set of *neural layers*
+//! (conv/pool vertices) with no path connecting any two of them — a
+//! maximum antichain of the reachability partial order.
+//!
+//! By Dilworth's theorem the maximum antichain equals the minimum chain
+//! cover, computed as |S| − (maximum matching) on the bipartite
+//! comparability graph over the transitive closure. n ≤ ~600 for every
+//! model in the zoo, so bitset closure + Kuhn's matching is plenty.
+
+use super::ModelGraph;
+use crate::util::BitSet;
+
+/// Maximum-antichain width over conv/pool vertices.
+pub fn width(g: &ModelGraph) -> usize {
+    let n = g.n_layers();
+    // Transitive closure over ALL vertices (paths may run through
+    // connectors), reverse topological order.
+    let mut reach: Vec<BitSet> = vec![BitSet::new(n); n];
+    for u in (0..n).rev() {
+        let mut r = BitSet::new(n);
+        for &v in g.consumers(u) {
+            r.insert(v);
+            r = r.union(&reach[v]);
+        }
+        reach[u] = r;
+    }
+    let spatial: Vec<usize> = (0..n).filter(|&i| g.layer(i).op.is_spatial()).collect();
+    if spatial.is_empty() {
+        return 0;
+    }
+    let index_of: std::collections::HashMap<usize, usize> =
+        spatial.iter().enumerate().map(|(k, &id)| (id, k)).collect();
+    let m = spatial.len();
+    // adj[k] = spatial vertices reachable from spatial[k].
+    let adj: Vec<Vec<usize>> = spatial
+        .iter()
+        .map(|&u| reach[u].iter().filter_map(|v| index_of.get(&v).copied()).collect())
+        .collect();
+    // Kuhn's bipartite maximum matching.
+    let mut matched_right: Vec<Option<usize>> = vec![None; m];
+    let mut matching = 0;
+    for u in 0..m {
+        let mut seen = vec![false; m];
+        if try_kuhn(u, &adj, &mut seen, &mut matched_right) {
+            matching += 1;
+        }
+    }
+    m - matching
+}
+
+fn try_kuhn(u: usize, adj: &[Vec<usize>], seen: &mut [bool], matched_right: &mut [Option<usize>]) -> bool {
+    for &v in &adj[u] {
+        if !seen[v] {
+            seen[v] = true;
+            if matched_right[v].is_none() || try_kuhn(matched_right[v].unwrap(), adj, seen, matched_right) {
+                matched_right[v] = Some(u);
+                return true;
+            }
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Activation, Layer, ModelGraph};
+
+    fn conv(n: &str, i: usize) -> Layer {
+        Layer::conv(n, i, 4, (3, 3), (1, 1), (1, 1), Activation::Relu)
+    }
+
+    #[test]
+    fn chain_width_is_one() {
+        let layers = vec![Layer::input("in"), conv("a", 0), conv("b", 1), conv("c", 2)];
+        let g = ModelGraph::new("chain", (3, 8, 8), layers).unwrap();
+        assert_eq!(width(&g), 1);
+    }
+
+    #[test]
+    fn parallel_branches_width() {
+        // stem fans out to 3 parallel convs, concat joins.
+        let layers = vec![
+            Layer::input("in"),
+            conv("stem", 0),
+            conv("b1", 1),
+            conv("b2", 1),
+            conv("b3", 1),
+            Layer::concat("cat", vec![2, 3, 4]),
+            conv("tail", 5),
+        ];
+        let g = ModelGraph::new("branch3", (3, 8, 8), layers).unwrap();
+        assert_eq!(width(&g), 3);
+    }
+
+    #[test]
+    fn path_through_connector_counts() {
+        // a → add → b: a and b are connected through the connector, so
+        // they cannot be in one antichain together.
+        let layers = vec![
+            Layer::input("in"),
+            conv("a", 0),
+            Layer::add("mid", vec![1, 1]),
+            conv("b", 2),
+        ];
+        let g = ModelGraph::new("thread", (3, 8, 8), layers).unwrap();
+        assert_eq!(width(&g), 1);
+    }
+
+    #[test]
+    fn skip_connection_width_two() {
+        // ResNet-ish: main path has two convs, projection conv parallel.
+        let layers = vec![
+            Layer::input("in"),
+            conv("stem", 0),
+            conv("m1", 1),
+            conv("m2", 2),
+            conv("proj", 1),
+            Layer::add("add", vec![3, 4]),
+        ];
+        let g = ModelGraph::new("skip", (3, 8, 8), layers).unwrap();
+        assert_eq!(width(&g), 2);
+    }
+}

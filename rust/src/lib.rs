@@ -1,0 +1,33 @@
+//! # PICO — Pipeline Inference Framework for Versatile CNNs on Diverse Mobile Devices
+//!
+//! Reproduction of Yang et al., IEEE TMC 2023 (DOI 10.1109/TMC.2023.3265111)
+//! as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's system contribution: CNN-DAG
+//!   orchestration into pieces ([`partition`], Algorithm 1), pipeline stage
+//!   planning ([`pipeline`], Algorithms 2–3), the cost model ([`cost`],
+//!   Eq. 2–12), baselines ([`baselines`]), heterogeneous cluster +
+//!   discrete-event simulation ([`cluster`], [`sim`]), and a threaded
+//!   serving [`coordinator`] that executes real tensors through AOT
+//!   artifacts ([`runtime`]).
+//! * **L2 (python/compile)** — jax model definitions lowered once to HLO
+//!   text (`make artifacts`); never on the request path.
+//! * **L1 (python/compile/kernels)** — Pallas conv/pool/dense kernels
+//!   (interpret mode), validated against pure-jnp oracles.
+//!
+//! Quickstart: `examples/quickstart.rs`; end-to-end serving:
+//! `examples/e2e_serve.rs`; experiment reproductions: `rust/benches/`.
+
+pub mod baselines;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod cost;
+pub mod graph;
+pub mod json;
+pub mod modelzoo;
+pub mod partition;
+pub mod pipeline;
+pub mod runtime;
+pub mod sim;
+pub mod util;

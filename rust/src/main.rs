@@ -1,0 +1,309 @@
+//! `pico` — CLI launcher for the PICO pipeline-inference framework.
+//!
+//! ```text
+//! pico partition --model inceptionv3 [--d 5] [--dc-parts 1]
+//! pico plan      --model vgg16 --rpi 1.0x4 [--tx2 2.2x2] [--t-lim 2.5]
+//! pico simulate  --model vgg16 --rpi 1.0x8 [--scheme pico|lw|efl|ofl|ce]
+//! pico serve     --model tinyvgg --artifacts artifacts [--requests 16]
+//! pico zoo
+//! pico --config path.json <command>
+//! ```
+
+use std::path::PathBuf;
+
+use pico::cluster::Cluster;
+use pico::config::{Config, DeviceConfig};
+use pico::coordinator::{self, NativeCompute, PjrtCompute};
+use pico::graph::width;
+use pico::runtime::{Engine, PipelineArtifacts, Tensor};
+use pico::util::{fmt_secs, Rng, Table};
+use pico::{baselines, modelzoo, partition, pipeline, sim};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Tiny std-only argument parser: `--key value` pairs after a verb.
+struct Args {
+    verb: String,
+    kv: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> anyhow::Result<Args> {
+        let mut it = std::env::args().skip(1).peekable();
+        let mut verb = String::new();
+        let mut kv = std::collections::HashMap::new();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let val = it.next().unwrap_or_else(|| "true".into());
+                kv.insert(key.to_string(), val);
+            } else if verb.is_empty() {
+                verb = a;
+            } else {
+                anyhow::bail!("unexpected argument {a:?}");
+            }
+        }
+        Ok(Args { verb, kv })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.kv.get(key).map(|s| s.as_str())
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let args = Args::parse()?;
+    let mut cfg = match args.get("config") {
+        Some(p) => Config::load(&PathBuf::from(p))?,
+        None => Config::default(),
+    };
+    if let Some(m) = args.get("model") {
+        cfg.model = m.to_string();
+    }
+    if let Some(d) = args.get("d") {
+        cfg.diameter = d.parse()?;
+    }
+    if let Some(p) = args.get("dc-parts") {
+        cfg.dc_parts = p.parse()?;
+    }
+    if let Some(t) = args.get("t-lim") {
+        cfg.t_lim = Some(t.parse()?);
+    }
+    if let Some(n) = args.get("requests") {
+        cfg.n_requests = n.parse()?;
+    }
+    // --rpi 1.0x4 / --tx2 2.2x2 cluster spec (repeatable via config file).
+    let mut devices = Vec::new();
+    for kind in ["rpi", "tx2"] {
+        if let Some(spec) = args.get(kind) {
+            let (ghz, count) = spec
+                .split_once('x')
+                .ok_or_else(|| anyhow::anyhow!("--{kind} expects GHZxCOUNT, e.g. 1.0x4"))?;
+            devices.push(DeviceConfig {
+                kind: kind.into(),
+                ghz: ghz.parse()?,
+                count: count.parse()?,
+            });
+        }
+    }
+    if !devices.is_empty() {
+        cfg.devices = devices;
+    }
+
+    match args.verb.as_str() {
+        "partition" => cmd_partition(&cfg),
+        "plan" => cmd_plan(&cfg),
+        "simulate" => cmd_simulate(&cfg, args.get("scheme").unwrap_or("pico")),
+        "serve" => cmd_serve(&cfg, args.get("artifacts").unwrap_or("artifacts")),
+        "zoo" => cmd_zoo(),
+        other => anyhow::bail!(
+            "unknown command {other:?}; try: partition | plan | simulate | serve | zoo"
+        ),
+    }
+}
+
+fn load_model(cfg: &Config) -> anyhow::Result<pico::graph::ModelGraph> {
+    if cfg.model.ends_with(".json") {
+        pico::graph::ModelGraph::load(&PathBuf::from(&cfg.model))
+    } else if let Ok(g) = modelzoo::by_name(&cfg.model) {
+        Ok(g)
+    } else {
+        modelzoo::load_tiny(&PathBuf::from("artifacts"), &cfg.model)
+    }
+}
+
+fn cmd_partition(cfg: &Config) -> anyhow::Result<()> {
+    let g = load_model(cfg)?;
+    let r = if cfg.dc_parts > 1 {
+        partition::partition_divide_conquer(&g, cfg.diameter, cfg.dc_parts, None)?
+    } else {
+        partition::partition(&g, cfg.diameter, None)?
+    };
+    println!(
+        "model={} n={} (conv+pool {}) w={} -> {} pieces, F(G)={:.3e} FLOPs, {} states, {}",
+        g.name,
+        g.n_layers(),
+        g.n_conv_pool(),
+        width(&g),
+        r.pieces.len(),
+        r.max_redundancy,
+        r.states,
+        fmt_secs(r.elapsed.as_secs_f64()),
+    );
+    let mut t = Table::new(&["piece", "layers", "diameter", "halo rows", "redundancy FLOPs"]);
+    for (k, p) in r.pieces.iter().enumerate() {
+        let seg = pico::graph::Segment::from_ids(p.iter().copied());
+        t.row(&[
+            format!("{k}"),
+            p.iter().map(|&i| g.layer(i).name.clone()).collect::<Vec<_>>().join(","),
+            format!("{}", seg.diameter(&g)),
+            format!("{}", pico::cost::halo_rows(&g, p)),
+            format!("{:.3e}", pico::cost::piece_redundancy(&g, p, 2)),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_plan(cfg: &Config) -> anyhow::Result<()> {
+    let g = load_model(cfg)?;
+    let cluster = cfg.cluster();
+    let pieces = partition::partition(&g, cfg.diameter, None)?.pieces;
+    let plan = pipeline::plan(&g, &pieces, &cluster, cfg.t_lim_or_inf())?;
+    let cost = plan.cost(&g, &cluster);
+    println!(
+        "model={} cluster={} devices; {} stages; period {} latency {} throughput {:.2}/s",
+        g.name,
+        cluster.len(),
+        plan.stages.len(),
+        fmt_secs(cost.period),
+        fmt_secs(cost.latency),
+        1.0 / cost.period
+    );
+    let mut t = Table::new(&["stage", "pieces", "layers", "devices", "T_comp", "T_comm", "T"]);
+    for (k, s) in plan.stages.iter().enumerate() {
+        let sc = &cost.stage_costs[k];
+        t.row(&[
+            format!("{k}"),
+            format!("{}..={}", s.pieces.0, s.pieces.1),
+            format!("{}", s.layers.len()),
+            format!(
+                "{}",
+                s.devices
+                    .iter()
+                    .map(|&d| cluster.devices[d].name.clone())
+                    .collect::<Vec<_>>()
+                    .join("+")
+            ),
+            fmt_secs(sc.t_comp_stage),
+            fmt_secs(sc.t_comm_stage),
+            fmt_secs(sc.total),
+        ]);
+    }
+    t.print();
+    println!("{}", plan.to_json(&g));
+    Ok(())
+}
+
+fn cmd_simulate(cfg: &Config, scheme: &str) -> anyhow::Result<()> {
+    let g = load_model(cfg)?;
+    let cluster = cfg.cluster();
+    let n = cfg.n_requests;
+    let report = match scheme {
+        "pico" => {
+            let pieces = partition::partition(&g, cfg.diameter, None)?.pieces;
+            let plan = pipeline::plan(&g, &pieces, &cluster, cfg.t_lim_or_inf())?;
+            sim::simulate_pipeline(&g, &cluster, &plan, n)
+        }
+        "lw" => sim::simulate_sync(&g, &cluster, &baselines::layer_wise(&g, &cluster), n),
+        "efl" => sim::simulate_sync(&g, &cluster, &baselines::early_fused(&g, &cluster, 2), n),
+        "ofl" => {
+            let pieces = partition::partition(&g, cfg.diameter, None)?.pieces;
+            sim::simulate_sync(&g, &cluster, &baselines::optimal_fused(&g, &pieces, &cluster), n)
+        }
+        "ce" => sim::simulate_sync(&g, &cluster, &baselines::coedge(&g, &cluster), n),
+        other => anyhow::bail!("unknown scheme {other:?} (pico|lw|efl|ofl|ce)"),
+    };
+    println!(
+        "{} on {} x{}: throughput {:.3}/s period {} latency {} energy/task {:.2} J",
+        report.scheme,
+        g.name,
+        cluster.len(),
+        report.throughput,
+        fmt_secs(report.period),
+        fmt_secs(report.latency),
+        report.energy_per_task()
+    );
+    let mut t = Table::new(&["device", "util %", "redu %", "mem MB", "energy J"]);
+    for d in &report.per_device {
+        t.row(&[
+            cluster.devices[d.device].name.clone(),
+            format!("{:.1}", d.utilization * 100.0),
+            format!("{:.1}", d.redundancy * 100.0),
+            format!("{:.1}", (d.mem_model + d.mem_feature) as f64 / 1e6),
+            format!("{:.1}", d.energy_j),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_serve(cfg: &Config, artifacts: &str) -> anyhow::Result<()> {
+    let dir = PathBuf::from(artifacts);
+    let g = modelzoo::load_tiny(&dir, &cfg.model)
+        .map_err(|e| anyhow::anyhow!("serve needs a tiny e2e model with artifacts: {e}"))?;
+    let (c, h, w) = g.input_shape;
+    let mut rng = Rng::new(42);
+    let requests: Vec<coordinator::Request> = (0..cfg.n_requests as u64)
+        .map(|id| coordinator::Request {
+            id,
+            input: Tensor::new(vec![c, h, w], (0..c * h * w).map(|_| rng.normal() as f32).collect()),
+            t_submit: 0.0,
+        })
+        .collect();
+    // PJRT executes the AOT plan (its tile shapes ARE the artifact set);
+    // any other plan/cluster runs on the native backend.
+    let report = match try_pjrt(&dir, &cfg.model, &g, requests.clone()) {
+        Ok(r) => {
+            println!("backend: PJRT (AOT artifacts, plan from plan.json)");
+            r
+        }
+        Err(e) => {
+            println!("backend: native (PJRT unavailable: {e})");
+            let cluster = cfg.cluster();
+            let pieces = partition::partition(&g, cfg.diameter, None)?.pieces;
+            let plan = pipeline::plan(&g, &pieces, &cluster, cfg.t_lim_or_inf())?;
+            let compute = NativeCompute {
+                weights: pico::runtime::executor::model_weights(&g, 0),
+            };
+            coordinator::serve(&g, &plan, &cluster, &compute, requests)?
+        }
+    };
+    println!(
+        "served {} requests: virtual throughput {:.2}/s period {} mean latency {} (wall {:.2}s)",
+        report.responses.len(),
+        report.throughput,
+        fmt_secs(report.period),
+        fmt_secs(report.mean_latency),
+        report.wall_secs
+    );
+    Ok(())
+}
+
+fn try_pjrt(
+    dir: &std::path::Path,
+    model: &str,
+    g: &pico::graph::ModelGraph,
+    requests: Vec<coordinator::Request>,
+) -> anyhow::Result<coordinator::ServeReport> {
+    let engine = std::sync::Arc::new(Engine::cpu()?);
+    let artifacts = std::sync::Arc::new(PipelineArtifacts::load(dir, model)?);
+    let (plan, n_devices) = pipeline::PipelinePlan::from_artifact_plan(g, &artifacts.plan)?;
+    let cluster = Cluster::homogeneous_rpi(n_devices, 1.0);
+    let compute = PjrtCompute { engine, artifacts };
+    coordinator::serve(g, &plan, &cluster, &compute, requests)
+}
+
+fn cmd_zoo() -> anyhow::Result<()> {
+    let mut t = Table::new(&["model", "layers", "conv+pool n", "width w", "GFLOPs", "params MB"]);
+    for name in [
+        "vgg16", "yolov2", "resnet34", "inceptionv3", "squeezenet", "mobilenetv3", "nasnetlarge",
+    ] {
+        let g = modelzoo::by_name(name)?;
+        let params: usize = (0..g.n_layers()).map(|i| sim::layer_param_bytes(&g, i)).sum();
+        t.row(&[
+            name.into(),
+            format!("{}", g.n_layers()),
+            format!("{}", g.n_conv_pool()),
+            format!("{}", width(&g)),
+            format!("{:.2}", pico::cost::total_flops(&g) / 1e9),
+            format!("{:.1}", params as f64 / 1e6),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! Fluent DAG builder shared by all zoo models.
+
+use crate::graph::{Activation, Layer, LayerId, ModelGraph};
+
+/// Appends layers in topological order and hands out ids.
+pub struct GraphBuilder {
+    name: String,
+    input_shape: (usize, usize, usize),
+    layers: Vec<Layer>,
+}
+
+impl GraphBuilder {
+    /// Creates the builder with the implicit `input` layer (id 0).
+    pub fn new(name: &str, input_shape: (usize, usize, usize)) -> GraphBuilder {
+        GraphBuilder { name: name.to_string(), input_shape, layers: vec![Layer::input("input")] }
+    }
+
+    pub fn input_id(&self) -> LayerId {
+        0
+    }
+
+    fn push(&mut self, l: Layer) -> LayerId {
+        self.layers.push(l);
+        self.layers.len() - 1
+    }
+
+    /// Square conv, stride 1, "same" padding, ReLU — the common case.
+    pub fn conv_same(&mut self, name: &str, input: LayerId, c: usize, k: usize) -> LayerId {
+        self.conv(name, input, c, (k, k), (1, 1), (k / 2, k / 2), Activation::Relu)
+    }
+
+    pub fn conv(
+        &mut self,
+        name: &str,
+        input: LayerId,
+        c: usize,
+        k: (usize, usize),
+        s: (usize, usize),
+        p: (usize, usize),
+        act: Activation,
+    ) -> LayerId {
+        self.push(Layer::conv(name, input, c, k, s, p, act))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv_grouped(
+        &mut self,
+        name: &str,
+        input: LayerId,
+        c: usize,
+        k: (usize, usize),
+        s: (usize, usize),
+        p: (usize, usize),
+        act: Activation,
+        groups: usize,
+    ) -> LayerId {
+        self.push(Layer::conv_grouped(name, input, c, k, s, p, act, groups))
+    }
+
+    pub fn maxpool(&mut self, name: &str, input: LayerId, k: usize, s: usize) -> LayerId {
+        self.push(Layer::maxpool(name, input, (k, k), (s, s), (0, 0)))
+    }
+
+    pub fn maxpool_padded(&mut self, name: &str, input: LayerId, k: usize, s: usize, p: usize) -> LayerId {
+        self.push(Layer::maxpool(name, input, (k, k), (s, s), (p, p)))
+    }
+
+    pub fn avgpool(&mut self, name: &str, input: LayerId, k: usize, s: usize, p: usize) -> LayerId {
+        self.push(Layer::avgpool(name, input, (k, k), (s, s), (p, p)))
+    }
+
+    pub fn add(&mut self, name: &str, inputs: Vec<LayerId>) -> LayerId {
+        self.push(Layer::add(name, inputs))
+    }
+
+    pub fn concat(&mut self, name: &str, inputs: Vec<LayerId>) -> LayerId {
+        self.push(Layer::concat(name, inputs))
+    }
+
+    pub fn flatten(&mut self, name: &str, input: LayerId) -> LayerId {
+        self.push(Layer::flatten(name, input))
+    }
+
+    pub fn dense(&mut self, name: &str, input: LayerId, units: usize, act: Activation) -> LayerId {
+        self.push(Layer::dense(name, input, units, act))
+    }
+
+    pub fn build(self) -> ModelGraph {
+        ModelGraph::new(&self.name, self.input_shape, self.layers)
+            .expect("zoo model failed validation")
+    }
+}

@@ -1,0 +1,135 @@
+//! InceptionV3 (Szegedy et al.): block structure with multi-branch
+//! Inception modules and the unbalanced 1x7/7x1 kernels that motivate the
+//! paper's Fig. 6/Fig. 11 analysis. Input 3x299x299.
+//!
+//! Topology follows torchvision's inference graph (aux classifier
+//! omitted). The paper reports n=99/w=4 from its PyTorch GraphConvertor,
+//! which hooks modules and therefore does not see the functional
+//! `avg_pool2d` calls inside blocks; our count includes them (n=108).
+//! The E-block's nested 1x3/3x1 fan-outs are serialised (1x3 → 3x1) to
+//! match the paper's reported width of 4 (its Fig. 10 shows the same).
+
+use super::GraphBuilder;
+use crate::graph::{Activation, LayerId, ModelGraph};
+
+const R: Activation = Activation::Relu;
+
+fn inception_a(b: &mut GraphBuilder, n: &str, x: LayerId, pool_c: usize) -> LayerId {
+    let b1 = b.conv(&format!("{n}_1x1"), x, 64, (1, 1), (1, 1), (0, 0), R);
+    let b2 = b.conv(&format!("{n}_5x5a"), x, 48, (1, 1), (1, 1), (0, 0), R);
+    let b2 = b.conv(&format!("{n}_5x5b"), b2, 64, (5, 5), (1, 1), (2, 2), R);
+    let b3 = b.conv(&format!("{n}_dbl_a"), x, 64, (1, 1), (1, 1), (0, 0), R);
+    let b3 = b.conv(&format!("{n}_dbl_b"), b3, 96, (3, 3), (1, 1), (1, 1), R);
+    let b3 = b.conv(&format!("{n}_dbl_c"), b3, 96, (3, 3), (1, 1), (1, 1), R);
+    let b4 = b.avgpool(&format!("{n}_pool"), x, 3, 1, 1);
+    let b4 = b.conv(&format!("{n}_pool_1x1"), b4, pool_c, (1, 1), (1, 1), (0, 0), R);
+    b.concat(&format!("{n}_cat"), vec![b1, b2, b3, b4])
+}
+
+fn inception_b(b: &mut GraphBuilder, n: &str, x: LayerId) -> LayerId {
+    let b1 = b.conv(&format!("{n}_3x3"), x, 384, (3, 3), (2, 2), (0, 0), R);
+    let b2 = b.conv(&format!("{n}_dbl_a"), x, 64, (1, 1), (1, 1), (0, 0), R);
+    let b2 = b.conv(&format!("{n}_dbl_b"), b2, 96, (3, 3), (1, 1), (1, 1), R);
+    let b2 = b.conv(&format!("{n}_dbl_c"), b2, 96, (3, 3), (2, 2), (0, 0), R);
+    let b3 = b.maxpool(&format!("{n}_pool"), x, 3, 2);
+    b.concat(&format!("{n}_cat"), vec![b1, b2, b3])
+}
+
+fn inception_c(b: &mut GraphBuilder, n: &str, x: LayerId, c7: usize) -> LayerId {
+    let b1 = b.conv(&format!("{n}_1x1"), x, 192, (1, 1), (1, 1), (0, 0), R);
+    let b2 = b.conv(&format!("{n}_7a"), x, c7, (1, 1), (1, 1), (0, 0), R);
+    let b2 = b.conv(&format!("{n}_7b"), b2, c7, (1, 7), (1, 1), (0, 3), R);
+    let b2 = b.conv(&format!("{n}_7c"), b2, 192, (7, 1), (1, 1), (3, 0), R);
+    let b3 = b.conv(&format!("{n}_7dbl_a"), x, c7, (1, 1), (1, 1), (0, 0), R);
+    let b3 = b.conv(&format!("{n}_7dbl_b"), b3, c7, (7, 1), (1, 1), (3, 0), R);
+    let b3 = b.conv(&format!("{n}_7dbl_c"), b3, c7, (1, 7), (1, 1), (0, 3), R);
+    let b3 = b.conv(&format!("{n}_7dbl_d"), b3, c7, (7, 1), (1, 1), (3, 0), R);
+    let b3 = b.conv(&format!("{n}_7dbl_e"), b3, 192, (1, 7), (1, 1), (0, 3), R);
+    let b4 = b.avgpool(&format!("{n}_pool"), x, 3, 1, 1);
+    let b4 = b.conv(&format!("{n}_pool_1x1"), b4, 192, (1, 1), (1, 1), (0, 0), R);
+    b.concat(&format!("{n}_cat"), vec![b1, b2, b3, b4])
+}
+
+fn inception_d(b: &mut GraphBuilder, n: &str, x: LayerId) -> LayerId {
+    let b1 = b.conv(&format!("{n}_3x3a"), x, 192, (1, 1), (1, 1), (0, 0), R);
+    let b1 = b.conv(&format!("{n}_3x3b"), b1, 320, (3, 3), (2, 2), (0, 0), R);
+    let b2 = b.conv(&format!("{n}_7x7a"), x, 192, (1, 1), (1, 1), (0, 0), R);
+    let b2 = b.conv(&format!("{n}_7x7b"), b2, 192, (1, 7), (1, 1), (0, 3), R);
+    let b2 = b.conv(&format!("{n}_7x7c"), b2, 192, (7, 1), (1, 1), (3, 0), R);
+    let b2 = b.conv(&format!("{n}_7x7d"), b2, 192, (3, 3), (2, 2), (0, 0), R);
+    let b3 = b.maxpool(&format!("{n}_pool"), x, 3, 2);
+    b.concat(&format!("{n}_cat"), vec![b1, b2, b3])
+}
+
+fn inception_e(b: &mut GraphBuilder, n: &str, x: LayerId) -> LayerId {
+    let b1 = b.conv(&format!("{n}_1x1"), x, 320, (1, 1), (1, 1), (0, 0), R);
+    // 1x3 / 3x1 fan-outs serialised (see module docs).
+    let b2 = b.conv(&format!("{n}_3x3a"), x, 384, (1, 1), (1, 1), (0, 0), R);
+    let b2a = b.conv(&format!("{n}_3x3b"), b2, 384, (1, 3), (1, 1), (0, 1), R);
+    let b2b = b.conv(&format!("{n}_3x3c"), b2a, 384, (3, 1), (1, 1), (1, 0), R);
+    let b3 = b.conv(&format!("{n}_dbl_a"), x, 448, (1, 1), (1, 1), (0, 0), R);
+    let b3 = b.conv(&format!("{n}_dbl_b"), b3, 384, (3, 3), (1, 1), (1, 1), R);
+    let b3a = b.conv(&format!("{n}_dbl_c"), b3, 384, (1, 3), (1, 1), (0, 1), R);
+    let b3b = b.conv(&format!("{n}_dbl_d"), b3a, 384, (3, 1), (1, 1), (1, 0), R);
+    let b4 = b.avgpool(&format!("{n}_pool"), x, 3, 1, 1);
+    let b4 = b.conv(&format!("{n}_pool_1x1"), b4, 192, (1, 1), (1, 1), (0, 0), R);
+    // Both halves of each serialised 1x3→3x1 pair feed the concat, so the
+    // output keeps InceptionV3's 2048 channels.
+    b.concat(&format!("{n}_cat"), vec![b1, b2a, b2b, b3a, b3b, b4])
+}
+
+pub fn inception_v3() -> ModelGraph {
+    let mut b = GraphBuilder::new("inceptionv3", (3, 299, 299));
+    let mut x = b.input_id();
+    // Stem
+    x = b.conv("conv1a", x, 32, (3, 3), (2, 2), (0, 0), R);
+    x = b.conv("conv2a", x, 32, (3, 3), (1, 1), (0, 0), R);
+    x = b.conv("conv2b", x, 64, (3, 3), (1, 1), (1, 1), R);
+    x = b.maxpool("pool1", x, 3, 2);
+    x = b.conv("conv3b", x, 80, (1, 1), (1, 1), (0, 0), R);
+    x = b.conv("conv4a", x, 192, (3, 3), (1, 1), (0, 0), R);
+    x = b.maxpool("pool2", x, 3, 2);
+    // 3x InceptionA at 35x35
+    x = inception_a(&mut b, "mixed0", x, 32);
+    x = inception_a(&mut b, "mixed1", x, 64);
+    x = inception_a(&mut b, "mixed2", x, 64);
+    // Reduction
+    x = inception_b(&mut b, "mixed3", x);
+    // 4x InceptionC at 17x17
+    for (i, c7) in [128usize, 160, 160, 192].iter().enumerate() {
+        x = inception_c(&mut b, &format!("mixed{}", 4 + i), x, *c7);
+    }
+    // Reduction
+    x = inception_d(&mut b, "mixed8", x);
+    // 2x InceptionE at 8x8
+    x = inception_e(&mut b, "mixed9", x);
+    x = inception_e(&mut b, "mixed10", x);
+    x = b.avgpool("gap", x, 8, 8, 0);
+    x = b.flatten("flatten", x);
+    b.dense("fc", x, 1000, Activation::Linear);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Shape;
+
+    #[test]
+    fn inception_shapes() {
+        let g = inception_v3();
+        let m2 = g.by_name("mixed2_cat").unwrap();
+        assert_eq!(g.shape(m2), Shape::Chw(288, 35, 35));
+        let m7 = g.by_name("mixed7_cat").unwrap();
+        assert_eq!(g.shape(m7), Shape::Chw(768, 17, 17));
+        let m10 = g.by_name("mixed10_cat").unwrap();
+        assert_eq!(g.shape(m10), Shape::Chw(2048, 8, 8));
+    }
+
+    #[test]
+    fn inception_flops_about_11g() {
+        // Published InceptionV3 MACs ≈ 5.7 G → ~11 GFLOPs.
+        let f = crate::cost::total_flops(&inception_v3());
+        assert!((9e9..14e9).contains(&f), "InceptionV3 flops {f:.3e}");
+    }
+}

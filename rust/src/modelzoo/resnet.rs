@@ -1,0 +1,83 @@
+//! ResNet34 (He et al. 2016): block structure with skip connections.
+//! Stem conv7x7/2 + maxpool + 16 basic blocks (3-4-6-3 at 64-128-256-512
+//! channels) with 1x1 projection on downsampling, avgpool + fc.
+
+use super::GraphBuilder;
+use crate::graph::{Activation, LayerId, ModelGraph};
+
+fn basic_block(
+    b: &mut GraphBuilder,
+    name: &str,
+    x: LayerId,
+    c: usize,
+    stride: usize,
+    project: bool,
+) -> LayerId {
+    let y = b.conv(
+        &format!("{name}_conv1"),
+        x,
+        c,
+        (3, 3),
+        (stride, stride),
+        (1, 1),
+        Activation::Relu,
+    );
+    let y = b.conv(&format!("{name}_conv2"), y, c, (3, 3), (1, 1), (1, 1), Activation::Linear);
+    let skip = if project {
+        b.conv(
+            &format!("{name}_proj"),
+            x,
+            c,
+            (1, 1),
+            (stride, stride),
+            (0, 0),
+            Activation::Linear,
+        )
+    } else {
+        x
+    };
+    b.add(&format!("{name}_add"), vec![y, skip])
+}
+
+pub fn resnet34() -> ModelGraph {
+    let mut b = GraphBuilder::new("resnet34", (3, 224, 224));
+    let mut x = b.input_id();
+    x = b.conv("stem", x, 64, (7, 7), (2, 2), (3, 3), Activation::Relu);
+    x = b.maxpool_padded("stem_pool", x, 3, 2, 1);
+    let stages: &[(usize, usize)] = &[(64, 3), (128, 4), (256, 6), (512, 3)];
+    for (si, &(c, reps)) in stages.iter().enumerate() {
+        for r in 0..reps {
+            let downsample = si > 0 && r == 0;
+            let stride = if downsample { 2 } else { 1 };
+            x = basic_block(&mut b, &format!("s{}b{}", si + 1, r + 1), x, c, stride, downsample);
+        }
+    }
+    x = b.avgpool("gap", x, 7, 7, 0);
+    x = b.flatten("flatten", x);
+    b.dense("fc", x, 1000, Activation::Linear);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Shape;
+
+    #[test]
+    fn resnet34_structure() {
+        let g = resnet34();
+        // 33 convs (1 stem + 32 block + 3 proj = 36) + 2 pools = 38
+        let convs = g.layers.iter().filter(|l| l.op == crate::graph::Op::Conv).count();
+        assert_eq!(convs, 36);
+        assert_eq!(g.n_conv_pool(), 38);
+        let gap = g.by_name("gap").unwrap();
+        assert_eq!(g.shape(gap), Shape::Chw(512, 1, 1));
+    }
+
+    #[test]
+    fn resnet34_flops_about_7g() {
+        // Published ResNet34 MACs ≈ 3.6 G → ~7.3 GFLOPs.
+        let f = crate::cost::total_flops(&resnet34());
+        assert!((6e9..9e9).contains(&f), "ResNet34 flops {f:.3e}");
+    }
+}

@@ -1,0 +1,49 @@
+//! SqueezeNet 1.0 (Iandola et al. 2016): fire modules — squeeze 1x1 then
+//! parallel expand 1x1/3x3 concat (width 2, Table 4).
+
+use super::GraphBuilder;
+use crate::graph::{Activation, LayerId, ModelGraph};
+
+const R: Activation = Activation::Relu;
+
+fn fire(b: &mut GraphBuilder, n: &str, x: LayerId, squeeze: usize, expand: usize) -> LayerId {
+    let s = b.conv(&format!("{n}_squeeze"), x, squeeze, (1, 1), (1, 1), (0, 0), R);
+    let e1 = b.conv(&format!("{n}_expand1"), s, expand, (1, 1), (1, 1), (0, 0), R);
+    let e3 = b.conv(&format!("{n}_expand3"), s, expand, (3, 3), (1, 1), (1, 1), R);
+    b.concat(&format!("{n}_cat"), vec![e1, e3])
+}
+
+pub fn squeezenet() -> ModelGraph {
+    let mut b = GraphBuilder::new("squeezenet", (3, 224, 224));
+    let mut x = b.input_id();
+    x = b.conv("conv1", x, 96, (7, 7), (2, 2), (3, 3), R);
+    x = b.maxpool("pool1", x, 3, 2);
+    x = fire(&mut b, "fire2", x, 16, 64);
+    x = fire(&mut b, "fire3", x, 16, 64);
+    x = fire(&mut b, "fire4", x, 32, 128);
+    x = b.maxpool("pool4", x, 3, 2);
+    x = fire(&mut b, "fire5", x, 32, 128);
+    x = fire(&mut b, "fire6", x, 48, 192);
+    x = fire(&mut b, "fire7", x, 48, 192);
+    x = fire(&mut b, "fire8", x, 64, 256);
+    x = b.maxpool("pool8", x, 3, 2);
+    x = fire(&mut b, "fire9", x, 64, 256);
+    x = b.conv("conv10", x, 1000, (1, 1), (1, 1), (0, 0), R);
+    x = b.avgpool("gap", x, 13, 13, 0);
+    b.flatten("flatten", x);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Shape;
+
+    #[test]
+    fn squeezenet_structure() {
+        let g = squeezenet();
+        // 26 convs + 4 pools = 30 spatial vertices (paper n=30)
+        assert_eq!(g.n_conv_pool(), 30);
+        assert_eq!(g.shape(g.output_id()), Shape::Flat(1000));
+    }
+}

@@ -1,0 +1,85 @@
+//! Synthetic CNNs for the §6.5 optimality comparison: parameterised
+//! chain models (Table 7, Fig. 18) and multi-branch graph models
+//! (Table 6, Fig. 17), matching the paper's "(branches, layers)" grid.
+
+use super::GraphBuilder;
+use crate::graph::{Activation, ModelGraph};
+
+/// Chain CNN with `n_conv` 3x3 conv layers (pools inserted every 4 layers
+/// to keep feature maps mobile-sized).
+pub fn synthetic_chain(n_conv: usize) -> ModelGraph {
+    let mut b = GraphBuilder::new(&format!("chain{n_conv}"), (3, 64, 64));
+    let mut x = b.input_id();
+    let mut c = 16;
+    for i in 0..n_conv {
+        x = b.conv_same(&format!("conv{}", i + 1), x, c, 3);
+        if (i + 1) % 4 == 0 && i + 1 < n_conv {
+            x = b.maxpool(&format!("pool{}", (i + 1) / 4), x, 2, 2);
+            c = (c * 2).min(128);
+        }
+    }
+    b.build()
+}
+
+/// Graph CNN with `branches` parallel paths of `layers_total / branches`
+/// conv layers each, stem + concat + tail — the "(branches, layers)"
+/// cases of Table 6. `layers_total` counts the branch convs only, to
+/// match the paper's parameterisation.
+pub fn synthetic_graph(branches: usize, layers_total: usize) -> ModelGraph {
+    assert!(branches >= 2, "graph needs >= 2 branches");
+    let per = (layers_total / branches).max(1);
+    let mut b = GraphBuilder::new(&format!("graph{branches}x{layers_total}"), (3, 64, 64));
+    let x = b.input_id();
+    let stem = b.conv_same("stem", x, 16, 3);
+    let mut outs = Vec::new();
+    for bi in 0..branches {
+        let mut y = stem;
+        // Mix kernel geometries across branches (the paper's motivation:
+        // unbalanced kernels make block-as-layer fusing wasteful).
+        let k: (usize, usize) = match bi % 3 {
+            0 => (3, 3),
+            1 => (1, 7),
+            _ => (7, 1),
+        };
+        let p = (k.0 / 2, k.1 / 2);
+        for li in 0..per {
+            y = b.conv(
+                &format!("b{bi}_conv{li}"),
+                y,
+                16,
+                k,
+                (1, 1),
+                p,
+                Activation::Relu,
+            );
+        }
+        outs.push(y);
+    }
+    let cat = b.concat("cat", outs);
+    b.conv_same("tail", cat, 32, 3);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::width;
+
+    #[test]
+    fn chain_is_width_one() {
+        for n in [4, 8, 16] {
+            let g = synthetic_chain(n);
+            assert_eq!(width(&g), 1, "chain{n}");
+            let convs = g.layers.iter().filter(|l| l.op == crate::graph::Op::Conv).count();
+            assert_eq!(convs, n);
+        }
+    }
+
+    #[test]
+    fn graph_width_matches_branches() {
+        for (br, n) in [(2, 8), (3, 12), (4, 20)] {
+            let g = synthetic_graph(br, n);
+            assert_eq!(width(&g), br, "graph({br},{n})");
+        }
+    }
+}

@@ -1,0 +1,45 @@
+//! VGG16 (Simonyan & Zisserman 2014): the paper's canonical chain model.
+//! 13 conv + 5 maxpool + 3 fc, input 3x224x224 (n = 18–19 conv/pool).
+
+use super::GraphBuilder;
+use crate::graph::{Activation, ModelGraph};
+
+pub fn vgg16() -> ModelGraph {
+    let mut b = GraphBuilder::new("vgg16", (3, 224, 224));
+    let mut x = b.input_id();
+    let blocks: &[(usize, usize)] = &[(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)];
+    for (bi, &(c, reps)) in blocks.iter().enumerate() {
+        for r in 0..reps {
+            x = b.conv_same(&format!("conv{}_{}", bi + 1, r + 1), x, c, 3);
+        }
+        x = b.maxpool(&format!("pool{}", bi + 1), x, 2, 2);
+    }
+    x = b.flatten("flatten", x);
+    x = b.dense("fc1", x, 4096, Activation::Relu);
+    x = b.dense("fc2", x, 4096, Activation::Relu);
+    b.dense("fc3", x, 1000, Activation::Linear);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Shape;
+
+    #[test]
+    fn vgg16_shapes() {
+        let g = vgg16();
+        assert_eq!(g.n_conv_pool(), 18); // 13 conv + 5 pool
+        // final feature map before flatten: 512x7x7
+        let pool5 = g.by_name("pool5").unwrap();
+        assert_eq!(g.shape(pool5), Shape::Chw(512, 7, 7));
+        assert_eq!(g.shape(g.output_id()), Shape::Flat(1000));
+    }
+
+    #[test]
+    fn vgg16_flops_about_31g() {
+        // Published VGG16 MACs ≈ 15.5 G → FLOPs ≈ 31 G (conv+fc).
+        let f = crate::cost::total_flops(&vgg16());
+        assert!((25e9..40e9).contains(&f), "VGG16 flops {f:.3e}");
+    }
+}

@@ -1,0 +1,77 @@
+//! YOLOv2 (Redmon & Farhadi 2017) — Darknet-19 backbone + detection
+//! head, input 3x448x448 as in the paper's §6.1 (23 conv + 5 maxpool).
+//!
+//! The reorg/passthrough connection is omitted (the paper classifies
+//! YOLOv2 as a *chain* model in §2.3, so its evaluation treats it as
+//! one); leaky-ReLU activations follow Darknet.
+
+use super::GraphBuilder;
+use crate::graph::{Activation, ModelGraph};
+
+pub fn yolov2() -> ModelGraph {
+    let a = Activation::Leaky;
+    let mut b = GraphBuilder::new("yolov2", (3, 448, 448));
+    let mut x = b.input_id();
+    let mut i = 0;
+    let mut conv = |b: &mut GraphBuilder, x: usize, c: usize, k: usize| -> usize {
+        i += 1;
+        b.conv(&format!("conv{i}"), x, c, (k, k), (1, 1), (k / 2, k / 2), a)
+    };
+    // Darknet-19 feature extractor
+    x = conv(&mut b, x, 32, 3);
+    x = b.maxpool("pool1", x, 2, 2);
+    x = conv(&mut b, x, 64, 3);
+    x = b.maxpool("pool2", x, 2, 2);
+    x = conv(&mut b, x, 128, 3);
+    x = conv(&mut b, x, 64, 1);
+    x = conv(&mut b, x, 128, 3);
+    x = b.maxpool("pool3", x, 2, 2);
+    x = conv(&mut b, x, 256, 3);
+    x = conv(&mut b, x, 128, 1);
+    x = conv(&mut b, x, 256, 3);
+    x = b.maxpool("pool4", x, 2, 2);
+    x = conv(&mut b, x, 512, 3);
+    x = conv(&mut b, x, 256, 1);
+    x = conv(&mut b, x, 512, 3);
+    x = conv(&mut b, x, 256, 1);
+    x = conv(&mut b, x, 512, 3);
+    x = b.maxpool("pool5", x, 2, 2);
+    x = conv(&mut b, x, 1024, 3);
+    x = conv(&mut b, x, 512, 1);
+    x = conv(&mut b, x, 1024, 3);
+    x = conv(&mut b, x, 512, 1);
+    x = conv(&mut b, x, 1024, 3);
+    // Detection head (the passthrough 1x1 is kept inline — the paper
+    // treats YOLOv2 as a chain, §2.3)
+    x = conv(&mut b, x, 1024, 3);
+    x = conv(&mut b, x, 1024, 3);
+    x = conv(&mut b, x, 64, 1);
+    x = conv(&mut b, x, 1024, 3);
+    // 5 anchors x (5 + 20 VOC classes) = 125 output channels, 1x1 linear
+    b.conv("det", x, 125, (1, 1), (1, 1), (0, 0), Activation::Linear);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Shape;
+
+    #[test]
+    fn yolov2_structure() {
+        let g = yolov2();
+        // 23 conv + 5 pool = 28 spatial vertices (paper §6.1)
+        assert_eq!(g.n_conv_pool(), 28);
+        assert_eq!(g.shape(g.output_id()), Shape::Chw(125, 14, 14));
+    }
+
+    #[test]
+    fn yolov2_deeper_than_vgg() {
+        // The paper notes YOLOv2 has ~2x VGG16's conv count (§6.1).
+        let y = yolov2();
+        let v = super::super::vgg16();
+        let yc = y.layers.iter().filter(|l| l.op == crate::graph::Op::Conv).count();
+        let vc = v.layers.iter().filter(|l| l.op == crate::graph::Op::Conv).count();
+        assert!(yc >= 2 * vc - 3, "yolo {yc} vs vgg {vc}");
+    }
+}

@@ -1,0 +1,425 @@
+//! Algorithm 1 implementation: memoised ending-piece DP.
+
+use std::collections::{HashMap, HashSet};
+use std::time::{Duration, Instant};
+
+use super::PieceChain;
+use crate::cost::piece_redundancy;
+use crate::graph::{ModelGraph, Segment};
+use crate::util::BitSet;
+
+/// Result of Algorithm 1 on a (sub-)graph.
+#[derive(Debug, Clone)]
+pub struct PartitionResult {
+    /// Pieces input-first, each topologically sorted.
+    pub pieces: PieceChain,
+    /// F(G): max per-piece redundancy C(M) in the optimal arrangement.
+    pub max_redundancy: f64,
+    /// Distinct DP states visited (the paper's (nd/w)^w bound).
+    pub states: usize,
+    pub elapsed: Duration,
+}
+
+struct Dp<'a> {
+    g: &'a ModelGraph,
+    d: usize,
+    /// F memo: remaining-set → best achievable max-redundancy.
+    f: HashMap<BitSet, f64>,
+    /// R memo: remaining-set → chosen ending piece.
+    r: HashMap<BitSet, BitSet>,
+    /// Per-piece redundancy cache (pieces recur across states).
+    c: HashMap<BitSet, f64>,
+    /// Budget guard: abort enumeration explosions (returns Err upstream).
+    deadline: Option<Instant>,
+    budget_hit: bool,
+}
+
+impl<'a> Dp<'a> {
+    /// Vertices of `remaining` with a consumer outside it (within the
+    /// universe): the forced seed of the next ending piece (§4.2).
+    fn seed(&self, remaining: &BitSet, universe: &BitSet) -> BitSet {
+        let mut s = BitSet::new(self.g.n_layers());
+        for v in remaining.iter() {
+            if self
+                .g
+                .consumers(v)
+                .iter()
+                .any(|&c| universe.contains(c) && !remaining.contains(c))
+            {
+                s.insert(v);
+            }
+        }
+        s
+    }
+
+    /// Close `set` upward within `remaining`: every consumer (inside
+    /// remaining) of a member joins. Returns None if the closure's
+    /// diameter exceeds d.
+    fn up_close(&self, mut set: BitSet, remaining: &BitSet) -> Option<BitSet> {
+        let mut stack: Vec<usize> = set.iter().collect();
+        while let Some(v) = stack.pop() {
+            for &c in self.g.consumers(v) {
+                if remaining.contains(c) && !set.contains(c) {
+                    set.insert(c);
+                    stack.push(c);
+                }
+            }
+        }
+        if Segment::new(set.clone()).diameter(self.g) > self.d {
+            None
+        } else {
+            Some(set)
+        }
+    }
+
+    /// Enumerate ending pieces of `remaining` containing `base`
+    /// (up-closed, diameter ≤ d). DFS growth: a vertex may be added when
+    /// all its consumers inside `remaining` are already members.
+    fn ending_pieces(&mut self, remaining: &BitSet, base: &BitSet) -> Vec<BitSet> {
+        let Some(start) = self.up_close(base.clone(), remaining) else {
+            return Vec::new();
+        };
+        let mut seen: HashSet<BitSet> = HashSet::new();
+        let mut out = Vec::new();
+        let mut stack = vec![start.clone()];
+        seen.insert(start);
+        while let Some(cur) = stack.pop() {
+            if self.budget_exceeded() {
+                break;
+            }
+            out.push(cur.clone());
+            // Growth candidates: frontier vertices whose in-remaining
+            // consumers are all inside `cur`.
+            for v in remaining.minus(&cur).iter() {
+                let ok = self
+                    .g
+                    .consumers(v)
+                    .iter()
+                    .all(|&c| !remaining.contains(c) || cur.contains(c));
+                if !ok {
+                    continue;
+                }
+                let mut next = cur.clone();
+                next.insert(v);
+                if seen.contains(&next) {
+                    continue;
+                }
+                if Segment::new(next.clone()).diameter(self.g) > self.d {
+                    continue;
+                }
+                seen.insert(next.clone());
+                stack.push(next);
+            }
+        }
+        out
+    }
+
+    fn budget_exceeded(&mut self) -> bool {
+        if self.budget_hit {
+            return true;
+        }
+        if let Some(dl) = self.deadline {
+            if Instant::now() > dl {
+                self.budget_hit = true;
+                return true;
+            }
+        }
+        false
+    }
+
+    fn redundancy(&mut self, piece: &BitSet) -> f64 {
+        if let Some(&v) = self.c.get(piece) {
+            return v;
+        }
+        let ids: Vec<usize> = piece.iter().collect();
+        let v = piece_redundancy(self.g, &ids, 2);
+        self.c.insert(piece.clone(), v);
+        v
+    }
+
+    /// The Eq. (13) recursion. `universe` is the full set being
+    /// partitioned (a sub-universe for divide-and-conquer).
+    fn partition(&mut self, remaining: BitSet, universe: &BitSet) -> f64 {
+        if remaining.is_empty() {
+            return 0.0;
+        }
+        if let Some(&v) = self.f.get(&remaining) {
+            return v;
+        }
+        let base = self.seed(&remaining, universe);
+        let base = if base.is_empty() {
+            // First call: sinks of the remaining graph seed the piece.
+            let seg = Segment::new(remaining.clone());
+            seg.sinks(self.g)
+                .into_iter()
+                .filter(|&v| remaining.contains(v))
+                .collect()
+        } else {
+            base
+        };
+        let mut best = f64::INFINITY;
+        let mut best_piece: Option<BitSet> = None;
+        for piece in self.ending_pieces(&remaining, &base) {
+            let c = self.redundancy(&piece);
+            if c >= best {
+                continue; // cannot improve the max
+            }
+            let rest = self.partition(remaining.minus(&piece), universe);
+            let cur = rest.max(c);
+            if cur < best {
+                best = cur;
+                best_piece = Some(piece);
+            }
+            if self.budget_exceeded() {
+                break;
+            }
+        }
+        if let Some(p) = best_piece {
+            self.r.insert(remaining.clone(), p);
+        }
+        self.f.insert(remaining.clone(), best);
+        best
+    }
+}
+
+/// Run Algorithm 1 on a sub-universe of `g` (the divide-and-conquer
+/// entry; `partition` passes the full set). `budget` caps wall time —
+/// the paper's NASNetL row shows the direct run is infeasible (>5h), so
+/// callers can bound it; `None` = unbounded.
+pub fn partition_universe(
+    g: &ModelGraph,
+    universe: &BitSet,
+    d: usize,
+    budget: Option<Duration>,
+) -> anyhow::Result<PartitionResult> {
+    let start = Instant::now();
+    let mut dp = Dp {
+        g,
+        d,
+        f: HashMap::new(),
+        r: HashMap::new(),
+        c: HashMap::new(),
+        deadline: budget.map(|b| start + b),
+        budget_hit: false,
+    };
+    let best = dp.partition(universe.clone(), universe);
+    if dp.budget_hit {
+        anyhow::bail!("Algorithm 1 exceeded its time budget after {} states", dp.f.len());
+    }
+    anyhow::ensure!(best.is_finite(), "no feasible partition (diameter bound d={d} too small)");
+    // Reconstruct (the paper's `obtain`): walk R from the full set.
+    let mut pieces_rev: Vec<Vec<usize>> = Vec::new();
+    let mut cur = universe.clone();
+    while !cur.is_empty() {
+        let piece = dp.r.get(&cur).cloned().unwrap_or_else(|| cur.clone());
+        pieces_rev.push(piece.iter().collect());
+        cur = cur.minus(&piece);
+    }
+    pieces_rev.reverse();
+    Ok(PartitionResult {
+        pieces: pieces_rev,
+        max_redundancy: best,
+        states: dp.f.len(),
+        elapsed: start.elapsed(),
+    })
+}
+
+/// Algorithm 1 on the whole model (diameter bound `d`, paper default 5).
+pub fn partition(g: &ModelGraph, d: usize, budget: Option<Duration>) -> anyhow::Result<PartitionResult> {
+    partition_universe(g, &BitSet::full(g.n_layers()), d, budget)
+}
+
+/// §6.2.3 divide-and-conquer: slice the topological order into `parts`
+/// contiguous chunks (every topo prefix is down-closed, so each chunk is
+/// a valid sub-universe) and partition each independently. Pieces at the
+/// cut lines are forced boundaries — the paper keeps "pieces away from
+/// the cut line" and re-partitions the rest; slicing at block boundaries
+/// makes the forced cut cost negligible, which NASNet's cell structure
+/// provides naturally.
+pub fn partition_divide_conquer(
+    g: &ModelGraph,
+    d: usize,
+    parts: usize,
+    budget_per_part: Option<Duration>,
+) -> anyhow::Result<PartitionResult> {
+    let n = g.n_layers();
+    let start = Instant::now();
+    // Cut where few edges cross the boundary (block/cell seams): a cut
+    // through the middle of a wide cell forces a seed closure whose
+    // diameter can exceed d. Search a window around the even split.
+    let mut crossing = vec![0usize; n + 1];
+    for u in 0..n {
+        for &v in g.consumers(u) {
+            for c in crossing.iter_mut().take(v + 1).skip(u + 1) {
+                *c += 1;
+            }
+        }
+    }
+    let window = (n / (parts * 4)).max(1);
+    let mut bounds = vec![0usize];
+    for k in 1..parts {
+        let target = k * n / parts;
+        let lo = target.saturating_sub(window).max(bounds[k - 1] + 1);
+        let hi = (target + window).min(n - 1);
+        let best = (lo..=hi).min_by_key(|&i| crossing[i]).unwrap_or(target);
+        bounds.push(best);
+    }
+    bounds.push(n);
+
+    let mut pieces = Vec::new();
+    let mut max_red: f64 = 0.0;
+    let mut states = 0;
+    for k in 0..parts {
+        let chunk: BitSet = (bounds[k]..bounds[k + 1]).collect();
+        if chunk.is_empty() {
+            continue;
+        }
+        // A forced cut can make the diameter bound infeasible for this
+        // chunk; relax d locally rather than failing the whole model.
+        let mut result = None;
+        let mut last_err = None;
+        for dd in d..=d + 4 {
+            match partition_universe(g, &chunk, dd, budget_per_part) {
+                Ok(r) => {
+                    result = Some(r);
+                    break;
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        let r = result.ok_or_else(|| last_err.unwrap())?;
+        max_red = max_red.max(r.max_redundancy);
+        states += r.states;
+        pieces.extend(r.pieces);
+    }
+    Ok(PartitionResult { pieces, max_redundancy: max_red, states, elapsed: start.elapsed() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Activation, Layer, ModelGraph};
+    use crate::modelzoo;
+
+    fn conv(n: &str, i: usize, k: (usize, usize), p: (usize, usize)) -> Layer {
+        Layer::conv(n, i, 8, k, (1, 1), p, Activation::Relu)
+    }
+
+    #[test]
+    fn chain_partitions_into_singletons_when_d_large() {
+        // A chain of 1x1 convs has zero redundancy everywhere; any
+        // arrangement achieves F=0 — check pieces cover the graph in
+        // topological order.
+        let layers = vec![
+            Layer::input("in"),
+            conv("a", 0, (1, 1), (0, 0)),
+            conv("b", 1, (1, 1), (0, 0)),
+            conv("c", 2, (1, 1), (0, 0)),
+        ];
+        let g = ModelGraph::new("c", (3, 16, 16), layers).unwrap();
+        let r = partition(&g, 5, None).unwrap();
+        assert_eq!(r.max_redundancy, 0.0);
+        let flat: Vec<usize> = r.pieces.iter().flatten().copied().collect();
+        let mut sorted = flat.clone();
+        sorted.sort();
+        assert_eq!(sorted, vec![0, 1, 2, 3]);
+        // chain property: piece k's members all precede piece k+1's
+        for w in r.pieces.windows(2) {
+            assert!(w[0].iter().max() < w[1].iter().min());
+        }
+    }
+
+    #[test]
+    fn fig6_unbalanced_block_split() {
+        // The paper's Fig. 6: a 1x7 conv followed by a 7x1 conv. Fusing
+        // them into one piece costs 1x7-halo recompute; Algorithm 1 must
+        // split them (F = 0: neither single layer has redundancy).
+        let layers = vec![
+            Layer::input("in"),
+            conv("a_1x7", 0, (1, 7), (0, 3)),
+            conv("b_7x1", 1, (7, 1), (3, 0)),
+        ];
+        let g = ModelGraph::new("fig6", (3, 28, 28), layers).unwrap();
+        let r = partition(&g, 5, None).unwrap();
+        assert_eq!(r.max_redundancy, 0.0, "split pieces have zero redundancy");
+        assert!(r.pieces.len() >= 2, "1x7 and 7x1 must not fuse: {:?}", r.pieces);
+        let p_of = |id: usize| r.pieces.iter().position(|p| p.contains(&id)).unwrap();
+        assert_ne!(p_of(1), p_of(2));
+    }
+
+    #[test]
+    fn pieces_are_chain_ordered_on_dag() {
+        // Branchy graph: every piece must connect only to its neighbours.
+        let g = modelzoo::synthetic_graph(3, 12);
+        let r = partition(&g, 5, None).unwrap();
+        let piece_of: std::collections::HashMap<usize, usize> = r
+            .pieces
+            .iter()
+            .enumerate()
+            .flat_map(|(k, p)| p.iter().map(move |&id| (id, k)))
+            .collect();
+        for (id, &k) in &piece_of {
+            for &c in g.consumers(*id) {
+                let kc = piece_of[&c];
+                assert!(
+                    kc == k || kc == k + 1,
+                    "edge {id}->{c} jumps pieces {k}->{kc}: not a chain"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn diameter_bound_limits_pieces() {
+        let g = modelzoo::synthetic_chain(12);
+        let r = partition(&g, 3, None).unwrap();
+        for p in &r.pieces {
+            let seg = crate::graph::Segment::from_ids(p.iter().copied());
+            assert!(seg.diameter(&g) <= 3);
+        }
+    }
+
+    #[test]
+    fn dp_beats_block_as_layer_on_inception_like_block() {
+        // Inception-C-like block with unbalanced kernels: partitioning
+        // must achieve strictly lower max-redundancy than whole-block.
+        let layers = vec![
+            Layer::input("in"),
+            conv("stem", 0, (1, 1), (0, 0)),
+            conv("b1_1x7", 1, (1, 7), (0, 3)),
+            conv("b1_7x1", 2, (7, 1), (3, 0)),
+            conv("b2_1x1", 1, (1, 1), (0, 0)),
+            Layer::concat("cat", vec![3, 4]),
+        ];
+        let g = ModelGraph::new("incp", (3, 17, 17), layers).unwrap();
+        let whole: Vec<usize> = (0..g.n_layers()).collect();
+        let block_c = crate::cost::piece_redundancy(&g, &whole, 2);
+        let r = partition(&g, 5, None).unwrap();
+        assert!(
+            r.max_redundancy < block_c,
+            "DP {} must beat block-as-layer {}",
+            r.max_redundancy,
+            block_c
+        );
+    }
+
+    #[test]
+    fn divide_conquer_matches_direct_on_chain() {
+        let g = modelzoo::synthetic_chain(16);
+        let direct = partition(&g, 5, None).unwrap();
+        let dc = partition_divide_conquer(&g, 5, 2, None).unwrap();
+        // Chunked result covers all layers and stays a chain.
+        let total: usize = dc.pieces.iter().map(|p| p.len()).sum();
+        assert_eq!(total, g.n_layers());
+        // The forced cut can only cost redundancy at the boundary; on a
+        // uniform chain both achieve the same piece-level F.
+        assert!((dc.max_redundancy - direct.max_redundancy).abs() < 1e-6);
+    }
+
+    #[test]
+    fn budget_aborts_cleanly() {
+        let g = modelzoo::nasnet_slice(2);
+        let res = partition(&g, 5, Some(Duration::from_millis(50)));
+        assert!(res.is_err(), "50ms must not suffice for a NASNet slice");
+    }
+}

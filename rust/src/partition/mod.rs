@@ -1,0 +1,88 @@
+//! Algorithm 1 (paper §4): orchestrate the CNN DAG into a chain of
+//! *pieces* minimising the maximum per-piece redundant FLOPs.
+//!
+//! Dynamic programming over *ending pieces* (Definition 4): the state is
+//! the remaining down-closed subgraph G; each step peels an ending piece
+//! M_E off the back, recursing on G − M_E with the state-transfer
+//! equation (Eq. 13)
+//!
+//! ```text
+//! F(G) = min over ending pieces M_E of max( F(G − M_E), C(M_E) )
+//! ```
+//!
+//! The chain constraint (§4.2) — every vertex directly connected to the
+//! previously removed piece must join the next piece — is enforced by
+//! seeding each candidate with `seed(G)` = vertices of G with a consumer
+//! outside G; because layers are removed only from the back, the seed is
+//! a function of the remaining set, so the memo key is the remaining set
+//! alone. Candidates are enumerated by a DFS that grows up-closed sets
+//! and prunes on the diameter bound d (Definition 5, default 5).
+//!
+//! [`partition_divide_conquer`] implements the §6.2.3 wrapper that makes
+//! NASNet-scale graphs (w = 8) tractable by slicing the topological order
+//! into chunks and partitioning each independently.
+
+mod algorithm1;
+
+pub use algorithm1::{partition, partition_divide_conquer, partition_universe, PartitionResult};
+
+use crate::graph::{LayerId, ModelGraph};
+
+/// Chain of pieces, input-first; `pieces[k]` holds topologically sorted
+/// layer ids. Consecutive pieces are connected exactly like the paper's
+/// Fig. 7d.
+pub type PieceChain = Vec<Vec<LayerId>>;
+
+/// The block-as-piece baseline ([6], [17] in the paper): cut the DAG
+/// only where the topological order narrows to a single crossing edge —
+/// i.e. at block boundaries. Whole Inception/Residual blocks become
+/// single pieces, which is exactly the coarse granularity the paper's
+/// Fig. 12 left column evaluates against.
+pub fn block_pieces(g: &ModelGraph) -> PieceChain {
+    let n = g.n_layers();
+    // Cut after vertex v when every edge crossing the v|v+1 boundary
+    // originates at v itself — i.e. v dominates everything after it (the
+    // Add/Concat closing a residual or Inception block is such a vertex).
+    let mut pieces = Vec::new();
+    let mut cur = Vec::new();
+    for v in 0..n {
+        cur.push(v);
+        let dominates = (0..=v).all(|u| {
+            u == v || g.consumers(u).iter().all(|&w| w <= v)
+        });
+        if dominates {
+            pieces.push(std::mem::take(&mut cur));
+        }
+    }
+    if !cur.is_empty() {
+        pieces.push(cur);
+    }
+    pieces
+}
+
+#[cfg(test)]
+mod block_tests {
+    use super::*;
+    use crate::modelzoo;
+
+    #[test]
+    fn blocks_collapse_branches() {
+        let g = modelzoo::synthetic_graph(3, 12);
+        let blocks = block_pieces(&g);
+        // stem | (whole 3-branch body + concat) | tail
+        assert!(blocks.len() <= 5, "{blocks:?}");
+        let body = blocks.iter().find(|p| p.len() > 10).expect("one big block piece");
+        assert!(body.len() >= 12);
+        // chain ordering preserved
+        for w in blocks.windows(2) {
+            assert!(w[0].iter().max() < w[1].iter().min());
+        }
+    }
+
+    #[test]
+    fn chain_blocks_are_singletons() {
+        let g = modelzoo::synthetic_chain(6);
+        let blocks = block_pieces(&g);
+        assert!(blocks.iter().all(|p| p.len() == 1));
+    }
+}

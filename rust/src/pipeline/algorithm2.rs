@@ -1,0 +1,281 @@
+//! Algorithm 2: DP for the optimal pipeline on a homogeneous cluster.
+//!
+//! State P[i][j][p] (Eq. 15): the minimum period achievable executing
+//! pieces i..=j with p devices. Either one stage (all p devices on the
+//! whole interval) or an optimal sub-pipeline on i..=s with p−m devices
+//! followed by a single stage on s+1..=j with m devices:
+//!
+//! ```text
+//! P[i][j][p] = min over i<=s<j, 1<=m<p of
+//!              max( P[i][s][p−m], Ts[s+1][j][m] )
+//! ```
+//!
+//! Solutions whose accumulated latency exceeds T_lim are pruned (the
+//! paper's Eq. 1 constraint); among equal periods the lower-latency
+//! configuration wins. Memoisation follows the paper's P/L/S/R arrays.
+
+use std::collections::HashMap;
+
+use crate::cluster::{Cluster, Device};
+use crate::cost::stage_cost;
+use crate::graph::{LayerId, ModelGraph};
+use crate::partition::PieceChain;
+
+/// Per-(i,j,p) DP entry.
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    period: f64,
+    latency: f64,
+    /// Last stage: (first piece, device count); the prefix is in
+    /// `prev`: Some((i, s, p−m)) or None when this entry is one stage.
+    last_m: usize,
+    last_s: usize, // last stage covers pieces last_s..=j
+    prev: bool,
+}
+
+/// Result of Algorithm 2.
+#[derive(Debug, Clone)]
+pub struct DpResult {
+    /// Stages over piece indices with device *counts* (homogeneous —
+    /// identities assigned later by Algorithm 3).
+    pub stages: Vec<(usize, usize, usize)>, // (first piece, last piece, device count)
+    pub period: f64,
+    pub latency: f64,
+    pub stats: DpStats,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct DpStats {
+    /// Distinct (i,j,p) sub-problems solved.
+    pub subproblems: usize,
+    /// Stage-cost evaluations (the O(nD) leaf work).
+    pub stage_evals: usize,
+}
+
+struct Dp<'a> {
+    g: &'a ModelGraph,
+    pieces: &'a PieceChain,
+    device: Device,
+    cluster: &'a Cluster,
+    t_lim: f64,
+    memo: HashMap<(usize, usize, usize), Option<Entry>>,
+    ts_cache: HashMap<(usize, usize, usize), f64>,
+    stats: DpStats,
+}
+
+impl<'a> Dp<'a> {
+    fn segment(&self, i: usize, j: usize) -> Vec<LayerId> {
+        let mut ids: Vec<LayerId> = self.pieces[i..=j].iter().flatten().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Ts[i][j][m]: single-stage cost of pieces i..=j on m devices.
+    fn ts(&mut self, i: usize, j: usize, m: usize) -> f64 {
+        if let Some(&v) = self.ts_cache.get(&(i, j, m)) {
+            return v;
+        }
+        self.stats.stage_evals += 1;
+        let seg = self.segment(i, j);
+        let devs: Vec<&Device> = (0..m).map(|_| &self.device).collect();
+        let v = stage_cost(self.g, &seg, &devs, &self.cluster.network).total;
+        self.ts_cache.insert((i, j, m), v);
+        v
+    }
+
+    /// Solve P[i][j][p]; None = infeasible under T_lim.
+    fn solve(&mut self, i: usize, j: usize, p: usize) -> Option<Entry> {
+        if let Some(e) = self.memo.get(&(i, j, p)) {
+            return *e;
+        }
+        self.stats.subproblems += 1;
+        // Option A: single stage with all p devices.
+        let single = self.ts(i, j, p);
+        let mut best = if single <= self.t_lim {
+            Some(Entry { period: single, latency: single, last_m: p, last_s: i, prev: false })
+        } else {
+            None
+        };
+        // Option B: split at s, m devices on the tail stage.
+        if j > i && p > 1 {
+            for s in i..j {
+                for m in 1..p {
+                    let tail = self.ts(s + 1, j, m);
+                    if tail > self.t_lim {
+                        continue;
+                    }
+                    let Some(head) = self.solve(i, s, p - m) else { continue };
+                    let latency = head.latency + tail;
+                    if latency > self.t_lim {
+                        continue;
+                    }
+                    let period = head.period.max(tail);
+                    let better = match &best {
+                        None => true,
+                        Some(b) => {
+                            period < b.period - 1e-15
+                                || (period <= b.period + 1e-15 && latency < b.latency - 1e-15)
+                        }
+                    };
+                    if better {
+                        best = Some(Entry { period, latency, last_m: m, last_s: s + 1, prev: true });
+                    }
+                }
+            }
+        }
+        self.memo.insert((i, j, p), best);
+        best
+    }
+}
+
+/// Run Algorithm 2: optimal pipeline for `pieces` on the (homogeneous)
+/// `cluster` under latency cap `t_lim`.
+pub fn dp_pipeline(
+    g: &ModelGraph,
+    pieces: &PieceChain,
+    cluster: &Cluster,
+    t_lim: f64,
+) -> anyhow::Result<DpResult> {
+    anyhow::ensure!(!pieces.is_empty(), "empty piece chain");
+    anyhow::ensure!(!cluster.is_empty(), "empty cluster");
+    let mut dp = Dp {
+        g,
+        pieces,
+        device: cluster.devices[0].clone(),
+        cluster,
+        t_lim,
+        memo: HashMap::new(),
+        ts_cache: HashMap::new(),
+        stats: DpStats::default(),
+    };
+    let l = pieces.len();
+    let d = cluster.len();
+    let best = dp
+        .solve(0, l - 1, d)
+        .ok_or_else(|| anyhow::anyhow!("no pipeline satisfies T_lim = {t_lim}"))?;
+    // BuildStrategy: unwind the R/S arrays.
+    let mut stages = Vec::new();
+    let (i, mut j, mut p) = (0usize, l - 1, d);
+    loop {
+        let e = dp.solve(i, j, p).unwrap();
+        stages.push((e.last_s, j, e.last_m));
+        if !e.prev {
+            break;
+        }
+        j = e.last_s - 1;
+        p -= e.last_m;
+    }
+    stages.reverse();
+    Ok(DpResult { stages, period: best.period, latency: best.latency, stats: dp.stats })
+}
+
+/// Materialise piece-interval stages into layer segments (helper shared
+/// with Algorithm 3 and the baselines).
+pub fn stages_to_segments(pieces: &PieceChain, stages: &[(usize, usize, usize)]) -> Vec<Vec<LayerId>> {
+    stages
+        .iter()
+        .map(|&(i, j, _)| {
+            let mut ids: Vec<LayerId> = pieces[i..=j].iter().flatten().copied().collect();
+            ids.sort_unstable();
+            ids
+        })
+        .collect()
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modelzoo;
+    use crate::partition;
+
+    fn chain_pieces(g: &ModelGraph) -> PieceChain {
+        partition::partition(g, 5, None).unwrap().pieces
+    }
+
+    #[test]
+    fn single_device_single_stage() {
+        let g = modelzoo::synthetic_chain(8);
+        let pieces = chain_pieces(&g);
+        let c = Cluster::homogeneous_rpi(1, 1.0);
+        let r = dp_pipeline(&g, &pieces, &c, f64::INFINITY).unwrap();
+        assert_eq!(r.stages.len(), 1);
+        assert_eq!(r.stages[0].2, 1);
+        assert!((r.period - r.latency).abs() < 1e-12);
+    }
+
+    #[test]
+    fn more_devices_reduce_period() {
+        let g = modelzoo::synthetic_chain(12);
+        let pieces = chain_pieces(&g);
+        let mut prev = f64::INFINITY;
+        for d in [1usize, 2, 4, 8] {
+            let c = Cluster::homogeneous_rpi(d, 1.0);
+            let r = dp_pipeline(&g, &pieces, &c, f64::INFINITY).unwrap();
+            assert!(
+                r.period <= prev + 1e-12,
+                "period must not grow with devices: {} devs -> {}",
+                d,
+                r.period
+            );
+            prev = r.period;
+        }
+    }
+
+    #[test]
+    fn devices_conserved_and_stages_contiguous() {
+        let g = modelzoo::vgg16();
+        let pieces = chain_pieces(&g);
+        let c = Cluster::homogeneous_rpi(6, 1.0);
+        let r = dp_pipeline(&g, &pieces, &c, f64::INFINITY).unwrap();
+        let total: usize = r.stages.iter().map(|s| s.2).sum();
+        assert_eq!(total, 6, "every device must be used: {:?}", r.stages);
+        assert_eq!(r.stages[0].0, 0);
+        assert_eq!(r.stages.last().unwrap().1, pieces.len() - 1);
+        for w in r.stages.windows(2) {
+            assert_eq!(w[0].1 + 1, w[1].0, "stages must tile the chain");
+        }
+    }
+
+    #[test]
+    fn t_lim_constrains_latency() {
+        let g = modelzoo::synthetic_chain(12);
+        let pieces = chain_pieces(&g);
+        let c = Cluster::homogeneous_rpi(4, 1.0);
+        let free = dp_pipeline(&g, &pieces, &c, f64::INFINITY).unwrap();
+        // Capping at the unconstrained optimum's own latency must stay
+        // feasible and respect the cap.
+        let capped = dp_pipeline(&g, &pieces, &c, free.latency).unwrap();
+        assert!(capped.latency <= free.latency + 1e-12);
+        // A tighter cap either errors or trades period for latency.
+        match dp_pipeline(&g, &pieces, &c, free.latency * 0.9) {
+            Ok(tight) => {
+                assert!(tight.latency <= free.latency * 0.9 + 1e-12);
+                assert!(tight.period >= free.period - 1e-12, "tighter cap cannot beat free period");
+            }
+            Err(_) => {} // infeasible is a legal outcome
+        }
+        // An absurd cap is infeasible.
+        assert!(dp_pipeline(&g, &pieces, &c, 1e-12).is_err());
+    }
+
+    #[test]
+    fn pipeline_beats_fused_single_stage_on_vgg() {
+        // The paper's core claim (Fig. 13): with enough devices, the
+        // pipeline's period beats all-devices-one-stage fused execution.
+        let g = modelzoo::vgg16();
+        let pieces = chain_pieces(&g);
+        let c = Cluster::homogeneous_rpi(8, 1.0);
+        let r = dp_pipeline(&g, &pieces, &c, f64::INFINITY).unwrap();
+        // Fused-all = Ts over the whole chain with 8 devices:
+        let seg: Vec<usize> = (0..g.n_layers()).collect();
+        let devs: Vec<&Device> = c.devices.iter().collect();
+        let fused = stage_cost(&g, &seg, &devs, &c.network).total;
+        assert!(
+            r.period < fused,
+            "pipeline period {} must beat fused {}",
+            r.period,
+            fused
+        );
+    }
+}

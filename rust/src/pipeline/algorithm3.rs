@@ -1,0 +1,143 @@
+//! Algorithm 3: adapt the homogeneous stage set S′ to the real
+//! heterogeneous cluster.
+//!
+//! Keep each stage's model segment; re-assign physical devices greedily:
+//! sort devices by capacity ϑ(d_k) descending, and hand each to the stage
+//! with the highest remaining average compute requirement Θ′/|D′|
+//! (Eq. 16). Once a stage is full, its intra-stage feature partition F^k
+//! is re-balanced proportionally to the assigned devices' capacities
+//! (`cost::proportional_splits` — the divide-and-conquer adjustment).
+
+use super::algorithm2::stages_to_segments;
+use super::plan::{PipelinePlan, Stage};
+use crate::cluster::Cluster;
+use crate::cost::ideal_segment_flops;
+use crate::graph::ModelGraph;
+use crate::partition::PieceChain;
+
+/// Map Algorithm 2's `(first, last, count)` stages onto the real cluster.
+pub fn adapt_heterogeneous(
+    g: &ModelGraph,
+    pieces: &PieceChain,
+    dp_stages: &[(usize, usize, usize)],
+    cluster: &Cluster,
+) -> PipelinePlan {
+    let segments = stages_to_segments(pieces, dp_stages);
+    let n_stages = segments.len();
+    // Θ′ per stage: the segment's compute requirement (homogeneous split
+    // keeps per-device share Θ′/|D′|).
+    let theta: Vec<f64> = segments.iter().map(|s| ideal_segment_flops(g, s)).collect();
+    let mut slots: Vec<usize> = dp_stages.iter().map(|&(_, _, m)| m).collect();
+    let mut assigned: Vec<Vec<usize>> = vec![Vec::new(); n_stages];
+
+    // Devices by capacity, fastest first.
+    let mut order: Vec<usize> = (0..cluster.len()).collect();
+    order.sort_by(|&a, &b| {
+        cluster.devices[b]
+            .flops
+            .partial_cmp(&cluster.devices[a].flops)
+            .unwrap()
+    });
+
+    for &dev in &order {
+        // Stage with maximum remaining average requirement Θ′/|D′|.
+        let Some(best) = (0..n_stages)
+            .filter(|&s| slots[s] > 0)
+            .max_by(|&a, &b| {
+                let ra = theta[a] / slots[a] as f64;
+                let rb = theta[b] / slots[b] as f64;
+                ra.partial_cmp(&rb).unwrap()
+            })
+        else {
+            break; // all slots filled (cannot happen: slots sum = |D|)
+        };
+        assigned[best].push(dev);
+        slots[best] -= 1;
+    }
+
+    let stages = dp_stages
+        .iter()
+        .zip(segments)
+        .zip(assigned)
+        .map(|((&(i, j, _), layers), devices)| Stage { pieces: (i, j), layers, devices })
+        .collect();
+    PipelinePlan { stages }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modelzoo;
+    use crate::partition;
+    use crate::pipeline::dp_pipeline;
+
+    fn setup() -> (ModelGraph, PieceChain) {
+        let g = modelzoo::vgg16();
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        (g, pieces)
+    }
+
+    #[test]
+    fn all_devices_assigned_exactly_once() {
+        let (g, pieces) = setup();
+        let cluster = Cluster::paper_heterogeneous();
+        let dp = dp_pipeline(&g, &pieces, &cluster.homogenized(), f64::INFINITY).unwrap();
+        let plan = adapt_heterogeneous(&g, &pieces, &dp.stages, &cluster);
+        let mut all: Vec<usize> = plan.stages.iter().flat_map(|s| s.devices.clone()).collect();
+        all.sort();
+        assert_eq!(all, (0..cluster.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fastest_device_goes_to_heaviest_stage() {
+        let (g, pieces) = setup();
+        let cluster = Cluster::paper_heterogeneous(); // device 0 = fastest TX2
+        let dp = dp_pipeline(&g, &pieces, &cluster.homogenized(), f64::INFINITY).unwrap();
+        let plan = adapt_heterogeneous(&g, &pieces, &dp.stages, &cluster);
+        let theta: Vec<f64> = plan
+            .stages
+            .iter()
+            .map(|s| ideal_segment_flops(&g, &s.layers) / s.devices.len() as f64)
+            .collect();
+        let heaviest = (0..theta.len())
+            .max_by(|&a, &b| theta[a].partial_cmp(&theta[b]).unwrap())
+            .unwrap();
+        assert!(
+            plan.stages[heaviest].devices.contains(&0),
+            "fastest device must sit in the heaviest stage: {:?}",
+            plan.stages.iter().map(|s| &s.devices).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn heterogeneous_adaptation_improves_over_arbitrary_assignment() {
+        let (g, pieces) = setup();
+        let cluster = Cluster::paper_heterogeneous();
+        let dp = dp_pipeline(&g, &pieces, &cluster.homogenized(), f64::INFINITY).unwrap();
+        let plan = adapt_heterogeneous(&g, &pieces, &dp.stages, &cluster);
+        let adapted = plan.cost(&g, &cluster).period;
+        // Adversarial assignment: reverse the greedy order.
+        let mut rev_stages = plan.stages.clone();
+        let mut all: Vec<usize> = rev_stages.iter().flat_map(|s| s.devices.clone()).collect();
+        all.sort_by(|&a, &b| {
+            cluster.devices[a].flops.partial_cmp(&cluster.devices[b].flops).unwrap()
+        });
+        let mut iter = all.into_iter();
+        // Heaviest-first stage order refilled with slowest devices.
+        let theta: Vec<f64> = rev_stages
+            .iter()
+            .map(|s| ideal_segment_flops(&g, &s.layers) / s.devices.len() as f64)
+            .collect();
+        let mut stage_order: Vec<usize> = (0..rev_stages.len()).collect();
+        stage_order.sort_by(|&a, &b| theta[b].partial_cmp(&theta[a]).unwrap());
+        for &si in &stage_order {
+            let n = rev_stages[si].devices.len();
+            rev_stages[si].devices = (&mut iter).take(n).collect();
+        }
+        let adversarial = PipelinePlan { stages: rev_stages }.cost(&g, &cluster).period;
+        assert!(
+            adapted <= adversarial + 1e-12,
+            "greedy {adapted} must beat adversarial {adversarial}"
+        );
+    }
+}

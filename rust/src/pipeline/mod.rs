@@ -1,0 +1,31 @@
+//! PICO's pipeline planner (paper §5): Algorithm 2 (DP over piece
+//! intervals × device counts for the homogenised cluster) followed by
+//! Algorithm 3 (greedy adaptation to the real heterogeneous devices).
+
+mod algorithm2;
+mod algorithm3;
+mod plan;
+mod rebalance;
+
+pub use algorithm2::{dp_pipeline, DpResult, DpStats};
+pub use algorithm3::adapt_heterogeneous;
+pub use plan::{PipelinePlan, Stage};
+pub use rebalance::{rebalance, RebalanceReport};
+
+use crate::cluster::Cluster;
+use crate::graph::ModelGraph;
+use crate::partition::PieceChain;
+
+/// Full PICO planning: Algorithm 2 on the homogenised twin of `cluster`,
+/// then Algorithm 3 to map stages onto the real devices. `t_lim` is the
+/// Eq. (1) latency cap (`f64::INFINITY` = unconstrained).
+pub fn plan(
+    g: &ModelGraph,
+    pieces: &PieceChain,
+    cluster: &Cluster,
+    t_lim: f64,
+) -> anyhow::Result<PipelinePlan> {
+    let homo = cluster.homogenized();
+    let dp = dp_pipeline(g, pieces, &homo, t_lim)?;
+    Ok(adapt_heterogeneous(g, pieces, &dp.stages, cluster))
+}

@@ -1,0 +1,91 @@
+//! The pipeline plan: the output of the planner, the input of the
+//! simulator and the serving coordinator.
+
+use crate::cluster::Cluster;
+use crate::cost::{pipeline_cost, PipelineCost};
+use crate::graph::{LayerId, ModelGraph};
+use crate::json::{obj, Value};
+
+/// One pipeline stage S = (M, D): a contiguous piece interval executed
+/// over a set of devices (feature split proportional to capacity).
+#[derive(Debug, Clone)]
+pub struct Stage {
+    /// Piece interval [first, last] (indices into the piece chain).
+    pub pieces: (usize, usize),
+    /// Flattened layer ids of the segment, topologically sorted.
+    pub layers: Vec<LayerId>,
+    /// Cluster device indices assigned to this stage.
+    pub devices: Vec<usize>,
+}
+
+/// A full pipeline configuration `S` (Eq. 1).
+#[derive(Debug, Clone)]
+pub struct PipelinePlan {
+    pub stages: Vec<Stage>,
+}
+
+impl PipelinePlan {
+    /// Evaluate the plan's cost model numbers (Eq. 12).
+    pub fn cost(&self, g: &ModelGraph, cluster: &Cluster) -> PipelineCost {
+        let stages: Vec<(Vec<LayerId>, Vec<usize>)> = self
+            .stages
+            .iter()
+            .map(|s| (s.layers.clone(), s.devices.clone()))
+            .collect();
+        pipeline_cost(g, cluster, &stages)
+    }
+
+    /// Throughput upper bound: 1 / period (inferences per second).
+    pub fn throughput(&self, g: &ModelGraph, cluster: &Cluster) -> f64 {
+        1.0 / self.cost(g, cluster).period
+    }
+
+    /// Build the plan encoded in an AOT `pipeline/plan.json` (the tile
+    /// shapes of its stages are exactly the artifact set python exported;
+    /// device ids are assigned sequentially). Clusters driving this plan
+    /// should be homogeneous so the capacity-proportional splits reduce
+    /// to the equal row splits the artifacts were compiled for.
+    pub fn from_artifact_plan(g: &ModelGraph, plan: &Value) -> anyhow::Result<(PipelinePlan, usize)> {
+        let mut stages = Vec::new();
+        let mut next_dev = 0usize;
+        let arr = plan
+            .get("stages")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("plan.json missing stages"))?;
+        for (k, sv) in arr.iter().enumerate() {
+            let mut layers = Vec::new();
+            for lv in sv.get("layers").as_arr().unwrap_or(&[]) {
+                let name = lv.as_str().ok_or_else(|| anyhow::anyhow!("bad layer name"))?;
+                layers.push(
+                    g.by_name(name).ok_or_else(|| anyhow::anyhow!("unknown layer {name}"))?,
+                );
+            }
+            layers.sort_unstable();
+            let m = sv.get("devices").as_usize().unwrap_or(1);
+            let devices: Vec<usize> = (next_dev..next_dev + m).collect();
+            next_dev += m;
+            stages.push(Stage { pieces: (k, k), layers, devices });
+        }
+        Ok((PipelinePlan { stages }, next_dev))
+    }
+
+    pub fn to_json(&self, g: &ModelGraph) -> Value {
+        let stages: Vec<Value> = self
+            .stages
+            .iter()
+            .map(|s| {
+                obj(vec![
+                    ("pieces", vec![s.pieces.0, s.pieces.1].into()),
+                    (
+                        "layers",
+                        Value::Arr(
+                            s.layers.iter().map(|&id| g.layer(id).name.as_str().into()).collect(),
+                        ),
+                    ),
+                    ("devices", s.devices.clone().into()),
+                ])
+            })
+            .collect();
+        obj(vec![("stages", Value::Arr(stages))])
+    }
+}

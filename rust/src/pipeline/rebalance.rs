@@ -1,0 +1,232 @@
+//! Stage-level rebalancing — the paper's §8 future-work direction.
+//!
+//! Algorithm 3 fixes the per-stage device *counts* to the homogeneous
+//! solution's; when capacities are extremely varied that leaves stage
+//! imbalances it cannot fix ("unable to address imbalances at the
+//! stage-level ... can result in failure if the computation capabilities
+//! of the devices are extremely varied"). This pass runs a local search
+//! on top of the Algorithm-3 plan:
+//!
+//! 1. move one device from the fastest stage to the slowest, or
+//! 2. swap a device pair between two stages, or
+//! 3. shift a piece-boundary between adjacent stages by one piece,
+//!
+//! accepting any move that strictly lowers the pipeline period (ties
+//! broken by latency), until a local optimum or `max_iters`.
+
+use crate::cluster::Cluster;
+use crate::cost::pipeline_cost;
+use crate::graph::{LayerId, ModelGraph};
+use crate::partition::PieceChain;
+use crate::pipeline::{PipelinePlan, Stage};
+
+/// Outcome of the rebalancing pass.
+#[derive(Debug, Clone)]
+pub struct RebalanceReport {
+    pub period_before: f64,
+    pub period_after: f64,
+    pub moves: usize,
+}
+
+fn plan_period(g: &ModelGraph, cluster: &Cluster, stages: &[Stage]) -> (f64, f64) {
+    let s: Vec<(Vec<LayerId>, Vec<usize>)> =
+        stages.iter().map(|st| (st.layers.clone(), st.devices.clone())).collect();
+    let c = pipeline_cost(g, cluster, &s);
+    (c.period, c.latency)
+}
+
+fn rebuild_layers(pieces: &PieceChain, first: usize, last: usize) -> Vec<LayerId> {
+    let mut ids: Vec<LayerId> = pieces[first..=last].iter().flatten().copied().collect();
+    ids.sort_unstable();
+    ids
+}
+
+/// Improve `plan` in place; returns what changed.
+pub fn rebalance(
+    g: &ModelGraph,
+    pieces: &PieceChain,
+    cluster: &Cluster,
+    plan: &mut PipelinePlan,
+    max_iters: usize,
+) -> RebalanceReport {
+    let (mut best_p, mut best_l) = plan_period(g, cluster, &plan.stages);
+    let period_before = best_p;
+    let mut moves = 0;
+    let better = |p: f64, l: f64, bp: f64, bl: f64| p < bp - 1e-15 || (p <= bp + 1e-15 && l < bl - 1e-15);
+
+    for _ in 0..max_iters {
+        let mut improved = false;
+        let n = plan.stages.len();
+
+        // Move 1: relocate one device between any stage pair.
+        'outer_move: for from in 0..n {
+            if plan.stages[from].devices.len() <= 1 {
+                continue;
+            }
+            for to in 0..n {
+                if to == from {
+                    continue;
+                }
+                for di in 0..plan.stages[from].devices.len() {
+                    let mut cand = plan.stages.clone();
+                    let dev = cand[from].devices.remove(di);
+                    cand[to].devices.push(dev);
+                    sort_by_capacity(cluster, &mut cand[to].devices);
+                    let (p, l) = plan_period(g, cluster, &cand);
+                    if better(p, l, best_p, best_l) {
+                        plan.stages = cand;
+                        best_p = p;
+                        best_l = l;
+                        moves += 1;
+                        improved = true;
+                        break 'outer_move;
+                    }
+                }
+            }
+        }
+
+        // Move 2: swap a device pair between two stages.
+        if !improved {
+            'outer_swap: for a in 0..n {
+                for b in a + 1..n {
+                    for ia in 0..plan.stages[a].devices.len() {
+                        for ib in 0..plan.stages[b].devices.len() {
+                            let mut cand = plan.stages.clone();
+                            let da = cand[a].devices[ia];
+                            let db = cand[b].devices[ib];
+                            cand[a].devices[ia] = db;
+                            cand[b].devices[ib] = da;
+                            sort_by_capacity(cluster, &mut cand[a].devices);
+                            sort_by_capacity(cluster, &mut cand[b].devices);
+                            let (p, l) = plan_period(g, cluster, &cand);
+                            if better(p, l, best_p, best_l) {
+                                plan.stages = cand;
+                                best_p = p;
+                                best_l = l;
+                                moves += 1;
+                                improved = true;
+                                break 'outer_swap;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // Move 3: shift a piece boundary between adjacent stages.
+        if !improved {
+            'outer_shift: for s in 0..n.saturating_sub(1) {
+                for dir in [-1isize, 1] {
+                    let (a0, a1) = plan.stages[s].pieces;
+                    let (b0, b1) = plan.stages[s + 1].pieces;
+                    let (na1, nb0) = if dir > 0 {
+                        if b0 == b1 {
+                            continue; // next stage would become empty
+                        }
+                        (a1 + 1, b0 + 1)
+                    } else {
+                        if a0 == a1 {
+                            continue;
+                        }
+                        (a1 - 1, b0 - 1)
+                    };
+                    let mut cand = plan.stages.clone();
+                    cand[s].pieces = (a0, na1);
+                    cand[s].layers = rebuild_layers(pieces, a0, na1);
+                    cand[s + 1].pieces = (nb0, b1);
+                    cand[s + 1].layers = rebuild_layers(pieces, nb0, b1);
+                    let (p, l) = plan_period(g, cluster, &cand);
+                    if better(p, l, best_p, best_l) {
+                        plan.stages = cand;
+                        best_p = p;
+                        best_l = l;
+                        moves += 1;
+                        improved = true;
+                        break 'outer_shift;
+                    }
+                }
+            }
+        }
+
+        if !improved {
+            break;
+        }
+    }
+    RebalanceReport { period_before, period_after: best_p, moves }
+}
+
+fn sort_by_capacity(cluster: &Cluster, devices: &mut [usize]) {
+    devices.sort_by(|&a, &b| {
+        cluster.devices[b].flops.partial_cmp(&cluster.devices[a].flops).unwrap()
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Device, Network};
+    use crate::modelzoo;
+    use crate::partition;
+    use crate::pipeline;
+
+    #[test]
+    fn rebalance_never_hurts() {
+        let g = modelzoo::vgg16();
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        for seed in 0..4u64 {
+            let mut rng = crate::util::Rng::new(seed + 1);
+            let cluster = Cluster::random(6, &mut rng);
+            let mut plan = pipeline::plan(&g, &pieces, &cluster, f64::INFINITY).unwrap();
+            let before = plan.cost(&g, &cluster).period;
+            let rep = rebalance(&g, &pieces, &cluster, &mut plan, 50);
+            assert!(rep.period_after <= before + 1e-12);
+            assert!((rep.period_before - before).abs() < 1e-12);
+            // plan still valid: devices conserved
+            let mut devs: Vec<usize> = plan.stages.iter().flat_map(|s| s.devices.clone()).collect();
+            devs.sort();
+            assert_eq!(devs, (0..cluster.len()).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn rebalance_fixes_extreme_heterogeneity() {
+        // The §8 failure case: one enormous device + many weak ones.
+        let g = modelzoo::vgg16();
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        let mut devs = vec![Device::tx2(0, 2.2)];
+        devs[0].flops *= 8.0; // extreme
+        for i in 1..6 {
+            devs.push(Device::rpi(i, 0.6));
+        }
+        let cluster = Cluster::new(devs, Network::wifi_50mbps());
+        let mut plan = pipeline::plan(&g, &pieces, &cluster, f64::INFINITY).unwrap();
+        let before = plan.cost(&g, &cluster).period;
+        let rep = rebalance(&g, &pieces, &cluster, &mut plan, 100);
+        assert!(
+            rep.period_after < before * 0.98 || rep.moves == 0,
+            "extreme heterogeneity should leave room to improve: {} -> {} ({} moves)",
+            before,
+            rep.period_after,
+            rep.moves
+        );
+    }
+
+    #[test]
+    fn boundary_shift_keeps_stages_contiguous() {
+        let g = modelzoo::synthetic_chain(12);
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        let cluster = Cluster::paper_heterogeneous();
+        let mut plan = pipeline::plan(&g, &pieces, &cluster, f64::INFINITY).unwrap();
+        rebalance(&g, &pieces, &cluster, &mut plan, 50);
+        assert_eq!(plan.stages[0].pieces.0, 0);
+        assert_eq!(plan.stages.last().unwrap().pieces.1, pieces.len() - 1);
+        for w in plan.stages.windows(2) {
+            assert_eq!(w[0].pieces.1 + 1, w[1].pieces.0);
+        }
+        // layers match pieces
+        for s in &plan.stages {
+            let expect = rebuild_layers(&pieces, s.pieces.0, s.pieces.1);
+            assert_eq!(s.layers, expect);
+        }
+    }
+}

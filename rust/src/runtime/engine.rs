@@ -1,0 +1,175 @@
+//! PJRT engine: load + execute the AOT HLO-text artifacts.
+//!
+//! `python/compile/aot.py` lowers every (layer × tile-shape) the default
+//! pipeline plan needs — plus whole-model executables — to HLO *text*
+//! (xla_extension 0.5.1 rejects jax≥0.5 serialized protos, see
+//! DESIGN.md). This module compiles them once on the PJRT CPU client and
+//! caches the executables; the request path is pure rust + XLA.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use super::tensor::Tensor;
+use crate::json::Value;
+
+/// Artifact key, matching `python/compile/aot.py::artifact_key`.
+pub fn artifact_key(layer: &str, in_rows: usize, pad_top: usize, pad_bottom: usize) -> String {
+    format!("{layer}__r{in_rows}_pt{pad_top}_pb{pad_bottom}")
+}
+
+/// Dense-head key (full feature, no tiling).
+pub fn dense_key(layer: &str) -> String {
+    format!("{layer}__full")
+}
+
+/// One compiled executable.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Run on one input tensor; artifacts are lowered with
+    /// `return_tuple=True`, so unwrap the 1-tuple.
+    pub fn run(&self, x: &Tensor) -> anyhow::Result<Tensor> {
+        let dims: Vec<i64> = x.dims.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(&x.data).reshape(&dims)?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let shape = out.array_shape()?;
+        let out_dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        Ok(Tensor::new(out_dims, out.to_vec::<f32>()?))
+    }
+}
+
+/// PJRT CPU engine with a compile cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: std::sync::Mutex<HashMap<PathBuf, std::sync::Arc<Executable>>>,
+}
+
+impl Engine {
+    pub fn cpu() -> anyhow::Result<Engine> {
+        Ok(Engine { client: xla::PjRtClient::cpu()?, cache: std::sync::Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO text file (cached).
+    pub fn load(&self, path: &Path) -> anyhow::Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(path) {
+            return Ok(e.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let arc = std::sync::Arc::new(Executable { exe });
+        self.cache.lock().unwrap().insert(path.to_path_buf(), arc.clone());
+        Ok(arc)
+    }
+}
+
+/// A model's pipeline artifact set: plan.json + per-key executables.
+pub struct PipelineArtifacts {
+    pub model: String,
+    dir: PathBuf,
+    /// key → relative file (from plan.json's "artifacts" map).
+    files: HashMap<String, String>,
+    pub plan: Value,
+}
+
+impl PipelineArtifacts {
+    /// Load `artifacts/<model>/pipeline/plan.json`.
+    pub fn load(artifacts_dir: &Path, model: &str) -> anyhow::Result<PipelineArtifacts> {
+        let dir = artifacts_dir.join(model).join("pipeline");
+        let plan = Value::from_file(&dir.join("plan.json"))?;
+        let mut files = HashMap::new();
+        if let Some(obj) = plan.get("artifacts").as_obj() {
+            for (k, v) in obj {
+                files.insert(
+                    k.clone(),
+                    v.as_str().ok_or_else(|| anyhow::anyhow!("bad artifact entry"))?.to_string(),
+                );
+            }
+        }
+        Ok(PipelineArtifacts {
+            model: model.to_string(),
+            dir: artifacts_dir.join(model),
+            files,
+            plan,
+        })
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.files.contains_key(key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.files.keys()
+    }
+
+    /// Resolve + compile the executable for `key`.
+    pub fn executable(&self, engine: &Engine, key: &str) -> anyhow::Result<std::sync::Arc<Executable>> {
+        let rel = self
+            .files
+            .get(key)
+            .ok_or_else(|| anyhow::anyhow!("no artifact for key {key:?} in {}", self.model))?;
+        engine.load(&self.dir.join(rel))
+    }
+
+    /// The whole-model executable (`full.hlo.txt`).
+    pub fn full_model(&self, engine: &Engine) -> anyhow::Result<std::sync::Arc<Executable>> {
+        engine.load(&self.dir.join("full.hlo.txt"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn full_model_matches_golden_io() {
+        let dir = artifacts_dir();
+        if !dir.join("tinyvgg").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let engine = Engine::cpu().unwrap();
+        let arts = PipelineArtifacts::load(&dir, "tinyvgg").unwrap();
+        let exe = arts.full_model(&engine).unwrap();
+        let x = Tensor::from_bin(&dir.join("tinyvgg/io/input.bin"), vec![3, 32, 32]).unwrap();
+        let want = Tensor::from_bin(&dir.join("tinyvgg/io/expected.bin"), vec![10]).unwrap();
+        let got = exe.run(&x).unwrap();
+        assert_eq!(got.dims, want.dims);
+        assert!(got.max_abs_diff(&want) < 1e-3, "diff {}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn pipeline_artifact_keys_resolve() {
+        let dir = artifacts_dir();
+        if !dir.join("tinyvgg").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let arts = PipelineArtifacts::load(&dir, "tinyvgg").unwrap();
+        // Keys from the default 3-stage / [2,1,1] plan (see cost::feature
+        // golden tests for the same geometry).
+        for key in [
+            "conv1__r18_pt1_pb0",
+            "conv1__r18_pt0_pb1",
+            "conv2__r17_pt1_pb0",
+            "conv3__r16_pt1_pb1",
+            "fc1__full",
+            "fc2__full",
+        ] {
+            assert!(arts.has(key), "missing artifact {key}");
+        }
+    }
+}

@@ -1,0 +1,260 @@
+//! Stage executor: one device's share of a stage segment, over either
+//! backend. This is the rust twin of `python/compile/plan.py::
+//! run_stage_tile` — the integration tests pin the two to the same
+//! numbers through the golden io vectors.
+
+use std::collections::{BTreeMap, HashMap};
+
+use super::engine::{artifact_key, dense_key, Engine, PipelineArtifacts};
+use super::reference::{self, Weights};
+use super::tensor::Tensor;
+use crate::cost::{required_rows, LayerTile};
+use crate::graph::{LayerId, ModelGraph, Op};
+
+/// Numeric backend for layer execution.
+pub enum Backend<'a> {
+    /// Pure-rust kernels with explicit weights (any shape).
+    Native { weights: &'a HashMap<LayerId, Weights> },
+    /// AOT PJRT executables (weights baked at `make artifacts` time);
+    /// only the tile shapes in the artifact manifest exist.
+    Pjrt { engine: &'a Engine, artifacts: &'a PipelineArtifacts },
+}
+
+/// Execute `segment` for one device.
+///
+/// `tiles` comes from [`crate::cost::segment_tiles`] for this device's
+/// sink split; `feeds` maps each external feed layer to the row slab
+/// covering `tiles[feed].out_iv`. Returns every in-segment layer's
+/// produced slab (callers read the sinks).
+pub fn run_stage(
+    g: &ModelGraph,
+    segment: &[LayerId],
+    tiles: &BTreeMap<LayerId, LayerTile>,
+    feeds: &HashMap<LayerId, Tensor>,
+    backend: &Backend,
+) -> anyhow::Result<HashMap<LayerId, Tensor>> {
+    // avail: layer → (tensor slab, first global row of the slab)
+    let mut avail: HashMap<LayerId, (Tensor, usize)> = HashMap::new();
+    for (&id, t) in feeds {
+        let tile = tiles
+            .get(&id)
+            .ok_or_else(|| anyhow::anyhow!("feed {} not in tile map", g.layer(id).name))?;
+        avail.insert(id, (t.clone(), tile.out_iv.0));
+    }
+    let mut out = HashMap::new();
+    for &id in segment {
+        let l = g.layer(id);
+        let tile = tiles[&id];
+        let y = match l.op {
+            Op::Conv | Op::MaxPool | Op::AvgPool => {
+                let src = l.inputs[0];
+                let (src_t, src_row0) = avail
+                    .get(&src)
+                    .ok_or_else(|| anyhow::anyhow!("{}: missing input slab", l.name))?;
+                let req = required_rows(g, id, tile.out_iv);
+                let h_src = g.shape(src).height();
+                let lo = req.0.max(0) as usize;
+                let hi = (req.1.min(h_src as isize)) as usize;
+                let slab = src_t.slice_rows(lo - src_row0, hi - src_row0);
+                match backend {
+                    Backend::Native { weights } => {
+                        let fill = if l.op == Op::MaxPool { f32::NEG_INFINITY } else { 0.0 };
+                        let padded =
+                            slab.pad(tile.pad_top, tile.pad_bottom, l.padding.1, l.padding.1, fill);
+                        if l.op == Op::Conv {
+                            let wts = weights
+                                .get(&id)
+                                .ok_or_else(|| anyhow::anyhow!("{}: missing weights", l.name))?;
+                            reference::conv2d(&padded, l, wts)
+                        } else {
+                            reference::pool2d(&padded, l)
+                        }
+                    }
+                    Backend::Pjrt { engine, artifacts } => {
+                        // Padding is baked into the artifact; feed the raw slab.
+                        let key = artifact_key(&l.name, tile.in_rows, tile.pad_top, tile.pad_bottom);
+                        artifacts.executable(engine, &key)?.run(&slab)?
+                    }
+                }
+            }
+            Op::Add | Op::Concat => {
+                let mut xs = Vec::new();
+                for &src in &l.inputs {
+                    let (src_t, src_row0) = avail
+                        .get(&src)
+                        .ok_or_else(|| anyhow::anyhow!("{}: missing input slab", l.name))?;
+                    xs.push(src_t.slice_rows(tile.out_iv.0 - src_row0, tile.out_iv.1 - src_row0));
+                }
+                if l.op == Op::Add {
+                    Tensor::add(&xs)
+                } else {
+                    Tensor::concat_channels(&xs)
+                }
+            }
+            Op::Flatten => {
+                let src = l.inputs[0];
+                let (src_t, src_row0) = &avail[&src];
+                anyhow::ensure!(
+                    *src_row0 == 0 && src_t.chw().1 == g.shape(src).height(),
+                    "{}: flatten requires the full feature",
+                    l.name
+                );
+                src_t.flatten()
+            }
+            Op::Dense => {
+                let src = l.inputs[0];
+                let (src_t, _) = &avail[&src];
+                match backend {
+                    Backend::Native { weights } => {
+                        let wts = weights
+                            .get(&id)
+                            .ok_or_else(|| anyhow::anyhow!("{}: missing weights", l.name))?;
+                        reference::dense(src_t, l, wts)
+                    }
+                    Backend::Pjrt { engine, artifacts } => {
+                        artifacts.executable(engine, &dense_key(&l.name))?.run(src_t)?
+                    }
+                }
+            }
+            // The model input can land inside the first stage's segment
+            // (Algorithm 1 puts it in the first piece): its "computation"
+            // is the feed slab itself.
+            Op::Input => feeds
+                .get(&id)
+                .cloned()
+                .ok_or_else(|| anyhow::anyhow!("input layer not fed"))?,
+        };
+        avail.insert(id, (y.clone(), tile.out_iv.0));
+        out.insert(id, y);
+    }
+    Ok(out)
+}
+
+/// Generate deterministic native weights for a whole model (rust-only
+/// runs; PJRT artifacts carry their own baked weights).
+pub fn model_weights(g: &ModelGraph, seed: u64) -> HashMap<LayerId, Weights> {
+    (0..g.n_layers())
+        .filter(|&id| matches!(g.layer(id).op, Op::Conv | Op::Dense))
+        .map(|id| {
+            let c_in = match g.layer(id).op {
+                Op::Dense => g.shape(g.layer(id).inputs[0]).elems(),
+                _ => g.in_channels(id),
+            };
+            (id, reference::random_weights(g.layer(id), c_in, seed.wrapping_add(id as u64)))
+        })
+        .collect()
+}
+
+/// Run a whole model single-device with the native backend (reference
+/// path for correctness checks and the quickstart example).
+pub fn run_full_native(
+    g: &ModelGraph,
+    weights: &HashMap<LayerId, Weights>,
+    input: &Tensor,
+) -> anyhow::Result<Tensor> {
+    let segment: Vec<LayerId> = (1..g.n_layers()).collect();
+    let sinks = crate::cost::segment_sinks(g, &segment);
+    let sink_out: BTreeMap<LayerId, (usize, usize)> = sinks
+        .iter()
+        .map(|&s| (s, (0, g.shape(s).height().max(1))))
+        .collect();
+    let tiles = crate::cost::segment_tiles(g, &segment, &sink_out);
+    let feeds: HashMap<LayerId, Tensor> = [(0usize, input.clone())].into();
+    let out = run_stage(g, &segment, &tiles, &feeds, &Backend::Native { weights })?;
+    Ok(out[&g.output_id()].clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::{row_splits, segment_tiles};
+    use crate::modelzoo;
+
+    /// The core runtime invariant (paper Eq. 2-3): executing a stage
+    /// split across devices and stitching the sink slabs reproduces the
+    /// unsplit computation bit-exactly (same fp32 op order per tile).
+    fn check_split_equals_whole(name: &str, model: crate::graph::ModelGraph, splits: &[usize]) {
+        let g = model;
+        let weights = model_weights(&g, 7);
+        let mut rng = crate::util::Rng::new(99);
+        let (c, h, w) = (g.input_shape.0, g.input_shape.1, g.input_shape.2);
+        let input = Tensor::new(
+            vec![c, h, w],
+            (0..c * h * w).map(|_| rng.normal() as f32).collect(),
+        );
+        let whole = run_full_native(&g, &weights, &input).unwrap();
+
+        // Split every spatial prefix stage `parts` ways at the last
+        // spatial layer, run per-device, stitch, then run the head.
+        for &parts in splits {
+            let segment: Vec<LayerId> = (1..g.n_layers()).collect();
+            let sinks = crate::cost::segment_sinks(&g, &segment);
+            // single-sink models only in this helper
+            assert_eq!(sinks.len(), 1);
+            let sink = sinks[0];
+            let h_sink = g.shape(sink).height().max(1);
+            if h_sink < parts {
+                continue;
+            }
+            let mut slabs = Vec::new();
+            for iv in row_splits(h_sink, parts) {
+                let sink_out: BTreeMap<LayerId, (usize, usize)> = [(sink, iv)].into();
+                let tiles = segment_tiles(&g, &segment, &sink_out);
+                let in_iv = tiles[&0].out_iv;
+                let feeds: HashMap<LayerId, Tensor> =
+                    [(0usize, input.slice_rows(in_iv.0, in_iv.1))].into();
+                let out = run_stage(&g, &segment, &tiles, &feeds, &Backend::Native {
+                    weights: &weights,
+                })
+                .unwrap();
+                slabs.push(out[&sink].clone());
+            }
+            let stitched = if g.shape(sink).height() > 0 && slabs[0].dims.len() == 3 {
+                Tensor::stitch_rows(&slabs)
+            } else {
+                slabs[0].clone()
+            };
+            assert!(
+                stitched.max_abs_diff(&whole) < 1e-4,
+                "{name} x{parts}: diff {}",
+                stitched.max_abs_diff(&whole)
+            );
+        }
+    }
+
+    #[test]
+    fn split_equals_whole_chain() {
+        // Chain model without a flat head: sink is the last conv.
+        let g = modelzoo::synthetic_chain(6);
+        check_split_equals_whole("chain6", g, &[2, 3, 4]);
+    }
+
+    #[test]
+    fn split_equals_whole_branchy() {
+        let g = modelzoo::synthetic_graph(3, 9);
+        check_split_equals_whole("graph(3,9)", g, &[2, 4]);
+    }
+
+    #[test]
+    fn full_native_runs_zoo_model() {
+        // Smoke: run tiny inputs through a real DAG (resnet-style adds).
+        let g = crate::graph::ModelGraph::new(
+            "mini",
+            (3, 16, 16),
+            vec![
+                crate::graph::Layer::input("in"),
+                crate::graph::Layer::conv("stem", 0, 8, (3, 3), (1, 1), (1, 1), crate::graph::Activation::Relu),
+                crate::graph::Layer::conv("c1", 1, 8, (3, 3), (1, 1), (1, 1), crate::graph::Activation::Linear),
+                crate::graph::Layer::add("add", vec![2, 1]),
+                crate::graph::Layer::maxpool("p", 3, (2, 2), (2, 2), (0, 0)),
+                crate::graph::Layer::flatten("f", 4),
+                crate::graph::Layer::dense("d", 5, 10, crate::graph::Activation::Linear),
+            ],
+        )
+        .unwrap();
+        let weights = model_weights(&g, 3);
+        let input = Tensor::zeros(vec![3, 16, 16]);
+        let y = run_full_native(&g, &weights, &input).unwrap();
+        assert_eq!(y.dims, vec![10]);
+    }
+}

@@ -1,0 +1,23 @@
+//! Request-path runtime: real tensor execution behind the coordinator.
+//!
+//! * [`tensor`] — CHW f32 tensors with the overlap-aware row split/stitch
+//!   the paper implements "directly on the frame tensor data in memory"
+//!   (§5.3).
+//! * [`reference`] — pure-rust conv/pool/dense executor: numerics for
+//!   arbitrary tile shapes, and the oracle the PJRT path is checked
+//!   against.
+//! * [`engine`] — PJRT engine: loads the HLO-text artifacts produced by
+//!   `python/compile/aot.py` (L2/L1) and executes them on the XLA CPU
+//!   client. Python never runs here — artifacts are ahead-of-time.
+//! * [`executor`] — stage executor: drives one device's share of a stage
+//!   segment (tile geometry from [`crate::cost::segment_tiles`]) through
+//!   either backend.
+
+pub mod engine;
+pub mod executor;
+pub mod reference;
+pub mod tensor;
+
+pub use engine::{artifact_key, Engine, PipelineArtifacts};
+pub use executor::{run_stage, Backend};
+pub use tensor::Tensor;

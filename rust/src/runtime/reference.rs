@@ -1,0 +1,205 @@
+//! Pure-rust layer executor: the runtime's numeric oracle and the
+//! fallback backend for tile shapes without a pre-compiled artifact.
+//!
+//! Mirrors `python/compile/kernels/ref.py` exactly (same conventions:
+//! CHW f32, OIHW weights, explicit padding, count-include-pad avgpool).
+
+use super::tensor::Tensor;
+use crate::graph::{Layer, Op};
+
+#[cfg(test)]
+use crate::graph::Activation;
+
+/// Layer weights (conv: OIHW + bias; dense: O×F + bias).
+#[derive(Debug, Clone, Default)]
+pub struct Weights {
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+/// Deterministic He-style weights matching `python/compile/model.py::
+/// init_params` *shape-wise* (values differ — artifact numerics come
+/// from the baked HLO constants; this generator serves rust-only runs).
+pub fn random_weights(l: &Layer, c_in: usize, seed: u64) -> Weights {
+    let mut rng = crate::util::Rng::new(seed ^ 0x9E3779B97F4A7C15);
+    match l.op {
+        Op::Conv => {
+            let (kh, kw) = l.kernel;
+            let cg = c_in / l.groups;
+            let fan_in = (cg * kh * kw) as f64;
+            let scale = (2.0 / fan_in).sqrt();
+            let n = l.out_channels * cg * kh * kw;
+            Weights {
+                w: (0..n).map(|_| (rng.normal() * scale) as f32).collect(),
+                b: (0..l.out_channels).map(|_| (rng.normal() * 0.01) as f32).collect(),
+            }
+        }
+        Op::Dense => {
+            let f = c_in;
+            let scale = (2.0 / f as f64).sqrt();
+            Weights {
+                w: (0..l.out_channels * f).map(|_| (rng.normal() * scale) as f32).collect(),
+                b: (0..l.out_channels).map(|_| (rng.normal() * 0.01) as f32).collect(),
+            }
+        }
+        _ => Weights::default(),
+    }
+}
+
+/// conv2d: x (C_in, H, W), weights OIHW, explicit pre-applied padding
+/// expected (callers pad via `Tensor::pad`). Grouped conv supported.
+pub fn conv2d(x: &Tensor, l: &Layer, wts: &Weights) -> Tensor {
+    let (c_in, h, w) = x.chw();
+    let (kh, kw) = l.kernel;
+    let (sh, sw) = l.stride;
+    let c_out = l.out_channels;
+    let groups = l.groups;
+    assert!(c_in % groups == 0 && c_out % groups == 0, "bad groups");
+    let cg = c_in / groups;
+    let og = c_out / groups;
+    assert!(h >= kh && w >= kw, "window {kh}x{kw} exceeds input {h}x{w}");
+    let ho = (h - kh) / sh + 1;
+    let wo = (w - kw) / sw + 1;
+    assert_eq!(wts.w.len(), c_out * cg * kh * kw, "weight shape");
+    let mut out = vec![0.0f32; c_out * ho * wo];
+    for oc in 0..c_out {
+        let g = oc / og;
+        let bias = wts.b.get(oc).copied().unwrap_or(0.0);
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let mut acc = bias;
+                for ic in 0..cg {
+                    let xc = g * cg + ic;
+                    for dy in 0..kh {
+                        let xrow = oy * sh + dy;
+                        let xbase = xc * h * w + xrow * w + ox * sw;
+                        let wbase = ((oc * cg + ic) * kh + dy) * kw;
+                        for dx in 0..kw {
+                            acc += x.data[xbase + dx] * wts.w[wbase + dx];
+                        }
+                    }
+                }
+                out[oc * ho * wo + oy * wo + ox] = l.activation.apply(acc);
+            }
+        }
+    }
+    Tensor::new(vec![c_out, ho, wo], out)
+}
+
+/// Max/avg pooling (padding pre-applied by the caller: −inf fill for max,
+/// 0 for avg with count-include-pad semantics — same as ref.py).
+pub fn pool2d(x: &Tensor, l: &Layer) -> Tensor {
+    let (c, h, w) = x.chw();
+    let (kh, kw) = l.kernel;
+    let (sh, sw) = l.stride;
+    let is_max = l.op == Op::MaxPool;
+    assert!(h >= kh && w >= kw, "pool window exceeds input");
+    let ho = (h - kh) / sh + 1;
+    let wo = (w - kw) / sw + 1;
+    let mut out = vec![0.0f32; c * ho * wo];
+    for ch in 0..c {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let mut acc = if is_max { f32::NEG_INFINITY } else { 0.0 };
+                for dy in 0..kh {
+                    let base = ch * h * w + (oy * sh + dy) * w + ox * sw;
+                    for dx in 0..kw {
+                        let v = x.data[base + dx];
+                        acc = if is_max { acc.max(v) } else { acc + v };
+                    }
+                }
+                out[ch * ho * wo + oy * wo + ox] =
+                    if is_max { acc } else { acc / (kh * kw) as f32 };
+            }
+        }
+    }
+    Tensor::new(vec![c, ho, wo], out)
+}
+
+/// Dense head: y = act(Wx + b).
+pub fn dense(x: &Tensor, l: &Layer, wts: &Weights) -> Tensor {
+    let f = x.data.len();
+    let o = l.out_channels;
+    assert_eq!(wts.w.len(), o * f, "dense weight shape");
+    let mut out = vec![0.0f32; o];
+    for i in 0..o {
+        let mut acc = wts.b.get(i).copied().unwrap_or(0.0);
+        let row = &wts.w[i * f..(i + 1) * f];
+        for (xv, wv) in x.data.iter().zip(row) {
+            acc += xv * wv;
+        }
+        out[i] = l.activation.apply(acc);
+    }
+    Tensor::new(vec![o], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Layer;
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1x1 conv with identity weights passes input through.
+        let l = Layer::conv("c", 0, 2, (1, 1), (1, 1), (0, 0), Activation::Linear);
+        let wts = Weights { w: vec![1.0, 0.0, 0.0, 1.0], b: vec![0.0, 0.0] };
+        let x = Tensor::new(vec![2, 2, 2], (0..8).map(|i| i as f32).collect());
+        let y = conv2d(&x, &l, &wts);
+        assert_eq!(y.data, x.data);
+    }
+
+    #[test]
+    fn conv_known_values() {
+        // 1 channel, 3x3 input, 2x2 ones kernel: sliding sums.
+        let l = Layer::conv("c", 0, 1, (2, 2), (1, 1), (0, 0), Activation::Linear);
+        let wts = Weights { w: vec![1.0; 4], b: vec![0.0] };
+        let x = Tensor::new(vec![1, 3, 3], (1..=9).map(|i| i as f32).collect());
+        let y = conv2d(&x, &l, &wts);
+        assert_eq!(y.data, vec![12.0, 16.0, 24.0, 28.0]);
+    }
+
+    #[test]
+    fn relu_applied() {
+        let l = Layer::conv("c", 0, 1, (1, 1), (1, 1), (0, 0), Activation::Relu);
+        let wts = Weights { w: vec![-1.0], b: vec![0.0] };
+        let x = Tensor::new(vec![1, 1, 2], vec![3.0, -2.0]);
+        let y = conv2d(&x, &l, &wts);
+        assert_eq!(y.data, vec![0.0, 2.0]);
+    }
+
+    #[test]
+    fn maxpool_values() {
+        let l = Layer::maxpool("p", 0, (2, 2), (2, 2), (0, 0));
+        let x = Tensor::new(vec![1, 2, 4], vec![1.0, 5.0, 2.0, 0.0, 3.0, 4.0, 8.0, 1.0]);
+        let y = pool2d(&x, &l);
+        assert_eq!(y.data, vec![5.0, 8.0]);
+    }
+
+    #[test]
+    fn avgpool_count_include_pad() {
+        let l = Layer::avgpool("p", 0, (2, 2), (2, 2), (0, 0));
+        let x = Tensor::new(vec![1, 2, 2], vec![2.0, 4.0, 6.0, 8.0]).pad(0, 0, 0, 0, 0.0);
+        let y = pool2d(&x, &l);
+        assert_eq!(y.data, vec![5.0]);
+    }
+
+    #[test]
+    fn grouped_conv_depthwise() {
+        // depthwise 2-channel identity
+        let mut l = Layer::conv("c", 0, 2, (1, 1), (1, 1), (0, 0), Activation::Linear);
+        l.groups = 2;
+        let wts = Weights { w: vec![2.0, 3.0], b: vec![0.0, 0.0] };
+        let x = Tensor::new(vec![2, 1, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let y = conv2d(&x, &l, &wts);
+        assert_eq!(y.data, vec![2.0, 4.0, 9.0, 12.0]);
+    }
+
+    #[test]
+    fn dense_values() {
+        let l = Layer::dense("d", 0, 2, Activation::Linear);
+        let wts = Weights { w: vec![1.0, 0.0, 0.0, 0.0, 1.0, 1.0], b: vec![10.0, 0.0] };
+        let x = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]);
+        let y = dense(&x, &l, &wts);
+        assert_eq!(y.data, vec![11.0, 5.0]);
+    }
+}

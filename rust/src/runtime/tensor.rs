@@ -1,0 +1,202 @@
+//! CHW f32 tensors with the split/stitch primitives of §5.3.
+//!
+//! The paper implements feature split and stitch "by directly operating
+//! the frame tensor data point in the memory space through C++"; this is
+//! the rust equivalent: row-contiguous slices and copies, no framework
+//! overhead on the request path.
+
+/// Dense f32 tensor; `dims` is (C, H, W) for features and (N,) for flat
+/// head vectors.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(dims.iter().product::<usize>(), data.len(), "dims {dims:?} vs len {}", data.len());
+        Tensor { dims, data }
+    }
+
+    pub fn zeros(dims: Vec<usize>) -> Tensor {
+        let n = dims.iter().product();
+        Tensor { dims, data: vec![0.0; n] }
+    }
+
+    pub fn chw(&self) -> (usize, usize, usize) {
+        assert_eq!(self.dims.len(), 3, "not a CHW tensor: {:?}", self.dims);
+        (self.dims[0], self.dims[1], self.dims[2])
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Rows [r0, r1) of every channel — the device tile slab.
+    pub fn slice_rows(&self, r0: usize, r1: usize) -> Tensor {
+        let (c, h, w) = self.chw();
+        assert!(r0 < r1 && r1 <= h, "rows [{r0},{r1}) out of height {h}");
+        let rows = r1 - r0;
+        let mut data = Vec::with_capacity(c * rows * w);
+        for ch in 0..c {
+            let base = ch * h * w + r0 * w;
+            data.extend_from_slice(&self.data[base..base + rows * w]);
+        }
+        Tensor::new(vec![c, rows, w], data)
+    }
+
+    /// Stitch row slabs back together (inverse of consecutive
+    /// `slice_rows` over a row split).
+    pub fn stitch_rows(parts: &[Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let (c, _, w) = parts[0].chw();
+        let h: usize = parts.iter().map(|p| p.chw().1).sum();
+        let mut out = Tensor::zeros(vec![c, h, w]);
+        let mut r0 = 0;
+        for p in parts {
+            let (pc, ph, pw) = p.chw();
+            assert_eq!((pc, pw), (c, w), "stitch shape mismatch");
+            for ch in 0..c {
+                let src = ch * ph * pw;
+                let dst = ch * h * w + r0 * w;
+                out.data[dst..dst + ph * w].copy_from_slice(&p.data[src..src + ph * pw]);
+            }
+            r0 += ph;
+        }
+        out
+    }
+
+    /// Zero-pad rows/cols: (top, bottom, left, right). `value` fills the
+    /// border (−inf for maxpool tiles).
+    pub fn pad(&self, t: usize, b: usize, l: usize, r: usize, value: f32) -> Tensor {
+        if t == 0 && b == 0 && l == 0 && r == 0 {
+            return self.clone();
+        }
+        let (c, h, w) = self.chw();
+        let (nh, nw) = (h + t + b, w + l + r);
+        let mut out = Tensor::new(vec![c, nh, nw], vec![value; c * nh * nw]);
+        for ch in 0..c {
+            for row in 0..h {
+                let src = ch * h * w + row * w;
+                let dst = ch * nh * nw + (row + t) * nw + l;
+                out.data[dst..dst + w].copy_from_slice(&self.data[src..src + w]);
+            }
+        }
+        out
+    }
+
+    /// Channel-dimension concat (the Concat connector).
+    pub fn concat_channels(parts: &[Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let (_, h, w) = parts[0].chw();
+        let c: usize = parts.iter().map(|p| p.chw().0).sum();
+        let mut data = Vec::with_capacity(c * h * w);
+        for p in parts {
+            let (pc, ph, pw) = p.chw();
+            assert_eq!((ph, pw), (h, w), "concat spatial mismatch");
+            let _ = pc;
+            data.extend_from_slice(&p.data);
+        }
+        Tensor::new(vec![c, h, w], data)
+    }
+
+    /// Elementwise sum (the Add connector).
+    pub fn add(parts: &[Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let mut out = parts[0].clone();
+        for p in &parts[1..] {
+            assert_eq!(p.dims, out.dims, "add shape mismatch");
+            for (o, x) in out.data.iter_mut().zip(&p.data) {
+                *o += x;
+            }
+        }
+        out
+    }
+
+    pub fn flatten(&self) -> Tensor {
+        Tensor::new(vec![self.data.len()], self.data.clone())
+    }
+
+    /// Read little-endian f32s (the golden io/*.bin files).
+    pub fn from_bin(path: &std::path::Path, dims: Vec<usize>) -> anyhow::Result<Tensor> {
+        let bytes = std::fs::read(path)?;
+        anyhow::ensure!(bytes.len() % 4 == 0, "file not f32-aligned");
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        Ok(Tensor::new(dims, data))
+    }
+
+    /// Max |a-b| against another tensor.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.dims, other.dims);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(dims: Vec<usize>) -> Tensor {
+        let n: usize = dims.iter().product();
+        Tensor::new(dims, (0..n).map(|i| i as f32).collect())
+    }
+
+    #[test]
+    fn slice_stitch_roundtrip() {
+        let t = seq(vec![2, 6, 3]);
+        let parts: Vec<Tensor> = [(0, 2), (2, 5), (5, 6)]
+            .iter()
+            .map(|&(a, b)| t.slice_rows(a, b))
+            .collect();
+        assert_eq!(Tensor::stitch_rows(&parts), t);
+    }
+
+    #[test]
+    fn slice_rows_values() {
+        let t = seq(vec![1, 4, 2]); // rows: [0,1],[2,3],[4,5],[6,7]
+        let s = t.slice_rows(1, 3);
+        assert_eq!(s.data, vec![2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.dims, vec![1, 2, 2]);
+    }
+
+    #[test]
+    fn pad_borders() {
+        let t = seq(vec![1, 2, 2]);
+        let p = t.pad(1, 0, 1, 1, 0.0);
+        assert_eq!(p.dims, vec![1, 3, 4]);
+        assert_eq!(p.data[0..4], [0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(p.data[4..8], [0.0, 0.0, 1.0, 0.0]);
+        // -inf padding for maxpool
+        let m = t.pad(0, 1, 0, 0, f32::NEG_INFINITY);
+        assert_eq!(m.dims, vec![1, 3, 2]);
+        assert!(m.data[4..6].iter().all(|&x| x == f32::NEG_INFINITY));
+    }
+
+    #[test]
+    fn concat_and_add() {
+        let a = seq(vec![1, 2, 2]);
+        let b = seq(vec![2, 2, 2]);
+        let c = Tensor::concat_channels(&[a.clone(), b]);
+        assert_eq!(c.dims, vec![3, 2, 2]);
+        let s = Tensor::add(&[a.clone(), a.clone()]);
+        assert_eq!(s.data, vec![0.0, 2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of height")]
+    fn slice_out_of_range_panics() {
+        seq(vec![1, 3, 3]).slice_rows(2, 5);
+    }
+}

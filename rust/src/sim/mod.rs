@@ -1,0 +1,330 @@
+//! Execution simulator: runs a pipeline plan or a synchronous baseline
+//! schedule through the paper's cost model (Eq. 7–12) on a virtual
+//! cluster and reports every §6.3–6.5 metric: period, latency,
+//! throughput, per-device utilisation, redundancy ratio, memory
+//! footprint (model vs feature), and energy per inference.
+//!
+//! The pipeline timeline uses the exact completion recurrence
+//! `c[s][n] = max(c[s-1][n], c[s][n-1]) + T_s`, which for constant stage
+//! times closes to `Σ T_s + (N−1)·max T_s` — fill, steady state, drain.
+
+use crate::baselines::{halo_fraction, SyncSchedule};
+use crate::cluster::Cluster;
+use crate::cost::{stage_cost, StageCost};
+use crate::graph::{LayerId, ModelGraph, Op, Shape};
+use crate::pipeline::PipelinePlan;
+
+/// Per-device simulation outcome.
+#[derive(Debug, Clone, Default)]
+pub struct DeviceMetrics {
+    pub device: usize,
+    /// Fraction of the makespan the CPU computes (paper's "Utili.").
+    pub utilization: f64,
+    /// Redundant / total FLOPs executed (paper's "Redu.").
+    pub redundancy: f64,
+    /// Model parameter bytes resident on the device.
+    pub mem_model: usize,
+    /// Peak feature (activation) bytes.
+    pub mem_feature: usize,
+    /// Joules consumed over the whole run.
+    pub energy_j: f64,
+}
+
+/// Whole-run report.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub scheme: String,
+    /// Single-inference latency (Eq. 12 T).
+    pub latency: f64,
+    /// Steady-state period (Eq. 12 P; = latency for sync schemes).
+    pub period: f64,
+    /// Inferences per second at steady state.
+    pub throughput: f64,
+    /// Wall time to finish `n_requests`.
+    pub makespan: f64,
+    pub n_requests: usize,
+    pub per_device: Vec<DeviceMetrics>,
+}
+
+impl SimReport {
+    pub fn avg_utilization(&self) -> f64 {
+        avg(self.per_device.iter().map(|d| d.utilization))
+    }
+    pub fn avg_redundancy(&self) -> f64 {
+        avg(self.per_device.iter().map(|d| d.redundancy))
+    }
+    pub fn avg_mem(&self) -> f64 {
+        avg(self.per_device.iter().map(|d| (d.mem_model + d.mem_feature) as f64))
+    }
+    /// Energy per inference task (paper Fig. 16), summed over devices.
+    pub fn energy_per_task(&self) -> f64 {
+        self.per_device.iter().map(|d| d.energy_j).sum::<f64>() / self.n_requests as f64
+    }
+}
+
+fn avg(it: impl Iterator<Item = f64>) -> f64 {
+    let v: Vec<f64> = it.collect();
+    if v.is_empty() {
+        0.0
+    } else {
+        v.iter().sum::<f64>() / v.len() as f64
+    }
+}
+
+/// Parameter bytes of one layer (f32 weights + bias).
+pub fn layer_param_bytes(g: &ModelGraph, id: LayerId) -> usize {
+    let l = g.layer(id);
+    match l.op {
+        Op::Conv => {
+            let c_in = g.in_channels(id) / l.groups;
+            (l.out_channels * c_in * l.kernel.0 * l.kernel.1 + l.out_channels) * 4
+        }
+        Op::Dense => {
+            let f = g.shape(l.inputs[0]).elems();
+            (l.out_channels * f + l.out_channels) * 4
+        }
+        _ => 0,
+    }
+}
+
+/// Peak feature bytes a device holds executing `layers` (largest
+/// input+output pair among its layers, full-width tiles of `rows_frac`
+/// of each height — a close model of the runtime's buffer usage).
+fn peak_feature_bytes(g: &ModelGraph, layers: &[LayerId], rows_frac: f64) -> usize {
+    layers
+        .iter()
+        .map(|&id| {
+            let l = g.layer(id);
+            let out = tile_bytes(g.shape(id), rows_frac);
+            let inp: usize = l.inputs.iter().map(|&s| tile_bytes(g.shape(s), rows_frac)).sum();
+            out + inp
+        })
+        .max()
+        .unwrap_or(0)
+}
+
+fn tile_bytes(s: Shape, rows_frac: f64) -> usize {
+    match s {
+        Shape::Chw(c, h, w) => (c as f64 * (h as f64 * rows_frac).ceil() * w as f64 * 4.0) as usize,
+        Shape::Flat(n) => n * 4,
+    }
+}
+
+/// Simulate a PICO pipeline for `n_requests` inferences.
+pub fn simulate_pipeline(
+    g: &ModelGraph,
+    cluster: &Cluster,
+    plan: &PipelinePlan,
+    n_requests: usize,
+) -> SimReport {
+    let costs: Vec<StageCost> = plan
+        .stages
+        .iter()
+        .map(|s| {
+            let devs: Vec<&crate::cluster::Device> =
+                s.devices.iter().map(|&i| &cluster.devices[i]).collect();
+            stage_cost(g, &s.layers, &devs, &cluster.network)
+        })
+        .collect();
+    let stage_t: Vec<f64> = costs.iter().map(|c| c.total).collect();
+    let latency: f64 = stage_t.iter().sum();
+    let period = stage_t.iter().cloned().fold(0.0, f64::max);
+    let n = n_requests.max(1);
+    let makespan = latency + (n as f64 - 1.0) * period;
+
+    let whole_model: f64 = crate::cost::total_flops(g);
+    let mut per_device = Vec::new();
+    for (si, stage) in plan.stages.iter().enumerate() {
+        let c = &costs[si];
+        let model_bytes: usize = stage.layers.iter().map(|&id| layer_param_bytes(g, id)).sum();
+        for (k, &dev) in stage.devices.iter().enumerate() {
+            let busy = c.t_comp[k];
+            let busy_total = busy * n as f64;
+            let d = &cluster.devices[dev];
+            let frac = if stage.devices.len() > 1 { 1.0 / stage.devices.len() as f64 } else { 1.0 };
+            per_device.push(DeviceMetrics {
+                device: dev,
+                utilization: (busy_total / makespan).min(1.0),
+                redundancy: if c.flops[k] > 0.0 { c.redundant_flops[k] / c.flops[k] } else { 0.0 },
+                mem_model: model_bytes,
+                mem_feature: peak_feature_bytes(g, &stage.layers, frac),
+                energy_j: busy_total * d.active_power_w
+                    + (makespan - busy_total).max(0.0) * d.standby_power_w,
+            });
+        }
+    }
+    let _ = whole_model;
+    per_device.sort_by_key(|d| d.device);
+    SimReport {
+        scheme: "PICO".into(),
+        latency,
+        period,
+        throughput: 1.0 / period,
+        makespan,
+        n_requests: n,
+        per_device,
+    }
+}
+
+/// Simulate a synchronous baseline schedule (LW/EFL/OFL/CE).
+pub fn simulate_sync(
+    g: &ModelGraph,
+    cluster: &Cluster,
+    sched: &SyncSchedule,
+    n_requests: usize,
+) -> SimReport {
+    let n = n_requests.max(1);
+    let mut latency = 0.0;
+    let mut busy = vec![0.0f64; cluster.len()];
+    let mut redundant = vec![0.0f64; cluster.len()];
+    let mut flops = vec![0.0f64; cluster.len()];
+    let mut mem_feature = vec![0usize; cluster.len()];
+    // Whole model replicated on every participating device (the paper's
+    // §2.2 note: feature-partition schemes copy the full model).
+    let whole_model_bytes: usize =
+        (0..g.n_layers()).map(|id| layer_param_bytes(g, id)).sum();
+    let participating: std::collections::HashSet<usize> =
+        sched.groups.iter().flat_map(|gr| gr.devices.clone()).collect();
+
+    for gr in &sched.groups {
+        let devs: Vec<&crate::cluster::Device> =
+            gr.devices.iter().map(|&i| &cluster.devices[i]).collect();
+        let c = stage_cost(g, &gr.layers, &devs, &cluster.network);
+        let comm = if gr.halo_sync {
+            let f = gr
+                .layers
+                .iter()
+                .map(|&id| halo_fraction(g, id))
+                .fold(0.0f64, f64::max);
+            c.t_comm_stage * f
+        } else {
+            c.t_comm_stage
+        };
+        latency += c.t_comp_stage + comm;
+        for (k, &dev) in gr.devices.iter().enumerate() {
+            busy[dev] += c.t_comp[k];
+            redundant[dev] += c.redundant_flops[k];
+            flops[dev] += c.flops[k];
+            let frac = if gr.devices.len() > 1 { 1.0 / gr.devices.len() as f64 } else { 1.0 };
+            mem_feature[dev] = mem_feature[dev].max(peak_feature_bytes(g, &gr.layers, frac));
+        }
+    }
+    let makespan = latency * n as f64;
+    let per_device = (0..cluster.len())
+        .filter(|d| participating.contains(d))
+        .map(|dev| {
+            let d = &cluster.devices[dev];
+            let busy_total = busy[dev] * n as f64;
+            DeviceMetrics {
+                device: dev,
+                utilization: (busy_total / makespan).min(1.0),
+                redundancy: if flops[dev] > 0.0 { redundant[dev] / flops[dev] } else { 0.0 },
+                mem_model: whole_model_bytes,
+                mem_feature: mem_feature[dev],
+                energy_j: busy_total * d.active_power_w
+                    + (makespan - busy_total).max(0.0) * d.standby_power_w,
+            }
+        })
+        .collect();
+    SimReport {
+        scheme: sched.name.into(),
+        latency,
+        period: latency,
+        throughput: 1.0 / latency,
+        makespan,
+        n_requests: n,
+        per_device,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines;
+    use crate::modelzoo;
+    use crate::partition;
+    use crate::pipeline;
+
+    fn setup() -> (ModelGraph, crate::partition::PieceChain) {
+        let g = modelzoo::vgg16();
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        (g, pieces)
+    }
+
+    #[test]
+    fn pipeline_beats_sync_schemes_on_throughput() {
+        // The paper's headline (Figs. 13-14): PICO > OFL > EFL/LW.
+        let (g, pieces) = setup();
+        let c = Cluster::homogeneous_rpi(8, 1.0);
+        let plan = pipeline::plan(&g, &pieces, &c, f64::INFINITY).unwrap();
+        let pico = simulate_pipeline(&g, &c, &plan, 100);
+        let lw = simulate_sync(&g, &c, &baselines::layer_wise(&g, &c), 100);
+        let efl = simulate_sync(&g, &c, &baselines::early_fused(&g, &c, 2), 100);
+        let ofl = simulate_sync(&g, &c, &baselines::optimal_fused(&g, &pieces, &c), 100);
+        assert!(pico.throughput > ofl.throughput, "PICO {} vs OFL {}", pico.throughput, ofl.throughput);
+        assert!(ofl.throughput >= efl.throughput * 0.99, "OFL {} vs EFL {}", ofl.throughput, efl.throughput);
+        assert!(pico.throughput > lw.throughput, "PICO {} vs LW {}", pico.throughput, lw.throughput);
+    }
+
+    #[test]
+    fn pico_memory_below_replicating_schemes() {
+        // Fig. 15: PICO distributes the model, others replicate it.
+        let (g, pieces) = setup();
+        let c = Cluster::homogeneous_rpi(4, 1.0);
+        let plan = pipeline::plan(&g, &pieces, &c, f64::INFINITY).unwrap();
+        let pico = simulate_pipeline(&g, &c, &plan, 10);
+        let lw = simulate_sync(&g, &c, &baselines::layer_wise(&g, &c), 10);
+        assert!(
+            pico.avg_mem() < lw.avg_mem(),
+            "PICO mem {} must be under LW mem {}",
+            pico.avg_mem(),
+            lw.avg_mem()
+        );
+        // every LW device holds the whole model
+        let whole: usize = (0..g.n_layers()).map(|i| layer_param_bytes(&g, i)).sum();
+        assert!(lw.per_device.iter().all(|d| d.mem_model == whole));
+    }
+
+    #[test]
+    fn utilization_bounded_and_positive() {
+        let (g, pieces) = setup();
+        let c = Cluster::paper_heterogeneous();
+        let plan = pipeline::plan(&g, &pieces, &c, f64::INFINITY).unwrap();
+        let r = simulate_pipeline(&g, &c, &plan, 50);
+        assert_eq!(r.per_device.len(), c.len());
+        for d in &r.per_device {
+            assert!(d.utilization > 0.0 && d.utilization <= 1.0, "{d:?}");
+            assert!(d.energy_j > 0.0);
+        }
+    }
+
+    #[test]
+    fn ce_redundancy_lowest_pico_beats_fused() {
+        // Table 5 ordering: CE ~ 0 redundancy; EFL worst; PICO moderate.
+        let (g, pieces) = setup();
+        let c = Cluster::paper_heterogeneous();
+        let ce = simulate_sync(&g, &c, &baselines::coedge(&g, &c), 20);
+        let efl = simulate_sync(&g, &c, &baselines::early_fused(&g, &c, 2), 20);
+        let plan = pipeline::plan(&g, &pieces, &c, f64::INFINITY).unwrap();
+        let pico = simulate_pipeline(&g, &c, &plan, 20);
+        assert!(ce.avg_redundancy() < 0.05, "CE redundancy {}", ce.avg_redundancy());
+        assert!(
+            pico.avg_redundancy() < efl.avg_redundancy(),
+            "PICO {} vs EFL {}",
+            pico.avg_redundancy(),
+            efl.avg_redundancy()
+        );
+    }
+
+    #[test]
+    fn makespan_recurrence() {
+        let (g, pieces) = setup();
+        let c = Cluster::homogeneous_rpi(4, 1.0);
+        let plan = pipeline::plan(&g, &pieces, &c, f64::INFINITY).unwrap();
+        let r1 = simulate_pipeline(&g, &c, &plan, 1);
+        let r100 = simulate_pipeline(&g, &c, &plan, 100);
+        assert!((r1.makespan - r1.latency).abs() < 1e-12);
+        let expect = r1.latency + 99.0 * r100.period;
+        assert!((r100.makespan - expect).abs() < 1e-9);
+    }
+}

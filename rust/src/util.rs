@@ -1,0 +1,290 @@
+//! Small shared utilities: a dense bitset for layer subsets, a
+//! deterministic PRNG for property tests and workload generation, and a
+//! fixed-width text table writer used by the bench harnesses.
+
+/// Dense bitset over layer ids. Model graphs go up to ~600 vertices
+/// (NASNet-A-Large), so subsets are a handful of u64 words; `BitSet` is
+/// `Ord`/`Hash` so it can key the Algorithm-1 memo tables directly.
+#[derive(Clone, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub struct BitSet {
+    words: Vec<u64>,
+}
+
+impl BitSet {
+    pub fn new(capacity: usize) -> Self {
+        BitSet { words: vec![0; capacity.div_ceil(64)] }
+    }
+
+    pub fn full(n: usize) -> Self {
+        let mut s = BitSet::new(n);
+        for i in 0..n {
+            s.insert(i);
+        }
+        s
+    }
+
+    pub fn insert(&mut self, i: usize) {
+        if i / 64 >= self.words.len() {
+            self.words.resize(i / 64 + 1, 0);
+        }
+        self.words[i / 64] |= 1 << (i % 64);
+    }
+
+    pub fn remove(&mut self, i: usize) {
+        if i / 64 < self.words.len() {
+            self.words[i / 64] &= !(1 << (i % 64));
+        }
+    }
+
+    pub fn contains(&self, i: usize) -> bool {
+        i / 64 < self.words.len() && self.words[i / 64] & (1 << (i % 64)) != 0
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.iter().all(|w| *w == 0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Set difference `self - other`.
+    pub fn minus(&self, other: &BitSet) -> BitSet {
+        let mut out = self.clone();
+        for (i, w) in other.words.iter().enumerate() {
+            if i < out.words.len() {
+                out.words[i] &= !w;
+            }
+        }
+        out
+    }
+
+    pub fn union(&self, other: &BitSet) -> BitSet {
+        let mut out = self.clone();
+        if other.words.len() > out.words.len() {
+            out.words.resize(other.words.len(), 0);
+        }
+        for (i, w) in other.words.iter().enumerate() {
+            out.words[i] |= w;
+        }
+        out
+    }
+
+    pub fn intersect(&self, other: &BitSet) -> BitSet {
+        let mut out = self.clone();
+        for (i, w) in out.words.iter_mut().enumerate() {
+            *w &= other.words.get(i).copied().unwrap_or(0);
+        }
+        out
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, w)| {
+            let mut w = *w;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    None
+                } else {
+                    let b = w.trailing_zeros() as usize;
+                    w &= w - 1;
+                    Some(wi * 64 + b)
+                }
+            })
+        })
+    }
+}
+
+impl std::fmt::Debug for BitSet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{{")?;
+        for (i, v) in self.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{v}")?;
+        }
+        write!(f, "}}")
+    }
+}
+
+impl FromIterator<usize> for BitSet {
+    fn from_iter<T: IntoIterator<Item = usize>>(iter: T) -> Self {
+        let mut s = BitSet::default();
+        for i in iter {
+            s.insert(i);
+        }
+        s
+    }
+}
+
+/// xorshift64* PRNG: deterministic workloads + property tests without a
+/// rand crate dependency.
+#[derive(Clone)]
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng(seed.max(1))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform in [lo, hi].
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Standard-normal-ish sample (Irwin–Hall of 12 uniforms).
+    pub fn normal(&mut self) -> f64 {
+        (0..12).map(|_| self.f64()).sum::<f64>() - 6.0
+    }
+}
+
+/// Fixed-width table printer: the bench harnesses print the paper's tables
+/// with it, so every experiment output is a readable, diffable text table.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {:<w$} |", c, w = w));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_string());
+    }
+}
+
+/// Format seconds human-readably (matches the paper's table style).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1.0 {
+        format!("{:.0}ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{s:.2}s")
+    } else if s < 7200.0 {
+        format!("{:.2}m", s / 60.0)
+    } else {
+        format!("{:.2}h", s / 3600.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bitset_basics() {
+        let mut s = BitSet::new(70);
+        s.insert(0);
+        s.insert(65);
+        s.insert(64);
+        s.remove(64);
+        assert!(s.contains(0) && s.contains(65) && !s.contains(64));
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.iter().collect::<Vec<_>>(), vec![0, 65]);
+    }
+
+    #[test]
+    fn bitset_ops() {
+        let a: BitSet = [1, 2, 3, 70].into_iter().collect();
+        let b: BitSet = [2, 3, 4].into_iter().collect();
+        assert_eq!(a.minus(&b).iter().collect::<Vec<_>>(), vec![1, 70]);
+        assert_eq!(a.union(&b).len(), 5);
+        assert_eq!(a.intersect(&b).iter().collect::<Vec<_>>(), vec![2, 3]);
+    }
+
+    #[test]
+    fn bitset_full_and_empty() {
+        let f = BitSet::full(130);
+        assert_eq!(f.len(), 130);
+        assert!(!f.is_empty());
+        assert!(BitSet::new(10).is_empty());
+        assert_eq!(f.minus(&f).len(), 0);
+    }
+
+    #[test]
+    fn rng_deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut r = Rng::new(1);
+        for _ in 0..1000 {
+            let v = r.range(3, 9);
+            assert!((3..=9).contains(&v));
+            let f = r.f64();
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        let s = t.to_string();
+        assert!(s.contains("| a | bb |"));
+        assert!(s.contains("| 1 | 2  |"));
+    }
+
+    #[test]
+    fn fmt_secs_bands() {
+        assert_eq!(fmt_secs(0.05), "50ms");
+        assert_eq!(fmt_secs(2.5), "2.50s");
+        assert_eq!(fmt_secs(180.0), "3.00m");
+        assert_eq!(fmt_secs(7200.0), "2.00h");
+    }
+}

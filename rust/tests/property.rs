@@ -1,0 +1,232 @@
+//! Property-based tests (hand-rolled xorshift generator, no external
+//! crates): coordinator invariants under randomized plans, arrival
+//! patterns and injected faults, plus planner invariants across random
+//! model families.
+
+use std::collections::{BTreeMap, HashMap};
+
+use pico::cluster::Cluster;
+use pico::coordinator::{self, Compute, NativeCompute, Request};
+use pico::cost::LayerTile;
+use pico::graph::{LayerId, ModelGraph};
+use pico::runtime::executor::{model_weights, run_full_native};
+use pico::runtime::Tensor;
+use pico::util::Rng;
+use pico::{modelzoo, partition, pipeline};
+
+fn rand_input(g: &ModelGraph, rng: &mut Rng) -> Tensor {
+    let (c, h, w) = g.input_shape;
+    Tensor::new(vec![c, h, w], (0..c * h * w).map(|_| rng.normal() as f32).collect())
+}
+
+/// Requests arriving over time (bursty): responses must stay FIFO in
+/// virtual time, latencies must be >= the plan's single-frame latency,
+/// and numerics must stay exact.
+#[test]
+fn property_staggered_arrivals_fifo_and_exact() {
+    let mut rng = Rng::new(0xAB);
+    for round in 0..6 {
+        let g = modelzoo::synthetic_chain(rng.range(4, 9));
+        let cluster = Cluster::random(rng.range(2, 5), &mut rng);
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        let plan = pipeline::plan(&g, &pieces, &cluster, f64::INFINITY).unwrap();
+        let single_latency = plan.cost(&g, &cluster).latency;
+        let weights = model_weights(&g, round as u64);
+
+        let n = rng.range(4, 10);
+        let mut t = 0.0;
+        let reqs: Vec<Request> = (0..n as u64)
+            .map(|id| {
+                t += rng.f64() * single_latency; // bursts + gaps
+                Request { id, input: rand_input(&g, &mut rng), t_submit: t }
+            })
+            .collect();
+        let expect: Vec<Tensor> =
+            reqs.iter().map(|r| run_full_native(&g, &weights, &r.input).unwrap()).collect();
+        let compute = NativeCompute { weights };
+        let report = coordinator::serve(&g, &plan, &cluster, &compute, reqs).unwrap();
+
+        let mut prev_done = 0.0;
+        for (resp, want) in report.responses.iter().zip(&expect) {
+            assert!(resp.output.max_abs_diff(want) < 1e-3, "round {round}");
+            assert!(resp.t_done >= prev_done, "round {round}: FIFO violated");
+            prev_done = resp.t_done;
+            assert!(
+                resp.latency >= single_latency - 1e-9,
+                "round {round}: latency {} below pipeline latency {}",
+                resp.latency,
+                single_latency
+            );
+        }
+        assert!(report.p95_latency >= report.p50_latency);
+        assert!(report.p50_latency >= single_latency - 1e-9);
+    }
+}
+
+/// A compute backend that fails on one specific request.
+struct FaultyCompute {
+    inner: NativeCompute,
+    poison: std::sync::atomic::AtomicUsize,
+}
+
+impl Compute for FaultyCompute {
+    fn run(
+        &self,
+        g: &ModelGraph,
+        segment: &[LayerId],
+        tiles: &BTreeMap<LayerId, LayerTile>,
+        feeds: &HashMap<LayerId, Tensor>,
+    ) -> anyhow::Result<HashMap<LayerId, Tensor>> {
+        let k = self.poison.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        if k == 5 {
+            anyhow::bail!("injected device failure");
+        }
+        self.inner.run(g, segment, tiles, feeds)
+    }
+}
+
+/// Fault injection: a device failure mid-run must surface as an error
+/// (not a hang, not silently dropped responses).
+#[test]
+fn fault_injection_propagates_error() {
+    let g = modelzoo::synthetic_chain(6);
+    let cluster = Cluster::homogeneous_rpi(3, 1.0);
+    let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+    let plan = pipeline::plan(&g, &pieces, &cluster, f64::INFINITY).unwrap();
+    let compute = FaultyCompute {
+        inner: NativeCompute { weights: model_weights(&g, 9) },
+        poison: std::sync::atomic::AtomicUsize::new(0),
+    };
+    let mut rng = Rng::new(3);
+    let reqs: Vec<Request> = (0..8u64)
+        .map(|id| Request { id, input: rand_input(&g, &mut rng), t_submit: 0.0 })
+        .collect();
+    let res = coordinator::serve(&g, &plan, &cluster, &compute, reqs);
+    let err = res.err().expect("injected failure must propagate");
+    assert!(format!("{err:#}").contains("injected device failure"), "got: {err:#}");
+}
+
+/// Random piece chains: Algorithm 2's DP period must match a brute-force
+/// check over all stage splits for small homogeneous cases (Theorem 4).
+#[test]
+fn property_dp_optimal_small_homogeneous() {
+    let mut rng = Rng::new(0xDD);
+    for _ in 0..5 {
+        let g = modelzoo::synthetic_chain(rng.range(3, 6));
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        let d = rng.range(2, 4);
+        let c = Cluster::homogeneous_rpi(d, 1.0);
+        let dp = pipeline::dp_pipeline(&g, &pieces, &c, f64::INFINITY).unwrap();
+        let bfs = pico::baselines::bfs_optimal(&g, &pieces, &c, f64::INFINITY, None);
+        assert!(bfs.completed);
+        assert!(
+            (dp.period - bfs.period).abs() <= 1e-9 * bfs.period,
+            "DP {} vs BFS {} on {} pieces x {} devices",
+            dp.period,
+            bfs.period,
+            pieces.len(),
+            d
+        );
+    }
+}
+
+/// Rebalancing on random clusters: never worse, always a valid plan.
+#[test]
+fn property_rebalance_valid_and_monotone() {
+    let mut rng = Rng::new(0x5EED);
+    for round in 0..6 {
+        let g = if round % 2 == 0 {
+            modelzoo::synthetic_chain(rng.range(6, 12))
+        } else {
+            modelzoo::synthetic_graph(rng.range(2, 4), rng.range(8, 16))
+        };
+        let cluster = Cluster::random(rng.range(3, 7), &mut rng);
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        let mut plan = pipeline::plan(&g, &pieces, &cluster, f64::INFINITY).unwrap();
+        let before = plan.cost(&g, &cluster).period;
+        let rep = pipeline::rebalance(&g, &pieces, &cluster, &mut plan, 40);
+        assert!(rep.period_after <= before + 1e-12, "round {round}");
+        // still executable end to end
+        let weights = model_weights(&g, round as u64);
+        let input = rand_input(&g, &mut rng);
+        let want = run_full_native(&g, &weights, &input).unwrap();
+        let compute = NativeCompute { weights };
+        let report = coordinator::serve(
+            &g,
+            &plan,
+            &cluster,
+            &compute,
+            vec![Request { id: 0, input, t_submit: 0.0 }],
+        )
+        .unwrap();
+        assert!(report.responses[0].output.max_abs_diff(&want) < 1e-3, "round {round}");
+    }
+}
+
+/// Partition invariants across the whole zoo: pieces tile the graph, form
+/// a chain, and respect the diameter bound.
+#[test]
+fn property_partition_invariants_zoo() {
+    for name in ["vgg16", "yolov2", "resnet34", "squeezenet", "mobilenetv3", "inceptionv3"] {
+        let g = modelzoo::by_name(name).unwrap();
+        let r = partition::partition(&g, 5, None).unwrap();
+        let mut all: Vec<usize> = r.pieces.iter().flatten().copied().collect();
+        all.sort();
+        assert_eq!(all, (0..g.n_layers()).collect::<Vec<_>>(), "{name}: cover");
+        let piece_of: HashMap<usize, usize> = r
+            .pieces
+            .iter()
+            .enumerate()
+            .flat_map(|(k, p)| p.iter().map(move |&id| (id, k)))
+            .collect();
+        for (&id, &k) in &piece_of {
+            for &c in g.consumers(id) {
+                let kc = piece_of[&c];
+                assert!(kc == k || kc == k + 1, "{name}: edge {id}->{c} jumps {k}->{kc}");
+            }
+        }
+        for p in &r.pieces {
+            let seg = pico::graph::Segment::from_ids(p.iter().copied());
+            assert!(seg.diameter(&g) <= 5, "{name}: diameter bound");
+        }
+        // F(G) equals the max piece redundancy of the returned chain.
+        let max_c = r
+            .pieces
+            .iter()
+            .map(|p| pico::cost::piece_redundancy(&g, p, 2))
+            .fold(0.0f64, f64::max);
+        assert!(
+            (max_c - r.max_redundancy).abs() <= 1e-6 * max_c.max(1.0),
+            "{name}: F(G) {} vs chain max {}",
+            r.max_redundancy,
+            max_c
+        );
+    }
+}
+
+/// Simulator consistency: pipeline throughput equals 1/period, and the
+/// coordinator reproduces both under arbitrary device mixes.
+#[test]
+fn property_sim_coordinator_consistency() {
+    let mut rng = Rng::new(77);
+    for round in 0..4 {
+        let g = modelzoo::synthetic_graph(3, rng.range(9, 15));
+        let cluster = Cluster::random(rng.range(2, 6), &mut rng);
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        let plan = pipeline::plan(&g, &pieces, &cluster, f64::INFINITY).unwrap();
+        let n = 16;
+        let sim = pico::sim::simulate_pipeline(&g, &cluster, &plan, n);
+        assert!((sim.throughput * sim.period - 1.0).abs() < 1e-9);
+        let compute = NativeCompute { weights: model_weights(&g, round as u64) };
+        let reqs: Vec<Request> = (0..n as u64)
+            .map(|id| Request { id, input: rand_input(&g, &mut rng), t_submit: 0.0 })
+            .collect();
+        let report = coordinator::serve(&g, &plan, &cluster, &compute, reqs).unwrap();
+        assert!(
+            (report.makespan - sim.makespan).abs() / sim.makespan < 1e-9,
+            "round {round}: {} vs {}",
+            report.makespan,
+            sim.makespan
+        );
+    }
+}
