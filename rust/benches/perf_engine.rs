@@ -1,0 +1,129 @@
+//! §Perf: the event engine and the multi-replica scheduler.
+//!
+//! 1. Raw engine scheduling rate — virtual jobs dispatched per wall
+//!    second (the engine is on the serving control path, so it must be
+//!    orders of magnitude faster than any real pipeline period).
+//! 2. Single- vs multi-replica serving throughput on a 4-device
+//!    heterogeneous cluster (2× TX2 NX + 2× RPi): the acceptance bar is
+//!    ≥1.8× at R=2, enforced by
+//!    `tests/agreement.rs::multi_replica_throughput_scales_on_heterogeneous_cluster`.
+//!
+//! ```bash
+//! cargo bench --bench perf_engine
+//! ```
+
+use std::time::Instant;
+
+use pico::cluster::{Cluster, Device, Network};
+use pico::coordinator::{self, NullCompute, Request, ServeOptions};
+use pico::engine::{run_pipeline, EngineConfig, StageProfile};
+use pico::runtime::Tensor;
+use pico::util::{fmt_secs, Table};
+use pico::{modelzoo, partition, pipeline};
+
+fn main() {
+    // 1. Engine scheduling rate: 200k backlogged jobs through a 4-stage
+    // replica pair with batching and a bounded queue.
+    let replicas = vec![
+        vec![StageProfile { fixed: 0.008, per_item: 0.05 }; 4],
+        vec![StageProfile { fixed: 0.008, per_item: 0.07 }; 4],
+    ];
+    let n_jobs = 200_000;
+    let cfg = EngineConfig { queue_capacity: Some(64), max_batch: 4, ..EngineConfig::default() };
+    let t0 = Instant::now();
+    let run = run_pipeline(&replicas, &vec![0.0; n_jobs], &cfg);
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "engine: {} jobs -> {} batches in {:.3}s wall ({:.0} jobs/s), virtual makespan {}",
+        n_jobs,
+        run.batches.len(),
+        dt,
+        n_jobs as f64 / dt,
+        fmt_secs(run.report.makespan)
+    );
+
+    // 2. Replica scaling on the 4-device heterogeneous cluster.
+    let cluster = Cluster::new(
+        vec![
+            Device::tx2(0, 2.2),
+            Device::tx2(1, 2.2),
+            Device::rpi(2, 1.5),
+            Device::rpi(3, 1.5),
+        ],
+        Network::wifi_50mbps(),
+    );
+    println!(
+        "\ncluster: {}",
+        cluster.devices.iter().map(|d| d.name.clone()).collect::<Vec<_>>().join(", ")
+    );
+    let g = modelzoo::vgg16();
+    let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+    let (c, h, w) = g.input_shape;
+    let n_req = 40usize;
+    let requests = |n: usize| -> Vec<Request> {
+        (0..n as u64)
+            .map(|id| Request { id, input: Tensor::zeros(vec![c, h, w]), t_submit: 0.0 })
+            .collect()
+    };
+
+    let mut t = Table::new(&["config", "devices", "stages/replica", "throughput /s", "speedup"]);
+    let mut baseline = 0.0f64;
+    // Rows: one replica of the 2-partition (the baseline), both replicas,
+    // four single-device replicas, and the classic full-cluster pipeline.
+    let two = pipeline::plan_replicated(&g, &pieces, &cluster, f64::INFINITY, 2).unwrap();
+    let four = pipeline::plan_replicated(&g, &pieces, &cluster, f64::INFINITY, 4).unwrap();
+    let full = pipeline::plan_replicated(&g, &pieces, &cluster, f64::INFINITY, 1).unwrap();
+    let cases: Vec<(&str, &[pipeline::PipelinePlan])> = vec![
+        ("1 replica (of 2-way split)", &two[..1]),
+        ("2 replicas (least-loaded)", &two[..]),
+        ("4 replicas (least-loaded)", &four[..]),
+        ("1 pipeline x all 4 devices", &full[..]),
+    ];
+    for (name, plans) in cases {
+        let report = coordinator::serve_replicated(
+            &g,
+            plans,
+            &cluster,
+            &NullCompute,
+            requests(n_req),
+            &ServeOptions::default(),
+        )
+        .unwrap();
+        let devices: usize = plans.iter().map(|p| p.stages.iter().map(|s| s.devices.len()).sum::<usize>()).sum();
+        if baseline == 0.0 {
+            baseline = report.throughput;
+        }
+        t.row(&[
+            name.to_string(),
+            format!("{devices}"),
+            format!("{}", plans[0].stages.len()),
+            format!("{:.3}", report.throughput),
+            format!("{:.2}x", report.throughput / baseline),
+        ]);
+    }
+    t.print();
+    let multi = coordinator::serve_replicated(
+        &g,
+        &two,
+        &cluster,
+        &NullCompute,
+        requests(n_req),
+        &ServeOptions::default(),
+    )
+    .unwrap();
+    let single = coordinator::serve_replicated(
+        &g,
+        &two[..1],
+        &cluster,
+        &NullCompute,
+        requests(n_req),
+        &ServeOptions::default(),
+    )
+    .unwrap();
+    let speedup = multi.throughput / single.throughput;
+    println!(
+        "multi-replica speedup at R=2: {:.2}x (acceptance bar 1.8x): {}",
+        speedup,
+        if speedup >= 1.8 { "PASS" } else { "FAIL" }
+    );
+}

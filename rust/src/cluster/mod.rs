@@ -143,6 +143,35 @@ impl Cluster {
     pub fn total_flops(&self) -> f64 {
         self.devices.iter().map(|d| d.flops).sum()
     }
+
+    /// Partition device indices into `r` capacity-balanced groups
+    /// (greedy LPT: strongest device to the currently weakest group) —
+    /// the replica partitioner behind
+    /// [`crate::pipeline::plan_replicated`]. Balanced groups keep the
+    /// replica periods close, which is what lets R replicas deliver
+    /// ~R× the throughput of one.
+    pub fn partition_capacity(&self, r: usize) -> Vec<Vec<usize>> {
+        assert!(r >= 1 && r <= self.len(), "need 1..=n_devices groups, got {r}");
+        let cap = |i: usize| self.devices[i].flops / self.devices[i].alpha;
+        let mut idx: Vec<usize> = (0..self.len()).collect();
+        idx.sort_by(|&a, &b| cap(b).total_cmp(&cap(a)));
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); r];
+        let mut load = vec![0.0f64; r];
+        for i in idx {
+            let mut g = 0;
+            for k in 1..r {
+                if load[k] < load[g] {
+                    g = k;
+                }
+            }
+            groups[g].push(i);
+            load[g] += cap(i);
+        }
+        for g in &mut groups {
+            g.sort_unstable();
+        }
+        groups
+    }
 }
 
 #[cfg(test)]
@@ -176,6 +205,24 @@ mod tests {
         assert!((h.total_flops() - c.total_flops()).abs() < 1.0);
         let first = h.devices[0].flops;
         assert!(h.devices.iter().all(|d| (d.flops - first).abs() < 1e-6));
+    }
+
+    #[test]
+    fn partition_capacity_balances_groups() {
+        let c = Cluster::paper_heterogeneous();
+        let groups = c.partition_capacity(2);
+        assert_eq!(groups.len(), 2);
+        // every device in exactly one group
+        let mut all: Vec<usize> = groups.iter().flatten().copied().collect();
+        all.sort();
+        assert_eq!(all, (0..c.len()).collect::<Vec<_>>());
+        // the two TX2s must not land in the same group (LPT balance)
+        let cap = |g: &Vec<usize>| g.iter().map(|&i| c.devices[i].flops).sum::<f64>();
+        let (a, b) = (cap(&groups[0]), cap(&groups[1]));
+        assert!((a - b).abs() / a.max(b) < 0.35, "unbalanced: {a} vs {b}");
+        // degenerate splits
+        assert_eq!(c.partition_capacity(1), vec![(0..8).collect::<Vec<usize>>()]);
+        assert_eq!(c.partition_capacity(8).iter().filter(|g| g.len() == 1).count(), 8);
     }
 
     #[test]

@@ -3,8 +3,8 @@
 use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
 
-use crate::cost::LayerTile;
-use crate::graph::{LayerId, ModelGraph};
+use crate::cost::{segment_sinks, LayerTile};
+use crate::graph::{LayerId, ModelGraph, Shape};
 use crate::runtime::reference::Weights;
 use crate::runtime::{run_stage, Backend, Engine, PipelineArtifacts, Tensor};
 
@@ -33,6 +33,38 @@ impl Compute for NativeCompute {
         feeds: &HashMap<LayerId, Tensor>,
     ) -> anyhow::Result<HashMap<LayerId, Tensor>> {
         run_stage(g, segment, tiles, feeds, &Backend::Native { weights: &self.weights })
+    }
+}
+
+/// Timing-only backend: emits correctly-shaped zero tensors for every
+/// sink tile without running any kernel. The coordinator's clocks are
+/// virtual, so this backend exercises the full serving machinery
+/// (admission, batching, replica dispatch, tile geometry, stitch,
+/// live-set forwarding) at negligible cost — it is what the sim↔serve
+/// agreement matrix and the `perf_engine` bench drive full-size zoo
+/// models with.
+pub struct NullCompute;
+
+impl Compute for NullCompute {
+    fn run(
+        &self,
+        g: &ModelGraph,
+        segment: &[LayerId],
+        tiles: &BTreeMap<LayerId, LayerTile>,
+        _feeds: &HashMap<LayerId, Tensor>,
+    ) -> anyhow::Result<HashMap<LayerId, Tensor>> {
+        let mut out = HashMap::new();
+        for &s in &segment_sinks(g, segment) {
+            if let Some(tile) = tiles.get(&s) {
+                let rows = tile.out_iv.1 - tile.out_iv.0;
+                let t = match g.shape(s) {
+                    Shape::Chw(c, _, w) => Tensor::zeros(vec![c, rows, w]),
+                    Shape::Flat(n) => Tensor::zeros(vec![n]),
+                };
+                out.insert(s, t);
+            }
+        }
+        Ok(out)
     }
 }
 

@@ -1,21 +1,27 @@
 //! Serving coordinator: the paper's Fig. 8 stage workflow as a threaded
-//! pipeline over real tensors.
+//! pipeline over real tensors, scheduled by the shared event engine.
 //!
-//! One worker thread per stage, connected by channels. Each stage's main
-//! loop: take the feature map from the input queue, split it into tiles
-//! (per the capacity-proportional partition from [`crate::cost::
-//! stage_splits`] — identical to the cost model's), run every simulated
-//! device's share through the numeric backend, gather + stitch the sink
-//! tiles, and send the result to the next stage.
+//! One worker thread per stage per replica, connected by channels. Each
+//! stage's main loop: take the micro-batch from the input queue, split
+//! every member's feature map into tiles (per the capacity-proportional
+//! partition from [`crate::cost::stage_splits`] — identical to the cost
+//! model's), run every simulated device's share through the numeric
+//! backend, gather + stitch the sink tiles, and send the batch to the
+//! next stage.
 //!
-//! Time is *virtual*: device compute and network transfer advance a
-//! simulated clock through the same Eq. 7–11 cost model the planner
-//! optimises (one physical core cannot host 8 devices), while tensors
-//! flow for real — so the coordinator validates both the schedule and
-//! the numerics. Wall-clock time is also recorded for the §Perf work.
+//! Time is *virtual*: a single deterministic [`crate::engine`] pass
+//! decides admission (bounded queues with backpressure or shedding),
+//! micro-batch composition and least-loaded dispatch over the pipeline
+//! replicas, and each stage worker re-derives its busy clock from the
+//! engine's [`crate::engine::StageClock`] recurrence — the same core
+//! the analytical simulator runs (one physical core cannot host 8
+//! devices), while tensors flow for real. So the coordinator validates
+//! the schedule and the numerics at once; wall-clock time is also
+//! recorded for the §Perf work.
 
 mod compute;
 mod serve;
 
-pub use compute::{Compute, NativeCompute, PjrtCompute};
-pub use serve::{serve, Request, Response, ServeReport};
+pub use crate::engine::AdmissionPolicy;
+pub use compute::{Compute, NativeCompute, NullCompute, PjrtCompute};
+pub use serve::{serve, serve_replicated, Request, Response, ServeOptions, ServeReport};

@@ -1,12 +1,26 @@
-//! The threaded serving pipeline.
+//! The threaded serving pipeline, rebuilt on the shared event engine.
+//!
+//! [`serve_replicated`] runs R independent pipeline replicas of a model
+//! over one cluster. A single deterministic [`crate::engine`] pass
+//! decides admission (bounded queue with blocking backpressure or load
+//! shedding), micro-batch composition and least-loaded replica dispatch;
+//! the feeder then streams real tensors along that schedule while every
+//! stage worker re-derives its own times from a [`StageClock`] — the
+//! same recurrence the analytical simulator uses, so predicted and
+//! served timings agree (see `rust/tests/agreement.rs`).
+//!
+//! [`serve`] is the single-replica, unit-batch, open-admission special
+//! case — the paper's plain Fig. 8 pipeline.
 
 use std::collections::{BTreeMap, HashMap, HashSet};
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use super::compute::Compute;
 use crate::cluster::Cluster;
-use crate::cost::{segment_tiles, stage_cost, stage_splits};
+use crate::cost::{segment_sinks, segment_tiles, stage_cost, stage_splits, LayerTile};
+use crate::engine::{run_pipeline, summarize, EngineConfig, StageClock, StageProfile};
 use crate::graph::{LayerId, ModelGraph};
 use crate::pipeline::PipelinePlan;
 use crate::runtime::Tensor;
@@ -31,13 +45,23 @@ pub struct Response {
     pub latency: f64,
 }
 
-/// Serving run outcome.
+/// Serving knobs — exactly the engine's own configuration (one source
+/// of truth; `serve_replicated` hands it to the engine verbatim). The
+/// default reproduces the plain paper pipeline: unbounded queue, unit
+/// batches, blocking admission.
+pub type ServeOptions = EngineConfig;
+
+/// Serving run outcome. All statistics come from
+/// [`crate::engine::summarize`] and are finite for 0- and 1-request
+/// runs.
 #[derive(Debug)]
 pub struct ServeReport {
     pub responses: Vec<Response>,
     /// Virtual makespan (time the last response left the pipeline).
     pub makespan: f64,
-    /// Observed steady-state period (median inter-completion gap).
+    /// Observed per-request steady-state period (inverse of the
+    /// observed throughput; stays finite under micro-batching and
+    /// multi-replica runs where completions coincide).
     pub period: f64,
     /// (n−1) / (last − first completion): steady-state throughput.
     pub throughput: f64,
@@ -48,49 +72,38 @@ pub struct ServeReport {
     /// 95th-percentile virtual latency (queueing shows up here when
     /// arrivals outpace the pipeline period).
     pub p95_latency: f64,
+    /// Ids shed by admission control (empty unless
+    /// `AdmissionPolicy::Shed` with a bounded queue).
+    pub rejected: Vec<u64>,
     /// Wall-clock seconds the run took on this host.
     pub wall_secs: f64,
 }
 
-/// Messages between stage workers: the request id, the virtual time the
-/// payload is ready, and every live tensor downstream stages still need.
-/// Tensors are `Arc`-shared: forwarding a skip-connection feature to a
-/// later stage must not deep-copy megabytes per frame (§Perf log in
-/// EXPERIMENTS.md — this halved the coordinator's wall time).
-struct Msg {
+/// One batch member travelling between stage workers. Tensors are
+/// `Arc`-shared: forwarding a skip-connection feature to a later stage
+/// must not deep-copy megabytes per frame (§Perf log in EXPERIMENTS.md —
+/// this halved the coordinator's wall time).
+struct MsgMember {
     id: u64,
-    t_ready: f64,
     t_submit: f64,
-    live: HashMap<LayerId, std::sync::Arc<Tensor>>,
+    /// Every live tensor downstream stages still need.
+    live: HashMap<LayerId, Arc<Tensor>>,
 }
 
-/// Run `requests` through the pipeline plan on the virtual `cluster`,
-/// computing real tensors via `compute` (shared by all stage threads).
-pub fn serve(
-    g: &ModelGraph,
-    plan: &PipelinePlan,
-    cluster: &Cluster,
-    compute: &dyn Compute,
-    requests: Vec<Request>,
-) -> anyhow::Result<ServeReport> {
-    let n_stages = plan.stages.len();
-    anyhow::ensure!(n_stages > 0, "empty plan");
-    let wall_start = Instant::now();
+/// A micro-batch in flight: members share stage traversal (and its
+/// amortized handshake cost); numerics stay per member.
+struct Msg {
+    members: Vec<MsgMember>,
+    /// Virtual time the batch is ready for the receiving stage.
+    t_ready: f64,
+}
 
-    // Pre-compute per-stage virtual costs (Eq. 7-11) and feature splits.
-    let stage_t: Vec<f64> = plan
-        .stages
-        .iter()
-        .map(|s| {
-            let devs: Vec<&crate::cluster::Device> =
-                s.devices.iter().map(|&i| &cluster.devices[i]).collect();
-            stage_cost(g, &s.layers, &devs, &cluster.network).total
-        })
-        .collect();
-    // Live set after each stage: layers produced at or before it that
-    // stages after it still consume (handles cross-stage skip edges).
+/// Live set after each stage of a plan: layers produced at or before it
+/// that stages after it still consume (handles cross-stage skip edges).
+fn live_sets(g: &ModelGraph, plan: &PipelinePlan) -> Vec<HashSet<LayerId>> {
+    let n_stages = plan.stages.len();
     let mut live_after: Vec<HashSet<LayerId>> = vec![HashSet::new(); n_stages];
-    for (si, _) in plan.stages.iter().enumerate() {
+    for si in 0..n_stages {
         let produced: HashSet<LayerId> = plan.stages[..=si]
             .iter()
             .flat_map(|s| s.layers.iter().copied())
@@ -107,129 +120,252 @@ pub fn serve(
             .filter(|&id| !plan.stages[si + 1..].iter().any(|s| s.layers.contains(&id)))
             .collect();
     }
+    live_after
+}
+
+/// Run `requests` through a single pipeline plan with default options —
+/// the paper's one-plan-one-run deployment.
+pub fn serve(
+    g: &ModelGraph,
+    plan: &PipelinePlan,
+    cluster: &Cluster,
+    compute: &dyn Compute,
+    requests: Vec<Request>,
+) -> anyhow::Result<ServeReport> {
+    serve_replicated(
+        g,
+        std::slice::from_ref(plan),
+        cluster,
+        compute,
+        requests,
+        &ServeOptions::default(),
+    )
+}
+
+/// Run `requests` through `plans` — one pipeline replica per plan, all
+/// over device indices of the shared `cluster` (see
+/// [`crate::pipeline::plan_replicated`] for building a capacity-balanced
+/// replica set) — computing real tensors via `compute` (shared by all
+/// stage threads of all replicas).
+pub fn serve_replicated(
+    g: &ModelGraph,
+    plans: &[PipelinePlan],
+    cluster: &Cluster,
+    compute: &dyn Compute,
+    requests: Vec<Request>,
+    opts: &ServeOptions,
+) -> anyhow::Result<ServeReport> {
+    anyhow::ensure!(!plans.is_empty(), "no pipeline replicas");
+    // Replicas must own disjoint devices: overlapping plans would
+    // double-book a device's virtual time and report physically
+    // impossible throughput.
+    let mut owned: HashSet<usize> = HashSet::new();
+    for (ri, plan) in plans.iter().enumerate() {
+        anyhow::ensure!(!plan.stages.is_empty(), "empty plan");
+        for stage in &plan.stages {
+            for &d in &stage.devices {
+                anyhow::ensure!(
+                    d < cluster.len(),
+                    "replica {ri} references device {d} outside the {}-device cluster",
+                    cluster.len()
+                );
+                anyhow::ensure!(
+                    owned.insert(d),
+                    "device {d} is assigned to more than one replica (replica {ri})"
+                );
+            }
+        }
+    }
+    let wall_start = Instant::now();
+
+    // Per-replica stage profiles from the Eq. 7-11 cost model — the
+    // exact inputs the simulator hands the engine.
+    let profiles: Vec<Vec<StageProfile>> = plans
+        .iter()
+        .map(|plan| {
+            plan.stages
+                .iter()
+                .map(|s| {
+                    let devs: Vec<&crate::cluster::Device> =
+                        s.devices.iter().map(|&i| &cluster.devices[i]).collect();
+                    StageProfile::from_stage_cost(
+                        &stage_cost(g, &s.layers, &devs, &cluster.network),
+                        &cluster.network,
+                    )
+                })
+                .collect()
+        })
+        .collect();
+    let live_after: Vec<Vec<HashSet<LayerId>>> =
+        plans.iter().map(|plan| live_sets(g, plan)).collect();
+
+    // One deterministic engine pass decides admission, batching and
+    // replica dispatch for the whole request stream.
+    let arrivals: Vec<f64> = requests.iter().map(|r| r.t_submit).collect();
+    let schedule = run_pipeline(&profiles, &arrivals, opts);
+    let rejected: Vec<u64> = schedule.rejected.iter().map(|&i| requests[i].id).collect();
+    let n_served = schedule.jobs.len();
+    let mut inputs: Vec<Option<Request>> = requests.into_iter().map(Some).collect();
 
     std::thread::scope(|scope| -> anyhow::Result<ServeReport> {
-        // Channel chain: feeder -> stage 0 -> ... -> stage S-1 -> collector.
-        let mut senders: Vec<mpsc::Sender<Msg>> = Vec::new();
-        let mut receivers: Vec<mpsc::Receiver<Msg>> = Vec::new();
-        for _ in 0..=n_stages {
-            let (tx, rx) = mpsc::channel::<Msg>();
-            senders.push(tx);
-            receivers.push(rx);
-        }
-        // Spawn stage workers (stage si reads receivers[si], writes
-        // senders[si+1]).
+        // Per-replica channel chains, all last stages feeding one
+        // collector.
+        let (col_tx, col_rx) = mpsc::channel::<Msg>();
+        let mut frontends: Vec<mpsc::Sender<Msg>> = Vec::new();
         let mut handles = Vec::new();
-        for (si, stage) in plan.stages.iter().enumerate() {
-            let rx = receivers.remove(0);
-            let tx = senders[si + 1].clone();
-            let devs: Vec<&crate::cluster::Device> =
-                stage.devices.iter().map(|&i| &cluster.devices[i]).collect();
-            let splits = stage_splits(g, &stage.layers, &devs);
-            let t_s = stage_t[si];
-            let live = live_after[si].clone();
-            let seg = stage.layers.clone();
-            handles.push(scope.spawn(move || -> anyhow::Result<()> {
-                let mut stage_free = 0.0f64;
-                while let Ok(msg) = rx.recv() {
-                    // Virtual pipeline timing: the stage is busy T_s per
-                    // frame, frames queue FIFO.
-                    let t_start = msg.t_ready.max(stage_free);
-                    let t_done = t_start + t_s;
-                    stage_free = t_done;
+        for (ri, plan) in plans.iter().enumerate() {
+            let n_stages = plan.stages.len();
+            let mut senders: Vec<mpsc::Sender<Msg>> = Vec::new();
+            let mut receivers: Vec<mpsc::Receiver<Msg>> = Vec::new();
+            for _ in 0..n_stages {
+                let (tx, rx) = mpsc::channel::<Msg>();
+                senders.push(tx);
+                receivers.push(rx);
+            }
+            frontends.push(senders[0].clone());
+            for (si, stage) in plan.stages.iter().enumerate() {
+                let rx = receivers.remove(0);
+                let tx: mpsc::Sender<Msg> = if si + 1 < n_stages {
+                    senders[si + 1].clone()
+                } else {
+                    col_tx.clone()
+                };
+                let devs: Vec<&crate::cluster::Device> =
+                    stage.devices.iter().map(|&i| &cluster.devices[i]).collect();
+                let seg = stage.layers.clone();
+                let sinks = segment_sinks(g, &seg);
+                // Tile geometry is per (stage, device), not per frame:
+                // compute it once, outside the worker loop.
+                let device_tiles: Vec<BTreeMap<LayerId, LayerTile>> = stage_splits(g, &seg, &devs)
+                    .iter()
+                    .filter(|s| !s.is_empty())
+                    .map(|sink_out| segment_tiles(g, &seg, sink_out))
+                    .collect();
+                let profile = profiles[ri][si];
+                let live = live_after[ri][si].clone();
+                handles.push(scope.spawn(move || -> anyhow::Result<()> {
+                    let mut clock = StageClock::default();
+                    while let Ok(msg) = rx.recv() {
+                        // Virtual pipeline timing: the same recurrence
+                        // the engine's analytic pass applied — a batch
+                        // of k occupies the stage for T_s(k).
+                        let (_start, t_done) =
+                            clock.admit(msg.t_ready, profile.service(msg.members.len()));
 
-                    // Real numerics: per-device tiles, gather, stitch.
-                    let sinks = crate::cost::segment_sinks(g, &seg);
-                    let mut sink_parts: BTreeMap<LayerId, Vec<(usize, Tensor)>> = BTreeMap::new();
-                    for sink_out in splits.iter().filter(|s| !s.is_empty()) {
-                        let tiles = segment_tiles(g, &seg, sink_out);
-                        // Slice this device's feed slabs from the live map.
-                        let mut feeds: HashMap<LayerId, Tensor> = HashMap::new();
-                        for (&id, tile) in &tiles {
-                            // Feed external producers AND an in-segment
-                            // model input (its "compute" is the raw frame).
-                            if seg.contains(&id) && g.layer(id).op != crate::graph::Op::Input {
-                                continue;
+                        // Real numerics, per member: per-device tiles,
+                        // gather, stitch.
+                        let mut out_members = Vec::with_capacity(msg.members.len());
+                        for member in msg.members {
+                            let mut sink_parts: BTreeMap<LayerId, Vec<(usize, Tensor)>> =
+                                BTreeMap::new();
+                            for tiles in &device_tiles {
+                                // Slice this device's feed slabs from
+                                // the live map.
+                                let mut feeds: HashMap<LayerId, Tensor> = HashMap::new();
+                                for (&id, tile) in tiles {
+                                    // Feed external producers AND an
+                                    // in-segment model input (its
+                                    // "compute" is the raw frame).
+                                    if seg.contains(&id)
+                                        && g.layer(id).op != crate::graph::Op::Input
+                                    {
+                                        continue;
+                                    }
+                                    let full = member.live.get(&id).ok_or_else(|| {
+                                        anyhow::anyhow!("stage {si}: missing feed {id}")
+                                    })?;
+                                    let slab = if full.dims.len() == 3 {
+                                        full.slice_rows(tile.out_iv.0, tile.out_iv.1)
+                                    } else {
+                                        (**full).clone()
+                                    };
+                                    feeds.insert(id, slab);
+                                }
+                                let mut out = compute.run(g, &seg, tiles, &feeds)?;
+                                for &s in &sinks {
+                                    if let Some(t) = out.remove(&s) {
+                                        // take ownership — no tile copy
+                                        sink_parts
+                                            .entry(s)
+                                            .or_default()
+                                            .push((tiles[&s].out_iv.0, t));
+                                    }
+                                }
                             }
-                            let full = msg
-                                .live
-                                .get(&id)
-                                .ok_or_else(|| anyhow::anyhow!("stage {si}: missing feed {id}"))?;
-                            let slab = if full.dims.len() == 3 {
-                                full.slice_rows(tile.out_iv.0, tile.out_iv.1)
-                            } else {
-                                (**full).clone()
-                            };
-                            feeds.insert(id, slab);
-                        }
-                        let mut out = compute.run(g, &seg, &tiles, &feeds)?;
-                        for &s in &sinks {
-                            if let Some(t) = out.remove(&s) {
-                                // take ownership — no tile copy
-                                sink_parts.entry(s).or_default().push((tiles[&s].out_iv.0, t));
+                            // Stitch sink tiles (row order) into full
+                            // features.
+                            let mut live_next: HashMap<LayerId, Arc<Tensor>> = HashMap::new();
+                            for (s, mut parts) in sink_parts {
+                                parts.sort_by_key(|(r0, _)| *r0);
+                                let slabs: Vec<Tensor> =
+                                    parts.into_iter().map(|(_, t)| t).collect();
+                                let full = if slabs.len() == 1 {
+                                    slabs.into_iter().next().unwrap()
+                                } else {
+                                    Tensor::stitch_rows(&slabs)
+                                };
+                                live_next.insert(s, Arc::new(full));
                             }
+                            // Forward upstream tensors still needed
+                            // downstream (Arc clone: refcount bump, no
+                            // copy).
+                            for (&id, t) in &member.live {
+                                if live.contains(&id) && !live_next.contains_key(&id) {
+                                    live_next.insert(id, t.clone());
+                                }
+                            }
+                            out_members.push(MsgMember {
+                                id: member.id,
+                                t_submit: member.t_submit,
+                                live: live_next,
+                            });
+                        }
+                        if tx.send(Msg { members: out_members, t_ready: t_done }).is_err() {
+                            break;
                         }
                     }
-                    // Stitch sink tiles (row order) into full features.
-                    let mut live_next: HashMap<LayerId, std::sync::Arc<Tensor>> = HashMap::new();
-                    for (s, mut parts) in sink_parts {
-                        parts.sort_by_key(|(r0, _)| *r0);
-                        let slabs: Vec<Tensor> = parts.into_iter().map(|(_, t)| t).collect();
-                        let full = if slabs.len() == 1 {
-                            slabs.into_iter().next().unwrap()
-                        } else {
-                            Tensor::stitch_rows(&slabs)
-                        };
-                        live_next.insert(s, std::sync::Arc::new(full));
-                    }
-                    // Forward upstream tensors still needed downstream
-                    // (Arc clone: refcount bump, no copy).
-                    for (&id, t) in &msg.live {
-                        if live.contains(&id) && !live_next.contains_key(&id) {
-                            live_next.insert(id, t.clone());
-                        }
-                    }
-                    if tx
-                        .send(Msg { id: msg.id, t_ready: t_done, t_submit: msg.t_submit, live: live_next })
-                        .is_err()
-                    {
-                        break;
-                    }
-                }
-                Ok(())
-            }));
+                    Ok(())
+                }));
+            }
+            drop(senders); // workers hold their own clones
         }
-        drop(senders.drain(1..)); // workers hold their own clones
+        drop(col_tx);
 
-        // Feed requests.
-        let feeder = senders.remove(0);
-        let out_id = g.output_id();
-        let n = requests.len();
-        for r in requests {
-            feeder.send(Msg {
-                id: r.id,
-                t_ready: r.t_submit,
-                t_submit: r.t_submit,
-                live: [(0usize, std::sync::Arc::new(r.input))].into(),
-            })?;
+        // Feed batches along the engine's schedule. A send can only
+        // fail if a stage worker died; its own error surfaces at join.
+        for bp in &schedule.batches {
+            let mut members = Vec::with_capacity(bp.members.len());
+            for &idx in &bp.members {
+                let r = inputs[idx].take().expect("engine dispatched a request twice");
+                members.push(MsgMember {
+                    id: r.id,
+                    t_submit: r.t_submit,
+                    live: [(0usize, Arc::new(r.input))].into(),
+                });
+            }
+            if frontends[bp.replica].send(Msg { members, t_ready: bp.admitted }).is_err() {
+                break;
+            }
         }
-        drop(feeder);
+        drop(frontends);
 
         // Collect.
-        let collector = receivers.remove(0);
-        let mut responses = Vec::with_capacity(n);
-        while let Ok(msg) = collector.recv() {
-            let output = msg
-                .live
-                .get(&out_id)
-                .map(|t| (**t).clone())
-                .ok_or_else(|| anyhow::anyhow!("response missing model output"))?;
-            responses.push(Response {
-                id: msg.id,
-                output,
-                t_done: msg.t_ready,
-                latency: msg.t_ready - msg.t_submit,
-            });
+        let out_id = g.output_id();
+        let mut responses = Vec::with_capacity(n_served);
+        while let Ok(msg) = col_rx.recv() {
+            for member in msg.members {
+                let output = member
+                    .live
+                    .get(&out_id)
+                    .map(|t| (**t).clone())
+                    .ok_or_else(|| anyhow::anyhow!("response missing model output"))?;
+                responses.push(Response {
+                    id: member.id,
+                    output,
+                    t_done: msg.t_ready,
+                    latency: msg.t_ready - member.t_submit,
+                });
+            }
         }
         // Join workers BEFORE the completeness check so a compute error
         // surfaces as itself, not as "lost responses".
@@ -237,36 +373,25 @@ pub fn serve(
             h.join().map_err(|_| anyhow::anyhow!("stage worker panicked"))??;
         }
         responses.sort_by_key(|r| r.id);
-        anyhow::ensure!(responses.len() == n, "lost responses: {} of {n}", responses.len());
+        anyhow::ensure!(
+            responses.len() == n_served,
+            "lost responses: {} of {n_served}",
+            responses.len()
+        );
 
-        let makespan = responses.iter().map(|r| r.t_done).fold(0.0, f64::max);
-        let mut gaps: Vec<f64> = responses.windows(2).map(|w| w[1].t_done - w[0].t_done).collect();
-        gaps.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let period = if gaps.is_empty() { makespan } else { gaps[gaps.len() / 2] };
-        let throughput = if responses.len() > 1 {
-            (responses.len() - 1) as f64 / (makespan - responses[0].t_done)
-        } else {
-            1.0 / makespan.max(f64::MIN_POSITIVE)
-        };
-        let mean_latency =
-            responses.iter().map(|r| r.latency).sum::<f64>() / responses.len().max(1) as f64;
-        let mut lats: Vec<f64> = responses.iter().map(|r| r.latency).collect();
-        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let pct = |p: f64| -> f64 {
-            if lats.is_empty() {
-                0.0
-            } else {
-                lats[((lats.len() - 1) as f64 * p).round() as usize]
-            }
-        };
+        let mut done: Vec<f64> = responses.iter().map(|r| r.t_done).collect();
+        done.sort_by(f64::total_cmp);
+        let latencies: Vec<f64> = responses.iter().map(|r| r.latency).collect();
+        let m = summarize(&done, &latencies);
         Ok(ServeReport {
             responses,
-            makespan,
-            period,
-            throughput,
-            mean_latency,
-            p50_latency: pct(0.5),
-            p95_latency: pct(0.95),
+            makespan: m.makespan,
+            period: m.period,
+            throughput: m.throughput,
+            mean_latency: m.mean_latency,
+            p50_latency: m.p50_latency,
+            p95_latency: m.p95_latency,
+            rejected,
             wall_secs: wall_start.elapsed().as_secs_f64(),
         })
     })
@@ -275,7 +400,8 @@ pub fn serve(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::NativeCompute;
+    use crate::coordinator::{NativeCompute, NullCompute};
+    use crate::engine::AdmissionPolicy;
     use crate::modelzoo;
     use crate::partition;
     use crate::pipeline;
@@ -334,8 +460,8 @@ mod tests {
         let predicted = sim::simulate_pipeline(&g, &c, &plan, n);
         let compute = NativeCompute { weights: model_weights(&g, 1) };
         let report = serve(&g, &plan, &c, &compute, requests(&g, n)).unwrap();
-        // The coordinator's virtual clock implements the same recurrence
-        // as the simulator: makespan and period must agree closely.
+        // Both sides drive the shared engine recurrence: makespan and
+        // period must agree closely.
         assert!(
             (report.makespan - predicted.makespan).abs() / predicted.makespan < 1e-9,
             "coordinator {} vs simulator {}",
@@ -384,6 +510,214 @@ mod tests {
             "no overlap: {} vs 10x{}",
             r10.makespan,
             r1.makespan
+        );
+    }
+
+    #[test]
+    fn zero_requests_yield_finite_stats() {
+        let g = modelzoo::synthetic_chain(5);
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        let c = Cluster::homogeneous_rpi(2, 1.0);
+        let plan = pipeline::plan(&g, &pieces, &c, f64::INFINITY).unwrap();
+        let compute = NativeCompute { weights: model_weights(&g, 3) };
+        let report = serve(&g, &plan, &c, &compute, Vec::new()).unwrap();
+        assert!(report.responses.is_empty());
+        assert_eq!(report.makespan, 0.0);
+        assert_eq!(report.period, 0.0);
+        assert_eq!(report.throughput, 0.0);
+        assert_eq!(report.mean_latency, 0.0);
+        assert_eq!(report.p50_latency, 0.0);
+        assert_eq!(report.p95_latency, 0.0);
+        for v in [report.period, report.throughput, report.p50_latency, report.p95_latency] {
+            assert!(v.is_finite() && !v.is_nan());
+        }
+    }
+
+    #[test]
+    fn one_request_yields_finite_stats() {
+        let g = modelzoo::synthetic_chain(5);
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        let c = Cluster::homogeneous_rpi(2, 1.0);
+        let plan = pipeline::plan(&g, &pieces, &c, f64::INFINITY).unwrap();
+        let compute = NativeCompute { weights: model_weights(&g, 3) };
+        let report = serve(&g, &plan, &c, &compute, requests(&g, 1)).unwrap();
+        assert_eq!(report.responses.len(), 1);
+        let lat = report.responses[0].latency;
+        assert!(lat > 0.0);
+        assert_eq!(report.makespan, report.responses[0].t_done);
+        assert_eq!(report.period, report.makespan);
+        assert!((report.throughput - 1.0 / report.makespan).abs() < 1e-12);
+        assert_eq!(report.p50_latency, lat);
+        assert_eq!(report.p95_latency, lat);
+        assert!(report.throughput.is_finite());
+    }
+
+    #[test]
+    fn shed_admission_rejects_and_reports() {
+        // A 1-slot queue with a burst of simultaneous arrivals: exactly
+        // one request is served, the rest are shed and reported.
+        let g = modelzoo::synthetic_chain(5);
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        let c = Cluster::homogeneous_rpi(2, 1.0);
+        let plan = pipeline::plan(&g, &pieces, &c, f64::INFINITY).unwrap();
+        let compute = NativeCompute { weights: model_weights(&g, 3) };
+        let opts = ServeOptions {
+            queue_capacity: Some(1),
+            max_batch: 1,
+            admission: AdmissionPolicy::Shed,
+        };
+        let report = serve_replicated(
+            &g,
+            std::slice::from_ref(&plan),
+            &c,
+            &compute,
+            requests(&g, 5),
+            &opts,
+        )
+        .unwrap();
+        assert_eq!(report.responses.len(), 1);
+        assert_eq!(report.rejected, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn blocking_admission_serves_all_with_backpressure() {
+        let g = modelzoo::synthetic_chain(5);
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        let c = Cluster::homogeneous_rpi(2, 1.0);
+        let plan = pipeline::plan(&g, &pieces, &c, f64::INFINITY).unwrap();
+        let compute = NativeCompute { weights: model_weights(&g, 3) };
+        let open = serve(&g, &plan, &c, &compute, requests(&g, 6)).unwrap();
+        let opts = ServeOptions {
+            queue_capacity: Some(1),
+            max_batch: 1,
+            admission: AdmissionPolicy::Block,
+        };
+        let tight = serve_replicated(
+            &g,
+            std::slice::from_ref(&plan),
+            &c,
+            &compute,
+            requests(&g, 6),
+            &opts,
+        )
+        .unwrap();
+        assert_eq!(tight.responses.len(), 6);
+        assert!(tight.rejected.is_empty());
+        // Backpressure serializes the pipeline (one frame in flight):
+        // never faster than open admission, but everything completes.
+        assert!(tight.makespan + 1e-12 >= open.makespan);
+        // With one slot, each request is admitted only after the
+        // previous one fully drained: makespan = n * single-frame time.
+        assert!(
+            (tight.makespan - 6.0 * open.responses[0].latency).abs()
+                <= 1e-9 * tight.makespan,
+            "serialized makespan {} vs 6x latency {}",
+            tight.makespan,
+            6.0 * open.responses[0].latency
+        );
+    }
+
+    #[test]
+    fn microbatching_matches_engine_and_keeps_numerics() {
+        let g = modelzoo::synthetic_chain(6);
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        let c = Cluster::homogeneous_rpi(3, 1.0);
+        let plan = pipeline::plan(&g, &pieces, &c, f64::INFINITY).unwrap();
+        let compute = NativeCompute { weights: model_weights(&g, 7) };
+        let solo = serve(&g, &plan, &c, &compute, requests(&g, 12)).unwrap();
+        let opts = ServeOptions { max_batch: 4, ..ServeOptions::default() };
+        let batched = serve_replicated(
+            &g,
+            std::slice::from_ref(&plan),
+            &c,
+            &compute,
+            requests(&g, 12),
+            &opts,
+        )
+        .unwrap();
+        // Numerics identical either way (batch members are computed
+        // individually; only timing is shared).
+        for (a, b) in solo.responses.iter().zip(&batched.responses) {
+            assert!(a.output.max_abs_diff(&b.output) < 1e-6);
+        }
+        // The served timeline equals the engine's analytic prediction
+        // for the same knobs — batching changes the schedule, not the
+        // sim↔serve contract.
+        let profiles: Vec<StageProfile> = plan
+            .stages
+            .iter()
+            .map(|s| {
+                let devs: Vec<&crate::cluster::Device> =
+                    s.devices.iter().map(|&i| &c.devices[i]).collect();
+                StageProfile::from_stage_cost(
+                    &stage_cost(&g, &s.layers, &devs, &c.network),
+                    &c.network,
+                )
+            })
+            .collect();
+        let predicted = run_pipeline(
+            &[profiles],
+            &vec![0.0; 12],
+            &EngineConfig {
+                queue_capacity: None,
+                max_batch: 4,
+                admission: AdmissionPolicy::Block,
+            },
+        );
+        assert!(
+            (batched.makespan - predicted.report.makespan).abs()
+                <= 1e-9 * predicted.report.makespan,
+            "served {} vs engine {}",
+            batched.makespan,
+            predicted.report.makespan
+        );
+        // 12 backlogged requests in batches of 4: three batches.
+        assert_eq!(predicted.batches.len(), 3);
+    }
+
+    #[test]
+    fn overlapping_replica_plans_are_rejected() {
+        // Two "replicas" over the same devices would double-book their
+        // virtual time: must fail loudly, not report 2x throughput.
+        let g = modelzoo::synthetic_chain(5);
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        let c = Cluster::homogeneous_rpi(2, 1.0);
+        let plan = pipeline::plan(&g, &pieces, &c, f64::INFINITY).unwrap();
+        let err = serve_replicated(
+            &g,
+            &[plan.clone(), plan],
+            &c,
+            &NullCompute,
+            requests(&g, 2),
+            &ServeOptions::default(),
+        )
+        .err()
+        .expect("overlapping replicas must be rejected");
+        assert!(format!("{err}").contains("more than one replica"), "{err}");
+    }
+
+    #[test]
+    fn two_replicas_agree_with_engine_and_scale() {
+        // Two identical replicas over disjoint device groups of one
+        // cluster: the dispatcher alternates, throughput ~doubles.
+        let g = modelzoo::synthetic_chain(6);
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        let c = Cluster::homogeneous_rpi(4, 1.0);
+        let plans =
+            pipeline::plan_replicated(&g, &pieces, &c, f64::INFINITY, 2).unwrap();
+        assert_eq!(plans.len(), 2);
+        let single =
+            serve_replicated(&g, &plans[..1], &c, &NullCompute, requests(&g, 24), &ServeOptions::default())
+                .unwrap();
+        let multi =
+            serve_replicated(&g, &plans, &c, &NullCompute, requests(&g, 24), &ServeOptions::default())
+                .unwrap();
+        assert_eq!(multi.responses.len(), 24);
+        assert!(
+            multi.throughput > 1.8 * single.throughput,
+            "2 replicas {} vs 1 replica {}",
+            multi.throughput,
+            single.throughput
         );
     }
 }

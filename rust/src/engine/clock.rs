@@ -1,0 +1,161 @@
+//! Stage service-time model and the completion-time recurrence.
+//!
+//! [`StageClock::admit`] is the single implementation of
+//! `c[s][n] = max(c[s-1][n], c[s][n-1]) + T_s` in the codebase: the
+//! analytical simulator drives it through [`run_pipeline`], and every
+//! serving stage worker owns one and calls it per batch — so predicted
+//! and observed timings come from the same core by construction.
+//!
+//! [`run_pipeline`]: super::run_pipeline
+
+use crate::cluster::Network;
+use crate::cost::StageCost;
+
+/// Affine service-time model of one pipeline stage: a batch of `k`
+/// requests occupies the stage for `fixed + k * per_item` virtual
+/// seconds. The fixed part is the per-transfer handshake floor (Wi-Fi
+/// MAC + rendezvous, Eq. 9's latency term) paid once per batch — the
+/// quantity micro-batching amortizes; the per-item part is compute plus
+/// payload bytes, which scale with the batch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageProfile {
+    /// Per-batch fixed cost (seconds).
+    pub fixed: f64,
+    /// Per-request marginal cost (seconds).
+    pub per_item: f64,
+}
+
+impl StageProfile {
+    /// A stage with no batch-amortizable part: `T_s(k) = k * t`.
+    pub fn constant(t: f64) -> StageProfile {
+        StageProfile { fixed: 0.0, per_item: t }
+    }
+
+    /// Derive the profile from a cost-model stage: each device with a
+    /// nonzero communication term pays one `Network::latency_s`
+    /// handshake floor per frame, which a batch pays once; everything
+    /// else (compute + payload) scales per item. By construction
+    /// `service(1) == sc.total` up to one f64 rounding.
+    pub fn from_stage_cost(sc: &StageCost, network: &Network) -> StageProfile {
+        let messages = sc.t_comm.iter().filter(|&&t| t > 0.0).count();
+        let fixed = messages as f64 * network.latency_s;
+        StageProfile { fixed, per_item: sc.total - fixed }
+    }
+
+    /// `T_s(k)`: service time for a batch of `k` requests.
+    pub fn service(&self, k: usize) -> f64 {
+        self.fixed + self.per_item * k as f64
+    }
+
+    /// `T_s(1)`: single-frame stage time (the paper's `T(S)`).
+    pub fn single(&self) -> f64 {
+        self.service(1)
+    }
+}
+
+/// One stage's FIFO busy clock.
+#[derive(Debug, Clone, Default)]
+pub struct StageClock {
+    /// Virtual time the stage finishes its current backlog.
+    pub free: f64,
+}
+
+impl StageClock {
+    /// Admit work that is ready at `ready` and occupies the stage for
+    /// `service` seconds: returns `(start, done)` where
+    /// `start = max(ready, free)` and `done = start + service` — the
+    /// pipeline recurrence, applied once.
+    pub fn admit(&mut self, ready: f64, service: f64) -> (f64, f64) {
+        let start = if ready > self.free { ready } else { self.free };
+        let done = start + service;
+        self.free = done;
+        (start, done)
+    }
+}
+
+/// The stage clocks of one pipeline replica.
+#[derive(Debug, Clone)]
+pub struct PipelineClock {
+    pub stages: Vec<StageClock>,
+}
+
+impl PipelineClock {
+    pub fn new(n_stages: usize) -> PipelineClock {
+        PipelineClock { stages: vec![StageClock::default(); n_stages] }
+    }
+
+    /// When the replica's entry stage next frees up — the least-loaded
+    /// dispatcher's load signal.
+    pub fn front_free(&self) -> f64 {
+        self.stages.first().map(|s| s.free).unwrap_or(0.0)
+    }
+
+    /// Push one batch of `k` requests, ready at `ready`, through every
+    /// stage in order; returns its completion time. Batches must be
+    /// pushed in admission order (stages are FIFO).
+    pub fn push(&mut self, ready: f64, profiles: &[StageProfile], k: usize) -> f64 {
+        debug_assert_eq!(self.stages.len(), profiles.len());
+        let mut t = ready;
+        for (clock, p) in self.stages.iter_mut().zip(profiles) {
+            t = clock.admit(t, p.service(k)).1;
+        }
+        t
+    }
+
+    /// Completion time a batch of `k` ready at `ready` *would* see if
+    /// pushed now, without mutating the clocks — the least-loaded
+    /// dispatcher's load signal. Entry-stage availability alone is not
+    /// enough: a replica with a cheap first stage but a slow bottleneck
+    /// would soak up the whole stream while its queue grows.
+    pub fn probe(&self, ready: f64, profiles: &[StageProfile], k: usize) -> f64 {
+        debug_assert_eq!(self.stages.len(), profiles.len());
+        let mut t = ready;
+        for (clock, p) in self.stages.iter().zip(profiles) {
+            let start = if t > clock.free { t } else { clock.free };
+            t = start + p.service(k);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admit_is_the_recurrence() {
+        let mut c = StageClock::default();
+        let (s0, d0) = c.admit(1.0, 2.0);
+        assert_eq!((s0, d0), (1.0, 3.0));
+        // second frame ready before the stage frees: queues behind it
+        let (s1, d1) = c.admit(2.0, 2.0);
+        assert_eq!((s1, d1), (3.0, 5.0));
+        // third frame ready after: starts at its ready time
+        let (s2, d2) = c.admit(9.0, 2.0);
+        assert_eq!((s2, d2), (9.0, 11.0));
+    }
+
+    #[test]
+    fn pipeline_push_closed_form() {
+        // Constant stage times close to sum + (N-1) * max.
+        let t = [0.3, 0.7, 0.2];
+        let profiles: Vec<StageProfile> = t.iter().map(|&x| StageProfile::constant(x)).collect();
+        let mut p = PipelineClock::new(3);
+        let n = 25;
+        let mut last = 0.0;
+        for _ in 0..n {
+            last = p.push(0.0, &profiles, 1);
+        }
+        let closed = t.iter().sum::<f64>() + (n as f64 - 1.0) * 0.7;
+        assert!((last - closed).abs() < 1e-12, "{last} vs {closed}");
+    }
+
+    #[test]
+    fn profile_batches_amortize_only_fixed() {
+        let p = StageProfile { fixed: 0.01, per_item: 0.002 };
+        assert!((p.service(1) - 0.012).abs() < 1e-15);
+        assert!((p.service(4) - (0.01 + 0.008)).abs() < 1e-15);
+        let c = StageProfile::constant(0.012);
+        assert!((c.service(4) - 0.048).abs() < 1e-15);
+    }
+}

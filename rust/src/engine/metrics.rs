@@ -1,0 +1,167 @@
+//! Serving statistics shared by the simulator and the coordinator.
+//!
+//! Every function here is total: 0- and 1-request runs produce finite,
+//! well-defined numbers (no NaN, no index panics), which is the contract
+//! `ServeReport` and `SimReport` rely on.
+
+/// Timing summary of one run.
+#[derive(Debug, Clone, Default)]
+pub struct TimingReport {
+    /// Completed requests.
+    pub n: usize,
+    /// Virtual time the last response left the pipeline (0 if none).
+    pub makespan: f64,
+    /// Observed per-request steady-state period — the inverse of the
+    /// observed throughput. A median inter-completion gap would
+    /// degenerate to 0 whenever half the completions are simultaneous,
+    /// which is the *normal* case for micro-batched and
+    /// identical-replica runs; per-request spacing stays finite and
+    /// `period * throughput == 1` by construction. For n < 2 there is
+    /// no spacing, so the makespan itself (0 for n = 0).
+    pub period: f64,
+    /// Steady-state throughput: (n-1) / (last - first completion) for
+    /// n > 1 (n/makespan if all completions coincide), 1/makespan for
+    /// n = 1, 0 for n = 0.
+    pub throughput: f64,
+    pub mean_latency: f64,
+    pub p50_latency: f64,
+    pub p95_latency: f64,
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice; 0.0 on empty
+/// input.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Summarize completion times (`done`, ascending) and per-request
+/// latencies (any order) into a [`TimingReport`].
+pub fn summarize(done: &[f64], latencies: &[f64]) -> TimingReport {
+    let n = done.len();
+    let makespan = done.last().copied().unwrap_or(0.0);
+    let throughput = match n {
+        0 => 0.0,
+        1 => {
+            if makespan > 0.0 {
+                1.0 / makespan
+            } else {
+                0.0
+            }
+        }
+        _ => {
+            let span = done[n - 1] - done[0];
+            if span > 0.0 {
+                (n - 1) as f64 / span
+            } else if makespan > 0.0 {
+                n as f64 / makespan
+            } else {
+                0.0
+            }
+        }
+    };
+    let period = match n {
+        0 | 1 => makespan,
+        _ => {
+            if throughput > 0.0 {
+                1.0 / throughput
+            } else {
+                0.0
+            }
+        }
+    };
+    let mean_latency = if latencies.is_empty() {
+        0.0
+    } else {
+        latencies.iter().sum::<f64>() / latencies.len() as f64
+    };
+    let mut lats = latencies.to_vec();
+    lats.sort_by(f64::total_cmp);
+    TimingReport {
+        n,
+        makespan,
+        period,
+        throughput,
+        mean_latency,
+        p50_latency: percentile(&lats, 0.5),
+        p95_latency: percentile(&lats, 0.95),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_run_is_all_zeros() {
+        let r = summarize(&[], &[]);
+        assert_eq!(r.n, 0);
+        assert_eq!(r.makespan, 0.0);
+        assert_eq!(r.period, 0.0);
+        assert_eq!(r.throughput, 0.0);
+        assert_eq!(r.mean_latency, 0.0);
+        assert_eq!(r.p50_latency, 0.0);
+        assert_eq!(r.p95_latency, 0.0);
+    }
+
+    #[test]
+    fn single_request_is_finite() {
+        let r = summarize(&[2.0], &[2.0]);
+        assert_eq!(r.n, 1);
+        assert_eq!(r.makespan, 2.0);
+        assert_eq!(r.period, 2.0);
+        assert!((r.throughput - 0.5).abs() < 1e-12);
+        assert_eq!(r.p50_latency, 2.0);
+        assert_eq!(r.p95_latency, 2.0);
+        assert!(r.throughput.is_finite() && !r.period.is_nan());
+    }
+
+    #[test]
+    fn steady_state_period_and_throughput() {
+        // completions at 1, 2, 3, 4, 5: period 1, throughput 1.
+        let done = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let lats = [1.0, 1.5, 2.0, 2.5, 3.0];
+        let r = summarize(&done, &lats);
+        assert!((r.period - 1.0).abs() < 1e-12);
+        assert!((r.throughput - 1.0).abs() < 1e-12);
+        assert!((r.mean_latency - 2.0).abs() < 1e-12);
+        assert_eq!(r.p50_latency, 2.0);
+        assert_eq!(r.p95_latency, 3.0);
+    }
+
+    #[test]
+    fn simultaneous_completions_do_not_divide_by_zero() {
+        // One batch of 3 finishing together at t=3: per-request rate 1/s,
+        // per-request period 1s — finite and consistent, never 0 or NaN.
+        let r = summarize(&[3.0, 3.0, 3.0], &[3.0, 3.0, 3.0]);
+        assert!(r.throughput.is_finite());
+        assert!((r.throughput - 1.0).abs() < 1e-12, "falls back to n/makespan");
+        assert!((r.period - 1.0).abs() < 1e-12);
+        assert!((r.period * r.throughput - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batched_completions_keep_period_positive() {
+        // Two batches of 4 at t=1 and t=2: a median inter-completion gap
+        // would report 0; the observed per-request period is
+        // span/(n-1) = 1/7 s.
+        let done = [1.0, 1.0, 1.0, 1.0, 2.0, 2.0, 2.0, 2.0];
+        let r = summarize(&done, &done);
+        assert!(r.period > 0.0, "period {} degenerated", r.period);
+        assert!((r.throughput - 7.0).abs() < 1e-12);
+        assert!((r.period - 1.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_bounds() {
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[7.0], 0.0), 7.0);
+        assert_eq!(percentile(&[7.0], 1.0), 7.0);
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 1.0), 4.0);
+    }
+}

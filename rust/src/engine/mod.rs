@@ -1,0 +1,39 @@
+//! The event-driven pipeline engine — the single source of truth for
+//! pipeline timing, shared by the analytical simulator ([`crate::sim`])
+//! and the serving coordinator ([`crate::coordinator`]).
+//!
+//! Before this module existed the repo computed pipeline timings twice:
+//! once analytically in `sim` and once inside the coordinator's stage
+//! workers, with nothing forcing the two to agree. Now both consume the
+//! same three pieces:
+//!
+//! * [`StageClock`] / [`PipelineClock`] ([`clock`]) — the completion
+//!   recurrence `c[s][n] = max(c[s-1][n], c[s][n-1]) + T_s` (which for
+//!   constant stage times closes to `Σ T_s + (N−1)·max T_s`), plus
+//!   [`StageProfile`], the affine `T_s(k) = fixed + k·per_item` batch
+//!   service-time model derived from the paper's Eq. 7–11 stage cost.
+//! * [`run_pipeline`] ([`dispatch`]) — the deterministic virtual-time
+//!   executor: bounded-queue admission (blocking backpressure or load
+//!   shedding), micro-batching, and least-loaded dispatch over R
+//!   independent pipeline replicas.
+//! * [`summarize`] ([`metrics`]) — serving statistics (observed
+//!   steady-state throughput and its inverse as the per-request
+//!   period, latency percentiles), total for 0- and 1-request runs and
+//!   finite under coinciding completions.
+//!
+//! `sim` drives the engine with cost-model stage times and no tensors;
+//! `coordinator::serve_replicated` drives the identical engine pass for
+//! admission/batching/dispatch decisions while its stage workers
+//! re-derive per-batch times from their own [`StageClock`]s and move
+//! real tensors. The sim↔serve agreement suite in
+//! `rust/tests/agreement.rs` pins the two views together across the
+//! whole model zoo. Throughput scaling of the replica scheduler is
+//! measured in `benches/perf_engine.rs`.
+
+mod clock;
+mod dispatch;
+mod metrics;
+
+pub use clock::{PipelineClock, StageClock, StageProfile};
+pub use dispatch::{run_pipeline, AdmissionPolicy, BatchPlan, EngineConfig, EngineRun, JobOutcome};
+pub use metrics::{percentile, summarize, TimingReport};

@@ -5,9 +5,11 @@
 //!
 //! * **L3 (this crate)** — the paper's system contribution: CNN-DAG
 //!   orchestration into pieces ([`partition`], Algorithm 1), pipeline stage
-//!   planning ([`pipeline`], Algorithms 2–3), the cost model ([`cost`],
-//!   Eq. 2–12), baselines ([`baselines`]), heterogeneous cluster +
-//!   discrete-event simulation ([`cluster`], [`sim`]), and a threaded
+//!   planning ([`pipeline`], Algorithms 2–3, plus
+//!   [`pipeline::plan_replicated`] for capacity-balanced replica sets),
+//!   the cost model ([`cost`], Eq. 2–12), baselines ([`baselines`]), the
+//!   heterogeneous cluster model ([`cluster`]), and — on top of the shared
+//!   [`engine`] — the analytical simulator ([`sim`]) and the threaded
 //!   serving [`coordinator`] that executes real tensors through AOT
 //!   artifacts ([`runtime`]).
 //! * **L2 (python/compile)** — jax model definitions lowered once to HLO
@@ -15,14 +17,32 @@
 //! * **L1 (python/compile/kernels)** — Pallas conv/pool/dense kernels
 //!   (interpret mode), validated against pure-jnp oracles.
 //!
+//! ## The engine: one timing core, two drivers
+//!
+//! [`engine`] owns the pipeline completion recurrence
+//! `c[s][n] = max(c[s-1][n], c[s][n-1]) + T_s`, the affine
+//! `T_s(k) = fixed + k·per_item` micro-batch service model, bounded-queue
+//! admission (blocking backpressure or load shedding), and least-loaded
+//! dispatch over R pipeline replicas. [`sim`] drives it with cost-model
+//! stage times and no tensors; [`coordinator`] drives the identical pass
+//! to schedule real tensors through per-stage worker threads. Simulated
+//! and served period/latency therefore agree by construction — pinned
+//! across the whole model zoo by `rust/tests/agreement.rs`, and the
+//! replica scheduler's throughput scaling is measured in
+//! `benches/perf_engine.rs` (single- vs multi-replica on a heterogeneous
+//! cluster).
+//!
 //! Quickstart: `examples/quickstart.rs`; end-to-end serving:
-//! `examples/e2e_serve.rs`; experiment reproductions: `rust/benches/`.
+//! `examples/e2e_serve.rs`; multi-replica serving:
+//! `examples/replicated_serve.rs`; experiment reproductions:
+//! `rust/benches/`.
 
 pub mod baselines;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod cost;
+pub mod engine;
 pub mod graph;
 pub mod json;
 pub mod modelzoo;

@@ -12,7 +12,7 @@ pub use algorithm3::adapt_heterogeneous;
 pub use plan::{PipelinePlan, Stage};
 pub use rebalance::{rebalance, RebalanceReport};
 
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, Device};
 use crate::graph::ModelGraph;
 use crate::partition::PieceChain;
 
@@ -28,4 +28,42 @@ pub fn plan(
     let homo = cluster.homogenized();
     let dp = dp_pipeline(g, pieces, &homo, t_lim)?;
     Ok(adapt_heterogeneous(g, pieces, &dp.stages, cluster))
+}
+
+/// Plan `replicas` independent pipelines over a capacity-balanced
+/// partition of `cluster` ([`Cluster::partition_capacity`]): each
+/// replica runs the whole model on its own device group, and the
+/// coordinator's least-loaded dispatcher spreads requests across them —
+/// throughput then scales past a single pipeline's period. Device
+/// indices in the returned plans refer to the original cluster, so all
+/// replicas can be served together via
+/// [`crate::coordinator::serve_replicated`].
+pub fn plan_replicated(
+    g: &ModelGraph,
+    pieces: &PieceChain,
+    cluster: &Cluster,
+    t_lim: f64,
+    replicas: usize,
+) -> anyhow::Result<Vec<PipelinePlan>> {
+    anyhow::ensure!(
+        replicas >= 1 && replicas <= cluster.len(),
+        "replicas must be in 1..={} (got {replicas})",
+        cluster.len()
+    );
+    let groups = cluster.partition_capacity(replicas);
+    let mut plans = Vec::with_capacity(replicas);
+    for group in &groups {
+        let devices: Vec<Device> =
+            group.iter().map(|&i| cluster.devices[i].clone()).collect();
+        let sub = Cluster::new(devices, cluster.network);
+        let mut p = plan(g, pieces, &sub, t_lim)?;
+        // Remap sub-cluster device indices back onto the full cluster.
+        for s in &mut p.stages {
+            for d in &mut s.devices {
+                *d = group[*d];
+            }
+        }
+        plans.push(p);
+    }
+    Ok(plans)
 }

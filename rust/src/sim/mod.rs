@@ -1,16 +1,23 @@
-//! Execution simulator: runs a pipeline plan or a synchronous baseline
-//! schedule through the paper's cost model (Eq. 7–12) on a virtual
-//! cluster and reports every §6.3–6.5 metric: period, latency,
-//! throughput, per-device utilisation, redundancy ratio, memory
-//! footprint (model vs feature), and energy per inference.
+//! Analytical simulator: a thin driver over the shared event-driven
+//! [`crate::engine`]. It evaluates a pipeline plan or a synchronous
+//! baseline schedule through the paper's cost model (Eq. 7–12) on a
+//! virtual cluster, plays the resulting stage times through
+//! [`crate::engine::run_pipeline`] for the timeline, and reports every
+//! §6.3–6.5 metric: period, latency, throughput, per-device
+//! utilisation, redundancy ratio, memory footprint (model vs feature),
+//! and energy per inference.
 //!
-//! The pipeline timeline uses the exact completion recurrence
+//! The timeline comes from the engine's completion recurrence
 //! `c[s][n] = max(c[s-1][n], c[s][n-1]) + T_s`, which for constant stage
 //! times closes to `Σ T_s + (N−1)·max T_s` — fill, steady state, drain.
+//! The serving coordinator drives the *same* engine with real tensors,
+//! so simulated and served timings agree by construction (pinned by
+//! `rust/tests/agreement.rs`).
 
 use crate::baselines::{halo_fraction, SyncSchedule};
 use crate::cluster::Cluster;
 use crate::cost::{stage_cost, StageCost};
+use crate::engine::{run_pipeline, EngineConfig, StageProfile};
 use crate::graph::{LayerId, ModelGraph, Op, Shape};
 use crate::pipeline::PipelinePlan;
 
@@ -130,7 +137,12 @@ pub fn simulate_pipeline(
     let latency: f64 = stage_t.iter().sum();
     let period = stage_t.iter().cloned().fold(0.0, f64::max);
     let n = n_requests.max(1);
-    let makespan = latency + (n as f64 - 1.0) * period;
+    // Timeline from the shared engine: one replica, unit batches, open
+    // admission, all requests backlogged at t = 0.
+    let profiles: Vec<StageProfile> =
+        costs.iter().map(|c| StageProfile::from_stage_cost(c, &cluster.network)).collect();
+    let run = run_pipeline(&[profiles], &vec![0.0; n], &EngineConfig::default());
+    let makespan = run.report.makespan;
 
     let whole_model: f64 = crate::cost::total_flops(g);
     let mut per_device = Vec::new();
@@ -209,7 +221,14 @@ pub fn simulate_sync(
             mem_feature[dev] = mem_feature[dev].max(peak_feature_bytes(g, &gr.layers, frac));
         }
     }
-    let makespan = latency * n as f64;
+    // A synchronous scheme is a one-stage pipeline to the engine: every
+    // frame occupies the whole cluster for `latency`.
+    let run = run_pipeline(
+        &[vec![StageProfile::constant(latency)]],
+        &vec![0.0; n],
+        &EngineConfig::default(),
+    );
+    let makespan = run.report.makespan;
     let per_device = (0..cluster.len())
         .filter(|d| participating.contains(d))
         .map(|dev| {

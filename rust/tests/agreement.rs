@@ -1,0 +1,158 @@
+//! sim↔serve agreement suite: the analytical simulator and the serving
+//! coordinator are two drivers over the same event engine, and this
+//! matrix locks that down — for every model-zoo CNN, on homogeneous and
+//! heterogeneous clusters, the simulated and the served period/latency
+//! must agree within 1%.
+//!
+//! Serving uses the timing-only [`NullCompute`] backend: the
+//! coordinator's clocks are virtual, so the full serving machinery
+//! (admission, dispatch, tile geometry, stitch, live-set forwarding)
+//! runs at full model scale without paying for real convolutions.
+//!
+//! NASNet is represented by `nasnet_slice` + divide-and-conquer
+//! partitioning: direct Algorithm 1 on the width-8 full graph is the
+//! paper's >5h row (see `examples/nasnet_partition.rs`).
+
+use std::time::Duration;
+
+use pico::cluster::Cluster;
+use pico::coordinator::{self, NullCompute, Request, ServeOptions};
+use pico::graph::ModelGraph;
+use pico::partition::PieceChain;
+use pico::runtime::Tensor;
+use pico::{modelzoo, partition, pipeline};
+
+const ZOO: &[&str] = &[
+    "vgg16",
+    "resnet34",
+    "inceptionv3",
+    "nasnet",
+    "mobilenetv3",
+    "squeezenet",
+    "yolov2",
+];
+
+fn load(model: &str) -> (ModelGraph, PieceChain) {
+    if model == "nasnet" {
+        let g = modelzoo::nasnet_slice(1);
+        let pieces = partition::partition_divide_conquer(
+            &g,
+            5,
+            6,
+            Some(Duration::from_secs(300)),
+        )
+        .unwrap()
+        .pieces;
+        (g, pieces)
+    } else {
+        let g = modelzoo::by_name(model).unwrap();
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        (g, pieces)
+    }
+}
+
+fn requests(g: &ModelGraph, n: usize) -> Vec<Request> {
+    let (c, h, w) = g.input_shape;
+    (0..n as u64)
+        .map(|id| Request { id, input: Tensor::zeros(vec![c, h, w]), t_submit: 0.0 })
+        .collect()
+}
+
+/// One matrix cell: plan, simulate, serve, compare.
+fn check_agreement(model: &str, cluster: &Cluster) {
+    let (g, pieces) = load(model);
+    let plan = pipeline::plan(&g, &pieces, cluster, f64::INFINITY).unwrap();
+    let n = 5;
+    let predicted = pico::sim::simulate_pipeline(&g, cluster, &plan, n);
+    let report = coordinator::serve(&g, &plan, cluster, &NullCompute, requests(&g, n)).unwrap();
+    assert_eq!(report.responses.len(), n, "{model}: lost responses");
+
+    // Steady-state period within 1%.
+    let period_err = (report.period - predicted.period).abs() / predicted.period;
+    assert!(
+        period_err < 0.01,
+        "{model}: served period {} vs simulated {} ({:.3}% off)",
+        report.period,
+        predicted.period,
+        period_err * 100.0
+    );
+    // Single-frame latency within 1%: the first backlogged request sees
+    // no queueing, so its end-to-end latency is the pipeline latency.
+    let lat = report.responses[0].latency;
+    let lat_err = (lat - predicted.latency).abs() / predicted.latency;
+    assert!(
+        lat_err < 0.01,
+        "{model}: served latency {} vs simulated {} ({:.3}% off)",
+        lat,
+        predicted.latency,
+        lat_err * 100.0
+    );
+    // Makespan within 1% for good measure (same recurrence end to end).
+    let mk_err = (report.makespan - predicted.makespan).abs() / predicted.makespan;
+    assert!(mk_err < 0.01, "{model}: makespan {} vs {}", report.makespan, predicted.makespan);
+}
+
+#[test]
+fn agreement_matrix_homogeneous() {
+    let cluster = Cluster::homogeneous_rpi(4, 1.0);
+    for model in ZOO {
+        check_agreement(model, &cluster);
+    }
+}
+
+#[test]
+fn agreement_matrix_heterogeneous() {
+    let cluster = Cluster::paper_heterogeneous();
+    for model in ZOO {
+        check_agreement(model, &cluster);
+    }
+}
+
+/// The multi-replica scheduler's headline: on a 4-device heterogeneous
+/// cluster, two capacity-balanced replicas driven by the least-loaded
+/// dispatcher deliver ≥1.8× the throughput of a single replica (the
+/// acceptance bar for `benches/perf_engine.rs`).
+#[test]
+fn multi_replica_throughput_scales_on_heterogeneous_cluster() {
+    use pico::cluster::{Device, Network};
+    let cluster = Cluster::new(
+        vec![
+            Device::tx2(0, 2.2),
+            Device::tx2(1, 2.2),
+            Device::rpi(2, 1.5),
+            Device::rpi(3, 1.5),
+        ],
+        Network::wifi_50mbps(),
+    );
+    let g = modelzoo::vgg16();
+    let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+    let plans = pipeline::plan_replicated(&g, &pieces, &cluster, f64::INFINITY, 2).unwrap();
+    assert_eq!(plans.len(), 2);
+    let n = 30;
+    let single = coordinator::serve_replicated(
+        &g,
+        &plans[..1],
+        &cluster,
+        &NullCompute,
+        requests(&g, n),
+        &ServeOptions::default(),
+    )
+    .unwrap();
+    let multi = coordinator::serve_replicated(
+        &g,
+        &plans,
+        &cluster,
+        &NullCompute,
+        requests(&g, n),
+        &ServeOptions::default(),
+    )
+    .unwrap();
+    assert_eq!(multi.responses.len(), n);
+    assert!(
+        multi.throughput >= 1.8 * single.throughput,
+        "2 replicas {}/s vs 1 replica {}/s — {:.2}x",
+        multi.throughput,
+        single.throughput,
+        multi.throughput / single.throughput
+    );
+}

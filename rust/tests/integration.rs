@@ -20,6 +20,25 @@ fn artifacts_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
+/// The python↔rust contract tests need the AOT artifacts exported by
+/// `python/compile/aot.py` (`make artifacts`). A bare checkout doesn't
+/// have them — those tests skip with a clear message instead of failing,
+/// so `cargo test -q` is green without the python toolchain.
+fn artifacts_or_skip(test: &str) -> Option<PathBuf> {
+    let dir = artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!(
+            "SKIP {test}: python AOT artifacts not found at {} — run `make artifacts` \
+             (needs the python/ jax toolchain); the test is a python↔rust contract check \
+             and exercises nothing on a rust-only checkout",
+            dir.display()
+        );
+        None
+    }
+}
+
 fn rand_input(g: &ModelGraph, seed: u64) -> Tensor {
     let (c, h, w) = g.input_shape;
     let mut rng = Rng::new(seed);
@@ -86,11 +105,9 @@ fn t_lim_respected_through_full_plan() {
 /// for the AOT default plan must have a matching artifact key.
 #[test]
 fn rust_geometry_matches_python_artifacts() {
-    let dir = artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: run `make artifacts`");
+    let Some(dir) = artifacts_or_skip("rust_geometry_matches_python_artifacts") else {
         return;
-    }
+    };
     for model in ["tinyvgg", "tinyresnet", "tinyinception"] {
         let g = modelzoo::load_tiny(&dir, model).unwrap();
         let arts = PipelineArtifacts::load(&dir, model).unwrap();
@@ -130,11 +147,9 @@ fn rust_geometry_matches_python_artifacts() {
 /// whole-model executable — all three tiny models.
 #[test]
 fn pjrt_and_native_backends_agree() {
-    let dir = artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: run `make artifacts`");
+    let Some(dir) = artifacts_or_skip("pjrt_and_native_backends_agree") else {
         return;
-    }
+    };
     let engine = Arc::new(Engine::cpu().unwrap());
     for model in ["tinyvgg", "tinyresnet", "tinyinception"] {
         let g = modelzoo::load_tiny(&dir, model).unwrap();
@@ -284,11 +299,9 @@ fn metric_ranges_sane() {
 /// (the same goldens python/tests/test_plan.py pins).
 #[test]
 fn golden_feed_geometry_shared_with_python() {
-    let dir = artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: run `make artifacts`");
+    let Some(dir) = artifacts_or_skip("golden_feed_geometry_shared_with_python") else {
         return;
-    }
+    };
     let g = modelzoo::load_tiny(&dir, "tinyvgg").unwrap();
     let stage1: Vec<LayerId> =
         ["conv1", "conv2", "pool1"].iter().map(|n| g.by_name(n).unwrap()).collect();

@@ -1,0 +1,118 @@
+//! Minimal vendored stand-in for the `anyhow` crate.
+//!
+//! The build environment has no registry access, so this workspace
+//! vendors the tiny subset of `anyhow` the codebase actually uses:
+//! [`Result`], [`Error`], [`anyhow!`], [`bail!`] and [`ensure!`], plus
+//! the blanket `From<E: std::error::Error>` conversion that makes `?`
+//! work on std errors (io, parse, channel) inside `anyhow::Result`
+//! functions. Dropping the real `anyhow` crate back in is a one-line
+//! change in `rust/Cargo.toml`; nothing here extends its semantics.
+
+use std::fmt;
+
+/// A type-erased error: a message built eagerly from the source error's
+/// chain. `{}` and `{:#}` both print the full chain (the real anyhow
+/// prints the chain only under `{:#}`; callers here only ever format
+/// errors for humans, so the distinction is not load-bearing).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error { msg: msg.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// The same coherence trick the real anyhow uses: `Error` itself does not
+// implement `std::error::Error`, so this blanket impl is allowed and
+// gives `?` conversions from any std error type.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn macros_build_errors() {
+        fn inner(x: usize) -> crate::Result<usize> {
+            crate::ensure!(x > 1, "x too small: {x}");
+            if x > 10 {
+                crate::bail!("x too large: {}", x);
+            }
+            Ok(x)
+        }
+        assert_eq!(inner(5).unwrap(), 5);
+        assert_eq!(format!("{}", inner(0).err().unwrap()), "x too small: 0");
+        assert_eq!(format!("{:#}", inner(11).err().unwrap()), "x too large: 11");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> crate::Result<u32> {
+            Ok(s.parse::<u32>()?)
+        }
+        assert_eq!(parse("7").unwrap(), 7);
+        assert!(format!("{}", parse("x").err().unwrap()).contains("invalid digit"));
+    }
+}

@@ -1,0 +1,123 @@
+//! Vendored stub of the `xla` (xla-rs) PJRT bindings.
+//!
+//! The build environment has no registry access and no libxla, so this
+//! crate mirrors the exact API surface `pico::runtime::engine` consumes
+//! and makes every fallible entry point return [`Error`] stating that
+//! the PJRT backend is unavailable. The serving stack degrades
+//! gracefully: `Engine::cpu()` fails, callers fall back to the native
+//! backend, and artifact-dependent tests skip. To enable real AOT
+//! execution, replace the `xla = { path = "../vendor/xla" }` dependency
+//! in `rust/Cargo.toml` with the real xla-rs crate — no source changes.
+
+use std::fmt;
+
+const UNAVAILABLE: &str =
+    "PJRT backend unavailable: built against the vendored xla stub (swap in the real xla-rs \
+     crate in rust/Cargo.toml to execute AOT artifacts)";
+
+/// Stub error carrying the unavailability message.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable() -> Error {
+        Error(UNAVAILABLE.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Host-side literal (stub: holds nothing).
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::unavailable())
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(Error::unavailable())
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Err(Error::unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Array shape metadata (stub: always empty).
+pub struct ArrayShape;
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &[]
+    }
+}
+
+/// Device-side buffer handle (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Compiled executable handle (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable())
+    }
+}
+
+/// PJRT client (stub: construction fails, so callers fall back).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Parsed HLO module (stub: parsing fails).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable())
+    }
+}
+
+/// XLA computation wrapper (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
