@@ -3,9 +3,10 @@
 //!
 //! Pipeline: Pallas conv kernels (L1) → jax TinyVGG (L2) → AOT HLO-text
 //! artifacts → rust PJRT runtime → threaded PICO coordinator (L3) with a
-//! simulated 4-device cluster. Every response is checked bit-close
-//! against (a) the single-executable PJRT whole-model run and (b) the
-//! pure-rust reference numerics of the plan geometry.
+//! simulated 4-device cluster, all driven through the `Deployment`
+//! facade: `DeploymentPlan::from_artifacts` wraps the AOT-exported plan,
+//! `.serve(Backend::Pjrt, ...)` executes it. Every response is checked
+//! bit-close against the single-executable PJRT whole-model run.
 //!
 //! Requires `make artifacts`. The run is recorded in EXPERIMENTS.md §E2E.
 //!
@@ -16,12 +17,10 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use pico::cluster::Cluster;
-use pico::coordinator::{self, PjrtCompute, Request};
-use pico::pipeline::PipelinePlan;
+use pico::coordinator::Request;
+use pico::deploy::{Backend, DeploymentPlan, ServeConfig};
 use pico::runtime::{Engine, PipelineArtifacts, Tensor};
 use pico::util::{fmt_secs, Rng, Table};
-use pico::{baselines, modelzoo, partition, sim};
 
 fn main() -> anyhow::Result<()> {
     let dir = PathBuf::from("artifacts");
@@ -37,19 +36,26 @@ fn main() -> anyhow::Result<()> {
     }
     t.print();
 
-    // Throughput comparison vs baselines on the simulated cluster for the
-    // tinyvgg plan (cost-model apples-to-apples).
-    let g = modelzoo::load_tiny(&dir, "tinyvgg")?;
-    let engine = Arc::new(Engine::cpu()?);
-    let artifacts = Arc::new(PipelineArtifacts::load(&dir, "tinyvgg")?);
-    let _ = engine;
-    let (plan, n_dev) = PipelinePlan::from_artifact_plan(&g, &artifacts.plan)?;
-    let cluster = Cluster::homogeneous_rpi(n_dev, 1.0);
-    let pico_r = sim::simulate_pipeline(&g, &cluster, &plan, 200);
-    let pieces = partition::partition(&g, 5, None)?.pieces;
-    let lw = sim::simulate_sync(&g, &cluster, &baselines::layer_wise(&g, &cluster), 200);
-    let ofl = sim::simulate_sync(&g, &cluster, &baselines::optimal_fused(&g, &pieces, &cluster), 200);
-    println!("\nscheme comparison on tinyvgg, {} simulated rpi devices:", n_dev);
+    // Throughput comparison vs baselines for the tinyvgg deployment
+    // (cost-model apples-to-apples): same model, same simulated
+    // cluster, schemes swapped through the registry.
+    let aot = DeploymentPlan::from_artifacts(&dir, "tinyvgg")?;
+    println!("\nscheme comparison on tinyvgg, {} simulated rpi devices:", aot.cluster.len());
+    let lw = DeploymentPlan::builder()
+        .model("tinyvgg")
+        .artifacts_dir(&dir)
+        .cluster(aot.cluster.clone())
+        .scheme("lw")
+        .build()?
+        .simulate(200)?;
+    let ofl = DeploymentPlan::builder()
+        .model("tinyvgg")
+        .artifacts_dir(&dir)
+        .cluster(aot.cluster.clone())
+        .scheme("ofl")
+        .build()?
+        .simulate(200)?;
+    let pico_r = aot.simulate(200)?;
     let mut ct = Table::new(&["scheme", "throughput /s", "vs LW"]);
     for r in [&lw, &ofl, &pico_r] {
         ct.row(&[
@@ -63,14 +69,10 @@ fn main() -> anyhow::Result<()> {
 }
 
 fn serve_one(dir: &PathBuf, model: &str) -> anyhow::Result<Vec<String>> {
-    let g = modelzoo::load_tiny(dir, model)?;
-    let engine = Arc::new(Engine::cpu()?);
-    let artifacts = Arc::new(PipelineArtifacts::load(dir, model)?);
-    let (plan, n_dev) = PipelinePlan::from_artifact_plan(&g, &artifacts.plan)?;
-    let cluster = Cluster::homogeneous_rpi(n_dev, 1.0);
+    let d = DeploymentPlan::from_artifacts(dir, model)?;
 
     // Real image-like inputs (deterministic).
-    let (c, h, w) = g.input_shape;
+    let (c, h, w) = d.graph.input_shape;
     let mut rng = Rng::new(2024);
     let n_req = 32usize;
     let requests: Vec<Request> = (0..n_req as u64)
@@ -82,12 +84,14 @@ fn serve_one(dir: &PathBuf, model: &str) -> anyhow::Result<Vec<String>> {
         .collect();
 
     // Ground truth: the whole-model AOT executable, one shot per request.
+    let engine = Arc::new(Engine::cpu()?);
+    let artifacts = Arc::new(PipelineArtifacts::load(dir, model)?);
     let full = artifacts.full_model(&engine)?;
     let expect: Vec<Tensor> = requests.iter().map(|r| full.run(&r.input)).collect::<Result<_, _>>()?;
 
-    // Serve through the pipeline.
-    let compute = PjrtCompute { engine: engine.clone(), artifacts: artifacts.clone() };
-    let report = coordinator::serve(&g, &plan, &cluster, &compute, requests)?;
+    // Serve through the deployed pipeline.
+    let cfg = ServeConfig { requests: Some(requests), ..ServeConfig::default() };
+    let report = d.serve(&Backend::Pjrt { dir: dir.clone() }, &cfg)?;
     anyhow::ensure!(report.responses.len() == n_req, "lost responses");
     let mut max_diff = 0.0f32;
     for (resp, want) in report.responses.iter().zip(&expect) {
@@ -97,8 +101,8 @@ fn serve_one(dir: &PathBuf, model: &str) -> anyhow::Result<Vec<String>> {
 
     Ok(vec![
         model.to_string(),
-        format!("{}", plan.stages.len()),
-        format!("{n_dev}"),
+        format!("{}", d.replicas[0].stages.len()),
+        format!("{}", d.cluster.len()),
         format!("{n_req}"),
         format!("{max_diff:.2e}"),
         format!("{:.2}", report.throughput),

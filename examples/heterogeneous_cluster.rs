@@ -1,40 +1,40 @@
 //! Heterogeneous-cluster walkthrough: the paper's §6.4 testbed
 //! (2× Jetson TX2 NX + 6× Raspberry-Pi at mixed frequencies) running
-//! VGG16 and YOLOv2 under every parallelisation scheme, reporting the
-//! Table-5 metrics (utilisation, redundancy, memory) and Fig.-16 energy.
+//! VGG16 and YOLOv2 under every registered parallelisation scheme,
+//! reporting the Table-5 metrics (utilisation, redundancy, memory) and
+//! Fig.-16 energy — all through the `Deployment` facade's scheme
+//! registry.
 //!
 //! ```bash
 //! cargo run --release --example heterogeneous_cluster
 //! ```
 
 use pico::cluster::Cluster;
+use pico::deploy::DeploymentPlan;
 use pico::util::{fmt_secs, Table};
-use pico::{baselines, modelzoo, partition, pipeline, sim};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), pico::PicoError> {
     let cluster = Cluster::paper_heterogeneous();
     println!(
         "cluster: {}",
         cluster.devices.iter().map(|d| d.name.clone()).collect::<Vec<_>>().join(", ")
     );
     for model in ["vgg16", "yolov2"] {
-        let g = modelzoo::by_name(model)?;
-        println!("\n=== {} ===", g.name);
-        let pieces = partition::partition(&g, 5, None)?.pieces;
+        println!("\n=== {model} ===");
         let n = 50;
-
-        let ce = sim::simulate_sync(&g, &cluster, &baselines::coedge(&g, &cluster), n);
-        let efl = sim::simulate_sync(&g, &cluster, &baselines::early_fused(&g, &cluster, 2), n);
-        let ofl =
-            sim::simulate_sync(&g, &cluster, &baselines::optimal_fused(&g, &pieces, &cluster), n);
-        let plan = pipeline::plan(&g, &pieces, &cluster, f64::INFINITY)?;
-        let pico_r = sim::simulate_pipeline(&g, &cluster, &plan, n);
 
         let mut t = Table::new(&[
             "scheme", "thpt /s", "latency", "avg util %", "avg redu %", "avg mem MB",
             "energy/task J",
         ]);
-        for r in [&ce, &efl, &ofl, &pico_r] {
+        let mut pico_report = None;
+        for scheme in ["ce", "efl", "ofl", "pico"] {
+            let d = DeploymentPlan::builder()
+                .model(model)
+                .cluster(cluster.clone())
+                .scheme(scheme)
+                .build()?;
+            let r = d.simulate(n)?;
             t.row(&[
                 r.scheme.clone(),
                 format!("{:.3}", r.throughput),
@@ -44,10 +44,14 @@ fn main() -> anyhow::Result<()> {
                 format!("{:.1}", r.avg_mem() / 1e6),
                 format!("{:.1}", r.energy_per_task()),
             ]);
+            if scheme == "pico" {
+                pico_report = Some(r);
+            }
         }
         t.print();
 
         // Per-device drill-down for PICO (Table 5's per-device columns).
+        let pico_r = pico_report.expect("pico scheme ran");
         let mut pd = Table::new(&["device", "util %", "redu %", "mem MB"]);
         for d in &pico_r.per_device {
             pd.row(&[

@@ -8,6 +8,8 @@
 
 use std::time::Duration;
 
+use pico::cluster::Cluster;
+use pico::deploy::DeploymentPlan;
 use pico::graph::width;
 use pico::util::{fmt_secs, Table};
 use pico::{modelzoo, partition};
@@ -44,5 +46,16 @@ fn main() -> anyhow::Result<()> {
     }
     t.print();
     println!("(Algorithm 1 runs once per CNN regardless of cluster; the cost is offline.)");
+
+    // The same divide-and-conquer knob through the Deployment facade: a
+    // NASNet slice planned, explained and simulated end to end.
+    let slice = modelzoo::nasnet_slice(1);
+    let d = DeploymentPlan::builder()
+        .graph(slice)
+        .cluster(Cluster::paper_heterogeneous())
+        .dc_parts(6)
+        .partition_budget(Duration::from_secs(300))
+        .build()?;
+    print!("\n{}", d.explain());
     Ok(())
 }

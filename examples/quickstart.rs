@@ -1,63 +1,28 @@
-//! Quickstart: partition a CNN, plan a pipeline, compare against running
-//! the same model on one device.
+//! Quickstart: the whole PICO workflow through the `Deployment` facade —
+//! build a plan, inspect it, simulate it, serve it.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
 use pico::cluster::Cluster;
-use pico::util::{fmt_secs, Table};
-use pico::{modelzoo, partition, pipeline, sim};
+use pico::deploy::{Backend, DeploymentPlan, ServeConfig};
 
-fn main() -> anyhow::Result<()> {
-    // 1. A model from the zoo (any DAG: chain, block or graph structure).
-    let g = modelzoo::vgg16();
-    println!("model: {} ({} layers, {:.1} GFLOPs)", g.name, g.n_layers(), pico::cost::total_flops(&g) / 1e9);
+fn main() -> Result<(), pico::PicoError> {
+    // Builder → versioned plan artifact: model + cluster in, pipeline out.
+    let plan = DeploymentPlan::builder()
+        .model("vgg16")
+        .cluster(Cluster::homogeneous_rpi(4, 1.0))
+        .scheme("pico")
+        .build()?;
+    print!("{}", plan.explain());
 
-    // 2. Algorithm 1: orchestrate the DAG into a chain of pieces.
-    let pieces = partition::partition(&g, 5, None)?;
-    println!(
-        "Algorithm 1: {} pieces, max piece redundancy {:.3e} FLOPs ({})",
-        pieces.pieces.len(),
-        pieces.max_redundancy,
-        fmt_secs(pieces.elapsed.as_secs_f64())
-    );
+    // The same artifact simulates analytically ...
+    let sim = plan.simulate(100)?;
+    println!("simulated: {:.2} inferences/s at latency {:.2}s", sim.throughput, sim.latency);
 
-    // 3. A cluster: four Raspberry-Pi 4Bs at 1.0 GHz over 50 Mbps Wi-Fi.
-    let cluster = Cluster::homogeneous_rpi(4, 1.0);
-
-    // 4. Algorithms 2+3: build the inference pipeline.
-    let plan = pipeline::plan(&g, &pieces.pieces, &cluster, f64::INFINITY)?;
-    let cost = plan.cost(&g, &cluster);
-    println!(
-        "PICO plan: {} stages, period {} -> {:.2} inferences/s (latency {})",
-        plan.stages.len(),
-        fmt_secs(cost.period),
-        1.0 / cost.period,
-        fmt_secs(cost.latency)
-    );
-
-    // 5. Compare with one device doing everything.
-    let single = Cluster::homogeneous_rpi(1, 1.0);
-    let single_pieces = partition::partition(&g, 5, None)?.pieces;
-    let single_plan = pipeline::plan(&g, &single_pieces, &single, f64::INFINITY)?;
-    let solo = sim::simulate_pipeline(&g, &single, &single_plan, 100);
-    let pico_sim = sim::simulate_pipeline(&g, &cluster, &plan, 100);
-
-    let mut t = Table::new(&["setup", "throughput /s", "latency", "avg util %", "avg mem MB"]);
-    for r in [&solo, &pico_sim] {
-        t.row(&[
-            if r.per_device.len() == 1 { "1x Rpi".into() } else { "PICO 4x Rpi".into() },
-            format!("{:.3}", r.throughput),
-            fmt_secs(r.latency),
-            format!("{:.1}", r.avg_utilization() * 100.0),
-            format!("{:.1}", r.avg_mem() / 1e6),
-        ]);
-    }
-    t.print();
-    println!(
-        "speedup: {:.2}x with 4 devices",
-        pico_sim.throughput / solo.throughput
-    );
+    // ... and serves through the threaded coordinator (timing backend).
+    let report = plan.serve(&Backend::Null, &ServeConfig::default())?;
+    println!("served {} requests: {:.2}/s", report.responses.len(), report.throughput);
     Ok(())
 }

@@ -1,19 +1,20 @@
-//! Multi-replica serving walkthrough: partition a heterogeneous cluster
-//! into capacity-balanced replicas, plan a pipeline per replica, and
-//! drive a bursty request stream through the event-driven coordinator —
-//! with bounded admission, micro-batching and least-loaded dispatch —
-//! while verifying every response against the whole-model reference.
+//! Multi-replica serving walkthrough: one `Deployment` per replica
+//! count over a heterogeneous cluster, driving a bursty request stream
+//! through the event-driven coordinator — with bounded admission,
+//! micro-batching and least-loaded dispatch — while verifying every
+//! response against the whole-model reference.
 //!
 //! ```bash
 //! cargo run --release --example replicated_serve
 //! ```
 
 use pico::cluster::{Cluster, Device, Network};
-use pico::coordinator::{self, AdmissionPolicy, NativeCompute, Request, ServeOptions};
+use pico::coordinator::{AdmissionPolicy, Request, ServeOptions};
+use pico::deploy::{Backend, DeploymentPlan, Replicas, ServeConfig};
+use pico::modelzoo;
 use pico::runtime::executor::{model_weights, run_full_native};
 use pico::runtime::Tensor;
 use pico::util::{fmt_secs, Rng, Table};
-use pico::{modelzoo, partition, pipeline};
 
 fn main() -> anyhow::Result<()> {
     // A 6-device heterogeneous cluster: 2x Jetson TX2 NX + 4x RPi.
@@ -29,8 +30,8 @@ fn main() -> anyhow::Result<()> {
 
     // A DAG model with skip connections, small enough for real numerics.
     let g = modelzoo::synthetic_graph(3, 12);
-    let pieces = partition::partition(&g, 5, None)?.pieces;
-    let weights = model_weights(&g, 7);
+    let weights_seed = 7u64;
+    let weights = model_weights(&g, weights_seed);
 
     // A bursty arrival stream: Poisson-ish gaps around half the period.
     let mut rng = Rng::new(2026);
@@ -65,20 +66,21 @@ fn main() -> anyhow::Result<()> {
         "deployment", "replicas", "throughput /s", "period", "p50 lat", "p95 lat", "rejected",
     ]);
     for replicas in [1usize, 2, 3] {
-        let plans = pipeline::plan_replicated(&g, &pieces, &cluster, f64::INFINITY, replicas)?;
-        let compute = NativeCompute { weights: model_weights(&g, 7) };
-        let report = coordinator::serve_replicated(
-            &g,
-            &plans,
-            &cluster,
-            &compute,
-            requests.clone(),
-            &opts,
-        )?;
+        let d = DeploymentPlan::builder()
+            .graph(g.clone())
+            .cluster(cluster.clone())
+            .replicas(Replicas::Fixed(replicas))
+            .build()?;
+        let cfg = ServeConfig {
+            requests: Some(requests.clone()),
+            engine: opts.clone(),
+            ..ServeConfig::default()
+        };
+        let report = d.serve(&Backend::Native { seed: weights_seed }, &cfg)?;
         anyhow::ensure!(report.responses.len() == n_req, "lost responses");
         for (resp, want) in report.responses.iter().zip(&expect) {
-            let d = resp.output.max_abs_diff(want);
-            anyhow::ensure!(d < 1e-3, "response {} diverged: {d}", resp.id);
+            let diff = resp.output.max_abs_diff(want);
+            anyhow::ensure!(diff < 1e-3, "response {} diverged: {diff}", resp.id);
         }
         table.row(&[
             format!("{replicas} replica(s), Q=16, B=4"),
@@ -94,18 +96,21 @@ fn main() -> anyhow::Result<()> {
 
     // Load shedding under a tight queue: overload is rejected, not
     // queued.
-    let plans = pipeline::plan_replicated(&g, &pieces, &cluster, f64::INFINITY, 2)?;
-    let compute = NativeCompute { weights };
-    let shed = coordinator::serve_replicated(
-        &g,
-        &plans,
-        &cluster,
-        &compute,
-        requests.clone(),
-        &ServeOptions {
-            queue_capacity: Some(2),
-            max_batch: 1,
-            admission: AdmissionPolicy::Shed,
+    let d = DeploymentPlan::builder()
+        .graph(g.clone())
+        .cluster(cluster.clone())
+        .replicas(Replicas::Fixed(2))
+        .build()?;
+    let shed = d.serve(
+        &Backend::Native { seed: weights_seed },
+        &ServeConfig {
+            requests: Some(requests.clone()),
+            engine: ServeOptions {
+                queue_capacity: Some(2),
+                max_batch: 1,
+                admission: AdmissionPolicy::Shed,
+            },
+            ..ServeConfig::default()
         },
     )?;
     println!(

@@ -73,6 +73,16 @@ fn main() {
     t.row(&["Algorithms 2+3, VGG16 x 8 devices".into(), format!("{:.1}ms", a23 * 1e3), "5".into(),
         "paper <1s on a Raspberry-Pi".into()]);
 
+    // 5b. block_pieces at NASNet scale: the block-baseline cut scan is a
+    // single O(V+E) prefix pass over ~600 vertices — must stay in the
+    // microsecond band even on the widest zoo graph.
+    let nas = modelzoo::nasnet_large();
+    let bp = time(50, || {
+        let _ = partition::block_pieces(&nas);
+    });
+    t.row(&["block_pieces, NASNet-A-Large".into(), format!("{:.1}us", bp * 1e6), "50".into(),
+        "O(V+E) prefix scan".into()]);
+
     // 6. Native conv tile (the per-device compute the coordinator drives).
     let tiny = modelzoo::synthetic_chain(1);
     let wts = pico::runtime::executor::model_weights(&tiny, 0);

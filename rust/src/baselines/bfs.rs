@@ -213,11 +213,12 @@ pub fn bfs_optimal(
     let mut acc = Vec::new();
     s.stages(0, &mut acc);
     let best_cfg = s.best_cfg.take();
-    let plan = best_cfg.map(|cfg| PipelinePlan {
-        stages: cfg
-            .into_iter()
-            .map(|(i, j, devices)| Stage { pieces: (i, j), layers: s.segment(i, j), devices })
-            .collect(),
+    let plan = best_cfg.map(|cfg| {
+        PipelinePlan::pipelined(
+            cfg.into_iter()
+                .map(|(i, j, devices)| Stage::new((i, j), s.segment(i, j), devices))
+                .collect(),
+        )
     });
     BfsResult {
         plan,

@@ -42,7 +42,7 @@ pub fn coedge(g: &ModelGraph, cluster: &Cluster) -> SyncSchedule {
             halo_sync: true,
         });
     }
-    SyncSchedule { name: "CE", groups }
+    SyncSchedule { name: "CE".into(), groups }
 }
 
 /// Fraction of a layer's feature traffic that halo-only sync moves:

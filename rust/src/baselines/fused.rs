@@ -34,7 +34,7 @@ pub fn early_fused(g: &ModelGraph, cluster: &Cluster, fuse_pools: usize) -> Sync
     if !tail.is_empty() {
         groups.push(SyncGroup { layers: tail, devices: vec![0], halo_sync: false });
     }
-    SyncSchedule { name: "EFL", groups }
+    SyncSchedule { name: "EFL".into(), groups }
 }
 
 /// OFL: DP over the piece chain choosing fusion boundaries that minimise
@@ -78,7 +78,7 @@ pub fn optimal_fused(g: &ModelGraph, pieces: &PieceChain, cluster: &Cluster) -> 
         .into_iter()
         .map(|(i, jj)| SyncGroup { layers: seg(i, jj), devices: all.clone(), halo_sync: false })
         .collect();
-    SyncSchedule { name: "OFL", groups }
+    SyncSchedule { name: "OFL".into(), groups }
 }
 
 #[cfg(test)]

@@ -13,7 +13,7 @@ pub fn layer_wise(g: &ModelGraph, cluster: &Cluster) -> SyncSchedule {
         .filter(|&id| g.layer(id).op != Op::Input)
         .map(|id| SyncGroup { layers: vec![id], devices: all.clone(), halo_sync: false })
         .collect();
-    SyncSchedule { name: "LW", groups }
+    SyncSchedule { name: "LW".into(), groups }
 }
 
 #[cfg(test)]

@@ -26,6 +26,7 @@ pub use fused::{early_fused, optimal_fused};
 pub use layerwise::layer_wise;
 
 use crate::graph::LayerId;
+use crate::pipeline::{ExecutionMode, PipelinePlan, Stage};
 
 /// One synchronously executed group: `layers` fused (no communication
 /// inside), feature-split across `device_count` devices; after the group
@@ -43,6 +44,44 @@ pub struct SyncGroup {
 /// A non-pipelined schedule: groups run in sequence per inference.
 #[derive(Debug, Clone)]
 pub struct SyncSchedule {
-    pub name: &'static str,
+    pub name: String,
     pub groups: Vec<SyncGroup>,
+}
+
+impl SyncSchedule {
+    /// Lift the schedule into the unified plan representation (one
+    /// [`ExecutionMode::Synchronous`] stage per group) so every scheme
+    /// flows through [`crate::deploy::Scheme::plan`].
+    pub fn to_plan(&self) -> PipelinePlan {
+        let stages = self
+            .groups
+            .iter()
+            .enumerate()
+            .map(|(k, gr)| Stage {
+                pieces: (k, k),
+                layers: gr.layers.clone(),
+                devices: gr.devices.clone(),
+                halo_sync: gr.halo_sync,
+            })
+            .collect();
+        PipelinePlan { stages, execution: ExecutionMode::Synchronous }
+    }
+
+    /// Inverse of [`SyncSchedule::to_plan`], used by the simulator to
+    /// cost a synchronous plan loaded from an artifact.
+    pub fn from_plan(name: &str, plan: &PipelinePlan) -> SyncSchedule {
+        debug_assert_eq!(plan.execution, ExecutionMode::Synchronous);
+        SyncSchedule {
+            name: name.to_string(),
+            groups: plan
+                .stages
+                .iter()
+                .map(|s| SyncGroup {
+                    layers: s.layers.clone(),
+                    devices: s.devices.clone(),
+                    halo_sync: s.halo_sync,
+                })
+                .collect(),
+        }
+    }
 }

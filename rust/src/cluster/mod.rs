@@ -6,6 +6,8 @@
 //! uniform WLAN bandwidth b, so a simulated device is exactly that tuple
 //! plus the power/memory attributes used by the §6.3–6.4 experiments.
 
+use crate::error::PicoError;
+use crate::json::{obj, Value};
 use crate::util::Rng;
 
 /// One mobile device `d_k`.
@@ -51,6 +53,23 @@ impl Device {
             active_power_w: 7.5,
             standby_power_w: 3.0,
             mem_bytes: 4 * 1024 * 1024 * 1024,
+        }
+    }
+
+    /// Any other device kind: an rpi-class ARM core model (2 flop/cycle
+    /// NEON fp32, frequency-scaled power) with the kind preserved in
+    /// the name — so heterogeneous clusters beyond the paper's two
+    /// device models stay expressible from configs and the CLI's
+    /// `--device KIND:GHZxCOUNT` flag.
+    pub fn generic(id: usize, kind: &str, ghz: f64) -> Device {
+        Device {
+            id,
+            name: format!("{kind}@{ghz:.1}"),
+            flops: ghz * 1e9 * 2.0,
+            alpha: 1.0,
+            active_power_w: 3.4 * (0.5 + ghz / 3.0),
+            standby_power_w: 1.9,
+            mem_bytes: 2 * 1024 * 1024 * 1024,
         }
     }
 
@@ -171,6 +190,77 @@ impl Cluster {
             g.sort_unstable();
         }
         groups
+    }
+
+    /// Serialize the full device tuples (not just kind+GHz shorthand):
+    /// a plan artifact must reproduce the exact capacities it was
+    /// computed against, wherever it is re-loaded.
+    pub fn to_json(&self) -> Value {
+        let devices: Vec<Value> = self
+            .devices
+            .iter()
+            .map(|d| {
+                obj(vec![
+                    ("id", d.id.into()),
+                    ("name", d.name.as_str().into()),
+                    ("flops", d.flops.into()),
+                    ("alpha", d.alpha.into()),
+                    ("active_power_w", d.active_power_w.into()),
+                    ("standby_power_w", d.standby_power_w.into()),
+                    ("mem_bytes", d.mem_bytes.into()),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("devices", Value::Arr(devices)),
+            (
+                "network",
+                obj(vec![
+                    ("bandwidth_bps", self.network.bandwidth_bps.into()),
+                    ("latency_s", self.network.latency_s.into()),
+                ]),
+            ),
+        ])
+    }
+
+    /// Inverse of [`Cluster::to_json`].
+    pub fn from_json(v: &Value) -> Result<Cluster, PicoError> {
+        let arr = v
+            .get("devices")
+            .as_arr()
+            .ok_or_else(|| PicoError::InvalidCluster("missing devices array".into()))?;
+        if arr.is_empty() {
+            return Err(PicoError::InvalidCluster("cluster has no devices".into()));
+        }
+        let mut devices = Vec::with_capacity(arr.len());
+        for (i, dv) in arr.iter().enumerate() {
+            let num = |key: &str| -> Result<f64, PicoError> {
+                dv.get(key).as_f64().ok_or_else(|| {
+                    PicoError::InvalidCluster(format!("device {i}: missing field {key:?}"))
+                })
+            };
+            devices.push(Device {
+                id: dv.get("id").as_usize().unwrap_or(i),
+                name: dv.get("name").as_str().unwrap_or("device").to_string(),
+                flops: num("flops")?,
+                alpha: num("alpha")?,
+                active_power_w: num("active_power_w")?,
+                standby_power_w: num("standby_power_w")?,
+                mem_bytes: dv.get("mem_bytes").as_usize().unwrap_or(0),
+            });
+        }
+        let nw = v.get("network");
+        let network = Network {
+            bandwidth_bps: nw
+                .get("bandwidth_bps")
+                .as_f64()
+                .ok_or_else(|| PicoError::InvalidCluster("missing network.bandwidth_bps".into()))?,
+            latency_s: nw
+                .get("latency_s")
+                .as_f64()
+                .ok_or_else(|| PicoError::InvalidCluster("missing network.latency_s".into()))?,
+        };
+        Ok(Cluster::new(devices, network))
     }
 }
 

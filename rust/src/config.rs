@@ -7,7 +7,9 @@ use crate::json::Value;
 /// One device entry in a cluster config.
 #[derive(Debug, Clone)]
 pub struct DeviceConfig {
-    /// "rpi" or "tx2".
+    /// "rpi", "tx2", or any other kind (modelled as a generic
+    /// rpi-class core named after the kind — see
+    /// [`crate::cluster::Device::generic`]).
     pub kind: String,
     pub ghz: f64,
     pub count: usize,
@@ -83,7 +85,9 @@ impl Config {
         Config::from_json(&Value::from_file(path)?)
     }
 
-    /// Materialise the cluster described by `devices`.
+    /// Materialise the cluster described by `devices`. Kinds beyond
+    /// the paper's two testbed models become generic rpi-class cores
+    /// that keep their kind name (no silent re-labelling).
     pub fn cluster(&self) -> Cluster {
         let mut devs = Vec::new();
         for dc in &self.devices {
@@ -91,7 +95,8 @@ impl Config {
                 let id = devs.len();
                 devs.push(match dc.kind.as_str() {
                     "tx2" => Device::tx2(id, dc.ghz),
-                    _ => Device::rpi(id, dc.ghz),
+                    "rpi" => Device::rpi(id, dc.ghz),
+                    other => Device::generic(id, other, dc.ghz),
                 });
             }
         }

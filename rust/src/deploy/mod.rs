@@ -1,0 +1,786 @@
+//! # The `Deployment` facade — build once, persist, run anywhere.
+//!
+//! PICO's product is the *deployment plan* (§4 partition + §5 mapping),
+//! so this module makes the plan the first-class artifact and the only
+//! public entry path:
+//!
+//! ```no_run
+//! use pico::deploy::{Backend, DeploymentPlan, Replicas, ServeConfig};
+//!
+//! let plan = DeploymentPlan::builder()
+//!     .model("vgg16")
+//!     .cluster(pico::cluster::Cluster::paper_heterogeneous())
+//!     .scheme("pico")
+//!     .replicas(Replicas::Auto)
+//!     .build()?;
+//! plan.save(std::path::Path::new("plan.json"))?;          // on the laptop
+//! let plan = DeploymentPlan::load(std::path::Path::new("plan.json"))?; // on the cluster
+//! let sim = plan.simulate(100)?;
+//! let report = plan.serve(&Backend::Null, &ServeConfig::default())?;
+//! println!("{}", plan.explain());
+//! println!("simulated {:.2}/s, served {:.2}/s", sim.throughput, report.throughput);
+//! # Ok::<(), pico::PicoError>(())
+//! ```
+//!
+//! Planners (PICO and every baseline) are [`Scheme`] implementations
+//! resolved by name from one registry, and all failures surface as the
+//! typed [`PicoError`].
+//!
+//! ## Plan artifact schema (version 1)
+//!
+//! A saved plan is a single JSON object:
+//!
+//! ```text
+//! {
+//!   "version": 1,          // schema version — see compatibility rule
+//!   "model":   "vgg16",    // display name (the graph below is authoritative)
+//!   "scheme":  "pico",     // registry name that produced the plan
+//!   "diameter": 5,         // Algorithm-1 diameter bound used
+//!   "t_lim":   null,       // Eq. (1) latency cap (null = unconstrained)
+//!   "graph":   { ... },    // full ModelGraph (self-contained: custom
+//!                          // models re-load without the zoo)
+//!   "cluster": { ... },    // exact device tuples + network (Cluster JSON)
+//!   "replicas": [          // one PipelinePlan per pipeline replica
+//!     { "execution": "pipelined", "stages": [ ... ] }
+//!   ]
+//! }
+//! ```
+//!
+//! **Compatibility rule:** `version` is bumped on any change that an
+//! older reader would misinterpret (field renames, semantic changes);
+//! readers accept exactly [`PLAN_VERSION`] and reject everything else
+//! with [`PicoError::UnsupportedVersion`] — a plan is an executable
+//! contract, so "best-effort" parsing of foreign versions is worse than
+//! failing loudly. Additive, ignorable fields may ship within a
+//! version.
+
+mod scheme;
+
+pub use scheme::{
+    scheme_by_name, scheme_names, BfsScheme, CoEdgeScheme, EarlyFusedScheme, LayerWiseScheme,
+    OptimalFusedScheme, PicoScheme, Scheme, SchemeConfig,
+};
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::baselines::SyncSchedule;
+use crate::cluster::Cluster;
+use crate::config::Config;
+use crate::coordinator::{self, NativeCompute, NullCompute, PjrtCompute, Request, ServeOptions};
+use crate::error::PicoError;
+use crate::graph::ModelGraph;
+use crate::json::{obj, Value};
+use crate::modelzoo;
+use crate::pipeline::{ExecutionMode, PipelinePlan};
+use crate::runtime::{Engine, PipelineArtifacts, Tensor};
+use crate::sim::{self, SimReport};
+use crate::util::{fmt_secs, Rng, Table};
+
+/// Plan artifact schema version this build writes and reads.
+pub const PLAN_VERSION: u64 = 1;
+
+/// How many pipeline replicas to deploy over the cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Replicas {
+    /// Search 1..=N replica counts through the engine and keep the one
+    /// with the best backlogged throughput.
+    Auto,
+    /// Exactly this many capacity-balanced replicas.
+    Fixed(usize),
+}
+
+/// Numeric backend for [`DeploymentPlan::serve`].
+#[derive(Debug, Clone)]
+pub enum Backend {
+    /// Timing-only: full serving machinery, no tensor math.
+    Null,
+    /// Pure-rust reference numerics with weights seeded from `seed`.
+    Native { seed: u64 },
+    /// AOT PJRT artifacts exported by `python/compile/aot.py`.
+    Pjrt { dir: PathBuf },
+}
+
+/// Serving knobs for [`DeploymentPlan::serve`].
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Requests to generate when `requests` is None (backlogged at
+    /// t = 0, inputs seeded from `seed`).
+    pub n_requests: usize,
+    /// Input-generation seed.
+    pub seed: u64,
+    /// Explicit request stream (overrides `n_requests`/`seed`).
+    pub requests: Option<Vec<Request>>,
+    /// Engine admission/batching knobs.
+    pub engine: ServeOptions,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { n_requests: 16, seed: 42, requests: None, engine: ServeOptions::default() }
+    }
+}
+
+/// Builder for a [`DeploymentPlan`]; entry point of the facade.
+#[derive(Default)]
+pub struct DeploymentBuilder {
+    model: Option<String>,
+    graph: Option<ModelGraph>,
+    artifacts_dir: Option<PathBuf>,
+    cluster: Option<Cluster>,
+    scheme: Option<String>,
+    scheme_cfg: SchemeConfig,
+    t_lim: Option<f64>,
+    replicas: Option<Replicas>,
+}
+
+impl DeploymentBuilder {
+    /// Zoo model name, `spec.json` path, or exported tiny-model name.
+    pub fn model(mut self, name: impl Into<String>) -> Self {
+        self.model = Some(name.into());
+        self
+    }
+
+    /// Deploy a pre-built graph (e.g. a synthetic DAG or NASNet slice).
+    pub fn graph(mut self, g: ModelGraph) -> Self {
+        self.graph = Some(g);
+        self
+    }
+
+    /// Where tiny-model specs/artifacts live (default `artifacts/`).
+    pub fn artifacts_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifacts_dir = Some(dir.into());
+        self
+    }
+
+    pub fn cluster(mut self, cluster: Cluster) -> Self {
+        self.cluster = Some(cluster);
+        self
+    }
+
+    /// Planner registry name (see [`scheme_names`]; default `"pico"`).
+    pub fn scheme(mut self, name: impl Into<String>) -> Self {
+        self.scheme = Some(name.into());
+        self
+    }
+
+    /// Algorithm-1 diameter bound d (default 5).
+    pub fn diameter(mut self, d: usize) -> Self {
+        self.scheme_cfg.diameter = d;
+        self
+    }
+
+    /// Divide-and-conquer slices for Algorithm 1 (default 1 = direct).
+    pub fn dc_parts(mut self, parts: usize) -> Self {
+        self.scheme_cfg.dc_parts = parts.max(1);
+        self
+    }
+
+    /// Wall-clock budget for Algorithm 1.
+    pub fn partition_budget(mut self, budget: Duration) -> Self {
+        self.scheme_cfg.partition_budget = Some(budget);
+        self
+    }
+
+    /// Eq. (1) latency cap in seconds. Non-finite caps mean
+    /// "unconstrained" and are stored as such (a bare `inf` would not
+    /// survive the JSON artifact).
+    pub fn t_lim(mut self, seconds: f64) -> Self {
+        self.t_lim = if seconds.is_finite() { Some(seconds) } else { None };
+        self
+    }
+
+    pub fn replicas(mut self, r: Replicas) -> Self {
+        self.replicas = Some(r);
+        self
+    }
+
+    /// Seed every knob from a [`Config`] (the CLI path); explicit
+    /// builder calls made afterwards still override.
+    pub fn config(mut self, cfg: &Config) -> Self {
+        self.model = Some(cfg.model.clone());
+        self.cluster = Some(cfg.cluster());
+        self.scheme_cfg.diameter = cfg.diameter;
+        self.scheme_cfg.dc_parts = cfg.dc_parts.max(1);
+        self.t_lim = cfg.t_lim;
+        self
+    }
+
+    /// Run the planner and produce the deployment artifact.
+    pub fn build(self) -> Result<DeploymentPlan, PicoError> {
+        let cluster = self
+            .cluster
+            .ok_or_else(|| PicoError::InvalidCluster("no devices configured".into()))?;
+        if cluster.is_empty() {
+            return Err(PicoError::InvalidCluster("cluster has no devices".into()));
+        }
+        let artifacts_dir = self.artifacts_dir.unwrap_or_else(|| PathBuf::from("artifacts"));
+        let graph = match (self.graph, &self.model) {
+            (Some(g), _) => g,
+            (None, Some(name)) => resolve_model(name, &artifacts_dir)?,
+            (None, None) => return Err(PicoError::UnknownModel("<unset>".into())),
+        };
+        let model = self.model.unwrap_or_else(|| graph.name.clone());
+        let scheme_name = self.scheme.unwrap_or_else(|| "pico".into());
+        let scheme = scheme_by_name(&scheme_name, &self.scheme_cfg)?;
+        let t_lim = self.t_lim.unwrap_or(f64::INFINITY);
+
+        let replicas = match (self.replicas.unwrap_or(Replicas::Fixed(1)), scheme.execution()) {
+            (Replicas::Fixed(1) | Replicas::Auto, ExecutionMode::Synchronous) => {
+                vec![scheme.plan(&graph, &cluster, t_lim)?]
+            }
+            (Replicas::Fixed(r), ExecutionMode::Synchronous) => {
+                return Err(PicoError::Unsupported(format!(
+                    "scheme {scheme_name:?} is synchronous; {r} pipeline replicas only apply to pipelined schemes"
+                )))
+            }
+            (Replicas::Fixed(r), ExecutionMode::Pipelined) => {
+                replicate(scheme.as_ref(), &graph, &cluster, t_lim, r)?
+            }
+            (Replicas::Auto, ExecutionMode::Pipelined) => {
+                auto_replicas(scheme.as_ref(), &graph, &cluster, t_lim)?
+            }
+        };
+
+        Ok(DeploymentPlan {
+            version: PLAN_VERSION,
+            model,
+            scheme: scheme.name().to_string(),
+            diameter: self.scheme_cfg.diameter,
+            t_lim: self.t_lim,
+            graph,
+            cluster,
+            replicas,
+        })
+    }
+}
+
+/// Resolve a model string exactly like the CLI always did: spec path →
+/// zoo name → exported tiny model.
+pub fn resolve_model(name: &str, artifacts_dir: &Path) -> Result<ModelGraph, PicoError> {
+    if name.ends_with(".json") {
+        return ModelGraph::load(Path::new(name))
+            .map_err(|e| PicoError::UnknownModel(format!("{name} ({e})")));
+    }
+    if let Ok(g) = modelzoo::by_name(name) {
+        return Ok(g);
+    }
+    if let Ok(g) = modelzoo::load_tiny(artifacts_dir, name) {
+        return Ok(g);
+    }
+    Err(PicoError::UnknownModel(name.to_string()))
+}
+
+/// Plan `r` independent replicas over a capacity-balanced partition of
+/// `cluster` ([`Cluster::partition_capacity`]), each via `scheme` on its
+/// own device group, with device indices remapped onto the full cluster.
+fn replicate(
+    scheme: &dyn Scheme,
+    g: &ModelGraph,
+    cluster: &Cluster,
+    t_lim: f64,
+    r: usize,
+) -> Result<Vec<PipelinePlan>, PicoError> {
+    if !(1..=cluster.len()).contains(&r) {
+        return Err(PicoError::InvalidCluster(format!(
+            "replicas must be in 1..={} (got {r})",
+            cluster.len()
+        )));
+    }
+    crate::pipeline::replicate_with(g, cluster, r, |g, sub| scheme.plan(g, sub, t_lim))
+}
+
+/// [`Replicas::Auto`]: plan every feasible replica count, push a
+/// backlogged probe stream through the engine, keep the best rate.
+fn auto_replicas(
+    scheme: &dyn Scheme,
+    g: &ModelGraph,
+    cluster: &Cluster,
+    t_lim: f64,
+) -> Result<Vec<PipelinePlan>, PicoError> {
+    let mut best: Option<(f64, Vec<PipelinePlan>)> = None;
+    let mut last_err = None;
+    for r in 1..=cluster.len() {
+        let plans = match replicate(scheme, g, cluster, t_lim, r) {
+            Ok(p) => p,
+            Err(e) => {
+                last_err = Some(e);
+                continue; // e.g. t_lim infeasible on a 1/r-capacity group
+            }
+        };
+        let probe = (4 * r).max(16);
+        let report = sim::simulate_replicated(g, cluster, &plans, probe);
+        let rate = if report.makespan > 0.0 { probe as f64 / report.makespan } else { 0.0 };
+        let improves = match &best {
+            None => true,
+            Some((b, _)) => rate > *b * 1.0001,
+        };
+        if improves {
+            best = Some((rate, plans));
+        }
+    }
+    best.map(|(_, p)| p)
+        .ok_or_else(|| last_err.unwrap_or(PicoError::Internal("no replica count is plannable".into())))
+}
+
+/// The versioned, serializable deployment artifact: everything needed
+/// to simulate or serve the pipeline, anywhere.
+#[derive(Debug, Clone)]
+pub struct DeploymentPlan {
+    pub version: u64,
+    /// Display name; `graph` is the authoritative model description.
+    pub model: String,
+    /// Registry name of the scheme that produced the plan.
+    pub scheme: String,
+    /// Algorithm-1 diameter bound the plan was computed with.
+    pub diameter: usize,
+    /// Eq. (1) latency cap (None = unconstrained).
+    pub t_lim: Option<f64>,
+    pub graph: ModelGraph,
+    pub cluster: Cluster,
+    /// One pipeline per replica; exactly one for synchronous schemes.
+    pub replicas: Vec<PipelinePlan>,
+}
+
+impl DeploymentPlan {
+    pub fn builder() -> DeploymentBuilder {
+        DeploymentBuilder::default()
+    }
+
+    /// Wrap the pipeline plan an AOT export carries in
+    /// `pipeline/plan.json` (its tile shapes ARE the artifact set) as a
+    /// deployment over the matching simulated homogeneous cluster.
+    pub fn from_artifacts(dir: &Path, model: &str) -> Result<DeploymentPlan, PicoError> {
+        let graph = modelzoo::load_tiny(dir, model)
+            .map_err(|e| PicoError::ArtifactMissing(format!("{model} spec.json ({e})")))?;
+        let arts = PipelineArtifacts::load(dir, model)
+            .map_err(|e| PicoError::ArtifactMissing(format!("{model} artifacts ({e})")))?;
+        let (plan, n_dev) = PipelinePlan::from_artifact_plan(&graph, &arts.plan)
+            .map_err(|e| PicoError::InvalidPlan(format!("{model} plan.json: {e}")))?;
+        Ok(DeploymentPlan {
+            version: PLAN_VERSION,
+            model: model.to_string(),
+            scheme: "pico".into(),
+            diameter: 5,
+            t_lim: None,
+            graph,
+            cluster: Cluster::homogeneous_rpi(n_dev, 1.0),
+            replicas: vec![plan],
+        })
+    }
+
+    fn execution(&self) -> ExecutionMode {
+        self.replicas[0].execution
+    }
+
+    /// Analytic evaluation of the deployed plan for `n_requests`
+    /// backlogged inferences (period, latency, throughput, per-device
+    /// utilisation / redundancy / memory / energy).
+    pub fn simulate(&self, n_requests: usize) -> Result<SimReport, PicoError> {
+        if self.replicas.is_empty() {
+            return Err(PicoError::InvalidPlan("deployment has no replicas".into()));
+        }
+        let mut report = match self.execution() {
+            ExecutionMode::Pipelined => {
+                sim::simulate_replicated(&self.graph, &self.cluster, &self.replicas, n_requests)
+            }
+            ExecutionMode::Synchronous => {
+                let sched = SyncSchedule::from_plan(&self.scheme, &self.replicas[0]);
+                sim::simulate_sync(&self.graph, &self.cluster, &sched, n_requests)
+            }
+        };
+        report.scheme = self.scheme.clone();
+        Ok(report)
+    }
+
+    /// Execute the plan through the threaded serving coordinator with
+    /// real (or timing-only) tensor computation.
+    pub fn serve(&self, backend: &Backend, cfg: &ServeConfig) -> Result<coordinator::ServeReport, PicoError> {
+        if self.execution() == ExecutionMode::Synchronous {
+            return Err(PicoError::Unsupported(format!(
+                "scheme {:?} is a synchronous baseline: it is simulate-only; serving needs a pipelined plan",
+                self.scheme
+            )));
+        }
+        // Typed pre-validation: structural plan defects surface as
+        // InvalidPlan here, so Internal below is reserved for genuine
+        // runtime failures (worker/compute errors).
+        let mut owned = std::collections::HashSet::new();
+        for plan in &self.replicas {
+            if plan.stages.is_empty() {
+                return Err(PicoError::InvalidPlan("replica has no stages".into()));
+            }
+            for s in &plan.stages {
+                for &dev in &s.devices {
+                    if dev >= self.cluster.len() {
+                        return Err(PicoError::InvalidPlan(format!(
+                            "stage references device {dev} outside the {}-device cluster",
+                            self.cluster.len()
+                        )));
+                    }
+                    if !owned.insert(dev) {
+                        return Err(PicoError::InvalidPlan(format!(
+                            "device {dev} is assigned to more than one stage/replica"
+                        )));
+                    }
+                }
+            }
+        }
+        let requests = match &cfg.requests {
+            Some(r) => r.clone(),
+            None => self.gen_requests(cfg.n_requests, cfg.seed, matches!(backend, Backend::Null)),
+        };
+        let report = match backend {
+            Backend::Null => coordinator::serve_replicated(
+                &self.graph,
+                &self.replicas,
+                &self.cluster,
+                &NullCompute,
+                requests,
+                &cfg.engine,
+            ),
+            Backend::Native { seed } => {
+                let compute = NativeCompute {
+                    weights: crate::runtime::executor::model_weights(&self.graph, *seed),
+                };
+                coordinator::serve_replicated(
+                    &self.graph,
+                    &self.replicas,
+                    &self.cluster,
+                    &compute,
+                    requests,
+                    &cfg.engine,
+                )
+            }
+            Backend::Pjrt { dir } => {
+                let engine = Arc::new(
+                    Engine::cpu().map_err(|e| PicoError::Internal(format!("PJRT engine: {e}")))?,
+                );
+                let artifacts = Arc::new(PipelineArtifacts::load(dir, &self.model).map_err(
+                    |e| PicoError::ArtifactMissing(format!("{} artifacts ({e})", self.model)),
+                )?);
+                let compute = PjrtCompute { engine, artifacts };
+                coordinator::serve_replicated(
+                    &self.graph,
+                    &self.replicas,
+                    &self.cluster,
+                    &compute,
+                    requests,
+                    &cfg.engine,
+                )
+            }
+        };
+        report.map_err(|e| PicoError::Internal(format!("{e}")))
+    }
+
+    fn gen_requests(&self, n: usize, seed: u64, zeros: bool) -> Vec<Request> {
+        let (c, h, w) = self.graph.input_shape;
+        let mut rng = Rng::new(seed);
+        (0..n as u64)
+            .map(|id| Request {
+                id,
+                input: if zeros {
+                    Tensor::zeros(vec![c, h, w])
+                } else {
+                    Tensor::new(
+                        vec![c, h, w],
+                        (0..c * h * w).map(|_| rng.normal() as f32).collect(),
+                    )
+                },
+                t_submit: 0.0,
+            })
+            .collect()
+    }
+
+    /// Human-readable stage/device breakdown of the deployment.
+    pub fn explain(&self) -> String {
+        let mut out = format!(
+            "deployment: {} via {} (plan v{})\ncluster: {} devices [{}], {:.1} Mbps WLAN\nt_lim: {}\n",
+            self.model,
+            self.scheme,
+            self.version,
+            self.cluster.len(),
+            self.cluster.devices.iter().map(|d| d.name.clone()).collect::<Vec<_>>().join(", "),
+            self.cluster.network.bandwidth_bps * 8.0 / 1e6,
+            match self.t_lim {
+                Some(t) => fmt_secs(t),
+                None => "unconstrained".into(),
+            },
+        );
+        if let Ok(r) = self.simulate(2) {
+            out.push_str(&format!(
+                "predicted: period {} latency {} throughput {:.2}/s\n",
+                fmt_secs(r.period),
+                fmt_secs(r.latency),
+                r.throughput
+            ));
+        }
+        for (ri, plan) in self.replicas.iter().enumerate() {
+            if self.replicas.len() > 1 {
+                out.push_str(&format!("replica {ri}:\n"));
+            }
+            let mut t = Table::new(&["stage", "pieces", "layers", "devices", "mode"]);
+            for (k, s) in plan.stages.iter().enumerate() {
+                t.row(&[
+                    format!("{k}"),
+                    format!("{}..={}", s.pieces.0, s.pieces.1),
+                    format!("{}", s.layers.len()),
+                    s.devices
+                        .iter()
+                        .map(|&d| self.cluster.devices[d].name.clone())
+                        .collect::<Vec<_>>()
+                        .join("+"),
+                    match (plan.execution, s.halo_sync) {
+                        (ExecutionMode::Pipelined, _) => "pipelined".into(),
+                        (ExecutionMode::Synchronous, false) => "sync".into(),
+                        (ExecutionMode::Synchronous, true) => "sync+halo".into(),
+                    },
+                ]);
+            }
+            out.push_str(&t.to_string());
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("version", (self.version as i64).into()),
+            ("model", self.model.as_str().into()),
+            ("scheme", self.scheme.as_str().into()),
+            ("diameter", self.diameter.into()),
+            (
+                "t_lim",
+                match self.t_lim {
+                    // A non-finite cap would serialize as the bare token
+                    // `inf` — invalid JSON — so it maps to null too.
+                    Some(t) if t.is_finite() => t.into(),
+                    _ => Value::Null,
+                },
+            ),
+            ("graph", self.graph.to_json()),
+            ("cluster", self.cluster.to_json()),
+            (
+                "replicas",
+                Value::Arr(self.replicas.iter().map(|p| p.to_json(&self.graph)).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<DeploymentPlan, PicoError> {
+        let version = v
+            .get("version")
+            .as_i64()
+            .ok_or_else(|| PicoError::InvalidPlan("missing version field".into()))?
+            as u64;
+        if version != PLAN_VERSION {
+            return Err(PicoError::UnsupportedVersion { found: version, supported: PLAN_VERSION });
+        }
+        let graph = ModelGraph::from_json(v.get("graph"))
+            .map_err(|e| PicoError::InvalidPlan(format!("graph: {e}")))?;
+        let cluster = Cluster::from_json(v.get("cluster"))?;
+        let arr = v
+            .get("replicas")
+            .as_arr()
+            .ok_or_else(|| PicoError::InvalidPlan("missing replicas array".into()))?;
+        if arr.is_empty() {
+            return Err(PicoError::InvalidPlan("plan has no replicas".into()));
+        }
+        let mut replicas = Vec::with_capacity(arr.len());
+        for rv in arr {
+            let p = PipelinePlan::from_json(&graph, rv)?;
+            for s in &p.stages {
+                if let Some(&d) = s.devices.iter().find(|&&d| d >= cluster.len()) {
+                    return Err(PicoError::InvalidPlan(format!(
+                        "stage references device {d} outside the {}-device cluster",
+                        cluster.len()
+                    )));
+                }
+            }
+            replicas.push(p);
+        }
+        Ok(DeploymentPlan {
+            version,
+            model: v.get("model").as_str().unwrap_or(&graph.name).to_string(),
+            scheme: v.get("scheme").as_str().unwrap_or("pico").to_string(),
+            diameter: v.get("diameter").as_usize().unwrap_or(5),
+            t_lim: v.get("t_lim").as_f64(),
+            graph,
+            cluster,
+            replicas,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<(), PicoError> {
+        self.to_json()
+            .write_file(path)
+            .map_err(|e| PicoError::Io { path: path.display().to_string(), msg: format!("{e}") })
+    }
+
+    pub fn load(path: &Path) -> Result<DeploymentPlan, PicoError> {
+        let v = Value::from_file(path)
+            .map_err(|e| PicoError::Io { path: path.display().to_string(), msg: format!("{e}") })?;
+        DeploymentPlan::from_json(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Device;
+    use crate::modelzoo;
+
+    fn vgg_deployment() -> DeploymentPlan {
+        DeploymentPlan::builder()
+            .model("vgg16")
+            .cluster(Cluster::homogeneous_rpi(4, 1.0))
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn builder_validates_inputs() {
+        let e = DeploymentPlan::builder().model("vgg16").build();
+        assert!(matches!(e, Err(PicoError::InvalidCluster(_))), "{e:?}");
+        let e = DeploymentPlan::builder()
+            .model("not-a-model")
+            .cluster(Cluster::homogeneous_rpi(2, 1.0))
+            .build();
+        assert!(matches!(e, Err(PicoError::UnknownModel(_))), "{e:?}");
+        let e = DeploymentPlan::builder()
+            .model("vgg16")
+            .cluster(Cluster::homogeneous_rpi(2, 1.0))
+            .scheme("magic")
+            .build();
+        assert!(matches!(e, Err(PicoError::UnknownScheme(_))), "{e:?}");
+        let e = DeploymentPlan::builder()
+            .model("vgg16")
+            .cluster(Cluster::homogeneous_rpi(2, 1.0))
+            .t_lim(1e-9)
+            .build();
+        assert!(matches!(e, Err(PicoError::Infeasible { .. })), "{e:?}");
+        let e = DeploymentPlan::builder()
+            .model("vgg16")
+            .cluster(Cluster::homogeneous_rpi(4, 1.0))
+            .scheme("lw")
+            .replicas(Replicas::Fixed(2))
+            .build();
+        assert!(matches!(e, Err(PicoError::Unsupported(_))), "{e:?}");
+    }
+
+    #[test]
+    fn facade_matches_direct_call_chain() {
+        // The facade is a re-wiring, not a re-implementation: its plan
+        // and simulation must equal the raw partition→plan→sim chain.
+        let d = vgg_deployment();
+        let g = modelzoo::vgg16();
+        let c = Cluster::homogeneous_rpi(4, 1.0);
+        let pieces = crate::partition::partition(&g, 5, None).unwrap().pieces;
+        let direct = crate::pipeline::plan(&g, &pieces, &c, f64::INFINITY).unwrap();
+        assert_eq!(d.replicas[0], direct);
+        let a = d.simulate(50).unwrap();
+        let b = crate::sim::simulate_pipeline(&g, &c, &direct, 50);
+        assert_eq!(a.period, b.period);
+        assert_eq!(a.latency, b.latency);
+        assert_eq!(a.makespan, b.makespan);
+    }
+
+    #[test]
+    fn every_registered_scheme_plans_and_simulates() {
+        let c = Cluster::paper_heterogeneous();
+        for &name in scheme_names() {
+            // BFS is exponential in pieces × devices: exercise it on a
+            // chain it can exhaust instead of burning its whole budget.
+            let builder = if name == "bfs" {
+                DeploymentPlan::builder()
+                    .graph(modelzoo::synthetic_chain(8))
+                    .cluster(Cluster::homogeneous_rpi(3, 1.0))
+            } else {
+                DeploymentPlan::builder().model("squeezenet").cluster(c.clone())
+            };
+            let d = builder
+                .scheme(name)
+                .build()
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(d.scheme, name);
+            let r = d.simulate(20).unwrap();
+            assert!(r.throughput > 0.0, "{name}: {r:?}");
+            assert_eq!(r.scheme, name);
+            // serve is pipelined-only; baselines must refuse, not lie.
+            let serve = d.serve(&Backend::Null, &ServeConfig { n_requests: 3, ..Default::default() });
+            match d.replicas[0].execution {
+                ExecutionMode::Pipelined => {
+                    assert_eq!(serve.unwrap().responses.len(), 3, "{name}");
+                }
+                ExecutionMode::Synchronous => {
+                    assert!(matches!(serve, Err(PicoError::Unsupported(_))), "{name}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn auto_replicas_beats_or_matches_single() {
+        let cluster = Cluster::new(
+            vec![
+                Device::tx2(0, 2.2),
+                Device::tx2(1, 2.2),
+                Device::rpi(2, 1.5),
+                Device::rpi(3, 1.5),
+            ],
+            crate::cluster::Network::wifi_50mbps(),
+        );
+        let single = DeploymentPlan::builder()
+            .model("vgg16")
+            .cluster(cluster.clone())
+            .replicas(Replicas::Fixed(1))
+            .build()
+            .unwrap();
+        let auto = DeploymentPlan::builder()
+            .model("vgg16")
+            .cluster(cluster)
+            .replicas(Replicas::Auto)
+            .build()
+            .unwrap();
+        let n = 40;
+        let s = single.simulate(n).unwrap();
+        let a = auto.simulate(n).unwrap();
+        assert!(
+            a.makespan <= s.makespan * 1.0001,
+            "auto ({} replicas, makespan {}) must not lose to 1 replica ({})",
+            auto.replicas.len(),
+            a.makespan,
+            s.makespan
+        );
+        assert!(auto.replicas.len() >= 1);
+    }
+
+    #[test]
+    fn explain_mentions_structure() {
+        let d = vgg_deployment();
+        let text = d.explain();
+        assert!(text.contains("vgg16"), "{text}");
+        assert!(text.contains("pico"), "{text}");
+        assert!(text.contains("Rpi@1.0"), "{text}");
+        assert!(text.contains("period"), "{text}");
+    }
+
+    #[test]
+    fn plan_artifact_roundtrips_and_rejects_bad_versions() {
+        let d = vgg_deployment();
+        let s1 = format!("{}", d.to_json());
+        let back = DeploymentPlan::from_json(&Value::from_str(&s1).unwrap()).unwrap();
+        assert_eq!(d.replicas, back.replicas);
+        let s2 = format!("{}", back.to_json());
+        assert_eq!(s1, s2, "round trip must be byte-identical");
+
+        let mut v = d.to_json();
+        if let Value::Obj(o) = &mut v {
+            o.insert("version".into(), Value::Num(99.0));
+        }
+        assert!(matches!(
+            DeploymentPlan::from_json(&v),
+            Err(PicoError::UnsupportedVersion { found: 99, supported: PLAN_VERSION })
+        ));
+    }
+}

@@ -1,0 +1,223 @@
+//! The planner registry: PICO, the four §6.1 baselines, and the BFS
+//! optimality reference, unified behind one [`Scheme`] trait.
+//!
+//! Every planner — whatever it computes internally — emits a
+//! [`PipelinePlan`], with [`ExecutionMode::Synchronous`] marking the
+//! non-pipelined baselines. The [`crate::deploy::DeploymentBuilder`]
+//! resolves schemes by the names in [`scheme_names`].
+
+use std::time::Duration;
+
+use crate::baselines;
+use crate::cluster::Cluster;
+use crate::error::PicoError;
+use crate::graph::ModelGraph;
+use crate::partition::{self, PieceChain};
+use crate::pipeline::{self, ExecutionMode, PipelinePlan};
+
+/// A pipeline planner: model + cluster + latency cap in, plan out.
+pub trait Scheme {
+    /// Registry key (also the plan artifact's `scheme` field).
+    fn name(&self) -> &'static str;
+    /// How plans from this scheme are executed.
+    fn execution(&self) -> ExecutionMode;
+    /// Compute the deployment plan. `t_lim` is the Eq. (1) latency cap
+    /// (`f64::INFINITY` = unconstrained).
+    fn plan(
+        &self,
+        g: &ModelGraph,
+        cluster: &Cluster,
+        t_lim: f64,
+    ) -> Result<PipelinePlan, PicoError>;
+}
+
+/// Shared Algorithm-1 run (PICO / OFL / BFS all consume the piece chain).
+fn pieces_for(
+    g: &ModelGraph,
+    diameter: usize,
+    dc_parts: usize,
+    budget: Option<Duration>,
+) -> Result<PieceChain, PicoError> {
+    let r = if dc_parts > 1 {
+        partition::partition_divide_conquer(g, diameter, dc_parts, budget)
+    } else {
+        partition::partition(g, diameter, budget)
+    };
+    Ok(r.map_err(|e| PicoError::Internal(format!("partition failed: {e}")))?.pieces)
+}
+
+/// Map a planner failure: under a finite cap the only planner-level
+/// failure mode is Eq. (1) infeasibility.
+fn plan_err(t_lim: f64, e: anyhow::Error) -> PicoError {
+    if t_lim.is_finite() {
+        PicoError::Infeasible { t_lim }
+    } else {
+        PicoError::Internal(format!("{e}"))
+    }
+}
+
+/// PICO (paper §4–5): Algorithm 1 piece chain, Algorithm 2 homogeneous
+/// DP, Algorithm 3 heterogeneous adaptation.
+pub struct PicoScheme {
+    pub diameter: usize,
+    pub dc_parts: usize,
+    pub partition_budget: Option<Duration>,
+}
+
+impl Scheme for PicoScheme {
+    fn name(&self) -> &'static str {
+        "pico"
+    }
+    fn execution(&self) -> ExecutionMode {
+        ExecutionMode::Pipelined
+    }
+    fn plan(&self, g: &ModelGraph, cluster: &Cluster, t_lim: f64) -> Result<PipelinePlan, PicoError> {
+        let pieces = pieces_for(g, self.diameter, self.dc_parts, self.partition_budget)?;
+        pipeline::plan(g, &pieces, cluster, t_lim).map_err(|e| plan_err(t_lim, e))
+    }
+}
+
+/// LW — layer-wise (MoDNN).
+pub struct LayerWiseScheme;
+
+impl Scheme for LayerWiseScheme {
+    fn name(&self) -> &'static str {
+        "lw"
+    }
+    fn execution(&self) -> ExecutionMode {
+        ExecutionMode::Synchronous
+    }
+    fn plan(&self, g: &ModelGraph, cluster: &Cluster, _t_lim: f64) -> Result<PipelinePlan, PicoError> {
+        Ok(baselines::layer_wise(g, cluster).to_plan())
+    }
+}
+
+/// EFL — early-fused-layer (DeepThings).
+pub struct EarlyFusedScheme {
+    /// Fuse through the n-th pooling layer (DeepThings' canonical 2).
+    pub fuse_pools: usize,
+}
+
+impl Scheme for EarlyFusedScheme {
+    fn name(&self) -> &'static str {
+        "efl"
+    }
+    fn execution(&self) -> ExecutionMode {
+        ExecutionMode::Synchronous
+    }
+    fn plan(&self, g: &ModelGraph, cluster: &Cluster, _t_lim: f64) -> Result<PipelinePlan, PicoError> {
+        Ok(baselines::early_fused(g, cluster, self.fuse_pools).to_plan())
+    }
+}
+
+/// OFL — optimal-fused-layer (AOFL), DP over the Algorithm-1 pieces.
+pub struct OptimalFusedScheme {
+    pub diameter: usize,
+    pub dc_parts: usize,
+    pub partition_budget: Option<Duration>,
+}
+
+impl Scheme for OptimalFusedScheme {
+    fn name(&self) -> &'static str {
+        "ofl"
+    }
+    fn execution(&self) -> ExecutionMode {
+        ExecutionMode::Synchronous
+    }
+    fn plan(&self, g: &ModelGraph, cluster: &Cluster, _t_lim: f64) -> Result<PipelinePlan, PicoError> {
+        let pieces = pieces_for(g, self.diameter, self.dc_parts, self.partition_budget)?;
+        Ok(baselines::optimal_fused(g, &pieces, cluster).to_plan())
+    }
+}
+
+/// CE — CoEdge: layer-wise with dynamic device counts and halo sync.
+pub struct CoEdgeScheme;
+
+impl Scheme for CoEdgeScheme {
+    fn name(&self) -> &'static str {
+        "ce"
+    }
+    fn execution(&self) -> ExecutionMode {
+        ExecutionMode::Synchronous
+    }
+    fn plan(&self, g: &ModelGraph, cluster: &Cluster, _t_lim: f64) -> Result<PipelinePlan, PicoError> {
+        Ok(baselines::coedge(g, cluster).to_plan())
+    }
+}
+
+/// BFS — exhaustive pipeline search (§6.5 optimality reference),
+/// bounded by a time budget.
+pub struct BfsScheme {
+    pub diameter: usize,
+    pub dc_parts: usize,
+    pub partition_budget: Option<Duration>,
+    pub search_budget: Duration,
+}
+
+impl Scheme for BfsScheme {
+    fn name(&self) -> &'static str {
+        "bfs"
+    }
+    fn execution(&self) -> ExecutionMode {
+        ExecutionMode::Pipelined
+    }
+    fn plan(&self, g: &ModelGraph, cluster: &Cluster, t_lim: f64) -> Result<PipelinePlan, PicoError> {
+        let pieces = pieces_for(g, self.diameter, self.dc_parts, self.partition_budget)?;
+        let r = baselines::bfs_optimal(g, &pieces, cluster, t_lim, Some(self.search_budget));
+        r.plan.ok_or_else(|| {
+            if t_lim.is_finite() {
+                PicoError::Infeasible { t_lim }
+            } else {
+                PicoError::Internal("bfs search found no pipeline within its budget".into())
+            }
+        })
+    }
+}
+
+/// Every registered scheme name, in registry order.
+pub fn scheme_names() -> &'static [&'static str] {
+    &["pico", "lw", "efl", "ofl", "ce", "bfs"]
+}
+
+/// Planner-construction knobs shared by every scheme.
+#[derive(Debug, Clone)]
+pub struct SchemeConfig {
+    /// Algorithm-1 diameter bound d (paper default 5).
+    pub diameter: usize,
+    /// Divide-and-conquer slices for Algorithm 1 (1 = direct).
+    pub dc_parts: usize,
+    /// Wall-clock budget for Algorithm 1 (None = unbounded).
+    pub partition_budget: Option<Duration>,
+}
+
+impl Default for SchemeConfig {
+    fn default() -> Self {
+        SchemeConfig { diameter: 5, dc_parts: 1, partition_budget: None }
+    }
+}
+
+/// Resolve a scheme by registry name.
+pub fn scheme_by_name(name: &str, cfg: &SchemeConfig) -> Result<Box<dyn Scheme>, PicoError> {
+    match name {
+        "pico" => Ok(Box::new(PicoScheme {
+            diameter: cfg.diameter,
+            dc_parts: cfg.dc_parts,
+            partition_budget: cfg.partition_budget,
+        })),
+        "lw" => Ok(Box::new(LayerWiseScheme)),
+        "efl" => Ok(Box::new(EarlyFusedScheme { fuse_pools: 2 })),
+        "ofl" => Ok(Box::new(OptimalFusedScheme {
+            diameter: cfg.diameter,
+            dc_parts: cfg.dc_parts,
+            partition_budget: cfg.partition_budget,
+        })),
+        "ce" => Ok(Box::new(CoEdgeScheme)),
+        "bfs" => Ok(Box::new(BfsScheme {
+            diameter: cfg.diameter,
+            dc_parts: cfg.dc_parts,
+            partition_budget: cfg.partition_budget,
+            search_budget: Duration::from_secs(10),
+        })),
+        other => Err(PicoError::UnknownScheme(other.to_string())),
+    }
+}

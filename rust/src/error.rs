@@ -1,0 +1,76 @@
+//! The typed error surface of the public [`crate::deploy`] facade.
+//!
+//! Internals keep using `anyhow` for ad-hoc context; everything that
+//! crosses the facade boundary is mapped onto [`PicoError`] so callers
+//! can match on failure modes instead of grepping strings.
+
+use std::fmt;
+
+/// Every way a deployment can fail, as a matchable enum.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PicoError {
+    /// The cluster is empty, a device spec is malformed, or a device
+    /// kind is unknown.
+    InvalidCluster(String),
+    /// No pipeline configuration satisfies the Eq. (1) latency cap.
+    Infeasible { t_lim: f64 },
+    /// The model name resolves to neither a zoo entry, a spec.json
+    /// path, nor an exported tiny model.
+    UnknownModel(String),
+    /// The scheme name is not in the [`crate::deploy::scheme_names`]
+    /// registry.
+    UnknownScheme(String),
+    /// An AOT artifact set (or one of its files) is missing.
+    ArtifactMissing(String),
+    /// A plan artifact was written by an incompatible schema version.
+    UnsupportedVersion { found: u64, supported: u64 },
+    /// A plan artifact is structurally broken (missing fields, layer
+    /// names not in the model, devices outside the cluster, ...).
+    InvalidPlan(String),
+    /// The operation is not defined for this deployment (e.g. serving
+    /// a synchronous baseline schedule).
+    Unsupported(String),
+    /// Reading or writing an artifact file failed.
+    Io { path: String, msg: String },
+    /// An internal invariant broke; carries the underlying message.
+    Internal(String),
+}
+
+impl fmt::Display for PicoError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PicoError::InvalidCluster(msg) => write!(f, "invalid cluster: {msg}"),
+            PicoError::Infeasible { t_lim } => {
+                write!(f, "no pipeline satisfies T_lim = {t_lim}s")
+            }
+            PicoError::UnknownModel(name) => write!(
+                f,
+                "unknown model {name:?}: not a zoo name, a spec.json path, or an exported tiny model"
+            ),
+            PicoError::UnknownScheme(name) => write!(
+                f,
+                "unknown scheme {name:?} (available: {})",
+                crate::deploy::scheme_names().join("|")
+            ),
+            PicoError::ArtifactMissing(what) => {
+                write!(f, "artifact missing: {what} (run `make artifacts`)")
+            }
+            PicoError::UnsupportedVersion { found, supported } => write!(
+                f,
+                "plan artifact version {found} is not supported (this build reads version {supported})"
+            ),
+            PicoError::InvalidPlan(msg) => write!(f, "invalid plan artifact: {msg}"),
+            PicoError::Unsupported(msg) => write!(f, "unsupported operation: {msg}"),
+            PicoError::Io { path, msg } => write!(f, "io error on {path}: {msg}"),
+            PicoError::Internal(msg) => write!(f, "internal error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for PicoError {}
+
+impl From<anyhow::Error> for PicoError {
+    fn from(e: anyhow::Error) -> Self {
+        PicoError::Internal(format!("{e}"))
+    }
+}

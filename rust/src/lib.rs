@@ -1,17 +1,40 @@
 //! # PICO — Pipeline Inference Framework for Versatile CNNs on Diverse Mobile Devices
 //!
 //! Reproduction of Yang et al., IEEE TMC 2023 (DOI 10.1109/TMC.2023.3265111)
-//! as a three-layer rust + JAX + Pallas stack:
+//! as a three-layer rust + JAX + Pallas stack.
 //!
-//! * **L3 (this crate)** — the paper's system contribution: CNN-DAG
-//!   orchestration into pieces ([`partition`], Algorithm 1), pipeline stage
-//!   planning ([`pipeline`], Algorithms 2–3, plus
-//!   [`pipeline::plan_replicated`] for capacity-balanced replica sets),
-//!   the cost model ([`cost`], Eq. 2–12), baselines ([`baselines`]), the
-//!   heterogeneous cluster model ([`cluster`]), and — on top of the shared
-//!   [`engine`] — the analytical simulator ([`sim`]) and the threaded
-//!   serving [`coordinator`] that executes real tensors through AOT
-//!   artifacts ([`runtime`]).
+//! ## The facade: one artifact from planning to serving
+//!
+//! [`deploy`] is the public entry path. A [`deploy::DeploymentBuilder`]
+//! (model, cluster, scheme, diameter, latency cap, replica policy)
+//! produces a versioned, JSON-serializable [`deploy::DeploymentPlan`]
+//! that is computed once and then executed anywhere:
+//!
+//! * [`deploy::DeploymentPlan::simulate`] — analytic evaluation through
+//!   the cost model + event engine;
+//! * [`deploy::DeploymentPlan::serve`] — the threaded coordinator with
+//!   a [`deploy::Backend`] (timing-only, native numerics, or AOT PJRT);
+//! * [`deploy::DeploymentPlan::explain`] — human-readable stage/device
+//!   table;
+//! * [`deploy::DeploymentPlan::save`] / [`deploy::DeploymentPlan::load`]
+//!   — the `pico plan save` / `plan load` round trip (schema version
+//!   and compatibility rule documented in [`deploy`]).
+//!
+//! Planners are [`deploy::Scheme`] implementations in one registry —
+//! PICO itself, the four §6.1 baselines (LW/EFL/OFL/CE) and the BFS
+//! optimality reference — and failures surface as the typed
+//! [`PicoError`] instead of stringly errors.
+//!
+//! ## Layer map
+//!
+//! * **L3 (this crate)** — the paper's system contribution, under the
+//!   facade: CNN-DAG orchestration into pieces ([`partition`],
+//!   Algorithm 1), pipeline stage planning ([`pipeline`], Algorithms
+//!   2–3), the cost model ([`cost`], Eq. 2–12), baseline planners
+//!   ([`baselines`]), the heterogeneous cluster model ([`cluster`]),
+//!   and — on top of the shared [`engine`] — the analytical simulator
+//!   ([`sim`]) and the threaded serving [`coordinator`] that executes
+//!   real tensors through AOT artifacts ([`runtime`]).
 //! * **L2 (python/compile)** — jax model definitions lowered once to HLO
 //!   text (`make artifacts`); never on the request path.
 //! * **L1 (python/compile/kernels)** — Pallas conv/pool/dense kernels
@@ -27,22 +50,22 @@
 //! stage times and no tensors; [`coordinator`] drives the identical pass
 //! to schedule real tensors through per-stage worker threads. Simulated
 //! and served period/latency therefore agree by construction — pinned
-//! across the whole model zoo by `rust/tests/agreement.rs`, and the
-//! replica scheduler's throughput scaling is measured in
-//! `benches/perf_engine.rs` (single- vs multi-replica on a heterogeneous
-//! cluster).
+//! across the whole model zoo by `rust/tests/agreement.rs` (which, like
+//! every example and the CLI, goes through the facade).
 //!
-//! Quickstart: `examples/quickstart.rs`; end-to-end serving:
-//! `examples/e2e_serve.rs`; multi-replica serving:
-//! `examples/replicated_serve.rs`; experiment reproductions:
-//! `rust/benches/`.
+//! Quickstart: `examples/quickstart.rs` (builder → plan → simulate →
+//! serve); end-to-end AOT serving: `examples/e2e_serve.rs`;
+//! multi-replica serving: `examples/replicated_serve.rs`; experiment
+//! reproductions: `rust/benches/`.
 
 pub mod baselines;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod cost;
+pub mod deploy;
 pub mod engine;
+pub mod error;
 pub mod graph;
 pub mod json;
 pub mod modelzoo;
@@ -51,3 +74,5 @@ pub mod pipeline;
 pub mod runtime;
 pub mod sim;
 pub mod util;
+
+pub use error::PicoError;

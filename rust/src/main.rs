@@ -1,23 +1,30 @@
 //! `pico` — CLI launcher for the PICO pipeline-inference framework.
 //!
+//! Every command flows through the [`pico::deploy`] facade: build a
+//! deployment plan, persist it, simulate it, serve it.
+//!
 //! ```text
 //! pico partition --model inceptionv3 [--d 5] [--dc-parts 1]
-//! pico plan      --model vgg16 --rpi 1.0x4 [--tx2 2.2x2] [--t-lim 2.5]
-//! pico simulate  --model vgg16 --rpi 1.0x8 [--scheme pico|lw|efl|ofl|ce]
+//! pico plan      --model vgg16 --device rpi:1.0x4 [--device tx2:2.2x2]
+//!                [--scheme pico] [--t-lim 2.5] [--replicas auto|N]
+//! pico plan save --out plan.json [... same flags as plan]
+//! pico plan load --plan plan.json [--requests 64]
+//! pico simulate  --model vgg16 --device rpi:1.0x8 [--scheme pico|lw|efl|ofl|ce|bfs]
 //! pico serve     --model tinyvgg --artifacts artifacts [--requests 16]
 //! pico zoo
 //! pico --config path.json <command>
 //! ```
+//!
+//! Flags may be given at most once; only `--device KIND:GHZxCOUNT`
+//! repeats (one occurrence per device group, any mix of kinds).
 
 use std::path::PathBuf;
 
-use pico::cluster::Cluster;
 use pico::config::{Config, DeviceConfig};
-use pico::coordinator::{self, NativeCompute, PjrtCompute};
+use pico::deploy::{Backend, DeploymentPlan, Replicas, ServeConfig};
 use pico::graph::width;
-use pico::runtime::{Engine, PipelineArtifacts, Tensor};
-use pico::util::{fmt_secs, Rng, Table};
-use pico::{baselines, modelzoo, partition, pipeline, sim};
+use pico::util::{fmt_secs, Table};
+use pico::{modelzoo, partition};
 
 fn main() {
     if let Err(e) = run() {
@@ -26,33 +33,56 @@ fn main() {
     }
 }
 
-/// Tiny std-only argument parser: `--key value` pairs after a verb.
+/// Tiny std-only argument parser: up to two verbs, then `--key value`
+/// pairs. Duplicate flags are an error (silently keeping the last one
+/// hid typos); `--device` is the one repeatable flag.
 struct Args {
-    verb: String,
+    verbs: Vec<String>,
     kv: std::collections::HashMap<String, String>,
+    devices: Vec<String>,
 }
 
 impl Args {
     fn parse() -> anyhow::Result<Args> {
-        let mut it = std::env::args().skip(1).peekable();
-        let mut verb = String::new();
+        let mut it = std::env::args().skip(1);
+        let mut verbs = Vec::new();
         let mut kv = std::collections::HashMap::new();
+        let mut devices = Vec::new();
         while let Some(a) = it.next() {
             if let Some(key) = a.strip_prefix("--") {
                 let val = it.next().unwrap_or_else(|| "true".into());
-                kv.insert(key.to_string(), val);
-            } else if verb.is_empty() {
-                verb = a;
+                if key == "device" {
+                    devices.push(val);
+                } else if kv.insert(key.to_string(), val).is_some() {
+                    anyhow::bail!(
+                        "duplicate flag --{key}: each flag may appear once (only --device repeats)"
+                    );
+                }
+            } else if verbs.len() < 2 {
+                verbs.push(a);
             } else {
                 anyhow::bail!("unexpected argument {a:?}");
             }
         }
-        Ok(Args { verb, kv })
+        Ok(Args { verbs, kv, devices })
     }
 
     fn get(&self, key: &str) -> Option<&str> {
         self.kv.get(key).map(|s| s.as_str())
     }
+}
+
+/// `KIND:GHZxCOUNT`, e.g. `rpi:1.0x4`, `tx2:2.2x2` or `orin:2.0x1`
+/// (kinds beyond rpi/tx2 become generic rpi-class cores named after
+/// the kind).
+fn parse_device(spec: &str) -> anyhow::Result<DeviceConfig> {
+    let usage = || anyhow::anyhow!("--device expects KIND:GHZxCOUNT, e.g. rpi:1.0x4 (got {spec:?})");
+    let (kind, rest) = spec.split_once(':').ok_or_else(usage)?;
+    if kind.is_empty() {
+        return Err(usage());
+    }
+    let (ghz, count) = rest.split_once('x').ok_or_else(usage)?;
+    Ok(DeviceConfig { kind: kind.into(), ghz: ghz.parse()?, count: count.parse()? })
 }
 
 fn run() -> anyhow::Result<()> {
@@ -76,48 +106,74 @@ fn run() -> anyhow::Result<()> {
     if let Some(n) = args.get("requests") {
         cfg.n_requests = n.parse()?;
     }
-    // --rpi 1.0x4 / --tx2 2.2x2 cluster spec (repeatable via config file).
-    let mut devices = Vec::new();
-    for kind in ["rpi", "tx2"] {
-        if let Some(spec) = args.get(kind) {
-            let (ghz, count) = spec
-                .split_once('x')
-                .ok_or_else(|| anyhow::anyhow!("--{kind} expects GHZxCOUNT, e.g. 1.0x4"))?;
-            devices.push(DeviceConfig {
-                kind: kind.into(),
-                ghz: ghz.parse()?,
-                count: count.parse()?,
-            });
-        }
+    if !args.devices.is_empty() {
+        cfg.devices = args
+            .devices
+            .iter()
+            .map(|s| parse_device(s))
+            .collect::<anyhow::Result<Vec<_>>>()?;
     }
-    if !devices.is_empty() {
-        cfg.devices = devices;
-    }
+    let replicas = match args.get("replicas") {
+        None => Replicas::Fixed(1),
+        Some("auto") => Replicas::Auto,
+        Some(n) => Replicas::Fixed(n.parse()?),
+    };
 
-    match args.verb.as_str() {
-        "partition" => cmd_partition(&cfg),
-        "plan" => cmd_plan(&cfg),
-        "simulate" => cmd_simulate(&cfg, args.get("scheme").unwrap_or("pico")),
-        "serve" => cmd_serve(&cfg, args.get("artifacts").unwrap_or("artifacts")),
-        "zoo" => cmd_zoo(),
+    let verb = args.verbs.first().map(|s| s.as_str()).unwrap_or("");
+    let subverb = args.verbs.get(1).map(|s| s.as_str());
+    match (verb, subverb) {
+        ("partition", None) => cmd_partition(&cfg),
+        ("plan", None) => {
+            let d = build_deployment(&cfg, &args, replicas)?;
+            print!("{}", d.explain());
+            Ok(())
+        }
+        ("plan", Some("save")) => {
+            let d = build_deployment(&cfg, &args, replicas)?;
+            let out = PathBuf::from(args.get("out").unwrap_or("plan.json"));
+            d.save(&out)?;
+            println!(
+                "saved {} plan for {} ({} replicas, {} stages) to {}",
+                d.scheme,
+                d.model,
+                d.replicas.len(),
+                d.replicas.iter().map(|p| p.stages.len()).sum::<usize>(),
+                out.display()
+            );
+            Ok(())
+        }
+        ("plan", Some("load")) => {
+            let path = PathBuf::from(args.get("plan").unwrap_or("plan.json"));
+            let d = DeploymentPlan::load(&path)?;
+            print!("{}", d.explain());
+            print_sim(&d, cfg.n_requests)
+        }
+        ("simulate", None) => {
+            let d = build_deployment(&cfg, &args, replicas)?;
+            print_sim(&d, cfg.n_requests)
+        }
+        ("serve", None) => cmd_serve(&cfg, args.get("artifacts").unwrap_or("artifacts")),
+        ("zoo", None) => cmd_zoo(),
         other => anyhow::bail!(
-            "unknown command {other:?}; try: partition | plan | simulate | serve | zoo"
+            "unknown command {other:?}; try: partition | plan [save|load] | simulate | serve | zoo"
         ),
     }
 }
 
-fn load_model(cfg: &Config) -> anyhow::Result<pico::graph::ModelGraph> {
-    if cfg.model.ends_with(".json") {
-        pico::graph::ModelGraph::load(&PathBuf::from(&cfg.model))
-    } else if let Ok(g) = modelzoo::by_name(&cfg.model) {
-        Ok(g)
-    } else {
-        modelzoo::load_tiny(&PathBuf::from("artifacts"), &cfg.model)
-    }
+fn build_deployment(
+    cfg: &Config,
+    args: &Args,
+    replicas: Replicas,
+) -> anyhow::Result<DeploymentPlan> {
+    Ok(DeploymentPlan::builder()
+        .config(cfg)
+        .scheme(args.get("scheme").unwrap_or("pico"))
+        .replicas(replicas)
+        .build()?)
 }
 
 fn cmd_partition(cfg: &Config) -> anyhow::Result<()> {
-    let g = load_model(cfg)?;
+    let g = pico::deploy::resolve_model(&cfg.model, std::path::Path::new("artifacts"))?;
     let r = if cfg.dc_parts > 1 {
         partition::partition_divide_conquer(&g, cfg.diameter, cfg.dc_parts, None)?
     } else {
@@ -149,83 +205,26 @@ fn cmd_partition(cfg: &Config) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_plan(cfg: &Config) -> anyhow::Result<()> {
-    let g = load_model(cfg)?;
-    let cluster = cfg.cluster();
-    let pieces = partition::partition(&g, cfg.diameter, None)?.pieces;
-    let plan = pipeline::plan(&g, &pieces, &cluster, cfg.t_lim_or_inf())?;
-    let cost = plan.cost(&g, &cluster);
-    println!(
-        "model={} cluster={} devices; {} stages; period {} latency {} throughput {:.2}/s",
-        g.name,
-        cluster.len(),
-        plan.stages.len(),
-        fmt_secs(cost.period),
-        fmt_secs(cost.latency),
-        1.0 / cost.period
-    );
-    let mut t = Table::new(&["stage", "pieces", "layers", "devices", "T_comp", "T_comm", "T"]);
-    for (k, s) in plan.stages.iter().enumerate() {
-        let sc = &cost.stage_costs[k];
-        t.row(&[
-            format!("{k}"),
-            format!("{}..={}", s.pieces.0, s.pieces.1),
-            format!("{}", s.layers.len()),
-            format!(
-                "{}",
-                s.devices
-                    .iter()
-                    .map(|&d| cluster.devices[d].name.clone())
-                    .collect::<Vec<_>>()
-                    .join("+")
-            ),
-            fmt_secs(sc.t_comp_stage),
-            fmt_secs(sc.t_comm_stage),
-            fmt_secs(sc.total),
-        ]);
-    }
-    t.print();
-    println!("{}", plan.to_json(&g));
-    Ok(())
-}
-
-fn cmd_simulate(cfg: &Config, scheme: &str) -> anyhow::Result<()> {
-    let g = load_model(cfg)?;
-    let cluster = cfg.cluster();
-    let n = cfg.n_requests;
-    let report = match scheme {
-        "pico" => {
-            let pieces = partition::partition(&g, cfg.diameter, None)?.pieces;
-            let plan = pipeline::plan(&g, &pieces, &cluster, cfg.t_lim_or_inf())?;
-            sim::simulate_pipeline(&g, &cluster, &plan, n)
-        }
-        "lw" => sim::simulate_sync(&g, &cluster, &baselines::layer_wise(&g, &cluster), n),
-        "efl" => sim::simulate_sync(&g, &cluster, &baselines::early_fused(&g, &cluster, 2), n),
-        "ofl" => {
-            let pieces = partition::partition(&g, cfg.diameter, None)?.pieces;
-            sim::simulate_sync(&g, &cluster, &baselines::optimal_fused(&g, &pieces, &cluster), n)
-        }
-        "ce" => sim::simulate_sync(&g, &cluster, &baselines::coedge(&g, &cluster), n),
-        other => anyhow::bail!("unknown scheme {other:?} (pico|lw|efl|ofl|ce)"),
-    };
+fn print_sim(d: &DeploymentPlan, n_requests: usize) -> anyhow::Result<()> {
+    let report = d.simulate(n_requests)?;
     println!(
         "{} on {} x{}: throughput {:.3}/s period {} latency {} energy/task {:.2} J",
         report.scheme,
-        g.name,
-        cluster.len(),
+        d.model,
+        d.cluster.len(),
         report.throughput,
         fmt_secs(report.period),
         fmt_secs(report.latency),
         report.energy_per_task()
     );
     let mut t = Table::new(&["device", "util %", "redu %", "mem MB", "energy J"]);
-    for d in &report.per_device {
+    for dm in &report.per_device {
         t.row(&[
-            cluster.devices[d.device].name.clone(),
-            format!("{:.1}", d.utilization * 100.0),
-            format!("{:.1}", d.redundancy * 100.0),
-            format!("{:.1}", (d.mem_model + d.mem_feature) as f64 / 1e6),
-            format!("{:.1}", d.energy_j),
+            d.cluster.devices[dm.device].name.clone(),
+            format!("{:.1}", dm.utilization * 100.0),
+            format!("{:.1}", dm.redundancy * 100.0),
+            format!("{:.1}", (dm.mem_model + dm.mem_feature) as f64 / 1e6),
+            format!("{:.1}", dm.energy_j),
         ]);
     }
     t.print();
@@ -234,33 +233,25 @@ fn cmd_simulate(cfg: &Config, scheme: &str) -> anyhow::Result<()> {
 
 fn cmd_serve(cfg: &Config, artifacts: &str) -> anyhow::Result<()> {
     let dir = PathBuf::from(artifacts);
-    let g = modelzoo::load_tiny(&dir, &cfg.model)
-        .map_err(|e| anyhow::anyhow!("serve needs a tiny e2e model with artifacts: {e}"))?;
-    let (c, h, w) = g.input_shape;
-    let mut rng = Rng::new(42);
-    let requests: Vec<coordinator::Request> = (0..cfg.n_requests as u64)
-        .map(|id| coordinator::Request {
-            id,
-            input: Tensor::new(vec![c, h, w], (0..c * h * w).map(|_| rng.normal() as f32).collect()),
-            t_submit: 0.0,
-        })
-        .collect();
     // PJRT executes the AOT plan (its tile shapes ARE the artifact set);
-    // any other plan/cluster runs on the native backend.
-    let report = match try_pjrt(&dir, &cfg.model, &g, requests.clone()) {
-        Ok(r) => {
+    // when artifacts are absent the same model serves on the native
+    // backend with the planner run locally.
+    let serve_cfg = ServeConfig { n_requests: cfg.n_requests, ..ServeConfig::default() };
+    let report = match DeploymentPlan::from_artifacts(&dir, &cfg.model) {
+        Ok(d) => {
             println!("backend: PJRT (AOT artifacts, plan from plan.json)");
-            r
+            d.serve(&Backend::Pjrt { dir: dir.clone() }, &serve_cfg)?
         }
         Err(e) => {
             println!("backend: native (PJRT unavailable: {e})");
-            let cluster = cfg.cluster();
-            let pieces = partition::partition(&g, cfg.diameter, None)?.pieces;
-            let plan = pipeline::plan(&g, &pieces, &cluster, cfg.t_lim_or_inf())?;
-            let compute = NativeCompute {
-                weights: pico::runtime::executor::model_weights(&g, 0),
-            };
-            coordinator::serve(&g, &plan, &cluster, &compute, requests)?
+            let g = modelzoo::load_tiny(&dir, &cfg.model)
+                .map_err(|e| anyhow::anyhow!("serve needs a tiny e2e model spec: {e}"))?;
+            let d = DeploymentPlan::builder()
+                .graph(g)
+                .config(cfg)
+                .artifacts_dir(&dir)
+                .build()?;
+            d.serve(&Backend::Native { seed: 0 }, &serve_cfg)?
         }
     };
     println!(
@@ -274,27 +265,14 @@ fn cmd_serve(cfg: &Config, artifacts: &str) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn try_pjrt(
-    dir: &std::path::Path,
-    model: &str,
-    g: &pico::graph::ModelGraph,
-    requests: Vec<coordinator::Request>,
-) -> anyhow::Result<coordinator::ServeReport> {
-    let engine = std::sync::Arc::new(Engine::cpu()?);
-    let artifacts = std::sync::Arc::new(PipelineArtifacts::load(dir, model)?);
-    let (plan, n_devices) = pipeline::PipelinePlan::from_artifact_plan(g, &artifacts.plan)?;
-    let cluster = Cluster::homogeneous_rpi(n_devices, 1.0);
-    let compute = PjrtCompute { engine, artifacts };
-    coordinator::serve(g, &plan, &cluster, &compute, requests)
-}
-
 fn cmd_zoo() -> anyhow::Result<()> {
     let mut t = Table::new(&["model", "layers", "conv+pool n", "width w", "GFLOPs", "params MB"]);
     for name in [
         "vgg16", "yolov2", "resnet34", "inceptionv3", "squeezenet", "mobilenetv3", "nasnetlarge",
     ] {
         let g = modelzoo::by_name(name)?;
-        let params: usize = (0..g.n_layers()).map(|i| sim::layer_param_bytes(&g, i)).sum();
+        let params: usize =
+            (0..g.n_layers()).map(|i| pico::sim::layer_param_bytes(&g, i)).sum();
         t.row(&[
             name.into(),
             format!("{}", g.n_layers()),

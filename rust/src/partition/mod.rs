@@ -43,16 +43,18 @@ pub fn block_pieces(g: &ModelGraph) -> PieceChain {
     // Cut after vertex v when every edge crossing the v|v+1 boundary
     // originates at v itself — i.e. v dominates everything after it (the
     // Add/Concat closing a residual or Inception block is such a vertex).
+    // A single prefix scan of the furthest consumer reached by 0..v
+    // decides that in O(V+E) (the naive per-vertex rescan is O(V²·deg),
+    // which `benches/perf_hotpath.rs` pins at NASNet scale).
     let mut pieces = Vec::new();
     let mut cur = Vec::new();
+    let mut reach = 0usize; // max consumer index over vertices before v
     for v in 0..n {
         cur.push(v);
-        let dominates = (0..=v).all(|u| {
-            u == v || g.consumers(u).iter().all(|&w| w <= v)
-        });
-        if dominates {
+        if reach <= v {
             pieces.push(std::mem::take(&mut cur));
         }
+        reach = reach.max(g.consumers(v).iter().copied().max().unwrap_or(v));
     }
     if !cur.is_empty() {
         pieces.push(cur);

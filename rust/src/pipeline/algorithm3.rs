@@ -59,9 +59,9 @@ pub fn adapt_heterogeneous(
         .iter()
         .zip(segments)
         .zip(assigned)
-        .map(|((&(i, j, _), layers), devices)| Stage { pieces: (i, j), layers, devices })
+        .map(|((&(i, j, _), layers), devices)| Stage::new((i, j), layers, devices))
         .collect();
-    PipelinePlan { stages }
+    PipelinePlan::pipelined(stages)
 }
 
 #[cfg(test)]
@@ -134,7 +134,7 @@ mod tests {
             let n = rev_stages[si].devices.len();
             rev_stages[si].devices = (&mut iter).take(n).collect();
         }
-        let adversarial = PipelinePlan { stages: rev_stages }.cost(&g, &cluster).period;
+        let adversarial = PipelinePlan::pipelined(rev_stages).cost(&g, &cluster).period;
         assert!(
             adapted <= adversarial + 1e-12,
             "greedy {adapted} must beat adversarial {adversarial}"

@@ -9,7 +9,7 @@ mod rebalance;
 
 pub use algorithm2::{dp_pipeline, DpResult, DpStats};
 pub use algorithm3::adapt_heterogeneous;
-pub use plan::{PipelinePlan, Stage};
+pub use plan::{ExecutionMode, PipelinePlan, Stage};
 pub use rebalance::{rebalance, RebalanceReport};
 
 use crate::cluster::{Cluster, Device};
@@ -50,14 +50,29 @@ pub fn plan_replicated(
         "replicas must be in 1..={} (got {replicas})",
         cluster.len()
     );
-    let groups = cluster.partition_capacity(replicas);
-    let mut plans = Vec::with_capacity(replicas);
+    replicate_with(g, cluster, replicas, |g, sub| plan(g, pieces, sub, t_lim))
+}
+
+/// The replica-planning core shared by [`plan_replicated`] and the
+/// [`crate::deploy`] facade (which plugs in an arbitrary
+/// [`crate::deploy::Scheme`] and error type): partition the cluster
+/// into `r` capacity-balanced groups, plan each group with `plan_one`,
+/// and remap the sub-cluster device indices back onto the full
+/// cluster. Callers validate `r` against the cluster size first.
+pub fn replicate_with<E>(
+    g: &ModelGraph,
+    cluster: &Cluster,
+    r: usize,
+    mut plan_one: impl FnMut(&ModelGraph, &Cluster) -> Result<PipelinePlan, E>,
+) -> Result<Vec<PipelinePlan>, E> {
+    assert!(r >= 1 && r <= cluster.len(), "validate r before calling (got {r})");
+    let groups = cluster.partition_capacity(r);
+    let mut plans = Vec::with_capacity(r);
     for group in &groups {
         let devices: Vec<Device> =
             group.iter().map(|&i| cluster.devices[i].clone()).collect();
         let sub = Cluster::new(devices, cluster.network);
-        let mut p = plan(g, pieces, &sub, t_lim)?;
-        // Remap sub-cluster device indices back onto the full cluster.
+        let mut p = plan_one(g, &sub)?;
         for s in &mut p.stages {
             for d in &mut s.devices {
                 *d = group[*d];

@@ -1,14 +1,46 @@
-//! The pipeline plan: the output of the planner, the input of the
-//! simulator and the serving coordinator.
+//! The pipeline plan: the output of every planner (PICO's Algorithms
+//! 2+3, BFS, and — via [`crate::deploy::Scheme`] — the synchronous
+//! baselines), the input of the simulator and the serving coordinator.
 
 use crate::cluster::Cluster;
 use crate::cost::{pipeline_cost, PipelineCost};
+use crate::error::PicoError;
 use crate::graph::{LayerId, ModelGraph};
 use crate::json::{obj, Value};
 
+/// How a plan's stages are driven through the cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecutionMode {
+    /// Stages own disjoint devices and overlap across requests (PICO,
+    /// BFS): steady-state period = max stage time.
+    Pipelined,
+    /// Stages (groups) run in sequence for every request, typically on
+    /// overlapping device sets (LW/EFL/OFL/CE): period = latency.
+    Synchronous,
+}
+
+impl ExecutionMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ExecutionMode::Pipelined => "pipelined",
+            ExecutionMode::Synchronous => "synchronous",
+        }
+    }
+
+    /// Inverse of [`ExecutionMode::as_str`] (named to keep the inherent
+    /// method distinct from the `FromStr` trait).
+    pub fn from_name(s: &str) -> Result<ExecutionMode, PicoError> {
+        match s {
+            "pipelined" => Ok(ExecutionMode::Pipelined),
+            "synchronous" => Ok(ExecutionMode::Synchronous),
+            other => Err(PicoError::InvalidPlan(format!("unknown execution mode {other:?}"))),
+        }
+    }
+}
+
 /// One pipeline stage S = (M, D): a contiguous piece interval executed
 /// over a set of devices (feature split proportional to capacity).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Stage {
     /// Piece interval [first, last] (indices into the piece chain).
     pub pieces: (usize, usize),
@@ -16,17 +48,37 @@ pub struct Stage {
     pub layers: Vec<LayerId>,
     /// Cluster device indices assigned to this stage.
     pub devices: Vec<usize>,
+    /// CoEdge-style neighbour sync: only halo rows are exchanged
+    /// between the stage's devices instead of a full gather+scatter.
+    /// Only meaningful for [`ExecutionMode::Synchronous`] plans.
+    pub halo_sync: bool,
+}
+
+impl Stage {
+    /// A plain pipelined stage (the common case).
+    pub fn new(pieces: (usize, usize), layers: Vec<LayerId>, devices: Vec<usize>) -> Stage {
+        Stage { pieces, layers, devices, halo_sync: false }
+    }
 }
 
 /// A full pipeline configuration `S` (Eq. 1).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct PipelinePlan {
     pub stages: Vec<Stage>,
+    pub execution: ExecutionMode,
 }
 
 impl PipelinePlan {
-    /// Evaluate the plan's cost model numbers (Eq. 12).
+    /// Wrap stages as a pipelined plan (PICO / BFS planner output).
+    pub fn pipelined(stages: Vec<Stage>) -> PipelinePlan {
+        PipelinePlan { stages, execution: ExecutionMode::Pipelined }
+    }
+
+    /// Evaluate the plan's cost model numbers (Eq. 12). Only defined
+    /// for pipelined plans — synchronous schedules are costed by
+    /// [`crate::sim::simulate_sync`].
     pub fn cost(&self, g: &ModelGraph, cluster: &Cluster) -> PipelineCost {
+        debug_assert_eq!(self.execution, ExecutionMode::Pipelined);
         let stages: Vec<(Vec<LayerId>, Vec<usize>)> = self
             .stages
             .iter()
@@ -64,9 +116,9 @@ impl PipelinePlan {
             let m = sv.get("devices").as_usize().unwrap_or(1);
             let devices: Vec<usize> = (next_dev..next_dev + m).collect();
             next_dev += m;
-            stages.push(Stage { pieces: (k, k), layers, devices });
+            stages.push(Stage::new((k, k), layers, devices));
         }
-        Ok((PipelinePlan { stages }, next_dev))
+        Ok((PipelinePlan::pipelined(stages), next_dev))
     }
 
     pub fn to_json(&self, g: &ModelGraph) -> Value {
@@ -83,9 +135,98 @@ impl PipelinePlan {
                         ),
                     ),
                     ("devices", s.devices.clone().into()),
+                    ("halo_sync", s.halo_sync.into()),
                 ])
             })
             .collect();
-        obj(vec![("stages", Value::Arr(stages))])
+        obj(vec![
+            ("execution", self.execution.as_str().into()),
+            ("stages", Value::Arr(stages)),
+        ])
+    }
+
+    /// Inverse of [`PipelinePlan::to_json`]: layer names are resolved
+    /// against `g`, stage/device structure is validated shallowly (the
+    /// deep checks — device ownership, coverage — happen where the
+    /// cluster is known).
+    pub fn from_json(g: &ModelGraph, v: &Value) -> Result<PipelinePlan, PicoError> {
+        let execution = ExecutionMode::from_name(
+            v.get("execution").as_str().unwrap_or("pipelined"),
+        )?;
+        let arr = v
+            .get("stages")
+            .as_arr()
+            .ok_or_else(|| PicoError::InvalidPlan("missing stages array".into()))?;
+        if arr.is_empty() {
+            return Err(PicoError::InvalidPlan("plan has no stages".into()));
+        }
+        let mut stages = Vec::with_capacity(arr.len());
+        for (k, sv) in arr.iter().enumerate() {
+            let pieces = (
+                sv.get("pieces").idx(0).as_usize().unwrap_or(k),
+                sv.get("pieces").idx(1).as_usize().unwrap_or(k),
+            );
+            let mut layers = Vec::new();
+            for lv in sv.get("layers").as_arr().unwrap_or(&[]) {
+                let name = lv
+                    .as_str()
+                    .ok_or_else(|| PicoError::InvalidPlan(format!("stage {k}: bad layer entry")))?;
+                layers.push(g.by_name(name).ok_or_else(|| {
+                    PicoError::InvalidPlan(format!(
+                        "stage {k}: layer {name:?} is not in model {:?}",
+                        g.name
+                    ))
+                })?);
+            }
+            if layers.is_empty() {
+                return Err(PicoError::InvalidPlan(format!("stage {k} has no layers")));
+            }
+            let devices: Vec<usize> = sv
+                .get("devices")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|d| d.as_usize())
+                .collect();
+            if devices.is_empty() {
+                return Err(PicoError::InvalidPlan(format!("stage {k} has no devices")));
+            }
+            let halo_sync = sv.get("halo_sync").as_bool().unwrap_or(false);
+            stages.push(Stage { pieces, layers, devices, halo_sync });
+        }
+        Ok(PipelinePlan { stages, execution })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modelzoo;
+    use crate::partition;
+
+    #[test]
+    fn plan_json_roundtrip() {
+        let g = modelzoo::vgg16();
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        let c = Cluster::homogeneous_rpi(4, 1.0);
+        let plan = crate::pipeline::plan(&g, &pieces, &c, f64::INFINITY).unwrap();
+        let v = plan.to_json(&g);
+        let back = PipelinePlan::from_json(&g, &v).unwrap();
+        assert_eq!(plan, back);
+        assert_eq!(format!("{v}"), format!("{}", back.to_json(&g)));
+    }
+
+    #[test]
+    fn from_json_rejects_broken_plans() {
+        let g = modelzoo::synthetic_chain(4);
+        let bad = Value::from_str(r#"{"stages":[]}"#).unwrap();
+        assert!(matches!(PipelinePlan::from_json(&g, &bad), Err(PicoError::InvalidPlan(_))));
+        let bad = Value::from_str(
+            r#"{"stages":[{"layers":["nope"],"devices":[0],"pieces":[0,0]}]}"#,
+        )
+        .unwrap();
+        assert!(matches!(PipelinePlan::from_json(&g, &bad), Err(PicoError::InvalidPlan(_))));
+        let bad = Value::from_str(r#"{"execution":"warp","stages":[]}"#).unwrap();
+        assert!(matches!(PipelinePlan::from_json(&g, &bad), Err(PicoError::InvalidPlan(_))));
     }
 }

@@ -124,48 +124,85 @@ pub fn simulate_pipeline(
     plan: &PipelinePlan,
     n_requests: usize,
 ) -> SimReport {
-    let costs: Vec<StageCost> = plan
-        .stages
+    simulate_replicated(g, cluster, std::slice::from_ref(plan), n_requests)
+}
+
+/// Simulate `plans` — one pipeline replica per plan over disjoint device
+/// groups of `cluster` (see [`crate::pipeline::plan_replicated`]) — with
+/// all requests backlogged at t = 0 and dispatched by the engine's
+/// least-loaded policy, exactly like the serving coordinator.
+pub fn simulate_replicated(
+    g: &ModelGraph,
+    cluster: &Cluster,
+    plans: &[PipelinePlan],
+    n_requests: usize,
+) -> SimReport {
+    assert!(!plans.is_empty(), "need at least one pipeline replica");
+    let rep_costs: Vec<Vec<StageCost>> = plans
         .iter()
-        .map(|s| {
-            let devs: Vec<&crate::cluster::Device> =
-                s.devices.iter().map(|&i| &cluster.devices[i]).collect();
-            stage_cost(g, &s.layers, &devs, &cluster.network)
+        .map(|plan| {
+            plan.stages
+                .iter()
+                .map(|s| {
+                    let devs: Vec<&crate::cluster::Device> =
+                        s.devices.iter().map(|&i| &cluster.devices[i]).collect();
+                    stage_cost(g, &s.layers, &devs, &cluster.network)
+                })
+                .collect()
         })
         .collect();
-    let stage_t: Vec<f64> = costs.iter().map(|c| c.total).collect();
-    let latency: f64 = stage_t.iter().sum();
-    let period = stage_t.iter().cloned().fold(0.0, f64::max);
+    // Per-replica analytics: latency = fill time of the best replica
+    // (the first backlogged frame rides it); the steady-state period of
+    // R parallel replicas is the harmonic combination of theirs.
+    let latency = rep_costs
+        .iter()
+        .map(|cs| cs.iter().map(|c| c.total).sum::<f64>())
+        .fold(f64::INFINITY, f64::min);
+    let rep_period = |cs: &Vec<StageCost>| cs.iter().map(|c| c.total).fold(0.0, f64::max);
+    let period = if rep_costs.len() == 1 {
+        rep_period(&rep_costs[0])
+    } else {
+        1.0 / rep_costs.iter().map(|cs| 1.0 / rep_period(cs)).sum::<f64>()
+    };
     let n = n_requests.max(1);
-    // Timeline from the shared engine: one replica, unit batches, open
-    // admission, all requests backlogged at t = 0.
-    let profiles: Vec<StageProfile> =
-        costs.iter().map(|c| StageProfile::from_stage_cost(c, &cluster.network)).collect();
-    let run = run_pipeline(&[profiles], &vec![0.0; n], &EngineConfig::default());
+    // Timeline from the shared engine: unit batches, open admission,
+    // all requests backlogged at t = 0.
+    let profiles: Vec<Vec<StageProfile>> = rep_costs
+        .iter()
+        .map(|cs| cs.iter().map(|c| StageProfile::from_stage_cost(c, &cluster.network)).collect())
+        .collect();
+    let run = run_pipeline(&profiles, &vec![0.0; n], &EngineConfig::default());
     let makespan = run.report.makespan;
+    // How many of the backlogged frames each replica absorbed (drives
+    // per-device busy time and energy).
+    let mut served = vec![0usize; plans.len()];
+    for j in &run.jobs {
+        served[j.replica] += 1;
+    }
 
-    let whole_model: f64 = crate::cost::total_flops(g);
     let mut per_device = Vec::new();
-    for (si, stage) in plan.stages.iter().enumerate() {
-        let c = &costs[si];
-        let model_bytes: usize = stage.layers.iter().map(|&id| layer_param_bytes(g, id)).sum();
-        for (k, &dev) in stage.devices.iter().enumerate() {
-            let busy = c.t_comp[k];
-            let busy_total = busy * n as f64;
-            let d = &cluster.devices[dev];
-            let frac = if stage.devices.len() > 1 { 1.0 / stage.devices.len() as f64 } else { 1.0 };
-            per_device.push(DeviceMetrics {
-                device: dev,
-                utilization: (busy_total / makespan).min(1.0),
-                redundancy: if c.flops[k] > 0.0 { c.redundant_flops[k] / c.flops[k] } else { 0.0 },
-                mem_model: model_bytes,
-                mem_feature: peak_feature_bytes(g, &stage.layers, frac),
-                energy_j: busy_total * d.active_power_w
-                    + (makespan - busy_total).max(0.0) * d.standby_power_w,
-            });
+    for (ri, plan) in plans.iter().enumerate() {
+        for (si, stage) in plan.stages.iter().enumerate() {
+            let c = &rep_costs[ri][si];
+            let model_bytes: usize = stage.layers.iter().map(|&id| layer_param_bytes(g, id)).sum();
+            for (k, &dev) in stage.devices.iter().enumerate() {
+                let busy = c.t_comp[k];
+                let busy_total = busy * served[ri] as f64;
+                let d = &cluster.devices[dev];
+                let frac =
+                    if stage.devices.len() > 1 { 1.0 / stage.devices.len() as f64 } else { 1.0 };
+                per_device.push(DeviceMetrics {
+                    device: dev,
+                    utilization: if makespan > 0.0 { (busy_total / makespan).min(1.0) } else { 0.0 },
+                    redundancy: if c.flops[k] > 0.0 { c.redundant_flops[k] / c.flops[k] } else { 0.0 },
+                    mem_model: model_bytes,
+                    mem_feature: peak_feature_bytes(g, &stage.layers, frac),
+                    energy_j: busy_total * d.active_power_w
+                        + (makespan - busy_total).max(0.0) * d.standby_power_w,
+                });
+            }
         }
     }
-    let _ = whole_model;
     per_device.sort_by_key(|d| d.device);
     SimReport {
         scheme: "PICO".into(),
@@ -246,7 +283,7 @@ pub fn simulate_sync(
         })
         .collect();
     SimReport {
-        scheme: sched.name.into(),
+        scheme: sched.name.clone(),
         latency,
         period: latency,
         throughput: 1.0 / latency,

@@ -2,12 +2,13 @@
 //! coordinator are two drivers over the same event engine, and this
 //! matrix locks that down — for every model-zoo CNN, on homogeneous and
 //! heterogeneous clusters, the simulated and the served period/latency
-//! must agree within 1%.
+//! must agree within 1%. Everything flows through the `Deployment`
+//! facade: one artifact, `.simulate()` vs `.serve()`.
 //!
-//! Serving uses the timing-only [`NullCompute`] backend: the
-//! coordinator's clocks are virtual, so the full serving machinery
-//! (admission, dispatch, tile geometry, stitch, live-set forwarding)
-//! runs at full model scale without paying for real convolutions.
+//! Serving uses the timing-only [`Backend::Null`]: the coordinator's
+//! clocks are virtual, so the full serving machinery (admission,
+//! dispatch, tile geometry, stitch, live-set forwarding) runs at full
+//! model scale without paying for real convolutions.
 //!
 //! NASNet is represented by `nasnet_slice` + divide-and-conquer
 //! partitioning: direct Algorithm 1 on the width-8 full graph is the
@@ -16,11 +17,8 @@
 use std::time::Duration;
 
 use pico::cluster::Cluster;
-use pico::coordinator::{self, NullCompute, Request, ServeOptions};
-use pico::graph::ModelGraph;
-use pico::partition::PieceChain;
-use pico::runtime::Tensor;
-use pico::{modelzoo, partition, pipeline};
+use pico::deploy::{Backend, DeploymentPlan, Replicas, ServeConfig};
+use pico::modelzoo;
 
 const ZOO: &[&str] = &[
     "vgg16",
@@ -32,39 +30,27 @@ const ZOO: &[&str] = &[
     "yolov2",
 ];
 
-fn load(model: &str) -> (ModelGraph, PieceChain) {
-    if model == "nasnet" {
-        let g = modelzoo::nasnet_slice(1);
-        let pieces = partition::partition_divide_conquer(
-            &g,
-            5,
-            6,
-            Some(Duration::from_secs(300)),
-        )
-        .unwrap()
-        .pieces;
-        (g, pieces)
+fn deployment(model: &str, cluster: &Cluster) -> DeploymentPlan {
+    let builder = DeploymentPlan::builder().cluster(cluster.clone());
+    let builder = if model == "nasnet" {
+        builder
+            .graph(modelzoo::nasnet_slice(1))
+            .dc_parts(6)
+            .partition_budget(Duration::from_secs(300))
     } else {
-        let g = modelzoo::by_name(model).unwrap();
-        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
-        (g, pieces)
-    }
+        builder.model(model)
+    };
+    builder.build().unwrap_or_else(|e| panic!("{model}: {e}"))
 }
 
-fn requests(g: &ModelGraph, n: usize) -> Vec<Request> {
-    let (c, h, w) = g.input_shape;
-    (0..n as u64)
-        .map(|id| Request { id, input: Tensor::zeros(vec![c, h, w]), t_submit: 0.0 })
-        .collect()
-}
-
-/// One matrix cell: plan, simulate, serve, compare.
+/// One matrix cell: build the deployment, simulate, serve, compare.
 fn check_agreement(model: &str, cluster: &Cluster) {
-    let (g, pieces) = load(model);
-    let plan = pipeline::plan(&g, &pieces, cluster, f64::INFINITY).unwrap();
+    let d = deployment(model, cluster);
     let n = 5;
-    let predicted = pico::sim::simulate_pipeline(&g, cluster, &plan, n);
-    let report = coordinator::serve(&g, &plan, cluster, &NullCompute, requests(&g, n)).unwrap();
+    let predicted = d.simulate(n).unwrap();
+    let report = d
+        .serve(&Backend::Null, &ServeConfig { n_requests: n, ..ServeConfig::default() })
+        .unwrap();
     assert_eq!(report.responses.len(), n, "{model}: lost responses");
 
     // Steady-state period within 1%.
@@ -108,6 +94,30 @@ fn agreement_matrix_heterogeneous() {
     }
 }
 
+/// A plan artifact is the unit of deployment: saved, re-loaded and
+/// served, it must reproduce the in-memory deployment's timings
+/// *exactly* (the acceptance bar for `pico plan save` / `plan load`).
+#[test]
+fn saved_plan_serves_identically_to_built_plan() {
+    let cluster = Cluster::paper_heterogeneous();
+    let d = deployment("squeezenet", &cluster);
+    let path = std::env::temp_dir().join("pico_agreement_plan.json");
+    d.save(&path).unwrap();
+    let loaded = DeploymentPlan::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+
+    let n = 8;
+    let a = d.simulate(n).unwrap();
+    let b = loaded.simulate(n).unwrap();
+    assert_eq!(a.period, b.period, "identical plan, identical period");
+    assert_eq!(a.latency, b.latency);
+    let cfg = ServeConfig { n_requests: n, ..ServeConfig::default() };
+    let sa = d.serve(&Backend::Null, &cfg).unwrap();
+    let sb = loaded.serve(&Backend::Null, &cfg).unwrap();
+    assert_eq!(sa.makespan, sb.makespan);
+    assert_eq!(sa.period, sb.period);
+}
+
 /// The multi-replica scheduler's headline: on a 4-device heterogeneous
 /// cluster, two capacity-balanced replicas driven by the least-loaded
 /// dispatcher deliver ≥1.8× the throughput of a single replica (the
@@ -124,29 +134,24 @@ fn multi_replica_throughput_scales_on_heterogeneous_cluster() {
         ],
         Network::wifi_50mbps(),
     );
-    let g = modelzoo::vgg16();
-    let pieces = partition::partition(&g, 5, None).unwrap().pieces;
-    let plans = pipeline::plan_replicated(&g, &pieces, &cluster, f64::INFINITY, 2).unwrap();
-    assert_eq!(plans.len(), 2);
     let n = 30;
-    let single = coordinator::serve_replicated(
-        &g,
-        &plans[..1],
-        &cluster,
-        &NullCompute,
-        requests(&g, n),
-        &ServeOptions::default(),
-    )
-    .unwrap();
-    let multi = coordinator::serve_replicated(
-        &g,
-        &plans,
-        &cluster,
-        &NullCompute,
-        requests(&g, n),
-        &ServeOptions::default(),
-    )
-    .unwrap();
+    let cfg = ServeConfig { n_requests: n, ..ServeConfig::default() };
+    let single = DeploymentPlan::builder()
+        .model("vgg16")
+        .cluster(cluster.clone())
+        .replicas(Replicas::Fixed(1))
+        .build()
+        .unwrap()
+        .serve(&Backend::Null, &cfg)
+        .unwrap();
+    let two = DeploymentPlan::builder()
+        .model("vgg16")
+        .cluster(cluster)
+        .replicas(Replicas::Fixed(2))
+        .build()
+        .unwrap();
+    assert_eq!(two.replicas.len(), 2);
+    let multi = two.serve(&Backend::Null, &cfg).unwrap();
     assert_eq!(multi.responses.len(), n);
     assert!(
         multi.throughput >= 1.8 * single.throughput,

@@ -1,0 +1,170 @@
+//! Serialization contract tests: the `DeploymentPlan` artifact must
+//! round-trip byte-identically (a plan computed on a laptop is served
+//! verbatim on the cluster), every shipped config file must parse, and
+//! every [`PicoError`] variant must display usefully and stay matchable.
+
+use std::path::PathBuf;
+
+use pico::cluster::Cluster;
+use pico::config::Config;
+use pico::deploy::{scheme_names, DeploymentPlan, Replicas, PLAN_VERSION};
+use pico::json::Value;
+use pico::PicoError;
+
+fn configs_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../examples/configs")
+}
+
+/// Byte-identical golden round trip for every scheme shape: pipelined
+/// (pico), per-layer sync (lw), halo sync (ce), fused sync (efl/ofl),
+/// and a multi-replica pipelined plan.
+#[test]
+fn deployment_plan_roundtrips_byte_identical() {
+    let cluster = Cluster::paper_heterogeneous();
+    for &scheme in scheme_names() {
+        if scheme == "bfs" {
+            continue; // exhaustive search is exercised in benches, not here
+        }
+        let d = DeploymentPlan::builder()
+            .model("squeezenet")
+            .cluster(cluster.clone())
+            .scheme(scheme)
+            .build()
+            .unwrap_or_else(|e| panic!("{scheme}: {e}"));
+        let s1 = format!("{}", d.to_json());
+        let back = DeploymentPlan::from_json(&Value::from_str(&s1).unwrap())
+            .unwrap_or_else(|e| panic!("{scheme}: {e}"));
+        let s2 = format!("{}", back.to_json());
+        assert_eq!(s1, s2, "{scheme}: JSON round trip must be byte-identical");
+        assert_eq!(d.replicas, back.replicas, "{scheme}: plan structure must survive");
+        assert_eq!(back.version, PLAN_VERSION);
+    }
+
+    // Multi-replica artifact.
+    let d = DeploymentPlan::builder()
+        .model("vgg16")
+        .cluster(Cluster::homogeneous_rpi(4, 1.0))
+        .replicas(Replicas::Fixed(2))
+        .build()
+        .unwrap();
+    assert_eq!(d.replicas.len(), 2);
+    let s1 = format!("{}", d.to_json());
+    let back = DeploymentPlan::from_json(&Value::from_str(&s1).unwrap()).unwrap();
+    assert_eq!(s1, format!("{}", back.to_json()));
+}
+
+/// Save/load through a real file, then simulate: identical period.
+#[test]
+fn saved_plan_simulates_to_identical_period() {
+    let d = DeploymentPlan::builder()
+        .model("resnet34")
+        .cluster(Cluster::homogeneous_rpi(6, 1.0))
+        .build()
+        .unwrap();
+    let path = std::env::temp_dir().join("pico_serialization_plan.json");
+    d.save(&path).unwrap();
+    let loaded = DeploymentPlan::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    let a = d.simulate(20).unwrap();
+    let b = loaded.simulate(20).unwrap();
+    assert_eq!(a.period, b.period);
+    assert_eq!(a.latency, b.latency);
+    assert_eq!(a.makespan, b.makespan);
+}
+
+/// Every config file shipped under examples/configs/ must parse and
+/// materialise a non-empty cluster.
+#[test]
+fn every_shipped_config_parses() {
+    let dir = configs_dir();
+    let mut seen = 0;
+    for entry in std::fs::read_dir(&dir).expect("examples/configs must exist") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        seen += 1;
+        let cfg = Config::load(&path)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        assert!(!cfg.model.is_empty(), "{}", path.display());
+        let cluster = cfg.cluster();
+        assert!(!cluster.is_empty(), "{}: empty cluster", path.display());
+        assert!(cluster.network.bandwidth_bps > 0.0, "{}", path.display());
+    }
+    assert!(seen >= 3, "expected the shipped config set, found {seen} files");
+}
+
+/// Loading a structurally broken artifact fails with the right variant.
+#[test]
+fn broken_artifacts_fail_typed() {
+    let missing = DeploymentPlan::load(std::path::Path::new("/no/such/pico_plan.json"));
+    assert!(matches!(missing, Err(PicoError::Io { .. })), "{missing:?}");
+
+    let d = DeploymentPlan::builder()
+        .model("squeezenet")
+        .cluster(Cluster::homogeneous_rpi(2, 1.0))
+        .build()
+        .unwrap();
+    let mut v = d.to_json();
+    if let Value::Obj(o) = &mut v {
+        o.insert("version".into(), Value::Num(0.0));
+    }
+    assert!(matches!(
+        DeploymentPlan::from_json(&v),
+        Err(PicoError::UnsupportedVersion { found: 0, supported: PLAN_VERSION })
+    ));
+
+    let mut v = d.to_json();
+    if let Value::Obj(o) = &mut v {
+        o.insert("replicas".into(), Value::Arr(vec![]));
+    }
+    assert!(matches!(DeploymentPlan::from_json(&v), Err(PicoError::InvalidPlan(_))));
+
+    let mut v = d.to_json();
+    if let Value::Obj(o) = &mut v {
+        o.remove("cluster");
+    }
+    assert!(matches!(DeploymentPlan::from_json(&v), Err(PicoError::InvalidCluster(_))));
+}
+
+/// Each PicoError variant: Display carries the discriminating detail
+/// and the variant stays matchable (the public-API error contract).
+#[test]
+fn pico_error_display_and_matchability() {
+    let cases: Vec<(PicoError, &str)> = vec![
+        (PicoError::InvalidCluster("no devices".into()), "no devices"),
+        (PicoError::Infeasible { t_lim: 2.5 }, "T_lim = 2.5"),
+        (PicoError::UnknownModel("vgg99".into()), "vgg99"),
+        (PicoError::UnknownScheme("magic".into()), "magic"),
+        (PicoError::ArtifactMissing("tinyvgg".into()), "tinyvgg"),
+        (PicoError::UnsupportedVersion { found: 9, supported: 1 }, "version 9"),
+        (PicoError::InvalidPlan("stage 0 has no devices".into()), "stage 0"),
+        (PicoError::Unsupported("sync serve".into()), "sync serve"),
+        (PicoError::Io { path: "/tmp/x".into(), msg: "denied".into() }, "/tmp/x"),
+        (PicoError::Internal("bug".into()), "bug"),
+    ];
+    for (err, needle) in cases {
+        let text = format!("{err}");
+        assert!(text.contains(needle), "{err:?} display {text:?} must mention {needle:?}");
+        // Matchability: every variant is reachable by pattern.
+        let matched = matches!(
+            err,
+            PicoError::InvalidCluster(_)
+                | PicoError::Infeasible { .. }
+                | PicoError::UnknownModel(_)
+                | PicoError::UnknownScheme(_)
+                | PicoError::ArtifactMissing(_)
+                | PicoError::UnsupportedVersion { .. }
+                | PicoError::InvalidPlan(_)
+                | PicoError::Unsupported(_)
+                | PicoError::Io { .. }
+                | PicoError::Internal(_)
+        );
+        assert!(matched);
+    }
+    // The scheme registry is reflected into the UnknownScheme message.
+    let text = format!("{}", PicoError::UnknownScheme("x".into()));
+    for name in scheme_names() {
+        assert!(text.contains(name), "{text}");
+    }
+}
