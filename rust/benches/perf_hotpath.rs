@@ -8,12 +8,93 @@
 //!     O(nL²D²) bound;
 //!   * PJRT dispatch overhead per tile (when artifacts exist).
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use pico::cluster::Cluster;
 use pico::runtime::Tensor;
 use pico::util::Table;
 use pico::{modelzoo, partition, pipeline};
+
+/// NASNet-scale planner pin: partition (D&C) + oracle DP + Algorithm 3,
+/// with the pre-overhaul reference DP timed on the same inputs. Gated
+/// by `PICO_PERF_BUDGET_MS` (end-to-end wall clock, CI fails loudly on
+/// regression) and recorded to `BENCH_planner.json`.
+fn planner_hotpath(t: &mut Table) {
+    let g = modelzoo::nasnet_slice(1);
+    let t0 = Instant::now();
+    let pieces = partition::partition_divide_conquer(&g, 5, 6, Some(Duration::from_secs(300)))
+        .expect("NASNet slice partition within budget")
+        .pieces;
+    let partition_s = t0.elapsed().as_secs_f64();
+    let c = Cluster::homogeneous_rpi(8, 1.0);
+
+    let t1 = Instant::now();
+    let dp = pipeline::dp_pipeline(&g, &pieces, &c, f64::INFINITY).unwrap();
+    let oracle_dp_s = t1.elapsed().as_secs_f64();
+    let t2 = Instant::now();
+    let plan = pipeline::plan(&g, &pieces, &c, f64::INFINITY).unwrap();
+    let plan_s = t2.elapsed().as_secs_f64();
+    let end_to_end_s = partition_s + plan_s;
+
+    let t3 = Instant::now();
+    let ref_dp = pipeline::dp_pipeline_reference(&g, &pieces, &c, f64::INFINITY).unwrap();
+    let reference_dp_s = t3.elapsed().as_secs_f64();
+    // The speedup is only meaningful if the results are identical.
+    assert_eq!(dp.stages, ref_dp.stages, "oracle DP diverged from reference");
+    assert_eq!(dp.period.to_bits(), ref_dp.period.to_bits());
+    assert_eq!(dp.latency.to_bits(), ref_dp.latency.to_bits());
+
+    let speedup = reference_dp_s / oracle_dp_s.max(1e-9);
+    let eval_ratio = ref_dp.stats.stage_evals as f64 / dp.stats.stage_evals.max(1) as f64;
+    t.row(&["Algorithm 1 (D&C), NASNet slice".into(), format!("{:.0}ms", partition_s * 1e3),
+        "1".into(), format!("{} pieces", pieces.len())]);
+    t.row(&["Algorithm 2 (oracle), NASNet x 8".into(), format!("{:.1}ms", oracle_dp_s * 1e3),
+        "1".into(), format!("{} leaf evals, {} hits", dp.stats.stage_evals, dp.stats.ts_cache_hits)]);
+    t.row(&["Algorithm 2 (reference), NASNet x 8".into(), format!("{:.1}ms", reference_dp_s * 1e3),
+        "1".into(), format!("{} leaf evals", ref_dp.stats.stage_evals)]);
+    t.row(&["planner DP speedup".into(), format!("{speedup:.1}x"), "-".into(),
+        format!("leaf-eval ratio {eval_ratio:.1}x")]);
+    t.row(&["plan end-to-end (partition+DP+adapt)".into(), format!("{:.0}ms", end_to_end_s * 1e3),
+        "1".into(), format!("{} stages", plan.stages.len())]);
+
+    let json = format!(
+        "{{\n  \"case\": \"nasnet_slice(1) dc_parts=6 x 8 homogeneous rpi\",\n  \
+         \"pieces\": {},\n  \"partition_ms\": {:.3},\n  \"oracle_dp_ms\": {:.3},\n  \
+         \"reference_dp_ms\": {:.3},\n  \"dp_speedup\": {:.2},\n  \
+         \"end_to_end_ms\": {:.3},\n  \"oracle_stage_evals\": {},\n  \
+         \"reference_stage_evals\": {},\n  \"stage_eval_ratio\": {:.2},\n  \
+         \"ts_cache_hits\": {},\n  \"pruned_branches\": {},\n  \
+         \"generated_by\": \"benches/perf_hotpath.rs (cargo bench --bench perf_hotpath)\"\n}}\n",
+        pieces.len(),
+        partition_s * 1e3,
+        oracle_dp_s * 1e3,
+        reference_dp_s * 1e3,
+        speedup,
+        end_to_end_s * 1e3,
+        dp.stats.stage_evals,
+        ref_dp.stats.stage_evals,
+        eval_ratio,
+        dp.stats.ts_cache_hits,
+        dp.stats.pruned_branches,
+    );
+    // Bench processes run with cwd = the package root (rust/); the
+    // baseline lives at the workspace root where CI reads it.
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_planner.json");
+    if let Err(e) = std::fs::write(&out, &json) {
+        eprintln!("warning: could not write {}: {e}", out.display());
+    }
+
+    if let Ok(ms) = std::env::var("PICO_PERF_BUDGET_MS") {
+        let budget_ms: f64 = ms.parse().expect("PICO_PERF_BUDGET_MS must be a number");
+        if end_to_end_s * 1e3 > budget_ms {
+            eprintln!(
+                "FAIL: NASNet-scale plan took {:.0}ms > budget {budget_ms}ms",
+                end_to_end_s * 1e3
+            );
+            std::process::exit(1);
+        }
+    }
+}
 
 fn time<F: FnMut()>(reps: usize, mut f: F) -> f64 {
     let t0 = Instant::now();
@@ -82,6 +163,10 @@ fn main() {
     });
     t.row(&["block_pieces, NASNet-A-Large".into(), format!("{:.1}us", bp * 1e6), "50".into(),
         "O(V+E) prefix scan".into()]);
+
+    // 5c. The planner hot path at NASNet scale (oracle vs reference DP,
+    // wall-clock budget gate, BENCH_planner.json record).
+    planner_hotpath(&mut t);
 
     // 6. Native conv tile (the per-device compute the coordinator drives).
     let tiny = modelzoo::synthetic_chain(1);

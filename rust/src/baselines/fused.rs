@@ -6,8 +6,11 @@
 //! choose fusion boundaries by DP so the sum of group costs is minimal —
 //! all devices execute every group, synchronising between groups.
 
+use std::sync::Arc;
+
 use super::{SyncGroup, SyncSchedule};
 use crate::cluster::{Cluster, Device};
+use crate::cost::oracle::{CostOracle, PieceMeta};
 use crate::cost::stage_cost;
 use crate::graph::{ModelGraph, Op};
 use crate::partition::PieceChain;
@@ -42,17 +45,35 @@ pub fn early_fused(g: &ModelGraph, cluster: &Cluster, fuse_pools: usize) -> Sync
 /// all devices. `pieces` usually comes from Algorithm 1 so OFL handles
 /// DAG models exactly like the paper's AOFL-at-block-level comparison.
 pub fn optimal_fused(g: &ModelGraph, pieces: &PieceChain, cluster: &Cluster) -> SyncSchedule {
+    let meta = Arc::new(PieceMeta::build(g, pieces));
+    optimal_fused_with_meta(g, pieces, &meta, cluster)
+}
+
+/// [`optimal_fused`] against pre-built piece aggregates: the O(L²)
+/// group-cost table is answered by the interval cost oracle (one
+/// heterogeneous roster over the whole cluster) instead of per-query
+/// `stage_cost` graph walks. Falls back to the walk — same results —
+/// when the chain fails the oracle's structural validation.
+pub fn optimal_fused_with_meta(
+    g: &ModelGraph,
+    pieces: &PieceChain,
+    meta: &Arc<PieceMeta>,
+    cluster: &Cluster,
+) -> SyncSchedule {
     let all: Vec<usize> = (0..cluster.len()).collect();
     let devs: Vec<&Device> = cluster.devices.iter().collect();
     let l = pieces.len();
-    let seg = |i: usize, j: usize| -> Vec<usize> {
-        let mut ids: Vec<usize> = pieces[i..=j].iter().flatten().copied().collect();
-        ids.sort_unstable();
-        ids
+    let mut oracle = if meta.exact() {
+        Some(CostOracle::new(g, meta.clone(), cluster.devices.clone(), cluster.network))
+    } else {
+        None
     };
     // cost[i][j]: executing pieces i..=j as one fused group on all devices
-    let group_cost = |i: usize, j: usize| -> f64 {
-        stage_cost(g, &seg(i, j), &devs, &cluster.network).total
+    let mut group_cost = |i: usize, j: usize| -> f64 {
+        match oracle.as_mut() {
+            Some(o) => o.interval_cost(i, j),
+            None => stage_cost(g, &meta.segment(i, j), &devs, &cluster.network).total,
+        }
     };
     // DP: best[j] = min over i<=j of best[i-1] + cost(i, j)
     let mut best = vec![f64::INFINITY; l + 1];
@@ -76,7 +97,7 @@ pub fn optimal_fused(g: &ModelGraph, pieces: &PieceChain, cluster: &Cluster) -> 
     bounds.reverse();
     let groups = bounds
         .into_iter()
-        .map(|(i, jj)| SyncGroup { layers: seg(i, jj), devices: all.clone(), halo_sync: false })
+        .map(|(i, jj)| SyncGroup { layers: meta.segment(i, jj), devices: all.clone(), halo_sync: false })
         .collect();
     SyncSchedule { name: "OFL".into(), groups }
 }

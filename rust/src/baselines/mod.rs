@@ -22,7 +22,7 @@ mod layerwise;
 
 pub use bfs::{bfs_optimal, BfsResult};
 pub use coedge::{coedge, halo_fraction};
-pub use fused::{early_fused, optimal_fused};
+pub use fused::{early_fused, optimal_fused, optimal_fused_with_meta};
 pub use layerwise::layer_wise;
 
 use crate::graph::LayerId;

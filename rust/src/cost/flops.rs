@@ -42,6 +42,24 @@ pub fn layer_flops(g: &ModelGraph, id: LayerId, out_rows: usize) -> f64 {
     }
 }
 
+/// Parameter bytes of one layer (f32 weights + bias) — the memory-side
+/// companion of [`layer_flops`], shared by the simulator's per-device
+/// memory model and the planner's [`super::oracle`] prefix aggregates.
+pub fn layer_param_bytes(g: &ModelGraph, id: LayerId) -> usize {
+    let l = g.layer(id);
+    match l.op {
+        Op::Conv => {
+            let c_in = g.in_channels(id) / l.groups;
+            (l.out_channels * c_in * l.kernel.0 * l.kernel.1 + l.out_channels) * 4
+        }
+        Op::Dense => {
+            let f = g.shape(l.inputs[0]).elems();
+            (l.out_channels * f + l.out_channels) * 4
+        }
+        _ => 0,
+    }
+}
+
 /// Eq. (6): θ(M; F^k) — FLOPs a device spends executing segment tiles
 /// (actual produced rows, halo included).
 pub fn segment_flops(g: &ModelGraph, segment: &[LayerId], tiles: &BTreeMap<LayerId, LayerTile>) -> f64 {

@@ -7,12 +7,18 @@
 //!   redundancy measure C(M) driving Algorithm 1.
 //! * [`stage`] — stage execution cost T(S) (Eq. 7–11) and pipeline
 //!   period/latency (Eq. 12).
+//! * [`oracle`] — the planner's O(1) interval cost oracle: per-piece
+//!   prefix aggregates ([`PieceMeta`]) plus lazy per-end-piece suffix
+//!   tables ([`CostOracle`]) that answer `Ts(i, j, m)` without
+//!   re-walking the graph, bit-identically to [`stage_cost`].
 
 pub mod feature;
 pub mod flops;
+pub mod oracle;
 pub mod stage;
 
 pub use feature::{proportional_splits, required_rows, row_splits, segment_tiles, Interval, LayerTile};
+pub use oracle::{CostOracle, OracleStats, PieceMeta};
 pub use flops::{
     halo_rows, ideal_segment_flops, layer_flops, piece_redundancy, segment_flops, segment_sinks,
     total_flops,

@@ -1,0 +1,839 @@
+//! The planner's O(1) interval cost oracle.
+//!
+//! Algorithm 2 asks one question thousands of times: `Ts(i, j, m)` — the
+//! single-stage cost (Eq. 7–11) of pieces `i..=j` on `m` devices. The
+//! naive implementation rebuilds the layer segment, re-sorts it, and
+//! re-walks the graph with [`crate::cost::stage_cost`] on every query,
+//! which makes NASNet-scale planning O(n·L²·D²). This module exploits
+//! the piece-chain structure instead:
+//!
+//! * **[`PieceMeta`]** (built once per piece chain) holds the static
+//!   prefix aggregates: per-piece *sorted* layer ids, cumulative ideal
+//!   FLOPs / parameter bytes / feature bytes, the whole-chain
+//!   boundary-cut communication volume, per-end-piece sink sets and the
+//!   cross-piece edge structure. It also *validates* the invariant the
+//!   fast path needs — every edge points forward in both layer-id and
+//!   piece order (divide-and-conquer NASNet chains have *skip* edges
+//!   crossing several pieces; those are supported, backward edges are
+//!   not) — and checks FLOP totals stay exactly representable in f64.
+//!   When validation fails, callers fall back to the reference
+//!   `stage_cost` path.
+//!
+//! * **[`CostOracle`]** (one per device roster) lazily materialises,
+//!   for each *end piece* `j`, one backward required-rows propagation
+//!   over the whole prefix `0..=j` per device — the key observation
+//!   being that Eq. 2–3 propagate strictly downstream→upstream, so the
+//!   rows a device computes for a layer of piece `q` depend only on
+//!   pieces `q..=j`, never on where the interval *starts*. One O(n)
+//!   pass per `(j, k)` therefore yields suffix-FLOP, suffix-sink-byte
+//!   and per-boundary feed-byte tables that answer `Ts(i, j, ·)` for
+//!   **every** start `i` in O(m) arithmetic.
+//!
+//! **Exactness.** The oracle is not an approximation: all FLOP values
+//! in this cost model are integer-valued f64 (sums of `layer_flops`),
+//! so suffix accumulation is associativity-free below 2⁵³ (checked at
+//! [`PieceMeta::build`]), byte counts are `usize`, and the final
+//! `max`/`sum` assembly mirrors `stage_cost` term for term — the
+//! results are bit-identical to the reference path, which
+//! `rust/tests/planner_equivalence.rs` pins across the model zoo.
+
+use std::sync::Arc;
+
+use super::feature::{proportional_splits, required_rows, Interval};
+use super::flops::{layer_flops, layer_param_bytes};
+use crate::cluster::{Device, Network};
+use crate::graph::{LayerId, ModelGraph, Op, Shape};
+
+/// Static per-piece-chain aggregates shared by every oracle (and every
+/// replica probe) planning over the same chain. Device independent.
+#[derive(Debug)]
+pub struct PieceMeta {
+    n_layers: usize,
+    /// Per-piece layer ids, ascending — the sort is hoisted here so no
+    /// query path ever re-sorts piece members.
+    piece_ids: Vec<Vec<LayerId>>,
+    /// layer id → piece index (usize::MAX when not covered).
+    piece_of: Vec<usize>,
+    /// `sinks_of[j]`: sinks of *any* interval ending at piece `j` that
+    /// starts at or before their own piece (ascending ids). A layer is
+    /// a sink for end `j` iff some consumer lives past piece `j` (or it
+    /// has none) — valid because edges only point forward in piece
+    /// order, so "outside the interval" can only mean "past j".
+    sinks_of: Vec<Vec<LayerId>>,
+    /// Per layer: sorted, distinct consumer piece indices strictly
+    /// greater than the layer's own piece (the cross-piece fan-out).
+    cross_pieces: Vec<Vec<usize>>,
+    /// Whole-chain boundary-cut volume: full-feature bytes of every
+    /// source with a consumer at or past piece `i` and its own piece
+    /// before `i` (the end = L−1 instance of the per-table cut arrays).
+    cut_full_bytes: Vec<usize>,
+    /// Cumulative ideal (unsplit) FLOPs over pieces `0..q`.
+    prefix_ideal_flops: Vec<f64>,
+    /// Cumulative parameter bytes over pieces `0..q`.
+    prefix_param_bytes: Vec<usize>,
+    /// Cumulative output-feature bytes over pieces `0..q`.
+    prefix_feature_bytes: Vec<usize>,
+    /// All chain invariants hold and FLOP sums are exactly
+    /// representable: the fast oracle path is admissible.
+    exact: bool,
+}
+
+impl PieceMeta {
+    /// Build the static aggregates for `pieces` over `g` and validate
+    /// the chain invariants the O(1) query path relies on.
+    pub fn build(g: &ModelGraph, pieces: &[Vec<LayerId>]) -> PieceMeta {
+        let n = g.n_layers();
+        let l = pieces.len();
+        let piece_ids: Vec<Vec<LayerId>> = pieces
+            .iter()
+            .map(|p| {
+                let mut v = p.clone();
+                v.sort_unstable();
+                v
+            })
+            .collect();
+
+        // Coverage: every layer in exactly one piece.
+        let mut piece_of = vec![usize::MAX; n];
+        let mut exact = l > 0;
+        let mut covered = 0usize;
+        'cover: for (q, ids) in piece_ids.iter().enumerate() {
+            if ids.is_empty() {
+                exact = false;
+                break;
+            }
+            for &id in ids {
+                if id >= n || piece_of[id] != usize::MAX {
+                    exact = false;
+                    break 'cover;
+                }
+                piece_of[id] = q;
+                covered += 1;
+            }
+        }
+        if covered != n {
+            exact = false;
+        }
+        // Forward invariant: every edge u→c goes forward in layer-id
+        // order (topological ids) and never backward in piece order.
+        // Skip edges (consumer several pieces ahead, as NASNet's
+        // divide-and-conquer chains produce at chunk seams) are fine.
+        if exact {
+            'fwd: for u in 0..n {
+                for &c in g.consumers(u) {
+                    if c <= u || piece_of[c] < piece_of[u] {
+                        exact = false;
+                        break 'fwd;
+                    }
+                }
+            }
+        }
+        // FLOP sums must stay integer-exact in f64 for the suffix tables
+        // to be associativity-free (per-device FLOPs ≤ ideal total).
+        let total = super::flops::total_flops(g);
+        if !(total < 9.0e15) {
+            exact = false;
+        }
+
+        let (sinks_of, cross_pieces) = if exact {
+            // cons_max[u]: the furthest piece any consumer reaches
+            // (usize::MAX when the layer has none — a sink forever).
+            let cons_max: Vec<usize> = (0..n)
+                .map(|u| {
+                    let cons = g.consumers(u);
+                    if cons.is_empty() {
+                        usize::MAX
+                    } else {
+                        cons.iter().map(|&c| piece_of[c]).max().unwrap()
+                    }
+                })
+                .collect();
+            let mut sinks_of: Vec<Vec<LayerId>> = vec![Vec::new(); l];
+            for u in 0..n {
+                let q = piece_of[u];
+                // u is a sink for ends j in [q, cons_max[u] − 1]; when
+                // every consumer sits inside u's own piece (cons_max ==
+                // q) it is never a sink — guard before the −1 so the
+                // q = 0 case cannot saturate into a phantom sink.
+                if cons_max[u] <= q {
+                    continue;
+                }
+                let last = (cons_max[u] - 1).min(l - 1);
+                for slot in sinks_of.iter_mut().take(last + 1).skip(q) {
+                    slot.push(u);
+                }
+            }
+            let mut cross: Vec<Vec<usize>> = vec![Vec::new(); n];
+            for (u, slot) in cross.iter_mut().enumerate() {
+                let a = piece_of[u];
+                let mut ps: Vec<usize> =
+                    g.consumers(u).iter().map(|&c| piece_of[c]).filter(|&b| b > a).collect();
+                ps.sort_unstable();
+                ps.dedup();
+                *slot = ps;
+            }
+            (sinks_of, cross)
+        } else {
+            (vec![Vec::new(); l], vec![Vec::new(); n])
+        };
+
+        // Whole-chain cut volume: source `u` (piece a) with furthest
+        // cross consumer piece m ships its full feature across every
+        // boundary in (a, m] — folded with a difference array.
+        let mut diff = vec![0i64; l + 1];
+        for (u, ps) in cross_pieces.iter().enumerate() {
+            if let Some(&m) = ps.last() {
+                let a = piece_of[u];
+                diff[a + 1] += g.shape(u).bytes() as i64;
+                diff[(m + 1).min(l)] -= g.shape(u).bytes() as i64;
+            }
+        }
+        let mut cut_full_bytes = vec![0usize; l];
+        let mut acc = 0i64;
+        for (i, slot) in cut_full_bytes.iter_mut().enumerate() {
+            acc += diff[i];
+            *slot = acc as usize;
+        }
+
+        let mut prefix_ideal_flops = vec![0.0f64; l + 1];
+        let mut prefix_param_bytes = vec![0usize; l + 1];
+        let mut prefix_feature_bytes = vec![0usize; l + 1];
+        for q in 0..l {
+            let ids = &piece_ids[q];
+            let f: f64 = ids.iter().map(|&id| layer_flops(g, id, g.shape(id).height())).sum();
+            prefix_ideal_flops[q + 1] = prefix_ideal_flops[q] + f;
+            prefix_param_bytes[q + 1] =
+                prefix_param_bytes[q] + ids.iter().map(|&id| layer_param_bytes(g, id)).sum::<usize>();
+            prefix_feature_bytes[q + 1] =
+                prefix_feature_bytes[q] + ids.iter().map(|&id| g.shape(id).bytes()).sum::<usize>();
+        }
+
+        PieceMeta {
+            n_layers: n,
+            piece_ids,
+            piece_of,
+            sinks_of,
+            cross_pieces,
+            cut_full_bytes,
+            prefix_ideal_flops,
+            prefix_param_bytes,
+            prefix_feature_bytes,
+            exact,
+        }
+    }
+
+    /// Whether the O(1) oracle path is admissible for this chain.
+    pub fn exact(&self) -> bool {
+        self.exact
+    }
+
+    /// Number of pieces.
+    pub fn len(&self) -> usize {
+        self.piece_ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.piece_ids.is_empty()
+    }
+
+    /// Sorted layer ids of piece `q` (the hoisted per-piece sort).
+    pub fn piece(&self, q: usize) -> &[LayerId] {
+        &self.piece_ids[q]
+    }
+
+    /// Materialise pieces `i..=j` as one ascending layer segment by
+    /// merging the pre-sorted per-piece lists — no per-query sort.
+    pub fn segment(&self, i: usize, j: usize) -> Vec<LayerId> {
+        merge_sorted(&self.piece_ids[i..=j])
+    }
+
+    /// Ideal (unsplit) FLOPs of pieces `i..=j` — an O(1) prefix query,
+    /// exactly equal to `ideal_segment_flops` over the merged segment.
+    pub fn interval_ideal_flops(&self, i: usize, j: usize) -> f64 {
+        self.prefix_ideal_flops[j + 1] - self.prefix_ideal_flops[i]
+    }
+
+    /// Parameter bytes of pieces `i..=j` (O(1) prefix query).
+    pub fn interval_param_bytes(&self, i: usize, j: usize) -> usize {
+        self.prefix_param_bytes[j + 1] - self.prefix_param_bytes[i]
+    }
+
+    /// Output-feature bytes of pieces `i..=j` (O(1) prefix query).
+    pub fn interval_feature_bytes(&self, i: usize, j: usize) -> usize {
+        self.prefix_feature_bytes[j + 1] - self.prefix_feature_bytes[i]
+    }
+
+    /// Full-feature bytes crossing boundary `i` for whole-chain
+    /// intervals ending at the last piece (0 at the chain head).
+    pub fn cut_bytes(&self, i: usize) -> usize {
+        self.cut_full_bytes[i]
+    }
+}
+
+/// Merge ascending id lists into one ascending segment (k-way heap
+/// merge: O(n log k), no re-sort of the pre-sorted piece lists).
+pub(crate) fn merge_sorted(lists: &[Vec<LayerId>]) -> Vec<LayerId> {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    let total: usize = lists.iter().map(|l| l.len()).sum();
+    let mut out = Vec::with_capacity(total);
+    let mut cursor = vec![0usize; lists.len()];
+    let mut heap: BinaryHeap<Reverse<(LayerId, usize)>> = lists
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| !l.is_empty())
+        .map(|(q, l)| Reverse((l[0], q)))
+        .collect();
+    while let Some(Reverse((id, q))) = heap.pop() {
+        out.push(id);
+        cursor[q] += 1;
+        if let Some(&next) = lists[q].get(cursor[q]) {
+            heap.push(Reverse((next, q)));
+        }
+    }
+    debug_assert_eq!(out.len(), total);
+    out
+}
+
+/// Oracle query counters (surfaced through `DpStats`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OracleStats {
+    /// End-piece tables materialised (the O(n) leaf work).
+    pub table_builds: usize,
+    /// Queries answered from an existing table.
+    pub table_hits: usize,
+}
+
+/// Per-device, per-end-piece suffix tables: everything `Ts(i, j, ·)`
+/// needs for any start `i`, from one backward pass per device.
+struct EndTable {
+    /// Device has a non-empty sink split (mirrors `stage_splits`).
+    active: Vec<bool>,
+    /// `flops_suffix[k·(j+1) + i]`: FLOPs device k spends on pieces
+    /// `i..=j` (exact integer-valued f64).
+    flops_suffix: Vec<f64>,
+    /// `sink_bytes_suffix[k·(j+1) + i]`: output slab bytes device k
+    /// gathers for the interval's sinks in pieces `i..=j` (row k=0
+    /// unused — the leader pays the full-feature cut instead).
+    sink_bytes_suffix: Vec<usize>,
+    /// `feed_bytes[k·(j+1) + i]`: halo/feed slab bytes device k fetches
+    /// across boundary `i` (0 at the chain head; row k=0 unused).
+    feed_bytes: Vec<usize>,
+    /// Full-feature bytes the stage leader receives across boundary `i`
+    /// for intervals ending at this end piece (device independent).
+    cut_bytes: Vec<usize>,
+}
+
+/// The interval cost oracle for one fixed device roster: answers
+/// `stage_cost(segment(i..=j), devices).total` in O(m) after an
+/// amortised O(n) per-end-piece build. Rosters are cheap — the expensive
+/// part ([`PieceMeta`]) is shared via `Arc`.
+pub struct CostOracle<'g> {
+    g: &'g ModelGraph,
+    meta: Arc<PieceMeta>,
+    devices: Vec<Device>,
+    network: Network,
+    weights: Vec<f64>,
+    tables: Vec<Option<EndTable>>,
+    pub stats: OracleStats,
+}
+
+/// Mirror of `cost::feature::clip` (identical semantics including the
+/// non-empty assertion, so panic behaviour matches the reference path).
+fn clip(iv: (isize, isize), h: usize) -> Interval {
+    let s = iv.0.max(0) as usize;
+    let e = (iv.1.min(h as isize)) as usize;
+    assert!(e > s, "interval {iv:?} empty after clipping to height {h}");
+    (s, e)
+}
+
+/// Feature slab bytes for `rows` output rows of layer `id` — the byte
+/// rule `stage_cost` applies to feed and sink tiles.
+fn slab_bytes(g: &ModelGraph, id: LayerId, rows: usize) -> usize {
+    match g.shape(id) {
+        Shape::Chw(c, _, w) => c * rows * w * 4,
+        s => s.bytes(),
+    }
+}
+
+impl<'g> CostOracle<'g> {
+    /// Build an oracle for a fixed device roster. `meta` must be
+    /// [`PieceMeta::exact`] — callers keep the reference path otherwise.
+    pub fn new(
+        g: &'g ModelGraph,
+        meta: Arc<PieceMeta>,
+        devices: Vec<Device>,
+        network: Network,
+    ) -> CostOracle<'g> {
+        assert!(!devices.is_empty(), "oracle needs at least one device");
+        assert!(meta.exact(), "oracle requires validated chain invariants");
+        let weights: Vec<f64> = devices.iter().map(|d| d.flops / d.alpha).collect();
+        let tables = (0..meta.len()).map(|_| None).collect();
+        CostOracle { g, meta, devices, network, weights, tables, stats: OracleStats::default() }
+    }
+
+    pub fn meta(&self) -> &Arc<PieceMeta> {
+        &self.meta
+    }
+
+    /// `Ts(i, j)` for this roster: the Eq. 11 total of one stage
+    /// executing pieces `i..=j` on all roster devices. Bit-identical to
+    /// `stage_cost(&segment, &devices, &network).total`.
+    pub fn interval_cost(&mut self, i: usize, j: usize) -> f64 {
+        debug_assert!(i <= j && j < self.meta.len());
+        if self.tables[j].is_none() {
+            let t = self.build_end_table(j);
+            self.tables[j] = Some(t);
+            self.stats.table_builds += 1;
+        } else {
+            self.stats.table_hits += 1;
+        }
+        let t = self.tables[j].as_ref().unwrap();
+        let n = self.devices.len();
+        let w = j + 1;
+        // T_comp(S) = max_k t_comp (Eq. 8) — fold in device order like
+        // the reference.
+        let mut t_comp_stage = 0.0f64;
+        for k in 0..n {
+            let tc = if t.active[k] {
+                self.devices[k].t_comp(t.flops_suffix[k * w + i])
+            } else {
+                0.0
+            };
+            t_comp_stage = t_comp_stage.max(tc);
+        }
+        // T_comm(S): leader pays the inter-stage full-feature cut, every
+        // other device its sink-gather + boundary-feed slabs (Eq. 9–10).
+        // Summed in device order to mirror `t_comm.iter().sum()`.
+        let mut t_comm_stage = 0.0f64;
+        for k in 0..n {
+            let v = if k == 0 {
+                let fb = t.cut_bytes[i];
+                if fb > 0 {
+                    self.network.t_comm(fb)
+                } else {
+                    0.0
+                }
+            } else if t.active[k] {
+                self.network.t_comm(t.sink_bytes_suffix[k * w + i] + t.feed_bytes[k * w + i])
+            } else {
+                0.0
+            };
+            t_comm_stage += v;
+        }
+        t_comp_stage + t_comm_stage
+    }
+
+    /// One backward Eq. 2–3 propagation per device over pieces `j..=0`,
+    /// producing the suffix-FLOP and boundary-byte tables.
+    fn build_end_table(&self, j: usize) -> EndTable {
+        let g = self.g;
+        let meta = &self.meta;
+        let n = self.devices.len();
+        let w = j + 1;
+        let sinks = &meta.sinks_of[j];
+
+        // Per-sink row splits, computed once and indexed per device —
+        // exactly `stage_splits`: spatial sinks split proportionally
+        // over the first min(n, h) devices, flat sinks pinned to k=0.
+        let splits: Vec<Option<Vec<Interval>>> = sinks
+            .iter()
+            .map(|&s| match g.shape(s) {
+                Shape::Chw(_, h, _) if n > 1 && h >= 2 => {
+                    let m_eff = n.min(h);
+                    Some(proportional_splits(h, &self.weights[..m_eff]))
+                }
+                _ => None,
+            })
+            .collect();
+
+        // Leader cut volume per boundary `i`: every source with its own
+        // piece before `i` and a consumer in pieces `i..=j` ships its
+        // full feature through the stage leader (a difference array
+        // over the spanned boundary range folds all sources at once).
+        let mut diff = vec![0i64; w + 1];
+        for (src, ps) in meta.cross_pieces.iter().enumerate() {
+            // Furthest consumer piece still inside this end: boundaries
+            // (piece(src), m] are crossed.
+            let hi = ps.partition_point(|&b| b <= j);
+            if hi == 0 {
+                continue;
+            }
+            let m = ps[hi - 1];
+            let a = meta.piece_of[src];
+            let bytes = g.shape(src).bytes() as i64;
+            diff[a + 1] += bytes;
+            diff[m + 1] -= bytes;
+        }
+        let mut cut_bytes = vec![0usize; w];
+        let mut acc_cut = 0i64;
+        for (i, slot) in cut_bytes.iter_mut().enumerate() {
+            acc_cut += diff[i];
+            *slot = acc_cut as usize;
+        }
+
+        let mut t = EndTable {
+            active: vec![false; n],
+            flops_suffix: vec![0.0; n * w],
+            sink_bytes_suffix: vec![0usize; n * w],
+            feed_bytes: vec![0usize; n * w],
+            cut_bytes,
+        };
+        let nl = meta.n_layers;
+        // Epoch-stamped scratch shared across devices: required output
+        // interval per layer, plus per-source cross-piece contributions
+        // (consumer piece, requirement) in descending piece order — the
+        // raw material of the interval path's external-feed tiles.
+        let mut need = vec![(0isize, 0isize); nl];
+        let mut need_at = vec![u32::MAX; nl];
+        let mut cross: Vec<Vec<(usize, (isize, isize))>> = vec![Vec::new(); nl];
+        let mut cross_touched: Vec<LayerId> = Vec::new();
+        let mut piece_flops = vec![0.0f64; w];
+        let mut piece_sink_bytes = vec![0usize; w];
+
+        for k in 0..n {
+            let epoch = k as u32;
+            for &src in &cross_touched {
+                cross[src].clear();
+            }
+            cross_touched.clear();
+            let merge = |slot: &mut [(isize, isize)],
+                         at: &mut [u32],
+                         id: usize,
+                         iv: (isize, isize)| {
+                if at[id] == epoch {
+                    slot[id] = (slot[id].0.min(iv.0), slot[id].1.max(iv.1));
+                } else {
+                    at[id] = epoch;
+                    slot[id] = iv;
+                }
+            };
+            // Seed the device's sink output rows.
+            let mut seeded = false;
+            for (si, &s) in sinks.iter().enumerate() {
+                let iv = match &splits[si] {
+                    Some(v) => {
+                        if k < v.len() {
+                            Some(v[k])
+                        } else {
+                            None
+                        }
+                    }
+                    None => {
+                        if k == 0 {
+                            Some((0, g.shape(s).height().max(1)))
+                        } else {
+                            None
+                        }
+                    }
+                };
+                if let Some((a, b)) = iv {
+                    merge(&mut need, &mut need_at, s, (a as isize, b as isize));
+                    seeded = true;
+                }
+            }
+            if !seeded {
+                continue; // device has no work at this end piece
+            }
+            // A single bool is enough even though the reference checks
+            // `sink_out.is_empty()` per *interval*: if the pass below
+            // completes, the device was seeded by a sink in piece j
+            // itself (the highest-id layer of piece j is always a sink,
+            // and its requirement can only come from its own seed), and
+            // a piece-j sink lies inside every interval ending at j —
+            // so activity cannot vary with the start i. If the device
+            // is seeded only by earlier skip-edge sinks, piece j's
+            // layers have no requirement and both this pass and the
+            // reference panic on the (0, j) query the DP always issues
+            // first.
+            t.active[k] = true;
+
+            // Backward pass: pieces j..=0, each piece descending by id.
+            // Consumers always precede producers (edges go forward in
+            // both id and piece order), exactly like the reference's
+            // global descending iteration — the union results match.
+            for q in (0..=j).rev() {
+                let mut pf = 0.0f64;
+                for &id in meta.piece_ids[q].iter().rev() {
+                    let l = g.layer(id);
+                    if need_at[id] != epoch {
+                        // Mirrors the reference's missing-requirement
+                        // panic (a sink pinned away from this device
+                        // with no in-interval consumer).
+                        panic!("layer {} ({}) has no consumer requirement", id, l.name);
+                    }
+                    let h_out = g.shape(id).height();
+                    let out_iv = clip(need[id], h_out);
+                    pf += layer_flops(g, id, out_iv.1 - out_iv.0);
+                    if matches!(l.op, Op::Flatten | Op::Dense) {
+                        // Heads need the full input feature (Eq. 2–3 do
+                        // not apply below a flatten).
+                        for &src in &l.inputs {
+                            let h = g.shape(src).height() as isize;
+                            merge(&mut need, &mut need_at, src, (0, h));
+                            if meta.piece_of[src] < q {
+                                record_cross(&mut cross, &mut cross_touched, src, q, (0, h));
+                            }
+                        }
+                        continue;
+                    }
+                    need[id] = (out_iv.0 as isize, out_iv.1 as isize);
+                    let req = required_rows(g, id, out_iv);
+                    for &src in &l.inputs {
+                        let h_src = g.shape(src).height();
+                        let clipped = clip(req, h_src);
+                        let iv = (clipped.0 as isize, clipped.1 as isize);
+                        merge(&mut need, &mut need_at, src, iv);
+                        if meta.piece_of[src] < q {
+                            record_cross(&mut cross, &mut cross_touched, src, q, iv);
+                        }
+                    }
+                }
+                piece_flops[q] = pf;
+            }
+            // Suffix FLOPs (exact: integer-valued f64 below 2^53).
+            let mut acc = 0.0f64;
+            for i in (0..=j).rev() {
+                acc += piece_flops[i];
+                t.flops_suffix[k * w + i] = acc;
+            }
+            // Byte tables only matter for non-leader devices (the leader
+            // pays the full-feature cut, not slab traffic).
+            if k > 0 {
+                // Sink gather slabs, suffix-summed by sink piece so
+                // intervals starting past a sink exclude it.
+                piece_sink_bytes[..w].fill(0);
+                for &s in sinks {
+                    let out_iv = clip(need[s], g.shape(s).height());
+                    piece_sink_bytes[meta.piece_of[s]] +=
+                        slab_bytes(g, s, out_iv.1 - out_iv.0);
+                }
+                let mut acc = 0usize;
+                for i in (0..=j).rev() {
+                    acc += piece_sink_bytes[i];
+                    t.sink_bytes_suffix[k * w + i] = acc;
+                }
+                // Boundary feed slabs: a source external at boundary i
+                // is fed the union of what its consumers in pieces
+                // i..=j require — a suffix union over the recorded
+                // cross contributions (descending consumer piece).
+                for &src in &cross_touched {
+                    let a = meta.piece_of[src];
+                    let h = g.shape(src).height().max(1);
+                    let list = &cross[src];
+                    let mut u: Option<(isize, isize)> = None;
+                    for (idx, &(b, iv)) in list.iter().enumerate() {
+                        u = Some(match u {
+                            None => iv,
+                            Some(x) => (x.0.min(iv.0), x.1.max(iv.1)),
+                        });
+                        let lo = if idx + 1 < list.len() { list[idx + 1].0 } else { a };
+                        let civ = clip(u.unwrap(), h);
+                        let bytes = slab_bytes(g, src, civ.1 - civ.0);
+                        for i in (lo + 1)..=b {
+                            t.feed_bytes[k * w + i] += bytes;
+                        }
+                    }
+                }
+            }
+        }
+        t
+    }
+}
+
+/// Append a cross-piece requirement for `src` from a consumer in piece
+/// `b`, merging with the previous entry when the piece repeats (the
+/// pass visits consumers in descending piece order).
+fn record_cross(
+    cross: &mut [Vec<(usize, (isize, isize))>],
+    touched: &mut Vec<LayerId>,
+    src: LayerId,
+    b: usize,
+    iv: (isize, isize),
+) {
+    let list = &mut cross[src];
+    if list.is_empty() {
+        touched.push(src);
+    }
+    match list.last_mut() {
+        Some((last_b, u)) if *last_b == b => {
+            u.0 = u.0.min(iv.0);
+            u.1 = u.1.max(iv.1);
+        }
+        _ => list.push((b, iv)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::cost::{ideal_segment_flops, stage_cost};
+    use crate::modelzoo;
+    use crate::partition;
+
+    fn setup(g: &ModelGraph) -> (Vec<Vec<LayerId>>, Arc<PieceMeta>) {
+        let pieces = partition::partition(g, 5, None).unwrap().pieces;
+        let meta = Arc::new(PieceMeta::build(g, &pieces));
+        (pieces, meta)
+    }
+
+    fn reference_segment(pieces: &[Vec<LayerId>], i: usize, j: usize) -> Vec<LayerId> {
+        let mut ids: Vec<LayerId> = pieces[i..=j].iter().flatten().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    #[test]
+    fn meta_validates_zoo_chains() {
+        for name in ["vgg16", "squeezenet", "mobilenetv3"] {
+            let g = modelzoo::by_name(name).unwrap();
+            let (_, meta) = setup(&g);
+            assert!(meta.exact(), "{name}: Algorithm-1 chains must validate");
+        }
+    }
+
+    #[test]
+    fn meta_validates_divide_and_conquer_skip_chains() {
+        // D&C chains carry skip edges crossing several pieces at chunk
+        // seams (NASNet's two-cells-back inputs) — the oracle must
+        // accept them, not fall back.
+        let g = modelzoo::nasnet_slice(1);
+        let pieces =
+            partition::partition_divide_conquer(&g, 5, 6, Some(std::time::Duration::from_secs(300)))
+                .unwrap()
+                .pieces;
+        let meta = PieceMeta::build(&g, &pieces);
+        assert!(meta.exact(), "forward skip chains must validate");
+    }
+
+    #[test]
+    fn meta_rejects_broken_chains() {
+        let g = modelzoo::vgg16();
+        // Overlapping pieces.
+        let bad = vec![vec![0usize, 1], vec![1, 2]];
+        assert!(!PieceMeta::build(&g, &bad).exact());
+        // Incomplete coverage.
+        let n = g.n_layers();
+        let partial = vec![(0..n / 2).collect::<Vec<_>>()];
+        assert!(!PieceMeta::build(&g, &partial).exact());
+        // Backward edge: on a chain 0→1→2→3, interleaved pieces make the
+        // 1→2 edge point from piece 1 back into piece 0.
+        let chain = modelzoo::synthetic_chain(3);
+        let mut tangled = vec![vec![0usize, 2], vec![1, 3]];
+        tangled[0].extend(4..chain.n_layers()); // cover any trailing layers
+        assert!(!PieceMeta::build(&chain, &tangled).exact());
+    }
+
+    #[test]
+    fn segments_match_collect_and_sort() {
+        let g = modelzoo::squeezenet();
+        let (pieces, meta) = setup(&g);
+        let l = pieces.len();
+        for i in 0..l {
+            for j in i..l {
+                assert_eq!(meta.segment(i, j), reference_segment(&pieces, i, j), "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn prefix_aggregates_match_direct_recomputation() {
+        let g = modelzoo::vgg16();
+        let (pieces, meta) = setup(&g);
+        let l = pieces.len();
+        for i in 0..l {
+            for j in i..l {
+                let seg = reference_segment(&pieces, i, j);
+                let direct = ideal_segment_flops(&g, &seg);
+                assert_eq!(
+                    meta.interval_ideal_flops(i, j).to_bits(),
+                    direct.to_bits(),
+                    "flops ({i},{j})"
+                );
+                let feat: usize = seg.iter().map(|&id| g.shape(id).bytes()).sum();
+                assert_eq!(meta.interval_feature_bytes(i, j), feat, "feature bytes ({i},{j})");
+                let par: usize = seg.iter().map(|&id| layer_param_bytes(&g, id)).sum();
+                assert_eq!(meta.interval_param_bytes(i, j), par, "param bytes ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn interval_cost_is_bit_identical_to_stage_cost() {
+        let g = modelzoo::squeezenet();
+        let (pieces, meta) = setup(&g);
+        let l = pieces.len();
+        let cluster = Cluster::homogeneous_rpi(4, 1.0);
+        for m in 1..=4usize {
+            let roster: Vec<Device> = (0..m).map(|_| cluster.devices[0].clone()).collect();
+            let mut oracle = CostOracle::new(&g, meta.clone(), roster.clone(), cluster.network);
+            for i in 0..l {
+                for j in i..l {
+                    let seg = reference_segment(&pieces, i, j);
+                    let devs: Vec<&Device> = roster.iter().collect();
+                    let want = stage_cost(&g, &seg, &devs, &cluster.network).total;
+                    let got = oracle.interval_cost(i, j);
+                    assert_eq!(got.to_bits(), want.to_bits(), "m={m} ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn interval_cost_matches_on_heterogeneous_roster() {
+        // The OFL baseline drives the oracle with the raw heterogeneous
+        // cluster; equality must hold for unequal weights too.
+        let g = modelzoo::vgg16();
+        let (pieces, meta) = setup(&g);
+        let l = pieces.len();
+        let cluster = Cluster::paper_heterogeneous();
+        let mut oracle =
+            CostOracle::new(&g, meta, cluster.devices.clone(), cluster.network);
+        let devs: Vec<&Device> = cluster.devices.iter().collect();
+        for i in 0..l {
+            for j in i..l {
+                let seg = reference_segment(&pieces, i, j);
+                let want = stage_cost(&g, &seg, &devs, &cluster.network).total;
+                assert_eq!(oracle.interval_cost(i, j).to_bits(), want.to_bits(), "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn interval_cost_matches_on_branchy_dag() {
+        // A branchy synthetic DAG exercises multi-input unions and
+        // concat sinks; the oracle must agree with the walk on every
+        // interval.
+        let g = modelzoo::synthetic_graph(3, 14);
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        let meta = Arc::new(PieceMeta::build(&g, &pieces));
+        assert!(meta.exact());
+        let c = Cluster::homogeneous_rpi(3, 1.0);
+        let mut oracle = CostOracle::new(&g, meta, c.devices.clone(), c.network);
+        let devs: Vec<&Device> = c.devices.iter().collect();
+        for i in 0..pieces.len() {
+            for j in i..pieces.len() {
+                let seg = reference_segment(&pieces, i, j);
+                let want = stage_cost(&g, &seg, &devs, &c.network).total;
+                assert_eq!(oracle.interval_cost(i, j).to_bits(), want.to_bits(), "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn tables_build_once_per_end_piece() {
+        let g = modelzoo::vgg16();
+        let (pieces, meta) = setup(&g);
+        let l = pieces.len();
+        let c = Cluster::homogeneous_rpi(2, 1.0);
+        let mut oracle = CostOracle::new(&g, meta, c.devices.clone(), c.network);
+        for j in 0..l {
+            for i in 0..=j {
+                oracle.interval_cost(i, j);
+            }
+        }
+        assert_eq!(oracle.stats.table_builds, l, "one build per end piece");
+        assert_eq!(oracle.stats.table_hits, l * (l + 1) / 2 - l);
+    }
+}

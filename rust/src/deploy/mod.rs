@@ -73,7 +73,7 @@ use crate::error::PicoError;
 use crate::graph::ModelGraph;
 use crate::json::{obj, Value};
 use crate::modelzoo;
-use crate::pipeline::{ExecutionMode, PipelinePlan};
+use crate::pipeline::{ExecutionMode, PipelinePlan, PlanContext, PlannerStats};
 use crate::runtime::{Engine, PipelineArtifacts, Tensor};
 use crate::sim::{self, SimReport};
 use crate::util::{fmt_secs, Rng, Table};
@@ -226,9 +226,13 @@ impl DeploymentBuilder {
         let scheme = scheme_by_name(&scheme_name, &self.scheme_cfg)?;
         let t_lim = self.t_lim.unwrap_or(f64::INFINITY);
 
+        // One shared planning context for the whole build: the piece
+        // chain and the oracle aggregates are computed once, however
+        // many replica probes or groups the policy below plans.
+        let ctx = PlanContext::new(&graph);
         let replicas = match (self.replicas.unwrap_or(Replicas::Fixed(1)), scheme.execution()) {
             (Replicas::Fixed(1) | Replicas::Auto, ExecutionMode::Synchronous) => {
-                vec![scheme.plan(&graph, &cluster, t_lim)?]
+                vec![scheme.plan_ctx(&ctx, &cluster, t_lim)?]
             }
             (Replicas::Fixed(r), ExecutionMode::Synchronous) => {
                 return Err(PicoError::Unsupported(format!(
@@ -236,12 +240,14 @@ impl DeploymentBuilder {
                 )))
             }
             (Replicas::Fixed(r), ExecutionMode::Pipelined) => {
-                replicate(scheme.as_ref(), &graph, &cluster, t_lim, r)?
+                replicate(scheme.as_ref(), &ctx, &cluster, t_lim, r)?
             }
             (Replicas::Auto, ExecutionMode::Pipelined) => {
-                auto_replicas(scheme.as_ref(), &graph, &cluster, t_lim)?
+                auto_replicas(scheme.as_ref(), &ctx, &cluster, t_lim)?
             }
         };
+        let planner_stats = Some(ctx.stats());
+        drop(ctx);
 
         Ok(DeploymentPlan {
             version: PLAN_VERSION,
@@ -252,6 +258,7 @@ impl DeploymentBuilder {
             graph,
             cluster,
             replicas,
+            planner_stats,
         })
     }
 }
@@ -275,9 +282,10 @@ pub fn resolve_model(name: &str, artifacts_dir: &Path) -> Result<ModelGraph, Pic
 /// Plan `r` independent replicas over a capacity-balanced partition of
 /// `cluster` ([`Cluster::partition_capacity`]), each via `scheme` on its
 /// own device group, with device indices remapped onto the full cluster.
+/// Every group's planning shares `ctx` (one partition, one oracle).
 fn replicate(
     scheme: &dyn Scheme,
-    g: &ModelGraph,
+    ctx: &PlanContext,
     cluster: &Cluster,
     t_lim: f64,
     r: usize,
@@ -288,30 +296,53 @@ fn replicate(
             cluster.len()
         )));
     }
-    crate::pipeline::replicate_with(g, cluster, r, |g, sub| scheme.plan(g, sub, t_lim))
+    crate::pipeline::replicate_with(ctx.graph(), cluster, r, |_g, sub| {
+        scheme.plan_ctx(ctx, sub, t_lim)
+    })
 }
 
+/// One Auto probe's outcome: backlogged throughput + the replica plans.
+type ProbeResult = Result<(f64, Vec<PipelinePlan>), PicoError>;
+
 /// [`Replicas::Auto`]: plan every feasible replica count, push a
-/// backlogged probe stream through the engine, keep the best rate.
+/// backlogged probe stream through the engine, keep the best rate. The
+/// probes are independent, so they run on `std::thread::scope` workers
+/// sharing one [`PlanContext`] — the first probe fills the piece-chain
+/// and oracle caches (behind the context's lock), the rest reuse them.
+/// Probe results are folded in ascending replica order, so the winner
+/// is identical to the sequential search.
 fn auto_replicas(
     scheme: &dyn Scheme,
-    g: &ModelGraph,
+    ctx: &PlanContext,
     cluster: &Cluster,
     t_lim: f64,
 ) -> Result<Vec<PipelinePlan>, PicoError> {
+    let n = cluster.len();
+    let probes: Vec<ProbeResult> = std::thread::scope(|s| {
+        let handles: Vec<_> = (1..=n)
+            .map(|r| {
+                s.spawn(move || -> ProbeResult {
+                    let plans = replicate(scheme, ctx, cluster, t_lim, r)?;
+                    let probe = (4 * r).max(16);
+                    let report = sim::simulate_replicated(ctx.graph(), cluster, &plans, probe);
+                    let rate =
+                        if report.makespan > 0.0 { probe as f64 / report.makespan } else { 0.0 };
+                    Ok((rate, plans))
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("replica probe panicked")).collect()
+    });
     let mut best: Option<(f64, Vec<PipelinePlan>)> = None;
     let mut last_err = None;
-    for r in 1..=cluster.len() {
-        let plans = match replicate(scheme, g, cluster, t_lim, r) {
+    for res in probes {
+        let (rate, plans) = match res {
             Ok(p) => p,
             Err(e) => {
                 last_err = Some(e);
                 continue; // e.g. t_lim infeasible on a 1/r-capacity group
             }
         };
-        let probe = (4 * r).max(16);
-        let report = sim::simulate_replicated(g, cluster, &plans, probe);
-        let rate = if report.makespan > 0.0 { probe as f64 / report.makespan } else { 0.0 };
         let improves = match &best {
             None => true,
             Some((b, _)) => rate > *b * 1.0001,
@@ -341,6 +372,10 @@ pub struct DeploymentPlan {
     pub cluster: Cluster,
     /// One pipeline per replica; exactly one for synchronous schemes.
     pub replicas: Vec<PipelinePlan>,
+    /// Planner-efficiency counters from the build that produced this
+    /// plan (partition runs, oracle builds, DP stats). Transient: not
+    /// serialized, `None` on loaded/AOT plans.
+    pub planner_stats: Option<PlannerStats>,
 }
 
 impl DeploymentPlan {
@@ -367,6 +402,7 @@ impl DeploymentPlan {
             graph,
             cluster: Cluster::homogeneous_rpi(n_dev, 1.0),
             replicas: vec![plan],
+            planner_stats: None,
         })
     }
 
@@ -516,6 +552,18 @@ impl DeploymentPlan {
                 r.throughput
             ));
         }
+        if let Some(st) = &self.planner_stats {
+            out.push_str(&format!(
+                "planner: {} partition run(s), {} oracle build(s), {} DP subproblems, \
+                 {} stage evals, {} ts cache hits, {} pruned branches\n",
+                st.partition_runs,
+                st.oracle_builds,
+                st.dp.subproblems,
+                st.dp.stage_evals,
+                st.dp.ts_cache_hits,
+                st.dp.pruned_branches,
+            ));
+        }
         for (ri, plan) in self.replicas.iter().enumerate() {
             if self.replicas.len() > 1 {
                 out.push_str(&format!("replica {ri}:\n"));
@@ -608,6 +656,7 @@ impl DeploymentPlan {
             graph,
             cluster,
             replicas,
+            planner_stats: None,
         })
     }
 
@@ -763,6 +812,38 @@ mod tests {
         assert!(text.contains("pico"), "{text}");
         assert!(text.contains("Rpi@1.0"), "{text}");
         assert!(text.contains("period"), "{text}");
+        // Planner efficiency counters are surfaced (satellite: DpStats
+        // observability).
+        assert!(text.contains("planner:"), "{text}");
+        assert!(text.contains("oracle build"), "{text}");
+    }
+
+    #[test]
+    fn auto_replicas_shares_one_oracle_build() {
+        // Replicas::Auto on N devices probes N replica counts and plans
+        // N(N+1)/2 device groups — but partitions the graph and builds
+        // the oracle aggregates exactly once through the shared
+        // PlanContext.
+        let d = DeploymentPlan::builder()
+            .model("squeezenet")
+            .cluster(Cluster::homogeneous_rpi(4, 1.0))
+            .replicas(Replicas::Auto)
+            .build()
+            .unwrap();
+        let st = d.planner_stats.as_ref().expect("builder records planner stats");
+        assert_eq!(st.oracle_builds, 1, "{st:?}");
+        assert_eq!(st.partition_runs, 1, "{st:?}");
+        // 1..=4 replica counts → 10 groups → 10 DP invocations at least.
+        assert!(st.dp.subproblems > 0, "{st:?}");
+        assert!(st.dp.stage_evals > 0, "{st:?}");
+    }
+
+    #[test]
+    fn loaded_plans_have_no_planner_stats() {
+        let d = vgg_deployment();
+        assert!(d.planner_stats.is_some());
+        let back = DeploymentPlan::from_json(&d.to_json()).unwrap();
+        assert!(back.planner_stats.is_none(), "stats are transient, not serialized");
     }
 
     #[test]

@@ -5,6 +5,14 @@
 //! [`PipelinePlan`], with [`ExecutionMode::Synchronous`] marking the
 //! non-pipelined baselines. The [`crate::deploy::DeploymentBuilder`]
 //! resolves schemes by the names in [`scheme_names`].
+//!
+//! Planning flows through [`Scheme::plan_ctx`] with a shared
+//! [`PlanContext`]: the Algorithm-1 piece chain and the interval cost
+//! oracle's aggregates are computed once per context, so `Replicas::Auto`
+//! probes (which plan every device group of every replica count) and
+//! side-by-side scheme comparisons stop re-partitioning the same graph.
+//! Schemes are `Send + Sync`, letting the facade run independent probes
+//! on scoped threads.
 
 use std::time::Duration;
 
@@ -12,38 +20,32 @@ use crate::baselines;
 use crate::cluster::Cluster;
 use crate::error::PicoError;
 use crate::graph::ModelGraph;
-use crate::partition::{self, PieceChain};
-use crate::pipeline::{self, ExecutionMode, PipelinePlan};
+use crate::pipeline::{self, ExecutionMode, PipelinePlan, PlanContext};
 
 /// A pipeline planner: model + cluster + latency cap in, plan out.
-pub trait Scheme {
+pub trait Scheme: Send + Sync {
     /// Registry key (also the plan artifact's `scheme` field).
     fn name(&self) -> &'static str;
     /// How plans from this scheme are executed.
     fn execution(&self) -> ExecutionMode;
-    /// Compute the deployment plan. `t_lim` is the Eq. (1) latency cap
-    /// (`f64::INFINITY` = unconstrained).
+    /// Compute the deployment plan against a shared [`PlanContext`]
+    /// (piece chain + oracle aggregates reused across calls). `t_lim`
+    /// is the Eq. (1) latency cap (`f64::INFINITY` = unconstrained).
+    fn plan_ctx(
+        &self,
+        ctx: &PlanContext,
+        cluster: &Cluster,
+        t_lim: f64,
+    ) -> Result<PipelinePlan, PicoError>;
+    /// One-shot planning without an external context.
     fn plan(
         &self,
         g: &ModelGraph,
         cluster: &Cluster,
         t_lim: f64,
-    ) -> Result<PipelinePlan, PicoError>;
-}
-
-/// Shared Algorithm-1 run (PICO / OFL / BFS all consume the piece chain).
-fn pieces_for(
-    g: &ModelGraph,
-    diameter: usize,
-    dc_parts: usize,
-    budget: Option<Duration>,
-) -> Result<PieceChain, PicoError> {
-    let r = if dc_parts > 1 {
-        partition::partition_divide_conquer(g, diameter, dc_parts, budget)
-    } else {
-        partition::partition(g, diameter, budget)
-    };
-    Ok(r.map_err(|e| PicoError::Internal(format!("partition failed: {e}")))?.pieces)
+    ) -> Result<PipelinePlan, PicoError> {
+        self.plan_ctx(&PlanContext::new(g), cluster, t_lim)
+    }
 }
 
 /// Map a planner failure: under a finite cap the only planner-level
@@ -57,7 +59,7 @@ fn plan_err(t_lim: f64, e: anyhow::Error) -> PicoError {
 }
 
 /// PICO (paper §4–5): Algorithm 1 piece chain, Algorithm 2 homogeneous
-/// DP, Algorithm 3 heterogeneous adaptation.
+/// DP (oracle-backed), Algorithm 3 heterogeneous adaptation.
 pub struct PicoScheme {
     pub diameter: usize,
     pub dc_parts: usize,
@@ -71,9 +73,14 @@ impl Scheme for PicoScheme {
     fn execution(&self) -> ExecutionMode {
         ExecutionMode::Pipelined
     }
-    fn plan(&self, g: &ModelGraph, cluster: &Cluster, t_lim: f64) -> Result<PipelinePlan, PicoError> {
-        let pieces = pieces_for(g, self.diameter, self.dc_parts, self.partition_budget)?;
-        pipeline::plan(g, &pieces, cluster, t_lim).map_err(|e| plan_err(t_lim, e))
+    fn plan_ctx(&self, ctx: &PlanContext, cluster: &Cluster, t_lim: f64) -> Result<PipelinePlan, PicoError> {
+        let pieces = ctx.pieces(self.diameter, self.dc_parts, self.partition_budget)?;
+        let meta = ctx.meta(self.diameter, self.dc_parts, &pieces);
+        let (plan, stats) =
+            pipeline::plan_with_meta(ctx.graph(), &pieces, &meta, cluster, t_lim)
+                .map_err(|e| plan_err(t_lim, e))?;
+        ctx.note_dp(&stats);
+        Ok(plan)
     }
 }
 
@@ -87,8 +94,8 @@ impl Scheme for LayerWiseScheme {
     fn execution(&self) -> ExecutionMode {
         ExecutionMode::Synchronous
     }
-    fn plan(&self, g: &ModelGraph, cluster: &Cluster, _t_lim: f64) -> Result<PipelinePlan, PicoError> {
-        Ok(baselines::layer_wise(g, cluster).to_plan())
+    fn plan_ctx(&self, ctx: &PlanContext, cluster: &Cluster, _t_lim: f64) -> Result<PipelinePlan, PicoError> {
+        Ok(baselines::layer_wise(ctx.graph(), cluster).to_plan())
     }
 }
 
@@ -105,8 +112,8 @@ impl Scheme for EarlyFusedScheme {
     fn execution(&self) -> ExecutionMode {
         ExecutionMode::Synchronous
     }
-    fn plan(&self, g: &ModelGraph, cluster: &Cluster, _t_lim: f64) -> Result<PipelinePlan, PicoError> {
-        Ok(baselines::early_fused(g, cluster, self.fuse_pools).to_plan())
+    fn plan_ctx(&self, ctx: &PlanContext, cluster: &Cluster, _t_lim: f64) -> Result<PipelinePlan, PicoError> {
+        Ok(baselines::early_fused(ctx.graph(), cluster, self.fuse_pools).to_plan())
     }
 }
 
@@ -124,9 +131,10 @@ impl Scheme for OptimalFusedScheme {
     fn execution(&self) -> ExecutionMode {
         ExecutionMode::Synchronous
     }
-    fn plan(&self, g: &ModelGraph, cluster: &Cluster, _t_lim: f64) -> Result<PipelinePlan, PicoError> {
-        let pieces = pieces_for(g, self.diameter, self.dc_parts, self.partition_budget)?;
-        Ok(baselines::optimal_fused(g, &pieces, cluster).to_plan())
+    fn plan_ctx(&self, ctx: &PlanContext, cluster: &Cluster, _t_lim: f64) -> Result<PipelinePlan, PicoError> {
+        let pieces = ctx.pieces(self.diameter, self.dc_parts, self.partition_budget)?;
+        let meta = ctx.meta(self.diameter, self.dc_parts, &pieces);
+        Ok(baselines::optimal_fused_with_meta(ctx.graph(), &pieces, &meta, cluster).to_plan())
     }
 }
 
@@ -140,8 +148,8 @@ impl Scheme for CoEdgeScheme {
     fn execution(&self) -> ExecutionMode {
         ExecutionMode::Synchronous
     }
-    fn plan(&self, g: &ModelGraph, cluster: &Cluster, _t_lim: f64) -> Result<PipelinePlan, PicoError> {
-        Ok(baselines::coedge(g, cluster).to_plan())
+    fn plan_ctx(&self, ctx: &PlanContext, cluster: &Cluster, _t_lim: f64) -> Result<PipelinePlan, PicoError> {
+        Ok(baselines::coedge(ctx.graph(), cluster).to_plan())
     }
 }
 
@@ -161,9 +169,9 @@ impl Scheme for BfsScheme {
     fn execution(&self) -> ExecutionMode {
         ExecutionMode::Pipelined
     }
-    fn plan(&self, g: &ModelGraph, cluster: &Cluster, t_lim: f64) -> Result<PipelinePlan, PicoError> {
-        let pieces = pieces_for(g, self.diameter, self.dc_parts, self.partition_budget)?;
-        let r = baselines::bfs_optimal(g, &pieces, cluster, t_lim, Some(self.search_budget));
+    fn plan_ctx(&self, ctx: &PlanContext, cluster: &Cluster, t_lim: f64) -> Result<PipelinePlan, PicoError> {
+        let pieces = ctx.pieces(self.diameter, self.dc_parts, self.partition_budget)?;
+        let r = baselines::bfs_optimal(ctx.graph(), &pieces, cluster, t_lim, Some(self.search_budget));
         r.plan.ok_or_else(|| {
             if t_lim.is_finite() {
                 PicoError::Infeasible { t_lim }

@@ -40,6 +40,21 @@
 //! * **L1 (python/compile/kernels)** — Pallas conv/pool/dense kernels
 //!   (interpret mode), validated against pure-jnp oracles.
 //!
+//! ## The planner hot path: oracle + shared context
+//!
+//! [`cost::oracle`] owns the planner's interval cost queries:
+//! [`cost::PieceMeta`] precomputes per-piece prefix aggregates
+//! (sorted layer ids, cumulative FLOPs / parameter / feature bytes,
+//! boundary-cut communication volume) once per piece chain, and
+//! [`cost::CostOracle`] answers `Ts(i, j, m)` in O(m) from lazy
+//! per-end-piece suffix tables — bit-identical to a full
+//! [`cost::stage_cost`] walk (pinned by `tests/planner_equivalence.rs`
+//! against the preserved reference DP). One
+//! [`pipeline::PlanContext`] per deployment build owns the Algorithm-1
+//! chain and the oracle aggregates; [`deploy`] threads it through every
+//! [`deploy::Scheme`] call so `Replicas::Auto` probes — run on scoped
+//! worker threads — and scheme comparisons share a single build.
+//!
 //! ## The engine: one timing core, two drivers
 //!
 //! [`engine`] owns the pipeline completion recurrence

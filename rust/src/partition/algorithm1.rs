@@ -20,6 +20,49 @@ pub struct PartitionResult {
     pub elapsed: Duration,
 }
 
+/// Memo of C(M) per candidate piece. Redundancy depends only on
+/// `(graph, piece)` — not on the diameter bound or the sub-universe —
+/// so one cache is safely shared across every `partition_universe` call
+/// of a run: the divide-and-conquer chunks *and* its d-relaxation
+/// retries previously re-evaluated identical candidate pieces from
+/// scratch on every attempt.
+#[derive(Default)]
+pub struct RedundancyCache {
+    map: HashMap<BitSet, f64>,
+    /// Lookups answered from the cache.
+    pub hits: usize,
+    /// Fresh `piece_redundancy` evaluations.
+    pub misses: usize,
+}
+
+impl RedundancyCache {
+    pub fn new() -> RedundancyCache {
+        RedundancyCache::default()
+    }
+
+    /// C(M) for `piece`, computed at most once per cache lifetime.
+    fn redundancy(&mut self, g: &ModelGraph, piece: &BitSet) -> f64 {
+        if let Some(&v) = self.map.get(piece) {
+            self.hits += 1;
+            return v;
+        }
+        self.misses += 1;
+        let ids: Vec<usize> = piece.iter().collect();
+        let v = piece_redundancy(g, &ids, 2);
+        self.map.insert(piece.clone(), v);
+        v
+    }
+
+    /// Distinct pieces evaluated so far.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
 struct Dp<'a> {
     g: &'a ModelGraph,
     d: usize,
@@ -27,8 +70,9 @@ struct Dp<'a> {
     f: HashMap<BitSet, f64>,
     /// R memo: remaining-set → chosen ending piece.
     r: HashMap<BitSet, BitSet>,
-    /// Per-piece redundancy cache (pieces recur across states).
-    c: HashMap<BitSet, f64>,
+    /// Per-piece redundancy cache (pieces recur across states, chunks
+    /// and d-retries; shared by the caller).
+    c: &'a mut RedundancyCache,
     /// Budget guard: abort enumeration explosions (returns Err upstream).
     deadline: Option<Instant>,
     budget_hit: bool,
@@ -128,13 +172,7 @@ impl<'a> Dp<'a> {
     }
 
     fn redundancy(&mut self, piece: &BitSet) -> f64 {
-        if let Some(&v) = self.c.get(piece) {
-            return v;
-        }
-        let ids: Vec<usize> = piece.iter().collect();
-        let v = piece_redundancy(self.g, &ids, 2);
-        self.c.insert(piece.clone(), v);
-        v
+        self.c.redundancy(self.g, piece)
     }
 
     /// The Eq. (13) recursion. `universe` is the full set being
@@ -192,13 +230,26 @@ pub fn partition_universe(
     d: usize,
     budget: Option<Duration>,
 ) -> anyhow::Result<PartitionResult> {
+    partition_universe_cached(g, universe, d, budget, &mut RedundancyCache::new())
+}
+
+/// [`partition_universe`] with a caller-owned [`RedundancyCache`], so
+/// repeated runs over overlapping candidate sets (divide-and-conquer
+/// chunks, d-relaxation retries) pay for each piece's C(M) once.
+pub fn partition_universe_cached(
+    g: &ModelGraph,
+    universe: &BitSet,
+    d: usize,
+    budget: Option<Duration>,
+    cache: &mut RedundancyCache,
+) -> anyhow::Result<PartitionResult> {
     let start = Instant::now();
     let mut dp = Dp {
         g,
         d,
         f: HashMap::new(),
         r: HashMap::new(),
-        c: HashMap::new(),
+        c: cache,
         deadline: budget.map(|b| start + b),
         budget_hit: false,
     };
@@ -269,6 +320,9 @@ pub fn partition_divide_conquer(
     let mut pieces = Vec::new();
     let mut max_red: f64 = 0.0;
     let mut states = 0;
+    // One redundancy cache across every chunk and d-retry: C(M) depends
+    // only on the piece, so retries stop re-pricing identical candidates.
+    let mut cache = RedundancyCache::new();
     for k in 0..parts {
         let chunk: BitSet = (bounds[k]..bounds[k + 1]).collect();
         if chunk.is_empty() {
@@ -279,7 +333,7 @@ pub fn partition_divide_conquer(
         let mut result = None;
         let mut last_err = None;
         for dd in d..=d + 4 {
-            match partition_universe(g, &chunk, dd, budget_per_part) {
+            match partition_universe_cached(g, &chunk, dd, budget_per_part, &mut cache) {
                 Ok(r) => {
                     result = Some(r);
                     break;
@@ -414,6 +468,21 @@ mod tests {
         // The forced cut can only cost redundancy at the boundary; on a
         // uniform chain both achieve the same piece-level F.
         assert!((dc.max_redundancy - direct.max_redundancy).abs() < 1e-6);
+    }
+
+    #[test]
+    fn redundancy_cache_shared_across_runs() {
+        let g = modelzoo::synthetic_chain(10);
+        let u = crate::util::BitSet::full(g.n_layers());
+        let mut cache = RedundancyCache::new();
+        let a = partition_universe_cached(&g, &u, 5, None, &mut cache).unwrap();
+        let first_misses = cache.misses;
+        assert!(first_misses > 0);
+        // A second identical run re-prices nothing.
+        let b = partition_universe_cached(&g, &u, 5, None, &mut cache).unwrap();
+        assert_eq!(cache.misses, first_misses, "second run must be all hits");
+        assert!(cache.hits >= first_misses);
+        assert_eq!(a.pieces, b.pieces);
     }
 
     #[test]

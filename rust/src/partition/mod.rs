@@ -24,7 +24,10 @@
 
 mod algorithm1;
 
-pub use algorithm1::{partition, partition_divide_conquer, partition_universe, PartitionResult};
+pub use algorithm1::{
+    partition, partition_divide_conquer, partition_universe, partition_universe_cached,
+    PartitionResult, RedundancyCache,
+};
 
 use crate::graph::{LayerId, ModelGraph};
 

@@ -12,25 +12,51 @@
 //!
 //! Solutions whose accumulated latency exceeds T_lim are pruned (the
 //! paper's Eq. 1 constraint); among equal periods the lower-latency
-//! configuration wins. Memoisation follows the paper's P/L/S/R arrays.
+//! configuration wins.
+//!
+//! ## Hot-path implementation
+//!
+//! The recurrence only ever extends *prefixes* (`i` is pinned to 0), so
+//! the memo is a dense flat `Vec` indexed by `(j, p)` — no hashing. Ts
+//! queries go through the [`crate::cost::oracle`] subsystem: a one-off
+//! [`PieceMeta`] build plus lazy per-end-piece suffix tables make each
+//! `Ts(i, j, m)` an O(m) arithmetic lookup instead of a segment rebuild
+//! + sort + full `stage_cost` graph walk. Chains that fail the oracle's
+//! structural validation fall back to the reference `stage_cost` path
+//! behind a dense cache (identical results, still no hashing).
+//!
+//! The `s, m` inner loops are pruned with an *exact-safe* bound: a
+//! candidate's period is at least its tail stage cost, so when
+//! `Ts(s+1, j, m) > best.period + ε` the candidate can never win under
+//! the tie-breaking predicate and its head sub-problem is never
+//! expanded. (Empirically `Ts` also shrinks as m grows and `P` as p
+//! grows, but neither is a theorem of this cost model — comm overhead
+//! can grow with the device count — so only the provable bound is used:
+//! the ε-banded tie-breaking means an unsound prune would not just slow
+//! results, it would *change* them.)
+//!
+//! The exact pre-overhaul implementation is preserved in
+//! [`super::algorithm2_reference`]; `rust/tests/planner_equivalence.rs`
+//! proves the two bit-identical across the model zoo.
 
-use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::cluster::{Cluster, Device};
+use crate::cost::oracle::{CostOracle, PieceMeta};
 use crate::cost::stage_cost;
 use crate::graph::{LayerId, ModelGraph};
 use crate::partition::PieceChain;
 
-/// Per-(i,j,p) DP entry.
+/// Per-(i,j,p) DP entry (shared with the reference implementation).
 #[derive(Debug, Clone, Copy)]
-struct Entry {
-    period: f64,
-    latency: f64,
+pub(crate) struct Entry {
+    pub(crate) period: f64,
+    pub(crate) latency: f64,
     /// Last stage: (first piece, device count); the prefix is in
     /// `prev`: Some((i, s, p−m)) or None when this entry is one stage.
-    last_m: usize,
-    last_s: usize, // last stage covers pieces last_s..=j
-    prev: bool,
+    pub(crate) last_m: usize,
+    pub(crate) last_s: usize, // last stage covers pieces last_s..=j
+    pub(crate) prev: bool,
 }
 
 /// Result of Algorithm 2.
@@ -44,67 +70,118 @@ pub struct DpResult {
     pub stats: DpStats,
 }
 
-#[derive(Debug, Clone, Default)]
+/// Planner efficiency counters, surfaced through
+/// `DeploymentPlan::explain()`.
+#[derive(Debug, Clone, Copy, Default)]
 pub struct DpStats {
     /// Distinct (i,j,p) sub-problems solved.
     pub subproblems: usize,
-    /// Stage-cost evaluations (the O(nD) leaf work).
+    /// O(n) leaf evaluations: oracle end-piece table builds on the fast
+    /// path, full `stage_cost` walks on the reference/fallback path.
     pub stage_evals: usize,
+    /// Total Ts lookups issued by the DP.
+    pub ts_queries: usize,
+    /// Ts lookups answered from an existing table / cache entry.
+    pub ts_cache_hits: usize,
+    /// `s,m` candidates discarded by the exact-safe tail bound before
+    /// their head sub-problem was expanded.
+    pub pruned_branches: usize,
+}
+
+impl DpStats {
+    /// Accumulate another run's counters (used by the shared
+    /// `PlanContext` to aggregate across replica probes).
+    pub fn absorb(&mut self, other: &DpStats) {
+        self.subproblems += other.subproblems;
+        self.stage_evals += other.stage_evals;
+        self.ts_queries += other.ts_queries;
+        self.ts_cache_hits += other.ts_cache_hits;
+        self.pruned_branches += other.pruned_branches;
+    }
+}
+
+/// Ts provider: the O(1) oracle when the chain validates, otherwise the
+/// reference `stage_cost` walk behind a dense (i,j,m) cache.
+enum TsBackend<'a> {
+    Oracle {
+        /// `per_m[m-1]`: oracle for a roster of m homogenised devices.
+        per_m: Vec<CostOracle<'a>>,
+    },
+    Reference {
+        g: &'a ModelGraph,
+        meta: Arc<PieceMeta>,
+        device: Device,
+        cluster: &'a Cluster,
+        /// NaN = unset; Ts totals are never NaN.
+        cache: Vec<f64>,
+    },
 }
 
 struct Dp<'a> {
-    g: &'a ModelGraph,
-    pieces: &'a PieceChain,
-    device: Device,
-    cluster: &'a Cluster,
     t_lim: f64,
-    memo: HashMap<(usize, usize, usize), Option<Entry>>,
-    ts_cache: HashMap<(usize, usize, usize), f64>,
+    l: usize,
+    d: usize,
+    /// Dense (j,p) memo (the DP only extends prefixes, so i ≡ 0):
+    /// outer None = unsolved, inner None = infeasible under T_lim.
+    memo: Vec<Option<Option<Entry>>>,
+    backend: TsBackend<'a>,
     stats: DpStats,
 }
 
 impl<'a> Dp<'a> {
-    fn segment(&self, i: usize, j: usize) -> Vec<LayerId> {
-        let mut ids: Vec<LayerId> = self.pieces[i..=j].iter().flatten().copied().collect();
-        ids.sort_unstable();
-        ids
-    }
-
     /// Ts[i][j][m]: single-stage cost of pieces i..=j on m devices.
     fn ts(&mut self, i: usize, j: usize, m: usize) -> f64 {
-        if let Some(&v) = self.ts_cache.get(&(i, j, m)) {
-            return v;
+        self.stats.ts_queries += 1;
+        match &mut self.backend {
+            TsBackend::Oracle { per_m } => per_m[m - 1].interval_cost(i, j),
+            TsBackend::Reference { g, meta, device, cluster, cache } => {
+                let idx = (i * self.l + j) * self.d + (m - 1);
+                if cache[idx].is_nan() {
+                    self.stats.stage_evals += 1;
+                    let seg = meta.segment(i, j);
+                    let dev: &Device = device;
+                    let devs: Vec<&Device> = vec![dev; m];
+                    cache[idx] = stage_cost(*g, &seg, &devs, &cluster.network).total;
+                } else {
+                    self.stats.ts_cache_hits += 1;
+                }
+                cache[idx]
+            }
         }
-        self.stats.stage_evals += 1;
-        let seg = self.segment(i, j);
-        let devs: Vec<&Device> = (0..m).map(|_| &self.device).collect();
-        let v = stage_cost(self.g, &seg, &devs, &self.cluster.network).total;
-        self.ts_cache.insert((i, j, m), v);
-        v
     }
 
-    /// Solve P[i][j][p]; None = infeasible under T_lim.
-    fn solve(&mut self, i: usize, j: usize, p: usize) -> Option<Entry> {
-        if let Some(e) = self.memo.get(&(i, j, p)) {
-            return *e;
+    /// Solve P[0][j][p]; None = infeasible under T_lim.
+    fn solve(&mut self, j: usize, p: usize) -> Option<Entry> {
+        let idx = j * (self.d + 1) + p;
+        if let Some(e) = self.memo[idx] {
+            return e;
         }
         self.stats.subproblems += 1;
         // Option A: single stage with all p devices.
-        let single = self.ts(i, j, p);
+        let single = self.ts(0, j, p);
         let mut best = if single <= self.t_lim {
-            Some(Entry { period: single, latency: single, last_m: p, last_s: i, prev: false })
+            Some(Entry { period: single, latency: single, last_m: p, last_s: 0, prev: false })
         } else {
             None
         };
         // Option B: split at s, m devices on the tail stage.
-        if j > i && p > 1 {
-            for s in i..j {
+        if j > 0 && p > 1 {
+            for s in 0..j {
                 for m in 1..p {
                     let tail = self.ts(s + 1, j, m);
                     if tail > self.t_lim {
                         continue;
                     }
-                    let Some(head) = self.solve(i, s, p - m) else { continue };
+                    // Exact-safe prune: period >= tail, and a period
+                    // beyond best + ε can never satisfy the tie-break
+                    // predicate — skip without expanding the head.
+                    if let Some(b) = &best {
+                        if tail > b.period + 1e-15 {
+                            self.stats.pruned_branches += 1;
+                            continue;
+                        }
+                    }
+                    let Some(head) = self.solve(s, p - m) else { continue };
                     let latency = head.latency + tail;
                     if latency > self.t_lim {
                         continue;
@@ -123,41 +200,77 @@ impl<'a> Dp<'a> {
                 }
             }
         }
-        self.memo.insert((i, j, p), best);
+        self.memo[idx] = Some(best);
         best
+    }
+
+    /// Fold oracle counters into the DP stats.
+    fn finalize_stats(&mut self) {
+        if let TsBackend::Oracle { per_m } = &self.backend {
+            for o in per_m {
+                self.stats.stage_evals += o.stats.table_builds;
+                self.stats.ts_cache_hits += o.stats.table_hits;
+            }
+        }
     }
 }
 
 /// Run Algorithm 2: optimal pipeline for `pieces` on the (homogeneous)
-/// `cluster` under latency cap `t_lim`.
+/// `cluster` under latency cap `t_lim`. Builds the piece aggregates
+/// internally — planners that amortise the build across runs use
+/// [`dp_pipeline_with_meta`].
 pub fn dp_pipeline(
     g: &ModelGraph,
     pieces: &PieceChain,
     cluster: &Cluster,
     t_lim: f64,
 ) -> anyhow::Result<DpResult> {
+    let meta = Arc::new(PieceMeta::build(g, pieces));
+    dp_pipeline_with_meta(g, pieces, &meta, cluster, t_lim)
+}
+
+/// Algorithm 2 against a pre-built [`PieceMeta`] (the shared-context
+/// entry used by `PlanContext` so replica probes and scheme comparisons
+/// reuse one oracle build).
+pub fn dp_pipeline_with_meta(
+    g: &ModelGraph,
+    pieces: &PieceChain,
+    meta: &Arc<PieceMeta>,
+    cluster: &Cluster,
+    t_lim: f64,
+) -> anyhow::Result<DpResult> {
     anyhow::ensure!(!pieces.is_empty(), "empty piece chain");
     anyhow::ensure!(!cluster.is_empty(), "empty cluster");
-    let mut dp = Dp {
-        g,
-        pieces,
-        device: cluster.devices[0].clone(),
-        cluster,
-        t_lim,
-        memo: HashMap::new(),
-        ts_cache: HashMap::new(),
-        stats: DpStats::default(),
-    };
     let l = pieces.len();
     let d = cluster.len();
+    let device = cluster.devices[0].clone();
+    let backend = if meta.exact() {
+        TsBackend::Oracle {
+            per_m: (1..=d)
+                .map(|m| {
+                    CostOracle::new(g, meta.clone(), vec![device.clone(); m], cluster.network)
+                })
+                .collect(),
+        }
+    } else {
+        TsBackend::Reference {
+            g,
+            meta: meta.clone(),
+            device,
+            cluster,
+            cache: vec![f64::NAN; l * l * d],
+        }
+    };
+    let mut dp =
+        Dp { t_lim, l, d, memo: vec![None; l * (d + 1)], backend, stats: DpStats::default() };
     let best = dp
-        .solve(0, l - 1, d)
+        .solve(l - 1, d)
         .ok_or_else(|| anyhow::anyhow!("no pipeline satisfies T_lim = {t_lim}"))?;
     // BuildStrategy: unwind the R/S arrays.
     let mut stages = Vec::new();
-    let (i, mut j, mut p) = (0usize, l - 1, d);
+    let (mut j, mut p) = (l - 1, d);
     loop {
-        let e = dp.solve(i, j, p).unwrap();
+        let e = dp.solve(j, p).unwrap();
         stages.push((e.last_s, j, e.last_m));
         if !e.prev {
             break;
@@ -166,19 +279,25 @@ pub fn dp_pipeline(
         p -= e.last_m;
     }
     stages.reverse();
+    dp.finalize_stats();
     Ok(DpResult { stages, period: best.period, latency: best.latency, stats: dp.stats })
 }
 
 /// Materialise piece-interval stages into layer segments (helper shared
-/// with Algorithm 3 and the baselines).
+/// with Algorithm 3 and the baselines). Each piece is sorted once and
+/// the per-stage segments are merges of the pre-sorted lists.
 pub fn stages_to_segments(pieces: &PieceChain, stages: &[(usize, usize, usize)]) -> Vec<Vec<LayerId>> {
+    let sorted: Vec<Vec<LayerId>> = pieces
+        .iter()
+        .map(|p| {
+            let mut v = p.clone();
+            v.sort_unstable();
+            v
+        })
+        .collect();
     stages
         .iter()
-        .map(|&(i, j, _)| {
-            let mut ids: Vec<LayerId> = pieces[i..=j].iter().flatten().copied().collect();
-            ids.sort_unstable();
-            ids
-        })
+        .map(|&(i, j, _)| crate::cost::oracle::merge_sorted(&sorted[i..=j]))
         .collect()
 }
 
@@ -188,6 +307,7 @@ mod tests {
     use super::*;
     use crate::modelzoo;
     use crate::partition;
+    use crate::pipeline::dp_pipeline_reference;
 
     fn chain_pieces(g: &ModelGraph) -> PieceChain {
         partition::partition(g, 5, None).unwrap().pieces
@@ -277,5 +397,60 @@ mod tests {
             r.period,
             fused
         );
+    }
+
+    #[test]
+    fn oracle_and_reference_agree_with_and_without_cap() {
+        let g = modelzoo::vgg16();
+        let pieces = chain_pieces(&g);
+        let c = Cluster::homogeneous_rpi(6, 1.0);
+        let fast = dp_pipeline(&g, &pieces, &c, f64::INFINITY).unwrap();
+        let slow = dp_pipeline_reference(&g, &pieces, &c, f64::INFINITY).unwrap();
+        assert_eq!(fast.stages, slow.stages);
+        assert_eq!(fast.period.to_bits(), slow.period.to_bits());
+        assert_eq!(fast.latency.to_bits(), slow.latency.to_bits());
+        // Under a binding latency cap too.
+        let fast = dp_pipeline(&g, &pieces, &c, slow.latency).unwrap();
+        let slow = dp_pipeline_reference(&g, &pieces, &c, slow.latency).unwrap();
+        assert_eq!(fast.stages, slow.stages);
+        assert_eq!(fast.period.to_bits(), slow.period.to_bits());
+    }
+
+    #[test]
+    fn fallback_path_matches_reference_on_invalid_chain() {
+        // A piece chain that violates the oracle's invariants (layer ids
+        // interleaved across pieces) must silently use the reference
+        // backend and still match the reference DP exactly.
+        let g = modelzoo::synthetic_chain(6);
+        let n = g.n_layers();
+        let mut a: Vec<usize> = (0..n).step_by(2).collect();
+        let b: Vec<usize> = (1..n).step_by(2).collect();
+        a.sort_unstable();
+        let pieces: PieceChain = vec![a, b];
+        let meta = PieceMeta::build(&g, &pieces);
+        assert!(!meta.exact(), "interleaved chain must fail validation");
+        let c = Cluster::homogeneous_rpi(2, 1.0);
+        let fast = dp_pipeline(&g, &pieces, &c, f64::INFINITY).unwrap();
+        let slow = dp_pipeline_reference(&g, &pieces, &c, f64::INFINITY).unwrap();
+        assert_eq!(fast.stages, slow.stages);
+        assert_eq!(fast.period.to_bits(), slow.period.to_bits());
+    }
+
+    #[test]
+    fn oracle_path_cuts_stage_evals() {
+        let g = modelzoo::vgg16();
+        let pieces = chain_pieces(&g);
+        let c = Cluster::homogeneous_rpi(8, 1.0);
+        let fast = dp_pipeline(&g, &pieces, &c, f64::INFINITY).unwrap();
+        let slow = dp_pipeline_reference(&g, &pieces, &c, f64::INFINITY).unwrap();
+        assert!(
+            fast.stats.stage_evals < slow.stats.stage_evals,
+            "oracle {} vs reference {} leaf evals",
+            fast.stats.stage_evals,
+            slow.stats.stage_evals
+        );
+        // The oracle builds at most one table per (end piece, m).
+        assert!(fast.stats.stage_evals <= pieces.len() * c.len());
+        assert!(fast.stats.ts_cache_hits > 0);
     }
 }

@@ -1,0 +1,139 @@
+//! The pre-oracle Algorithm 2 implementation, kept verbatim as the
+//! planner's ground truth: per-query `segment()` rebuild + sort and a
+//! full [`crate::cost::stage_cost`] graph walk per `(i, j, m)` triple,
+//! memoised in hash maps.
+//!
+//! It exists so the O(1)-oracle DP in [`super::algorithm2`] can be
+//! *proved* result-identical rather than trusted:
+//! `rust/tests/planner_equivalence.rs` runs both across the model zoo
+//! and asserts bit-equal periods/latencies and equal stage sets, and
+//! `benches/perf_hotpath.rs` times this path to pin the speedup. Do not
+//! optimise this module — its value is being the unoptimised reference.
+
+use std::collections::HashMap;
+
+use super::algorithm2::{DpResult, DpStats, Entry};
+use crate::cluster::{Cluster, Device};
+use crate::cost::stage_cost;
+use crate::graph::{LayerId, ModelGraph};
+use crate::partition::PieceChain;
+
+struct RefDp<'a> {
+    g: &'a ModelGraph,
+    pieces: &'a PieceChain,
+    device: Device,
+    cluster: &'a Cluster,
+    t_lim: f64,
+    memo: HashMap<(usize, usize, usize), Option<Entry>>,
+    ts_cache: HashMap<(usize, usize, usize), f64>,
+    stats: DpStats,
+}
+
+impl<'a> RefDp<'a> {
+    fn segment(&self, i: usize, j: usize) -> Vec<LayerId> {
+        let mut ids: Vec<LayerId> = self.pieces[i..=j].iter().flatten().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Ts[i][j][m]: single-stage cost of pieces i..=j on m devices.
+    fn ts(&mut self, i: usize, j: usize, m: usize) -> f64 {
+        self.stats.ts_queries += 1;
+        if let Some(&v) = self.ts_cache.get(&(i, j, m)) {
+            self.stats.ts_cache_hits += 1;
+            return v;
+        }
+        self.stats.stage_evals += 1;
+        let seg = self.segment(i, j);
+        let devs: Vec<&Device> = (0..m).map(|_| &self.device).collect();
+        let v = stage_cost(self.g, &seg, &devs, &self.cluster.network).total;
+        self.ts_cache.insert((i, j, m), v);
+        v
+    }
+
+    /// Solve P[i][j][p]; None = infeasible under T_lim.
+    fn solve(&mut self, i: usize, j: usize, p: usize) -> Option<Entry> {
+        if let Some(e) = self.memo.get(&(i, j, p)) {
+            return *e;
+        }
+        self.stats.subproblems += 1;
+        // Option A: single stage with all p devices.
+        let single = self.ts(i, j, p);
+        let mut best = if single <= self.t_lim {
+            Some(Entry { period: single, latency: single, last_m: p, last_s: i, prev: false })
+        } else {
+            None
+        };
+        // Option B: split at s, m devices on the tail stage.
+        if j > i && p > 1 {
+            for s in i..j {
+                for m in 1..p {
+                    let tail = self.ts(s + 1, j, m);
+                    if tail > self.t_lim {
+                        continue;
+                    }
+                    let Some(head) = self.solve(i, s, p - m) else { continue };
+                    let latency = head.latency + tail;
+                    if latency > self.t_lim {
+                        continue;
+                    }
+                    let period = head.period.max(tail);
+                    let better = match &best {
+                        None => true,
+                        Some(b) => {
+                            period < b.period - 1e-15
+                                || (period <= b.period + 1e-15 && latency < b.latency - 1e-15)
+                        }
+                    };
+                    if better {
+                        best = Some(Entry { period, latency, last_m: m, last_s: s + 1, prev: true });
+                    }
+                }
+            }
+        }
+        self.memo.insert((i, j, p), best);
+        best
+    }
+}
+
+/// The reference Algorithm 2: identical recurrence, tie-breaking, and
+/// arithmetic as [`super::algorithm2::dp_pipeline`], with the original
+/// per-query segment rebuild + `stage_cost` walk.
+pub fn dp_pipeline_reference(
+    g: &ModelGraph,
+    pieces: &PieceChain,
+    cluster: &Cluster,
+    t_lim: f64,
+) -> anyhow::Result<DpResult> {
+    anyhow::ensure!(!pieces.is_empty(), "empty piece chain");
+    anyhow::ensure!(!cluster.is_empty(), "empty cluster");
+    let mut dp = RefDp {
+        g,
+        pieces,
+        device: cluster.devices[0].clone(),
+        cluster,
+        t_lim,
+        memo: HashMap::new(),
+        ts_cache: HashMap::new(),
+        stats: DpStats::default(),
+    };
+    let l = pieces.len();
+    let d = cluster.len();
+    let best = dp
+        .solve(0, l - 1, d)
+        .ok_or_else(|| anyhow::anyhow!("no pipeline satisfies T_lim = {t_lim}"))?;
+    // BuildStrategy: unwind the R/S arrays.
+    let mut stages = Vec::new();
+    let (i, mut j, mut p) = (0usize, l - 1, d);
+    loop {
+        let e = dp.solve(i, j, p).unwrap();
+        stages.push((e.last_s, j, e.last_m));
+        if !e.prev {
+            break;
+        }
+        j = e.last_s - 1;
+        p -= e.last_m;
+    }
+    stages.reverse();
+    Ok(DpResult { stages, period: best.period, latency: best.latency, stats: dp.stats })
+}

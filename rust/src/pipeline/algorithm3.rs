@@ -12,6 +12,7 @@ use super::algorithm2::stages_to_segments;
 use super::plan::{PipelinePlan, Stage};
 use crate::cluster::Cluster;
 use crate::cost::ideal_segment_flops;
+use crate::cost::oracle::PieceMeta;
 use crate::graph::ModelGraph;
 use crate::partition::PieceChain;
 
@@ -22,11 +23,36 @@ pub fn adapt_heterogeneous(
     dp_stages: &[(usize, usize, usize)],
     cluster: &Cluster,
 ) -> PipelinePlan {
-    let segments = stages_to_segments(pieces, dp_stages);
+    adapt_heterogeneous_with_meta(g, pieces, None, dp_stages, cluster)
+}
+
+/// [`adapt_heterogeneous`] with optional pre-built piece aggregates:
+/// when the [`PieceMeta`] validates, each stage's Θ′ is an O(1) prefix
+/// query (exactly equal to the direct recomputation — the FLOP sums are
+/// integer-valued, so the greedy tie-breaks are unchanged).
+pub fn adapt_heterogeneous_with_meta(
+    g: &ModelGraph,
+    pieces: &PieceChain,
+    meta: Option<&PieceMeta>,
+    dp_stages: &[(usize, usize, usize)],
+    cluster: &Cluster,
+) -> PipelinePlan {
+    // Segments come from the meta's pre-sorted piece lists when
+    // available (no re-clone + re-sort per piece); the merged result is
+    // identical to `stages_to_segments`.
+    let segments: Vec<Vec<crate::graph::LayerId>> = match meta {
+        Some(m) if m.len() == pieces.len() => {
+            dp_stages.iter().map(|&(i, j, _)| m.segment(i, j)).collect()
+        }
+        _ => stages_to_segments(pieces, dp_stages),
+    };
     let n_stages = segments.len();
     // Θ′ per stage: the segment's compute requirement (homogeneous split
     // keeps per-device share Θ′/|D′|).
-    let theta: Vec<f64> = segments.iter().map(|s| ideal_segment_flops(g, s)).collect();
+    let theta: Vec<f64> = match meta.filter(|m| m.exact()) {
+        Some(m) => dp_stages.iter().map(|&(i, j, _)| m.interval_ideal_flops(i, j)).collect(),
+        None => segments.iter().map(|s| ideal_segment_flops(g, s)).collect(),
+    };
     let mut slots: Vec<usize> = dp_stages.iter().map(|&(_, _, m)| m).collect();
     let mut assigned: Vec<Vec<usize>> = vec![Vec::new(); n_stages];
 

@@ -1,0 +1,162 @@
+//! `PlanContext`: one shared planning context per deployment build.
+//!
+//! `Replicas::Auto` probes every replica count 1..=N, and each probe
+//! plans every device group — before this context existed, that meant
+//! O(N²) identical Algorithm-1 partitions of the same graph and as many
+//! rebuilt cost tables. The context owns the graph-wide artefacts that
+//! are *cluster independent*:
+//!
+//! * the Algorithm-1 piece chain per `(diameter, dc_parts)` — computed
+//!   once, shared by every probe and every scheme that consumes pieces
+//!   (PICO, OFL, BFS);
+//! * the [`PieceMeta`] prefix aggregates behind the interval cost
+//!   oracle — built exactly once per chain (`oracle_builds` counts the
+//!   builds, and a test pins it to 1 for a whole `Replicas::Auto`
+//!   search);
+//! * aggregated planner counters ([`PlannerStats`]) surfaced through
+//!   `DeploymentPlan::explain()`.
+//!
+//! The context is `Sync` — the facade runs the independent Auto probes
+//! on `std::thread::scope` workers that all share one `&PlanContext`.
+//! Cache fills hold the lock, so concurrent probes block on the first
+//! partition instead of racing to duplicate it.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::algorithm2::DpStats;
+use crate::cost::oracle::PieceMeta;
+use crate::error::PicoError;
+use crate::graph::ModelGraph;
+use crate::partition::{self, PieceChain};
+
+/// Aggregated planner-efficiency counters for one deployment build.
+#[derive(Debug, Clone, Default)]
+pub struct PlannerStats {
+    /// Algorithm-1 runs (cache misses — 1 per distinct partition key).
+    pub partition_runs: usize,
+    /// [`PieceMeta`] builds (the oracle's one-off aggregate pass).
+    pub oracle_builds: usize,
+    /// Algorithm-2 counters summed over every DP invocation.
+    pub dp: DpStats,
+}
+
+#[derive(Default)]
+struct CtxCache {
+    /// (diameter, dc_parts) → piece chain. The partition budget is not
+    /// part of the key: within one build every scheme shares one config.
+    pieces: HashMap<(usize, usize), Arc<PieceChain>>,
+    metas: HashMap<(usize, usize), Arc<PieceMeta>>,
+}
+
+/// Shared planning context: graph + memoised piece chains / oracle
+/// aggregates + counters. Create one per deployment build and thread it
+/// through every `Scheme::plan_ctx` call.
+pub struct PlanContext<'g> {
+    g: &'g ModelGraph,
+    cache: Mutex<CtxCache>,
+    counters: Mutex<PlannerStats>,
+}
+
+impl<'g> PlanContext<'g> {
+    pub fn new(g: &'g ModelGraph) -> PlanContext<'g> {
+        PlanContext {
+            g,
+            cache: Mutex::new(CtxCache::default()),
+            counters: Mutex::new(PlannerStats::default()),
+        }
+    }
+
+    pub fn graph(&self) -> &'g ModelGraph {
+        self.g
+    }
+
+    /// The Algorithm-1 piece chain for this config — computed on first
+    /// use, shared afterwards. The lock is held across the computation
+    /// so parallel replica probes wait instead of re-partitioning.
+    pub fn pieces(
+        &self,
+        diameter: usize,
+        dc_parts: usize,
+        budget: Option<Duration>,
+    ) -> Result<Arc<PieceChain>, PicoError> {
+        let key = (diameter, dc_parts);
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(p) = cache.pieces.get(&key) {
+            return Ok(p.clone());
+        }
+        let r = if dc_parts > 1 {
+            partition::partition_divide_conquer(self.g, diameter, dc_parts, budget)
+        } else {
+            partition::partition(self.g, diameter, budget)
+        }
+        .map_err(|e| PicoError::Internal(format!("partition failed: {e}")))?;
+        self.counters.lock().unwrap().partition_runs += 1;
+        let arc = Arc::new(r.pieces);
+        cache.pieces.insert(key, arc.clone());
+        Ok(arc)
+    }
+
+    /// The oracle's static aggregates for this config's chain — built
+    /// exactly once per key (the `Replicas::Auto` one-build invariant).
+    pub fn meta(&self, diameter: usize, dc_parts: usize, pieces: &Arc<PieceChain>) -> Arc<PieceMeta> {
+        let key = (diameter, dc_parts);
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(m) = cache.metas.get(&key) {
+            return m.clone();
+        }
+        self.counters.lock().unwrap().oracle_builds += 1;
+        let meta = Arc::new(PieceMeta::build(self.g, pieces));
+        cache.metas.insert(key, meta.clone());
+        meta
+    }
+
+    /// Fold one DP run's counters into the build-wide aggregate.
+    pub fn note_dp(&self, stats: &DpStats) {
+        self.counters.lock().unwrap().dp.absorb(stats);
+    }
+
+    /// Snapshot of the aggregated counters.
+    pub fn stats(&self) -> PlannerStats {
+        self.counters.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modelzoo;
+
+    #[test]
+    fn pieces_and_meta_are_computed_once() {
+        let g = modelzoo::squeezenet();
+        let ctx = PlanContext::new(&g);
+        let p1 = ctx.pieces(5, 1, None).unwrap();
+        let p2 = ctx.pieces(5, 1, None).unwrap();
+        assert!(Arc::ptr_eq(&p1, &p2));
+        let m1 = ctx.meta(5, 1, &p1);
+        let m2 = ctx.meta(5, 1, &p2);
+        assert!(Arc::ptr_eq(&m1, &m2));
+        let st = ctx.stats();
+        assert_eq!(st.partition_runs, 1);
+        assert_eq!(st.oracle_builds, 1);
+    }
+
+    #[test]
+    fn parallel_probes_share_one_partition() {
+        let g = modelzoo::vgg16();
+        let ctx = PlanContext::new(&g);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    let p = ctx.pieces(5, 1, None).unwrap();
+                    let _ = ctx.meta(5, 1, &p);
+                });
+            }
+        });
+        let st = ctx.stats();
+        assert_eq!(st.partition_runs, 1);
+        assert_eq!(st.oracle_builds, 1);
+    }
+}

@@ -1,18 +1,32 @@
 //! PICO's pipeline planner (paper §5): Algorithm 2 (DP over piece
 //! intervals × device counts for the homogenised cluster) followed by
 //! Algorithm 3 (greedy adaptation to the real heterogeneous devices).
+//!
+//! The DP's `Ts(i, j, m)` leaf goes through the
+//! [`crate::cost::oracle`] subsystem (O(1) interval queries over
+//! precomputed piece aggregates); [`PlanContext`] shares one oracle
+//! build — and one Algorithm-1 partition — across replica probes and
+//! scheme comparisons. [`dp_pipeline_reference`] preserves the
+//! unoptimised path as the equivalence-test ground truth.
 
 mod algorithm2;
+mod algorithm2_reference;
 mod algorithm3;
+mod context;
 mod plan;
 mod rebalance;
 
-pub use algorithm2::{dp_pipeline, DpResult, DpStats};
-pub use algorithm3::adapt_heterogeneous;
+pub use algorithm2::{dp_pipeline, dp_pipeline_with_meta, stages_to_segments, DpResult, DpStats};
+pub use algorithm2_reference::dp_pipeline_reference;
+pub use algorithm3::{adapt_heterogeneous, adapt_heterogeneous_with_meta};
+pub use context::{PlanContext, PlannerStats};
 pub use plan::{ExecutionMode, PipelinePlan, Stage};
 pub use rebalance::{rebalance, RebalanceReport};
 
+use std::sync::Arc;
+
 use crate::cluster::{Cluster, Device};
+use crate::cost::oracle::PieceMeta;
 use crate::graph::ModelGraph;
 use crate::partition::PieceChain;
 
@@ -25,9 +39,24 @@ pub fn plan(
     cluster: &Cluster,
     t_lim: f64,
 ) -> anyhow::Result<PipelinePlan> {
+    let meta = Arc::new(PieceMeta::build(g, pieces));
+    plan_with_meta(g, pieces, &meta, cluster, t_lim).map(|(p, _)| p)
+}
+
+/// [`plan`] against a pre-built [`PieceMeta`], returning the DP
+/// counters — the entry the [`PlanContext`]-aware facade uses so every
+/// replica probe reuses one oracle build.
+pub fn plan_with_meta(
+    g: &ModelGraph,
+    pieces: &PieceChain,
+    meta: &Arc<PieceMeta>,
+    cluster: &Cluster,
+    t_lim: f64,
+) -> anyhow::Result<(PipelinePlan, DpStats)> {
     let homo = cluster.homogenized();
-    let dp = dp_pipeline(g, pieces, &homo, t_lim)?;
-    Ok(adapt_heterogeneous(g, pieces, &dp.stages, cluster))
+    let dp = dp_pipeline_with_meta(g, pieces, meta, &homo, t_lim)?;
+    let plan = adapt_heterogeneous_with_meta(g, pieces, Some(&**meta), &dp.stages, cluster);
+    Ok((plan, dp.stats))
 }
 
 /// Plan `replicas` independent pipelines over a capacity-balanced
@@ -50,7 +79,11 @@ pub fn plan_replicated(
         "replicas must be in 1..={} (got {replicas})",
         cluster.len()
     );
-    replicate_with(g, cluster, replicas, |g, sub| plan(g, pieces, sub, t_lim))
+    // One oracle build shared by every replica's DP.
+    let meta = Arc::new(PieceMeta::build(g, pieces));
+    replicate_with(g, cluster, replicas, |g, sub| {
+        plan_with_meta(g, pieces, &meta, sub, t_lim).map(|(p, _)| p)
+    })
 }
 
 /// The replica-planning core shared by [`plan_replicated`] and the

@@ -18,7 +18,7 @@ use crate::baselines::{halo_fraction, SyncSchedule};
 use crate::cluster::Cluster;
 use crate::cost::{stage_cost, StageCost};
 use crate::engine::{run_pipeline, EngineConfig, StageProfile};
-use crate::graph::{LayerId, ModelGraph, Op, Shape};
+use crate::graph::{LayerId, ModelGraph, Shape};
 use crate::pipeline::PipelinePlan;
 
 /// Per-device simulation outcome.
@@ -78,21 +78,9 @@ fn avg(it: impl Iterator<Item = f64>) -> f64 {
     }
 }
 
-/// Parameter bytes of one layer (f32 weights + bias).
-pub fn layer_param_bytes(g: &ModelGraph, id: LayerId) -> usize {
-    let l = g.layer(id);
-    match l.op {
-        Op::Conv => {
-            let c_in = g.in_channels(id) / l.groups;
-            (l.out_channels * c_in * l.kernel.0 * l.kernel.1 + l.out_channels) * 4
-        }
-        Op::Dense => {
-            let f = g.shape(l.inputs[0]).elems();
-            (l.out_channels * f + l.out_channels) * 4
-        }
-        _ => 0,
-    }
-}
+/// Parameter bytes of one layer (canonical helper lives with the cost
+/// model; re-exported here for the CLI and memory reports).
+pub use crate::cost::flops::layer_param_bytes;
 
 /// Peak feature bytes a device holds executing `layers` (largest
 /// input+output pair among its layers, full-width tiles of `rows_frac`

@@ -1,0 +1,218 @@
+//! Planner equivalence suite: the oracle-backed Algorithm 2 must be
+//! *result-identical* to the preserved reference implementation — no
+//! accuracy-for-speed trade anywhere in the planning stack.
+//!
+//! Three layers of proof:
+//!
+//! 1. `Ts`-level: `CostOracle::interval_cost(i, j)` is bit-equal to a
+//!    fresh `stage_cost` walk for **every** piece interval, on
+//!    homogeneous and heterogeneous rosters (this is the strongest
+//!    statement — the DP can only combine Ts values).
+//! 2. DP-level: `dp_pipeline` vs `dp_pipeline_reference` across the
+//!    model zoo × device counts, unconstrained and under binding
+//!    latency caps: equal stage sets, bit-equal period/latency.
+//! 3. Plan-level: the full homogenise → DP → Algorithm-3 chain on the
+//!    paper's heterogeneous cluster produces equal `PipelinePlan`s.
+//!
+//! The suite also pins the efficiency claim the overhaul is about:
+//! the oracle path performs an order of magnitude fewer O(n) leaf
+//! evaluations than the reference on planner-bound cases.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use pico::cluster::{Cluster, Device};
+use pico::cost::{stage_cost, CostOracle, PieceMeta};
+use pico::graph::{LayerId, ModelGraph};
+use pico::modelzoo;
+use pico::partition;
+use pico::pipeline::{
+    adapt_heterogeneous, dp_pipeline, dp_pipeline_reference, PipelinePlan,
+};
+
+/// (name, graph, Algorithm-1 piece chain) planner input.
+type ZooCase = (String, ModelGraph, Vec<Vec<LayerId>>);
+
+/// The zoo cases the planner must be equivalence-proved on. NASNet is
+/// represented by `nasnet_slice` + divide-and-conquer, like the
+/// agreement suite (direct Algorithm 1 on the full graph is the paper's
+/// >5h row).
+fn zoo_cases() -> Vec<ZooCase> {
+    let mut out = Vec::new();
+    for name in ["vgg16", "squeezenet", "mobilenetv3", "resnet34", "yolov2", "inceptionv3"] {
+        let g = modelzoo::by_name(name).unwrap();
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        out.push((name.to_string(), g, pieces));
+    }
+    let nas = modelzoo::nasnet_slice(1);
+    let pieces = partition::partition_divide_conquer(&nas, 5, 6, Some(Duration::from_secs(300)))
+        .unwrap()
+        .pieces;
+    out.push(("nasnet_slice".into(), nas, pieces));
+    out
+}
+
+fn reference_segment(pieces: &[Vec<LayerId>], i: usize, j: usize) -> Vec<LayerId> {
+    let mut ids: Vec<LayerId> = pieces[i..=j].iter().flatten().copied().collect();
+    ids.sort_unstable();
+    ids
+}
+
+/// Layer 1: every interval × roster, oracle vs direct stage_cost walk.
+fn assert_interval_equivalence(name: &str, g: &ModelGraph, pieces: &[Vec<LayerId>], rosters: &[Vec<Device>]) {
+    let meta = Arc::new(PieceMeta::build(g, pieces));
+    assert!(meta.exact(), "{name}: zoo chain must validate for the oracle");
+    let l = pieces.len();
+    let network = Cluster::homogeneous_rpi(1, 1.0).network;
+    for roster in rosters {
+        let mut oracle = CostOracle::new(g, meta.clone(), roster.clone(), network);
+        let devs: Vec<&Device> = roster.iter().collect();
+        for j in 0..l {
+            for i in 0..=j {
+                let seg = reference_segment(pieces, i, j);
+                let want = stage_cost(g, &seg, &devs, &network).total;
+                let got = oracle.interval_cost(i, j);
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "{name}: Ts({i},{j}) x{} devices: oracle {got} vs walk {want}",
+                    roster.len()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn interval_costs_bit_identical_across_zoo() {
+    for (name, g, pieces) in zoo_cases() {
+        // Homogeneous rosters of 1, 2 and 5 devices + the heterogeneous
+        // paper testbed (what OFL feeds the oracle).
+        let rpi = Device::rpi(0, 1.0);
+        let mut rosters: Vec<Vec<Device>> =
+            [1usize, 2, 5].iter().map(|&m| vec![rpi.clone(); m]).collect();
+        rosters.push(Cluster::paper_heterogeneous().devices);
+        assert_interval_equivalence(&name, &g, &pieces, &rosters);
+    }
+}
+
+#[test]
+fn interval_costs_match_on_random_chains() {
+    // Property test on synthetic graphs: prefix/suffix aggregates must
+    // reproduce direct recomputation whatever the chain shape.
+    // (graph, diameter bounds): vary the bound to vary the chain
+    // granularity; branchy graphs keep d high enough to stay feasible.
+    let cases = vec![
+        (modelzoo::synthetic_chain(6), vec![2usize, 4]),
+        (modelzoo::synthetic_chain(13), vec![3, 6]),
+        (modelzoo::synthetic_graph(2, 10), vec![5]),
+        (modelzoo::synthetic_graph(3, 14), vec![5, 6]),
+        (modelzoo::synthetic_graph(4, 18), vec![6]),
+    ];
+    for (gi, (g, bounds)) in cases.into_iter().enumerate() {
+        for d in bounds {
+            let pieces = partition::partition(&g, d, None).unwrap().pieces;
+            let rpi = Device::rpi(0, 1.0);
+            let mut fast = Device::rpi(1, 1.5);
+            fast.flops *= 1.7; // deliberately lopsided weights
+            let rosters = vec![
+                vec![rpi.clone()],
+                vec![rpi.clone(); 3],
+                vec![fast.clone(), rpi.clone(), rpi.clone(), fast],
+            ];
+            assert_interval_equivalence(&format!("synthetic[{gi}] d={d}"), &g, &pieces, &rosters);
+        }
+    }
+}
+
+/// Layer 2: whole-DP equivalence (stages, period, latency — bitwise).
+#[test]
+fn dp_results_bit_identical_across_zoo() {
+    for (name, g, pieces) in zoo_cases() {
+        for d in [1usize, 2, 4, 8] {
+            let c = Cluster::homogeneous_rpi(d, 1.0);
+            let fast = dp_pipeline(&g, &pieces, &c, f64::INFINITY).unwrap();
+            let slow = dp_pipeline_reference(&g, &pieces, &c, f64::INFINITY).unwrap();
+            assert_eq!(fast.stages, slow.stages, "{name} x{d}");
+            assert_eq!(
+                fast.period.to_bits(),
+                slow.period.to_bits(),
+                "{name} x{d}: period {} vs {}",
+                fast.period,
+                slow.period
+            );
+            assert_eq!(
+                fast.latency.to_bits(),
+                slow.latency.to_bits(),
+                "{name} x{d}: latency {} vs {}",
+                fast.latency,
+                slow.latency
+            );
+        }
+    }
+}
+
+#[test]
+fn dp_results_identical_under_latency_caps() {
+    for (name, g, pieces) in zoo_cases() {
+        let c = Cluster::homogeneous_rpi(4, 1.0);
+        let free = dp_pipeline_reference(&g, &pieces, &c, f64::INFINITY).unwrap();
+        // A binding cap (the unconstrained optimum's own latency) and a
+        // tight cap that may flip to infeasible — both paths must agree
+        // on feasibility and, when feasible, on the exact result.
+        for cap in [free.latency, free.latency * 0.9, free.latency * 0.5] {
+            let fast = dp_pipeline(&g, &pieces, &c, cap);
+            let slow = dp_pipeline_reference(&g, &pieces, &c, cap);
+            match (fast, slow) {
+                (Ok(a), Ok(b)) => {
+                    assert_eq!(a.stages, b.stages, "{name} cap={cap}");
+                    assert_eq!(a.period.to_bits(), b.period.to_bits(), "{name} cap={cap}");
+                    assert_eq!(a.latency.to_bits(), b.latency.to_bits(), "{name} cap={cap}");
+                }
+                (Err(_), Err(_)) => {}
+                (a, b) => panic!(
+                    "{name} cap={cap}: feasibility mismatch (oracle {:?} vs reference {:?})",
+                    a.map(|r| r.period),
+                    b.map(|r| r.period)
+                ),
+            }
+        }
+    }
+}
+
+/// Layer 3: the full heterogeneous planning chain (homogenise → DP →
+/// Algorithm 3) emits equal plans.
+#[test]
+fn full_plans_identical_on_heterogeneous_cluster() {
+    let cluster = Cluster::paper_heterogeneous();
+    for (name, g, pieces) in zoo_cases() {
+        let fast: PipelinePlan = pico::pipeline::plan(&g, &pieces, &cluster, f64::INFINITY).unwrap();
+        let dp = dp_pipeline_reference(&g, &pieces, &cluster.homogenized(), f64::INFINITY).unwrap();
+        let slow = adapt_heterogeneous(&g, &pieces, &dp.stages, &cluster);
+        assert_eq!(fast, slow, "{name}: facade plan must equal reference chain");
+    }
+}
+
+/// The efficiency claim: ≥10x fewer O(n) leaf evaluations on
+/// planner-bound zoo cases (where the reference pays hundreds of
+/// stage-cost walks).
+#[test]
+fn oracle_cuts_leaf_evals_by_an_order_of_magnitude() {
+    for (name, g, pieces) in zoo_cases() {
+        let c = Cluster::homogeneous_rpi(8, 1.0);
+        let fast = dp_pipeline(&g, &pieces, &c, f64::INFINITY).unwrap();
+        let slow = dp_pipeline_reference(&g, &pieces, &c, f64::INFINITY).unwrap();
+        assert!(
+            fast.stats.stage_evals <= pieces.len() * c.len(),
+            "{name}: oracle leaf work is bounded by (pieces x devices)"
+        );
+        if slow.stats.stage_evals >= 500 {
+            assert!(
+                fast.stats.stage_evals * 10 <= slow.stats.stage_evals,
+                "{name}: stage_evals {} (oracle) vs {} (reference) — expected >=10x drop",
+                fast.stats.stage_evals,
+                slow.stats.stage_evals
+            );
+        }
+    }
+}
