@@ -8,9 +8,11 @@
 //!     O(nL²D²) bound;
 //!   * PJRT dispatch overhead per tile (when artifacts exist).
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use pico::cluster::Cluster;
+use pico::cost::PieceMeta;
 use pico::runtime::Tensor;
 use pico::util::Table;
 use pico::{modelzoo, partition, pipeline};
@@ -18,7 +20,9 @@ use pico::{modelzoo, partition, pipeline};
 /// NASNet-scale planner pin: partition (D&C) + oracle DP + Algorithm 3,
 /// with the pre-overhaul reference DP timed on the same inputs. Gated
 /// by `PICO_PERF_BUDGET_MS` (end-to-end wall clock, CI fails loudly on
-/// regression) and recorded to `BENCH_planner.json`.
+/// regression) and recorded to `BENCH_planner.json`. The
+/// rebalance-on-oracle case (the adaptation loop's cheap re-plan path)
+/// rides the same gate and records `BENCH_rebalance.json`.
 fn planner_hotpath(t: &mut Table) {
     let g = modelzoo::nasnet_slice(1);
     let t0 = Instant::now();
@@ -94,6 +98,59 @@ fn planner_hotpath(t: &mut Table) {
             std::process::exit(1);
         }
     }
+
+    // Rebalance-on-oracle at NASNet scale: scramble the heterogeneous
+    // assignment adversarially (reverse the device order across stages),
+    // then let the oracle-backed local search repair it. Gated by the
+    // same PICO_PERF_BUDGET_MS mechanism; recorded to
+    // BENCH_rebalance.json.
+    let hc = Cluster::paper_heterogeneous();
+    let het_plan = pipeline::plan(&g, &pieces, &hc, f64::INFINITY).unwrap();
+    let mut scrambled = het_plan.clone();
+    let mut devs: Vec<usize> =
+        scrambled.stages.iter().flat_map(|s| s.devices.clone()).collect();
+    devs.reverse();
+    let mut it = devs.into_iter();
+    for s in &mut scrambled.stages {
+        let n = s.devices.len();
+        s.devices = (&mut it).take(n).collect();
+    }
+    let meta = Arc::new(PieceMeta::build(&g, &pieces));
+    let t5 = Instant::now();
+    let rep = pipeline::rebalance_with_meta(&g, &pieces, &meta, &hc, &mut scrambled, 100);
+    let rebalance_s = t5.elapsed().as_secs_f64();
+    t.row(&["rebalance (oracle), NASNet x 8 het".into(), format!("{:.1}ms", rebalance_s * 1e3),
+        "1".into(),
+        format!("{} moves, {} stage evals, {:.3}->{:.3}",
+            rep.moves, rep.stage_evals, rep.period_before, rep.period_after)]);
+    let json = format!(
+        "{{\n  \"case\": \"nasnet_slice(1) dc_parts=6 x paper_heterogeneous, reversed assignment\",\n  \
+         \"pieces\": {},\n  \"rebalance_ms\": {:.3},\n  \"moves\": {},\n  \
+         \"stage_evals\": {},\n  \"period_before\": {:.6},\n  \"period_after\": {:.6},\n  \
+         \"generated_by\": \"benches/perf_hotpath.rs (cargo bench --bench perf_hotpath)\"\n}}\n",
+        pieces.len(),
+        rebalance_s * 1e3,
+        rep.moves,
+        rep.stage_evals,
+        rep.period_before,
+        rep.period_after,
+    );
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_rebalance.json");
+    if let Err(e) = std::fs::write(&out, &json) {
+        eprintln!("warning: could not write {}: {e}", out.display());
+    }
+    if let Ok(ms) = std::env::var("PICO_PERF_BUDGET_MS") {
+        let budget_ms: f64 = ms.parse().expect("PICO_PERF_BUDGET_MS must be a number");
+        if rebalance_s * 1e3 > budget_ms {
+            eprintln!(
+                "FAIL: NASNet-scale rebalance took {:.0}ms > budget {budget_ms}ms",
+                rebalance_s * 1e3
+            );
+            std::process::exit(1);
+        }
+    }
+    // The local search must never make the scrambled plan worse.
+    assert!(rep.period_after <= rep.period_before + 1e-12, "rebalance regressed the plan");
 }
 
 fn time<F: FnMut()>(reps: usize, mut f: F) -> f64 {

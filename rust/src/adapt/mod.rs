@@ -1,0 +1,530 @@
+//! Online adaptation (paper §5.4): the shared mechanism layer.
+//!
+//! PICO's plan is computed against *nominal* device capacities, but real
+//! clusters drift — a phone throttles, a Pi hits a thermal cap. This
+//! module owns everything the closed loop needs that is policy-free:
+//!
+//! * [`DriftScript`] — scripted capacity drift (device `d` runs at
+//!   `factor ×` nominal speed from request `n` on), so the whole loop is
+//!   analytically testable: the simulator and the serving coordinator
+//!   inject the *same* drift and must agree.
+//! * [`round_profiles`] — the per-round split of *belief* vs *truth*:
+//!   stage feature splits stay as the believed cluster planned them
+//!   ([`stage_cost_as_planned`]), while service times stretch with the
+//!   actual capacities. The actual profiles drive the engine; the
+//!   believed costs are the expectations a detector compares against.
+//! * [`StageObservation`] — one round's per-stage, per-device
+//!   observation record (expected vs observed compute times + the
+//!   engine's [`ServiceStats`] EWMA telemetry).
+//! * [`AdaptController`] — the policy hook: after every round it sees
+//!   the observations and may hand back a [`PlanSwap`] (new replica
+//!   plans + updated believed cluster) to hot-swap at the round
+//!   boundary.
+//! * [`drive_adaptation`] — the round loop itself, generic over *how* a
+//!   round executes: `sim::simulate_adaptive` plugs in a bare engine
+//!   pass, `coordinator::serve_adaptive` the threaded serving pipeline.
+//!   Both therefore share chunking, drift application, observation
+//!   assembly and swap timing — which is what makes the sim↔serve
+//!   drift agreement test exact.
+//!
+//! Rounds are the hot-swap granularity: a round's requests fully drain
+//! before the next round starts (the next round's admissions are gated
+//! to the previous round's makespan), so a plan swap never strands an
+//! in-flight request — it only ever changes the pipeline future
+//! requests enter. The drift detector and re-planning policy live in
+//! [`crate::deploy`] (`AdaptPolicy` / `OnlineAdapter`), which re-plans
+//! through the shared [`crate::pipeline::PlanContext`] so no re-plan
+//! ever re-runs Algorithm 1 or rebuilds the cost oracle's aggregates.
+
+use std::ops::Range;
+
+use crate::cluster::{Cluster, Device};
+use crate::cost::stage_cost_as_planned;
+use crate::engine::{summarize, ServiceStats, StageProfile, TimingReport};
+use crate::graph::ModelGraph;
+use crate::pipeline::PipelinePlan;
+
+/// One scripted capacity-drift event: from the moment `at_request`
+/// requests have been dispatched, device `device` runs at `factor ×`
+/// its current speed (factors compose multiplicatively).
+#[derive(Debug, Clone, Copy)]
+pub struct DriftEvent {
+    /// The event takes effect at the first round boundary where this
+    /// many requests have been dispatched.
+    pub at_request: usize,
+    /// Cluster device index.
+    pub device: usize,
+    /// Capacity multiplier (0.5 = half speed); must be finite and > 0.
+    pub factor: f64,
+}
+
+/// A deterministic capacity-drift schedule.
+#[derive(Debug, Clone, Default)]
+pub struct DriftScript {
+    pub events: Vec<DriftEvent>,
+}
+
+impl DriftScript {
+    /// No drift: the actual cluster always equals the nominal one.
+    pub fn none() -> DriftScript {
+        DriftScript { events: Vec::new() }
+    }
+
+    /// A single slowdown event.
+    pub fn slowdown(at_request: usize, device: usize, factor: f64) -> DriftScript {
+        DriftScript { events: vec![DriftEvent { at_request, device, factor }] }
+    }
+
+    /// The actual cluster once `served` requests have been dispatched:
+    /// `nominal` with every due event's factor applied. Events naming a
+    /// device outside the cluster or a non-positive/non-finite factor
+    /// are ignored (a script is test input, not a trusted plan).
+    pub fn cluster_at(&self, nominal: &Cluster, served: usize) -> Cluster {
+        let mut c = nominal.clone();
+        for e in &self.events {
+            if e.at_request <= served
+                && e.device < c.devices.len()
+                && e.factor.is_finite()
+                && e.factor > 0.0
+            {
+                c.devices[e.device].flops *= e.factor;
+            }
+        }
+        c
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// One round's observation of one pipeline stage: what the believed
+/// cluster predicted, what the (possibly drifted) cluster actually
+/// charged, and the engine's service-time telemetry.
+#[derive(Debug, Clone)]
+pub struct StageObservation {
+    pub replica: usize,
+    pub stage: usize,
+    /// Global cluster device indices of the stage, in roster order.
+    pub devices: Vec<usize>,
+    /// Believed single-frame stage service `T_s` (Eq. 11).
+    pub expected: f64,
+    /// Actual single-frame `T_s` under the plan's splits.
+    pub observed: f64,
+    /// Believed per-device compute times (Eq. 7), roster order.
+    pub expected_t_comp: Vec<f64>,
+    /// Actual per-device compute times under the plan's splits — the
+    /// per-device "self-report" a drift detector attributes slowdown
+    /// with.
+    pub observed_t_comp: Vec<f64>,
+    /// Believed affine service profile of the stage.
+    pub expected_profile: StageProfile,
+    /// Actual (drifted) profile — the one the engine was driven with.
+    pub observed_profile: StageProfile,
+    /// The engine's observed-service EWMA telemetry for this stage this
+    /// round (batches, per-item EWMA/mean). This is the *measured*
+    /// stage service; detectors normalize it back to a single-frame
+    /// equivalent via `observed_profile` (see
+    /// `deploy::OnlineAdapter`).
+    pub engine: ServiceStats,
+}
+
+/// Build one round's engine profiles and observation records: splits
+/// from `believed` capacities, timing from `actual` ones.
+///
+/// One cost-model walk per stage: the believed expectation is derived
+/// from the same walk (identical splits → identical FLOPs and traffic;
+/// only `t_comp` rescales to the believed capacities), which is
+/// bit-identical to running `stage_cost` on the believed cluster
+/// separately.
+pub fn round_profiles(
+    g: &ModelGraph,
+    plans: &[PipelinePlan],
+    believed: &Cluster,
+    actual: &Cluster,
+) -> (Vec<Vec<StageProfile>>, Vec<StageObservation>) {
+    let mut profiles = Vec::with_capacity(plans.len());
+    let mut obs = Vec::new();
+    for (ri, plan) in plans.iter().enumerate() {
+        let mut ps = Vec::with_capacity(plan.stages.len());
+        for (si, s) in plan.stages.iter().enumerate() {
+            let planned: Vec<&Device> =
+                s.devices.iter().map(|&i| &believed.devices[i]).collect();
+            let actual_devs: Vec<&Device> =
+                s.devices.iter().map(|&i| &actual.devices[i]).collect();
+            let act =
+                stage_cost_as_planned(g, &s.layers, &planned, &actual_devs, &actual.network);
+            // Believed expectation from the same walk (Eq. 7 on the
+            // believed capacities over the identical FLOP assignment;
+            // inactive devices keep flops == 0 → t_comp 0, as in
+            // `stage_cost`).
+            let expected_t_comp: Vec<f64> = act
+                .flops
+                .iter()
+                .zip(&planned)
+                .map(|(&th, d)| if th > 0.0 { d.t_comp(th) } else { 0.0 })
+                .collect();
+            let expected_comp_stage = expected_t_comp.iter().cloned().fold(0.0, f64::max);
+            let expected_total = expected_comp_stage + act.t_comm_stage;
+            let observed_profile = StageProfile::from_stage_cost(&act, &actual.network);
+            // Same fixed part either way: the handshake floor depends on
+            // message structure, not capacities.
+            let expected_profile = StageProfile {
+                fixed: observed_profile.fixed,
+                per_item: expected_total - observed_profile.fixed,
+            };
+            ps.push(observed_profile);
+            obs.push(StageObservation {
+                replica: ri,
+                stage: si,
+                devices: s.devices.clone(),
+                expected: expected_total,
+                observed: act.total,
+                expected_t_comp,
+                observed_t_comp: act.t_comp,
+                expected_profile,
+                observed_profile,
+                engine: ServiceStats::default(),
+            });
+        }
+        profiles.push(ps);
+    }
+    (profiles, obs)
+}
+
+/// How a re-plan was computed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplanStrategy {
+    /// The oracle-backed local search ([`crate::pipeline::rebalance`])
+    /// repaired the existing stage set — the cheap first resort.
+    Rebalance,
+    /// Full Algorithm-2 DP (+ Algorithm 3) on the re-estimated cluster.
+    FullDp,
+}
+
+/// A controller's decision to hot-swap plans at the next round boundary.
+#[derive(Debug, Clone)]
+pub struct PlanSwap {
+    /// Replacement replica plans (same cluster device universe).
+    pub plans: Vec<PipelinePlan>,
+    /// The updated believed cluster (drift folded into capacities).
+    pub believed: Cluster,
+    /// Device whose capacity estimate changed.
+    pub device: usize,
+    /// Estimated capacity multiplier applied to that device.
+    pub capacity_scale: f64,
+    pub strategy: ReplanStrategy,
+}
+
+/// One executed re-plan, as recorded in the adaptation trace.
+#[derive(Debug, Clone)]
+pub struct ReplanRecord {
+    /// Round whose observations triggered the swap.
+    pub round: usize,
+    /// Requests dispatched before the new plan took effect.
+    pub after_requests: usize,
+    pub device: usize,
+    pub capacity_scale: f64,
+    pub strategy: ReplanStrategy,
+}
+
+/// The policy hook of the adaptation loop: sees every round's
+/// observations, may return a [`PlanSwap`] to apply at the boundary.
+pub trait AdaptController {
+    fn observe_round(
+        &mut self,
+        round: usize,
+        plans: &[PipelinePlan],
+        believed: &Cluster,
+        obs: &[StageObservation],
+    ) -> Option<PlanSwap>;
+}
+
+/// A controller that never adapts — the no-adaptation baseline.
+pub struct FixedController;
+
+impl AdaptController for FixedController {
+    fn observe_round(
+        &mut self,
+        _round: usize,
+        _plans: &[PipelinePlan],
+        _believed: &Cluster,
+        _obs: &[StageObservation],
+    ) -> Option<PlanSwap> {
+        None
+    }
+}
+
+/// Everything one round's executor needs: the current plans, the
+/// believed cluster (feature splits), the actual-timing profiles, and
+/// the virtual time the round's admissions are gated to.
+pub struct RoundExec<'r> {
+    pub round: usize,
+    /// Request indices (into the caller's arrival order) this round
+    /// serves.
+    pub range: Range<usize>,
+    pub plans: &'r [PipelinePlan],
+    pub believed: &'r Cluster,
+    /// Actual (possibly drifted) stage profiles, per replica.
+    pub profiles: &'r [Vec<StageProfile>],
+    /// Previous round's makespan: admissions must not start earlier
+    /// (the drain boundary that makes hot swaps in-flight-safe).
+    pub t_offset: f64,
+}
+
+/// What a round executor reports back.
+pub struct RoundResult {
+    /// (request index, completion time), absolute virtual times.
+    pub done: Vec<(usize, f64)>,
+    /// Per-(replica, stage) engine service telemetry for the round.
+    pub stage_service: Vec<Vec<ServiceStats>>,
+    /// Absolute virtual time the round fully drained.
+    pub makespan: f64,
+}
+
+/// Full outcome of an adaptation run.
+#[derive(Debug, Clone)]
+pub struct AdaptationTrace {
+    /// (request index, completion time) over all rounds.
+    pub done: Vec<(usize, f64)>,
+    /// Absolute drain time of each round.
+    pub round_ends: Vec<f64>,
+    pub replans: Vec<ReplanRecord>,
+    pub rounds: usize,
+    pub final_plans: Vec<PipelinePlan>,
+    pub final_believed: Cluster,
+}
+
+impl AdaptationTrace {
+    /// Timing summary against the requests' original arrival times.
+    pub fn timing(&self, arrivals: &[f64]) -> TimingReport {
+        let mut done: Vec<f64> = self.done.iter().map(|&(_, t)| t).collect();
+        done.sort_by(f64::total_cmp);
+        let lats: Vec<f64> =
+            self.done.iter().map(|&(i, t)| t - arrivals.get(i).copied().unwrap_or(0.0)).collect();
+        summarize(&done, &lats)
+    }
+
+    /// Per-round completion spans (round k's drain time minus round
+    /// k−1's): `round_size / span` is the round's observed throughput.
+    pub fn round_spans(&self) -> Vec<f64> {
+        let mut prev = 0.0;
+        self.round_ends
+            .iter()
+            .map(|&e| {
+                let s = e - prev;
+                prev = e;
+                s
+            })
+            .collect()
+    }
+}
+
+/// The adaptation round loop shared by the analytic simulator and the
+/// serving coordinator. `exec` runs one round (engine pass, or engine
+/// pass + threaded tensor serving) and both callers get identical
+/// chunking, drift application and swap timing — the sim↔serve drift
+/// agreement contract.
+///
+/// The controller is consulted after every round except the last (a
+/// swap with no future requests would be dead weight).
+#[allow(clippy::too_many_arguments)] // the adaptation loop genuinely has this many axes
+pub fn drive_adaptation(
+    g: &ModelGraph,
+    nominal: &Cluster,
+    initial_plans: Vec<PipelinePlan>,
+    n_requests: usize,
+    round_size: usize,
+    drift: &DriftScript,
+    controller: &mut dyn AdaptController,
+    mut exec: impl FnMut(&RoundExec) -> anyhow::Result<RoundResult>,
+) -> anyhow::Result<AdaptationTrace> {
+    anyhow::ensure!(!initial_plans.is_empty(), "no pipeline replicas");
+    let round_size = round_size.max(1);
+    let mut believed = nominal.clone();
+    let mut plans = initial_plans;
+    let mut t_offset = 0.0f64;
+    let mut served = 0usize;
+    let mut round = 0usize;
+    let mut done: Vec<(usize, f64)> = Vec::with_capacity(n_requests);
+    let mut round_ends = Vec::new();
+    let mut replans = Vec::new();
+    // Profiles/observations are a pure function of (plans, believed,
+    // actual); they only change when a drift event comes due (the due
+    // set is monotone in `served`, so its count identifies it) or a
+    // swap updates the plans/belief. Everything else reuses the cache —
+    // a long steady-state session pays one cost-model walk, not one
+    // per round.
+    let mut cache: Option<(usize, Vec<Vec<StageProfile>>, Vec<StageObservation>)> = None;
+    while served < n_requests {
+        let end = (served + round_size).min(n_requests);
+        let due = drift.events.iter().filter(|e| e.at_request <= served).count();
+        if cache.as_ref().map(|(d, _, _)| *d) != Some(due) {
+            let actual = drift.cluster_at(nominal, served);
+            let (p, o) = round_profiles(g, &plans, &believed, &actual);
+            cache = Some((due, p, o));
+        }
+        let cached = cache.as_ref().unwrap();
+        let mut obs = cached.2.clone();
+        let res = exec(&RoundExec {
+            round,
+            range: served..end,
+            plans: &plans,
+            believed: &believed,
+            profiles: &cached.1,
+            t_offset,
+        })?;
+        for o in obs.iter_mut() {
+            if let Some(st) = res.stage_service.get(o.replica).and_then(|v| v.get(o.stage)) {
+                o.engine = *st;
+            }
+        }
+        t_offset = t_offset.max(res.makespan);
+        done.extend(res.done);
+        round_ends.push(t_offset);
+        served = end;
+        if served < n_requests {
+            if let Some(swap) = controller.observe_round(round, &plans, &believed, &obs) {
+                replans.push(ReplanRecord {
+                    round,
+                    after_requests: served,
+                    device: swap.device,
+                    capacity_scale: swap.capacity_scale,
+                    strategy: swap.strategy,
+                });
+                plans = swap.plans;
+                believed = swap.believed;
+                cache = None; // plans/belief changed: profiles are stale
+            }
+        }
+        round += 1;
+    }
+    Ok(AdaptationTrace {
+        done,
+        round_ends,
+        replans,
+        rounds: round,
+        final_plans: plans,
+        final_believed: believed,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modelzoo;
+    use crate::partition;
+    use crate::pipeline;
+
+    #[test]
+    fn drift_script_composes_and_ignores_garbage() {
+        let c = Cluster::homogeneous_rpi(3, 1.0);
+        let script = DriftScript {
+            events: vec![
+                DriftEvent { at_request: 4, device: 1, factor: 0.5 },
+                DriftEvent { at_request: 8, device: 1, factor: 0.5 },
+                DriftEvent { at_request: 0, device: 99, factor: 0.1 }, // out of range
+                DriftEvent { at_request: 0, device: 0, factor: f64::NAN }, // invalid
+                DriftEvent { at_request: 0, device: 0, factor: 0.0 },  // invalid
+            ],
+        };
+        let before = script.cluster_at(&c, 3);
+        assert_eq!(before.devices[1].flops.to_bits(), c.devices[1].flops.to_bits());
+        assert_eq!(before.devices[0].flops.to_bits(), c.devices[0].flops.to_bits());
+        let mid = script.cluster_at(&c, 4);
+        assert_eq!(mid.devices[1].flops.to_bits(), (c.devices[1].flops * 0.5).to_bits());
+        let late = script.cluster_at(&c, 20);
+        assert_eq!(late.devices[1].flops.to_bits(), (c.devices[1].flops * 0.25).to_bits());
+    }
+
+    #[test]
+    fn round_profiles_split_belief_from_truth() {
+        let g = modelzoo::synthetic_chain(8);
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        let c = Cluster::homogeneous_rpi(3, 1.0);
+        let plan = pipeline::plan(&g, &pieces, &c, f64::INFINITY).unwrap();
+        let plans = [plan];
+        // No drift: observed == expected everywhere, profiles match the
+        // believed cost model exactly.
+        let (profiles, obs) = round_profiles(&g, &plans, &c, &c);
+        assert_eq!(profiles[0].len(), plans[0].stages.len());
+        for o in &obs {
+            assert_eq!(o.expected.to_bits(), o.observed.to_bits());
+            assert_eq!(o.expected_t_comp.len(), o.devices.len());
+        }
+        // Drift one device to half speed: its stage's observed total
+        // grows, every untouched device's compute stays bit-identical.
+        let drifted = DriftScript::slowdown(0, 0, 0.5).cluster_at(&c, 0);
+        let (_, obs2) = round_profiles(&g, &plans, &c, &drifted);
+        for (o, o2) in obs.iter().zip(&obs2) {
+            assert_eq!(o2.expected.to_bits(), o.expected.to_bits(), "belief unchanged");
+            for (k, &d) in o2.devices.iter().enumerate() {
+                if d == 0 {
+                    if o.expected_t_comp[k] > 0.0 {
+                        assert_eq!(
+                            o2.observed_t_comp[k].to_bits(),
+                            (2.0 * o.expected_t_comp[k]).to_bits(),
+                            "slowed device doubles"
+                        );
+                    }
+                } else {
+                    assert_eq!(o2.observed_t_comp[k].to_bits(), o.expected_t_comp[k].to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn drive_adaptation_drains_every_round_and_consults_controller() {
+        use crate::engine::{run_pipeline, EngineConfig};
+        let g = modelzoo::synthetic_chain(6);
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        let c = Cluster::homogeneous_rpi(2, 1.0);
+        let plan = pipeline::plan(&g, &pieces, &c, f64::INFINITY).unwrap();
+        let mut rounds_seen = Vec::new();
+        struct Spy<'a>(&'a mut Vec<usize>);
+        impl AdaptController for Spy<'_> {
+            fn observe_round(
+                &mut self,
+                round: usize,
+                _plans: &[PipelinePlan],
+                _believed: &Cluster,
+                obs: &[StageObservation],
+            ) -> Option<PlanSwap> {
+                assert!(obs.iter().all(|o| o.engine.batches > 0), "telemetry attached");
+                self.0.push(round);
+                None
+            }
+        }
+        let trace = drive_adaptation(
+            &g,
+            &c,
+            vec![plan],
+            10,
+            4,
+            &DriftScript::none(),
+            &mut Spy(&mut rounds_seen),
+            |rx| {
+                let arrivals: Vec<f64> = rx.range.clone().map(|_| rx.t_offset).collect();
+                let run = run_pipeline(rx.profiles, &arrivals, &EngineConfig::default());
+                Ok(RoundResult {
+                    done: run.jobs.iter().map(|j| (rx.range.start + j.index, j.done)).collect(),
+                    stage_service: run.stage_service,
+                    makespan: run.report.makespan,
+                })
+            },
+        )
+        .unwrap();
+        // 10 requests in rounds of 4: 3 rounds, controller consulted
+        // after every round but the last.
+        assert_eq!(trace.rounds, 3);
+        assert_eq!(rounds_seen, vec![0, 1]);
+        assert_eq!(trace.done.len(), 10);
+        // Round ends are monotone and spans positive.
+        assert!(trace.round_ends.windows(2).all(|w| w[1] >= w[0]));
+        assert!(trace.round_spans().iter().all(|&s| s > 0.0));
+        let timing = trace.timing(&vec![0.0; 10]);
+        assert_eq!(timing.n, 10);
+        assert!((timing.makespan - trace.round_ends[2]).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,206 @@
+//! Adaptive serving: hot-swap re-planning at round boundaries.
+//!
+//! [`serve_adaptive`] wraps the threaded serving pipeline in the shared
+//! [`crate::adapt::drive_adaptation`] round loop: requests are served in
+//! rounds, every round runs through [`serve_replicated_with_profiles`]
+//! with *actual* (possibly drifted) stage timing under the *believed*
+//! cluster's feature splits, and after each round the
+//! [`AdaptController`] may swap in new replica plans + an updated
+//! believed cluster. Swaps happen at the drain boundary — the next
+//! round's admissions are gated to the previous round's makespan — so
+//! no in-flight request is ever dropped or re-routed mid-pipeline; the
+//! response set is exactly the request set (minus explicit sheds).
+//!
+//! The analytic twin is [`crate::sim::simulate_adaptive`]; both drive
+//! the identical engine pass per round, so their timelines agree to
+//! floating-point noise under the same drift script and controller
+//! policy (pinned by `rust/tests/adaptation.rs`).
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use super::compute::Compute;
+use super::serve::{serve_replicated_with_profiles, Request, Response, ServeOptions};
+use crate::adapt::{
+    drive_adaptation, AdaptController, DriftScript, ReplanRecord, RoundResult,
+};
+use crate::cluster::Cluster;
+use crate::engine::summarize;
+use crate::graph::ModelGraph;
+use crate::pipeline::{PipelinePlan, PlannerStats};
+
+/// Outcome of an adaptive serving run: the merged serving statistics
+/// plus the adaptation trace.
+#[derive(Debug)]
+pub struct AdaptiveServeReport {
+    /// All responses across every round, sorted by id; latencies are
+    /// measured against the requests' *original* submit times.
+    pub responses: Vec<Response>,
+    pub makespan: f64,
+    pub period: f64,
+    pub throughput: f64,
+    pub mean_latency: f64,
+    pub p50_latency: f64,
+    pub p95_latency: f64,
+    /// Ids shed by admission control across all rounds.
+    pub rejected: Vec<u64>,
+    /// Re-plans executed (round, device, estimated scale, strategy).
+    pub replans: Vec<ReplanRecord>,
+    pub rounds: usize,
+    /// Absolute virtual drain time of each round.
+    pub round_ends: Vec<f64>,
+    /// Planner counters of the adaptation session (filled by the
+    /// deploy facade, which owns the shared `PlanContext`).
+    pub planner: Option<PlannerStats>,
+    pub wall_secs: f64,
+}
+
+/// Serve `requests` through `plans` in rounds of `round_size`, injecting
+/// `drift` and letting `controller` re-plan at round boundaries. See the
+/// module docs for the hot-swap semantics.
+#[allow(clippy::too_many_arguments)] // the adaptation loop genuinely has this many axes
+pub fn serve_adaptive(
+    g: &ModelGraph,
+    nominal: &Cluster,
+    plans: &[PipelinePlan],
+    compute: &dyn Compute,
+    requests: Vec<Request>,
+    opts: &ServeOptions,
+    round_size: usize,
+    drift: &DriftScript,
+    controller: &mut dyn AdaptController,
+) -> anyhow::Result<AdaptiveServeReport> {
+    let wall_start = Instant::now();
+    let n = requests.len();
+    let orig_submit: Vec<f64> = requests.iter().map(|r| r.t_submit).collect();
+    let id_to_idx: HashMap<u64, usize> =
+        requests.iter().enumerate().map(|(i, r)| (r.id, i)).collect();
+    anyhow::ensure!(id_to_idx.len() == n, "request ids must be unique");
+    let mut slots: Vec<Option<Request>> = requests.into_iter().map(Some).collect();
+
+    let mut responses: Vec<Response> = Vec::with_capacity(n);
+    let mut rejected: Vec<u64> = Vec::new();
+    let trace = drive_adaptation(
+        g,
+        nominal,
+        plans.to_vec(),
+        n,
+        round_size,
+        drift,
+        controller,
+        |rx| {
+            // This round's requests, admissions gated to the previous
+            // round's drain time (the hot-swap boundary).
+            let chunk: Vec<Request> = rx
+                .range
+                .clone()
+                .map(|i| {
+                    let mut r = slots[i].take().expect("request dispatched twice");
+                    r.t_submit = r.t_submit.max(rx.t_offset);
+                    r
+                })
+                .collect();
+            let report = serve_replicated_with_profiles(
+                g,
+                rx.plans,
+                rx.believed,
+                Some(rx.profiles),
+                compute,
+                chunk,
+                opts,
+            )?;
+            let mut done = Vec::with_capacity(report.responses.len());
+            let mut round_makespan = rx.t_offset;
+            for resp in report.responses {
+                let idx = id_to_idx[&resp.id];
+                round_makespan = round_makespan.max(resp.t_done);
+                done.push((idx, resp.t_done));
+                responses.push(Response {
+                    latency: resp.t_done - orig_submit[idx],
+                    ..resp
+                });
+            }
+            rejected.extend(report.rejected);
+            // Regroup the flat stage metrics into (replica, stage).
+            let mut stage_service: Vec<Vec<crate::engine::ServiceStats>> =
+                rx.plans.iter().map(|p| vec![Default::default(); p.stages.len()]).collect();
+            for m in &report.stage_metrics {
+                stage_service[m.replica][m.stage] = m.observed;
+            }
+            Ok(RoundResult { done, stage_service, makespan: round_makespan })
+        },
+    )?;
+
+    responses.sort_by_key(|r| r.id);
+    let mut done_times: Vec<f64> = responses.iter().map(|r| r.t_done).collect();
+    done_times.sort_by(f64::total_cmp);
+    let latencies: Vec<f64> = responses.iter().map(|r| r.latency).collect();
+    let m = summarize(&done_times, &latencies);
+    Ok(AdaptiveServeReport {
+        responses,
+        makespan: m.makespan,
+        period: m.period,
+        throughput: m.throughput,
+        mean_latency: m.mean_latency,
+        p50_latency: m.p50_latency,
+        p95_latency: m.p95_latency,
+        rejected,
+        replans: trace.replans,
+        rounds: trace.rounds,
+        round_ends: trace.round_ends,
+        planner: None,
+        wall_secs: wall_start.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapt::FixedController;
+    use crate::coordinator::NullCompute;
+    use crate::modelzoo;
+    use crate::partition;
+    use crate::pipeline;
+    use crate::runtime::Tensor;
+
+    fn requests(g: &ModelGraph, n: usize) -> Vec<Request> {
+        let (c, h, w) = g.input_shape;
+        (0..n as u64)
+            .map(|id| Request { id, input: Tensor::zeros(vec![c, h, w]), t_submit: 0.0 })
+            .collect()
+    }
+
+    #[test]
+    fn fixed_controller_matches_chunked_serving() {
+        // No drift, no controller action: the adaptive path is plain
+        // round-chunked serving — every request answered, rounds drain
+        // monotonically, latencies measured from the original submits.
+        let g = modelzoo::synthetic_chain(6);
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        let c = Cluster::homogeneous_rpi(3, 1.0);
+        let plan = pipeline::plan(&g, &pieces, &c, f64::INFINITY).unwrap();
+        let rep = serve_adaptive(
+            &g,
+            &c,
+            std::slice::from_ref(&plan),
+            &NullCompute,
+            requests(&g, 10),
+            &ServeOptions::default(),
+            4,
+            &DriftScript::none(),
+            &mut FixedController,
+        )
+        .unwrap();
+        assert_eq!(rep.responses.len(), 10);
+        assert!(rep.rejected.is_empty());
+        assert!(rep.replans.is_empty());
+        assert_eq!(rep.rounds, 3);
+        assert_eq!(rep.round_ends.len(), 3);
+        assert!(rep.round_ends.windows(2).all(|w| w[1] > w[0]));
+        assert!((rep.makespan - rep.round_ends[2]).abs() < 1e-12);
+        // FIFO per id, positive latencies.
+        for r in &rep.responses {
+            assert!(r.latency > 0.0);
+        }
+    }
+}

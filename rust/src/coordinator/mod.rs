@@ -19,9 +19,14 @@
 //! the schedule and the numerics at once; wall-clock time is also
 //! recorded for the §Perf work.
 
+mod adaptive;
 mod compute;
 mod serve;
 
 pub use crate::engine::AdmissionPolicy;
+pub use adaptive::{serve_adaptive, AdaptiveServeReport};
 pub use compute::{Compute, NativeCompute, NullCompute, PjrtCompute};
-pub use serve::{serve, serve_replicated, Request, Response, ServeOptions, ServeReport};
+pub use serve::{
+    serve, serve_replicated, serve_replicated_with_profiles, Request, Response, ServeOptions,
+    ServeReport, StageServiceMetrics,
+};

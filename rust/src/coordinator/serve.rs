@@ -20,7 +20,7 @@ use std::time::Instant;
 use super::compute::Compute;
 use crate::cluster::Cluster;
 use crate::cost::{segment_sinks, segment_tiles, stage_cost, stage_splits, LayerTile};
-use crate::engine::{run_pipeline, summarize, EngineConfig, StageClock, StageProfile};
+use crate::engine::{run_pipeline, summarize, EngineConfig, ServiceStats, StageClock, StageProfile};
 use crate::graph::{LayerId, ModelGraph};
 use crate::pipeline::PipelinePlan;
 use crate::runtime::Tensor;
@@ -75,8 +75,27 @@ pub struct ServeReport {
     /// Ids shed by admission control (empty unless
     /// `AdmissionPolicy::Shed` with a bounded queue).
     pub rejected: Vec<u64>,
+    /// Per-stage observed service telemetry: the engine's per-item
+    /// service EWMAs with each stage's device roster and the believed
+    /// cluster's single-frame prediction attached — the signal the
+    /// online-adaptation loop's drift detector consumes.
+    pub stage_metrics: Vec<StageServiceMetrics>,
     /// Wall-clock seconds the run took on this host.
     pub wall_secs: f64,
+}
+
+/// One (replica, stage)'s observed-vs-planned service summary.
+#[derive(Debug, Clone)]
+pub struct StageServiceMetrics {
+    pub replica: usize,
+    pub stage: usize,
+    /// Cluster device indices of the stage, roster order.
+    pub devices: Vec<usize>,
+    /// Single-frame stage service the believed cluster's cost model
+    /// predicts (Eq. 11).
+    pub planned_service: f64,
+    /// Engine-observed service telemetry (per-item EWMA / mean).
+    pub observed: ServiceStats,
 }
 
 /// One batch member travelling between stage workers. Tensors are
@@ -155,6 +174,27 @@ pub fn serve_replicated(
     requests: Vec<Request>,
     opts: &ServeOptions,
 ) -> anyhow::Result<ServeReport> {
+    serve_replicated_with_profiles(g, plans, cluster, None, compute, requests, opts)
+}
+
+/// [`serve_replicated`] with an optional *timing override*: when
+/// `timing` is `Some`, the engine pass and every stage worker's clock
+/// run on the provided stage profiles instead of the ones the cost
+/// model derives from `cluster`, while feature splits and tensor
+/// numerics still follow `cluster` (the *believed* capacities). This is
+/// the online-adaptation loop's injection point: the adaptive driver
+/// hands in profiles computed from the drifted cluster under the plan's
+/// splits, so served timings reflect the drift the plan doesn't yet
+/// know about — and `ServeReport::stage_metrics` reports the gap.
+pub fn serve_replicated_with_profiles(
+    g: &ModelGraph,
+    plans: &[PipelinePlan],
+    cluster: &Cluster,
+    timing: Option<&[Vec<StageProfile>]>,
+    compute: &dyn Compute,
+    requests: Vec<Request>,
+    opts: &ServeOptions,
+) -> anyhow::Result<ServeReport> {
     anyhow::ensure!(!plans.is_empty(), "no pipeline replicas");
     // Replicas must own disjoint devices: overlapping plans would
     // double-book a device's virtual time and report physically
@@ -179,8 +219,11 @@ pub fn serve_replicated(
     let wall_start = Instant::now();
 
     // Per-replica stage profiles from the Eq. 7-11 cost model — the
-    // exact inputs the simulator hands the engine.
-    let profiles: Vec<Vec<StageProfile>> = plans
+    // exact inputs the simulator hands the engine. These are the
+    // *believed* profiles; the timing override (if any) replaces them
+    // on the clocks but they remain the plan's expectation in
+    // `stage_metrics`.
+    let believed: Vec<Vec<StageProfile>> = plans
         .iter()
         .map(|plan| {
             plan.stages
@@ -196,6 +239,24 @@ pub fn serve_replicated(
                 .collect()
         })
         .collect();
+    if let Some(t) = timing {
+        anyhow::ensure!(
+            t.len() == plans.len(),
+            "timing override covers {} replicas, plans have {}",
+            t.len(),
+            plans.len()
+        );
+        for (ri, (tp, plan)) in t.iter().zip(plans).enumerate() {
+            anyhow::ensure!(
+                tp.len() == plan.stages.len(),
+                "timing override replica {ri}: {} profiles for {} stages",
+                tp.len(),
+                plan.stages.len()
+            );
+        }
+    }
+    let profiles: Vec<Vec<StageProfile>> =
+        timing.map(|t| t.to_vec()).unwrap_or_else(|| believed.clone());
     let live_after: Vec<Vec<HashSet<LayerId>>> =
         plans.iter().map(|plan| live_sets(g, plan)).collect();
 
@@ -205,6 +266,20 @@ pub fn serve_replicated(
     let schedule = run_pipeline(&profiles, &arrivals, opts);
     let rejected: Vec<u64> = schedule.rejected.iter().map(|&i| requests[i].id).collect();
     let n_served = schedule.jobs.len();
+    let stage_metrics: Vec<StageServiceMetrics> = plans
+        .iter()
+        .enumerate()
+        .flat_map(|(ri, plan)| {
+            plan.stages.iter().enumerate().map(move |(si, s)| (ri, si, s))
+        })
+        .map(|(ri, si, s)| StageServiceMetrics {
+            replica: ri,
+            stage: si,
+            devices: s.devices.clone(),
+            planned_service: believed[ri][si].single(),
+            observed: schedule.stage_service[ri][si],
+        })
+        .collect();
     let mut inputs: Vec<Option<Request>> = requests.into_iter().map(Some).collect();
 
     std::thread::scope(|scope| -> anyhow::Result<ServeReport> {
@@ -392,6 +467,7 @@ pub fn serve_replicated(
             p50_latency: m.p50_latency,
             p95_latency: m.p95_latency,
             rejected,
+            stage_metrics,
             wall_secs: wall_start.elapsed().as_secs_f64(),
         })
     })
@@ -673,6 +749,73 @@ mod tests {
         );
         // 12 backlogged requests in batches of 4: three batches.
         assert_eq!(predicted.batches.len(), 3);
+    }
+
+    #[test]
+    fn timing_override_shifts_clocks_not_numerics() {
+        // The adaptation loop's injection point: drifted profiles slow
+        // the virtual timeline, but tensors still flow identically.
+        let g = modelzoo::synthetic_chain(6);
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        let c = Cluster::homogeneous_rpi(3, 1.0);
+        let plan = pipeline::plan(&g, &pieces, &c, f64::INFINITY).unwrap();
+        let compute = NativeCompute { weights: model_weights(&g, 7) };
+        let base = serve(&g, &plan, &c, &compute, requests(&g, 6)).unwrap();
+        let slowed: Vec<Vec<StageProfile>> = vec![plan
+            .stages
+            .iter()
+            .map(|s| {
+                let devs: Vec<&crate::cluster::Device> =
+                    s.devices.iter().map(|&i| &c.devices[i]).collect();
+                let p = StageProfile::from_stage_cost(
+                    &stage_cost(&g, &s.layers, &devs, &c.network),
+                    &c.network,
+                );
+                StageProfile { fixed: 2.0 * p.fixed, per_item: 2.0 * p.per_item }
+            })
+            .collect()];
+        let over = serve_replicated_with_profiles(
+            &g,
+            std::slice::from_ref(&plan),
+            &c,
+            Some(&slowed),
+            &compute,
+            requests(&g, 6),
+            &ServeOptions::default(),
+        )
+        .unwrap();
+        for (a, b) in base.responses.iter().zip(&over.responses) {
+            assert!(a.output.max_abs_diff(&b.output) < 1e-6, "numerics must not change");
+        }
+        // Backlogged at t = 0, every service time doubled: the whole
+        // timeline scales by exactly 2.
+        assert!(
+            (over.makespan - 2.0 * base.makespan).abs() <= 1e-9 * over.makespan,
+            "doubled profiles: {} vs 2x{}",
+            over.makespan,
+            base.makespan
+        );
+        // stage_metrics report the gap: planned is still the believed
+        // cluster's prediction, observed EWMA is twice it.
+        assert_eq!(over.stage_metrics.len(), plan.stages.len());
+        for m in &over.stage_metrics {
+            assert!(m.observed.batches > 0);
+            assert!(
+                (m.observed.ewma_per_item - 2.0 * m.planned_service).abs()
+                    <= 1e-12 * m.planned_service.max(1.0),
+                "stage {}: observed {} vs planned {}",
+                m.stage,
+                m.observed.ewma_per_item,
+                m.planned_service
+            );
+        }
+        // Without an override, observed matches planned.
+        for m in &base.stage_metrics {
+            assert!(
+                (m.observed.ewma_per_item - m.planned_service).abs()
+                    <= 1e-12 * m.planned_service.max(1.0)
+            );
+        }
     }
 
     #[test]

@@ -23,4 +23,6 @@ pub use flops::{
     halo_rows, ideal_segment_flops, layer_flops, piece_redundancy, segment_flops, segment_sinks,
     total_flops,
 };
-pub use stage::{pipeline_cost, stage_cost, stage_splits, PipelineCost, StageCost};
+pub use stage::{
+    pipeline_cost, stage_cost, stage_cost_as_planned, stage_splits, PipelineCost, StageCost,
+};

@@ -80,7 +80,25 @@ pub fn stage_cost(
     devices: &[&Device],
     network: &Network,
 ) -> StageCost {
+    stage_cost_as_planned(g, segment, devices, devices, network)
+}
+
+/// [`stage_cost`] with the *feature partition* taken from `planned`
+/// capacities but execution timed on `actual` devices. This is the
+/// online-adaptation loop's drifted-cluster evaluation: when a device
+/// slows down mid-run, the tile rows it was assigned stay fixed (the
+/// plan's capacity-proportional splits), only its compute time
+/// stretches. With `planned == actual` this is exactly [`stage_cost`].
+pub fn stage_cost_as_planned(
+    g: &ModelGraph,
+    segment: &[LayerId],
+    planned: &[&Device],
+    actual: &[&Device],
+    network: &Network,
+) -> StageCost {
+    let devices = planned;
     assert!(!devices.is_empty());
+    assert_eq!(devices.len(), actual.len(), "planned/actual rosters must match");
     let sinks = segment_sinks(g, segment);
     let weights: Vec<f64> = devices.iter().map(|d| d.flops / d.alpha).collect();
     let n = devices.len();
@@ -103,7 +121,7 @@ pub fn stage_cost(
         let tiles = segment_tiles(g, segment, sink_out);
         let th = segment_flops(g, segment, &tiles);
         flops[k] = th;
-        t_comp[k] = devices[k].t_comp(th);
+        t_comp[k] = actual[k].t_comp(th);
         // Feature traffic φ(F_in^k) + φ(F_out^k) (Eq. 9): feed slabs in,
         // sink slabs out. Device 0 acts as the stage leader d_f.
         let set: std::collections::HashSet<_> = segment.iter().copied().collect();
@@ -254,6 +272,28 @@ mod tests {
         let t1 = pc.stage_costs[1].total;
         assert!((pc.period - t0.max(t1)).abs() < 1e-12);
         assert!((pc.latency - (t0 + t1)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn as_planned_keeps_splits_and_stretches_compute() {
+        let g = vggish();
+        let c = Cluster::homogeneous_rpi(2, 1.0);
+        let planned: Vec<&Device> = c.devices.iter().collect();
+        let mut slowed = c.devices.clone();
+        slowed[1].flops *= 0.5;
+        let actual: Vec<&Device> = slowed.iter().collect();
+        let nominal = stage_cost(&g, &[1, 2, 3], &planned, &c.network);
+        let drifted = stage_cost_as_planned(&g, &[1, 2, 3], &planned, &actual, &c.network);
+        // Identical feature partition: same FLOPs, bytes and comm.
+        assert_eq!(drifted.flops, nominal.flops);
+        assert_eq!(drifted.feature_bytes, nominal.feature_bytes);
+        assert_eq!(drifted.t_comm, nominal.t_comm);
+        // Device 0 unchanged, device 1 exactly twice as slow.
+        assert_eq!(drifted.t_comp[0].to_bits(), nominal.t_comp[0].to_bits());
+        assert_eq!((2.0 * nominal.t_comp[1]).to_bits(), drifted.t_comp[1].to_bits());
+        // planned == actual reduces to stage_cost bit-for-bit.
+        let same = stage_cost_as_planned(&g, &[1, 2, 3], &planned, &planned, &c.network);
+        assert_eq!(same.total.to_bits(), nominal.total.to_bits());
     }
 
     #[test]

@@ -1,0 +1,483 @@
+//! The online-adaptation *policy*: drift detection + metrics-driven
+//! re-planning through the shared [`PlanContext`].
+//!
+//! The mechanism (drift scripts, round loop, hot swap) lives in
+//! [`crate::adapt`]; this module decides *when* to re-plan and *how*:
+//!
+//! * [`AdaptPolicy`] — thresholds, patience, cooldown, re-plan budget.
+//! * [`OnlineAdapter`] — the [`AdaptController`] implementation: it
+//!   EWMAs each device's observed/expected compute-time ratio (the
+//!   per-device self-reports, rescaled by the engine's *measured*
+//!   stage service so a diverging backend drives detection), and when
+//!   one device stays over the slowdown threshold for `patience`
+//!   consecutive rounds, scales that device's *effective FLOPs* by the
+//!   inverse ratio and re-plans on the re-estimated cluster.
+//!
+//! Re-planning is **incremental**: the adapter owns one [`PlanContext`]
+//! for its whole serving session, so the Algorithm-1 piece chain and
+//! the cost oracle's [`PieceMeta`] aggregates are computed at most once
+//! — a drift-triggered re-plan never re-partitions (the
+//! `oracle-build-once` counters in [`PlannerStats`] verify this, and
+//! `rust/tests/adaptation.rs` pins it). The cheap first resort is the
+//! oracle-backed [`rebalance`] local search on the existing stage set;
+//! when the rebalanced period misses the capacity-scaled expectation,
+//! the full Algorithm-2 DP (+ Algorithm 3) runs on the affected
+//! replica's device group — and whichever of the two candidates yields
+//! the lower period on the re-estimated cluster wins.
+//!
+//! [`rebalance`]: crate::pipeline::rebalance
+//! [`PieceMeta`]: crate::cost::PieceMeta
+
+use crate::adapt::{AdaptController, PlanSwap, ReplanStrategy, StageObservation};
+use crate::cluster::Cluster;
+use crate::engine::Ewma;
+use crate::graph::ModelGraph;
+use crate::pipeline::{self, PipelinePlan, PlanContext, PlannerStats};
+
+/// Knobs of the metrics-driven re-planning policy.
+#[derive(Debug, Clone)]
+pub struct AdaptPolicy {
+    /// Observed/expected compute-time ratio (EWMA) above which a device
+    /// counts as slowed. 1.25 = 25% slower than the plan believes.
+    pub slowdown_ratio: f64,
+    /// Consecutive over-threshold rounds before a re-plan fires —
+    /// "sustained slowdown", not a one-round blip.
+    pub patience: usize,
+    /// Rounds to sit out after a re-plan before detecting again (lets
+    /// the new believed capacities settle the ratios back to ~1).
+    pub cooldown_rounds: usize,
+    /// Hard cap on re-plans per serving session.
+    pub max_replans: usize,
+    /// Smoothing factor of the per-device ratio EWMAs.
+    pub ewma_alpha: f64,
+    /// Requests per adaptation round (the hot-swap granularity).
+    pub round_size: usize,
+    /// `max_iters` handed to the rebalance local search.
+    pub rebalance_iters: usize,
+    /// Accept the rebalanced plan when its period is within this factor
+    /// of the capacity-scaled expectation (`old period × old/new group
+    /// capacity`); otherwise fall back to the full Algorithm-2 DP.
+    /// Setting this to 0 forces the DP fallback on every re-plan.
+    pub rebalance_accept: f64,
+}
+
+impl Default for AdaptPolicy {
+    fn default() -> Self {
+        AdaptPolicy {
+            slowdown_ratio: 1.25,
+            patience: 2,
+            cooldown_rounds: 1,
+            max_replans: 4,
+            ewma_alpha: 0.5,
+            round_size: 8,
+            rebalance_iters: 50,
+            rebalance_accept: 1.05,
+        }
+    }
+}
+
+/// The drift detector + re-planner. One per serving session; owns the
+/// session's shared [`PlanContext`].
+pub struct OnlineAdapter<'g> {
+    g: &'g ModelGraph,
+    ctx: PlanContext<'g>,
+    policy: AdaptPolicy,
+    diameter: usize,
+    dc_parts: usize,
+    t_lim: f64,
+    /// Per-device EWMA of the observed/expected compute-time ratio.
+    ratio: Vec<Ewma>,
+    /// Per-device consecutive rounds over the slowdown threshold.
+    streak: Vec<usize>,
+    cooldown: usize,
+    replans_done: usize,
+}
+
+impl<'g> OnlineAdapter<'g> {
+    /// `diameter`/`dc_parts` must match the configuration the plans were
+    /// built with — the piece chain re-derived here has to be the chain
+    /// the plans' stage intervals index into.
+    pub fn new(
+        g: &'g ModelGraph,
+        policy: AdaptPolicy,
+        diameter: usize,
+        dc_parts: usize,
+        t_lim: f64,
+    ) -> OnlineAdapter<'g> {
+        OnlineAdapter {
+            g,
+            ctx: PlanContext::new(g),
+            policy,
+            diameter,
+            dc_parts: dc_parts.max(1),
+            t_lim,
+            ratio: Vec::new(),
+            streak: Vec::new(),
+            cooldown: 0,
+            replans_done: 0,
+        }
+    }
+
+    /// Planner counters of this adaptation session: across every
+    /// re-plan, `partition_runs` and `oracle_builds` stay ≤ 1 — the
+    /// shared-context, no-re-partition invariant.
+    pub fn planner_stats(&self) -> PlannerStats {
+        self.ctx.stats()
+    }
+
+    pub fn replans(&self) -> usize {
+        self.replans_done
+    }
+
+    /// Re-plan the replica owning `device` on the re-estimated cluster:
+    /// rebalance first, full DP as fallback, better period wins.
+    fn replan(
+        &self,
+        plans: &[PipelinePlan],
+        believed: &Cluster,
+        estimated: &Cluster,
+        device: usize,
+    ) -> Option<(Vec<PipelinePlan>, ReplanStrategy)> {
+        let pieces = self.ctx.pieces(self.diameter, self.dc_parts, None).ok()?;
+        let meta = self.ctx.meta(self.diameter, self.dc_parts, &pieces);
+        let ri = plans
+            .iter()
+            .position(|p| p.stages.iter().any(|s| s.devices.contains(&device)))?;
+        // The re-derived chain must be the one the plan's stage
+        // intervals index into — a plan whose artifact predates the
+        // recorded `dc_parts` (or was built under a partition budget)
+        // could re-derive a different chain, and re-planning against it
+        // would swap in stages from the wrong partition. Decline to
+        // adapt rather than adapt wrongly. (Same validator the
+        // rebalance boundary-shift move gates on.)
+        if !pipeline::stages_match_chain(&pieces, &plans[ri].stages) {
+            return None;
+        }
+        let group: Vec<usize> = {
+            let mut v: Vec<usize> =
+                plans[ri].stages.iter().flat_map(|s| s.devices.clone()).collect();
+            v.sort_unstable();
+            v
+        };
+
+        // Cheap first resort: oracle-backed local search on the current
+        // stage set (shares the context's piece chain + aggregates).
+        let mut rebalanced = plans[ri].clone();
+        let rep = pipeline::rebalance_with_meta(
+            self.g,
+            &pieces,
+            &meta,
+            estimated,
+            &mut rebalanced,
+            self.policy.rebalance_iters,
+        );
+
+        // Sufficiency target: the pre-drift period scaled by the
+        // replica group's capacity loss — roughly what a fresh plan on
+        // the re-estimated group could achieve.
+        let cap = |c: &Cluster| -> f64 {
+            group.iter().map(|&i| c.devices[i].flops / c.devices[i].alpha).sum()
+        };
+        let old_period = plans[ri].cost(self.g, believed).period;
+        let target = old_period * cap(believed) / cap(estimated);
+        let mut out = plans.to_vec();
+        let outcome = if rep.period_after <= target * self.policy.rebalance_accept {
+            out[ri] = rebalanced;
+            Some((out, ReplanStrategy::Rebalance))
+        } else {
+            // Fallback: full Algorithm-2 DP (+ Algorithm 3) on the
+            // replica's device group, still through the shared chain +
+            // oracle meta.
+            let sub = Cluster::new(
+                group.iter().map(|&i| estimated.devices[i].clone()).collect(),
+                estimated.network,
+            );
+            match pipeline::plan_with_meta(self.g, &pieces, &meta, &sub, self.t_lim) {
+                Ok((mut dp_plan, stats)) => {
+                    self.ctx.note_dp(&stats);
+                    for s in &mut dp_plan.stages {
+                        for d in &mut s.devices {
+                            *d = group[*d];
+                        }
+                    }
+                    let dp_period = dp_plan.cost(self.g, estimated).period;
+                    if dp_period <= rep.period_after + 1e-15 {
+                        out[ri] = dp_plan;
+                        Some((out, ReplanStrategy::FullDp))
+                    } else {
+                        out[ri] = rebalanced;
+                        Some((out, ReplanStrategy::Rebalance))
+                    }
+                }
+                // DP infeasible (e.g. a t_lim no plan on the weakened
+                // group satisfies): keep whatever rebalance recovered.
+                Err(_) => {
+                    if rep.period_after < rep.period_before {
+                        out[ri] = rebalanced;
+                        Some((out, ReplanStrategy::Rebalance))
+                    } else {
+                        None
+                    }
+                }
+            }
+        };
+        if outcome.is_some() {
+            self.ctx.note_replan(rep.moves);
+        }
+        outcome
+    }
+}
+
+impl AdaptController for OnlineAdapter<'_> {
+    fn observe_round(
+        &mut self,
+        _round: usize,
+        plans: &[PipelinePlan],
+        believed: &Cluster,
+        obs: &[StageObservation],
+    ) -> Option<PlanSwap> {
+        let n = believed.len();
+        if self.ratio.len() != n {
+            self.ratio = vec![Ewma::new(self.policy.ewma_alpha); n];
+            self.streak = vec![0; n];
+        }
+        // Per-device observed/expected compute ratio this round (max
+        // over the stages a device appears in — it appears in exactly
+        // one for disjoint-replica plans). The per-device self-reports
+        // are rescaled by the *engine-measured* stage service: the
+        // measured per-item mean is normalized back to a single-frame
+        // equivalent through the affine model (`mean = fixed·b/i +
+        // per_item` → `single = mean + fixed·(1 − b/i)`) and divided by
+        // the profile the engine was driven with. With a backend whose
+        // measured times diverge from the cost model, that measured
+        // signal is what moves the detector; in virtual-time serving
+        // the two agree to floating-point noise, and the deadband
+        // pins the scale at exactly 1 so capacity estimates stay exact.
+        let mut round_ratio = vec![f64::NAN; n];
+        for o in obs {
+            let scale = if o.engine.items > 0 && o.observed_profile.single() > 0.0 {
+                let mix = o.engine.batches as f64 / o.engine.items as f64;
+                let measured_single =
+                    o.engine.mean_per_item + o.observed_profile.fixed * (1.0 - mix);
+                let s = measured_single / o.observed_profile.single();
+                if (s - 1.0).abs() > 1e-9 { s } else { 1.0 }
+            } else {
+                1.0
+            };
+            for (k, &d) in o.devices.iter().enumerate() {
+                let (exp, act) = (o.expected_t_comp[k], scale * o.observed_t_comp[k]);
+                if d < n && exp > 0.0 && act.is_finite() && act > 0.0 {
+                    let r = act / exp;
+                    round_ratio[d] = if round_ratio[d].is_nan() { r } else { round_ratio[d].max(r) };
+                }
+            }
+        }
+        for d in 0..n {
+            if !round_ratio[d].is_nan() {
+                self.ratio[d].observe(round_ratio[d]);
+                if self.ratio[d].value() >= self.policy.slowdown_ratio {
+                    self.streak[d] += 1;
+                } else {
+                    self.streak[d] = 0;
+                }
+            }
+        }
+        if self.cooldown > 0 {
+            self.cooldown -= 1;
+            return None;
+        }
+        if self.replans_done >= self.policy.max_replans {
+            return None;
+        }
+        // Worst sustained offender. The EWMA gates *sustainedness*; the
+        // capacity estimate comes from this round's raw measurement —
+        // the EWMA still carries pre-drift samples (healthy rounds seed
+        // it at ~1), and dividing by that blend would permanently
+        // under-correct: the residual ratio would settle just below the
+        // trigger threshold and never re-fire.
+        let device = (0..n)
+            .filter(|&d| self.streak[d] >= self.policy.patience)
+            .max_by(|&a, &b| self.ratio[a].value().total_cmp(&self.ratio[b].value()))?;
+        let measured = round_ratio[device];
+        let ratio =
+            if measured.is_finite() && measured > 0.0 { measured } else { self.ratio[device].value() };
+        let scale = 1.0 / ratio;
+        let mut estimated = believed.clone();
+        estimated.devices[device].flops *= scale;
+        let (new_plans, strategy) = self.replan(plans, believed, &estimated, device)?;
+        self.replans_done += 1;
+        self.cooldown = self.policy.cooldown_rounds;
+        // Fresh detector state for the re-estimated device: under the
+        // new belief its ratio should re-center at ~1.
+        self.ratio[device] = Ewma::new(self.policy.ewma_alpha);
+        self.streak[device] = 0;
+        Some(PlanSwap {
+            plans: new_plans,
+            believed: estimated,
+            device,
+            capacity_scale: scale,
+            strategy,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapt::{round_profiles, DriftScript};
+    use crate::modelzoo;
+    use crate::partition;
+
+    #[test]
+    fn detector_needs_sustained_slowdown_and_estimates_the_factor() {
+        let g = modelzoo::synthetic_chain(10);
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        let c = Cluster::homogeneous_rpi(4, 1.0);
+        let plan = pipeline::plan(&g, &pieces, &c, f64::INFINITY).unwrap();
+        let plans = vec![plan];
+        let policy = AdaptPolicy { patience: 2, ..AdaptPolicy::default() };
+        let mut adapter = OnlineAdapter::new(&g, policy, 5, 1, f64::INFINITY);
+
+        let drifted = DriftScript::slowdown(0, 0, 0.5).cluster_at(&c, 0);
+        let (_, obs) = round_profiles(&g, &plans, &c, &drifted);
+        // Round 0: over threshold but streak 1 < patience — no action.
+        assert!(adapter.observe_round(0, &plans, &c, &obs).is_none());
+        // Round 1: sustained — re-plan fires with an exact estimate.
+        let swap = adapter
+            .observe_round(1, &plans, &c, &obs)
+            .expect("sustained 2x slowdown must trigger");
+        assert_eq!(swap.device, 0);
+        assert!((swap.capacity_scale - 0.5).abs() < 1e-12, "scale {}", swap.capacity_scale);
+        assert_eq!(
+            swap.believed.devices[0].flops.to_bits(),
+            drifted.devices[0].flops.to_bits(),
+            "exact ratio → exact capacity estimate"
+        );
+        assert_eq!(adapter.replans(), 1);
+        // Device conservation across the swap.
+        let mut devs: Vec<usize> =
+            swap.plans.iter().flat_map(|p| p.stages.iter().flat_map(|s| s.devices.clone())).collect();
+        devs.sort_unstable();
+        assert_eq!(devs, (0..c.len()).collect::<Vec<_>>());
+        // The session shared one partition + one oracle build.
+        let st = adapter.planner_stats();
+        assert_eq!(st.partition_runs, 1);
+        assert_eq!(st.oracle_builds, 1);
+        assert_eq!(st.replans, 1);
+    }
+
+    #[test]
+    fn estimate_ignores_healthy_warmup_history() {
+        // Healthy rounds seed the ratio EWMAs at 1.0; the capacity
+        // estimate after a later drift must come from the trigger
+        // round's raw measurement, not the warm-up-polluted blend
+        // (which would yield 1/3.25 instead of 1/4 here and leave the
+        // believed capacity permanently under-corrected).
+        let g = modelzoo::synthetic_chain(10);
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        let c = Cluster::homogeneous_rpi(4, 1.0);
+        let plan = pipeline::plan(&g, &pieces, &c, f64::INFINITY).unwrap();
+        let plans = vec![plan];
+        let policy = AdaptPolicy { patience: 2, ..AdaptPolicy::default() };
+        let mut adapter = OnlineAdapter::new(&g, policy, 5, 1, f64::INFINITY);
+        let (_, healthy) = round_profiles(&g, &plans, &c, &c);
+        let drifted = DriftScript::slowdown(0, 0, 0.25).cluster_at(&c, 0);
+        let (_, slowed) = round_profiles(&g, &plans, &c, &drifted);
+        assert!(adapter.observe_round(0, &plans, &c, &healthy).is_none());
+        assert!(adapter.observe_round(1, &plans, &c, &healthy).is_none());
+        assert!(adapter.observe_round(2, &plans, &c, &slowed).is_none(), "patience 2");
+        let swap = adapter
+            .observe_round(3, &plans, &c, &slowed)
+            .expect("sustained 4x slowdown must trigger");
+        assert!(
+            (swap.capacity_scale - 0.25).abs() < 1e-12,
+            "estimate must use the raw trigger-round ratio, got {}",
+            swap.capacity_scale
+        );
+    }
+
+    #[test]
+    fn measured_engine_divergence_drives_the_detector() {
+        // The analytic self-reports say "healthy", but the engine
+        // *measured* every stage 3× slower than its profile predicts
+        // (what a wall-clock backend under real contention would
+        // report): the measured signal must move the detector.
+        use crate::engine::ServiceStats;
+        let g = modelzoo::synthetic_chain(8);
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        let c = Cluster::homogeneous_rpi(3, 1.0);
+        let plan = pipeline::plan(&g, &pieces, &c, f64::INFINITY).unwrap();
+        let plans = vec![plan];
+        let policy = AdaptPolicy { patience: 1, ..AdaptPolicy::default() };
+        let mut adapter = OnlineAdapter::new(&g, policy, 5, 1, f64::INFINITY);
+        let (_, mut obs) = round_profiles(&g, &plans, &c, &c);
+        for o in obs.iter_mut() {
+            let slow = 3.0 * o.observed_profile.single();
+            o.engine = ServiceStats {
+                batches: 8,
+                items: 8,
+                ewma_per_item: slow,
+                mean_per_item: slow,
+            };
+        }
+        let swap = adapter
+            .observe_round(0, &plans, &c, &obs)
+            .expect("measured 3x divergence must trigger");
+        assert!(
+            swap.capacity_scale < 0.5,
+            "estimated capacity must drop sharply, got {}",
+            swap.capacity_scale
+        );
+    }
+
+    #[test]
+    fn healthy_rounds_never_trigger() {
+        let g = modelzoo::synthetic_chain(8);
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        let c = Cluster::homogeneous_rpi(3, 1.0);
+        let plan = pipeline::plan(&g, &pieces, &c, f64::INFINITY).unwrap();
+        let plans = vec![plan];
+        let mut adapter =
+            OnlineAdapter::new(&g, AdaptPolicy::default(), 5, 1, f64::INFINITY);
+        let (_, obs) = round_profiles(&g, &plans, &c, &c);
+        for round in 0..6 {
+            assert!(adapter.observe_round(round, &plans, &c, &obs).is_none());
+        }
+        assert_eq!(adapter.replans(), 0);
+        // No re-plan → the context was never touched.
+        let st = adapter.planner_stats();
+        assert_eq!(st.partition_runs, 0);
+        assert_eq!(st.oracle_builds, 0);
+    }
+
+    #[test]
+    fn forced_dp_fallback_beats_or_matches_rebalance() {
+        // rebalance_accept = 0 forces the DP fallback; the adapter must
+        // still return the better of the two candidate plans.
+        let g = modelzoo::synthetic_chain(10);
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        let c = Cluster::homogeneous_rpi(4, 1.0);
+        let plan = pipeline::plan(&g, &pieces, &c, f64::INFINITY).unwrap();
+        let plans = vec![plan.clone()];
+        let policy = AdaptPolicy {
+            patience: 1,
+            rebalance_accept: 0.0,
+            ..AdaptPolicy::default()
+        };
+        let mut adapter = OnlineAdapter::new(&g, policy, 5, 1, f64::INFINITY);
+        let drifted = DriftScript::slowdown(0, 1, 0.25).cluster_at(&c, 0);
+        let (_, obs) = round_profiles(&g, &plans, &c, &drifted);
+        let swap = adapter.observe_round(0, &plans, &c, &obs).expect("patience 1 fires");
+        // The swapped plan on the true drifted cluster is no worse than
+        // the stale plan.
+        let stale = plan.cost(&g, &drifted).period;
+        let fresh = swap.plans[0].cost(&g, &drifted).period;
+        assert!(
+            fresh <= stale + 1e-12,
+            "re-planned period {fresh} must not exceed stale {stale}"
+        );
+        let st = adapter.planner_stats();
+        assert_eq!(st.partition_runs, 1);
+        assert_eq!(st.oracle_builds, 1);
+    }
+}

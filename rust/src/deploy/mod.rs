@@ -36,6 +36,13 @@
 //!   "model":   "vgg16",    // display name (the graph below is authoritative)
 //!   "scheme":  "pico",     // registry name that produced the plan
 //!   "diameter": 5,         // Algorithm-1 diameter bound used
+//!   "dc_parts": 1,         // Algorithm-1 divide-and-conquer slices
+//!                          // (additive in v1; readers default to 1 —
+//!                          // an older artifact actually built with
+//!                          // dc_parts > 1 loads fine but declines to
+//!                          // online-adapt: the adapter's chain guard
+//!                          // refuses to re-plan against a chain the
+//!                          // plan's stages don't index into)
 //!   "t_lim":   null,       // Eq. (1) latency cap (null = unconstrained)
 //!   "graph":   { ... },    // full ModelGraph (self-contained: custom
 //!                          // models re-load without the zoo)
@@ -54,8 +61,10 @@
 //! failing loudly. Additive, ignorable fields may ship within a
 //! version.
 
+mod adapt;
 mod scheme;
 
+pub use adapt::{AdaptPolicy, OnlineAdapter};
 pub use scheme::{
     scheme_by_name, scheme_names, BfsScheme, CoEdgeScheme, EarlyFusedScheme, LayerWiseScheme,
     OptimalFusedScheme, PicoScheme, Scheme, SchemeConfig,
@@ -65,10 +74,13 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Duration;
 
+use crate::adapt::DriftScript;
 use crate::baselines::SyncSchedule;
 use crate::cluster::Cluster;
 use crate::config::Config;
-use crate::coordinator::{self, NativeCompute, NullCompute, PjrtCompute, Request, ServeOptions};
+use crate::coordinator::{
+    self, Compute, NativeCompute, NullCompute, PjrtCompute, Request, ServeOptions,
+};
 use crate::error::PicoError;
 use crate::graph::ModelGraph;
 use crate::json::{obj, Value};
@@ -254,6 +266,7 @@ impl DeploymentBuilder {
             model,
             scheme: scheme.name().to_string(),
             diameter: self.scheme_cfg.diameter,
+            dc_parts: self.scheme_cfg.dc_parts.max(1),
             t_lim: self.t_lim,
             graph,
             cluster,
@@ -366,6 +379,10 @@ pub struct DeploymentPlan {
     pub scheme: String,
     /// Algorithm-1 diameter bound the plan was computed with.
     pub diameter: usize,
+    /// Algorithm-1 divide-and-conquer slices (1 = direct). Recorded so
+    /// the online-adaptation loop can re-derive the exact piece chain
+    /// the plan's stage intervals index into.
+    pub dc_parts: usize,
     /// Eq. (1) latency cap (None = unconstrained).
     pub t_lim: Option<f64>,
     pub graph: ModelGraph,
@@ -398,6 +415,7 @@ impl DeploymentPlan {
             model: model.to_string(),
             scheme: "pico".into(),
             diameter: 5,
+            dc_parts: 1,
             t_lim: None,
             graph,
             cluster: Cluster::homogeneous_rpi(n_dev, 1.0),
@@ -430,18 +448,16 @@ impl DeploymentPlan {
         Ok(report)
     }
 
-    /// Execute the plan through the threaded serving coordinator with
-    /// real (or timing-only) tensor computation.
-    pub fn serve(&self, backend: &Backend, cfg: &ServeConfig) -> Result<coordinator::ServeReport, PicoError> {
+    /// Typed pre-validation for the serving paths: structural plan
+    /// defects surface as `InvalidPlan`, so `Internal` stays reserved
+    /// for genuine runtime failures (worker/compute errors).
+    fn validate_pipelined_serving(&self) -> Result<(), PicoError> {
         if self.execution() == ExecutionMode::Synchronous {
             return Err(PicoError::Unsupported(format!(
                 "scheme {:?} is a synchronous baseline: it is simulate-only; serving needs a pipelined plan",
                 self.scheme
             )));
         }
-        // Typed pre-validation: structural plan defects surface as
-        // InvalidPlan here, so Internal below is reserved for genuine
-        // runtime failures (worker/compute errors).
         let mut owned = std::collections::HashSet::new();
         for plan in &self.replicas {
             if plan.stages.is_empty() {
@@ -463,32 +479,16 @@ impl DeploymentPlan {
                 }
             }
         }
-        let requests = match &cfg.requests {
-            Some(r) => r.clone(),
-            None => self.gen_requests(cfg.n_requests, cfg.seed, matches!(backend, Backend::Null)),
-        };
-        let report = match backend {
-            Backend::Null => coordinator::serve_replicated(
-                &self.graph,
-                &self.replicas,
-                &self.cluster,
-                &NullCompute,
-                requests,
-                &cfg.engine,
-            ),
-            Backend::Native { seed } => {
-                let compute = NativeCompute {
-                    weights: crate::runtime::executor::model_weights(&self.graph, *seed),
-                };
-                coordinator::serve_replicated(
-                    &self.graph,
-                    &self.replicas,
-                    &self.cluster,
-                    &compute,
-                    requests,
-                    &cfg.engine,
-                )
-            }
+        Ok(())
+    }
+
+    /// Instantiate the numeric backend for a serving run.
+    fn make_compute(&self, backend: &Backend) -> Result<Box<dyn Compute>, PicoError> {
+        Ok(match backend {
+            Backend::Null => Box::new(NullCompute),
+            Backend::Native { seed } => Box::new(NativeCompute {
+                weights: crate::runtime::executor::model_weights(&self.graph, *seed),
+            }),
             Backend::Pjrt { dir } => {
                 let engine = Arc::new(
                     Engine::cpu().map_err(|e| PicoError::Internal(format!("PJRT engine: {e}")))?,
@@ -496,18 +496,112 @@ impl DeploymentPlan {
                 let artifacts = Arc::new(PipelineArtifacts::load(dir, &self.model).map_err(
                     |e| PicoError::ArtifactMissing(format!("{} artifacts ({e})", self.model)),
                 )?);
-                let compute = PjrtCompute { engine, artifacts };
-                coordinator::serve_replicated(
-                    &self.graph,
-                    &self.replicas,
-                    &self.cluster,
-                    &compute,
-                    requests,
-                    &cfg.engine,
-                )
+                Box::new(PjrtCompute { engine, artifacts })
             }
+        })
+    }
+
+    /// Execute the plan through the threaded serving coordinator with
+    /// real (or timing-only) tensor computation.
+    pub fn serve(&self, backend: &Backend, cfg: &ServeConfig) -> Result<coordinator::ServeReport, PicoError> {
+        self.validate_pipelined_serving()?;
+        let requests = match &cfg.requests {
+            Some(r) => r.clone(),
+            None => self.gen_requests(cfg.n_requests, cfg.seed, matches!(backend, Backend::Null)),
         };
-        report.map_err(|e| PicoError::Internal(format!("{e}")))
+        let compute = self.make_compute(backend)?;
+        coordinator::serve_replicated(
+            &self.graph,
+            &self.replicas,
+            &self.cluster,
+            compute.as_ref(),
+            requests,
+            &cfg.engine,
+        )
+        .map_err(|e| PicoError::Internal(format!("{e}")))
+    }
+
+    /// Serve with the online-adaptation loop closed (paper §5.4):
+    /// requests run in rounds of `policy.round_size`, `drift` injects
+    /// scripted capacity changes, and an [`OnlineAdapter`] — watching
+    /// the engine's observed service metrics — re-plans through one
+    /// shared `PlanContext` and hot-swaps plans at round boundaries
+    /// without dropping in-flight requests. The returned report carries
+    /// the re-plan trace and the session's planner counters (which pin
+    /// the no-re-partition invariant: ≤ 1 partition run and ≤ 1 oracle
+    /// build however many re-plans fire).
+    pub fn serve_adaptive(
+        &self,
+        backend: &Backend,
+        cfg: &ServeConfig,
+        drift: &DriftScript,
+        policy: &AdaptPolicy,
+    ) -> Result<coordinator::AdaptiveServeReport, PicoError> {
+        self.validate_pipelined_serving()?;
+        let requests = match &cfg.requests {
+            Some(r) => r.clone(),
+            None => self.gen_requests(cfg.n_requests, cfg.seed, matches!(backend, Backend::Null)),
+        };
+        let compute = self.make_compute(backend)?;
+        let mut adapter = OnlineAdapter::new(
+            &self.graph,
+            policy.clone(),
+            self.diameter,
+            self.dc_parts,
+            self.t_lim.unwrap_or(f64::INFINITY),
+        );
+        let mut report = coordinator::serve_adaptive(
+            &self.graph,
+            &self.cluster,
+            &self.replicas,
+            compute.as_ref(),
+            requests,
+            &cfg.engine,
+            policy.round_size,
+            drift,
+            &mut adapter,
+        )
+        .map_err(|e| PicoError::Internal(format!("{e}")))?;
+        report.planner = Some(adapter.planner_stats());
+        Ok(report)
+    }
+
+    /// Analytic twin of [`DeploymentPlan::serve_adaptive`]: the same
+    /// round loop, drift injection and re-planning policy driven purely
+    /// through the engine (no threads, no tensors). Pass the serving
+    /// side's `ServeOptions` as `engine` — batching and admission shape
+    /// every round's schedule, so the sim↔serve agreement only holds
+    /// when both run the same engine knobs.
+    pub fn simulate_adaptive(
+        &self,
+        n_requests: usize,
+        engine: &ServeOptions,
+        drift: &DriftScript,
+        policy: &AdaptPolicy,
+    ) -> Result<sim::AdaptiveSimReport, PicoError> {
+        // Same structural gate as the serving paths: a loaded artifact
+        // with out-of-range device indices must fail typed, not panic
+        // inside the round loop's cost evaluation.
+        self.validate_pipelined_serving()?;
+        let mut adapter = OnlineAdapter::new(
+            &self.graph,
+            policy.clone(),
+            self.diameter,
+            self.dc_parts,
+            self.t_lim.unwrap_or(f64::INFINITY),
+        );
+        let mut report = sim::simulate_adaptive(
+            &self.graph,
+            &self.cluster,
+            &self.replicas,
+            n_requests,
+            policy.round_size,
+            engine,
+            drift,
+            &mut adapter,
+        );
+        report.planner = Some(adapter.planner_stats());
+        Ok(report)
     }
 
     fn gen_requests(&self, n: usize, seed: u64, zeros: bool) -> Vec<Request> {
@@ -597,6 +691,7 @@ impl DeploymentPlan {
             ("model", self.model.as_str().into()),
             ("scheme", self.scheme.as_str().into()),
             ("diameter", self.diameter.into()),
+            ("dc_parts", self.dc_parts.into()),
             (
                 "t_lim",
                 match self.t_lim {
@@ -652,6 +747,7 @@ impl DeploymentPlan {
             model: v.get("model").as_str().unwrap_or(&graph.name).to_string(),
             scheme: v.get("scheme").as_str().unwrap_or("pico").to_string(),
             diameter: v.get("diameter").as_usize().unwrap_or(5),
+            dc_parts: v.get("dc_parts").as_usize().unwrap_or(1).max(1),
             t_lim: v.get("t_lim").as_f64(),
             graph,
             cluster,

@@ -17,7 +17,7 @@
 //! [`StageClock`]: super::StageClock
 
 use super::clock::{PipelineClock, StageProfile};
-use super::metrics::{summarize, TimingReport};
+use super::metrics::{summarize, ServiceStats, ServiceTracker, TimingReport};
 
 /// What to do with a request that arrives while the bounded queue is
 /// full.
@@ -84,6 +84,13 @@ pub struct EngineRun {
     pub batches: Vec<BatchPlan>,
     /// Request indices shed by admission control, in arrival order.
     pub rejected: Vec<usize>,
+    /// Per-(replica, stage) observed service telemetry: EWMA and mean of
+    /// the per-item service time each stage actually charged. This is
+    /// the raw signal the online-adaptation loop consumes — when a
+    /// caller drives the engine with drifted stage profiles, the EWMAs
+    /// are what a drift detector compares against the plan's
+    /// expectations.
+    pub stage_service: Vec<Vec<ServiceStats>>,
     pub report: TimingReport,
 }
 
@@ -144,6 +151,8 @@ pub fn run_pipeline(
 
     let mut clocks: Vec<PipelineClock> =
         replicas.iter().map(|p| PipelineClock::new(p.len())).collect();
+    let mut trackers: Vec<Vec<ServiceTracker>> =
+        replicas.iter().map(|p| vec![ServiceTracker::default(); p.len()]).collect();
     let mut in_flight: Vec<f64> = Vec::new();
     let mut jobs: Vec<JobOutcome> = Vec::new();
     let mut batches: Vec<BatchPlan> = Vec::new();
@@ -223,6 +232,9 @@ pub fn run_pipeline(
 
         let k = members.len();
         let done = clocks[r].push(gate, &replicas[r], k);
+        for (s, p) in replicas[r].iter().enumerate() {
+            trackers[r][s].observe(p.service(k), k);
+        }
         let bounded = queue_capacity.is_some();
         for &m in &members {
             jobs.push(JobOutcome {
@@ -247,7 +259,9 @@ pub fn run_pipeline(
     done_times.sort_by(f64::total_cmp);
     let latencies: Vec<f64> = jobs.iter().map(|j| j.done - j.arrival).collect();
     let report = summarize(&done_times, &latencies);
-    EngineRun { jobs, batches, rejected, report }
+    let stage_service: Vec<Vec<ServiceStats>> =
+        trackers.iter().map(|ts| ts.iter().map(|t| t.stats()).collect()).collect();
+    EngineRun { jobs, batches, rejected, stage_service, report }
 }
 
 #[cfg(test)]
@@ -385,6 +399,31 @@ mod tests {
             run.report.makespan,
             solo.report.makespan
         );
+    }
+
+    #[test]
+    fn stage_service_telemetry_tracks_profiles() {
+        // Constant profiles, unit batches: every stage's per-item EWMA
+        // and mean equal its profile time exactly.
+        let profiles = constant(&[0.4, 1.0, 0.2]);
+        let run = run_pipeline(&[profiles], &vec![0.0; 6], &EngineConfig::default());
+        assert_eq!(run.stage_service.len(), 1);
+        assert_eq!(run.stage_service[0].len(), 3);
+        for (s, &want) in [0.4, 1.0, 0.2].iter().enumerate() {
+            let st = run.stage_service[0][s];
+            assert_eq!(st.batches, 6, "stage {s}");
+            assert_eq!(st.items, 6, "stage {s}");
+            assert!((st.ewma_per_item - want).abs() < 1e-12, "stage {s}");
+            assert!((st.mean_per_item - want).abs() < 1e-12, "stage {s}");
+        }
+        // Batched: fixed cost amortizes, per-item service drops.
+        let amortizable = vec![StageProfile { fixed: 0.5, per_item: 0.1 }];
+        let cfg = EngineConfig { max_batch: 4, ..EngineConfig::default() };
+        let run = run_pipeline(&[amortizable], &vec![0.0; 8], &cfg);
+        let st = run.stage_service[0][0];
+        assert_eq!(st.batches, 2);
+        assert_eq!(st.items, 8);
+        assert!((st.mean_per_item - (0.5 + 0.4) / 4.0).abs() < 1e-12);
     }
 
     #[test]

@@ -28,14 +28,24 @@ pub struct TimingReport {
     pub p95_latency: f64,
 }
 
-/// Nearest-rank percentile over an ascending-sorted slice; 0.0 on empty
-/// input.
+/// Linear-interpolated percentile over an ascending-sorted slice
+/// (`p` clamped to [0, 1]); 0.0 on empty input.
+///
+/// The previous nearest-rank rounding made `percentile(v, 0.5)` disagree
+/// with the true median on every even-length input (it picked the upper
+/// of the middle pair); interpolating at rank `(n−1)·p` gives the exact
+/// median for p = 0.5 and the exact extrema for p = 0 and p = 1.
 pub fn percentile(sorted: &[f64], p: f64) -> f64 {
     if sorted.is_empty() {
         return 0.0;
     }
-    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
-    sorted[idx.min(sorted.len() - 1)]
+    let pos = (sorted.len() - 1) as f64 * p.clamp(0.0, 1.0);
+    let lo = pos.floor() as usize;
+    let hi = (pos.ceil() as usize).min(sorted.len() - 1);
+    if lo == hi {
+        return sorted[lo];
+    }
+    sorted[lo] + (sorted[hi] - sorted[lo]) * (pos - lo as f64)
 }
 
 /// Summarize completion times (`done`, ascending) and per-request
@@ -91,6 +101,96 @@ pub fn summarize(done: &[f64], latencies: &[f64]) -> TimingReport {
     }
 }
 
+/// Smoothing factor for the engine's observed-service EWMAs. A fixed
+/// constant (not an `EngineConfig` knob) so every run's telemetry is
+/// comparable; 0.25 weights the last ~4 batches most.
+pub const SERVICE_EWMA_ALPHA: f64 = 0.25;
+
+/// Exponentially weighted moving average. The first sample seeds the
+/// value outright (no zero-bias warm-up), matching how the online
+/// drift detector wants a usable ratio from round one.
+#[derive(Debug, Clone, Copy)]
+pub struct Ewma {
+    alpha: f64,
+    value: f64,
+    samples: usize,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Ewma {
+        assert!((0.0..=1.0).contains(&alpha), "EWMA alpha must be in [0, 1], got {alpha}");
+        Ewma { alpha, value: 0.0, samples: 0 }
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        self.value = if self.samples == 0 { x } else { self.alpha * x + (1.0 - self.alpha) * self.value };
+        self.samples += 1;
+    }
+
+    /// Current average (0.0 before the first sample).
+    pub fn value(&self) -> f64 {
+        self.value
+    }
+
+    pub fn samples(&self) -> usize {
+        self.samples
+    }
+}
+
+/// Snapshot of one pipeline stage's observed service times over a run —
+/// the per-stage telemetry [`run_pipeline`] reports and `ServeReport`
+/// surfaces (per stage, with the stage's device roster attached by the
+/// serving layer).
+///
+/// [`run_pipeline`]: super::run_pipeline
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServiceStats {
+    /// Micro-batches the stage served.
+    pub batches: usize,
+    /// Requests those batches carried.
+    pub items: usize,
+    /// EWMA of per-item service time (`T_s(k) / k` per batch).
+    pub ewma_per_item: f64,
+    /// Mean per-item service time (total busy time / items).
+    pub mean_per_item: f64,
+}
+
+/// Accumulator behind [`ServiceStats`]: one per (replica, stage).
+#[derive(Debug, Clone)]
+pub struct ServiceTracker {
+    ewma: Ewma,
+    batches: usize,
+    items: usize,
+    total: f64,
+}
+
+impl Default for ServiceTracker {
+    fn default() -> Self {
+        ServiceTracker { ewma: Ewma::new(SERVICE_EWMA_ALPHA), batches: 0, items: 0, total: 0.0 }
+    }
+}
+
+impl ServiceTracker {
+    /// Record one batch of `k` requests that occupied the stage for
+    /// `service` virtual seconds.
+    pub fn observe(&mut self, service: f64, k: usize) {
+        let k = k.max(1);
+        self.ewma.observe(service / k as f64);
+        self.batches += 1;
+        self.items += k;
+        self.total += service;
+    }
+
+    pub fn stats(&self) -> ServiceStats {
+        ServiceStats {
+            batches: self.batches,
+            items: self.items,
+            ewma_per_item: self.ewma.value(),
+            mean_per_item: if self.items > 0 { self.total / self.items as f64 } else { 0.0 },
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -129,7 +229,8 @@ mod tests {
         assert!((r.throughput - 1.0).abs() < 1e-12);
         assert!((r.mean_latency - 2.0).abs() < 1e-12);
         assert_eq!(r.p50_latency, 2.0);
-        assert_eq!(r.p95_latency, 3.0);
+        // rank (5−1)·0.95 = 3.8 interpolates between 2.5 and 3.0.
+        assert!((r.p95_latency - 2.9).abs() < 1e-12);
     }
 
     #[test]
@@ -163,5 +264,40 @@ mod tests {
         let v = [1.0, 2.0, 3.0, 4.0];
         assert_eq!(percentile(&v, 0.0), 1.0);
         assert_eq!(percentile(&v, 1.0), 4.0);
+    }
+
+    #[test]
+    fn p50_is_the_true_median_for_every_small_n() {
+        // The nearest-rank regression: even-length inputs must average
+        // the middle pair, odd-length inputs return the middle element.
+        let data = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let medians = [1.0, 1.5, 2.0, 2.5, 3.0, 3.5];
+        for n in 1..=6usize {
+            let got = percentile(&data[..n], 0.5);
+            assert_eq!(got, medians[n - 1], "median of first {n} naturals");
+        }
+    }
+
+    #[test]
+    fn ewma_first_sample_seeds_then_smooths() {
+        let mut e = Ewma::new(0.25);
+        assert_eq!(e.value(), 0.0);
+        e.observe(2.0);
+        assert_eq!(e.value(), 2.0);
+        e.observe(4.0);
+        assert!((e.value() - (0.25 * 4.0 + 0.75 * 2.0)).abs() < 1e-15);
+        assert_eq!(e.samples(), 2);
+    }
+
+    #[test]
+    fn service_tracker_normalizes_per_item() {
+        let mut t = ServiceTracker::default();
+        t.observe(1.0, 1);
+        t.observe(2.0, 4); // 0.5 per item
+        let s = t.stats();
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.items, 5);
+        assert!((s.mean_per_item - 3.0 / 5.0).abs() < 1e-15);
+        assert!((s.ewma_per_item - (0.25 * 0.5 + 0.75 * 1.0)).abs() < 1e-15);
     }
 }

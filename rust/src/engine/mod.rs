@@ -19,7 +19,10 @@
 //! * [`summarize`] ([`metrics`]) — serving statistics (observed
 //!   steady-state throughput and its inverse as the per-request
 //!   period, latency percentiles), total for 0- and 1-request runs and
-//!   finite under coinciding completions.
+//!   finite under coinciding completions; plus the per-stage observed
+//!   service-time EWMAs ([`ServiceStats`]) that [`run_pipeline`]
+//!   records per (replica, stage) — the raw telemetry the
+//!   online-adaptation loop's drift detector consumes.
 //!
 //! `sim` drives the engine with cost-model stage times and no tensors;
 //! `coordinator::serve_replicated` drives the identical engine pass for
@@ -36,4 +39,6 @@ mod metrics;
 
 pub use clock::{PipelineClock, StageClock, StageProfile};
 pub use dispatch::{run_pipeline, AdmissionPolicy, BatchPlan, EngineConfig, EngineRun, JobOutcome};
-pub use metrics::{percentile, summarize, TimingReport};
+pub use metrics::{
+    percentile, summarize, Ewma, ServiceStats, ServiceTracker, TimingReport, SERVICE_EWMA_ALPHA,
+};

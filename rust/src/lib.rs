@@ -55,6 +55,27 @@
 //! [`deploy::Scheme`] call so `Replicas::Auto` probes — run on scoped
 //! worker threads — and scheme comparisons share a single build.
 //!
+//! ## The online-adaptation loop (paper §5.4)
+//!
+//! Deployed capacities drift; the loop that closes around it is split
+//! mechanism/policy. [`adapt`] owns the mechanism: scripted capacity
+//! drift ([`adapt::DriftScript`]), the belief-vs-truth round profiles
+//! ([`cost::stage_cost_as_planned`] — plan-time splits, drifted
+//! timing), and the round loop [`adapt::drive_adaptation`] that both
+//! [`sim::simulate_adaptive`] and [`coordinator::serve_adaptive`] run,
+//! hot-swapping plans only at drain boundaries so no in-flight request
+//! is ever lost. [`deploy`] owns the policy: [`deploy::AdaptPolicy`]
+//! thresholds and an [`deploy::OnlineAdapter`] that EWMAs each device's
+//! observed/expected compute ratio (fed by the [`engine`]'s per-stage
+//! [`engine::ServiceStats`] telemetry), re-estimates the slowed
+//! device's effective FLOPs, and re-plans *incrementally* through one
+//! session-wide [`pipeline::PlanContext`] — oracle-backed
+//! [`pipeline::rebalance`] as the cheap first resort, full Algorithm-2
+//! DP as the fallback, never a re-partition (the oracle-build-once
+//! counters pin this in `rust/tests/adaptation.rs`). Entry points:
+//! [`deploy::DeploymentPlan::serve_adaptive`] /
+//! [`deploy::DeploymentPlan::simulate_adaptive`].
+//!
 //! ## The engine: one timing core, two drivers
 //!
 //! [`engine`] owns the pipeline completion recurrence
@@ -73,6 +94,7 @@
 //! multi-replica serving: `examples/replicated_serve.rs`; experiment
 //! reproductions: `rust/benches/`.
 
+pub mod adapt;
 pub mod baselines;
 pub mod cluster;
 pub mod config;

@@ -56,14 +56,10 @@ pub fn adapt_heterogeneous_with_meta(
     let mut slots: Vec<usize> = dp_stages.iter().map(|&(_, _, m)| m).collect();
     let mut assigned: Vec<Vec<usize>> = vec![Vec::new(); n_stages];
 
-    // Devices by capacity, fastest first.
+    // Devices by capacity, fastest first (total_cmp: a degenerate
+    // NaN-capacity device must order deterministically, not panic).
     let mut order: Vec<usize> = (0..cluster.len()).collect();
-    order.sort_by(|&a, &b| {
-        cluster.devices[b]
-            .flops
-            .partial_cmp(&cluster.devices[a].flops)
-            .unwrap()
-    });
+    order.sort_by(|&a, &b| cluster.devices[b].flops.total_cmp(&cluster.devices[a].flops));
 
     for &dev in &order {
         // Stage with maximum remaining average requirement Θ′/|D′|.
@@ -72,7 +68,7 @@ pub fn adapt_heterogeneous_with_meta(
             .max_by(|&a, &b| {
                 let ra = theta[a] / slots[a] as f64;
                 let rb = theta[b] / slots[b] as f64;
-                ra.partial_cmp(&rb).unwrap()
+                ra.total_cmp(&rb)
             })
         else {
             break; // all slots filled (cannot happen: slots sum = |D|)

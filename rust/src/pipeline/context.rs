@@ -20,6 +20,14 @@
 //! on `std::thread::scope` workers that all share one `&PlanContext`.
 //! Cache fills hold the lock, so concurrent probes block on the first
 //! partition instead of racing to duplicate it.
+//!
+//! The online-adaptation loop (`deploy::OnlineAdapter`) re-plans through
+//! the same context when live metrics detect capacity drift: a
+//! drift-triggered re-plan — rebalance or full DP — reuses the cached
+//! piece chain and oracle aggregates, so `partition_runs` and
+//! `oracle_builds` stay at 1 across an entire serving session however
+//! many times the cluster estimate changes ([`PlannerStats::replans`]
+//! counts the swaps).
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -40,6 +48,11 @@ pub struct PlannerStats {
     pub oracle_builds: usize,
     /// Algorithm-2 counters summed over every DP invocation.
     pub dp: DpStats,
+    /// Online re-plans executed through this context (the adaptation
+    /// loop's metrics-driven swaps).
+    pub replans: usize,
+    /// Accepted rebalance moves across those re-plans.
+    pub rebalance_moves: usize,
 }
 
 #[derive(Default)]
@@ -115,6 +128,14 @@ impl<'g> PlanContext<'g> {
     /// Fold one DP run's counters into the build-wide aggregate.
     pub fn note_dp(&self, stats: &DpStats) {
         self.counters.lock().unwrap().dp.absorb(stats);
+    }
+
+    /// Record one online re-plan executed through this context (and how
+    /// many rebalance moves it accepted, if the cheap path ran).
+    pub fn note_replan(&self, rebalance_moves: usize) {
+        let mut c = self.counters.lock().unwrap();
+        c.replans += 1;
+        c.rebalance_moves += rebalance_moves;
     }
 
     /// Snapshot of the aggregated counters.

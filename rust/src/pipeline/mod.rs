@@ -21,7 +21,8 @@ pub use algorithm2_reference::dp_pipeline_reference;
 pub use algorithm3::{adapt_heterogeneous, adapt_heterogeneous_with_meta};
 pub use context::{PlanContext, PlannerStats};
 pub use plan::{ExecutionMode, PipelinePlan, Stage};
-pub use rebalance::{rebalance, RebalanceReport};
+pub use rebalance::{rebalance, rebalance_with_meta, RebalanceReport};
+pub(crate) use rebalance::stages_match_chain;
 
 use std::sync::Arc;
 

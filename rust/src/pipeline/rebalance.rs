@@ -1,4 +1,6 @@
-//! Stage-level rebalancing — the paper's §8 future-work direction.
+//! Stage-level rebalancing — the paper's §8 future-work direction, and
+//! (since the online-adaptation loop landed) the serving layer's cheap
+//! first resort when a device drifts.
 //!
 //! Algorithm 3 fixes the per-stage device *counts* to the homogeneous
 //! solution's; when capacities are extremely varied that leaves stage
@@ -13,9 +15,28 @@
 //!
 //! accepting any move that strictly lowers the pipeline period (ties
 //! broken by latency), until a local optimum or `max_iters`.
+//!
+//! ## Hot path
+//!
+//! The original implementation cloned the entire `Vec<Stage>` for every
+//! candidate move and re-walked the whole graph via `pipeline_cost` —
+//! O(stages × candidate) full stage-cost evaluations per accepted move.
+//! A candidate only ever touches one or two stages, so the evaluator now
+//! keeps per-stage totals and re-costs *only the affected stages*,
+//! applying mutations on accept only. Stage totals come from the
+//! [`CostOracle`] (one lazily-built oracle per device roster, cached —
+//! rosters recur across iterations, and the oracle's suffix tables are
+//! bit-identical to `stage_cost`), with a direct `stage_cost` walk as
+//! the fallback when the piece chain fails the oracle's validation.
+//! `rebalance_reference` (test-only) preserves the original evaluator;
+//! the equivalence tests pin both to identical moves and periods.
 
-use crate::cluster::Cluster;
-use crate::cost::pipeline_cost;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::cluster::{Cluster, Device};
+use crate::cost::oracle::{CostOracle, PieceMeta};
+use crate::cost::stage_cost;
 use crate::graph::{LayerId, ModelGraph};
 use crate::partition::PieceChain;
 use crate::pipeline::{PipelinePlan, Stage};
@@ -26,13 +47,9 @@ pub struct RebalanceReport {
     pub period_before: f64,
     pub period_after: f64,
     pub moves: usize,
-}
-
-fn plan_period(g: &ModelGraph, cluster: &Cluster, stages: &[Stage]) -> (f64, f64) {
-    let s: Vec<(Vec<LayerId>, Vec<usize>)> =
-        stages.iter().map(|st| (st.layers.clone(), st.devices.clone())).collect();
-    let c = pipeline_cost(g, cluster, &s);
-    (c.period, c.latency)
+    /// Single-stage cost evaluations performed (oracle queries +
+    /// fallback walks) — the quantity the oracle rewrite collapses.
+    pub stage_evals: usize,
 }
 
 fn rebuild_layers(pieces: &PieceChain, first: usize, last: usize) -> Vec<LayerId> {
@@ -41,7 +58,104 @@ fn rebuild_layers(pieces: &PieceChain, first: usize, last: usize) -> Vec<LayerId
     ids
 }
 
-/// Improve `plan` in place; returns what changed.
+/// Candidate acceptance: strictly lower period, ties broken by latency.
+fn better(p: f64, l: f64, bp: f64, bl: f64) -> bool {
+    p < bp - 1e-15 || (p <= bp + 1e-15 && l < bl - 1e-15)
+}
+
+/// Per-stage cost evaluator: oracle-backed when the chain validates,
+/// `stage_cost` otherwise. Oracles are cached per ordered device roster
+/// (the same rosters recur across local-search iterations), and the
+/// underlying [`PieceMeta`] is shared — via the caller's `Arc`, i.e. the
+/// `PlanContext` cache when the adaptation loop drives this — so no
+/// evaluation ever re-sorts pieces or re-walks the whole pipeline.
+struct StageEval<'g, 'c> {
+    g: &'g ModelGraph,
+    meta: Arc<PieceMeta>,
+    cluster: &'c Cluster,
+    /// Ordered roster → oracle. Only populated on the oracle path.
+    oracles: HashMap<Vec<usize>, CostOracle<'g>>,
+    use_oracle: bool,
+    evals: usize,
+}
+
+impl<'g, 'c> StageEval<'g, 'c> {
+    fn new(
+        g: &'g ModelGraph,
+        meta: Arc<PieceMeta>,
+        cluster: &'c Cluster,
+        use_oracle: bool,
+    ) -> StageEval<'g, 'c> {
+        StageEval { g, meta, cluster, oracles: HashMap::new(), use_oracle, evals: 0 }
+    }
+
+    /// T(S) of one stage: pieces `iv` (oracle path) / `layers`
+    /// (fallback path) on `devices`, in roster order (device 0 is the
+    /// stage leader, exactly as `stage_cost` treats it).
+    fn total(&mut self, iv: (usize, usize), layers: &[LayerId], devices: &[usize]) -> f64 {
+        self.evals += 1;
+        if self.use_oracle {
+            if !self.oracles.contains_key(devices) {
+                let roster: Vec<Device> =
+                    devices.iter().map(|&i| self.cluster.devices[i].clone()).collect();
+                let oracle =
+                    CostOracle::new(self.g, self.meta.clone(), roster, self.cluster.network);
+                self.oracles.insert(devices.to_vec(), oracle);
+            }
+            self.oracles.get_mut(devices).unwrap().interval_cost(iv.0, iv.1)
+        } else {
+            let devs: Vec<&Device> =
+                devices.iter().map(|&i| &self.cluster.devices[i]).collect();
+            stage_cost(self.g, layers, &devs, &self.cluster.network).total
+        }
+    }
+}
+
+/// Period and latency of the plan with `replace` substituted into the
+/// cached per-stage totals — folded in stage order, exactly like
+/// `pipeline_cost` folds its stage costs, so the numbers are
+/// bit-identical to a full re-evaluation.
+fn combined(totals: &[f64], replace: &[(usize, f64)]) -> (f64, f64) {
+    let pick = |i: usize, t: f64| replace.iter().find(|&&(j, _)| j == i).map_or(t, |&(_, r)| r);
+    let mut period = 0.0f64;
+    let mut latency = 0.0f64;
+    for (i, &t) in totals.iter().enumerate() {
+        let v = pick(i, t);
+        period = period.max(v);
+        latency += v;
+    }
+    (period, latency)
+}
+
+/// Do the plan's stages tile `pieces` contiguously with layers matching
+/// their piece intervals? Required for the boundary-shift move (and for
+/// the oracle path, whose queries are piece-interval based). Also the
+/// adaptation loop's guard against re-planning a plan whose artifact
+/// was built from a *different* chain (re-exported crate-wide through
+/// `pipeline::stages_match_chain`).
+pub(crate) fn stages_match_chain(pieces: &PieceChain, stages: &[Stage]) -> bool {
+    if stages.is_empty() || pieces.is_empty() {
+        return false;
+    }
+    if stages[0].pieces.0 != 0 || stages[stages.len() - 1].pieces.1 != pieces.len() - 1 {
+        return false;
+    }
+    for w in stages.windows(2) {
+        if w[0].pieces.1 + 1 != w[1].pieces.0 {
+            return false;
+        }
+    }
+    stages.iter().all(|s| {
+        s.pieces.0 <= s.pieces.1
+            && s.pieces.1 < pieces.len()
+            && s.layers == rebuild_layers(pieces, s.pieces.0, s.pieces.1)
+    })
+}
+
+/// Improve `plan` in place; returns what changed. Builds the piece
+/// aggregates internally — callers that already hold a [`PieceMeta`]
+/// (the `PlanContext`-driven adaptation loop) use
+/// [`rebalance_with_meta`] so nothing is rebuilt.
 pub fn rebalance(
     g: &ModelGraph,
     pieces: &PieceChain,
@@ -49,10 +163,33 @@ pub fn rebalance(
     plan: &mut PipelinePlan,
     max_iters: usize,
 ) -> RebalanceReport {
-    let (mut best_p, mut best_l) = plan_period(g, cluster, &plan.stages);
+    let meta = Arc::new(PieceMeta::build(g, pieces));
+    rebalance_with_meta(g, pieces, &meta, cluster, plan, max_iters)
+}
+
+/// [`rebalance`] against pre-built piece aggregates (shared through the
+/// `PlanContext` by the online-adaptation loop: no re-partition, no
+/// re-build — the oracle-build-once invariant extends to re-planning).
+pub fn rebalance_with_meta(
+    g: &ModelGraph,
+    pieces: &PieceChain,
+    meta: &Arc<PieceMeta>,
+    cluster: &Cluster,
+    plan: &mut PipelinePlan,
+    max_iters: usize,
+) -> RebalanceReport {
+    let chain_ok = meta.len() == pieces.len() && stages_match_chain(pieces, &plan.stages);
+    let use_oracle = meta.exact() && chain_ok;
+    let mut eval = StageEval::new(g, meta.clone(), cluster, use_oracle);
+
+    let mut totals: Vec<f64> = plan
+        .stages
+        .iter()
+        .map(|s| eval.total(s.pieces, &s.layers, &s.devices))
+        .collect();
+    let (mut best_p, mut best_l) = combined(&totals, &[]);
     let period_before = best_p;
     let mut moves = 0;
-    let better = |p: f64, l: f64, bp: f64, bl: f64| p < bp - 1e-15 || (p <= bp + 1e-15 && l < bl - 1e-15);
 
     for _ in 0..max_iters {
         let mut improved = false;
@@ -68,13 +205,21 @@ pub fn rebalance(
                     continue;
                 }
                 for di in 0..plan.stages[from].devices.len() {
-                    let mut cand = plan.stages.clone();
-                    let dev = cand[from].devices.remove(di);
-                    cand[to].devices.push(dev);
-                    sort_by_capacity(cluster, &mut cand[to].devices);
-                    let (p, l) = plan_period(g, cluster, &cand);
+                    let mut from_devs = plan.stages[from].devices.clone();
+                    let dev = from_devs.remove(di);
+                    let mut to_devs = plan.stages[to].devices.clone();
+                    to_devs.push(dev);
+                    sort_by_capacity(cluster, &mut to_devs);
+                    let t_from =
+                        eval.total(plan.stages[from].pieces, &plan.stages[from].layers, &from_devs);
+                    let t_to =
+                        eval.total(plan.stages[to].pieces, &plan.stages[to].layers, &to_devs);
+                    let (p, l) = combined(&totals, &[(from, t_from), (to, t_to)]);
                     if better(p, l, best_p, best_l) {
-                        plan.stages = cand;
+                        plan.stages[from].devices = from_devs;
+                        plan.stages[to].devices = to_devs;
+                        totals[from] = t_from;
+                        totals[to] = t_to;
                         best_p = p;
                         best_l = l;
                         moves += 1;
@@ -91,16 +236,24 @@ pub fn rebalance(
                 for b in a + 1..n {
                     for ia in 0..plan.stages[a].devices.len() {
                         for ib in 0..plan.stages[b].devices.len() {
-                            let mut cand = plan.stages.clone();
-                            let da = cand[a].devices[ia];
-                            let db = cand[b].devices[ib];
-                            cand[a].devices[ia] = db;
-                            cand[b].devices[ib] = da;
-                            sort_by_capacity(cluster, &mut cand[a].devices);
-                            sort_by_capacity(cluster, &mut cand[b].devices);
-                            let (p, l) = plan_period(g, cluster, &cand);
+                            let da = plan.stages[a].devices[ia];
+                            let db = plan.stages[b].devices[ib];
+                            let mut a_devs = plan.stages[a].devices.clone();
+                            let mut b_devs = plan.stages[b].devices.clone();
+                            a_devs[ia] = db;
+                            b_devs[ib] = da;
+                            sort_by_capacity(cluster, &mut a_devs);
+                            sort_by_capacity(cluster, &mut b_devs);
+                            let t_a =
+                                eval.total(plan.stages[a].pieces, &plan.stages[a].layers, &a_devs);
+                            let t_b =
+                                eval.total(plan.stages[b].pieces, &plan.stages[b].layers, &b_devs);
+                            let (p, l) = combined(&totals, &[(a, t_a), (b, t_b)]);
                             if better(p, l, best_p, best_l) {
-                                plan.stages = cand;
+                                plan.stages[a].devices = a_devs;
+                                plan.stages[b].devices = b_devs;
+                                totals[a] = t_a;
+                                totals[b] = t_b;
                                 best_p = p;
                                 best_l = l;
                                 moves += 1;
@@ -113,8 +266,10 @@ pub fn rebalance(
             }
         }
 
-        // Move 3: shift a piece boundary between adjacent stages.
-        if !improved {
+        // Move 3: shift a piece boundary between adjacent stages. Only
+        // sound when the stages actually tile the piece chain (they do
+        // for planner output; hand-built plans fall back to moves 1–2).
+        if !improved && chain_ok {
             'outer_shift: for s in 0..n.saturating_sub(1) {
                 for dir in [-1isize, 1] {
                     let (a0, a1) = plan.stages[s].pieces;
@@ -130,14 +285,18 @@ pub fn rebalance(
                         }
                         (a1 - 1, b0 - 1)
                     };
-                    let mut cand = plan.stages.clone();
-                    cand[s].pieces = (a0, na1);
-                    cand[s].layers = rebuild_layers(pieces, a0, na1);
-                    cand[s + 1].pieces = (nb0, b1);
-                    cand[s + 1].layers = rebuild_layers(pieces, nb0, b1);
-                    let (p, l) = plan_period(g, cluster, &cand);
+                    let layers_s = rebuild_layers(pieces, a0, na1);
+                    let layers_s1 = rebuild_layers(pieces, nb0, b1);
+                    let t_s = eval.total((a0, na1), &layers_s, &plan.stages[s].devices);
+                    let t_s1 = eval.total((nb0, b1), &layers_s1, &plan.stages[s + 1].devices);
+                    let (p, l) = combined(&totals, &[(s, t_s), (s + 1, t_s1)]);
                     if better(p, l, best_p, best_l) {
-                        plan.stages = cand;
+                        plan.stages[s].pieces = (a0, na1);
+                        plan.stages[s].layers = layers_s;
+                        plan.stages[s + 1].pieces = (nb0, b1);
+                        plan.stages[s + 1].layers = layers_s1;
+                        totals[s] = t_s;
+                        totals[s + 1] = t_s1;
                         best_p = p;
                         best_l = l;
                         moves += 1;
@@ -152,22 +311,138 @@ pub fn rebalance(
             break;
         }
     }
-    RebalanceReport { period_before, period_after: best_p, moves }
+    RebalanceReport { period_before, period_after: best_p, moves, stage_evals: eval.evals }
 }
 
+/// Descending-capacity device order. `f64::total_cmp` instead of
+/// `partial_cmp(..).unwrap()`: a degenerate cluster (NaN capacity from
+/// a bad calibration or config) must sort deterministically, not panic
+/// the serving layer mid-run.
 fn sort_by_capacity(cluster: &Cluster, devices: &mut [usize]) {
-    devices.sort_by(|&a, &b| {
-        cluster.devices[b].flops.partial_cmp(&cluster.devices[a].flops).unwrap()
-    });
+    devices.sort_by(|&a, &b| cluster.devices[b].flops.total_cmp(&cluster.devices[a].flops));
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::cluster::{Device, Network};
+    use crate::cost::pipeline_cost;
     use crate::modelzoo;
     use crate::partition;
     use crate::pipeline;
+
+    /// The pre-overhaul evaluator, verbatim: clone every stage, re-walk
+    /// the whole pipeline per candidate. Kept as the equivalence ground
+    /// truth for the oracle-backed rewrite.
+    fn rebalance_reference(
+        g: &ModelGraph,
+        pieces: &PieceChain,
+        cluster: &Cluster,
+        plan: &mut PipelinePlan,
+        max_iters: usize,
+    ) -> RebalanceReport {
+        fn plan_period(g: &ModelGraph, cluster: &Cluster, stages: &[Stage]) -> (f64, f64) {
+            let s: Vec<(Vec<LayerId>, Vec<usize>)> =
+                stages.iter().map(|st| (st.layers.clone(), st.devices.clone())).collect();
+            let c = pipeline_cost(g, cluster, &s);
+            (c.period, c.latency)
+        }
+        let (mut best_p, mut best_l) = plan_period(g, cluster, &plan.stages);
+        let period_before = best_p;
+        let mut moves = 0;
+        for _ in 0..max_iters {
+            let mut improved = false;
+            let n = plan.stages.len();
+            'outer_move: for from in 0..n {
+                if plan.stages[from].devices.len() <= 1 {
+                    continue;
+                }
+                for to in 0..n {
+                    if to == from {
+                        continue;
+                    }
+                    for di in 0..plan.stages[from].devices.len() {
+                        let mut cand = plan.stages.clone();
+                        let dev = cand[from].devices.remove(di);
+                        cand[to].devices.push(dev);
+                        sort_by_capacity(cluster, &mut cand[to].devices);
+                        let (p, l) = plan_period(g, cluster, &cand);
+                        if better(p, l, best_p, best_l) {
+                            plan.stages = cand;
+                            best_p = p;
+                            best_l = l;
+                            moves += 1;
+                            improved = true;
+                            break 'outer_move;
+                        }
+                    }
+                }
+            }
+            if !improved {
+                'outer_swap: for a in 0..n {
+                    for b in a + 1..n {
+                        for ia in 0..plan.stages[a].devices.len() {
+                            for ib in 0..plan.stages[b].devices.len() {
+                                let mut cand = plan.stages.clone();
+                                let da = cand[a].devices[ia];
+                                let db = cand[b].devices[ib];
+                                cand[a].devices[ia] = db;
+                                cand[b].devices[ib] = da;
+                                sort_by_capacity(cluster, &mut cand[a].devices);
+                                sort_by_capacity(cluster, &mut cand[b].devices);
+                                let (p, l) = plan_period(g, cluster, &cand);
+                                if better(p, l, best_p, best_l) {
+                                    plan.stages = cand;
+                                    best_p = p;
+                                    best_l = l;
+                                    moves += 1;
+                                    improved = true;
+                                    break 'outer_swap;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            if !improved {
+                'outer_shift: for s in 0..n.saturating_sub(1) {
+                    for dir in [-1isize, 1] {
+                        let (a0, a1) = plan.stages[s].pieces;
+                        let (b0, b1) = plan.stages[s + 1].pieces;
+                        let (na1, nb0) = if dir > 0 {
+                            if b0 == b1 {
+                                continue;
+                            }
+                            (a1 + 1, b0 + 1)
+                        } else {
+                            if a0 == a1 {
+                                continue;
+                            }
+                            (a1 - 1, b0 - 1)
+                        };
+                        let mut cand = plan.stages.clone();
+                        cand[s].pieces = (a0, na1);
+                        cand[s].layers = rebuild_layers(pieces, a0, na1);
+                        cand[s + 1].pieces = (nb0, b1);
+                        cand[s + 1].layers = rebuild_layers(pieces, nb0, b1);
+                        let (p, l) = plan_period(g, cluster, &cand);
+                        if better(p, l, best_p, best_l) {
+                            plan.stages = cand;
+                            best_p = p;
+                            best_l = l;
+                            moves += 1;
+                            improved = true;
+                            break 'outer_shift;
+                        }
+                    }
+                }
+            }
+            if !improved {
+                break;
+            }
+        }
+        RebalanceReport { period_before, period_after: best_p, moves, stage_evals: 0 }
+    }
 
     #[test]
     fn rebalance_never_hurts() {
@@ -227,6 +502,86 @@ mod tests {
         for s in &plan.stages {
             let expect = rebuild_layers(&pieces, s.pieces.0, s.pieces.1);
             assert_eq!(s.layers, expect);
+        }
+    }
+
+    #[test]
+    fn oracle_evaluator_matches_reference_moves_exactly() {
+        // The rewrite must accept the same move sequence and land on the
+        // same plan and period as the full-clone pipeline_cost
+        // evaluator — across the existing rebalance scenarios.
+        let g = modelzoo::vgg16();
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        let mut clusters = Vec::new();
+        for seed in 0..3u64 {
+            let mut rng = crate::util::Rng::new(seed + 7);
+            clusters.push(Cluster::random(6, &mut rng));
+        }
+        clusters.push(Cluster::paper_heterogeneous());
+        let mut extreme = vec![Device::tx2(0, 2.2)];
+        extreme[0].flops *= 8.0;
+        for i in 1..6 {
+            extreme.push(Device::rpi(i, 0.6));
+        }
+        clusters.push(Cluster::new(extreme, Network::wifi_50mbps()));
+        for (ci, cluster) in clusters.iter().enumerate() {
+            let base = pipeline::plan(&g, &pieces, cluster, f64::INFINITY).unwrap();
+            let mut fast = base.clone();
+            let mut slow = base.clone();
+            let rep_fast = rebalance(&g, &pieces, cluster, &mut fast, 60);
+            let rep_slow = rebalance_reference(&g, &pieces, cluster, &mut slow, 60);
+            assert_eq!(fast.stages, slow.stages, "cluster {ci}: plans diverged");
+            assert_eq!(rep_fast.moves, rep_slow.moves, "cluster {ci}");
+            assert_eq!(
+                rep_fast.period_before.to_bits(),
+                rep_slow.period_before.to_bits(),
+                "cluster {ci}"
+            );
+            assert_eq!(
+                rep_fast.period_after.to_bits(),
+                rep_slow.period_after.to_bits(),
+                "cluster {ci}"
+            );
+        }
+    }
+
+    #[test]
+    fn sort_by_capacity_survives_degenerate_clusters() {
+        // Regression: partial_cmp(..).unwrap() panicked the moment a
+        // device carried a NaN capacity (bad calibration / bad config).
+        // total_cmp orders NaN deterministically instead.
+        let mut cluster = Cluster::homogeneous_rpi(4, 1.0);
+        cluster.devices[1].flops = f64::NAN;
+        cluster.devices[3].flops = 0.0;
+        let mut devices = vec![0, 1, 2, 3];
+        sort_by_capacity(&cluster, &mut devices); // must not panic
+        assert_eq!(devices.len(), 4);
+        // total_cmp puts (positive) NaN above every finite value: the
+        // degenerate device sorts first in descending order, the
+        // zero-capacity one last.
+        assert_eq!(devices[0], 1);
+        assert_eq!(devices[3], 3);
+    }
+
+    #[test]
+    fn rebalance_uses_fewer_stage_evals_than_full_walks() {
+        let g = modelzoo::vgg16();
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        let cluster = Cluster::paper_heterogeneous();
+        let mut plan = pipeline::plan(&g, &pieces, &cluster, f64::INFINITY).unwrap();
+        let n_stages = plan.stages.len();
+        let rep = rebalance(&g, &pieces, &cluster, &mut plan, 60);
+        // Delta evaluation: ≤ 2 stage costs per candidate + the initial
+        // n; the old evaluator paid n_stages per candidate.
+        if n_stages > 2 {
+            let candidates = (rep.stage_evals - n_stages) / 2;
+            let old_cost = n_stages + candidates * n_stages;
+            assert!(
+                rep.stage_evals < old_cost,
+                "delta eval {} should beat full-walk {}",
+                rep.stage_evals,
+                old_cost
+            );
         }
     }
 }

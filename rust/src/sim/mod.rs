@@ -14,12 +14,15 @@
 //! so simulated and served timings agree by construction (pinned by
 //! `rust/tests/agreement.rs`).
 
+use crate::adapt::{
+    drive_adaptation, AdaptController, DriftScript, ReplanRecord, RoundResult,
+};
 use crate::baselines::{halo_fraction, SyncSchedule};
 use crate::cluster::Cluster;
 use crate::cost::{stage_cost, StageCost};
-use crate::engine::{run_pipeline, EngineConfig, StageProfile};
+use crate::engine::{run_pipeline, EngineConfig, StageProfile, TimingReport};
 use crate::graph::{LayerId, ModelGraph, Shape};
-use crate::pipeline::PipelinePlan;
+use crate::pipeline::{PipelinePlan, PlannerStats};
 
 /// Per-device simulation outcome.
 #[derive(Debug, Clone, Default)]
@@ -203,6 +206,75 @@ pub fn simulate_replicated(
     }
 }
 
+/// Analytic outcome of an adaptive (drift-injected) simulation run.
+#[derive(Debug, Clone)]
+pub struct AdaptiveSimReport {
+    /// Timing summary over all rounds (requests backlogged at t = 0).
+    pub timing: TimingReport,
+    /// Re-plans the controller executed.
+    pub replans: Vec<ReplanRecord>,
+    pub rounds: usize,
+    /// Absolute virtual drain time of each round (round k's observed
+    /// throughput is its request count over `round_ends[k] −
+    /// round_ends[k−1]`).
+    pub round_ends: Vec<f64>,
+    /// Planner counters of the adaptation session (filled by the deploy
+    /// facade, which owns the shared `PlanContext`).
+    pub planner: Option<PlannerStats>,
+}
+
+/// Simulate `n_requests` backlogged inferences through `plans` in rounds
+/// of `round_size`, injecting scripted capacity `drift` and letting
+/// `controller` re-plan at round boundaries — the analytic twin of
+/// [`crate::coordinator::serve_adaptive`]. Every round is one engine
+/// pass over the *actual* (drifted) stage profiles under the *believed*
+/// cluster's feature splits; the serving coordinator drives the
+/// identical pass, so the two timelines agree to floating-point noise
+/// under the same script, policy **and engine options** (`opts` must
+/// match the serving side's `ServeOptions` for the agreement to hold —
+/// batching and admission shape every round's schedule).
+#[allow(clippy::too_many_arguments)] // mirrors serve_adaptive's axes
+pub fn simulate_adaptive(
+    g: &ModelGraph,
+    nominal: &Cluster,
+    plans: &[PipelinePlan],
+    n_requests: usize,
+    round_size: usize,
+    opts: &EngineConfig,
+    drift: &DriftScript,
+    controller: &mut dyn AdaptController,
+) -> AdaptiveSimReport {
+    let trace = drive_adaptation(
+        g,
+        nominal,
+        plans.to_vec(),
+        n_requests,
+        round_size,
+        drift,
+        controller,
+        |rx| {
+            // Backlogged stream: this round's admissions are gated to
+            // the previous round's drain time.
+            let arrivals: Vec<f64> = rx.range.clone().map(|_| rx.t_offset).collect();
+            let run = run_pipeline(rx.profiles, &arrivals, opts);
+            Ok(RoundResult {
+                done: run.jobs.iter().map(|j| (rx.range.start + j.index, j.done)).collect(),
+                stage_service: run.stage_service,
+                makespan: run.report.makespan.max(rx.t_offset),
+            })
+        },
+    )
+    .expect("analytic adaptation rounds cannot fail");
+    let timing = trace.timing(&vec![0.0; n_requests]);
+    AdaptiveSimReport {
+        timing,
+        replans: trace.replans,
+        rounds: trace.rounds,
+        round_ends: trace.round_ends,
+        planner: None,
+    }
+}
+
 /// Simulate a synchronous baseline schedule (LW/EFL/OFL/CE).
 pub fn simulate_sync(
     g: &ModelGraph,
@@ -358,6 +430,39 @@ mod tests {
             pico.avg_redundancy(),
             efl.avg_redundancy()
         );
+    }
+
+    #[test]
+    fn adaptive_sim_without_drift_is_chunked_serving() {
+        use crate::adapt::FixedController;
+        let (g, pieces) = setup();
+        let c = Cluster::homogeneous_rpi(4, 1.0);
+        let plan = pipeline::plan(&g, &pieces, &c, f64::INFINITY).unwrap();
+        let rep = simulate_adaptive(
+            &g,
+            &c,
+            std::slice::from_ref(&plan),
+            12,
+            4,
+            &EngineConfig::default(),
+            &crate::adapt::DriftScript::none(),
+            &mut FixedController,
+        );
+        assert_eq!(rep.timing.n, 12);
+        assert_eq!(rep.rounds, 3);
+        assert!(rep.replans.is_empty());
+        // First round is exactly a 4-request backlogged run.
+        let plain = simulate_pipeline(&g, &c, &plan, 4);
+        assert!((rep.round_ends[0] - plain.makespan).abs() < 1e-9);
+        // Identical rounds drain in identical spans.
+        let spans: Vec<f64> = rep
+            .round_ends
+            .windows(2)
+            .map(|w| w[1] - w[0])
+            .collect();
+        for s in &spans {
+            assert!((s - rep.round_ends[0]).abs() < 1e-9, "homogeneous rounds: {spans:?}");
+        }
     }
 
     #[test]

@@ -1,0 +1,280 @@
+//! The online-adaptation loop, end to end (paper §5.4).
+//!
+//! A scripted mid-run device slowdown must: surface through the
+//! engine's observed service metrics, trigger exactly one metrics-driven
+//! re-plan through the shared `PlanContext` (no re-partition — the
+//! oracle-build-once counters verify it), hot-swap the new plan at a
+//! round boundary without dropping a single in-flight request, and
+//! recover serving throughput to within 5% of a fresh plan computed
+//! directly on the drifted cluster. The analytic simulator and the
+//! threaded serving coordinator run the identical loop and must agree.
+
+use pico::adapt::{DriftScript, FixedController};
+use pico::cluster::Cluster;
+use pico::coordinator::{self, NullCompute, Request, ServeOptions};
+use pico::deploy::{AdaptPolicy, Backend, DeploymentPlan, OnlineAdapter, ServeConfig};
+use pico::runtime::Tensor;
+use pico::{modelzoo, partition, pipeline, sim};
+
+fn requests(g: &pico::graph::ModelGraph, n: usize) -> Vec<Request> {
+    let (c, h, w) = g.input_shape;
+    (0..n as u64)
+        .map(|id| Request { id, input: Tensor::zeros(vec![c, h, w]), t_submit: 0.0 })
+        .collect()
+}
+
+/// Mid-run slowdown → exactly one re-plan → throughput recovers to
+/// within 5% of a fresh plan on the drifted cluster.
+#[test]
+fn slowdown_triggers_one_replan_and_throughput_recovers() {
+    let g = modelzoo::synthetic_chain(10);
+    let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+    let cluster = Cluster::homogeneous_rpi(4, 1.0);
+    let plan = pipeline::plan(&g, &pieces, &cluster, f64::INFINITY).unwrap();
+    let n = 64;
+    let round = 8;
+    // Device 0 drops to quarter speed after 16 requests.
+    let drift = DriftScript::slowdown(16, 0, 0.25);
+    // Force the full-DP path (no rebalance iterations, accept nothing):
+    // the DP on the exact capacity estimate is bit-identical to a fresh
+    // plan on the drifted cluster, making the 5% recovery bound below
+    // deterministic instead of heuristic-dependent.
+    let policy = AdaptPolicy {
+        round_size: round,
+        rebalance_iters: 0,
+        rebalance_accept: 0.0,
+        ..AdaptPolicy::default()
+    };
+
+    let mut adapter = OnlineAdapter::new(&g, policy.clone(), 5, 1, f64::INFINITY);
+    let adapted = sim::simulate_adaptive(
+        &g,
+        &cluster,
+        std::slice::from_ref(&plan),
+        n,
+        round,
+        &ServeOptions::default(),
+        &drift,
+        &mut adapter,
+    );
+    assert_eq!(adapted.timing.n, n, "every request completes");
+    assert_eq!(adapted.replans.len(), 1, "exactly one re-plan: {:?}", adapted.replans);
+    let rp = &adapted.replans[0];
+    assert_eq!(rp.device, 0);
+    assert_eq!(rp.strategy, pico::adapt::ReplanStrategy::FullDp);
+    assert!(
+        (rp.capacity_scale - 0.25).abs() < 1e-9,
+        "exact ratio observation → exact capacity estimate, got {}",
+        rp.capacity_scale
+    );
+
+    // Baseline A: the stale plan ridden through the same drift with no
+    // adaptation — its post-drift rounds must be clearly slower.
+    let unadapted = sim::simulate_adaptive(
+        &g,
+        &cluster,
+        std::slice::from_ref(&plan),
+        n,
+        round,
+        &ServeOptions::default(),
+        &drift,
+        &mut FixedController,
+    );
+    // Baseline B: a fresh plan computed directly on the drifted cluster,
+    // chunked identically (same drain boundaries, same round size).
+    let drifted = drift.cluster_at(&cluster, n);
+    let fresh_plan = pipeline::plan(&g, &pieces, &drifted, f64::INFINITY).unwrap();
+    let fresh = sim::simulate_adaptive(
+        &g,
+        &drifted,
+        std::slice::from_ref(&fresh_plan),
+        n,
+        round,
+        &ServeOptions::default(),
+        &DriftScript::none(),
+        &mut FixedController,
+    );
+
+    let last = |r: &sim::AdaptiveSimReport| {
+        let e = &r.round_ends;
+        e[e.len() - 1] - e[e.len() - 2]
+    };
+    let (adapted_span, unadapted_span, fresh_span) =
+        (last(&adapted), last(&unadapted), last(&fresh));
+    assert!(
+        adapted_span <= fresh_span * 1.05,
+        "recovered round span {adapted_span} must be within 5% of fresh-plan span {fresh_span}"
+    );
+    assert!(
+        adapted_span < unadapted_span * 0.95,
+        "adaptation must clearly beat the stale plan: {adapted_span} vs {unadapted_span}"
+    );
+}
+
+/// The sim and the threaded coordinator drive the identical adaptation
+/// loop: same re-plans, same round drains, same makespan — and the hot
+/// swap loses no request.
+#[test]
+fn sim_and_serve_agree_under_scripted_drift() {
+    let g = modelzoo::synthetic_chain(8);
+    let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+    let cluster = Cluster::homogeneous_rpi(3, 1.0);
+    let plan = pipeline::plan(&g, &pieces, &cluster, f64::INFINITY).unwrap();
+    let n = 48;
+    let round = 8;
+    let drift = DriftScript::slowdown(16, 0, 0.5);
+    let policy = AdaptPolicy { round_size: round, ..AdaptPolicy::default() };
+
+    let mut sim_adapter = OnlineAdapter::new(&g, policy.clone(), 5, 1, f64::INFINITY);
+    let predicted = sim::simulate_adaptive(
+        &g,
+        &cluster,
+        std::slice::from_ref(&plan),
+        n,
+        round,
+        &ServeOptions::default(),
+        &drift,
+        &mut sim_adapter,
+    );
+
+    let mut serve_adapter = OnlineAdapter::new(&g, policy, 5, 1, f64::INFINITY);
+    let served = coordinator::serve_adaptive(
+        &g,
+        &cluster,
+        std::slice::from_ref(&plan),
+        &NullCompute,
+        requests(&g, n),
+        &ServeOptions::default(),
+        round,
+        &drift,
+        &mut serve_adapter,
+    )
+    .unwrap();
+
+    // No request lost across the hot swap.
+    assert_eq!(served.responses.len(), n);
+    assert!(served.rejected.is_empty());
+    let mut ids: Vec<u64> = served.responses.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..n as u64).collect::<Vec<_>>());
+
+    // Identical adaptation decisions and identical timelines.
+    assert_eq!(served.replans.len(), predicted.replans.len());
+    assert_eq!(served.replans.len(), 1);
+    assert_eq!(served.replans[0].round, predicted.replans[0].round);
+    assert_eq!(served.replans[0].device, predicted.replans[0].device);
+    assert_eq!(served.rounds, predicted.rounds);
+    assert_eq!(served.round_ends.len(), predicted.round_ends.len());
+    for (a, b) in served.round_ends.iter().zip(&predicted.round_ends) {
+        assert!((a - b).abs() <= 1e-9 * b.max(1.0), "round drain {a} vs {b}");
+    }
+    assert!(
+        (served.makespan - predicted.timing.makespan).abs()
+            <= 1e-9 * predicted.timing.makespan,
+        "served {} vs simulated {}",
+        served.makespan,
+        predicted.timing.makespan
+    );
+}
+
+/// Two sequential drift events: two re-plans, one shared piece chain,
+/// one oracle build — the `PlanContext` no-re-partition invariant across
+/// an entire adaptation session.
+#[test]
+fn sequential_replans_share_one_partition_and_oracle_build() {
+    let g = modelzoo::synthetic_chain(10);
+    let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+    let cluster = Cluster::homogeneous_rpi(4, 1.0);
+    let plan = pipeline::plan(&g, &pieces, &cluster, f64::INFINITY).unwrap();
+    let n = 80;
+    let round = 8;
+    let drift = DriftScript {
+        events: vec![
+            pico::adapt::DriftEvent { at_request: 16, device: 0, factor: 0.5 },
+            pico::adapt::DriftEvent { at_request: 48, device: 1, factor: 0.5 },
+        ],
+    };
+    let policy = AdaptPolicy { round_size: round, ..AdaptPolicy::default() };
+    let mut adapter = OnlineAdapter::new(&g, policy, 5, 1, f64::INFINITY);
+    let rep = sim::simulate_adaptive(
+        &g,
+        &cluster,
+        std::slice::from_ref(&plan),
+        n,
+        round,
+        &ServeOptions::default(),
+        &drift,
+        &mut adapter,
+    );
+    assert_eq!(rep.timing.n, n);
+    assert_eq!(rep.replans.len(), 2, "{:?}", rep.replans);
+    let devices: Vec<usize> = rep.replans.iter().map(|r| r.device).collect();
+    assert_eq!(devices, vec![0, 1]);
+    // However many re-plans fire, Algorithm 1 ran at most once and the
+    // oracle aggregates were built at most once in this session.
+    let st = adapter.planner_stats();
+    assert_eq!(st.partition_runs, 1, "{st:?}");
+    assert_eq!(st.oracle_builds, 1, "{st:?}");
+    assert_eq!(st.replans, 2, "{st:?}");
+}
+
+/// The deploy facade end to end: `DeploymentPlan::serve_adaptive` with
+/// the Null backend closes the loop — metrics → detector → re-plan →
+/// hot swap — and reports the planner counters.
+#[test]
+fn facade_serve_adaptive_closes_the_loop() {
+    let d = DeploymentPlan::builder()
+        .model("squeezenet")
+        .cluster(Cluster::homogeneous_rpi(4, 1.0))
+        .build()
+        .unwrap();
+    let drift = DriftScript::slowdown(16, 0, 0.25);
+    let policy = AdaptPolicy::default(); // round_size 8
+    let cfg = ServeConfig { n_requests: 56, ..ServeConfig::default() };
+    let rep = d.serve_adaptive(&Backend::Null, &cfg, &drift, &policy).unwrap();
+    assert_eq!(rep.responses.len(), 56, "no request lost across the hot swap");
+    assert!(rep.rejected.is_empty());
+    assert_eq!(rep.rounds, 7);
+    assert_eq!(rep.replans.len(), 1, "{:?}", rep.replans);
+    assert_eq!(rep.replans[0].device, 0);
+    let st = rep.planner.as_ref().expect("facade records planner stats");
+    assert_eq!(st.partition_runs, 1, "re-plan must reuse the session chain: {st:?}");
+    assert_eq!(st.oracle_builds, 1, "{st:?}");
+    assert!(rep.round_ends.windows(2).all(|w| w[1] > w[0]));
+    assert!(rep.makespan > 0.0 && rep.throughput > 0.0);
+
+    // The analytic facade twin agrees on the decision trace.
+    let simmed = d.simulate_adaptive(56, &ServeOptions::default(), &drift, &policy).unwrap();
+    assert_eq!(simmed.replans.len(), 1);
+    assert_eq!(simmed.replans[0].round, rep.replans[0].round);
+    assert!(
+        (simmed.timing.makespan - rep.makespan).abs() <= 1e-9 * rep.makespan,
+        "facade sim {} vs serve {}",
+        simmed.timing.makespan,
+        rep.makespan
+    );
+}
+
+/// Without drift the adaptive serving path is plain chunked serving:
+/// no re-plans, and the believed profiles match observation every round.
+#[test]
+fn no_drift_means_no_replans() {
+    let d = DeploymentPlan::builder()
+        .model("squeezenet")
+        .cluster(Cluster::homogeneous_rpi(3, 1.0))
+        .build()
+        .unwrap();
+    let rep = d
+        .serve_adaptive(
+            &Backend::Null,
+            &ServeConfig { n_requests: 24, ..ServeConfig::default() },
+            &DriftScript::none(),
+            &AdaptPolicy::default(),
+        )
+        .unwrap();
+    assert_eq!(rep.responses.len(), 24);
+    assert!(rep.replans.is_empty());
+    let st = rep.planner.as_ref().unwrap();
+    assert_eq!(st.partition_runs, 0, "no re-plan → context untouched: {st:?}");
+    assert_eq!(st.oracle_builds, 0);
+}
