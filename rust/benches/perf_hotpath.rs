@@ -162,6 +162,17 @@ fn time<F: FnMut()>(reps: usize, mut f: F) -> f64 {
 }
 
 fn main() {
+    // CI sets PICO_REQUIRE_BUDGET so that losing the PICO_PERF_BUDGET_MS
+    // env line can never silently turn the perf gate into a no-op.
+    if std::env::var("PICO_REQUIRE_BUDGET").is_ok()
+        && std::env::var("PICO_PERF_BUDGET_MS").is_err()
+    {
+        eprintln!(
+            "FAIL: PICO_REQUIRE_BUDGET is set but PICO_PERF_BUDGET_MS is not — \
+             the perf gate would be silently skipped"
+        );
+        std::process::exit(1);
+    }
     let mut t = Table::new(&["hot path", "time", "reps", "note"]);
 
     // 1. split/stitch on a VGG16-sized feature map (64x224x224).

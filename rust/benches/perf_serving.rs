@@ -1,0 +1,210 @@
+//! §Perf serving bench: the open-loop load harness at production scale.
+//!
+//! Two jobs:
+//!   1. the **scaling table** — sharded admitted-request throughput
+//!      across threads × replicas × arrival rate, with p99 and shed
+//!      rate per cell;
+//!   2. the **headline comparison** — a 1M-request Poisson overload at
+//!      4 replicas / 4 worker threads through the sharded harness and
+//!      through the single-global-Mutex baseline. Both runs must agree
+//!      on every admitted/shed count *exactly* (same trace, same
+//!      semantics); only wall-clock may differ. Under
+//!      `PICO_PERF_BUDGET_MS` the bench fails loudly unless the
+//!      sharded path sustains >= 1.5x the mutexed path's offered
+//!      throughput (requests processed per wall second).
+//!
+//! Results are recorded to `BENCH_serving.json` at the workspace root
+//! (CI overwrites and commits it). Schema:
+//!
+//! ```json
+//! {
+//!   "case":        string,        // fixed synthetic-pipeline descriptor
+//!   "profile_ms":  [f64; 3],      // per-stage constant service times
+//!   "headline": {
+//!     "requests":       u64,      // arrival-trace length (1e6)
+//!     "replicas":       u64,
+//!     "threads":        u64,
+//!     "rate_per_sec":   f64,      // Poisson arrival rate (~4x capacity)
+//!     "sharded_wall_s": f64,      // harness wall-clock, sharded
+//!     "mutexed_wall_s": f64,      // harness wall-clock, mutexed
+//!     "speedup":        f64,      // mutexed_wall_s / sharded_wall_s
+//!     "admitted":       u64,      // identical across both runners
+//!     "shed_rate":      f64,
+//!     "p99_s":          f64       // virtual-time p99 latency, seconds
+//!   },
+//!   "scaling": [                  // one row per (threads, replicas, rate)
+//!     { "threads": u64, "replicas": u64, "rate_per_sec": f64,
+//!       "offered_per_wall_s": f64,   // n_requests / harness wall
+//!       "throughput_per_s": f64,     // admitted / virtual makespan
+//!       "p99_s": f64, "shed_rate": f64 }, ...
+//!   ],
+//!   "generated_by": string
+//! }
+//! ```
+//!
+//! Env contract (shared with `perf_hotpath.rs`):
+//! * `PICO_PERF_BUDGET_MS` — wall budget for the headline runs; also
+//!   arms the >= 1.5x sharded-vs-mutexed gate. Unset = record-only.
+//! * `PICO_REQUIRE_BUDGET` — set to fail loudly when the budget gate
+//!   is NOT armed (CI sets it so a dropped env line cannot silently
+//!   turn the perf job into a no-op).
+
+use pico::engine::StageProfile;
+use pico::load::{run_load, run_load_mutexed, ArrivalProcess, LoadSpec};
+use pico::util::Table;
+
+/// Fixed synthetic 3-stage pipeline: bottleneck 2.5ms => 400 req/s per
+/// replica. Constant profiles keep every cell's virtual outcome
+/// deterministic, so only wall-clock varies across machines.
+const STAGE_MS: [f64; 3] = [1.5, 2.5, 2.0];
+const BOTTLENECK_S: f64 = 0.0025;
+
+fn profile() -> Vec<StageProfile> {
+    STAGE_MS.iter().map(|ms| StageProfile::constant(ms * 1e-3)).collect()
+}
+
+fn replicas(n: usize) -> Vec<Vec<StageProfile>> {
+    vec![profile(); n]
+}
+
+fn budget_ms() -> Option<f64> {
+    std::env::var("PICO_PERF_BUDGET_MS")
+        .ok()
+        .map(|ms| ms.parse().expect("PICO_PERF_BUDGET_MS must be a number"))
+}
+
+fn main() {
+    let budget = budget_ms();
+    if std::env::var("PICO_REQUIRE_BUDGET").is_ok() && budget.is_none() {
+        eprintln!(
+            "FAIL: PICO_REQUIRE_BUDGET is set but PICO_PERF_BUDGET_MS is not — \
+             the perf gate would be silently skipped"
+        );
+        std::process::exit(1);
+    }
+
+    let mut t = Table::new(&["threads", "replicas", "rate/s", "offered/wall-s", "p99", "shed"]);
+
+    // 1. Scaling table: sharded harness across the grid. Rates are
+    // multiples of aggregate capacity (replicas / bottleneck), so each
+    // column stresses the same operating point at every size.
+    let mut scaling_rows: Vec<String> = Vec::new();
+    for &threads in &[1usize, 2, 4] {
+        for &n_rep in &[2usize, 4, 8] {
+            let capacity = n_rep as f64 / BOTTLENECK_S;
+            for mult in [0.8, 2.0, 8.0] {
+                let rate = mult * capacity;
+                let spec = LoadSpec {
+                    process: ArrivalProcess::Poisson { rate },
+                    n_requests: 150_000,
+                    seed: 11,
+                    queue_capacity: 32,
+                    threads,
+                    ..Default::default()
+                };
+                let rep = run_load(&replicas(n_rep), &spec);
+                let offered_per_wall = rep.offered as f64 / rep.wall_secs.max(1e-9);
+                t.row(&[
+                    threads.to_string(),
+                    n_rep.to_string(),
+                    format!("{rate:.0}"),
+                    format!("{:.2}M", offered_per_wall / 1e6),
+                    format!("{:.1}ms", rep.p99 * 1e3),
+                    format!("{:.0}%", rep.shed_rate * 100.0),
+                ]);
+                scaling_rows.push(format!(
+                    "    {{ \"threads\": {threads}, \"replicas\": {n_rep}, \
+                     \"rate_per_sec\": {rate:.1}, \"offered_per_wall_s\": {:.0}, \
+                     \"throughput_per_s\": {:.1}, \"p99_s\": {:.6}, \"shed_rate\": {:.4} }}",
+                    offered_per_wall, rep.throughput, rep.p99, rep.shed_rate,
+                ));
+            }
+        }
+    }
+
+    // 2. Headline: 1M-request Poisson overload, sharded vs mutexed.
+    // Fixed memory regardless of trace length — this run IS the
+    // "million requests without unbounded queue growth" acceptance
+    // check, and the two runners must agree to the last request.
+    let n_rep = 4;
+    let threads = 4;
+    let rate = 4.0 * n_rep as f64 / BOTTLENECK_S;
+    let spec = LoadSpec {
+        process: ArrivalProcess::Poisson { rate },
+        n_requests: 1_000_000,
+        seed: 42,
+        queue_capacity: 64,
+        threads,
+        ..Default::default()
+    };
+    let pipes = replicas(n_rep);
+    let sharded = run_load(&pipes, &spec);
+    let mutexed = run_load_mutexed(&pipes, &spec);
+    assert_eq!(sharded.offered, 1_000_000);
+    assert_eq!(sharded.admitted, mutexed.admitted, "runners diverged on admitted");
+    assert_eq!(sharded.shed_queue, mutexed.shed_queue, "runners diverged on shed");
+    assert_eq!(sharded.admitted + sharded.shed_queue + sharded.shed_deadline, sharded.offered);
+    let speedup = mutexed.wall_secs / sharded.wall_secs.max(1e-9);
+    t.row(&[
+        format!("{threads} (sharded)"),
+        n_rep.to_string(),
+        format!("{rate:.0}"),
+        format!("{:.2}M", 1e6 / sharded.wall_secs.max(1e-9) / 1e6),
+        format!("{:.1}ms", sharded.p99 * 1e3),
+        format!("{:.0}%", sharded.shed_rate * 100.0),
+    ]);
+    t.row(&[
+        format!("{threads} (mutexed)"),
+        n_rep.to_string(),
+        format!("{rate:.0}"),
+        format!("{:.2}M", 1e6 / mutexed.wall_secs.max(1e-9) / 1e6),
+        format!("{:.1}ms", mutexed.p99 * 1e3),
+        format!("{:.0}%", mutexed.shed_rate * 100.0),
+    ]);
+    t.row(&[
+        "sharded/mutexed speedup".into(),
+        "-".into(),
+        "-".into(),
+        format!("{speedup:.2}x"),
+        "-".into(),
+        "-".into(),
+    ]);
+    t.print();
+
+    let json = format!(
+        "{{\n  \"case\": \"3-stage constant pipeline {STAGE_MS:?}ms, Poisson open loop\",\n  \
+         \"profile_ms\": [{}, {}, {}],\n  \"headline\": {{\n    \
+         \"requests\": 1000000,\n    \"replicas\": {n_rep},\n    \"threads\": {threads},\n    \
+         \"rate_per_sec\": {rate:.1},\n    \"sharded_wall_s\": {:.4},\n    \
+         \"mutexed_wall_s\": {:.4},\n    \"speedup\": {:.3},\n    \"admitted\": {},\n    \
+         \"shed_rate\": {:.4},\n    \"p99_s\": {:.6}\n  }},\n  \"scaling\": [\n{}\n  ],\n  \
+         \"generated_by\": \"benches/perf_serving.rs (cargo bench --bench perf_serving)\"\n}}\n",
+        STAGE_MS[0], STAGE_MS[1], STAGE_MS[2],
+        sharded.wall_secs,
+        mutexed.wall_secs,
+        speedup,
+        sharded.admitted,
+        sharded.shed_rate,
+        sharded.p99,
+        scaling_rows.join(",\n"),
+    );
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_serving.json");
+    if let Err(e) = std::fs::write(&out, &json) {
+        eprintln!("warning: could not write {}: {e}", out.display());
+    }
+
+    if let Some(budget_ms) = budget {
+        let headline_ms = (sharded.wall_secs + mutexed.wall_secs) * 1e3;
+        if headline_ms > budget_ms {
+            eprintln!("FAIL: 1M-request headline took {headline_ms:.0}ms > budget {budget_ms}ms");
+            std::process::exit(1);
+        }
+        if speedup < 1.5 {
+            eprintln!(
+                "FAIL: sharded dispatch only {speedup:.2}x over the mutexed baseline \
+                 (gate: >= 1.5x at {threads} threads)"
+            );
+            std::process::exit(1);
+        }
+    }
+}

@@ -13,6 +13,7 @@
 //! case — the paper's plain Fig. 8 pipeline.
 
 use std::collections::{BTreeMap, HashMap, HashSet};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
@@ -80,8 +81,22 @@ pub struct ServeReport {
     /// cluster's single-frame prediction attached — the signal the
     /// online-adaptation loop's drift detector consumes.
     pub stage_metrics: Vec<StageServiceMetrics>,
+    /// Highest number of in-flight inter-stage messages observed at any
+    /// instant (feeder handoff, stage links, collector). The bounded
+    /// `sync_channel` links cap this at O(stages × channel capacity)
+    /// regardless of how overloaded the run is — the backpressure
+    /// regression test pins it.
+    pub peak_resident_msgs: usize,
     /// Wall-clock seconds the run took on this host.
     pub wall_secs: f64,
+}
+
+/// Count one message entering a channel; `recv` sides decrement
+/// `resident` directly. Relaxed ordering: this is telemetry, and the
+/// peak only needs to see every increment, not order them.
+fn depth_inc(resident: &AtomicUsize, peak: &AtomicUsize) {
+    let now = resident.fetch_add(1, Ordering::Relaxed) + 1;
+    peak.fetch_max(now, Ordering::Relaxed);
 }
 
 /// One (replica, stage)'s observed-vs-planned service summary.
@@ -282,25 +297,36 @@ pub fn serve_replicated_with_profiles(
         .collect();
     let mut inputs: Vec<Option<Request>> = requests.into_iter().map(Some).collect();
 
+    // Inter-stage links are bounded: an unbounded channel let the
+    // feeder park the entire backlog in stage 0's queue, so memory grew
+    // with the request count even when admission was shedding. The
+    // capacity follows the serving queue bound (default 64 when the
+    // virtual-time queue is unbounded).
+    let chan_cap = opts.queue_capacity.unwrap_or(64).max(1);
+    let resident = AtomicUsize::new(0);
+    let peak_resident = AtomicUsize::new(0);
+
     std::thread::scope(|scope| -> anyhow::Result<ServeReport> {
+        let resident = &resident;
+        let peak_resident = &peak_resident;
         // Per-replica channel chains, all last stages feeding one
         // collector.
-        let (col_tx, col_rx) = mpsc::channel::<Msg>();
-        let mut frontends: Vec<mpsc::Sender<Msg>> = Vec::new();
+        let (col_tx, col_rx) = mpsc::sync_channel::<Msg>(chan_cap);
+        let mut frontends: Vec<mpsc::SyncSender<Msg>> = Vec::new();
         let mut handles = Vec::new();
         for (ri, plan) in plans.iter().enumerate() {
             let n_stages = plan.stages.len();
-            let mut senders: Vec<mpsc::Sender<Msg>> = Vec::new();
+            let mut senders: Vec<mpsc::SyncSender<Msg>> = Vec::new();
             let mut receivers: Vec<mpsc::Receiver<Msg>> = Vec::new();
             for _ in 0..n_stages {
-                let (tx, rx) = mpsc::channel::<Msg>();
+                let (tx, rx) = mpsc::sync_channel::<Msg>(chan_cap);
                 senders.push(tx);
                 receivers.push(rx);
             }
             frontends.push(senders[0].clone());
             for (si, stage) in plan.stages.iter().enumerate() {
                 let rx = receivers.remove(0);
-                let tx: mpsc::Sender<Msg> = if si + 1 < n_stages {
+                let tx: mpsc::SyncSender<Msg> = if si + 1 < n_stages {
                     senders[si + 1].clone()
                 } else {
                     col_tx.clone()
@@ -321,6 +347,7 @@ pub fn serve_replicated_with_profiles(
                 handles.push(scope.spawn(move || -> anyhow::Result<()> {
                     let mut clock = StageClock::default();
                     while let Ok(msg) = rx.recv() {
+                        resident.fetch_sub(1, Ordering::Relaxed);
                         // Virtual pipeline timing: the same recurrence
                         // the engine's analytic pass applied — a batch
                         // of k occupies the stage for T_s(k).
@@ -395,6 +422,7 @@ pub fn serve_replicated_with_profiles(
                                 live: live_next,
                             });
                         }
+                        depth_inc(resident, peak_resident);
                         if tx.send(Msg { members: out_members, t_ready: t_done }).is_err() {
                             break;
                         }
@@ -408,26 +436,34 @@ pub fn serve_replicated_with_profiles(
 
         // Feed batches along the engine's schedule. A send can only
         // fail if a stage worker died; its own error surfaces at join.
-        for bp in &schedule.batches {
-            let mut members = Vec::with_capacity(bp.members.len());
-            for &idx in &bp.members {
-                let r = inputs[idx].take().expect("engine dispatched a request twice");
-                members.push(MsgMember {
-                    id: r.id,
-                    t_submit: r.t_submit,
-                    live: [(0usize, Arc::new(r.input))].into(),
-                });
+        // The feeder runs on its own thread: with bounded links it
+        // blocks whenever the pipeline is full, and the collector below
+        // must already be draining or the whole scope would deadlock.
+        let batches = schedule.batches;
+        let feeder = scope.spawn(move || {
+            for bp in &batches {
+                let mut members = Vec::with_capacity(bp.members.len());
+                for &idx in &bp.members {
+                    let r = inputs[idx].take().expect("engine dispatched a request twice");
+                    members.push(MsgMember {
+                        id: r.id,
+                        t_submit: r.t_submit,
+                        live: [(0usize, Arc::new(r.input))].into(),
+                    });
+                }
+                depth_inc(resident, peak_resident);
+                if frontends[bp.replica].send(Msg { members, t_ready: bp.admitted }).is_err() {
+                    break;
+                }
             }
-            if frontends[bp.replica].send(Msg { members, t_ready: bp.admitted }).is_err() {
-                break;
-            }
-        }
-        drop(frontends);
+            drop(frontends);
+        });
 
         // Collect.
         let out_id = g.output_id();
         let mut responses = Vec::with_capacity(n_served);
         while let Ok(msg) = col_rx.recv() {
+            resident.fetch_sub(1, Ordering::Relaxed);
             for member in msg.members {
                 let output = member
                     .live
@@ -444,6 +480,7 @@ pub fn serve_replicated_with_profiles(
         }
         // Join workers BEFORE the completeness check so a compute error
         // surfaces as itself, not as "lost responses".
+        feeder.join().map_err(|_| anyhow::anyhow!("feeder panicked"))?;
         for h in handles {
             h.join().map_err(|_| anyhow::anyhow!("stage worker panicked"))??;
         }
@@ -468,6 +505,7 @@ pub fn serve_replicated_with_profiles(
             p95_latency: m.p95_latency,
             rejected,
             stage_metrics,
+            peak_resident_msgs: peak_resident.load(Ordering::Relaxed),
             wall_secs: wall_start.elapsed().as_secs_f64(),
         })
     })
@@ -816,6 +854,45 @@ mod tests {
                     <= 1e-12 * m.planned_service.max(1.0)
             );
         }
+    }
+
+    #[test]
+    fn bounded_channels_cap_resident_queue_depth() {
+        // Pre-fix, inter-stage links were unbounded mpsc channels: the
+        // feeder parked the whole backlog in stage 0's queue and the
+        // resident message count grew with n (here it would reach
+        // ~300). With sync_channel links sized from ServeOptions the
+        // peak must stay O(stages × capacity), independent of n.
+        let g = modelzoo::synthetic_chain(8);
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        let c = Cluster::homogeneous_rpi(4, 1.0);
+        let plan = pipeline::plan(&g, &pieces, &c, f64::INFINITY).unwrap();
+        assert!(plan.stages.len() >= 2, "want a real pipeline");
+        let n = 300;
+        let opts = ServeOptions {
+            queue_capacity: Some(2),
+            max_batch: 1,
+            admission: AdmissionPolicy::Block,
+        };
+        let report = serve_replicated(
+            &g,
+            std::slice::from_ref(&plan),
+            &c,
+            &NullCompute,
+            requests(&g, n),
+            &opts,
+        )
+        .unwrap();
+        assert_eq!(report.responses.len(), n, "blocking admission serves everything");
+        // chan_cap = 2; (stages + 1) channels hold <= 2 each, plus one
+        // message in each worker's hands — generous slack on top.
+        let bound = (plan.stages.len() + 1) * 3 + 4;
+        assert!(
+            report.peak_resident_msgs <= bound,
+            "resident depth {} exceeds bound {bound}",
+            report.peak_resident_msgs
+        );
+        assert!(report.peak_resident_msgs >= 1);
     }
 
     #[test]

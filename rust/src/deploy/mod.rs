@@ -84,6 +84,7 @@ use crate::coordinator::{
 use crate::error::PicoError;
 use crate::graph::ModelGraph;
 use crate::json::{obj, Value};
+use crate::load::{self, LoadReport, LoadSpec};
 use crate::modelzoo;
 use crate::pipeline::{ExecutionMode, PipelinePlan, PlanContext, PlannerStats};
 use crate::runtime::{Engine, PipelineArtifacts, Tensor};
@@ -602,6 +603,28 @@ impl DeploymentPlan {
         );
         report.planner = Some(adapter.planner_stats());
         Ok(report)
+    }
+
+    /// Open-loop load test (production traffic, not a backlog): play a
+    /// seeded [`LoadSpec`] arrival trace — Poisson, bursty, diurnal —
+    /// through this deployment's cost-model stage profiles on the
+    /// sharded threaded harness. Reports throughput, p50/p95/p99/p99.9
+    /// latency from a fixed-memory histogram, shed rate and SLO misses;
+    /// memory stays O(replicas), so million-request specs are fine.
+    pub fn load_test(&self, spec: &LoadSpec) -> Result<LoadReport, PicoError> {
+        self.validate_pipelined_serving()?;
+        let profiles = sim::replica_profiles(&self.graph, &self.cluster, &self.replicas);
+        Ok(load::run_load(&profiles, spec))
+    }
+
+    /// Analytic twin of [`DeploymentPlan::load_test`]: the identical
+    /// arrival trace and admission semantics through the sequential
+    /// reference runner. Agreement with the threaded harness is exact
+    /// (admitted/shed counts, histograms) — `rust/tests/open_loop.rs`
+    /// pins it.
+    pub fn simulate_open_loop(&self, spec: &LoadSpec) -> Result<LoadReport, PicoError> {
+        self.validate_pipelined_serving()?;
+        Ok(sim::simulate_open_loop(&self.graph, &self.cluster, &self.replicas, spec))
     }
 
     fn gen_requests(&self, n: usize, seed: u64, zeros: bool) -> Vec<Request> {

@@ -94,12 +94,14 @@ pub struct EngineRun {
     pub report: TimingReport,
 }
 
-/// Drop completions at or before `now` from the in-flight set.
-fn retire(in_flight: &mut Vec<f64>, now: f64) {
+/// Drop completions at or before `now` from the in-flight set. Shared
+/// with the open-loop harness ([`crate::load`]), whose per-replica
+/// admission control mirrors this pass's semantics.
+pub(crate) fn retire(in_flight: &mut Vec<f64>, now: f64) {
     in_flight.retain(|&d| d > now);
 }
 
-fn min_index(v: &[f64]) -> usize {
+pub(crate) fn min_index(v: &[f64]) -> usize {
     let mut best = 0;
     for i in 1..v.len() {
         if v[i] < v[best] {

@@ -123,7 +123,8 @@ impl Ewma {
     }
 
     pub fn observe(&mut self, x: f64) {
-        self.value = if self.samples == 0 { x } else { self.alpha * x + (1.0 - self.alpha) * self.value };
+        self.value =
+            if self.samples == 0 { x } else { self.alpha * x + (1.0 - self.alpha) * self.value };
         self.samples += 1;
     }
 
@@ -287,6 +288,19 @@ mod tests {
         e.observe(4.0);
         assert!((e.value() - (0.25 * 4.0 + 0.75 * 2.0)).abs() < 1e-15);
         assert_eq!(e.samples(), 2);
+    }
+
+    #[test]
+    fn zero_admitted_stage_stats_are_defined() {
+        // A stage that never served a batch (e.g. its replica shed its
+        // whole stream) must report zeros, not NaN — the contract the
+        // 100%-shed open-loop tests rely on end to end.
+        let s = ServiceTracker::default().stats();
+        assert_eq!(s.batches, 0);
+        assert_eq!(s.items, 0);
+        assert_eq!(s.ewma_per_item, 0.0);
+        assert_eq!(s.mean_per_item, 0.0);
+        assert!(s.ewma_per_item.is_finite() && s.mean_per_item.is_finite());
     }
 
     #[test]

@@ -39,6 +39,7 @@ mod metrics;
 
 pub use clock::{PipelineClock, StageClock, StageProfile};
 pub use dispatch::{run_pipeline, AdmissionPolicy, BatchPlan, EngineConfig, EngineRun, JobOutcome};
+pub(crate) use dispatch::{min_index, retire};
 pub use metrics::{
     percentile, summarize, Ewma, ServiceStats, ServiceTracker, TimingReport, SERVICE_EWMA_ALPHA,
 };

@@ -33,8 +33,10 @@
 //!   2–3), the cost model ([`cost`], Eq. 2–12), baseline planners
 //!   ([`baselines`]), the heterogeneous cluster model ([`cluster`]),
 //!   and — on top of the shared [`engine`] — the analytical simulator
-//!   ([`sim`]) and the threaded serving [`coordinator`] that executes
-//!   real tensors through AOT artifacts ([`runtime`]).
+//!   ([`sim`]), the threaded serving [`coordinator`] that executes
+//!   real tensors through AOT artifacts ([`runtime`]), and the
+//!   open-loop load harness ([`load`]) that stress-tests a deployment
+//!   under production-style arrival streams.
 //! * **L2 (python/compile)** — jax model definitions lowered once to HLO
 //!   text (`make artifacts`); never on the request path.
 //! * **L1 (python/compile/kernels)** — Pallas conv/pool/dense kernels
@@ -84,10 +86,28 @@
 //! admission (blocking backpressure or load shedding), and least-loaded
 //! dispatch over R pipeline replicas. [`sim`] drives it with cost-model
 //! stage times and no tensors; [`coordinator`] drives the identical pass
-//! to schedule real tensors through per-stage worker threads. Simulated
-//! and served period/latency therefore agree by construction — pinned
-//! across the whole model zoo by `rust/tests/agreement.rs` (which, like
-//! every example and the CLI, goes through the facade).
+//! to schedule real tensors through per-stage worker threads (linked by
+//! *bounded* channels, so an overloaded feeder backpressures instead of
+//! queueing without bound). Simulated and served period/latency
+//! therefore agree by construction — pinned across the whole model zoo
+//! by `rust/tests/agreement.rs` (which, like every example and the CLI,
+//! goes through the facade).
+//!
+//! ## Open-loop serving at scale
+//!
+//! [`load`] is the closed-loop engine's production-traffic counterpart:
+//! seeded arrival processes ([`load::ArrivalProcess`] — constant-rate,
+//! Poisson, bursty on/off, diurnal replay), sharded per-replica
+//! admission queues drained by worker threads (SPSC rings +
+//! seqlock-published [`load::ClockCell`] telemetry, no shared lock on
+//! the hot path), and fixed-memory HDR-style percentiles
+//! ([`load::LatencyHistogram`]) with SLO/shed accounting — a
+//! million-request run needs a few MB. [`sim::simulate_open_loop`] is
+//! its sequential analytic twin and agrees *exactly*
+//! (`rust/tests/open_loop.rs`); the sharded-vs-mutexed speedup is
+//! measured by `benches/perf_serving.rs` into `BENCH_serving.json`.
+//! Entry points: [`deploy::DeploymentPlan::load_test`] /
+//! [`deploy::DeploymentPlan::simulate_open_loop`].
 //!
 //! Quickstart: `examples/quickstart.rs` (builder → plan → simulate →
 //! serve); end-to-end AOT serving: `examples/e2e_serve.rs`;
@@ -105,6 +125,7 @@ pub mod engine;
 pub mod error;
 pub mod graph;
 pub mod json;
+pub mod load;
 pub mod modelzoo;
 pub mod partition;
 pub mod pipeline;

@@ -1,0 +1,173 @@
+//! Seeded open-loop arrival processes.
+//!
+//! Closed-loop runs (the existing sim/serve paths) release the next
+//! request when a previous one finishes; an open-loop client does not
+//! wait — requests arrive on their own schedule whether or not the
+//! pipeline keeps up, which is what exposes shed rates and tail
+//! latency under overload. Every process here is generated from the
+//! repo's deterministic xorshift PRNG ([`crate::util::Rng`]), so the
+//! same `(process, n, seed)` triple yields the identical trace in the
+//! threaded harness and the analytic twin.
+//!
+//! Non-homogeneous processes (bursty on/off, diurnal) use Lewis–Shedler
+//! thinning: draw a homogeneous Poisson stream at the peak rate, keep
+//! each point with probability `rate(t) / rate_max`.
+
+use crate::util::Rng;
+
+/// How request arrival times are generated.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Evenly spaced arrivals: request `i` at `i / rate`.
+    ConstantRate { rate: f64 },
+    /// Homogeneous Poisson process: i.i.d. exponential inter-arrivals
+    /// with mean `1 / rate`.
+    Poisson { rate: f64 },
+    /// On/off bursts: Poisson at `rate_on` for `on_secs`, then at
+    /// `rate_off` for `off_secs`, repeating.
+    BurstyOnOff { rate_on: f64, rate_off: f64, on_secs: f64, off_secs: f64 },
+    /// Diurnal traffic replay: sinusoidal rate from `base_rate` (start
+    /// of period) up to `peak_rate` (mid-period) and back, period
+    /// `period_secs` — a one-day load curve compressed to seconds.
+    Diurnal { base_rate: f64, peak_rate: f64, period_secs: f64 },
+}
+
+impl ArrivalProcess {
+    /// Instantaneous rate at time `t` (requests/sec).
+    fn rate_at(&self, t: f64) -> f64 {
+        match *self {
+            ArrivalProcess::ConstantRate { rate } | ArrivalProcess::Poisson { rate } => rate,
+            ArrivalProcess::BurstyOnOff { rate_on, rate_off, on_secs, off_secs } => {
+                let phase = t.rem_euclid(on_secs + off_secs);
+                if phase < on_secs {
+                    rate_on
+                } else {
+                    rate_off
+                }
+            }
+            ArrivalProcess::Diurnal { base_rate, peak_rate, period_secs } => {
+                let phase = (t / period_secs) * std::f64::consts::TAU;
+                base_rate + (peak_rate - base_rate) * 0.5 * (1.0 - phase.cos())
+            }
+        }
+    }
+
+    /// Upper bound on the instantaneous rate (the thinning envelope).
+    fn rate_max(&self) -> f64 {
+        match *self {
+            ArrivalProcess::ConstantRate { rate } | ArrivalProcess::Poisson { rate } => rate,
+            ArrivalProcess::BurstyOnOff { rate_on, rate_off, .. } => rate_on.max(rate_off),
+            ArrivalProcess::Diurnal { base_rate, peak_rate, .. } => base_rate.max(peak_rate),
+        }
+    }
+
+    /// Generate `n` arrival times (seconds, sorted ascending, starting
+    /// near 0) from `seed`. Deterministic: same inputs, same trace.
+    pub fn generate(&self, n: usize, seed: u64) -> Vec<f64> {
+        let max = self.rate_max();
+        assert!(max > 0.0 && max.is_finite(), "arrival rate must be positive, got {max}");
+        if let ArrivalProcess::BurstyOnOff { rate_on, rate_off, on_secs, off_secs } = *self {
+            assert!(rate_on >= 0.0 && rate_off >= 0.0, "burst rates must be non-negative");
+            assert!(on_secs > 0.0 && off_secs >= 0.0, "burst phase lengths must be positive");
+        }
+        if let ArrivalProcess::Diurnal { base_rate, peak_rate, period_secs } = *self {
+            assert!(base_rate >= 0.0 && peak_rate >= 0.0, "diurnal rates must be non-negative");
+            assert!(period_secs > 0.0, "diurnal period must be positive");
+        }
+
+        let mut rng = Rng::new(seed);
+        let mut out = Vec::with_capacity(n);
+        match *self {
+            ArrivalProcess::ConstantRate { rate } => {
+                for i in 0..n {
+                    out.push(i as f64 / rate);
+                }
+            }
+            ArrivalProcess::Poisson { rate } => {
+                let mut t = 0.0;
+                for _ in 0..n {
+                    t += exp_sample(&mut rng, rate);
+                    out.push(t);
+                }
+            }
+            _ => {
+                // Thinning: candidate stream at the envelope rate, keep
+                // with probability rate(t) / rate_max.
+                let mut t = 0.0;
+                while out.len() < n {
+                    t += exp_sample(&mut rng, max);
+                    if rng.f64() * max < self.rate_at(t) {
+                        out.push(t);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Exponential inter-arrival sample with rate `rate`.
+fn exp_sample(rng: &mut Rng, rate: f64) -> f64 {
+    // f64() is in [0, 1), so 1 - u is in (0, 1] and ln() is finite.
+    -(1.0 - rng.f64()).ln() / rate
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_sorted(v: &[f64]) {
+        for w in v.windows(2) {
+            assert!(w[0] <= w[1], "unsorted: {} > {}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn constant_rate_is_evenly_spaced() {
+        let a = ArrivalProcess::ConstantRate { rate: 100.0 }.generate(50, 1);
+        assert_eq!(a.len(), 50);
+        assert!((a[10] - 0.1).abs() < 1e-12);
+        assert_sorted(&a);
+    }
+
+    #[test]
+    fn poisson_deterministic_and_near_rate() {
+        let p = ArrivalProcess::Poisson { rate: 1000.0 };
+        let a = p.generate(20_000, 42);
+        let b = p.generate(20_000, 42);
+        assert_eq!(a, b);
+        assert_sorted(&a);
+        // Mean inter-arrival should be within a few percent of 1/rate.
+        let span = a.last().unwrap() - a[0];
+        let observed = (a.len() - 1) as f64 / span;
+        assert!((observed - 1000.0).abs() < 50.0, "observed rate {observed}");
+        // Different seed, different trace.
+        assert_ne!(a, p.generate(20_000, 43));
+    }
+
+    #[test]
+    fn bursty_concentrates_arrivals_in_on_phase() {
+        let p = ArrivalProcess::BurstyOnOff {
+            rate_on: 1000.0,
+            rate_off: 10.0,
+            on_secs: 0.5,
+            off_secs: 0.5,
+        };
+        let a = p.generate(5_000, 7);
+        assert_sorted(&a);
+        let on = a.iter().filter(|&&t| t.rem_euclid(1.0) < 0.5).count();
+        // ~99% of mass should land in the on-phase.
+        assert!(on as f64 > 0.9 * a.len() as f64, "{on}/{} in on-phase", a.len());
+    }
+
+    #[test]
+    fn diurnal_peaks_mid_period() {
+        let p = ArrivalProcess::Diurnal { base_rate: 50.0, peak_rate: 1000.0, period_secs: 2.0 };
+        let a = p.generate(4_000, 11);
+        assert_sorted(&a);
+        // Middle half of each period [0.5, 1.5) should hold well over
+        // half the arrivals.
+        let mid = a.iter().filter(|&&t| (0.5..1.5).contains(&t.rem_euclid(2.0))).count();
+        assert!(mid as f64 > 0.6 * a.len() as f64, "{mid}/{} mid-period", a.len());
+    }
+}

@@ -1,0 +1,420 @@
+//! Sharded open-loop dispatch: one deterministic assigner, per-replica
+//! admission queues, and worker threads that own disjoint replica sets.
+//!
+//! The design requirement is *exact* agreement with the sequential
+//! analytic twin — the open-loop agreement test compares admitted and
+//! shed counts with `==`. That forces two properties:
+//!
+//! 1. **Deterministic assignment.** The assigner runs alone on the
+//!    caller's thread and routes every arrival with a snapshot-style
+//!    least-loaded estimate ([`assign_next`]) that is *admission-blind*:
+//!    it charges each replica one bottleneck period per routed request,
+//!    whether or not the replica later sheds it. A live-feedback router
+//!    would need workers' answers before the next routing decision —
+//!    i.e. a lock — which is exactly the serialization this module
+//!    removes. The estimate is what a real front-end with slightly
+//!    stale telemetry would compute.
+//! 2. **Per-replica FIFO.** Each replica has its own SPSC ring
+//!    ([`ShardQueue`]) and exactly one owning worker, so its offers
+//!    replay in assignment order and its [`ReplicaSim`] evolves
+//!    identically to the sequential twin. Replica states are disjoint;
+//!    no cross-replica ordering is observable.
+//!
+//! [`run_mutexed`] keeps the identical assigner/ring/ownership
+//! structure but funnels every offer through one global `Mutex` — the
+//! pre-sharding coordinator design, preserved as the contended baseline
+//! the serving bench compares against. Same results, different
+//! wall-clock.
+
+use std::sync::Mutex;
+
+use super::histogram::LatencyHistogram;
+use super::queue::{backoff, ClockCell, Polled, ShardQueue};
+use crate::engine::{min_index, retire, AdmissionPolicy, PipelineClock, StageProfile};
+
+/// Admission knobs for one offered request (shared by all runners).
+#[derive(Debug, Clone)]
+pub(super) struct OfferOptions {
+    /// Max in-flight requests per replica (>= 1).
+    pub queue_capacity: usize,
+    pub admission: AdmissionPolicy,
+    /// SLO deadline on request latency (admission-to-done from arrival).
+    pub deadline: Option<f64>,
+    /// Shed a request whose *predicted* completion would already miss
+    /// the deadline, even if a queue slot is free.
+    pub shed_on_deadline: bool,
+}
+
+/// One replica's virtual-time serving state: the same [`PipelineClock`]
+/// recurrence the closed-loop engine uses, plus open-loop accounting
+/// (shed counters, SLO misses, a fixed-memory latency histogram).
+pub(super) struct ReplicaSim {
+    clock: PipelineClock,
+    in_flight: Vec<f64>,
+    pub admitted: u64,
+    pub shed_queue: u64,
+    pub shed_deadline: u64,
+    pub slo_misses: u64,
+    /// Latest completion time (virtual seconds).
+    pub horizon: f64,
+    pub hist: LatencyHistogram,
+}
+
+impl ReplicaSim {
+    pub fn new(n_stages: usize) -> Self {
+        ReplicaSim {
+            clock: PipelineClock::new(n_stages),
+            in_flight: Vec::new(),
+            admitted: 0,
+            shed_queue: 0,
+            shed_deadline: 0,
+            slo_misses: 0,
+            horizon: 0.0,
+            hist: LatencyHistogram::new(),
+        }
+    }
+
+    pub fn front_free(&self) -> f64 {
+        self.clock.front_free()
+    }
+
+    /// Play one arrival at time `t` through this replica. Mirrors the
+    /// closed-loop engine's admission semantics (retire, bounded queue,
+    /// Block waits for the earliest completion / Shed rejects), then
+    /// adds the open-loop extras: optional deadline shedding and
+    /// histogram/SLO recording.
+    pub fn offer(&mut self, profiles: &[StageProfile], t: f64, opts: &OfferOptions) {
+        retire(&mut self.in_flight, t);
+        let mut t_adm = t;
+        if self.in_flight.len() >= opts.queue_capacity {
+            match opts.admission {
+                AdmissionPolicy::Shed => {
+                    self.shed_queue += 1;
+                    return;
+                }
+                AdmissionPolicy::Block => {
+                    while self.in_flight.len() >= opts.queue_capacity {
+                        let k = min_index(&self.in_flight);
+                        t_adm = t_adm.max(self.in_flight[k]);
+                        self.in_flight.swap_remove(k);
+                    }
+                }
+            }
+        }
+        if opts.shed_on_deadline {
+            if let Some(d) = opts.deadline {
+                if self.clock.probe(t_adm, profiles, 1) - t > d {
+                    self.shed_deadline += 1;
+                    return;
+                }
+            }
+        }
+        let done = self.clock.push(t_adm, profiles, 1);
+        self.in_flight.push(done);
+        self.admitted += 1;
+        let latency = done - t;
+        self.hist.record(latency);
+        if let Some(d) = opts.deadline {
+            if latency > d {
+                self.slo_misses += 1;
+            }
+        }
+        self.horizon = self.horizon.max(done);
+    }
+}
+
+/// Per-replica bottleneck period at unit batch — the assigner's cost of
+/// routing one request to that replica.
+pub(super) fn replica_periods(replicas: &[Vec<StageProfile>]) -> Vec<f64> {
+    replicas
+        .iter()
+        .map(|p| p.iter().map(|s| s.service(1)).fold(0.0f64, f64::max))
+        .collect()
+}
+
+/// Deterministic least-loaded routing: pick the replica whose estimated
+/// front frees earliest for an arrival at `t` (ties to the lowest
+/// index), then charge it one bottleneck period. Admission-blind by
+/// design — see the module docs.
+pub(super) fn assign_next(est_free: &mut [f64], periods: &[f64], t: f64) -> usize {
+    let mut best = 0;
+    let mut best_start = t.max(est_free[0]);
+    for (r, &f) in est_free.iter().enumerate().skip(1) {
+        let start = t.max(f);
+        if start < best_start {
+            best = r;
+            best_start = start;
+        }
+    }
+    est_free[best] = best_start + periods[best];
+    best
+}
+
+fn assert_sorted(arrivals: &[f64]) {
+    assert!(
+        arrivals.windows(2).all(|w| w[0] <= w[1]),
+        "open-loop arrivals must be sorted ascending"
+    );
+}
+
+/// Sequential twin: the assigner and every replica offer run inline on
+/// one thread. This is the analytic reference `sim::simulate_open_loop`
+/// exposes; the threaded runners must match it exactly.
+pub(super) fn run_reference(
+    replicas: &[Vec<StageProfile>],
+    arrivals: &[f64],
+    opts: &OfferOptions,
+) -> Vec<ReplicaSim> {
+    assert!(!replicas.is_empty(), "need at least one replica");
+    assert_sorted(arrivals);
+    let periods = replica_periods(replicas);
+    let mut est_free = vec![0.0; replicas.len()];
+    let mut sims: Vec<ReplicaSim> = replicas.iter().map(|p| ReplicaSim::new(p.len())).collect();
+    for &t in arrivals {
+        let r = assign_next(&mut est_free, &periods, t);
+        sims[r].offer(&replicas[r], t, opts);
+    }
+    sims
+}
+
+/// Worker-side replica slot: the sim plus its ring cursor and open
+/// state.
+struct OwnedReplica {
+    replica: usize,
+    sim: ReplicaSim,
+    head: usize,
+    open: bool,
+}
+
+/// Sharded threaded runner: assigner on the calling thread, `threads`
+/// workers owning disjoint replica sets, per-replica SPSC rings of
+/// `channel_capacity` slots, seqlock telemetry cells. Returns the
+/// replica sims in index order — bit-identical to [`run_reference`].
+pub(super) fn run_sharded(
+    replicas: &[Vec<StageProfile>],
+    arrivals: &[f64],
+    opts: &OfferOptions,
+    threads: usize,
+    channel_capacity: usize,
+) -> Vec<ReplicaSim> {
+    run_threaded(replicas, arrivals, opts, threads, channel_capacity, None)
+}
+
+/// Contended baseline: identical structure to [`run_sharded`], but
+/// every offer goes through one global `Mutex` — the pre-sharding
+/// shared-state design. Produces identical results; exists so
+/// `benches/perf_serving.rs` can measure the de-mutexing speedup
+/// against a semantically equal path.
+pub(super) fn run_mutexed(
+    replicas: &[Vec<StageProfile>],
+    arrivals: &[f64],
+    opts: &OfferOptions,
+    threads: usize,
+    channel_capacity: usize,
+) -> Vec<ReplicaSim> {
+    let gate = Mutex::new(());
+    run_threaded(replicas, arrivals, opts, threads, channel_capacity, Some(&gate))
+}
+
+fn run_threaded(
+    replicas: &[Vec<StageProfile>],
+    arrivals: &[f64],
+    opts: &OfferOptions,
+    threads: usize,
+    channel_capacity: usize,
+    gate: Option<&Mutex<()>>,
+) -> Vec<ReplicaSim> {
+    assert!(!replicas.is_empty(), "need at least one replica");
+    assert_sorted(arrivals);
+    let n_replicas = replicas.len();
+    let workers = threads.clamp(1, n_replicas);
+    let queues: Vec<ShardQueue> =
+        (0..n_replicas).map(|_| ShardQueue::new(channel_capacity)).collect();
+    let cells: Vec<ClockCell> = (0..n_replicas).map(|_| ClockCell::default()).collect();
+    let periods = replica_periods(replicas);
+
+    let mut out: Vec<(usize, ReplicaSim)> = std::thread::scope(|scope| {
+        let queues = &queues;
+        let cells = &cells;
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                let mut owned: Vec<OwnedReplica> = (0..n_replicas)
+                    .filter(|r| r % workers == w)
+                    .map(|r| OwnedReplica {
+                        replica: r,
+                        sim: ReplicaSim::new(replicas[r].len()),
+                        head: 0,
+                        open: true,
+                    })
+                    .collect();
+                scope.spawn(move || {
+                    let mut live = owned.len();
+                    let mut spins = 0u32;
+                    while live > 0 {
+                        let mut progressed = false;
+                        for o in owned.iter_mut().filter(|o| o.open) {
+                            // Drain in bounded bursts so one hot replica
+                            // cannot starve this worker's other shards.
+                            for _ in 0..256 {
+                                match queues[o.replica].poll(&mut o.head) {
+                                    Polled::Item(idx) => {
+                                        let t = arrivals[idx as usize];
+                                        match gate {
+                                            Some(m) => {
+                                                let _held = m.lock().unwrap();
+                                                o.sim.offer(&replicas[o.replica], t, opts);
+                                            }
+                                            None => o.sim.offer(&replicas[o.replica], t, opts),
+                                        }
+                                        cells[o.replica]
+                                            .publish(o.sim.front_free(), o.sim.admitted);
+                                        progressed = true;
+                                    }
+                                    Polled::Pending => break,
+                                    Polled::Closed => {
+                                        o.open = false;
+                                        live -= 1;
+                                        progressed = true;
+                                        break;
+                                    }
+                                }
+                            }
+                        }
+                        if !progressed {
+                            backoff(&mut spins);
+                        }
+                    }
+                    owned.into_iter().map(|o| (o.replica, o.sim)).collect::<Vec<_>>()
+                })
+            })
+            .collect();
+
+        // Assigner: route every arrival deterministically; a full ring
+        // blocks the push — bounded memory under any overload.
+        let mut est_free = vec![0.0; n_replicas];
+        let mut tails = vec![0usize; n_replicas];
+        for (i, &t) in arrivals.iter().enumerate() {
+            let r = assign_next(&mut est_free, &periods, t);
+            queues[r].push(&mut tails[r], i as u64);
+        }
+        for (r, tail) in tails.iter_mut().enumerate() {
+            queues[r].close(tail);
+        }
+
+        handles.into_iter().flat_map(|h| h.join().expect("load worker panicked")).collect()
+    });
+
+    out.sort_by_key(|(r, _)| *r);
+    debug_assert!(out.iter().enumerate().all(|(i, (r, _))| i == *r));
+    out.into_iter().map(|(_, sim)| sim).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts() -> OfferOptions {
+        OfferOptions {
+            queue_capacity: 4,
+            admission: AdmissionPolicy::Shed,
+            deadline: Some(0.05),
+            shed_on_deadline: false,
+        }
+    }
+
+    fn three_replicas() -> Vec<Vec<StageProfile>> {
+        vec![
+            vec![StageProfile::constant(0.002), StageProfile::constant(0.003)],
+            vec![StageProfile::constant(0.004)],
+            vec![StageProfile::constant(0.001), StageProfile::constant(0.0015)],
+        ]
+    }
+
+    fn trace(n: usize, rate: f64) -> Vec<f64> {
+        super::super::ArrivalProcess::Poisson { rate }.generate(n, 17)
+    }
+
+    fn totals(sims: &[ReplicaSim]) -> (u64, u64, u64, u64) {
+        (
+            sims.iter().map(|s| s.admitted).sum(),
+            sims.iter().map(|s| s.shed_queue).sum(),
+            sims.iter().map(|s| s.shed_deadline).sum(),
+            sims.iter().map(|s| s.slo_misses).sum(),
+        )
+    }
+
+    #[test]
+    fn sharded_matches_reference_exactly() {
+        let replicas = three_replicas();
+        let arrivals = trace(30_000, 900.0);
+        let reference = run_reference(&replicas, &arrivals, &opts());
+        for threads in [1, 2, 3, 8] {
+            let sharded = run_sharded(&replicas, &arrivals, &opts(), threads, 64);
+            assert_eq!(totals(&sharded), totals(&reference), "threads {threads}");
+            for (s, r) in sharded.iter().zip(&reference) {
+                assert_eq!(s.admitted, r.admitted);
+                assert_eq!(s.shed_queue, r.shed_queue);
+                assert_eq!(s.hist.count(), r.hist.count());
+                assert_eq!(s.hist.quantile(0.99), r.hist.quantile(0.99));
+                assert!((s.horizon - r.horizon).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn mutexed_matches_sharded_exactly() {
+        let replicas = three_replicas();
+        let arrivals = trace(20_000, 1200.0);
+        let sharded = run_sharded(&replicas, &arrivals, &opts(), 3, 64);
+        let mutexed = run_mutexed(&replicas, &arrivals, &opts(), 3, 64);
+        assert_eq!(totals(&sharded), totals(&mutexed));
+        for (s, m) in sharded.iter().zip(&mutexed) {
+            assert_eq!(s.hist.quantile(0.5), m.hist.quantile(0.5));
+        }
+    }
+
+    #[test]
+    fn small_ring_bounds_memory_but_loses_nothing() {
+        // Ring far smaller than the trace: the assigner must block on
+        // full rings, not drop; totals still match the reference.
+        let replicas = three_replicas();
+        let arrivals = trace(10_000, 2000.0);
+        let tiny = run_sharded(&replicas, &arrivals, &opts(), 2, 4);
+        let reference = run_reference(&replicas, &arrivals, &opts());
+        assert_eq!(totals(&tiny), totals(&reference));
+    }
+
+    #[test]
+    fn deadline_shedding_rejects_predicted_misses() {
+        let replicas = vec![vec![StageProfile::constant(0.01)]];
+        let arrivals: Vec<f64> = (0..100).map(|i| i as f64 * 1e-4).collect();
+        let o = OfferOptions {
+            queue_capacity: 1000,
+            admission: AdmissionPolicy::Shed,
+            deadline: Some(0.02),
+            shed_on_deadline: true,
+        };
+        let sims = run_reference(&replicas, &arrivals, &o);
+        // Arrivals at 10x the service rate: the backlog passes the
+        // deadline horizon almost immediately and the rest shed.
+        assert!(sims[0].shed_deadline > 50, "shed {}", sims[0].shed_deadline);
+        assert_eq!(sims[0].slo_misses, 0, "admitted requests must meet the deadline");
+        assert!(sims[0].hist.max() <= 0.02 + 1e-9);
+    }
+
+    #[test]
+    fn blocking_admission_serves_everything() {
+        let replicas = three_replicas();
+        let arrivals = trace(5_000, 3000.0);
+        let o = OfferOptions {
+            queue_capacity: 2,
+            admission: AdmissionPolicy::Block,
+            deadline: None,
+            shed_on_deadline: false,
+        };
+        let sims = run_sharded(&replicas, &arrivals, &o, 3, 32);
+        let (admitted, shed_q, shed_d, _) = totals(&sims);
+        assert_eq!(admitted, 5_000);
+        assert_eq!(shed_q + shed_d, 0);
+    }
+}

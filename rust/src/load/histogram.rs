@@ -1,0 +1,228 @@
+//! Fixed-memory HDR-style latency histogram.
+//!
+//! A million-request open-loop run must report p50/p95/p99/p99.9
+//! without keeping a million `f64`s alive. [`LatencyHistogram`] records
+//! each latency into one of ~1.9k fixed buckets: integer microseconds,
+//! exact below 64µs, then 32 sub-buckets per power-of-two octave —
+//! log-linear, the classic HdrHistogram layout. Worst-case relative
+//! quantile error is one sub-bucket width: `2^-5 ≈ 3.1%`. Counts, sum,
+//! min and max are tracked exactly, so the mean is exact and quantiles
+//! are clamped into the observed range.
+//!
+//! Recording is order-independent (bucket increments commute), which is
+//! what lets the sharded threaded harness and the sequential analytic
+//! twin produce *identical* histograms for the same request outcomes —
+//! the open-loop agreement test compares quantiles at `== 0` tolerance.
+
+/// Linear buckets below this value (µs): one bucket per microsecond.
+const LINEAR_MAX: u64 = 64;
+/// Sub-buckets per octave above the linear range (2^5).
+const SUB_BITS: u32 = 5;
+const SUB_BUCKETS: usize = 1 << SUB_BITS;
+/// First octave exponent covered by the log range (2^6 = 64µs).
+const FIRST_EXP: u32 = 6;
+/// 64 linear buckets + 32 sub-buckets for each octave 2^6..2^63.
+const N_BUCKETS: usize = LINEAR_MAX as usize + (64 - FIRST_EXP as usize) * SUB_BUCKETS;
+
+fn bucket_index(us: u64) -> usize {
+    if us < LINEAR_MAX {
+        us as usize
+    } else {
+        let exp = 63 - us.leading_zeros();
+        let sub = ((us >> (exp - SUB_BITS)) as usize) & (SUB_BUCKETS - 1);
+        LINEAR_MAX as usize + (exp - FIRST_EXP) as usize * SUB_BUCKETS + sub
+    }
+}
+
+/// Representative value (µs) reported for a bucket: its midpoint.
+fn bucket_mid(idx: usize) -> f64 {
+    if idx < LINEAR_MAX as usize {
+        idx as f64
+    } else {
+        let rel = idx - LINEAR_MAX as usize;
+        let exp = FIRST_EXP + (rel / SUB_BUCKETS) as u32;
+        let sub = (rel % SUB_BUCKETS) as u64;
+        let width = 1u64 << (exp - SUB_BITS);
+        let lo = (1u64 << exp) + sub * width;
+        lo as f64 + width as f64 / 2.0
+    }
+}
+
+/// Fixed-bucket log-linear latency histogram (values in seconds,
+/// stored as integer microseconds).
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    buckets: Vec<u64>,
+    count: u64,
+    /// Exact sum of recorded values, in µs.
+    sum_us: u64,
+    min_us: u64,
+    max_us: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram {
+            buckets: vec![0; N_BUCKETS],
+            count: 0,
+            sum_us: 0,
+            min_us: u64::MAX,
+            max_us: 0,
+        }
+    }
+
+    /// Record one latency (seconds; negative values clamp to zero).
+    pub fn record(&mut self, secs: f64) {
+        let us = (secs.max(0.0) * 1e6).round() as u64;
+        self.buckets[bucket_index(us)] += 1;
+        self.count += 1;
+        self.sum_us = self.sum_us.saturating_add(us);
+        self.min_us = self.min_us.min(us);
+        self.max_us = self.max_us.max(us);
+    }
+
+    /// Fold `other` into `self`. Bucket counts commute, so merge order
+    /// does not change any reported quantile.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us = self.sum_us.saturating_add(other.sum_us);
+        self.min_us = self.min_us.min(other.min_us);
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact mean of recorded latencies (seconds); defined 0.0 when
+    /// empty — the zero-admitted guard the 100%-shed test pins.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64 / 1e6
+        }
+    }
+
+    /// Exact observed maximum (seconds); 0.0 when empty.
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max_us as f64 / 1e6
+        }
+    }
+
+    /// Quantile `p` in [0, 1] (seconds): midpoint of the bucket holding
+    /// the rank-`ceil(p·count)` sample, clamped into the exact observed
+    /// [min, max]. Defined 0.0 when empty.
+    pub fn quantile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (idx, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let mid = bucket_mid(idx);
+                let clamped = mid.clamp(self.min_us as f64, self.max_us as f64);
+                return clamped / 1e6;
+            }
+        }
+        self.max_us as f64 / 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_range_is_exact() {
+        let mut h = LatencyHistogram::new();
+        for us in [0u64, 1, 5, 63] {
+            h.record(us as f64 / 1e6);
+        }
+        assert_eq!(h.count(), 4);
+        // Every recorded value sits in its own exact bucket.
+        assert!((h.quantile(0.0) - 0.0).abs() < 1e-12);
+        assert!((h.quantile(1.0) - 63e-6).abs() < 1e-12);
+        assert!((h.mean() - (0.0 + 1.0 + 5.0 + 63.0) / 4.0 / 1e6).abs() < 1e-15);
+    }
+
+    #[test]
+    fn log_range_relative_error_bounded() {
+        let mut h = LatencyHistogram::new();
+        let values = [100e-6, 1e-3, 10e-3, 0.1, 1.0, 10.0, 100.0];
+        for &v in &values {
+            let mut solo = LatencyHistogram::new();
+            solo.record(v);
+            let q = solo.quantile(0.5);
+            assert!((q - v).abs() / v < 0.032, "value {v}: got {q}");
+            h.record(v);
+        }
+        assert_eq!(h.count(), values.len() as u64);
+    }
+
+    #[test]
+    fn quantiles_monotone_and_clamped() {
+        let mut h = LatencyHistogram::new();
+        let mut r = crate::util::Rng::new(9);
+        for _ in 0..10_000 {
+            h.record(r.f64() * 0.5);
+        }
+        let mut prev = 0.0;
+        for p in [0.1, 0.5, 0.9, 0.95, 0.99, 0.999, 1.0] {
+            let q = h.quantile(p);
+            assert!(q >= prev, "p{p}: {q} < {prev}");
+            assert!(q <= h.max() + 1e-12);
+            prev = q;
+        }
+    }
+
+    #[test]
+    fn empty_histogram_is_defined() {
+        let h = LatencyHistogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.max(), 0.0);
+    }
+
+    #[test]
+    fn merge_matches_single_stream() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        let mut whole = LatencyHistogram::new();
+        let mut r = crate::util::Rng::new(3);
+        for i in 0..5_000 {
+            let v = r.f64() * 2.0;
+            whole.record(v);
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        for p in [0.5, 0.95, 0.99, 0.999] {
+            assert_eq!(a.quantile(p), whole.quantile(p), "p{p}");
+        }
+        assert!((a.mean() - whole.mean()).abs() < 1e-15);
+    }
+}

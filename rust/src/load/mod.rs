@@ -1,0 +1,369 @@
+//! Open-loop load harness: million-request arrival streams, sharded
+//! dispatch, fixed-memory latency percentiles, SLO/shed accounting.
+//!
+//! The closed-loop engine ([`crate::engine`]) answers "how fast does
+//! the pipeline drain a backlog"; this module answers the production
+//! question — "what happens when requests keep arriving at a rate the
+//! pipeline does not control". A [`LoadSpec`] names a seeded
+//! [`ArrivalProcess`], admission knobs and a thread count; [`run_load`]
+//! plays the trace through sharded per-replica admission queues
+//! ([`dispatch`]) and folds the outcome into a [`LoadReport`] —
+//! throughput, p50/p95/p99/p99.9 from an HDR-style histogram
+//! ([`LatencyHistogram`]), shed rate, and deadline-miss accounting.
+//! Memory is O(replicas + ring slots + histogram buckets), never
+//! O(requests): a million-request Poisson overload runs in a few MB.
+//!
+//! Three runners, one semantics:
+//! * [`run_load`] — sharded threaded harness (SPSC rings + seqlock
+//!   telemetry cells, no shared lock on the hot path);
+//! * [`run_load_mutexed`] — the same structure behind one global
+//!   `Mutex`, kept as the contended baseline for
+//!   `benches/perf_serving.rs`;
+//! * [`run_load_reference`] — the sequential analytic twin
+//!   ([`crate::sim::simulate_open_loop`] calls it).
+//!
+//! All three agree *exactly* on admitted/shed counts and histograms —
+//! `rust/tests/open_loop.rs` pins it. [`sweep_shed_curve`] maps the
+//! (arrival rate × replicas) grid to throughput/p99/shed-rate points,
+//! the scaling table `BENCH_serving.json` records.
+
+mod arrivals;
+mod dispatch;
+mod histogram;
+mod queue;
+
+pub use arrivals::ArrivalProcess;
+pub use histogram::LatencyHistogram;
+pub use queue::{ClockCell, Polled, ShardQueue};
+
+use crate::engine::{AdmissionPolicy, StageProfile};
+use dispatch::{OfferOptions, ReplicaSim};
+
+/// One open-loop experiment: what arrives, how admission treats it,
+/// and how the harness runs it.
+#[derive(Debug, Clone)]
+pub struct LoadSpec {
+    pub process: ArrivalProcess,
+    pub n_requests: usize,
+    pub seed: u64,
+    /// Max in-flight requests per replica (clamped to >= 1).
+    pub queue_capacity: usize,
+    pub admission: AdmissionPolicy,
+    /// SLO deadline on arrival-to-completion latency (None = no SLO).
+    pub deadline: Option<f64>,
+    /// Shed requests whose predicted completion would miss `deadline`.
+    pub shed_on_deadline: bool,
+    /// Worker threads for the sharded/mutexed runners (clamped to the
+    /// replica count; the reference runner ignores it).
+    pub threads: usize,
+    /// Slots per per-replica admission ring (the backpressure bound).
+    pub channel_capacity: usize,
+}
+
+impl Default for LoadSpec {
+    fn default() -> Self {
+        LoadSpec {
+            process: ArrivalProcess::Poisson { rate: 100.0 },
+            n_requests: 10_000,
+            seed: 1,
+            queue_capacity: 64,
+            admission: AdmissionPolicy::Shed,
+            deadline: None,
+            shed_on_deadline: false,
+            threads: 4,
+            channel_capacity: 1024,
+        }
+    }
+}
+
+impl LoadSpec {
+    fn offer_options(&self) -> OfferOptions {
+        OfferOptions {
+            queue_capacity: self.queue_capacity.max(1),
+            admission: self.admission,
+            deadline: self.deadline,
+            shed_on_deadline: self.shed_on_deadline,
+        }
+    }
+}
+
+/// SLO outcome of a run (present when the spec set a deadline).
+#[derive(Debug, Clone, Copy)]
+pub struct SloReport {
+    pub deadline: f64,
+    /// Admitted requests that finished after the deadline.
+    pub misses: u64,
+    /// `misses / admitted` (0.0 when nothing was admitted).
+    pub miss_rate: f64,
+}
+
+/// Per-replica slice of a run.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaLoad {
+    pub replica: usize,
+    pub admitted: u64,
+    pub shed: u64,
+    /// Latest completion on this replica (virtual seconds).
+    pub horizon: f64,
+}
+
+/// Everything a load run reports. All statistics are defined (0.0, not
+/// NaN) for the zero-admitted / 100%-shed case — pinned by tests.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    /// Requests in the arrival trace.
+    pub offered: u64,
+    pub admitted: u64,
+    pub shed_queue: u64,
+    pub shed_deadline: u64,
+    /// `(shed_queue + shed_deadline) / offered`.
+    pub shed_rate: f64,
+    /// Offered arrival rate over the trace span (requests/sec).
+    pub offered_rate: f64,
+    /// Last completion minus first arrival (virtual seconds).
+    pub makespan: f64,
+    /// `admitted / makespan` (virtual requests/sec).
+    pub throughput: f64,
+    pub mean_latency: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub p999: f64,
+    pub slo: Option<SloReport>,
+    pub per_replica: Vec<ReplicaLoad>,
+    /// Merged per-request latency histogram (fixed memory).
+    pub histogram: LatencyHistogram,
+    /// Host wall-clock seconds the harness itself took.
+    pub wall_secs: f64,
+}
+
+impl LoadReport {
+    fn from_sims(sims: Vec<ReplicaSim>, arrivals: &[f64], spec: &LoadSpec, wall: f64) -> Self {
+        let offered = arrivals.len() as u64;
+        let admitted: u64 = sims.iter().map(|s| s.admitted).sum();
+        let shed_queue: u64 = sims.iter().map(|s| s.shed_queue).sum();
+        let shed_deadline: u64 = sims.iter().map(|s| s.shed_deadline).sum();
+        let misses: u64 = sims.iter().map(|s| s.slo_misses).sum();
+        let mut histogram = LatencyHistogram::new();
+        for s in &sims {
+            histogram.merge(&s.hist);
+        }
+        let first = arrivals.first().copied().unwrap_or(0.0);
+        let last = arrivals.last().copied().unwrap_or(0.0);
+        let horizon = sims.iter().map(|s| s.horizon).fold(0.0f64, f64::max);
+        let makespan = if admitted > 0 { horizon - first } else { 0.0 };
+        let span = last - first;
+        LoadReport {
+            offered,
+            admitted,
+            shed_queue,
+            shed_deadline,
+            shed_rate: if offered > 0 {
+                (shed_queue + shed_deadline) as f64 / offered as f64
+            } else {
+                0.0
+            },
+            offered_rate: if span > 0.0 { (offered.saturating_sub(1)) as f64 / span } else { 0.0 },
+            makespan,
+            throughput: if makespan > 0.0 { admitted as f64 / makespan } else { 0.0 },
+            mean_latency: histogram.mean(),
+            p50: histogram.quantile(0.50),
+            p95: histogram.quantile(0.95),
+            p99: histogram.quantile(0.99),
+            p999: histogram.quantile(0.999),
+            slo: spec.deadline.map(|deadline| SloReport {
+                deadline,
+                misses,
+                miss_rate: if admitted > 0 { misses as f64 / admitted as f64 } else { 0.0 },
+            }),
+            per_replica: sims
+                .iter()
+                .enumerate()
+                .map(|(replica, s)| ReplicaLoad {
+                    replica,
+                    admitted: s.admitted,
+                    shed: s.shed_queue + s.shed_deadline,
+                    horizon: s.horizon,
+                })
+                .collect(),
+            histogram,
+            wall_secs: wall,
+        }
+    }
+}
+
+fn timed<R>(f: impl FnOnce() -> R) -> (R, f64) {
+    let t0 = std::time::Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+/// Run `spec` through the sharded threaded harness over `replicas`
+/// (one stage-profile vector per pipeline replica).
+pub fn run_load(replicas: &[Vec<StageProfile>], spec: &LoadSpec) -> LoadReport {
+    let arrivals = spec.process.generate(spec.n_requests, spec.seed);
+    let opts = spec.offer_options();
+    let (sims, wall) = timed(|| {
+        dispatch::run_sharded(replicas, &arrivals, &opts, spec.threads, spec.channel_capacity)
+    });
+    LoadReport::from_sims(sims, &arrivals, spec, wall)
+}
+
+/// [`run_load`] through the single-global-Mutex baseline — identical
+/// results, contended wall-clock; the serving bench's comparison arm.
+pub fn run_load_mutexed(replicas: &[Vec<StageProfile>], spec: &LoadSpec) -> LoadReport {
+    let arrivals = spec.process.generate(spec.n_requests, spec.seed);
+    let opts = spec.offer_options();
+    let (sims, wall) = timed(|| {
+        dispatch::run_mutexed(replicas, &arrivals, &opts, spec.threads, spec.channel_capacity)
+    });
+    LoadReport::from_sims(sims, &arrivals, spec, wall)
+}
+
+/// [`run_load`] through the sequential analytic twin (no threads, no
+/// rings) — the ground truth the agreement test compares against.
+pub fn run_load_reference(replicas: &[Vec<StageProfile>], spec: &LoadSpec) -> LoadReport {
+    let arrivals = spec.process.generate(spec.n_requests, spec.seed);
+    let opts = spec.offer_options();
+    let (sims, wall) = timed(|| dispatch::run_reference(replicas, &arrivals, &opts));
+    LoadReport::from_sims(sims, &arrivals, spec, wall)
+}
+
+/// One cell of the shed-rate curve sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepPoint {
+    pub rate: f64,
+    pub replicas: usize,
+    pub throughput: f64,
+    pub p99: f64,
+    pub shed_rate: f64,
+}
+
+/// Sweep Poisson arrival rate × replica count over copies of one
+/// pipeline profile, via the analytic twin (the sweep is about the
+/// curve shape, not harness wall-clock). Rows come back in
+/// (replicas, rate) order.
+pub fn sweep_shed_curve(
+    profile: &[StageProfile],
+    rates: &[f64],
+    replica_counts: &[usize],
+    base: &LoadSpec,
+) -> Vec<SweepPoint> {
+    let mut out = Vec::with_capacity(rates.len() * replica_counts.len());
+    for &r in replica_counts {
+        assert!(r >= 1, "replica count must be >= 1");
+        let replicas: Vec<Vec<StageProfile>> = vec![profile.to_vec(); r];
+        for &rate in rates {
+            let spec = LoadSpec { process: ArrivalProcess::Poisson { rate }, ..base.clone() };
+            let rep = run_load_reference(&replicas, &spec);
+            out.push(SweepPoint {
+                rate,
+                replicas: r,
+                throughput: rep.throughput,
+                p99: rep.p99,
+                shed_rate: rep.shed_rate,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile() -> Vec<StageProfile> {
+        vec![StageProfile::constant(0.002), StageProfile::constant(0.003)]
+    }
+
+    #[test]
+    fn underload_sheds_nothing_and_meets_rate() {
+        // 2 replicas at period 3ms each ~ 666 req/s capacity; offer 200.
+        let replicas = vec![profile(), profile()];
+        let spec = LoadSpec {
+            process: ArrivalProcess::Poisson { rate: 200.0 },
+            n_requests: 5_000,
+            ..Default::default()
+        };
+        let rep = run_load(&replicas, &spec);
+        assert_eq!(rep.admitted, 5_000);
+        assert_eq!(rep.shed_rate, 0.0);
+        assert!((rep.offered_rate - 200.0).abs() < 20.0, "rate {}", rep.offered_rate);
+        assert!(rep.p50 >= 0.005 - 1e-9, "p50 below bare latency: {}", rep.p50);
+        assert!(rep.p999 >= rep.p99 && rep.p99 >= rep.p50);
+    }
+
+    #[test]
+    fn overload_sheds_and_caps_throughput() {
+        // 1 replica, period 3ms ~ 333 req/s; offer 2000 req/s, cap 8.
+        let replicas = vec![profile()];
+        let spec = LoadSpec {
+            process: ArrivalProcess::Poisson { rate: 2000.0 },
+            n_requests: 20_000,
+            queue_capacity: 8,
+            ..Default::default()
+        };
+        let rep = run_load(&replicas, &spec);
+        assert!(rep.shed_rate > 0.5, "shed_rate {}", rep.shed_rate);
+        assert!(rep.throughput < 400.0, "throughput {}", rep.throughput);
+        assert_eq!(rep.admitted + rep.shed_queue + rep.shed_deadline, rep.offered);
+    }
+
+    #[test]
+    fn slo_accounting_counts_deadline_misses() {
+        let replicas = vec![profile()];
+        let spec = LoadSpec {
+            process: ArrivalProcess::Poisson { rate: 1000.0 },
+            n_requests: 5_000,
+            queue_capacity: 32,
+            deadline: Some(0.006),
+            ..Default::default()
+        };
+        let rep = run_load(&replicas, &spec);
+        let slo = rep.slo.expect("deadline set");
+        assert!(slo.misses > 0, "overloaded run should miss some deadlines");
+        assert!(slo.miss_rate > 0.0 && slo.miss_rate <= 1.0);
+    }
+
+    #[test]
+    fn sweep_shed_rate_monotone_in_rate_and_falls_with_replicas() {
+        let base = LoadSpec { n_requests: 4_000, queue_capacity: 8, ..Default::default() };
+        let pts = sweep_shed_curve(&profile(), &[100.0, 500.0, 2500.0], &[1, 4], &base);
+        assert_eq!(pts.len(), 6);
+        for pair in pts.chunks(3) {
+            assert!(pair[0].shed_rate <= pair[1].shed_rate + 1e-9);
+            assert!(pair[1].shed_rate <= pair[2].shed_rate + 1e-9);
+        }
+        // At the highest rate, 4 replicas shed less than 1.
+        let r1 = &pts[2];
+        let r4 = &pts[5];
+        assert!(r4.shed_rate < r1.shed_rate, "r4 {} vs r1 {}", r4.shed_rate, r1.shed_rate);
+    }
+
+    #[test]
+    fn hundred_percent_shed_yields_defined_stats() {
+        // Deadline shorter than any possible service: every request is
+        // predicted late and shed; nothing is ever admitted.
+        let replicas = vec![profile()];
+        let spec = LoadSpec {
+            process: ArrivalProcess::ConstantRate { rate: 100.0 },
+            n_requests: 500,
+            deadline: Some(1e-12),
+            shed_on_deadline: true,
+            ..Default::default()
+        };
+        for rep in [run_load(&replicas, &spec), run_load_reference(&replicas, &spec)] {
+            assert_eq!(rep.admitted, 0);
+            assert_eq!(rep.shed_deadline, 500);
+            assert_eq!(rep.shed_rate, 1.0);
+            let stats = [rep.throughput, rep.mean_latency, rep.p50, rep.p99, rep.p999];
+            for v in stats {
+                assert!(v == 0.0 && v.is_finite(), "expected defined zero, got {v}");
+            }
+            assert_eq!(rep.makespan, 0.0);
+            let slo = rep.slo.expect("deadline set");
+            assert_eq!(slo.misses, 0);
+            assert_eq!(slo.miss_rate, 0.0);
+        }
+    }
+}

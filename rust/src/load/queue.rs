@@ -1,0 +1,222 @@
+//! Lock-free building blocks for the sharded open-loop harness.
+//!
+//! [`ShardQueue`] is a bounded single-producer/single-consumer ring of
+//! `AtomicU64` slots (a Lamport queue with in-band sentinels): the
+//! assigner thread pushes request indices, exactly one worker pops
+//! them. A full ring makes the producer spin — that *is* the
+//! backpressure bound; memory never grows past the ring.
+//!
+//! [`ClockCell`] is a seqlock-published two-word telemetry snapshot
+//! (front-free virtual time + admitted count) each replica worker
+//! updates after every request. Readers retry on a torn read (odd or
+//! changed epoch). The payload words are themselves atomics, so there
+//! is no data race in the UB sense — the epoch protocol only guards
+//! *pair* consistency, which a single `AtomicU64` could not give us.
+//! A plain `Mutex` here would put every dispatch decision back behind
+//! the very lock this harness exists to remove.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Slot sentinel: empty, ready for the producer.
+const EMPTY: u64 = u64::MAX;
+/// Slot sentinel: producer is done; never overwritten.
+const CLOSED: u64 = u64::MAX - 1;
+
+/// What a consumer poll observed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Polled {
+    /// Nothing available yet; try again.
+    Pending,
+    /// Producer closed the queue; no more items will ever arrive.
+    Closed,
+    /// One dequeued value.
+    Item(u64),
+}
+
+/// Bounded SPSC ring of `AtomicU64` slots. Values must be below
+/// `u64::MAX - 1` (request indices always are). Head/tail cursors live
+/// with their owning thread, not in the struct — each side mutates only
+/// its own cursor, so the shared state is just the slot array.
+pub struct ShardQueue {
+    slots: Vec<AtomicU64>,
+    mask: usize,
+}
+
+impl ShardQueue {
+    /// A ring with at least `capacity` slots (rounded up to a power of
+    /// two, minimum 2).
+    pub fn new(capacity: usize) -> Self {
+        let cap = capacity.max(2).next_power_of_two();
+        ShardQueue { slots: (0..cap).map(|_| AtomicU64::new(EMPTY)).collect(), mask: cap - 1 }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Producer: enqueue `v`, spinning while the ring is full. `tail`
+    /// is the producer's private cursor.
+    pub fn push(&self, tail: &mut usize, v: u64) {
+        debug_assert!(v < CLOSED, "value collides with sentinel");
+        self.write_slot(tail, v);
+    }
+
+    /// Producer: mark the stream finished. The consumer sees
+    /// [`Polled::Closed`] once it drains up to this slot.
+    pub fn close(&self, tail: &mut usize) {
+        self.write_slot(tail, CLOSED);
+    }
+
+    fn write_slot(&self, tail: &mut usize, v: u64) {
+        let slot = &self.slots[*tail & self.mask];
+        let mut spins = 0u32;
+        while slot.load(Ordering::Acquire) != EMPTY {
+            backoff(&mut spins);
+        }
+        slot.store(v, Ordering::Release);
+        *tail += 1;
+    }
+
+    /// Consumer: non-blocking poll. `head` is the consumer's private
+    /// cursor; it advances only on [`Polled::Item`].
+    pub fn poll(&self, head: &mut usize) -> Polled {
+        let slot = &self.slots[*head & self.mask];
+        match slot.load(Ordering::Acquire) {
+            EMPTY => Polled::Pending,
+            // Leave the sentinel in place so every later poll still
+            // reports Closed.
+            CLOSED => Polled::Closed,
+            v => {
+                slot.store(EMPTY, Ordering::Release);
+                *head += 1;
+                Polled::Item(v)
+            }
+        }
+    }
+}
+
+/// Spin briefly, then yield to the scheduler: the ring is usually
+/// drained within a few loads, but a descheduled peer must not burn a
+/// core.
+pub fn backoff(spins: &mut u32) {
+    *spins += 1;
+    if *spins < 1024 {
+        std::hint::spin_loop();
+    } else {
+        *spins = 0;
+        std::thread::yield_now();
+    }
+}
+
+/// Seqlock-published replica telemetry: (front-free virtual time,
+/// admitted count). One writer — the replica's owning worker — and any
+/// number of readers.
+#[derive(Default)]
+pub struct ClockCell {
+    /// Even = stable, odd = write in progress.
+    epoch: AtomicU64,
+    free_bits: AtomicU64,
+    admitted: AtomicU64,
+}
+
+impl ClockCell {
+    /// Writer side: publish a new snapshot. Single-writer by contract
+    /// (each worker owns its replicas), so no CAS is needed.
+    pub fn publish(&self, free: f64, admitted: u64) {
+        let e = self.epoch.load(Ordering::Relaxed);
+        self.epoch.store(e.wrapping_add(1), Ordering::Release);
+        self.free_bits.store(free.to_bits(), Ordering::Release);
+        self.admitted.store(admitted, Ordering::Release);
+        self.epoch.store(e.wrapping_add(2), Ordering::Release);
+    }
+
+    /// Reader side: retry until a consistent (free, admitted) pair is
+    /// observed.
+    pub fn read(&self) -> (f64, u64) {
+        let mut spins = 0u32;
+        loop {
+            let e1 = self.epoch.load(Ordering::Acquire);
+            if e1 & 1 == 0 {
+                let free = self.free_bits.load(Ordering::Acquire);
+                let admitted = self.admitted.load(Ordering::Acquire);
+                if self.epoch.load(Ordering::Acquire) == e1 {
+                    return (f64::from_bits(free), admitted);
+                }
+            }
+            backoff(&mut spins);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spsc_fifo_through_wraparound() {
+        let q = ShardQueue::new(4);
+        let (mut tail, mut head) = (0usize, 0usize);
+        for round in 0..5u64 {
+            for i in 0..4 {
+                q.push(&mut tail, round * 4 + i);
+            }
+            for i in 0..4 {
+                assert_eq!(q.poll(&mut head), Polled::Item(round * 4 + i));
+            }
+        }
+        assert_eq!(q.poll(&mut head), Polled::Pending);
+        q.close(&mut tail);
+        assert_eq!(q.poll(&mut head), Polled::Closed);
+        assert_eq!(q.poll(&mut head), Polled::Closed);
+    }
+
+    #[test]
+    fn spsc_across_threads_preserves_order() {
+        let q = ShardQueue::new(8);
+        let n = 100_000u64;
+        std::thread::scope(|scope| {
+            scope.spawn(|| {
+                let mut tail = 0usize;
+                for v in 0..n {
+                    q.push(&mut tail, v);
+                }
+                q.close(&mut tail);
+            });
+            let mut head = 0usize;
+            let mut next = 0u64;
+            let mut spins = 0u32;
+            loop {
+                match q.poll(&mut head) {
+                    Polled::Item(v) => {
+                        assert_eq!(v, next);
+                        next += 1;
+                    }
+                    Polled::Pending => backoff(&mut spins),
+                    Polled::Closed => break,
+                }
+            }
+            assert_eq!(next, n);
+        });
+    }
+
+    #[test]
+    fn clock_cell_never_tears() {
+        // Writer publishes pairs (t, t as count); readers must never
+        // see a mixed pair.
+        let cell = ClockCell::default();
+        std::thread::scope(|scope| {
+            scope.spawn(|| {
+                for t in 1..=50_000u64 {
+                    cell.publish(t as f64, t);
+                }
+            });
+            for _ in 0..50_000 {
+                let (free, admitted) = cell.read();
+                assert_eq!(free, admitted as f64, "torn read: ({free}, {admitted})");
+            }
+        });
+        let (free, admitted) = cell.read();
+        assert_eq!(admitted, 50_000);
+        assert_eq!(free, 50_000.0);
+    }
+}

@@ -22,6 +22,7 @@ use crate::cluster::Cluster;
 use crate::cost::{stage_cost, StageCost};
 use crate::engine::{run_pipeline, EngineConfig, StageProfile, TimingReport};
 use crate::graph::{LayerId, ModelGraph, Shape};
+use crate::load::{self, LoadReport, LoadSpec};
 use crate::pipeline::{PipelinePlan, PlannerStats};
 
 /// Per-device simulation outcome.
@@ -204,6 +205,50 @@ pub fn simulate_replicated(
         n_requests: n,
         per_device,
     }
+}
+
+/// Per-replica stage profiles from the Eq. 7–11 cost model — the exact
+/// timing inputs [`simulate_replicated`] and the serving coordinator
+/// both derive from a plan set. Factored out so the open-loop harness
+/// ([`crate::load`]) drives the very same profiles: open- and
+/// closed-loop runs then disagree only in their arrival model, never in
+/// stage timing.
+pub fn replica_profiles(
+    g: &ModelGraph,
+    cluster: &Cluster,
+    plans: &[PipelinePlan],
+) -> Vec<Vec<StageProfile>> {
+    plans
+        .iter()
+        .map(|plan| {
+            plan.stages
+                .iter()
+                .map(|s| {
+                    let devs: Vec<&crate::cluster::Device> =
+                        s.devices.iter().map(|&i| &cluster.devices[i]).collect();
+                    StageProfile::from_stage_cost(
+                        &stage_cost(g, &s.layers, &devs, &cluster.network),
+                        &cluster.network,
+                    )
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Open-loop analytic twin of [`crate::deploy::DeploymentPlan::load_test`]:
+/// play `spec`'s seeded arrival trace through the plan set's cost-model
+/// stage profiles with the sequential reference runner. The threaded
+/// harness must agree with this *exactly* on admitted/shed counts and
+/// histograms — `rust/tests/open_loop.rs` pins it.
+pub fn simulate_open_loop(
+    g: &ModelGraph,
+    cluster: &Cluster,
+    plans: &[PipelinePlan],
+    spec: &LoadSpec,
+) -> LoadReport {
+    assert!(!plans.is_empty(), "need at least one pipeline replica");
+    load::run_load_reference(&replica_profiles(g, cluster, plans), spec)
 }
 
 /// Analytic outcome of an adaptive (drift-injected) simulation run.

@@ -1,0 +1,169 @@
+//! Open-loop sim↔serve agreement suite.
+//!
+//! The contract under test: the sharded threaded load harness
+//! (`DeploymentPlan::load_test`), the single-Mutex baseline runner, and
+//! the sequential analytic twin (`DeploymentPlan::simulate_open_loop` /
+//! `sim::simulate_open_loop`) play the *same* seeded arrival trace to
+//! the *same* outcome — admitted/shed counts agree exactly, and the
+//! latency histograms are identical bucket for bucket, so percentiles
+//! agree to floating-point equality. This is the open-loop counterpart
+//! of `rust/tests/agreement.rs`.
+
+use pico::cluster::Cluster;
+use pico::deploy::{DeploymentPlan, Replicas};
+use pico::engine::{AdmissionPolicy, StageProfile};
+use pico::load::{run_load, run_load_mutexed, run_load_reference, ArrivalProcess, LoadSpec};
+
+fn deployment(replicas: usize, devices: usize) -> DeploymentPlan {
+    DeploymentPlan::builder()
+        .model("squeezenet")
+        .cluster(Cluster::homogeneous_rpi(devices, 1.0))
+        .replicas(Replicas::Fixed(replicas))
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn facade_load_test_agrees_with_analytic_twin_exactly() {
+    let d = deployment(2, 4);
+    // Rate far above what two RPi pipelines serve: both admissions and
+    // queue sheds occur, so the agreement covers every path.
+    let spec = LoadSpec {
+        process: ArrivalProcess::Poisson { rate: 400.0 },
+        n_requests: 60_000,
+        seed: 2024,
+        queue_capacity: 8,
+        admission: AdmissionPolicy::Shed,
+        deadline: Some(0.5),
+        threads: 4,
+        ..Default::default()
+    };
+    let threaded = d.load_test(&spec).unwrap();
+    let analytic = d.simulate_open_loop(&spec).unwrap();
+
+    assert_eq!(threaded.offered, 60_000);
+    assert!(threaded.admitted > 0, "some requests must be admitted");
+    assert!(threaded.shed_queue > 0, "overload must shed");
+    // Exact count agreement — not a tolerance.
+    assert_eq!(threaded.admitted, analytic.admitted);
+    assert_eq!(threaded.shed_queue, analytic.shed_queue);
+    assert_eq!(threaded.shed_deadline, analytic.shed_deadline);
+    let (t_slo, a_slo) = (threaded.slo.unwrap(), analytic.slo.unwrap());
+    assert_eq!(t_slo.misses, a_slo.misses);
+    // Identical histograms: percentiles match to f64 equality noise.
+    assert!((threaded.p50 - analytic.p50).abs() < 1e-12);
+    assert!((threaded.p99 - analytic.p99).abs() < 1e-12);
+    assert!((threaded.p999 - analytic.p999).abs() < 1e-12);
+    assert!((threaded.mean_latency - analytic.mean_latency).abs() < 1e-12);
+    assert!((threaded.makespan - analytic.makespan).abs() < 1e-9);
+    // Per-replica attribution agrees too.
+    for (t, a) in threaded.per_replica.iter().zip(&analytic.per_replica) {
+        assert_eq!(t.admitted, a.admitted);
+        assert_eq!(t.shed, a.shed);
+    }
+}
+
+#[test]
+fn mutexed_baseline_matches_sharded_through_public_api() {
+    let replicas: Vec<Vec<StageProfile>> = vec![
+        vec![StageProfile::constant(0.002), StageProfile::constant(0.0035)],
+        vec![StageProfile::constant(0.003)],
+        vec![StageProfile { fixed: 0.001, per_item: 0.001 }],
+        vec![StageProfile::constant(0.0025), StageProfile::constant(0.001)],
+    ];
+    let spec = LoadSpec {
+        process: ArrivalProcess::BurstyOnOff {
+            rate_on: 2500.0,
+            rate_off: 100.0,
+            on_secs: 2.0,
+            off_secs: 2.0,
+        },
+        n_requests: 50_000,
+        seed: 7,
+        queue_capacity: 16,
+        threads: 4,
+        ..Default::default()
+    };
+    let sharded = run_load(&replicas, &spec);
+    let mutexed = run_load_mutexed(&replicas, &spec);
+    let reference = run_load_reference(&replicas, &spec);
+    for other in [&mutexed, &reference] {
+        assert_eq!(sharded.admitted, other.admitted);
+        assert_eq!(sharded.shed_queue, other.shed_queue);
+        assert!((sharded.p50 - other.p50).abs() < 1e-12);
+        assert!((sharded.p99 - other.p99).abs() < 1e-12);
+        assert!((sharded.throughput - other.throughput).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn hundred_percent_shed_reports_defined_stats_through_facade() {
+    // A deadline no request can make plus predictive shedding: every
+    // single request is shed. Every statistic must come back defined
+    // (0.0), never NaN — the metrics bugfix this PR pins end to end.
+    let d = deployment(1, 2);
+    let spec = LoadSpec {
+        process: ArrivalProcess::ConstantRate { rate: 200.0 },
+        n_requests: 2_000,
+        deadline: Some(1e-12),
+        shed_on_deadline: true,
+        ..Default::default()
+    };
+    let rep = d.load_test(&spec).unwrap();
+    assert_eq!(rep.admitted, 0);
+    assert_eq!(rep.shed_deadline, 2_000);
+    assert_eq!(rep.shed_rate, 1.0);
+    for v in [rep.throughput, rep.mean_latency, rep.p50, rep.p95, rep.p99, rep.p999] {
+        assert!(v == 0.0 && v.is_finite(), "expected defined 0.0, got {v}");
+    }
+    let slo = rep.slo.unwrap();
+    assert_eq!(slo.misses, 0);
+    assert_eq!(slo.miss_rate, 0.0);
+    assert!(rep.histogram.is_empty());
+}
+
+#[test]
+fn sustained_overload_stays_bounded_and_conserves_requests() {
+    // 200k Poisson arrivals at ~6x capacity through small rings: the
+    // assigner must backpressure on full rings (bounded memory), shed
+    // the overflow at admission, and account for every single request.
+    let replicas: Vec<Vec<StageProfile>> =
+        vec![vec![StageProfile::constant(0.004), StageProfile::constant(0.006)]; 2];
+    let spec = LoadSpec {
+        process: ArrivalProcess::Poisson { rate: 2_000.0 },
+        n_requests: 200_000,
+        seed: 99,
+        queue_capacity: 32,
+        channel_capacity: 64,
+        threads: 4,
+        ..Default::default()
+    };
+    let rep = run_load(&replicas, &spec);
+    assert_eq!(rep.offered, 200_000);
+    assert_eq!(rep.admitted + rep.shed_queue + rep.shed_deadline, rep.offered);
+    assert!(rep.shed_rate > 0.5, "6x overload must shed most: {}", rep.shed_rate);
+    // Admitted throughput sits at (not above) pipeline capacity:
+    // 2 replicas / 6ms bottleneck ≈ 333/s.
+    assert!(rep.throughput < 350.0, "throughput {} above capacity", rep.throughput);
+    assert!(rep.throughput > 250.0, "throughput {} collapsed", rep.throughput);
+}
+
+#[test]
+fn diurnal_trace_replay_is_reproducible_through_facade() {
+    let d = deployment(1, 2);
+    let spec = LoadSpec {
+        process: ArrivalProcess::Diurnal { base_rate: 20.0, peak_rate: 400.0, period_secs: 30.0 },
+        n_requests: 20_000,
+        seed: 5,
+        queue_capacity: 8,
+        ..Default::default()
+    };
+    let a = d.load_test(&spec).unwrap();
+    let b = d.load_test(&spec).unwrap();
+    assert_eq!(a.admitted, b.admitted);
+    assert_eq!(a.shed_queue, b.shed_queue);
+    assert!((a.p99 - b.p99).abs() < 1e-12);
+    // The diurnal peak overloads a single replica while the trough is
+    // idle: sheds happen, but nowhere near everything.
+    assert!(a.shed_rate > 0.0 && a.shed_rate < 1.0, "shed_rate {}", a.shed_rate);
+}
