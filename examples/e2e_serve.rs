@@ -78,7 +78,10 @@ fn serve_one(dir: &PathBuf, model: &str) -> anyhow::Result<Vec<String>> {
     let requests: Vec<Request> = (0..n_req as u64)
         .map(|id| Request {
             id,
-            input: Tensor::new(vec![c, h, w], (0..c * h * w).map(|_| rng.normal() as f32).collect()),
+            input: Tensor::new(
+                vec![c, h, w],
+                (0..c * h * w).map(|_| rng.normal() as f32).collect(),
+            ),
             t_submit: 0.0,
         })
         .collect();
@@ -87,7 +90,8 @@ fn serve_one(dir: &PathBuf, model: &str) -> anyhow::Result<Vec<String>> {
     let engine = Arc::new(Engine::cpu()?);
     let artifacts = Arc::new(PipelineArtifacts::load(dir, model)?);
     let full = artifacts.full_model(&engine)?;
-    let expect: Vec<Tensor> = requests.iter().map(|r| full.run(&r.input)).collect::<Result<_, _>>()?;
+    let expect: Vec<Tensor> =
+        requests.iter().map(|r| full.run(&r.input)).collect::<Result<_, _>>()?;
 
     // Serve through the deployed pipeline.
     let cfg = ServeConfig { requests: Some(requests), ..ServeConfig::default() };

@@ -20,14 +20,19 @@ fn main() -> anyhow::Result<()> {
     let w = width(&g);
     let d = 5usize;
     let bound = (w * d) as f64 * ((n * d) as f64 / w as f64).powi(w as i32);
-    println!("NASNet-A-Large: n={n} conv/pool vertices, width w={w}, bound wd(nd/w)^w = {bound:.1e}");
+    println!(
+        "NASNet-A-Large: n={n} conv/pool vertices, width w={w}, bound wd(nd/w)^w = {bound:.1e}"
+    );
 
     // Direct run with a short budget: expected to blow through it (the
     // paper reports >5h).
     let budget = Duration::from_secs(10);
     match partition::partition(&g, d, Some(budget)) {
         Ok(r) => println!("direct: unexpectedly finished with {} pieces", r.pieces.len()),
-        Err(_) => println!("direct: exceeded a {}s budget, as the paper's >5h row predicts", budget.as_secs()),
+        Err(_) => println!(
+            "direct: exceeded a {}s budget, as the paper's >5h row predicts",
+            budget.as_secs()
+        ),
     }
 
     // Divide-and-conquer (the paper's NASNetL-P row used 8 slices and

@@ -101,7 +101,8 @@ fn ablation_rebalance() {
     println!("\n=== Ablation 4: stage rebalancing vs heterogeneity spread ===");
     let g = modelzoo::vgg16();
     let pieces = partition::partition(&g, 5, None).unwrap().pieces;
-    let mut t = Table::new(&["fast:slow capacity ratio", "Alg3 period", "rebalanced", "gain %", "moves"]);
+    let mut t =
+        Table::new(&["fast:slow capacity ratio", "Alg3 period", "rebalanced", "gain %", "moves"]);
     for ratio in [1.0, 2.0, 4.0, 8.0, 16.0] {
         let mut devs = vec![Device::rpi(0, 1.0)];
         devs[0].flops *= ratio;
@@ -120,5 +121,8 @@ fn ablation_rebalance() {
         ]);
     }
     t.print();
-    println!("(the paper's §8 failure case: Algorithm 3 alone leaves stage imbalance\n when capacities are extremely varied; local search recovers it)");
+    println!(
+        "(the paper's §8 failure case: Algorithm 3 alone leaves stage imbalance\n when \
+         capacities are extremely varied; local search recovers it)"
+    );
 }

@@ -16,12 +16,12 @@ use pico::util::Table;
 fn main() {
     let g = modelzoo::vgg16();
     // Spatial layers in order (fused-depth axis of Fig. 5).
-    let convs: Vec<LayerId> =
-        (0..g.n_layers()).filter(|&i| g.layer(i).op.is_spatial()).collect();
+    let convs: Vec<LayerId> = (0..g.n_layers()).filter(|&i| g.layer(i).op.is_spatial()).collect();
     let device_counts = [1usize, 2, 4, 6, 8];
 
     let mut per_dev = Table::new(&["fused layers", "1 dev GFLOP", "2", "4", "6", "8"]);
-    let mut total = Table::new(&["fused layers", "1 dev total", "2", "4", "6", "8", "redundancy @8"]);
+    let mut total =
+        Table::new(&["fused layers", "1 dev total", "2", "4", "6", "8", "redundancy @8"]);
     for depth in 1..=13usize {
         let segment: Vec<LayerId> = convs.iter().copied().take(depth).collect();
         let ideal = ideal_segment_flops(&g, &segment);

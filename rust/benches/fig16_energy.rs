@@ -44,7 +44,12 @@ fn main() {
         let mut t = Table::new(&["scheme", "execution J", "standby J", "total J"]);
         for r in &reports {
             let (e, s) = split_energy(r, &c);
-            t.row(&[r.scheme.clone(), format!("{e:.1}"), format!("{s:.1}"), format!("{:.1}", e + s)]);
+            t.row(&[
+                r.scheme.clone(),
+                format!("{e:.1}"),
+                format!("{s:.1}"),
+                format!("{:.1}", e + s),
+            ]);
         }
         t.print();
     }

@@ -15,7 +15,8 @@ fn compare(g: &pico::graph::ModelGraph, c: &Cluster, label: &str) {
     let pieces = partition::partition(g, 5, None).unwrap().pieces;
     let plan = pipeline::plan(g, &pieces, c, f64::INFINITY).unwrap();
     let pico_r = sim::simulate_pipeline(g, c, &plan, 100);
-    let bfs = baselines::bfs_optimal(g, &pieces, c, f64::INFINITY, Some(std::time::Duration::from_secs(600)));
+    let budget = Some(std::time::Duration::from_secs(600));
+    let bfs = baselines::bfs_optimal(g, &pieces, c, f64::INFINITY, budget);
     let bfs_plan = bfs.plan.expect("BFS found no plan");
     let bfs_r = sim::simulate_pipeline(g, c, &bfs_plan, 100);
 

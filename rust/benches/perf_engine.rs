@@ -89,7 +89,8 @@ fn main() {
             &ServeOptions::default(),
         )
         .unwrap();
-        let devices: usize = plans.iter().map(|p| p.stages.iter().map(|s| s.devices.len()).sum::<usize>()).sum();
+        let devices: usize =
+            plans.iter().map(|p| p.stages.iter().map(|s| s.devices.len()).sum::<usize>()).sum();
         if baseline == 0.0 {
             baseline = report.throughput;
         }

@@ -50,16 +50,36 @@ fn planner_hotpath(t: &mut Table) {
 
     let speedup = reference_dp_s / oracle_dp_s.max(1e-9);
     let eval_ratio = ref_dp.stats.stage_evals as f64 / dp.stats.stage_evals.max(1) as f64;
-    t.row(&["Algorithm 1 (D&C), NASNet slice".into(), format!("{:.0}ms", partition_s * 1e3),
-        "1".into(), format!("{} pieces", pieces.len())]);
-    t.row(&["Algorithm 2 (oracle), NASNet x 8".into(), format!("{:.1}ms", oracle_dp_s * 1e3),
-        "1".into(), format!("{} leaf evals, {} hits", dp.stats.stage_evals, dp.stats.ts_cache_hits)]);
-    t.row(&["Algorithm 2 (reference), NASNet x 8".into(), format!("{:.1}ms", reference_dp_s * 1e3),
-        "1".into(), format!("{} leaf evals", ref_dp.stats.stage_evals)]);
-    t.row(&["planner DP speedup".into(), format!("{speedup:.1}x"), "-".into(),
-        format!("leaf-eval ratio {eval_ratio:.1}x")]);
-    t.row(&["plan end-to-end (partition+DP+adapt)".into(), format!("{:.0}ms", end_to_end_s * 1e3),
-        "1".into(), format!("{} stages", plan.stages.len())]);
+    t.row(&[
+        "Algorithm 1 (D&C), NASNet slice".into(),
+        format!("{:.0}ms", partition_s * 1e3),
+        "1".into(),
+        format!("{} pieces", pieces.len()),
+    ]);
+    t.row(&[
+        "Algorithm 2 (oracle), NASNet x 8".into(),
+        format!("{:.1}ms", oracle_dp_s * 1e3),
+        "1".into(),
+        format!("{} leaf evals, {} hits", dp.stats.stage_evals, dp.stats.ts_cache_hits),
+    ]);
+    t.row(&[
+        "Algorithm 2 (reference), NASNet x 8".into(),
+        format!("{:.1}ms", reference_dp_s * 1e3),
+        "1".into(),
+        format!("{} leaf evals", ref_dp.stats.stage_evals),
+    ]);
+    t.row(&[
+        "planner DP speedup".into(),
+        format!("{speedup:.1}x"),
+        "-".into(),
+        format!("leaf-eval ratio {eval_ratio:.1}x"),
+    ]);
+    t.row(&[
+        "plan end-to-end (partition+DP+adapt)".into(),
+        format!("{:.0}ms", end_to_end_s * 1e3),
+        "1".into(),
+        format!("{} stages", plan.stages.len()),
+    ]);
 
     let json = format!(
         "{{\n  \"case\": \"nasnet_slice(1) dc_parts=6 x 8 homogeneous rpi\",\n  \
@@ -79,7 +99,7 @@ fn planner_hotpath(t: &mut Table) {
         ref_dp.stats.stage_evals,
         eval_ratio,
         dp.stats.ts_cache_hits,
-        dp.stats.pruned_branches,
+        dp.stats.pruned_branches
     );
     // Bench processes run with cwd = the package root (rust/); the
     // baseline lives at the workspace root where CI reads it.
@@ -107,8 +127,7 @@ fn planner_hotpath(t: &mut Table) {
     let hc = Cluster::paper_heterogeneous();
     let het_plan = pipeline::plan(&g, &pieces, &hc, f64::INFINITY).unwrap();
     let mut scrambled = het_plan.clone();
-    let mut devs: Vec<usize> =
-        scrambled.stages.iter().flat_map(|s| s.devices.clone()).collect();
+    let mut devs: Vec<usize> = scrambled.stages.iter().flat_map(|s| s.devices.clone()).collect();
     devs.reverse();
     let mut it = devs.into_iter();
     for s in &mut scrambled.stages {
@@ -119,12 +138,21 @@ fn planner_hotpath(t: &mut Table) {
     let t5 = Instant::now();
     let rep = pipeline::rebalance_with_meta(&g, &pieces, &meta, &hc, &mut scrambled, 100);
     let rebalance_s = t5.elapsed().as_secs_f64();
-    t.row(&["rebalance (oracle), NASNet x 8 het".into(), format!("{:.1}ms", rebalance_s * 1e3),
+    t.row(&[
+        "rebalance (oracle), NASNet x 8 het".into(),
+        format!("{:.1}ms", rebalance_s * 1e3),
         "1".into(),
-        format!("{} moves, {} stage evals, {:.3}->{:.3}",
-            rep.moves, rep.stage_evals, rep.period_before, rep.period_after)]);
+        format!(
+            "{} moves, {} stage evals, {:.3}->{:.3}",
+            rep.moves,
+            rep.stage_evals,
+            rep.period_before,
+            rep.period_after
+        ),
+    ]);
     let json = format!(
-        "{{\n  \"case\": \"nasnet_slice(1) dc_parts=6 x paper_heterogeneous, reversed assignment\",\n  \
+        "{{\n  \"case\": \"nasnet_slice(1) dc_parts=6 x paper_heterogeneous, reversed \
+         assignment\",\n  \
          \"pieces\": {},\n  \"rebalance_ms\": {:.3},\n  \"moves\": {},\n  \
          \"stage_evals\": {},\n  \"period_before\": {:.6},\n  \"period_after\": {:.6},\n  \
          \"generated_by\": \"benches/perf_hotpath.rs (cargo bench --bench perf_hotpath)\"\n}}\n",
@@ -133,7 +161,7 @@ fn planner_hotpath(t: &mut Table) {
         rep.moves,
         rep.stage_evals,
         rep.period_before,
-        rep.period_after,
+        rep.period_after
     );
     let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_rebalance.json");
     if let Err(e) = std::fs::write(&out, &json) {
@@ -178,23 +206,30 @@ fn main() {
     // 1. split/stitch on a VGG16-sized feature map (64x224x224).
     let feat = Tensor::new(vec![64, 224, 224], vec![1.0; 64 * 224 * 224]);
     let split = time(20, || {
-        let parts: Vec<Tensor> = (0..8)
-            .map(|k| feat.slice_rows(k * 28, (k + 1) * 28))
-            .collect();
+        let parts: Vec<Tensor> = (0..8).map(|k| feat.slice_rows(k * 28, (k + 1) * 28)).collect();
         let _ = Tensor::stitch_rows(&parts);
     });
-    t.row(&["split+stitch 64x224x224 into 8".into(), format!("{:.2}ms", split * 1e3), "20".into(),
-        "must be << stage compute (seconds)".into()]);
+    t.row(&[
+        "split+stitch 64x224x224 into 8".into(),
+        format!("{:.2}ms", split * 1e3),
+        "20".into(),
+        "must be << stage compute (seconds)".into(),
+    ]);
 
     // 2. segment_tiles on a deep segment.
     let g = modelzoo::vgg16();
     let seg: Vec<usize> = (1..=8).collect();
     let tiles = time(2000, || {
-        let sink: std::collections::BTreeMap<usize, (usize, usize)> = [(8usize, (0usize, 28usize))].into();
+        let sink: std::collections::BTreeMap<usize, (usize, usize)> =
+            [(8usize, (0usize, 28usize))].into();
         let _ = pico::cost::segment_tiles(&g, &seg, &sink);
     });
-    t.row(&["segment_tiles (8-layer segment)".into(), format!("{:.1}us", tiles * 1e6), "2000".into(),
-        "DP leaf geometry".into()]);
+    t.row(&[
+        "segment_tiles (8-layer segment)".into(),
+        format!("{:.1}us", tiles * 1e6),
+        "2000".into(),
+        "DP leaf geometry".into(),
+    ]);
 
     // 3. stage_cost (the Algorithm-2 leaf).
     let c = Cluster::homogeneous_rpi(8, 1.0);
@@ -202,16 +237,24 @@ fn main() {
     let sc = time(500, || {
         let _ = pico::cost::stage_cost(&g, &seg, &devs, &c.network);
     });
-    t.row(&["stage_cost (8 layers x 8 devices)".into(), format!("{:.1}us", sc * 1e6), "500".into(),
-        "O(nL^2 D^2) leaf".into()]);
+    t.row(&[
+        "stage_cost (8 layers x 8 devices)".into(),
+        format!("{:.1}us", sc * 1e6),
+        "500".into(),
+        "O(nL^2 D^2) leaf".into(),
+    ]);
 
     // 4. Algorithm 1 on InceptionV3 (paper: 3.01s).
     let inc = modelzoo::inception_v3();
     let a1 = time(3, || {
         let _ = partition::partition(&inc, 5, None).unwrap();
     });
-    t.row(&["Algorithm 1, InceptionV3".into(), format!("{:.1}ms", a1 * 1e3), "3".into(),
-        "paper 3.01s on i9".into()]);
+    t.row(&[
+        "Algorithm 1, InceptionV3".into(),
+        format!("{:.1}ms", a1 * 1e3),
+        "3".into(),
+        "paper 3.01s on i9".into(),
+    ]);
 
     // 5. Algorithms 2+3 end to end on VGG16 x 8 heterogeneous devices.
     let pieces = partition::partition(&g, 5, None).unwrap().pieces;
@@ -219,8 +262,12 @@ fn main() {
     let a23 = time(5, || {
         let _ = pipeline::plan(&g, &pieces, &hc, f64::INFINITY).unwrap();
     });
-    t.row(&["Algorithms 2+3, VGG16 x 8 devices".into(), format!("{:.1}ms", a23 * 1e3), "5".into(),
-        "paper <1s on a Raspberry-Pi".into()]);
+    t.row(&[
+        "Algorithms 2+3, VGG16 x 8 devices".into(),
+        format!("{:.1}ms", a23 * 1e3),
+        "5".into(),
+        "paper <1s on a Raspberry-Pi".into(),
+    ]);
 
     // 5b. block_pieces at NASNet scale: the block-baseline cut scan is a
     // single O(V+E) prefix pass over ~600 vertices — must stay in the
@@ -229,8 +276,12 @@ fn main() {
     let bp = time(50, || {
         let _ = partition::block_pieces(&nas);
     });
-    t.row(&["block_pieces, NASNet-A-Large".into(), format!("{:.1}us", bp * 1e6), "50".into(),
-        "O(V+E) prefix scan".into()]);
+    t.row(&[
+        "block_pieces, NASNet-A-Large".into(),
+        format!("{:.1}us", bp * 1e6),
+        "50".into(),
+        "O(V+E) prefix scan".into(),
+    ]);
 
     // 5c. The planner hot path at NASNet scale (oracle vs reference DP,
     // wall-clock budget gate, BENCH_planner.json record).
@@ -244,8 +295,12 @@ fn main() {
         let padded = x.pad(0, 0, 1, 1, 0.0);
         let _ = pico::runtime::reference::conv2d(&padded, tiny.layer(1), &wts[&1]);
     });
-    t.row(&["native conv 3->16 ch, 64-row tile".into(), format!("{:.2}ms", conv * 1e3), "50".into(),
-        "reference backend".into()]);
+    t.row(&[
+        "native conv 3->16 ch, 64-row tile".into(),
+        format!("{:.2}ms", conv * 1e3),
+        "50".into(),
+        "reference backend".into(),
+    ]);
 
     // 7. PJRT dispatch (skipped without artifacts).
     let dir = std::path::PathBuf::from("artifacts");
@@ -258,16 +313,29 @@ fn main() {
         let pjrt = time(100, || {
             let _ = exe.run(&xin).unwrap();
         });
-        t.row(&["PJRT dispatch conv3 tile (warm)".into(), format!("{:.2}ms", pjrt * 1e3), "100".into(),
-            "AOT artifact".into()]);
+        t.row(&[
+            "PJRT dispatch conv3 tile (warm)".into(),
+            format!("{:.2}ms", pjrt * 1e3),
+            "100".into(),
+            "AOT artifact".into(),
+        ]);
         let compile = time(1, || {
             let e2 = pico::runtime::Engine::cpu().unwrap();
             let _ = arts.executable(&e2, "conv4__r16_pt1_pb1").unwrap();
         });
-        t.row(&["PJRT cold compile (1 artifact)".into(), format!("{:.0}ms", compile * 1e3), "1".into(),
-            "one-time per executable".into()]);
+        t.row(&[
+            "PJRT cold compile (1 artifact)".into(),
+            format!("{:.0}ms", compile * 1e3),
+            "1".into(),
+            "one-time per executable".into(),
+        ]);
     } else {
-        t.row(&["PJRT dispatch".into(), "skipped".into(), "0".into(), "run `make artifacts`".into()]);
+        t.row(&[
+            "PJRT dispatch".into(),
+            "skipped".into(),
+            "0".into(),
+            "run `make artifacts`".into(),
+        ]);
     }
     t.print();
 }

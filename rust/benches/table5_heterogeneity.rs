@@ -14,7 +14,10 @@ use pico::util::Table;
 use pico::{baselines, modelzoo, partition, pipeline, sim};
 
 fn print_block(r: &SimReport, c: &Cluster) {
-    let mut t = Table::new(&["metric", "NX0", "NX1", "Rpi1.5", "Rpi1.5", "Rpi1.2", "Rpi1.2", "Rpi0.8", "Rpi0.8", "Average"]);
+    let mut t = Table::new(&[
+        "metric", "NX0", "NX1", "Rpi1.5", "Rpi1.5", "Rpi1.2", "Rpi1.2", "Rpi0.8", "Rpi0.8",
+        "Average",
+    ]);
     let get = |f: &dyn Fn(&pico::sim::DeviceMetrics) -> f64| -> Vec<f64> {
         let mut vals = vec![0.0; c.len()];
         for d in &r.per_device {

@@ -148,12 +148,9 @@ pub fn round_profiles(
     for (ri, plan) in plans.iter().enumerate() {
         let mut ps = Vec::with_capacity(plan.stages.len());
         for (si, s) in plan.stages.iter().enumerate() {
-            let planned: Vec<&Device> =
-                s.devices.iter().map(|&i| &believed.devices[i]).collect();
-            let actual_devs: Vec<&Device> =
-                s.devices.iter().map(|&i| &actual.devices[i]).collect();
-            let act =
-                stage_cost_as_planned(g, &s.layers, &planned, &actual_devs, &actual.network);
+            let planned: Vec<&Device> = s.devices.iter().map(|&i| &believed.devices[i]).collect();
+            let actual_devs: Vec<&Device> = s.devices.iter().map(|&i| &actual.devices[i]).collect();
+            let act = stage_cost_as_planned(g, &s.layers, &planned, &actual_devs, &actual.network);
             // Believed expectation from the same walk (Eq. 7 on the
             // believed capacities over the identical FLOP assignment;
             // inactive devices keep flops == 0 → t_comp 0, as in

@@ -97,7 +97,11 @@ pub fn optimal_fused_with_meta(
     bounds.reverse();
     let groups = bounds
         .into_iter()
-        .map(|(i, jj)| SyncGroup { layers: meta.segment(i, jj), devices: all.clone(), halo_sync: false })
+        .map(|(i, jj)| SyncGroup {
+            layers: meta.segment(i, jj),
+            devices: all.clone(),
+            halo_sync: false,
+        })
         .collect();
     SyncSchedule { name: "OFL".into(), groups }
 }
@@ -130,7 +134,9 @@ mod tests {
         let s = optimal_fused(&g, &pieces, &c);
         let mut covered: Vec<usize> = s.groups.iter().flat_map(|gr| gr.layers.clone()).collect();
         covered.sort();
-        let expect: Vec<usize> = (0..g.n_layers()).filter(|&i| !pieces.is_empty() && i != 0 || pieces[0].contains(&0)).collect();
+        let expect: Vec<usize> = (0..g.n_layers())
+            .filter(|&i| !pieces.is_empty() && i != 0 || pieces[0].contains(&0))
+            .collect();
         // groups cover every layer exactly once (input layer belongs to
         // the first piece if Algorithm 1 placed it there)
         let mut all_pieces: Vec<usize> = pieces.iter().flatten().copied().collect();

@@ -1,0 +1,94 @@
+//! Shim atomics: the types the lock-free serving path compiles against.
+//!
+//! In a normal build this module is a zero-cost re-export of
+//! [`std::sync::atomic`] — `check::atomic::AtomicU64` *is*
+//! `std::sync::atomic::AtomicU64`, so shipping code pays nothing for
+//! being checkable. Under `--cfg pico_check` the same names resolve to
+//! [`SimAtomicU64`], which routes every operation through the simulated
+//! memory model and scheduler in [`super::memory`] / [`super::sched`]:
+//! loads enumerate every message the C11 view semantics lets them read,
+//! stores append to per-location histories, and the ordering argument
+//! actually matters (`Relaxed` joins no views).
+//!
+//! [`Ordering`] is always the `std` enum, so call sites are identical
+//! in both worlds.
+//!
+//! The sim types are compiled (and unit-tested) in every build — the
+//! cfg only switches which type the *names* bind to — so the checker
+//! itself is exercised by plain `cargo test`.
+
+pub use std::sync::atomic::Ordering;
+
+#[cfg(not(pico_check))]
+pub use std::sync::atomic::AtomicU64;
+
+#[cfg(pico_check)]
+pub use self::SimAtomicU64 as AtomicU64;
+
+use super::sched::{op, register_loc, PendingOp, Rmw};
+
+/// A simulated `AtomicU64`: a handle to one location in the checker's
+/// [`Memory`](super::memory::Memory).
+///
+/// Construct it inside the model closure of [`check`](super::check)
+/// (construction registers the location; doing so outside an execution,
+/// or from a spawned model thread, panics with a pointed message), then
+/// share it across model threads behind an `Arc` exactly like the real
+/// type. The API mirrors the `std` subset the serving path uses, plus
+/// the common RMWs for litmus tests.
+#[derive(Debug)]
+pub struct SimAtomicU64 {
+    loc: super::memory::LocId,
+}
+
+impl SimAtomicU64 {
+    pub fn new(v: u64) -> Self {
+        Self::named("u64", v)
+    }
+
+    /// Like `new`, with a location name that shows up in diagnostics.
+    pub fn named(name: &'static str, v: u64) -> Self {
+        SimAtomicU64 { loc: register_loc(name, v) }
+    }
+
+    pub fn load(&self, ord: Ordering) -> u64 {
+        op(PendingOp::Load { loc: self.loc, ord })
+    }
+
+    pub fn store(&self, val: u64, ord: Ordering) {
+        op(PendingOp::Store { loc: self.loc, ord, val });
+    }
+
+    pub fn fetch_add(&self, n: u64, ord: Ordering) -> u64 {
+        op(PendingOp::Rmw { loc: self.loc, ord, rmw: Rmw::Add(n) })
+    }
+
+    pub fn swap(&self, val: u64, ord: Ordering) -> u64 {
+        op(PendingOp::Rmw { loc: self.loc, ord, rmw: Rmw::Swap(val) })
+    }
+
+    pub fn compare_exchange(
+        &self,
+        expect: u64,
+        new: u64,
+        success: Ordering,
+        failure: Ordering,
+    ) -> Result<u64, u64> {
+        let old = op(PendingOp::Rmw {
+            loc: self.loc,
+            ord: success,
+            rmw: Rmw::CompareExchange { expect, new, failure },
+        });
+        if old == expect {
+            Ok(old)
+        } else {
+            Err(old)
+        }
+    }
+}
+
+impl Default for SimAtomicU64 {
+    fn default() -> Self {
+        SimAtomicU64::new(0)
+    }
+}

@@ -1,0 +1,273 @@
+//! The checker's simulated memory: a view-based operational model of
+//! C11 release/acquire atomics with per-location store buffers.
+//!
+//! Every atomic location keeps its full *message history* — one
+//! [`Message`] per store, in coherence order. Every simulated thread
+//! carries a [`View`]: for each location, the oldest message it is
+//! still allowed to read. A load may read **any** message at or after
+//! the thread's view (that set is the location's store buffer as seen
+//! by this thread); which one it reads is an explicit scheduler choice,
+//! so stale reads permitted by the memory model are *enumerated*, not
+//! accidental:
+//!
+//! * a **store** appends a message and advances the storing thread's
+//!   view for that location past every older message. A `Release`
+//!   (or stronger) store additionally attaches the storing thread's
+//!   entire current view to the message;
+//! * a **load** picks a readable message and advances the reading
+//!   thread's view for that location to it. An `Acquire` (or stronger)
+//!   load of a message that carries a view *joins* that view into the
+//!   reader's — this is the happens-before edge: everything the writer
+//!   had seen at the release store becomes unforgettable for the
+//!   reader;
+//! * a `Relaxed` store carries no view and a `Relaxed` load joins
+//!   nothing, so relaxed traffic provides coherence (per-location
+//!   monotonicity) and *nothing else* — exactly the weakening the
+//!   mutation gate demonstrates;
+//! * an **RMW** reads the newest message (atomicity: no store may
+//!   intervene between its read and its write) and appends directly
+//!   after it, with the acquire/release halves applied per the given
+//!   ordering.
+//!
+//! `SeqCst` is approximated as `AcqRel` plus a newest-message read
+//! restriction (a total store order exists trivially because coherence
+//! here is the global append order). That approximation is *stronger*
+//! than C11 `SeqCst` in ways that do not matter for the protocols under
+//! check — none of the shipped hot-path code uses `SeqCst` — and it is
+//! never weaker than `AcqRel`, so a protocol proven here is not proven
+//! by accident of the approximation. Fences and `Consume` are not
+//! modeled; the shipped code uses neither.
+//!
+//! Coherence simplification: a store always appends at the end of the
+//! history, i.e. coherence order equals execution order of stores. C11
+//! additionally allows a relaxed store to slot in *between* existing
+//! messages in corner cases; in the checked protocols every store is
+//! program-ordered after a load of the previous message on the same
+//! location, which forces end-of-history placement anyway. Documented
+//! here so nobody mistakes the model for full RC11.
+
+use std::sync::atomic::Ordering;
+
+/// Index of a registered atomic location.
+pub type LocId = usize;
+
+/// Timestamp of a message: its index in the location's history.
+pub type Ts = usize;
+
+pub(crate) fn acquires(ord: Ordering) -> bool {
+    matches!(ord, Ordering::Acquire | Ordering::AcqRel | Ordering::SeqCst)
+}
+
+pub(crate) fn releases(ord: Ordering) -> bool {
+    matches!(ord, Ordering::Release | Ordering::AcqRel | Ordering::SeqCst)
+}
+
+pub(crate) fn is_seqcst(ord: Ordering) -> bool {
+    matches!(ord, Ordering::SeqCst)
+}
+
+/// One store: the value plus, for release stores, the writer's view at
+/// the moment of the store (what an acquiring reader inherits).
+#[derive(Debug, Clone)]
+pub(crate) struct Message {
+    pub val: u64,
+    pub view: Option<View>,
+}
+
+/// Per-thread front: `v.ts(loc)` is the oldest message index the
+/// thread may still read at `loc`. Missing entries mean 0 (the initial
+/// message), so views grow lazily as locations are registered.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub(crate) struct View(Vec<Ts>);
+
+impl View {
+    pub fn ts(&self, loc: LocId) -> Ts {
+        self.0.get(loc).copied().unwrap_or(0)
+    }
+
+    pub fn advance(&mut self, loc: LocId, ts: Ts) {
+        if self.0.len() <= loc {
+            self.0.resize(loc + 1, 0);
+        }
+        self.0[loc] = self.0[loc].max(ts);
+    }
+
+    /// Pointwise maximum — the happens-before join.
+    pub fn join(&mut self, other: &View) {
+        if self.0.len() < other.0.len() {
+            self.0.resize(other.0.len(), 0);
+        }
+        for (mine, theirs) in self.0.iter_mut().zip(&other.0) {
+            *mine = (*mine).max(*theirs);
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Location {
+    name: &'static str,
+    messages: Vec<Message>,
+}
+
+/// All locations registered by one checker execution.
+#[derive(Debug, Default)]
+pub(crate) struct Memory {
+    locs: Vec<Location>,
+}
+
+impl Memory {
+    pub fn register(&mut self, name: &'static str, init: u64) -> LocId {
+        let id = self.locs.len();
+        self.locs.push(Location { name, messages: vec![Message { val: init, view: None }] });
+        id
+    }
+
+    /// One-line `name=newest_value` summary for diagnostics.
+    pub fn describe(&self) -> String {
+        let parts: Vec<String> = self
+            .locs
+            .iter()
+            .map(|l| format!("{}={}", l.name, l.messages.last().expect("init message").val))
+            .collect();
+        parts.join(", ")
+    }
+
+    pub fn newest(&self, loc: LocId) -> Ts {
+        self.locs[loc].messages.len() - 1
+    }
+
+    pub fn message(&self, loc: LocId, ts: Ts) -> &Message {
+        &self.locs[loc].messages[ts]
+    }
+
+    /// How many messages a load by a thread with view `view` may pick
+    /// from. `force_newest` (SeqCst or quiescence wake-up) restricts
+    /// the window to the newest message only.
+    pub fn readable(&self, loc: LocId, view: &View, force_newest: bool) -> (Ts, usize) {
+        let newest = self.newest(loc);
+        let lo = if force_newest {
+            newest
+        } else {
+            view.ts(loc).min(newest)
+        };
+        (lo, newest - lo + 1)
+    }
+
+    /// Apply a load that reads message `ts`: advance the reader's view
+    /// and, for acquire loads of release stores, join the carried view.
+    pub fn load(&self, loc: LocId, ts: Ts, ord: Ordering, view: &mut View) -> u64 {
+        let msg = &self.locs[loc].messages[ts];
+        view.advance(loc, ts);
+        if acquires(ord) {
+            if let Some(carried) = &msg.view {
+                view.join(carried);
+            }
+        }
+        msg.val
+    }
+
+    /// Apply a store: append in coherence order, advance the writer's
+    /// view, attach it for release stores. Returns the new timestamp.
+    pub fn store(&mut self, loc: LocId, val: u64, ord: Ordering, view: &mut View) -> Ts {
+        let ts = self.locs[loc].messages.len();
+        view.advance(loc, ts);
+        let carried = if releases(ord) {
+            Some(view.clone())
+        } else {
+            None
+        };
+        self.locs[loc].messages.push(Message { val, view: carried });
+        ts
+    }
+
+    /// FNV-1a over the full message history — the deterministic state
+    /// hash replay tests pin. Hashes values and history shape only (no
+    /// addresses, no host state), so a replayed schedule reproduces it
+    /// bit-for-bit across runs and processes.
+    pub fn state_hash(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |x: u64| {
+            for b in x.to_le_bytes() {
+                h ^= u64::from(b);
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        };
+        eat(self.locs.len() as u64);
+        for loc in &self.locs {
+            eat(loc.messages.len() as u64);
+            for m in &loc.messages {
+                eat(m.val);
+            }
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relaxed_load_reads_stale_but_coherent() {
+        let mut mem = Memory::default();
+        let x = mem.register("x", 0);
+        let mut writer = View::default();
+        let mut reader = View::default();
+        mem.store(x, 1, Ordering::Relaxed, &mut writer);
+        mem.store(x, 2, Ordering::Relaxed, &mut writer);
+        // Reader may read any of {0, 1, 2}...
+        let (lo, n) = mem.readable(x, &reader, false);
+        assert_eq!((lo, n), (0, 3));
+        // ...but after reading ts=1 it can never go back to ts=0.
+        assert_eq!(mem.load(x, 1, Ordering::Relaxed, &mut reader), 1);
+        let (lo, n) = mem.readable(x, &reader, false);
+        assert_eq!((lo, n), (1, 2));
+    }
+
+    #[test]
+    fn acquire_of_release_joins_the_writers_view() {
+        let mut mem = Memory::default();
+        let data = mem.register("data", 0);
+        let flag = mem.register("flag", 0);
+        let mut writer = View::default();
+        let mut reader = View::default();
+        mem.store(data, 42, Ordering::Relaxed, &mut writer);
+        let ts = mem.store(flag, 1, Ordering::Release, &mut writer);
+        // Acquire-reading the flag forbids the stale data read.
+        mem.load(flag, ts, Ordering::Acquire, &mut reader);
+        let (lo, n) = mem.readable(data, &reader, false);
+        assert_eq!((lo, n), (1, 1), "stale data must be unreadable after the join");
+    }
+
+    #[test]
+    fn relaxed_publish_leaves_stale_data_readable() {
+        let mut mem = Memory::default();
+        let data = mem.register("data", 0);
+        let flag = mem.register("flag", 0);
+        let mut writer = View::default();
+        let mut reader = View::default();
+        mem.store(data, 42, Ordering::Relaxed, &mut writer);
+        let ts = mem.store(flag, 1, Ordering::Relaxed, &mut writer);
+        // The flag value arrives, but with no view: the initial data
+        // message stays readable — the bug class the checker hunts.
+        assert_eq!(mem.load(flag, ts, Ordering::Acquire, &mut reader), 1);
+        let (lo, n) = mem.readable(data, &reader, false);
+        assert_eq!((lo, n), (0, 2));
+    }
+
+    #[test]
+    fn state_hash_is_history_determined() {
+        let build = |vals: &[u64]| {
+            let mut mem = Memory::default();
+            let x = mem.register("x", 0);
+            let mut v = View::default();
+            for &val in vals {
+                mem.store(x, val, Ordering::Release, &mut v);
+            }
+            mem.state_hash()
+        };
+        assert_eq!(build(&[1, 2]), build(&[1, 2]));
+        assert_ne!(build(&[1, 2]), build(&[2, 1]));
+        assert_ne!(build(&[1]), build(&[1, 1]));
+    }
+}

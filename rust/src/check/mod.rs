@@ -1,0 +1,315 @@
+//! `pico-check`: an in-repo, dependency-free concurrency model checker
+//! for the lock-free serving hot path.
+//!
+//! The open-loop load layer ([`crate::load`]) runs on two lock-free
+//! primitives — the Lamport SPSC `ShardQueue` and the seqlock
+//! `ClockCell` in [`crate::load::queue`] — whose `Acquire`/`Release`
+//! orderings execution tests cannot validate: a data race that fires on
+//! one in 10⁹ schedules passes every run on a strong-memory test box.
+//! This module checks them the loom way, without the dependency (the
+//! workspace is vendored-offline): enumerate *every* schedule of a
+//! small bounded model, under a memory model where orderings actually
+//! mean something.
+//!
+//! Four pieces:
+//!
+//! * [`mod@atomic`] — shim atomics. Shipping code declares its shared
+//!   state as `check::atomic::AtomicU64`, which is `std`'s type in a
+//!   normal build and the simulated [`atomic::SimAtomicU64`] under
+//!   `--cfg pico_check`.
+//! * [`memory`](self) (private) — a view-based operational model of
+//!   C11 release/acquire: per-location store buffers (full message
+//!   histories), per-thread views, release stores carry views, acquire
+//!   loads join them. `Relaxed` gives coherence and nothing else, so
+//!   weakened orderings produce genuinely weaker behaviors instead of
+//!   collapsing to `SeqCst`.
+//! * [`sched`](self) (private) — a bounded exhaustive scheduler: DFS
+//!   over thread interleavings *and* load read-choices, sleep-set
+//!   (DPOR-style) and load-delay reductions, spin-loop parking, and a
+//!   replayable schedule string (`t1.t0.r2`) on every violation.
+//! * the models and the **mutation gate** — `tests/pico_check.rs`
+//!   checks the real `ShardQueue`/`ClockCell` protocols, and
+//!   cfg-switched weakenings (`--cfg pico_check_mutation="..."`, one of
+//!   `relaxed_publish`, `relaxed_consumer`, `seqlock_no_recheck`,
+//!   `seqlock_relaxed_payload`) flip named ordering constants in
+//!   [`crate::load::queue`]; the same suite then asserts the checker
+//!   *finds* a violation and that replaying its schedule reproduces the
+//!   identical state hash. A checker that can't catch the bugs it
+//!   claims to is worse than no checker.
+//!
+//! ## Running it
+//!
+//! Plain `cargo test` already exercises the checker itself — the unit
+//! tests below model-check hand-rolled message-passing, store-buffering
+//! and seqlock protocols on the simulated atomics. The real hot-path
+//! models need the shim switched over:
+//!
+//! ```text
+//! RUSTFLAGS='--cfg pico_check' cargo test --test pico_check
+//! RUSTFLAGS='--cfg pico_check --cfg pico_check_mutation="relaxed_publish"' \
+//!     cargo test --test pico_check
+//! ```
+//!
+//! CI runs the full matrix (unmutated + every mutation) in the
+//! `pico_check` job.
+//!
+//! ## What the checker can and cannot claim
+//!
+//! Within the bounds (threads, values, steps) exploration is
+//! exhaustive: zero violations means *no* schedule of the bounded model
+//! breaks the property under the modeled semantics. The semantics are
+//! release/acquire with two documented simplifications (coherence =
+//! append order; `SeqCst` approximated stronger — see
+//! `check/memory.rs`), no fences, no `Consume` — the shipped hot path
+//! uses none of those. Bigger rings or more threads than the model
+//! covers are out of scope, as is non-atomic data (Miri and TSan cover
+//! that side in CI; see `.github/workflows/ci.yml`).
+
+pub mod atomic;
+mod memory;
+mod sched;
+
+pub use sched::{check, replay, spawn, spin_hint, CheckOptions, Report, Schedule, Violation};
+
+#[cfg(test)]
+mod tests {
+    use super::atomic::SimAtomicU64;
+    use super::*;
+    use std::collections::BTreeSet;
+    use std::sync::atomic::Ordering;
+    use std::sync::{Arc, Mutex};
+
+    fn small() -> CheckOptions {
+        CheckOptions { max_executions: 500_000, ..CheckOptions::default() }
+    }
+
+    /// Classic message passing: writer fills `data` then raises `flag`;
+    /// reader checks `data` only after seeing the flag.
+    fn mp_model(publish: Ordering, consume: Ordering) -> impl Fn() {
+        move || {
+            let data = Arc::new(SimAtomicU64::named("data", 0));
+            let flag = Arc::new(SimAtomicU64::named("flag", 0));
+            {
+                let data = Arc::clone(&data);
+                let flag = Arc::clone(&flag);
+                spawn(move || {
+                    data.store(42, Ordering::Relaxed);
+                    flag.store(1, publish);
+                });
+            }
+            spawn(move || {
+                if flag.load(consume) == 1 {
+                    assert_eq!(data.load(Ordering::Relaxed), 42, "stale data behind the flag");
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn mp_release_acquire_passes_exhaustively() {
+        let report = check(&small(), mp_model(Ordering::Release, Ordering::Acquire)).unwrap();
+        assert!(report.executions > 1, "expected several interleavings, got {report:?}");
+    }
+
+    #[test]
+    fn mp_relaxed_publish_is_flagged_with_replayable_schedule() {
+        let violation = check(&small(), mp_model(Ordering::Relaxed, Ordering::Acquire))
+            .expect_err("relaxed publish must be caught");
+        assert!(violation.message.contains("stale data"), "unexpected: {violation}");
+        let model = mp_model(Ordering::Relaxed, Ordering::Acquire);
+        let replayed = replay(&small(), model, &violation.schedule)
+            .expect_err("replaying the schedule must reproduce the violation");
+        assert_eq!(replayed.state_hash, violation.state_hash);
+        assert_eq!(replayed.message, violation.message);
+    }
+
+    #[test]
+    fn mp_relaxed_consume_is_flagged() {
+        let violation = check(&small(), mp_model(Ordering::Release, Ordering::Relaxed))
+            .expect_err("relaxed consume must be caught");
+        assert!(violation.message.contains("stale data"), "unexpected: {violation}");
+    }
+
+    /// Store buffering: t1 stores x then loads y; t2 stores y then
+    /// loads x. Returns the set of observed (r1, r2) pairs across all
+    /// schedules.
+    fn sb_outcomes(ord: Ordering, opts: &CheckOptions) -> BTreeSet<(u64, u64)> {
+        let seen = Arc::new(Mutex::new(BTreeSet::new()));
+        let out = Arc::clone(&seen);
+        let model = move || {
+            let x = Arc::new(SimAtomicU64::named("x", 0));
+            let y = Arc::new(SimAtomicU64::named("y", 0));
+            let pair = Arc::new(Mutex::new((None, None)));
+            let record = {
+                let out = Arc::clone(&out);
+                move |pair: &Mutex<(Option<u64>, Option<u64>)>| {
+                    if let (Some(a), Some(b)) = *pair.lock().unwrap() {
+                        out.lock().unwrap().insert((a, b));
+                    }
+                }
+            };
+            {
+                let (x, y, pair) = (Arc::clone(&x), Arc::clone(&y), Arc::clone(&pair));
+                let record = record.clone();
+                spawn(move || {
+                    x.store(1, ord);
+                    let r1 = y.load(ord);
+                    pair.lock().unwrap().0 = Some(r1);
+                    record(&pair);
+                });
+            }
+            spawn(move || {
+                y.store(1, ord);
+                let r2 = x.load(ord);
+                pair.lock().unwrap().1 = Some(r2);
+                record(&pair);
+            });
+        };
+        check(opts, model).unwrap();
+        let result = seen.lock().unwrap().clone();
+        result
+    }
+
+    /// The test that proves orderings are modeled, not collapsed: under
+    /// release/acquire both threads may read 0 (stores sat in the other
+    /// core's buffer); under `SeqCst` that outcome is forbidden.
+    #[test]
+    fn store_buffering_distinguishes_acqrel_from_seqcst() {
+        let ra = sb_outcomes(Ordering::AcqRel, &small());
+        let expect: BTreeSet<_> = [(0, 0), (0, 1), (1, 0), (1, 1)].into_iter().collect();
+        assert_eq!(ra, expect, "release/acquire must reach all four outcomes");
+
+        let sc = sb_outcomes(Ordering::SeqCst, &small());
+        let expect: BTreeSet<_> = [(0, 1), (1, 0), (1, 1)].into_iter().collect();
+        assert_eq!(sc, expect, "SeqCst must forbid (0,0) and nothing else");
+    }
+
+    /// Hand-rolled two-word seqlock, same protocol shape as
+    /// `load::queue::ClockCell`: writer bumps epoch to odd, stores both
+    /// payload words, bumps to even; reader retries until an even epoch
+    /// is stable around a payload read.
+    fn seqlock_model(recheck: bool, payload: Ordering) -> impl Fn() {
+        move || {
+            let epoch = Arc::new(SimAtomicU64::named("epoch", 0));
+            let d1 = Arc::new(SimAtomicU64::named("d1", 0));
+            let d2 = Arc::new(SimAtomicU64::named("d2", 0));
+            {
+                let (epoch, d1, d2) = (Arc::clone(&epoch), Arc::clone(&d1), Arc::clone(&d2));
+                spawn(move || {
+                    epoch.store(1, Ordering::Release);
+                    d1.store(7, Ordering::Release);
+                    d2.store(7, Ordering::Release);
+                    epoch.store(2, Ordering::Release);
+                });
+            }
+            spawn(move || loop {
+                let e1 = epoch.load(Ordering::Acquire);
+                if e1 % 2 == 0 {
+                    let a = d1.load(payload);
+                    let b = d2.load(payload);
+                    if !recheck || epoch.load(Ordering::Acquire) == e1 {
+                        assert_eq!(a, b, "torn seqlock read");
+                        return;
+                    }
+                }
+                spin_hint();
+            });
+        }
+    }
+
+    #[test]
+    fn seqlock_with_recheck_passes_exhaustively() {
+        let report = check(&small(), seqlock_model(true, Ordering::Acquire)).unwrap();
+        assert!(report.executions > 10, "expected a real schedule space, got {report:?}");
+    }
+
+    #[test]
+    fn seqlock_without_recheck_is_flagged() {
+        let violation = check(&small(), seqlock_model(false, Ordering::Acquire))
+            .expect_err("dropping the second epoch check must be caught");
+        assert!(violation.message.contains("torn"), "unexpected: {violation}");
+    }
+
+    #[test]
+    fn seqlock_with_relaxed_payload_is_flagged() {
+        let violation = check(&small(), seqlock_model(true, Ordering::Relaxed))
+            .expect_err("relaxed payload reads defeat the epoch recheck");
+        assert!(violation.message.contains("torn"), "unexpected: {violation}");
+    }
+
+    /// Satellite: schedule replay is deterministic. Harvest a violating
+    /// schedule, round-trip it through its string form, replay it three
+    /// times, and require the identical state hash and message.
+    #[test]
+    fn replay_of_a_pinned_schedule_reproduces_the_state_hash() {
+        let violation =
+            check(&small(), seqlock_model(false, Ordering::Acquire)).expect_err("must violate");
+        let text = violation.schedule.to_string();
+        assert!(!text.is_empty());
+        let parsed: Schedule = text.parse().unwrap();
+        assert_eq!(parsed, violation.schedule, "schedule string must round-trip");
+        for _ in 0..3 {
+            let replayed = replay(&small(), seqlock_model(false, Ordering::Acquire), &parsed)
+                .expect_err("replay must re-reach the violation");
+            assert_eq!(replayed.state_hash, violation.state_hash);
+            assert_eq!(replayed.message, violation.message);
+        }
+    }
+
+    /// The reductions must not change any verdict: run passing and
+    /// failing models under all four on/off combinations.
+    #[test]
+    fn reductions_preserve_verdicts() {
+        for sleep_sets in [false, true] {
+            for delay_loads in [false, true] {
+                let opts = CheckOptions { sleep_sets, delay_loads, ..small() };
+                assert!(
+                    check(&opts, mp_model(Ordering::Release, Ordering::Acquire)).is_ok(),
+                    "mp verdict flipped under sleep={sleep_sets} delay={delay_loads}"
+                );
+                assert!(
+                    check(&opts, mp_model(Ordering::Relaxed, Ordering::Acquire)).is_err(),
+                    "mp bug missed under sleep={sleep_sets} delay={delay_loads}"
+                );
+                assert!(
+                    check(&opts, seqlock_model(true, Ordering::Acquire)).is_ok(),
+                    "seqlock verdict flipped under sleep={sleep_sets} delay={delay_loads}"
+                );
+                assert!(
+                    check(&opts, seqlock_model(false, Ordering::Acquire)).is_err(),
+                    "seqlock bug missed under sleep={sleep_sets} delay={delay_loads}"
+                );
+                let ra = sb_outcomes(Ordering::AcqRel, &opts);
+                assert_eq!(ra.len(), 4, "sb lost outcomes: sleep={sleep_sets} delay={delay_loads}");
+            }
+        }
+    }
+
+    /// A spinner nobody will ever wake is a liveness bug; the scheduler
+    /// reports it as a deadlock instead of hanging.
+    #[test]
+    fn stuck_spinner_is_reported_as_deadlock() {
+        let model = || {
+            let flag = Arc::new(SimAtomicU64::named("flag", 0));
+            spawn(move || {
+                while flag.load(Ordering::Acquire) == 0 {
+                    spin_hint();
+                }
+            });
+        };
+        let violation = check(&small(), model).expect_err("must deadlock");
+        assert!(violation.message.contains("deadlock"), "unexpected: {violation}");
+    }
+
+    /// Construction outside an execution must fail loudly, not UB.
+    #[test]
+    fn sim_atomics_outside_check_panic_with_guidance() {
+        let err = std::panic::catch_unwind(|| SimAtomicU64::new(0)).unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(msg.contains("model closure"), "unexpected panic text: {msg}");
+    }
+}

@@ -1,0 +1,894 @@
+//! Bounded-exhaustive scheduler: DFS over thread interleavings *and*
+//! weak-memory read choices, with replayable schedule strings.
+//!
+//! ## Execution mechanics
+//!
+//! One checker *execution* runs the model closure once. The closure
+//! registers atomics and spawns model threads ([`spawn`]); each model
+//! thread is a real OS thread, but every simulated atomic operation
+//! traps into this scheduler and blocks until the controller (the
+//! thread that called [`check`]) grants it. The controller only decides
+//! when **every** live thread is quiescent — blocked at an operation,
+//! parked in a spin loop, or finished — so an execution is a pure
+//! function of its choice sequence, regardless of OS scheduling.
+//!
+//! Two kinds of choices are recorded:
+//!
+//! * `t<i>` — which quiescent thread performs its pending operation
+//!   (index into the deterministic candidate list, ascending thread
+//!   id);
+//! * `r<i>` — which message a load reads, when the memory model
+//!   ([`super::memory`]) offers more than one.
+//!
+//! The concatenated tokens form the *schedule string* printed with
+//! every violation; [`replay`] re-runs exactly that execution.
+//!
+//! ## Exploration and reduction
+//!
+//! [`check`] explores depth-first: run one execution taking the first
+//! option at every new choice point, then backtrack to the deepest
+//! choice with unexplored options. Two sound reductions keep the tree
+//! tractable (both can be disabled per [`CheckOptions`], and the test
+//! suite cross-validates reduced against unreduced verdicts):
+//!
+//! * **Sleep sets** (DPOR-style): after exploring thread `t` at a
+//!   choice point, `t` sleeps in the sibling subtrees until some
+//!   executed operation conflicts with `t`'s pending one (same
+//!   location, at least one write). Branches whose every candidate
+//!   sleeps are redundant and pruned.
+//! * **Load delay**: when both loads and stores are pending, only
+//!   stores are scheduled. Executing a (non-`SeqCst`) load before an
+//!   independent store yields a strict subset of the read choices
+//!   available after it, with identical resulting state for every
+//!   shared choice, so the load-first branches are subsumed.
+//!
+//! ## Spin loops, parking, and deadlock
+//!
+//! A model thread in a spin loop calls [`spin_hint`] (the shipped
+//! hot-path code routes [`crate::load::queue::backoff`] here under
+//! `pico_check`), which *parks* the thread: it is not schedulable until
+//! some store executes. If only parked threads remain, the scheduler
+//! wakes them once with a forced-newest read window — the operational
+//! stand-in for C11's eventual-visibility guarantee — and if they all
+//! park again without any store having executed, reports a deadlock
+//! with the schedule that reached it.
+
+use std::collections::BTreeSet;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, Once};
+use std::thread::JoinHandle;
+
+use super::memory::{is_seqcst, LocId, Memory, View};
+
+/// Exploration bounds and reduction toggles.
+#[derive(Debug, Clone)]
+pub struct CheckOptions {
+    /// Scheduler decisions allowed in one execution before the checker
+    /// reports a runaway model.
+    pub max_steps: usize,
+    /// Total executions (complete + pruned) before exploration aborts
+    /// with an error — the "bounded" in bounded-exhaustive.
+    pub max_executions: usize,
+    /// Model threads allowed per execution.
+    pub max_threads: usize,
+    /// Enable the DPOR-style sleep-set reduction.
+    pub sleep_sets: bool,
+    /// Enable the load-delay reduction.
+    pub delay_loads: bool,
+}
+
+impl Default for CheckOptions {
+    fn default() -> Self {
+        CheckOptions {
+            max_steps: 50_000,
+            max_executions: 2_000_000,
+            max_threads: 8,
+            sleep_sets: true,
+            delay_loads: true,
+        }
+    }
+}
+
+/// One recorded scheduler decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Choice {
+    /// Index into the candidate thread list at this point.
+    Thread(usize),
+    /// Index into the readable-message window of a load.
+    Read(usize),
+}
+
+/// A replayable schedule: the exact choice sequence of one execution.
+///
+/// Serializes to a compact dot-separated token string (`t1.t0.r2.t1`)
+/// via `Display`; parse one back with `str::parse`. Tokens are choice
+/// *indices*, which are deterministic for a fixed model and options, so
+/// a schedule is only meaningful for the model (and mutation cfg) that
+/// produced it.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Schedule(pub(crate) Vec<Choice>);
+
+impl Schedule {
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+}
+
+impl std::fmt::Display for Schedule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (i, c) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, ".")?;
+            }
+            match c {
+                Choice::Thread(j) => write!(f, "t{j}")?,
+                Choice::Read(j) => write!(f, "r{j}")?,
+            }
+        }
+        Ok(())
+    }
+}
+
+impl std::str::FromStr for Schedule {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        let mut out = Vec::new();
+        for tok in s.split('.').filter(|t| !t.is_empty()) {
+            let (kind, idx) = tok.split_at(1);
+            let idx: usize = idx.parse().map_err(|_| format!("bad schedule token {tok:?}"))?;
+            match kind {
+                "t" => out.push(Choice::Thread(idx)),
+                "r" => out.push(Choice::Read(idx)),
+                _ => return Err(format!("bad schedule token {tok:?}")),
+            }
+        }
+        Ok(Schedule(out))
+    }
+}
+
+/// A property failure (or checker bound) with the schedule that reaches
+/// it. `state_hash` is the deterministic memory hash at the point of
+/// failure — replaying the schedule reproduces it bit-for-bit.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub schedule: Schedule,
+    pub message: String,
+    pub state_hash: u64,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "schedule [{}] state {:#018x}: {}", self.schedule, self.state_hash, self.message)
+    }
+}
+
+impl std::error::Error for Violation {}
+
+/// Exploration statistics of a passing [`check`] run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Report {
+    /// Executions run to completion without a violation.
+    pub executions: usize,
+    /// Branches pruned as redundant by the sleep-set reduction.
+    pub pruned: usize,
+    /// Deepest decision sequence seen.
+    pub max_depth: usize,
+    /// State hash of the last completed execution.
+    pub last_hash: u64,
+}
+
+/// Pending shared-memory operation a quiescent thread wants to run.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum PendingOp {
+    Load { loc: LocId, ord: Ordering },
+    Store { loc: LocId, ord: Ordering, val: u64 },
+    Rmw { loc: LocId, ord: Ordering, rmw: Rmw },
+}
+
+/// Read-modify-write flavors the shim atomics need.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum Rmw {
+    Add(u64),
+    Swap(u64),
+    /// Success uses the op's ordering; failure degrades to a load with
+    /// `failure`. Both halves read the newest message (atomicity).
+    CompareExchange { expect: u64, new: u64, failure: Ordering },
+}
+
+/// Ops the load-delay reduction may never postpone: writes (they are
+/// the priority class) and `SeqCst` loads (their forced-newest window
+/// shrinks as stores land, so delaying them loses behaviors).
+fn undelayable(op: &PendingOp) -> bool {
+    op.is_write() || matches!(op, PendingOp::Load { ord, .. } if is_seqcst(*ord))
+}
+
+impl PendingOp {
+    fn loc(&self) -> LocId {
+        match *self {
+            PendingOp::Load { loc, .. }
+            | PendingOp::Store { loc, .. }
+            | PendingOp::Rmw { loc, .. } => loc,
+        }
+    }
+
+    fn is_write(&self) -> bool {
+        !matches!(self, PendingOp::Load { .. })
+    }
+}
+
+#[derive(Debug)]
+enum Phase {
+    /// Executing local code (or not yet at its first op).
+    Running,
+    /// Blocked at `op`, waiting to be scheduled.
+    Ready(PendingOp),
+    /// Spinning without progress; wake on the next store.
+    Parked,
+    Done,
+}
+
+struct ThreadCell {
+    phase: Phase,
+    reply: Option<u64>,
+    /// Next load must read the newest message (quiescence wake-up).
+    force_newest: bool,
+    view: View,
+}
+
+impl ThreadCell {
+    fn new(view: View) -> Self {
+        ThreadCell { phase: Phase::Running, reply: None, force_newest: false, view }
+    }
+}
+
+struct ExecInner {
+    mem: Memory,
+    threads: Vec<ThreadCell>,
+    handles: Vec<JoinHandle<()>>,
+    violation: Option<String>,
+    abort: bool,
+}
+
+struct ExecShared {
+    inner: Mutex<ExecInner>,
+    /// Controller waits here for quiescence.
+    ctrl_cv: Condvar,
+    /// Model threads wait here for their operation result.
+    thread_cv: Condvar,
+}
+
+/// Unwind payload that tears a model thread down when an execution is
+/// abandoned (prune, violation elsewhere, bound hit). Filtered out of
+/// the panic hook so abandoned executions stay silent.
+struct AbortToken;
+
+fn silence_abort_panics() {
+    static HOOK: Once = Once::new();
+    HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if info.payload().downcast_ref::<AbortToken>().is_none() {
+                prev(info);
+            }
+        }));
+    });
+}
+
+fn panic_text(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "model thread panicked".to_string()
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Role {
+    Controller,
+    Thread(usize),
+}
+
+struct Ctx {
+    shared: Arc<ExecShared>,
+    role: Role,
+}
+
+thread_local! {
+    static CTX: std::cell::RefCell<Option<Ctx>> = const { std::cell::RefCell::new(None) };
+}
+
+fn with_ctx<R>(f: impl FnOnce(&Ctx) -> R) -> R {
+    CTX.with(|c| {
+        let c = c.borrow();
+        let ctx = c.as_ref().expect(
+            "pico_check: simulated atomics/threads are only usable inside check::check / \
+             check::replay (construct the model's state inside the model closure)",
+        );
+        f(ctx)
+    })
+}
+
+struct CtxGuard;
+
+impl CtxGuard {
+    fn install(shared: Arc<ExecShared>, role: Role) -> CtxGuard {
+        CTX.with(|c| *c.borrow_mut() = Some(Ctx { shared, role }));
+        CtxGuard
+    }
+}
+
+impl Drop for CtxGuard {
+    fn drop(&mut self) {
+        CTX.with(|c| *c.borrow_mut() = None);
+    }
+}
+
+fn abort_unwind() -> ! {
+    std::panic::panic_any(AbortToken)
+}
+
+/// Register a fresh atomic location. Only legal during model setup (the
+/// model closure, before threads interleave) so location ids — and with
+/// them schedules and state hashes — are deterministic.
+pub(crate) fn register_loc(name: &'static str, init: u64) -> LocId {
+    with_ctx(|ctx| {
+        assert!(
+            ctx.role == Role::Controller,
+            "pico_check: register atomics in the model closure, not in spawned model threads"
+        );
+        let mut g = ctx.shared.inner.lock().unwrap();
+        let view = &mut g.threads[0].view;
+        let mut taken = std::mem::take(view);
+        let loc = g.mem.register(name, init);
+        // The creator has seen the initial message.
+        taken.advance(loc, 0);
+        g.threads[0].view = taken;
+        loc
+    })
+}
+
+/// Run one simulated atomic op from whichever thread calls it.
+///
+/// Controller (setup-phase) ops apply immediately and sequentially —
+/// setup happens-before every model thread. Model-thread ops block
+/// until the DFS controller schedules them.
+pub(crate) fn op(pending: PendingOp) -> u64 {
+    with_ctx(|ctx| match ctx.role {
+        Role::Controller => {
+            let mut g = ctx.shared.inner.lock().unwrap();
+            apply_direct(&mut g, 0, pending)
+        }
+        Role::Thread(tid) => {
+            let mut g = ctx.shared.inner.lock().unwrap();
+            if g.abort {
+                drop(g);
+                abort_unwind();
+            }
+            g.threads[tid].phase = Phase::Ready(pending);
+            ctx.shared.ctrl_cv.notify_all();
+            loop {
+                if g.abort {
+                    drop(g);
+                    abort_unwind();
+                }
+                if let Some(v) = g.threads[tid].reply.take() {
+                    return v;
+                }
+                g = ctx.shared.thread_cv.wait(g).unwrap();
+            }
+        }
+    })
+}
+
+/// Setup-phase (single-actor) semantics: read/write the newest message
+/// with the requested ordering's view effects.
+fn apply_direct(g: &mut ExecInner, tid: usize, pending: PendingOp) -> u64 {
+    let mut view = std::mem::take(&mut g.threads[tid].view);
+    let out = match pending {
+        PendingOp::Load { loc, ord } => g.mem.load(loc, g.mem.newest(loc), ord, &mut view),
+        PendingOp::Store { loc, ord, val } => {
+            g.mem.store(loc, val, ord, &mut view);
+            0
+        }
+        PendingOp::Rmw { loc, ord, rmw } => apply_rmw(&mut g.mem, loc, ord, rmw, &mut view),
+    };
+    g.threads[tid].view = view;
+    out
+}
+
+/// RMW against the newest message; returns the previous value.
+fn apply_rmw(mem: &mut Memory, loc: LocId, ord: Ordering, rmw: Rmw, view: &mut View) -> u64 {
+    let newest = mem.newest(loc);
+    match rmw {
+        Rmw::Add(n) => {
+            let old = mem.load(loc, newest, ord, view);
+            mem.store(loc, old.wrapping_add(n), ord, view);
+            old
+        }
+        Rmw::Swap(new) => {
+            let old = mem.load(loc, newest, ord, view);
+            mem.store(loc, new, ord, view);
+            old
+        }
+        Rmw::CompareExchange { expect, new, failure } => {
+            let cur = mem.message(loc, newest).val;
+            if cur == expect {
+                let old = mem.load(loc, newest, ord, view);
+                mem.store(loc, new, ord, view);
+                old
+            } else {
+                mem.load(loc, newest, failure, view)
+            }
+        }
+    }
+}
+
+/// Spin-loop hint. Inside a model thread this parks the thread until
+/// another thread stores (or the scheduler forces a newest-read wake);
+/// anywhere else it is a plain OS yield.
+pub fn spin_hint() {
+    let in_model_thread = CTX.with(|c| {
+        c.borrow().as_ref().map(|ctx| matches!(ctx.role, Role::Thread(_))).unwrap_or(false)
+    });
+    if !in_model_thread {
+        std::thread::yield_now();
+        return;
+    }
+    with_ctx(|ctx| {
+        let Role::Thread(tid) = ctx.role else { unreachable!() };
+        let mut g = ctx.shared.inner.lock().unwrap();
+        if g.abort {
+            drop(g);
+            abort_unwind();
+        }
+        g.threads[tid].phase = Phase::Parked;
+        ctx.shared.ctrl_cv.notify_all();
+        loop {
+            if g.abort {
+                drop(g);
+                abort_unwind();
+            }
+            if g.threads[tid].reply.take().is_some() {
+                return;
+            }
+            g = ctx.shared.thread_cv.wait(g).unwrap();
+        }
+    })
+}
+
+/// Spawn a model thread. Only legal from the model closure; the new
+/// thread inherits the spawner's view (the `thread::spawn`
+/// happens-before edge) and runs until its first simulated atomic op,
+/// where the scheduler takes over. Assertion failures inside the
+/// closure become checker violations carrying the schedule.
+pub fn spawn<F>(f: F)
+where
+    F: FnOnce() + Send + 'static,
+{
+    let (shared, tid) = with_ctx(|ctx| {
+        assert!(
+            ctx.role == Role::Controller,
+            "pico_check: spawn model threads from the model closure only"
+        );
+        let mut g = ctx.shared.inner.lock().unwrap();
+        let tid = g.threads.len();
+        let view = g.threads[0].view.clone();
+        g.threads.push(ThreadCell::new(view));
+        (Arc::clone(&ctx.shared), tid)
+    });
+    let shared2 = Arc::clone(&shared);
+    let handle = std::thread::Builder::new()
+        .name(format!("pico-check-{tid}"))
+        .spawn(move || {
+            let _ctx = CtxGuard::install(Arc::clone(&shared2), Role::Thread(tid));
+            let result = catch_unwind(AssertUnwindSafe(f));
+            let mut g = shared2.inner.lock().unwrap();
+            match result {
+                Ok(()) => {}
+                Err(p) if p.downcast_ref::<AbortToken>().is_some() => {}
+                Err(p) => {
+                    let msg = format!("model thread {tid} panicked: {}", panic_text(p));
+                    g.violation.get_or_insert(msg);
+                }
+            }
+            g.threads[tid].phase = Phase::Done;
+            shared2.ctrl_cv.notify_all();
+        })
+        .expect("spawn pico-check model thread");
+    let mut g = shared.inner.lock().unwrap();
+    g.handles.push(handle);
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ChoiceKind {
+    Thread,
+    Read,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Decision {
+    kind: ChoiceKind,
+    options: usize,
+    chosen: usize,
+}
+
+impl Decision {
+    fn choice(&self) -> Choice {
+        match self.kind {
+            ChoiceKind::Thread => Choice::Thread(self.chosen),
+            ChoiceKind::Read => Choice::Read(self.chosen),
+        }
+    }
+}
+
+enum Outcome {
+    Complete { state_hash: u64 },
+    Pruned,
+    Violated { message: String, state_hash: u64 },
+}
+
+struct ExecResult {
+    outcome: Outcome,
+    decisions: Vec<Decision>,
+}
+
+/// Take the next choice: follow the replay prefix while it lasts, then
+/// default to option 0 (DFS leftmost).
+fn next_choice(
+    decisions: &mut Vec<Decision>,
+    replay: &[Choice],
+    kind: ChoiceKind,
+    options: usize,
+) -> Result<usize, String> {
+    debug_assert!(options > 0);
+    let i = decisions.len();
+    let chosen = match replay.get(i) {
+        None => 0,
+        Some(&Choice::Thread(j)) if kind == ChoiceKind::Thread => j,
+        Some(&Choice::Read(j)) if kind == ChoiceKind::Read => j,
+        Some(c) => {
+            return Err(format!(
+                "stale schedule: step {i} recorded {c:?} but the execution reached a \
+                 {kind:?} choice"
+            ))
+        }
+    };
+    if chosen >= options {
+        return Err(format!(
+            "stale schedule: step {i} chose option {chosen} of {options} — the model or \
+             its mutation cfg changed since the schedule was recorded"
+        ));
+    }
+    decisions.push(Decision { kind, options, chosen });
+    Ok(chosen)
+}
+
+/// Tear down an abandoned execution: unblock every model thread with
+/// the abort token and wait for all of them to finish.
+fn abort_execution(shared: &ExecShared, mut g: MutexGuard<'_, ExecInner>) {
+    g.abort = true;
+    shared.thread_cv.notify_all();
+    let live = |g: &ExecInner| g.threads[1..].iter().any(|t| !matches!(t.phase, Phase::Done));
+    while live(&g) {
+        // Parked/Ready threads need a reply slot cleared? No — abort
+        // short-circuits both wait loops; Running threads abort at
+        // their next op or finish on their own.
+        g = shared.ctrl_cv.wait(g).unwrap();
+    }
+}
+
+/// Run exactly one execution of `model`, following `replay` while it
+/// lasts and recording every decision.
+fn run_once(opts: &CheckOptions, model: &dyn Fn(), replay: &[Choice]) -> ExecResult {
+    let shared = Arc::new(ExecShared {
+        inner: Mutex::new(ExecInner {
+            mem: Memory::default(),
+            threads: vec![ThreadCell::new(View::default())],
+            handles: Vec::new(),
+            violation: None,
+            abort: false,
+        }),
+        ctrl_cv: Condvar::new(),
+        thread_cv: Condvar::new(),
+    });
+    let ctx = CtxGuard::install(Arc::clone(&shared), Role::Controller);
+    if let Err(p) = catch_unwind(AssertUnwindSafe(model)) {
+        let mut g = shared.inner.lock().unwrap();
+        let msg = format!("model setup panicked: {}", panic_text(p));
+        g.violation.get_or_insert(msg);
+    }
+    {
+        let g = shared.inner.lock().unwrap();
+        assert!(
+            g.threads.len() <= opts.max_threads + 1,
+            "model spawned {} threads (max_threads {})",
+            g.threads.len() - 1,
+            opts.max_threads
+        );
+    }
+
+    let mut decisions: Vec<Decision> = Vec::new();
+    let mut sleep: BTreeSet<usize> = BTreeSet::new();
+    let mut forced_wake_pending = false;
+    let mut steps = 0usize;
+
+    let outcome = loop {
+        let mut g = shared.inner.lock().unwrap();
+        while g.violation.is_none()
+            && g.threads[1..].iter().any(|t| matches!(t.phase, Phase::Running))
+        {
+            g = shared.ctrl_cv.wait(g).unwrap();
+        }
+        if let Some(msg) = g.violation.clone() {
+            let state_hash = g.mem.state_hash();
+            abort_execution(&shared, g);
+            break Outcome::Violated { message: msg, state_hash };
+        }
+
+        let ready: Vec<usize> = (1..g.threads.len())
+            .filter(|&t| matches!(g.threads[t].phase, Phase::Ready(_)))
+            .collect();
+        let parked: Vec<usize> = (1..g.threads.len())
+            .filter(|&t| matches!(g.threads[t].phase, Phase::Parked))
+            .collect();
+
+        if ready.is_empty() {
+            if parked.is_empty() {
+                // All done.
+                let state_hash = g.mem.state_hash();
+                break Outcome::Complete { state_hash };
+            }
+            if forced_wake_pending {
+                let msg = format!(
+                    "deadlock: threads {parked:?} are parked in spin loops, no runnable \
+                     thread can store, and a forced newest-read wake made no progress \
+                     (state: {})",
+                    g.mem.describe()
+                );
+                let state_hash = g.mem.state_hash();
+                abort_execution(&shared, g);
+                break Outcome::Violated { message: msg, state_hash };
+            }
+            // Eventual visibility: wake every spinner and make its next
+            // load read the newest message.
+            forced_wake_pending = true;
+            for &t in &parked {
+                g.threads[t].phase = Phase::Running;
+                g.threads[t].reply = Some(0);
+                g.threads[t].force_newest = true;
+            }
+            shared.thread_cv.notify_all();
+            continue;
+        }
+
+        // Load-delay reduction: prefer writers (unsound for SeqCst
+        // loads, whose window shrinks as stores land — keep those
+        // schedulable).
+        let mut options = if opts.delay_loads {
+            let writers: Vec<usize> = ready
+                .iter()
+                .copied()
+                .filter(|&t| match &g.threads[t].phase {
+                    Phase::Ready(op) => undelayable(op),
+                    _ => unreachable!(),
+                })
+                .collect();
+            if writers.is_empty() {
+                ready
+            } else {
+                writers
+            }
+        } else {
+            ready
+        };
+        if opts.sleep_sets {
+            options.retain(|t| !sleep.contains(t));
+            if options.is_empty() {
+                abort_execution(&shared, g);
+                break Outcome::Pruned;
+            }
+        }
+
+        let chosen = match next_choice(&mut decisions, replay, ChoiceKind::Thread, options.len()) {
+            Ok(c) => c,
+            Err(msg) => {
+                let state_hash = g.mem.state_hash();
+                abort_execution(&shared, g);
+                break Outcome::Violated { message: msg, state_hash };
+            }
+        };
+        sleep.extend(options[..chosen].iter().copied());
+        let t = options[chosen];
+        let pending = match g.threads[t].phase {
+            Phase::Ready(op) => op,
+            _ => unreachable!(),
+        };
+
+        // Apply the op against the memory model.
+        let mut view = std::mem::take(&mut g.threads[t].view);
+        let reply = match pending {
+            PendingOp::Load { loc, ord } => {
+                let force = g.threads[t].force_newest || is_seqcst(ord);
+                let (lo, n) = g.mem.readable(loc, &view, force);
+                let pick = if n > 1 {
+                    match next_choice(&mut decisions, replay, ChoiceKind::Read, n) {
+                        Ok(c) => c,
+                        Err(msg) => {
+                            g.threads[t].view = view;
+                            let state_hash = g.mem.state_hash();
+                            abort_execution(&shared, g);
+                            break Outcome::Violated { message: msg, state_hash };
+                        }
+                    }
+                } else {
+                    0
+                };
+                g.threads[t].force_newest = false;
+                g.mem.load(loc, lo + pick, ord, &mut view)
+            }
+            PendingOp::Store { loc, ord, val } => {
+                g.mem.store(loc, val, ord, &mut view);
+                0
+            }
+            PendingOp::Rmw { loc, ord, rmw } => apply_rmw(&mut g.mem, loc, ord, rmw, &mut view),
+        };
+        g.threads[t].view = view;
+
+        if pending.is_write() {
+            // Stores wake spinners and conflicting sleepers.
+            forced_wake_pending = false;
+            for i in 1..g.threads.len() {
+                if matches!(g.threads[i].phase, Phase::Parked) {
+                    g.threads[i].phase = Phase::Running;
+                    g.threads[i].reply = Some(0);
+                }
+            }
+        }
+        let executed_loc = pending.loc();
+        let executed_write = pending.is_write();
+        sleep.retain(|&s| match &g.threads[s].phase {
+            Phase::Ready(op) => {
+                !(op.loc() == executed_loc && (executed_write || op.is_write()))
+            }
+            // A sleeper that is no longer Ready has no pending op to
+            // conflict with; drop it.
+            _ => false,
+        });
+
+        g.threads[t].phase = Phase::Running;
+        g.threads[t].reply = Some(reply);
+        shared.thread_cv.notify_all();
+
+        steps += 1;
+        if steps > opts.max_steps {
+            let msg = format!("step bound exceeded ({} decisions)", opts.max_steps);
+            let state_hash = g.mem.state_hash();
+            abort_execution(&shared, g);
+            break Outcome::Violated { message: msg, state_hash };
+        }
+    };
+
+    // Join every model thread before tearing the execution down.
+    let handles = {
+        let mut g = shared.inner.lock().unwrap();
+        std::mem::take(&mut g.handles)
+    };
+    for h in handles {
+        let _ = h.join();
+    }
+    drop(ctx);
+    ExecResult { outcome, decisions }
+}
+
+/// Serializes checker runs: the TLS execution context and panic-hook
+/// filtering assume one exploration at a time per process.
+fn checker_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+fn schedule_of(decisions: &[Decision]) -> Schedule {
+    Schedule(decisions.iter().map(Decision::choice).collect())
+}
+
+/// Exhaustively explore every schedule of `model` within `opts` bounds.
+///
+/// Returns the exploration [`Report`] if no interleaving violates any
+/// model assertion, or the first [`Violation`] found — whose schedule
+/// string [`replay`] accepts. Exceeding `max_executions` or `max_steps`
+/// is reported as a violation (the bounds are part of the claim).
+pub fn check(opts: &CheckOptions, model: impl Fn()) -> Result<Report, Violation> {
+    let _serial = checker_lock();
+    silence_abort_panics();
+    let mut prefix: Vec<Choice> = Vec::new();
+    let mut report = Report::default();
+    loop {
+        let res = run_once(opts, &model, &prefix);
+        report.max_depth = report.max_depth.max(res.decisions.len());
+        match res.outcome {
+            Outcome::Violated { message, state_hash } => {
+                return Err(Violation { schedule: schedule_of(&res.decisions), message, state_hash })
+            }
+            Outcome::Complete { state_hash } => {
+                report.executions += 1;
+                report.last_hash = state_hash;
+            }
+            Outcome::Pruned => report.pruned += 1,
+        }
+        if report.executions + report.pruned >= opts.max_executions {
+            return Err(Violation {
+                schedule: schedule_of(&res.decisions),
+                message: format!(
+                    "execution bound exceeded: {} executions without exhausting the \
+                     schedule space (raise max_executions or shrink the model)",
+                    opts.max_executions
+                ),
+                state_hash: 0,
+            });
+        }
+        // Backtrack to the deepest decision with unexplored options.
+        let mut cut = res.decisions.len();
+        loop {
+            if cut == 0 {
+                return Ok(report);
+            }
+            cut -= 1;
+            if res.decisions[cut].chosen + 1 < res.decisions[cut].options {
+                break;
+            }
+        }
+        prefix.clear();
+        prefix.extend(res.decisions[..cut].iter().map(Decision::choice));
+        let mut bumped = res.decisions[cut];
+        bumped.chosen += 1;
+        prefix.push(bumped.choice());
+    }
+}
+
+/// Re-run exactly one execution following `schedule` (choices beyond
+/// its end default to option 0). Returns the final state hash, or the
+/// violation the schedule reaches — deterministically, run after run.
+pub fn replay(
+    opts: &CheckOptions,
+    model: impl Fn(),
+    schedule: &Schedule,
+) -> Result<u64, Violation> {
+    let _serial = checker_lock();
+    silence_abort_panics();
+    let res = run_once(opts, &model, &schedule.0);
+    match res.outcome {
+        Outcome::Complete { state_hash } => Ok(state_hash),
+        Outcome::Pruned => Err(Violation {
+            schedule: schedule_of(&res.decisions),
+            message: "replay hit a sleep-set prune; replay with sleep_sets disabled".into(),
+            state_hash: 0,
+        }),
+        Outcome::Violated { message, state_hash } => {
+            Err(Violation { schedule: schedule_of(&res.decisions), message, state_hash })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_string_round_trips() {
+        let s = Schedule(vec![Choice::Thread(1), Choice::Read(2), Choice::Thread(0)]);
+        let text = s.to_string();
+        assert_eq!(text, "t1.r2.t0");
+        assert_eq!(text.parse::<Schedule>().unwrap(), s);
+        assert_eq!("".parse::<Schedule>().unwrap(), Schedule::default());
+        assert!("x9".parse::<Schedule>().is_err());
+        assert!("t".parse::<Schedule>().is_err());
+    }
+}

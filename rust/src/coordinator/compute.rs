@@ -80,7 +80,11 @@ pub struct PjrtCompute {
     pub artifacts: Arc<PipelineArtifacts>,
 }
 
+// SAFETY: see the struct docs — the CPU PJRT client is thread-safe for
+// concurrent compile + execute, and the executable cache is mutexed.
 unsafe impl Send for PjrtCompute {}
+// SAFETY: as above; shared references only reach the thread-safe client
+// and the mutexed cache.
 unsafe impl Sync for PjrtCompute {}
 
 impl Compute for PjrtCompute {

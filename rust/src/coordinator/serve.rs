@@ -923,15 +923,26 @@ mod tests {
         let g = modelzoo::synthetic_chain(6);
         let pieces = partition::partition(&g, 5, None).unwrap().pieces;
         let c = Cluster::homogeneous_rpi(4, 1.0);
-        let plans =
-            pipeline::plan_replicated(&g, &pieces, &c, f64::INFINITY, 2).unwrap();
+        let plans = pipeline::plan_replicated(&g, &pieces, &c, f64::INFINITY, 2).unwrap();
         assert_eq!(plans.len(), 2);
-        let single =
-            serve_replicated(&g, &plans[..1], &c, &NullCompute, requests(&g, 24), &ServeOptions::default())
-                .unwrap();
-        let multi =
-            serve_replicated(&g, &plans, &c, &NullCompute, requests(&g, 24), &ServeOptions::default())
-                .unwrap();
+        let single = serve_replicated(
+            &g,
+            &plans[..1],
+            &c,
+            &NullCompute,
+            requests(&g, 24),
+            &ServeOptions::default(),
+        )
+        .unwrap();
+        let multi = serve_replicated(
+            &g,
+            &plans,
+            &c,
+            &NullCompute,
+            requests(&g, 24),
+            &ServeOptions::default(),
+        )
+        .unwrap();
         assert_eq!(multi.responses.len(), 24);
         assert!(
             multi.throughput > 1.8 * single.throughput,

@@ -62,7 +62,11 @@ pub fn layer_param_bytes(g: &ModelGraph, id: LayerId) -> usize {
 
 /// Eq. (6): θ(M; F^k) — FLOPs a device spends executing segment tiles
 /// (actual produced rows, halo included).
-pub fn segment_flops(g: &ModelGraph, segment: &[LayerId], tiles: &BTreeMap<LayerId, LayerTile>) -> f64 {
+pub fn segment_flops(
+    g: &ModelGraph,
+    segment: &[LayerId],
+    tiles: &BTreeMap<LayerId, LayerTile>,
+) -> f64 {
     segment
         .iter()
         .map(|&id| {

@@ -17,7 +17,9 @@ pub mod flops;
 pub mod oracle;
 pub mod stage;
 
-pub use feature::{proportional_splits, required_rows, row_splits, segment_tiles, Interval, LayerTile};
+pub use feature::{
+    proportional_splits, required_rows, row_splits, segment_tiles, Interval, LayerTile,
+};
 pub use oracle::{CostOracle, OracleStats, PieceMeta};
 pub use flops::{
     halo_rows, ideal_segment_flops, layer_flops, piece_redundancy, segment_flops, segment_sinks,

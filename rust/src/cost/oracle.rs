@@ -202,8 +202,8 @@ impl PieceMeta {
             let ids = &piece_ids[q];
             let f: f64 = ids.iter().map(|&id| layer_flops(g, id, g.shape(id).height())).sum();
             prefix_ideal_flops[q + 1] = prefix_ideal_flops[q] + f;
-            prefix_param_bytes[q + 1] =
-                prefix_param_bytes[q] + ids.iter().map(|&id| layer_param_bytes(g, id)).sum::<usize>();
+            prefix_param_bytes[q + 1] = prefix_param_bytes[q]
+                + ids.iter().map(|&id| layer_param_bytes(g, id)).sum::<usize>();
             prefix_feature_bytes[q + 1] =
                 prefix_feature_bytes[q] + ids.iter().map(|&id| g.shape(id).bytes()).sum::<usize>();
         }
@@ -605,8 +605,7 @@ impl<'g> CostOracle<'g> {
                 piece_sink_bytes[..w].fill(0);
                 for &s in sinks {
                     let out_iv = clip(need[s], g.shape(s).height());
-                    piece_sink_bytes[meta.piece_of[s]] +=
-                        slab_bytes(g, s, out_iv.1 - out_iv.0);
+                    piece_sink_bytes[meta.piece_of[s]] += slab_bytes(g, s, out_iv.1 - out_iv.0);
                 }
                 let mut acc = 0usize;
                 for i in (0..=j).rev() {
@@ -627,7 +626,11 @@ impl<'g> CostOracle<'g> {
                             None => iv,
                             Some(x) => (x.0.min(iv.0), x.1.max(iv.1)),
                         });
-                        let lo = if idx + 1 < list.len() { list[idx + 1].0 } else { a };
+                        let lo = if idx + 1 < list.len() {
+                            list[idx + 1].0
+                        } else {
+                            a
+                        };
                         let civ = clip(u.unwrap(), h);
                         let bytes = slab_bytes(g, src, civ.1 - civ.0);
                         for i in (lo + 1)..=b {
@@ -788,8 +791,7 @@ mod tests {
         let (pieces, meta) = setup(&g);
         let l = pieces.len();
         let cluster = Cluster::paper_heterogeneous();
-        let mut oracle =
-            CostOracle::new(&g, meta, cluster.devices.clone(), cluster.network);
+        let mut oracle = CostOracle::new(&g, meta, cluster.devices.clone(), cluster.network);
         let devs: Vec<&Device> = cluster.devices.iter().collect();
         for i in 0..l {
             for j in i..l {

@@ -307,8 +307,6 @@ mod tests {
         let feed = c.network.t_comm(3 * 32 * 32 * 4);
         assert!((sc.t_comm[0] - feed).abs() < 1e-12);
         assert!(sc.t_comm[1] > 0.0 && sc.t_comm[2] > 0.0);
-        assert!(
-            (sc.t_comm_stage - (sc.t_comm[0] + sc.t_comm[1] + sc.t_comm[2])).abs() < 1e-12
-        );
+        assert!((sc.t_comm_stage - (sc.t_comm[0] + sc.t_comm[1] + sc.t_comm[2])).abs() < 1e-12);
     }
 }

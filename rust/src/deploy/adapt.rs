@@ -140,9 +140,7 @@ impl<'g> OnlineAdapter<'g> {
     ) -> Option<(Vec<PipelinePlan>, ReplanStrategy)> {
         let pieces = self.ctx.pieces(self.diameter, self.dc_parts, None).ok()?;
         let meta = self.ctx.meta(self.diameter, self.dc_parts, &pieces);
-        let ri = plans
-            .iter()
-            .position(|p| p.stages.iter().any(|s| s.devices.contains(&device)))?;
+        let ri = plans.iter().position(|p| p.stages.iter().any(|s| s.devices.contains(&device)))?;
         // The re-derived chain must be the one the plan's stage
         // intervals index into — a plan whose artifact predates the
         // recorded `dc_parts` (or was built under a partition budget)
@@ -268,7 +266,11 @@ impl AdaptController for OnlineAdapter<'_> {
                 let (exp, act) = (o.expected_t_comp[k], scale * o.observed_t_comp[k]);
                 if d < n && exp > 0.0 && act.is_finite() && act > 0.0 {
                     let r = act / exp;
-                    round_ratio[d] = if round_ratio[d].is_nan() { r } else { round_ratio[d].max(r) };
+                    round_ratio[d] = if round_ratio[d].is_nan() {
+                        r
+                    } else {
+                        round_ratio[d].max(r)
+                    };
                 }
             }
         }
@@ -299,8 +301,11 @@ impl AdaptController for OnlineAdapter<'_> {
             .filter(|&d| self.streak[d] >= self.policy.patience)
             .max_by(|&a, &b| self.ratio[a].value().total_cmp(&self.ratio[b].value()))?;
         let measured = round_ratio[device];
-        let ratio =
-            if measured.is_finite() && measured > 0.0 { measured } else { self.ratio[device].value() };
+        let ratio = if measured.is_finite() && measured > 0.0 {
+            measured
+        } else {
+            self.ratio[device].value()
+        };
         let scale = 1.0 / ratio;
         let mut estimated = believed.clone();
         estimated.devices[device].flops *= scale;
@@ -355,8 +360,11 @@ mod tests {
         );
         assert_eq!(adapter.replans(), 1);
         // Device conservation across the swap.
-        let mut devs: Vec<usize> =
-            swap.plans.iter().flat_map(|p| p.stages.iter().flat_map(|s| s.devices.clone())).collect();
+        let mut devs: Vec<usize> = swap
+            .plans
+            .iter()
+            .flat_map(|p| p.stages.iter().flat_map(|s| s.devices.clone()))
+            .collect();
         devs.sort_unstable();
         assert_eq!(devs, (0..c.len()).collect::<Vec<_>>());
         // The session shared one partition + one oracle build.
@@ -437,8 +445,7 @@ mod tests {
         let c = Cluster::homogeneous_rpi(3, 1.0);
         let plan = pipeline::plan(&g, &pieces, &c, f64::INFINITY).unwrap();
         let plans = vec![plan];
-        let mut adapter =
-            OnlineAdapter::new(&g, AdaptPolicy::default(), 5, 1, f64::INFINITY);
+        let mut adapter = OnlineAdapter::new(&g, AdaptPolicy::default(), 5, 1, f64::INFINITY);
         let (_, obs) = round_profiles(&g, &plans, &c, &c);
         for round in 0..6 {
             assert!(adapter.observe_round(round, &plans, &c, &obs).is_none());
@@ -472,10 +479,7 @@ mod tests {
         // the stale plan.
         let stale = plan.cost(&g, &drifted).period;
         let fresh = swap.plans[0].cost(&g, &drifted).period;
-        assert!(
-            fresh <= stale + 1e-12,
-            "re-planned period {fresh} must not exceed stale {stale}"
-        );
+        assert!(fresh <= stale + 1e-12, "re-planned period {fresh} must not exceed stale {stale}");
         let st = adapter.planner_stats();
         assert_eq!(st.partition_runs, 1);
         assert_eq!(st.oracle_builds, 1);

@@ -200,7 +200,11 @@ impl DeploymentBuilder {
     /// "unconstrained" and are stored as such (a bare `inf` would not
     /// survive the JSON artifact).
     pub fn t_lim(mut self, seconds: f64) -> Self {
-        self.t_lim = if seconds.is_finite() { Some(seconds) } else { None };
+        self.t_lim = if seconds.is_finite() {
+            Some(seconds)
+        } else {
+            None
+        };
         self
     }
 
@@ -249,7 +253,8 @@ impl DeploymentBuilder {
             }
             (Replicas::Fixed(r), ExecutionMode::Synchronous) => {
                 return Err(PicoError::Unsupported(format!(
-                    "scheme {scheme_name:?} is synchronous; {r} pipeline replicas only apply to pipelined schemes"
+                    "scheme {scheme_name:?} is synchronous; {r} pipeline replicas only apply to \
+                     pipelined schemes"
                 )))
             }
             (Replicas::Fixed(r), ExecutionMode::Pipelined) => {
@@ -339,8 +344,11 @@ fn auto_replicas(
                     let plans = replicate(scheme, ctx, cluster, t_lim, r)?;
                     let probe = (4 * r).max(16);
                     let report = sim::simulate_replicated(ctx.graph(), cluster, &plans, probe);
-                    let rate =
-                        if report.makespan > 0.0 { probe as f64 / report.makespan } else { 0.0 };
+                    let rate = if report.makespan > 0.0 {
+                        probe as f64 / report.makespan
+                    } else {
+                        0.0
+                    };
                     Ok((rate, plans))
                 })
             })
@@ -365,8 +373,9 @@ fn auto_replicas(
             best = Some((rate, plans));
         }
     }
-    best.map(|(_, p)| p)
-        .ok_or_else(|| last_err.unwrap_or(PicoError::Internal("no replica count is plannable".into())))
+    best.map(|(_, p)| p).ok_or_else(|| {
+        last_err.unwrap_or(PicoError::Internal("no replica count is plannable".into()))
+    })
 }
 
 /// The versioned, serializable deployment artifact: everything needed
@@ -455,7 +464,8 @@ impl DeploymentPlan {
     fn validate_pipelined_serving(&self) -> Result<(), PicoError> {
         if self.execution() == ExecutionMode::Synchronous {
             return Err(PicoError::Unsupported(format!(
-                "scheme {:?} is a synchronous baseline: it is simulate-only; serving needs a pipelined plan",
+                "scheme {:?} is a synchronous baseline: it is simulate-only; serving needs a \
+                 pipelined plan",
                 self.scheme
             )));
         }
@@ -504,7 +514,11 @@ impl DeploymentPlan {
 
     /// Execute the plan through the threaded serving coordinator with
     /// real (or timing-only) tensor computation.
-    pub fn serve(&self, backend: &Backend, cfg: &ServeConfig) -> Result<coordinator::ServeReport, PicoError> {
+    pub fn serve(
+        &self,
+        backend: &Backend,
+        cfg: &ServeConfig,
+    ) -> Result<coordinator::ServeReport, PicoError> {
         self.validate_pipelined_serving()?;
         let requests = match &cfg.requests {
             Some(r) => r.clone(),
@@ -649,7 +663,8 @@ impl DeploymentPlan {
     /// Human-readable stage/device breakdown of the deployment.
     pub fn explain(&self) -> String {
         let mut out = format!(
-            "deployment: {} via {} (plan v{})\ncluster: {} devices [{}], {:.1} Mbps WLAN\nt_lim: {}\n",
+            "deployment: {} via {} (plan v{})\ncluster: {} devices [{}], {:.1} Mbps \
+             WLAN\nt_lim: {}\n",
             self.model,
             self.scheme,
             self.version,
@@ -866,16 +881,14 @@ mod tests {
             } else {
                 DeploymentPlan::builder().model("squeezenet").cluster(c.clone())
             };
-            let d = builder
-                .scheme(name)
-                .build()
-                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            let d = builder.scheme(name).build().unwrap_or_else(|e| panic!("{name}: {e}"));
             assert_eq!(d.scheme, name);
             let r = d.simulate(20).unwrap();
             assert!(r.throughput > 0.0, "{name}: {r:?}");
             assert_eq!(r.scheme, name);
             // serve is pipelined-only; baselines must refuse, not lie.
-            let serve = d.serve(&Backend::Null, &ServeConfig { n_requests: 3, ..Default::default() });
+            let serve =
+                d.serve(&Backend::Null, &ServeConfig { n_requests: 3, ..Default::default() });
             match d.replicas[0].execution {
                 ExecutionMode::Pipelined => {
                     assert_eq!(serve.unwrap().responses.len(), 3, "{name}");

@@ -73,7 +73,12 @@ impl Scheme for PicoScheme {
     fn execution(&self) -> ExecutionMode {
         ExecutionMode::Pipelined
     }
-    fn plan_ctx(&self, ctx: &PlanContext, cluster: &Cluster, t_lim: f64) -> Result<PipelinePlan, PicoError> {
+    fn plan_ctx(
+        &self,
+        ctx: &PlanContext,
+        cluster: &Cluster,
+        t_lim: f64,
+    ) -> Result<PipelinePlan, PicoError> {
         let pieces = ctx.pieces(self.diameter, self.dc_parts, self.partition_budget)?;
         let meta = ctx.meta(self.diameter, self.dc_parts, &pieces);
         let (plan, stats) =
@@ -94,7 +99,12 @@ impl Scheme for LayerWiseScheme {
     fn execution(&self) -> ExecutionMode {
         ExecutionMode::Synchronous
     }
-    fn plan_ctx(&self, ctx: &PlanContext, cluster: &Cluster, _t_lim: f64) -> Result<PipelinePlan, PicoError> {
+    fn plan_ctx(
+        &self,
+        ctx: &PlanContext,
+        cluster: &Cluster,
+        _t_lim: f64,
+    ) -> Result<PipelinePlan, PicoError> {
         Ok(baselines::layer_wise(ctx.graph(), cluster).to_plan())
     }
 }
@@ -112,7 +122,12 @@ impl Scheme for EarlyFusedScheme {
     fn execution(&self) -> ExecutionMode {
         ExecutionMode::Synchronous
     }
-    fn plan_ctx(&self, ctx: &PlanContext, cluster: &Cluster, _t_lim: f64) -> Result<PipelinePlan, PicoError> {
+    fn plan_ctx(
+        &self,
+        ctx: &PlanContext,
+        cluster: &Cluster,
+        _t_lim: f64,
+    ) -> Result<PipelinePlan, PicoError> {
         Ok(baselines::early_fused(ctx.graph(), cluster, self.fuse_pools).to_plan())
     }
 }
@@ -131,7 +146,12 @@ impl Scheme for OptimalFusedScheme {
     fn execution(&self) -> ExecutionMode {
         ExecutionMode::Synchronous
     }
-    fn plan_ctx(&self, ctx: &PlanContext, cluster: &Cluster, _t_lim: f64) -> Result<PipelinePlan, PicoError> {
+    fn plan_ctx(
+        &self,
+        ctx: &PlanContext,
+        cluster: &Cluster,
+        _t_lim: f64,
+    ) -> Result<PipelinePlan, PicoError> {
         let pieces = ctx.pieces(self.diameter, self.dc_parts, self.partition_budget)?;
         let meta = ctx.meta(self.diameter, self.dc_parts, &pieces);
         Ok(baselines::optimal_fused_with_meta(ctx.graph(), &pieces, &meta, cluster).to_plan())
@@ -148,7 +168,12 @@ impl Scheme for CoEdgeScheme {
     fn execution(&self) -> ExecutionMode {
         ExecutionMode::Synchronous
     }
-    fn plan_ctx(&self, ctx: &PlanContext, cluster: &Cluster, _t_lim: f64) -> Result<PipelinePlan, PicoError> {
+    fn plan_ctx(
+        &self,
+        ctx: &PlanContext,
+        cluster: &Cluster,
+        _t_lim: f64,
+    ) -> Result<PipelinePlan, PicoError> {
         Ok(baselines::coedge(ctx.graph(), cluster).to_plan())
     }
 }
@@ -169,9 +194,15 @@ impl Scheme for BfsScheme {
     fn execution(&self) -> ExecutionMode {
         ExecutionMode::Pipelined
     }
-    fn plan_ctx(&self, ctx: &PlanContext, cluster: &Cluster, t_lim: f64) -> Result<PipelinePlan, PicoError> {
+    fn plan_ctx(
+        &self,
+        ctx: &PlanContext,
+        cluster: &Cluster,
+        t_lim: f64,
+    ) -> Result<PipelinePlan, PicoError> {
         let pieces = ctx.pieces(self.diameter, self.dc_parts, self.partition_budget)?;
-        let r = baselines::bfs_optimal(ctx.graph(), &pieces, cluster, t_lim, Some(self.search_budget));
+        let r =
+            baselines::bfs_optimal(ctx.graph(), &pieces, cluster, t_lim, Some(self.search_budget));
         r.plan.ok_or_else(|| {
             if t_lim.is_finite() {
                 PicoError::Infeasible { t_lim }

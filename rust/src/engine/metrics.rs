@@ -123,8 +123,11 @@ impl Ewma {
     }
 
     pub fn observe(&mut self, x: f64) {
-        self.value =
-            if self.samples == 0 { x } else { self.alpha * x + (1.0 - self.alpha) * self.value };
+        self.value = if self.samples == 0 {
+            x
+        } else {
+            self.alpha * x + (1.0 - self.alpha) * self.value
+        };
         self.samples += 1;
     }
 
@@ -187,7 +190,11 @@ impl ServiceTracker {
             batches: self.batches,
             items: self.items,
             ewma_per_item: self.ewma.value(),
-            mean_per_item: if self.items > 0 { self.total / self.items as f64 } else { 0.0 },
+            mean_per_item: if self.items > 0 {
+                self.total / self.items as f64
+            } else {
+                0.0
+            },
         }
     }
 }

@@ -45,7 +45,8 @@ impl fmt::Display for PicoError {
             }
             PicoError::UnknownModel(name) => write!(
                 f,
-                "unknown model {name:?}: not a zoo name, a spec.json path, or an exported tiny model"
+                "unknown model {name:?}: not a zoo name, a spec.json path, or an exported \
+                 tiny model"
             ),
             PicoError::UnknownScheme(name) => write!(
                 f,
@@ -57,7 +58,8 @@ impl fmt::Display for PicoError {
             }
             PicoError::UnsupportedVersion { found, supported } => write!(
                 f,
-                "plan artifact version {found} is not supported (this build reads version {supported})"
+                "plan artifact version {found} is not supported (this build reads version \
+                 {supported})"
             ),
             PicoError::InvalidPlan(msg) => write!(f, "invalid plan artifact: {msg}"),
             PicoError::Unsupported(msg) => write!(f, "unsupported operation: {msg}"),

@@ -175,14 +175,29 @@ impl Layer {
         activation: Activation,
         groups: usize,
     ) -> Layer {
-        Layer { groups, ..Layer::conv(name, input, out_channels, kernel, stride, padding, activation) }
+        Layer {
+            groups,
+            ..Layer::conv(name, input, out_channels, kernel, stride, padding, activation)
+        }
     }
 
-    pub fn maxpool(name: &str, input: LayerId, kernel: (usize, usize), stride: (usize, usize), padding: (usize, usize)) -> Layer {
+    pub fn maxpool(
+        name: &str,
+        input: LayerId,
+        kernel: (usize, usize),
+        stride: (usize, usize),
+        padding: (usize, usize),
+    ) -> Layer {
         Layer { inputs: vec![input], kernel, stride, padding, ..Layer::new(name, Op::MaxPool) }
     }
 
-    pub fn avgpool(name: &str, input: LayerId, kernel: (usize, usize), stride: (usize, usize), padding: (usize, usize)) -> Layer {
+    pub fn avgpool(
+        name: &str,
+        input: LayerId,
+        kernel: (usize, usize),
+        stride: (usize, usize),
+        padding: (usize, usize),
+    ) -> Layer {
         Layer { inputs: vec![input], kernel, stride, padding, ..Layer::new(name, Op::AvgPool) }
     }
 
@@ -199,6 +214,11 @@ impl Layer {
     }
 
     pub fn dense(name: &str, input: LayerId, units: usize, activation: Activation) -> Layer {
-        Layer { inputs: vec![input], out_channels: units, activation, ..Layer::new(name, Op::Dense) }
+        Layer {
+            inputs: vec![input],
+            out_channels: units,
+            activation,
+            ..Layer::new(name, Op::Dense)
+        }
     }
 }

@@ -66,7 +66,11 @@ pub struct ModelGraph {
 impl ModelGraph {
     /// Build from topologically ordered layers; computes shapes eagerly
     /// and validates the DAG invariants.
-    pub fn new(name: &str, input_shape: (usize, usize, usize), layers: Vec<Layer>) -> anyhow::Result<ModelGraph> {
+    pub fn new(
+        name: &str,
+        input_shape: (usize, usize, usize),
+        layers: Vec<Layer>,
+    ) -> anyhow::Result<ModelGraph> {
         let mut g = ModelGraph {
             name: name.to_string(),
             input_shape,
@@ -151,7 +155,11 @@ impl ModelGraph {
                     let (kh, kw) = l.kernel;
                     let (sh, sw) = l.stride;
                     let (ph, pw) = l.padding;
-                    anyhow::ensure!(h + 2 * ph >= kh && w + 2 * pw >= kw, "{}: window exceeds input", l.name);
+                    anyhow::ensure!(
+                        h + 2 * ph >= kh && w + 2 * pw >= kw,
+                        "{}: window exceeds input",
+                        l.name
+                    );
                     let ho = (h + 2 * ph - kh) / sh + 1;
                     let wo = (w + 2 * pw - kw) / sw + 1;
                     let co = if l.op == Op::Conv { l.out_channels } else { c };
@@ -174,14 +182,22 @@ impl ModelGraph {
                         let Shape::Chw(ci, hi, wi) = s else {
                             anyhow::bail!("{}: concat on flat input", l.name)
                         };
-                        anyhow::ensure!(*hi == h && *wi == w, "{}: concat spatial mismatch", l.name);
+                        anyhow::ensure!(
+                            *hi == h && *wi == w,
+                            "{}: concat spatial mismatch",
+                            l.name
+                        );
                         c += ci;
                     }
                     Shape::Chw(c, h, w)
                 }
                 Op::Flatten => Shape::Flat(ins[0].elems()),
                 Op::Dense => {
-                    anyhow::ensure!(matches!(ins[0], Shape::Flat(_)), "{}: dense on spatial input", l.name);
+                    anyhow::ensure!(
+                        matches!(ins[0], Shape::Flat(_)),
+                        "{}: dense on spatial input",
+                        l.name
+                    );
                     Shape::Flat(l.out_channels)
                 }
             };
@@ -208,23 +224,22 @@ impl ModelGraph {
         let mut ids: BTreeMap<String, LayerId> = BTreeMap::new();
         let mut layers = Vec::new();
         for lv in v.get("layers").as_arr().ok_or_else(|| anyhow::anyhow!("missing layers"))? {
-            let lname = lv.get("name").as_str().ok_or_else(|| anyhow::anyhow!("layer without name"))?;
+            let lname =
+                lv.get("name").as_str().ok_or_else(|| anyhow::anyhow!("layer without name"))?;
             let op = Op::from_str(lv.get("op").as_str().unwrap_or(""))?;
             let mut inputs = Vec::new();
             for iv in lv.get("inputs").as_arr().unwrap_or(&[]) {
                 let iname = iv.as_str().ok_or_else(|| anyhow::anyhow!("bad input ref"))?;
-                inputs.push(
-                    *ids.get(iname)
-                        .ok_or_else(|| anyhow::anyhow!("{lname}: unknown input {iname} (not topo-ordered?)"))?,
-                );
+                let id = ids.get(iname).ok_or_else(|| {
+                    anyhow::anyhow!("{lname}: unknown input {iname} (not topo-ordered?)")
+                })?;
+                inputs.push(*id);
             }
             let pair = |key: &str, default: usize| -> (usize, usize) {
                 let a = lv.get(key);
-                (
-                    a.idx(0).as_usize().unwrap_or(default),
-                    a.idx(1).as_usize().unwrap_or(default),
-                )
+                (a.idx(0).as_usize().unwrap_or(default), a.idx(1).as_usize().unwrap_or(default))
             };
+            let act = lv.get("activation").as_str().unwrap_or("linear");
             let layer = Layer {
                 name: lname.to_string(),
                 op,
@@ -233,7 +248,7 @@ impl ModelGraph {
                 kernel: pair("kernel", 1),
                 stride: pair("stride", 1),
                 padding: pair("padding", 0),
-                activation: Activation::from_str(lv.get("activation").as_str().unwrap_or("linear"))?,
+                activation: Activation::from_str(act)?,
                 groups: lv.get("groups").as_usize().unwrap_or(1),
             };
             ids.insert(lname.to_string(), layers.len());
@@ -251,13 +266,12 @@ impl ModelGraph {
             .layers
             .iter()
             .map(|l| {
+                let input_names: Vec<Value> =
+                    l.inputs.iter().map(|&i| self.layers[i].name.as_str().into()).collect();
                 obj(vec![
                     ("name", l.name.as_str().into()),
                     ("op", l.op.as_str().into()),
-                    (
-                        "inputs",
-                        Value::Arr(l.inputs.iter().map(|&i| self.layers[i].name.as_str().into()).collect()),
-                    ),
+                    ("inputs", Value::Arr(input_names)),
                     ("out_channels", l.out_channels.into()),
                     ("kernel", vec![l.kernel.0, l.kernel.1].into()),
                     ("stride", vec![l.stride.0, l.stride.1].into()),
@@ -344,7 +358,11 @@ mod tests {
     fn forward_ref_rejected() {
         let mut c1 = Layer::conv("c1", 0, 8, (3, 3), (1, 1), (1, 1), Activation::Relu);
         c1.inputs = vec![2]; // reads a later layer
-        let l = vec![Layer::input("in"), c1, Layer::conv("c2", 0, 8, (3, 3), (1, 1), (1, 1), Activation::Relu)];
+        let l = vec![
+            Layer::input("in"),
+            c1,
+            Layer::conv("c2", 0, 8, (3, 3), (1, 1), (1, 1), Activation::Relu),
+        ];
         assert!(ModelGraph::new("bad", (3, 16, 16), l).is_err());
     }
 

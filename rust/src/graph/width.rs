@@ -48,11 +48,18 @@ pub fn width(g: &ModelGraph) -> usize {
     m - matching
 }
 
-fn try_kuhn(u: usize, adj: &[Vec<usize>], seen: &mut [bool], matched_right: &mut [Option<usize>]) -> bool {
+fn try_kuhn(
+    u: usize,
+    adj: &[Vec<usize>],
+    seen: &mut [bool],
+    matched_right: &mut [Option<usize>],
+) -> bool {
     for &v in &adj[u] {
         if !seen[v] {
             seen[v] = true;
-            if matched_right[v].is_none() || try_kuhn(matched_right[v].unwrap(), adj, seen, matched_right) {
+            if matched_right[v].is_none()
+                || try_kuhn(matched_right[v].unwrap(), adj, seen, matched_right)
+            {
                 matched_right[v] = Some(u);
                 return true;
             }

@@ -366,10 +366,7 @@ mod tests {
         assert_eq!(Value::from_str("null").unwrap(), Value::Null);
         assert_eq!(Value::from_str("true").unwrap(), Value::Bool(true));
         assert_eq!(Value::from_str("-3.5e2").unwrap(), Value::Num(-350.0));
-        assert_eq!(
-            Value::from_str("\"a\\nb\"").unwrap(),
-            Value::Str("a\nb".into())
-        );
+        assert_eq!(Value::from_str("\"a\\nb\"").unwrap(), Value::Str("a\nb".into()));
     }
 
     #[test]

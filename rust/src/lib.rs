@@ -34,9 +34,11 @@
 //!   ([`baselines`]), the heterogeneous cluster model ([`cluster`]),
 //!   and — on top of the shared [`engine`] — the analytical simulator
 //!   ([`sim`]), the threaded serving [`coordinator`] that executes
-//!   real tensors through AOT artifacts ([`runtime`]), and the
-//!   open-loop load harness ([`load`]) that stress-tests a deployment
-//!   under production-style arrival streams.
+//!   real tensors through AOT artifacts ([`runtime`]), the open-loop
+//!   load harness ([`load`]) that stress-tests a deployment under
+//!   production-style arrival streams, and the concurrency model
+//!   checker ([`check`]) that exhaustively verifies the load layer's
+//!   lock-free protocols.
 //! * **L2 (python/compile)** — jax model definitions lowered once to HLO
 //!   text (`make artifacts`); never on the request path.
 //! * **L1 (python/compile/kernels)** — Pallas conv/pool/dense kernels
@@ -109,13 +111,32 @@
 //! Entry points: [`deploy::DeploymentPlan::load_test`] /
 //! [`deploy::DeploymentPlan::simulate_open_loop`].
 //!
+//! ## Concurrency correctness: model checking, not hope
+//!
+//! The lock-free primitives under [`load`] — the Lamport SPSC
+//! [`load::ShardQueue`] and the seqlock [`load::ClockCell`] — declare
+//! their shared state through the shim atomics in [`check::atomic`]:
+//! `std` types in a normal build, a simulated release/acquire memory
+//! model under `--cfg pico_check`. [`check`] is an in-repo,
+//! dependency-free bounded-exhaustive model checker (DFS over thread
+//! interleavings *and* weak-memory read choices, DPOR-style sleep-set
+//! reduction, replayable schedule strings); `rust/tests/pico_check.rs`
+//! explores the queue/seqlock protocols exhaustively and a mutation
+//! gate proves the checker flags each deliberately weakened ordering.
+//! The memory-ordering contracts themselves are documented in
+//! [`load::queue`]. Miri and ThreadSanitizer CI jobs cover the
+//! non-atomic side.
+//!
 //! Quickstart: `examples/quickstart.rs` (builder → plan → simulate →
 //! serve); end-to-end AOT serving: `examples/e2e_serve.rs`;
 //! multi-replica serving: `examples/replicated_serve.rs`; experiment
 //! reproductions: `rust/benches/`.
 
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod adapt;
 pub mod baselines;
+pub mod check;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;

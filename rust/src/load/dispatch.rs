@@ -25,6 +25,14 @@
 //! pre-sharding coordinator design, preserved as the contended baseline
 //! the serving bench compares against. Same results, different
 //! wall-clock.
+//!
+//! The lock-free pieces this module leans on ([`ShardQueue`],
+//! [`ClockCell`]) carry module-level memory-ordering contracts in
+//! [`super::queue`] and are exhaustively model-checked by
+//! [`crate::check`] (`rust/tests/pico_check.rs`): the execution tests
+//! here validate *results* on whatever schedules the OS happens to
+//! produce; the checker validates the protocols on every schedule the
+//! memory model allows.
 
 use std::sync::Mutex;
 
@@ -334,6 +342,16 @@ mod tests {
         super::super::ArrivalProcess::Poisson { rate }.generate(n, 17)
     }
 
+    /// Miri runs these threaded tests orders of magnitude slower;
+    /// shrink the traces there while keeping the same shapes.
+    fn scaled(n: usize) -> usize {
+        if cfg!(miri) {
+            n / 100
+        } else {
+            n
+        }
+    }
+
     fn totals(sims: &[ReplicaSim]) -> (u64, u64, u64, u64) {
         (
             sims.iter().map(|s| s.admitted).sum(),
@@ -346,7 +364,7 @@ mod tests {
     #[test]
     fn sharded_matches_reference_exactly() {
         let replicas = three_replicas();
-        let arrivals = trace(30_000, 900.0);
+        let arrivals = trace(scaled(30_000), 900.0);
         let reference = run_reference(&replicas, &arrivals, &opts());
         for threads in [1, 2, 3, 8] {
             let sharded = run_sharded(&replicas, &arrivals, &opts(), threads, 64);
@@ -364,7 +382,7 @@ mod tests {
     #[test]
     fn mutexed_matches_sharded_exactly() {
         let replicas = three_replicas();
-        let arrivals = trace(20_000, 1200.0);
+        let arrivals = trace(scaled(20_000), 1200.0);
         let sharded = run_sharded(&replicas, &arrivals, &opts(), 3, 64);
         let mutexed = run_mutexed(&replicas, &arrivals, &opts(), 3, 64);
         assert_eq!(totals(&sharded), totals(&mutexed));
@@ -378,7 +396,7 @@ mod tests {
         // Ring far smaller than the trace: the assigner must block on
         // full rings, not drop; totals still match the reference.
         let replicas = three_replicas();
-        let arrivals = trace(10_000, 2000.0);
+        let arrivals = trace(scaled(10_000), 2000.0);
         let tiny = run_sharded(&replicas, &arrivals, &opts(), 2, 4);
         let reference = run_reference(&replicas, &arrivals, &opts());
         assert_eq!(totals(&tiny), totals(&reference));
@@ -405,7 +423,7 @@ mod tests {
     #[test]
     fn blocking_admission_serves_everything() {
         let replicas = three_replicas();
-        let arrivals = trace(5_000, 3000.0);
+        let arrivals = trace(scaled(5_000), 3000.0);
         let o = OfferOptions {
             queue_capacity: 2,
             admission: AdmissionPolicy::Block,
@@ -414,7 +432,7 @@ mod tests {
         };
         let sims = run_sharded(&replicas, &arrivals, &o, 3, 32);
         let (admitted, shed_q, shed_d, _) = totals(&sims);
-        assert_eq!(admitted, 5_000);
+        assert_eq!(admitted, scaled(5_000) as u64);
         assert_eq!(shed_q + shed_d, 0);
     }
 }

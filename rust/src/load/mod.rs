@@ -30,7 +30,7 @@
 mod arrivals;
 mod dispatch;
 mod histogram;
-mod queue;
+pub mod queue;
 
 pub use arrivals::ArrivalProcess;
 pub use histogram::LatencyHistogram;
@@ -163,9 +163,17 @@ impl LoadReport {
             } else {
                 0.0
             },
-            offered_rate: if span > 0.0 { (offered.saturating_sub(1)) as f64 / span } else { 0.0 },
+            offered_rate: if span > 0.0 {
+                (offered.saturating_sub(1)) as f64 / span
+            } else {
+                0.0
+            },
             makespan,
-            throughput: if makespan > 0.0 { admitted as f64 / makespan } else { 0.0 },
+            throughput: if makespan > 0.0 {
+                admitted as f64 / makespan
+            } else {
+                0.0
+            },
             mean_latency: histogram.mean(),
             p50: histogram.quantile(0.50),
             p95: histogram.quantile(0.95),
@@ -174,7 +182,11 @@ impl LoadReport {
             slo: spec.deadline.map(|deadline| SloReport {
                 deadline,
                 misses,
-                miss_rate: if admitted > 0 { misses as f64 / admitted as f64 } else { 0.0 },
+                miss_rate: if admitted > 0 {
+                    misses as f64 / admitted as f64
+                } else {
+                    0.0
+                },
             }),
             per_replica: sims
                 .iter()
@@ -276,17 +288,28 @@ mod tests {
         vec![StageProfile::constant(0.002), StageProfile::constant(0.003)]
     }
 
+    /// Under Miri the threaded runs are ~1000x slower; keep the same
+    /// shapes on a 20x smaller trace (still large enough for the
+    /// rate-estimate tolerances below).
+    fn scaled(n: usize) -> usize {
+        if cfg!(miri) {
+            n / 20
+        } else {
+            n
+        }
+    }
+
     #[test]
     fn underload_sheds_nothing_and_meets_rate() {
         // 2 replicas at period 3ms each ~ 666 req/s capacity; offer 200.
         let replicas = vec![profile(), profile()];
         let spec = LoadSpec {
             process: ArrivalProcess::Poisson { rate: 200.0 },
-            n_requests: 5_000,
+            n_requests: scaled(5_000),
             ..Default::default()
         };
         let rep = run_load(&replicas, &spec);
-        assert_eq!(rep.admitted, 5_000);
+        assert_eq!(rep.admitted, scaled(5_000) as u64);
         assert_eq!(rep.shed_rate, 0.0);
         assert!((rep.offered_rate - 200.0).abs() < 20.0, "rate {}", rep.offered_rate);
         assert!(rep.p50 >= 0.005 - 1e-9, "p50 below bare latency: {}", rep.p50);
@@ -299,7 +322,7 @@ mod tests {
         let replicas = vec![profile()];
         let spec = LoadSpec {
             process: ArrivalProcess::Poisson { rate: 2000.0 },
-            n_requests: 20_000,
+            n_requests: scaled(20_000),
             queue_capacity: 8,
             ..Default::default()
         };
@@ -314,7 +337,7 @@ mod tests {
         let replicas = vec![profile()];
         let spec = LoadSpec {
             process: ArrivalProcess::Poisson { rate: 1000.0 },
-            n_requests: 5_000,
+            n_requests: scaled(5_000),
             queue_capacity: 32,
             deadline: Some(0.006),
             ..Default::default()
@@ -327,7 +350,7 @@ mod tests {
 
     #[test]
     fn sweep_shed_rate_monotone_in_rate_and_falls_with_replicas() {
-        let base = LoadSpec { n_requests: 4_000, queue_capacity: 8, ..Default::default() };
+        let base = LoadSpec { n_requests: scaled(4_000), queue_capacity: 8, ..Default::default() };
         let pts = sweep_shed_curve(&profile(), &[100.0, 500.0, 2500.0], &[1, 4], &base);
         assert_eq!(pts.len(), 6);
         for pair in pts.chunks(3) {

@@ -14,13 +14,93 @@
 //! *pair* consistency, which a single `AtomicU64` could not give us.
 //! A plain `Mutex` here would put every dispatch decision back behind
 //! the very lock this harness exists to remove.
+//!
+//! ## Memory-ordering contract: `ShardQueue`
+//!
+//! Shared state is only the slot array; each cursor is private to its
+//! side. Slot values travel in-band, so per-location coherence alone
+//! already guarantees no lost/duplicated/reordered *values*. The
+//! orderings buy the stronger, advertised contract — a popped index may
+//! point at plain data the producer wrote just before pushing, and that
+//! data must be visible:
+//!
+//! * producer publishes a value (or `CLOSED`) with a [`SLOT_PUBLISH`]
+//!   (`Release`) store: everything the producer did before the push
+//!   happens-before a consumer that observes it;
+//! * consumer observes slots with [`SLOT_CONSUME`] (`Acquire`) loads —
+//!   both the `poll` read that pairs with the producer's publish, and
+//!   the producer's own full-ring spin that pairs with the consumer's
+//!   `EMPTY` hand-back (so slot reuse happens-after the consumer is
+//!   done with the previous occupant);
+//! * consumer hands a slot back by storing `EMPTY` with
+//!   [`SLOT_PUBLISH`] (`Release`).
+//!
+//! ## Memory-ordering contract: `ClockCell`
+//!
+//! Single writer, many readers. The writer bumps `epoch` to odd
+//! (`Release`), stores both payload words (`Release`), then bumps
+//! `epoch` back to even (`Release`). A reader `Acquire`-loads the
+//! epoch, rejects odd, [`PAYLOAD_READ`] (`Acquire`)-loads both payload
+//! words, and re-checks the epoch. The epoch is bumped *twice* so a
+//! reader overlapping a write sees either odd (retry now) or a changed
+//! value at the re-check (retry later) — never a mixed pair. The
+//! re-check only works because the payload loads acquire: each payload
+//! message carries the writer's view, so a reader that saw a *new*
+//! payload word can no longer read the *old* epoch and the comparison
+//! fails as required. Demote the payload loads to `Relaxed` and a torn
+//! pair passes the re-check — exactly what the
+//! `seqlock_relaxed_payload` mutation below demonstrates.
+//!
+//! ## Model checking and the mutation gate
+//!
+//! These protocols are exhaustively model-checked by [`crate::check`]
+//! (`rust/tests/pico_check.rs`, run under `--cfg pico_check`): the
+//! atomics here come from [`crate::check::atomic`], which resolves to
+//! `std` in normal builds and to the simulated memory model under the
+//! cfg. The orderings above are named constants so a second cfg axis,
+//! `--cfg pico_check_mutation="..."`, can weaken exactly one of them:
+//!
+//! * `relaxed_publish` — [`SLOT_PUBLISH`] demoted to `Relaxed`;
+//! * `relaxed_consumer` — [`SLOT_CONSUME`] demoted to `Relaxed`;
+//! * `seqlock_relaxed_payload` — [`PAYLOAD_READ`] demoted to `Relaxed`;
+//! * `seqlock_no_recheck` — the reader's second epoch comparison
+//!   short-circuits to `true`.
+//!
+//! The checker must flag every one of them with a replayable schedule;
+//! that gate is asserted in the test suite, proving the checker detects
+//! the bug classes this module's orderings exist to prevent.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::check::atomic::{AtomicU64, Ordering};
 
 /// Slot sentinel: empty, ready for the producer.
 const EMPTY: u64 = u64::MAX;
 /// Slot sentinel: producer is done; never overwritten.
 const CLOSED: u64 = u64::MAX - 1;
+
+/// Ordering for stores that publish a slot transition: the producer's
+/// value/`CLOSED` store and the consumer's `EMPTY` hand-back.
+#[cfg(not(pico_check_mutation = "relaxed_publish"))]
+pub const SLOT_PUBLISH: Ordering = Ordering::Release;
+/// Mutated build: publish demoted to `Relaxed` — the checker must catch
+/// the resulting stale-data window.
+#[cfg(pico_check_mutation = "relaxed_publish")]
+pub const SLOT_PUBLISH: Ordering = Ordering::Relaxed;
+
+/// Ordering for loads that observe a slot transition: the consumer's
+/// `poll` read and the producer's full-ring spin.
+#[cfg(not(pico_check_mutation = "relaxed_consumer"))]
+pub const SLOT_CONSUME: Ordering = Ordering::Acquire;
+/// Mutated build: consume demoted to `Relaxed`.
+#[cfg(pico_check_mutation = "relaxed_consumer")]
+pub const SLOT_CONSUME: Ordering = Ordering::Relaxed;
+
+/// Ordering for the seqlock reader's payload loads.
+#[cfg(not(pico_check_mutation = "seqlock_relaxed_payload"))]
+pub const PAYLOAD_READ: Ordering = Ordering::Acquire;
+/// Mutated build: payload reads demoted to `Relaxed`, which defeats the
+/// epoch re-check.
+#[cfg(pico_check_mutation = "seqlock_relaxed_payload")]
+pub const PAYLOAD_READ: Ordering = Ordering::Relaxed;
 
 /// What a consumer poll observed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -70,10 +150,10 @@ impl ShardQueue {
     fn write_slot(&self, tail: &mut usize, v: u64) {
         let slot = &self.slots[*tail & self.mask];
         let mut spins = 0u32;
-        while slot.load(Ordering::Acquire) != EMPTY {
+        while slot.load(SLOT_CONSUME) != EMPTY {
             backoff(&mut spins);
         }
-        slot.store(v, Ordering::Release);
+        slot.store(v, SLOT_PUBLISH);
         *tail += 1;
     }
 
@@ -81,13 +161,13 @@ impl ShardQueue {
     /// cursor; it advances only on [`Polled::Item`].
     pub fn poll(&self, head: &mut usize) -> Polled {
         let slot = &self.slots[*head & self.mask];
-        match slot.load(Ordering::Acquire) {
+        match slot.load(SLOT_CONSUME) {
             EMPTY => Polled::Pending,
             // Leave the sentinel in place so every later poll still
             // reports Closed.
             CLOSED => Polled::Closed,
             v => {
-                slot.store(EMPTY, Ordering::Release);
+                slot.store(EMPTY, SLOT_PUBLISH);
                 *head += 1;
                 Polled::Item(v)
             }
@@ -98,6 +178,7 @@ impl ShardQueue {
 /// Spin briefly, then yield to the scheduler: the ring is usually
 /// drained within a few loads, but a descheduled peer must not burn a
 /// core.
+#[cfg(not(pico_check))]
 pub fn backoff(spins: &mut u32) {
     *spins += 1;
     if *spins < 1024 {
@@ -108,9 +189,16 @@ pub fn backoff(spins: &mut u32) {
     }
 }
 
+/// Checked build: spinning is a scheduling decision, not a busy loop —
+/// park this model thread until a store lands somewhere.
+#[cfg(pico_check)]
+pub fn backoff(_spins: &mut u32) {
+    crate::check::spin_hint();
+}
+
 /// Seqlock-published replica telemetry: (front-free virtual time,
 /// admitted count). One writer — the replica's owning worker — and any
-/// number of readers.
+/// number of readers. Ordering contract in the module docs above.
 #[derive(Default)]
 pub struct ClockCell {
     /// Even = stable, odd = write in progress.
@@ -119,9 +207,24 @@ pub struct ClockCell {
     admitted: AtomicU64,
 }
 
+/// The reader's second epoch comparison; compiled to a constant `true`
+/// under the `seqlock_no_recheck` mutation so the checker can prove the
+/// re-check is load-bearing.
+#[cfg(not(pico_check_mutation = "seqlock_no_recheck"))]
+fn epoch_stable(cell: &ClockCell, e1: u64) -> bool {
+    cell.epoch.load(Ordering::Acquire) == e1
+}
+
+#[cfg(pico_check_mutation = "seqlock_no_recheck")]
+fn epoch_stable(_cell: &ClockCell, _e1: u64) -> bool {
+    true
+}
+
 impl ClockCell {
     /// Writer side: publish a new snapshot. Single-writer by contract
-    /// (each worker owns its replicas), so no CAS is needed.
+    /// (each worker owns its replicas), so no CAS is needed. The epoch
+    /// goes odd before the payload stores and even after them, each
+    /// step `Release`.
     pub fn publish(&self, free: f64, admitted: u64) {
         let e = self.epoch.load(Ordering::Relaxed);
         self.epoch.store(e.wrapping_add(1), Ordering::Release);
@@ -131,15 +234,15 @@ impl ClockCell {
     }
 
     /// Reader side: retry until a consistent (free, admitted) pair is
-    /// observed.
+    /// observed (even epoch, unchanged across the payload reads).
     pub fn read(&self) -> (f64, u64) {
         let mut spins = 0u32;
         loop {
             let e1 = self.epoch.load(Ordering::Acquire);
             if e1 & 1 == 0 {
-                let free = self.free_bits.load(Ordering::Acquire);
-                let admitted = self.admitted.load(Ordering::Acquire);
-                if self.epoch.load(Ordering::Acquire) == e1 {
+                let free = self.free_bits.load(PAYLOAD_READ);
+                let admitted = self.admitted.load(PAYLOAD_READ);
+                if epoch_stable(self, e1) {
                     return (f64::from_bits(free), admitted);
                 }
             }
@@ -173,7 +276,7 @@ mod tests {
     #[test]
     fn spsc_across_threads_preserves_order() {
         let q = ShardQueue::new(8);
-        let n = 100_000u64;
+        let n: u64 = if cfg!(miri) { 500 } else { 100_000 };
         std::thread::scope(|scope| {
             scope.spawn(|| {
                 let mut tail = 0usize;
@@ -203,20 +306,21 @@ mod tests {
     fn clock_cell_never_tears() {
         // Writer publishes pairs (t, t as count); readers must never
         // see a mixed pair.
+        let rounds: u64 = if cfg!(miri) { 300 } else { 50_000 };
         let cell = ClockCell::default();
         std::thread::scope(|scope| {
             scope.spawn(|| {
-                for t in 1..=50_000u64 {
+                for t in 1..=rounds {
                     cell.publish(t as f64, t);
                 }
             });
-            for _ in 0..50_000 {
+            for _ in 0..rounds {
                 let (free, admitted) = cell.read();
                 assert_eq!(free, admitted as f64, "torn read: ({free}, {admitted})");
             }
         });
         let (free, admitted) = cell.read();
-        assert_eq!(admitted, 50_000);
-        assert_eq!(free, 50_000.0);
+        assert_eq!(admitted, rounds);
+        assert_eq!(free, rounds as f64);
     }
 }

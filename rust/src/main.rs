@@ -76,7 +76,9 @@ impl Args {
 /// (kinds beyond rpi/tx2 become generic rpi-class cores named after
 /// the kind).
 fn parse_device(spec: &str) -> anyhow::Result<DeviceConfig> {
-    let usage = || anyhow::anyhow!("--device expects KIND:GHZxCOUNT, e.g. rpi:1.0x4 (got {spec:?})");
+    let usage = || {
+        anyhow::anyhow!("--device expects KIND:GHZxCOUNT, e.g. rpi:1.0x4 (got {spec:?})")
+    };
     let (kind, rest) = spec.split_once(':').ok_or_else(usage)?;
     if kind.is_empty() {
         return Err(usage());
@@ -246,11 +248,7 @@ fn cmd_serve(cfg: &Config, artifacts: &str) -> anyhow::Result<()> {
             println!("backend: native (PJRT unavailable: {e})");
             let g = modelzoo::load_tiny(&dir, &cfg.model)
                 .map_err(|e| anyhow::anyhow!("serve needs a tiny e2e model spec: {e}"))?;
-            let d = DeploymentPlan::builder()
-                .graph(g)
-                .config(cfg)
-                .artifacts_dir(&dir)
-                .build()?;
+            let d = DeploymentPlan::builder().graph(g).config(cfg).artifacts_dir(&dir).build()?;
             d.serve(&Backend::Native { seed: 0 }, &serve_cfg)?
         }
     };
@@ -271,8 +269,7 @@ fn cmd_zoo() -> anyhow::Result<()> {
         "vgg16", "yolov2", "resnet34", "inceptionv3", "squeezenet", "mobilenetv3", "nasnetlarge",
     ] {
         let g = modelzoo::by_name(name)?;
-        let params: usize =
-            (0..g.n_layers()).map(|i| pico::sim::layer_param_bytes(&g, i)).sum();
+        let params: usize = (0..g.n_layers()).map(|i| pico::sim::layer_param_bytes(&g, i)).sum();
         t.row(&[
             name.into(),
             format!("{}", g.n_layers()),

@@ -61,7 +61,14 @@ impl GraphBuilder {
         self.push(Layer::maxpool(name, input, (k, k), (s, s), (0, 0)))
     }
 
-    pub fn maxpool_padded(&mut self, name: &str, input: LayerId, k: usize, s: usize, p: usize) -> LayerId {
+    pub fn maxpool_padded(
+        &mut self,
+        name: &str,
+        input: LayerId,
+        k: usize,
+        s: usize,
+        p: usize,
+    ) -> LayerId {
         self.push(Layer::maxpool(name, input, (k, k), (s, s), (p, p)))
     }
 

@@ -45,7 +45,8 @@ fn bneck(b: &mut GraphBuilder, n: &str, x: LayerId, c_in: usize, cfg: &Bneck) ->
         let se = b.avgpool(&format!("{n}_se_pool"), y, 3, 1, 1);
         let se = b.conv(&format!("{n}_se_fc1"), se, cfg.exp / 4, (1, 1), (1, 1), (0, 0), R);
         let se = b.conv(&format!("{n}_se_fc2"), se, cfg.out, (1, 1), (1, 1), (0, 0), R);
-        let proj = b.conv(&format!("{n}_project"), y, cfg.out, (1, 1), (1, 1), (0, 0), Activation::Linear);
+        let proj =
+            b.conv(&format!("{n}_project"), y, cfg.out, (1, 1), (1, 1), (0, 0), Activation::Linear);
         b.add(&format!("{n}_se_mul"), vec![proj, se])
     } else {
         b.conv(&format!("{n}_project"), y, cfg.out, (1, 1), (1, 1), (0, 0), Activation::Linear)

@@ -84,10 +84,7 @@ mod tests {
         for (name, n_paper, tol, w_paper) in rows {
             let g = by_name(name).unwrap();
             let n = g.n_conv_pool();
-            assert!(
-                n.abs_diff(n_paper) <= tol,
-                "{name}: n={n} vs paper {n_paper} (±{tol})"
-            );
+            assert!(n.abs_diff(n_paper) <= tol, "{name}: n={n} vs paper {n_paper} (±{tol})");
             let w = width(&g);
             // MobileNetV3's paper width (3) includes the h-swish multiply
             // paths its GraphConvertor records; our IR's dataflow width

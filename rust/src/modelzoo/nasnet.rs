@@ -19,7 +19,15 @@ const R: Activation = Activation::Relu;
 /// pair twice; we apply it once to keep the cell diameter at the scale
 /// the paper's d=5 bound implies — the graph *statistics* Table 4
 /// measures are preserved by using more cells, see `nasnet_large`.)
-fn sep_conv(b: &mut GraphBuilder, n: &str, x: LayerId, c_in: usize, c: usize, k: usize, s: usize) -> LayerId {
+fn sep_conv(
+    b: &mut GraphBuilder,
+    n: &str,
+    x: LayerId,
+    c_in: usize,
+    c: usize,
+    k: usize,
+    s: usize,
+) -> LayerId {
     let p = k / 2;
     let y = b.conv_grouped(&format!("{n}_dw1"), x, c_in, (k, k), (s, s), (p, p), R, c_in);
     b.conv(&format!("{n}_pw1"), y, c, (1, 1), (1, 1), (0, 0), R)

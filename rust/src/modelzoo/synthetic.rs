@@ -43,15 +43,7 @@ pub fn synthetic_graph(branches: usize, layers_total: usize) -> ModelGraph {
         };
         let p = (k.0 / 2, k.1 / 2);
         for li in 0..per {
-            y = b.conv(
-                &format!("b{bi}_conv{li}"),
-                y,
-                16,
-                k,
-                (1, 1),
-                p,
-                Activation::Relu,
-            );
+            y = b.conv(&format!("b{bi}_conv{li}"), y, 16, k, (1, 1), p, Activation::Relu);
         }
         outs.push(y);
     }

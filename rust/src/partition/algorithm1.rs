@@ -276,7 +276,11 @@ pub fn partition_universe_cached(
 }
 
 /// Algorithm 1 on the whole model (diameter bound `d`, paper default 5).
-pub fn partition(g: &ModelGraph, d: usize, budget: Option<Duration>) -> anyhow::Result<PartitionResult> {
+pub fn partition(
+    g: &ModelGraph,
+    d: usize,
+    budget: Option<Duration>,
+) -> anyhow::Result<PartitionResult> {
     partition_universe(g, &BitSet::full(g.n_layers()), d, budget)
 }
 

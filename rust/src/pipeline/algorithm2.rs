@@ -195,7 +195,8 @@ impl<'a> Dp<'a> {
                         }
                     };
                     if better {
-                        best = Some(Entry { period, latency, last_m: m, last_s: s + 1, prev: true });
+                        best =
+                            Some(Entry { period, latency, last_m: m, last_s: s + 1, prev: true });
                     }
                 }
             }
@@ -286,7 +287,10 @@ pub fn dp_pipeline_with_meta(
 /// Materialise piece-interval stages into layer segments (helper shared
 /// with Algorithm 3 and the baselines). Each piece is sorted once and
 /// the per-stage segments are merges of the pre-sorted lists.
-pub fn stages_to_segments(pieces: &PieceChain, stages: &[(usize, usize, usize)]) -> Vec<Vec<LayerId>> {
+pub fn stages_to_segments(
+    pieces: &PieceChain,
+    stages: &[(usize, usize, usize)],
+) -> Vec<Vec<LayerId>> {
     let sorted: Vec<Vec<LayerId>> = pieces
         .iter()
         .map(|p| {
@@ -391,12 +395,7 @@ mod tests {
         let seg: Vec<usize> = (0..g.n_layers()).collect();
         let devs: Vec<&Device> = c.devices.iter().collect();
         let fused = stage_cost(&g, &seg, &devs, &c.network).total;
-        assert!(
-            r.period < fused,
-            "pipeline period {} must beat fused {}",
-            r.period,
-            fused
-        );
+        assert!(r.period < fused, "pipeline period {} must beat fused {}", r.period, fused);
     }
 
     #[test]

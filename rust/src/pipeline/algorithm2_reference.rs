@@ -86,7 +86,8 @@ impl<'a> RefDp<'a> {
                         }
                     };
                     if better {
-                        best = Some(Entry { period, latency, last_m: m, last_s: s + 1, prev: true });
+                        best =
+                            Some(Entry { period, latency, last_m: m, last_s: s + 1, prev: true });
                     }
                 }
             }

@@ -113,7 +113,12 @@ impl<'g> PlanContext<'g> {
 
     /// The oracle's static aggregates for this config's chain — built
     /// exactly once per key (the `Replicas::Auto` one-build invariant).
-    pub fn meta(&self, diameter: usize, dc_parts: usize, pieces: &Arc<PieceChain>) -> Arc<PieceMeta> {
+    pub fn meta(
+        &self,
+        diameter: usize,
+        dc_parts: usize,
+        pieces: &Arc<PieceChain>,
+    ) -> Arc<PieceMeta> {
         let key = (diameter, dc_parts);
         let mut cache = self.cache.lock().unwrap();
         if let Some(m) = cache.metas.get(&key) {

@@ -103,8 +103,7 @@ pub fn replicate_with<E>(
     let groups = cluster.partition_capacity(r);
     let mut plans = Vec::with_capacity(r);
     for group in &groups {
-        let devices: Vec<Device> =
-            group.iter().map(|&i| cluster.devices[i].clone()).collect();
+        let devices: Vec<Device> = group.iter().map(|&i| cluster.devices[i].clone()).collect();
         let sub = Cluster::new(devices, cluster.network);
         let mut p = plan_one(g, &sub)?;
         for s in &mut p.stages {

@@ -97,7 +97,10 @@ impl PipelinePlan {
     /// device ids are assigned sequentially). Clusters driving this plan
     /// should be homogeneous so the capacity-proportional splits reduce
     /// to the equal row splits the artifacts were compiled for.
-    pub fn from_artifact_plan(g: &ModelGraph, plan: &Value) -> anyhow::Result<(PipelinePlan, usize)> {
+    pub fn from_artifact_plan(
+        g: &ModelGraph,
+        plan: &Value,
+    ) -> anyhow::Result<(PipelinePlan, usize)> {
         let mut stages = Vec::new();
         let mut next_dev = 0usize;
         let arr = plan

@@ -104,8 +104,7 @@ impl<'g, 'c> StageEval<'g, 'c> {
             }
             self.oracles.get_mut(devices).unwrap().interval_cost(iv.0, iv.1)
         } else {
-            let devs: Vec<&Device> =
-                devices.iter().map(|&i| &self.cluster.devices[i]).collect();
+            let devs: Vec<&Device> = devices.iter().map(|&i| &self.cluster.devices[i]).collect();
             stage_cost(self.g, layers, &devs, &self.cluster.network).total
         }
     }

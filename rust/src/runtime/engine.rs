@@ -112,7 +112,11 @@ impl PipelineArtifacts {
     }
 
     /// Resolve + compile the executable for `key`.
-    pub fn executable(&self, engine: &Engine, key: &str) -> anyhow::Result<std::sync::Arc<Executable>> {
+    pub fn executable(
+        &self,
+        engine: &Engine,
+        key: &str,
+    ) -> anyhow::Result<std::sync::Arc<Executable>> {
         let rel = self
             .files
             .get(key)

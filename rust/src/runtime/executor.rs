@@ -58,7 +58,11 @@ pub fn run_stage(
                 let slab = src_t.slice_rows(lo - src_row0, hi - src_row0);
                 match backend {
                     Backend::Native { weights } => {
-                        let fill = if l.op == Op::MaxPool { f32::NEG_INFINITY } else { 0.0 };
+                        let fill = if l.op == Op::MaxPool {
+                            f32::NEG_INFINITY
+                        } else {
+                            0.0
+                        };
                         let padded =
                             slab.pad(tile.pad_top, tile.pad_bottom, l.padding.1, l.padding.1, fill);
                         if l.op == Op::Conv {
@@ -72,7 +76,8 @@ pub fn run_stage(
                     }
                     Backend::Pjrt { engine, artifacts } => {
                         // Padding is baked into the artifact; feed the raw slab.
-                        let key = artifact_key(&l.name, tile.in_rows, tile.pad_top, tile.pad_bottom);
+                        let key =
+                            artifact_key(&l.name, tile.in_rows, tile.pad_top, tile.pad_bottom);
                         artifacts.executable(engine, &key)?.run(&slab)?
                     }
                 }
@@ -237,18 +242,19 @@ mod tests {
 
     #[test]
     fn full_native_runs_zoo_model() {
+        use crate::graph::{Activation, Layer};
         // Smoke: run tiny inputs through a real DAG (resnet-style adds).
         let g = crate::graph::ModelGraph::new(
             "mini",
             (3, 16, 16),
             vec![
-                crate::graph::Layer::input("in"),
-                crate::graph::Layer::conv("stem", 0, 8, (3, 3), (1, 1), (1, 1), crate::graph::Activation::Relu),
-                crate::graph::Layer::conv("c1", 1, 8, (3, 3), (1, 1), (1, 1), crate::graph::Activation::Linear),
-                crate::graph::Layer::add("add", vec![2, 1]),
-                crate::graph::Layer::maxpool("p", 3, (2, 2), (2, 2), (0, 0)),
-                crate::graph::Layer::flatten("f", 4),
-                crate::graph::Layer::dense("d", 5, 10, crate::graph::Activation::Linear),
+                Layer::input("in"),
+                Layer::conv("stem", 0, 8, (3, 3), (1, 1), (1, 1), Activation::Relu),
+                Layer::conv("c1", 1, 8, (3, 3), (1, 1), (1, 1), Activation::Linear),
+                Layer::add("add", vec![2, 1]),
+                Layer::maxpool("p", 3, (2, 2), (2, 2), (0, 0)),
+                Layer::flatten("f", 4),
+                Layer::dense("d", 5, 10, Activation::Linear),
             ],
         )
         .unwrap();

@@ -15,7 +15,12 @@ pub struct Tensor {
 
 impl Tensor {
     pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Tensor {
-        assert_eq!(dims.iter().product::<usize>(), data.len(), "dims {dims:?} vs len {}", data.len());
+        assert_eq!(
+            dims.iter().product::<usize>(),
+            data.len(),
+            "dims {dims:?} vs len {}",
+            data.len()
+        );
         Tensor { dims, data }
     }
 

@@ -181,12 +181,23 @@ pub fn simulate_replicated(
                 let busy = c.t_comp[k];
                 let busy_total = busy * served[ri] as f64;
                 let d = &cluster.devices[dev];
-                let frac =
-                    if stage.devices.len() > 1 { 1.0 / stage.devices.len() as f64 } else { 1.0 };
+                let frac = if stage.devices.len() > 1 {
+                    1.0 / stage.devices.len() as f64
+                } else {
+                    1.0
+                };
                 per_device.push(DeviceMetrics {
                     device: dev,
-                    utilization: if makespan > 0.0 { (busy_total / makespan).min(1.0) } else { 0.0 },
-                    redundancy: if c.flops[k] > 0.0 { c.redundant_flops[k] / c.flops[k] } else { 0.0 },
+                    utilization: if makespan > 0.0 {
+                        (busy_total / makespan).min(1.0)
+                    } else {
+                        0.0
+                    },
+                    redundancy: if c.flops[k] > 0.0 {
+                        c.redundant_flops[k] / c.flops[k]
+                    } else {
+                        0.0
+                    },
                     mem_model: model_bytes,
                     mem_feature: peak_feature_bytes(g, &stage.layers, frac),
                     energy_j: busy_total * d.active_power_w
@@ -335,8 +346,7 @@ pub fn simulate_sync(
     let mut mem_feature = vec![0usize; cluster.len()];
     // Whole model replicated on every participating device (the paper's
     // §2.2 note: feature-partition schemes copy the full model).
-    let whole_model_bytes: usize =
-        (0..g.n_layers()).map(|id| layer_param_bytes(g, id)).sum();
+    let whole_model_bytes: usize = (0..g.n_layers()).map(|id| layer_param_bytes(g, id)).sum();
     let participating: std::collections::HashSet<usize> =
         sched.groups.iter().flat_map(|gr| gr.devices.clone()).collect();
 
@@ -345,11 +355,7 @@ pub fn simulate_sync(
             gr.devices.iter().map(|&i| &cluster.devices[i]).collect();
         let c = stage_cost(g, &gr.layers, &devs, &cluster.network);
         let comm = if gr.halo_sync {
-            let f = gr
-                .layers
-                .iter()
-                .map(|&id| halo_fraction(g, id))
-                .fold(0.0f64, f64::max);
+            let f = gr.layers.iter().map(|&id| halo_fraction(g, id)).fold(0.0f64, f64::max);
             c.t_comm_stage * f
         } else {
             c.t_comm_stage
@@ -359,7 +365,11 @@ pub fn simulate_sync(
             busy[dev] += c.t_comp[k];
             redundant[dev] += c.redundant_flops[k];
             flops[dev] += c.flops[k];
-            let frac = if gr.devices.len() > 1 { 1.0 / gr.devices.len() as f64 } else { 1.0 };
+            let frac = if gr.devices.len() > 1 {
+                1.0 / gr.devices.len() as f64
+            } else {
+                1.0
+            };
             mem_feature[dev] = mem_feature[dev].max(peak_feature_bytes(g, &gr.layers, frac));
         }
     }
@@ -379,7 +389,11 @@ pub fn simulate_sync(
             DeviceMetrics {
                 device: dev,
                 utilization: (busy_total / makespan).min(1.0),
-                redundancy: if flops[dev] > 0.0 { redundant[dev] / flops[dev] } else { 0.0 },
+                redundancy: if flops[dev] > 0.0 {
+                    redundant[dev] / flops[dev]
+                } else {
+                    0.0
+                },
                 mem_model: whole_model_bytes,
                 mem_feature: mem_feature[dev],
                 energy_j: busy_total * d.active_power_w
@@ -422,9 +436,24 @@ mod tests {
         let lw = simulate_sync(&g, &c, &baselines::layer_wise(&g, &c), 100);
         let efl = simulate_sync(&g, &c, &baselines::early_fused(&g, &c, 2), 100);
         let ofl = simulate_sync(&g, &c, &baselines::optimal_fused(&g, &pieces, &c), 100);
-        assert!(pico.throughput > ofl.throughput, "PICO {} vs OFL {}", pico.throughput, ofl.throughput);
-        assert!(ofl.throughput >= efl.throughput * 0.99, "OFL {} vs EFL {}", ofl.throughput, efl.throughput);
-        assert!(pico.throughput > lw.throughput, "PICO {} vs LW {}", pico.throughput, lw.throughput);
+        assert!(
+            pico.throughput > ofl.throughput,
+            "PICO {} vs OFL {}",
+            pico.throughput,
+            ofl.throughput
+        );
+        assert!(
+            ofl.throughput >= efl.throughput * 0.99,
+            "OFL {} vs EFL {}",
+            ofl.throughput,
+            efl.throughput
+        );
+        assert!(
+            pico.throughput > lw.throughput,
+            "PICO {} vs LW {}",
+            pico.throughput,
+            lw.throughput
+        );
     }
 
     #[test]
@@ -500,11 +529,7 @@ mod tests {
         let plain = simulate_pipeline(&g, &c, &plan, 4);
         assert!((rep.round_ends[0] - plain.makespan).abs() < 1e-9);
         // Identical rounds drain in identical spans.
-        let spans: Vec<f64> = rep
-            .round_ends
-            .windows(2)
-            .map(|w| w[1] - w[0])
-            .collect();
+        let spans: Vec<f64> = rep.round_ends.windows(2).map(|w| w[1] - w[0]).collect();
         for s in &spans {
             assert!((s - rep.round_ends[0]).abs() < 1e-9, "homogeneous rounds: {spans:?}");
         }

@@ -93,9 +93,14 @@ fn t_lim_respected_through_full_plan() {
         Err(_) => {
             // Infeasible is acceptable only if even a single stage
             // exceeds the cap — verify.
-            let single = pipeline::plan(&g, &pieces, &Cluster::homogeneous_rpi(1, 1.0), f64::INFINITY)
-                .unwrap()
-                .cost(&g, &Cluster::homogeneous_rpi(1, 1.0));
+            let single = pipeline::plan(
+                &g,
+                &pieces,
+                &Cluster::homogeneous_rpi(1, 1.0),
+                f64::INFINITY,
+            )
+            .unwrap()
+            .cost(&g, &Cluster::homogeneous_rpi(1, 1.0));
             assert!(single.latency > cap);
         }
     }
@@ -255,7 +260,8 @@ fn baselines_cover_model() {
         baselines::optimal_fused(&g, &pieces, &cluster),
         baselines::coedge(&g, &cluster),
     ] {
-        let mut covered: Vec<usize> = sched.groups.iter().flat_map(|gr| gr.layers.clone()).collect();
+        let mut covered: Vec<usize> =
+            sched.groups.iter().flat_map(|gr| gr.layers.clone()).collect();
         covered.sort();
         covered.dedup();
         let expect_min = g.n_layers() - 1; // input excluded (OFL may include it in piece 0)

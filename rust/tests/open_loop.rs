@@ -14,6 +14,21 @@ use pico::deploy::{DeploymentPlan, Replicas};
 use pico::engine::{AdmissionPolicy, StageProfile};
 use pico::load::{run_load, run_load_mutexed, run_load_reference, ArrivalProcess, LoadSpec};
 
+/// Request-count knob for expensive runners: `PICO_TEST_SCALE=0.02`
+/// (set by the sanitizer CI jobs) shrinks the headline request counts
+/// so an instrumented run fits the job budget. Assertions below are
+/// written against `spec.n_requests`, not the literal counts, so the
+/// invariants hold at any scale.
+fn scaled(n: usize) -> usize {
+    match std::env::var("PICO_TEST_SCALE") {
+        Ok(s) => {
+            let f: f64 = s.parse().expect("PICO_TEST_SCALE must be a float");
+            ((n as f64 * f) as usize).max(1_000)
+        }
+        Err(_) => n,
+    }
+}
+
 fn deployment(replicas: usize, devices: usize) -> DeploymentPlan {
     DeploymentPlan::builder()
         .model("squeezenet")
@@ -30,7 +45,7 @@ fn facade_load_test_agrees_with_analytic_twin_exactly() {
     // queue sheds occur, so the agreement covers every path.
     let spec = LoadSpec {
         process: ArrivalProcess::Poisson { rate: 400.0 },
-        n_requests: 60_000,
+        n_requests: scaled(60_000),
         seed: 2024,
         queue_capacity: 8,
         admission: AdmissionPolicy::Shed,
@@ -41,7 +56,7 @@ fn facade_load_test_agrees_with_analytic_twin_exactly() {
     let threaded = d.load_test(&spec).unwrap();
     let analytic = d.simulate_open_loop(&spec).unwrap();
 
-    assert_eq!(threaded.offered, 60_000);
+    assert_eq!(threaded.offered, spec.n_requests);
     assert!(threaded.admitted > 0, "some requests must be admitted");
     assert!(threaded.shed_queue > 0, "overload must shed");
     // Exact count agreement — not a tolerance.
@@ -78,7 +93,7 @@ fn mutexed_baseline_matches_sharded_through_public_api() {
             on_secs: 2.0,
             off_secs: 2.0,
         },
-        n_requests: 50_000,
+        n_requests: scaled(50_000),
         seed: 7,
         queue_capacity: 16,
         threads: 4,
@@ -131,7 +146,7 @@ fn sustained_overload_stays_bounded_and_conserves_requests() {
         vec![vec![StageProfile::constant(0.004), StageProfile::constant(0.006)]; 2];
     let spec = LoadSpec {
         process: ArrivalProcess::Poisson { rate: 2_000.0 },
-        n_requests: 200_000,
+        n_requests: scaled(200_000),
         seed: 99,
         queue_capacity: 32,
         channel_capacity: 64,
@@ -139,7 +154,7 @@ fn sustained_overload_stays_bounded_and_conserves_requests() {
         ..Default::default()
     };
     let rep = run_load(&replicas, &spec);
-    assert_eq!(rep.offered, 200_000);
+    assert_eq!(rep.offered, spec.n_requests);
     assert_eq!(rep.admitted + rep.shed_queue + rep.shed_deadline, rep.offered);
     assert!(rep.shed_rate > 0.5, "6x overload must shed most: {}", rep.shed_rate);
     // Admitted throughput sits at (not above) pipeline capacity:

@@ -1,0 +1,186 @@
+//! Model-checks the real lock-free serving primitives — the Lamport
+//! SPSC `ShardQueue` and the seqlock `ClockCell` from
+//! `pico::load::queue` — under the simulated memory model, and arms the
+//! mutation gate.
+//!
+//! This whole file compiles to an empty crate unless built with
+//! `RUSTFLAGS='--cfg pico_check'`, which is what swaps the queue's
+//! atomics onto the checker's simulated types (see `pico::check`).
+//!
+//! The same suite runs in five CI arms: unmutated, and once per
+//! `--cfg pico_check_mutation="..."` value. The `RING_MUTATED` /
+//! `SEQLOCK_MUTATED` constants below flip each test's expectation from
+//! "verifies exhaustively with zero violations" to "the checker MUST
+//! find a violation, and replaying its schedule must reproduce the
+//! identical state hash". A weakened ordering that no test notices
+//! would fail the mutated arm — the gate proves the checker detects the
+//! bug classes the shipped orderings exist to prevent.
+
+#![cfg(pico_check)]
+
+use std::sync::Arc;
+
+use pico::check::atomic::{Ordering, SimAtomicU64};
+use pico::check::{self, CheckOptions, Schedule, Violation};
+use pico::load::queue::backoff;
+use pico::load::{ClockCell, Polled, ShardQueue};
+
+/// True when the active mutation weakens the ring's publish/consume
+/// orderings. The ring's *values* travel in-band, so those tests stay
+/// green; the happens-before transfer test is the one that must trip.
+const RING_MUTATED: bool = cfg!(any(
+    pico_check_mutation = "relaxed_publish",
+    pico_check_mutation = "relaxed_consumer"
+));
+
+/// True when the active mutation weakens the seqlock read protocol.
+const SEQLOCK_MUTATED: bool = cfg!(any(
+    pico_check_mutation = "seqlock_no_recheck",
+    pico_check_mutation = "seqlock_relaxed_payload"
+));
+
+fn opts() -> CheckOptions {
+    CheckOptions { max_executions: 1_000_000, ..CheckOptions::default() }
+}
+
+/// Assert the mutation gate on one model: exhaustive and clean when the
+/// relevant orderings ship, flagged with a replayable schedule when
+/// they are mutated.
+fn gate(name: &str, mutated: bool, model: fn()) {
+    let result = check::check(&opts(), model);
+    if mutated {
+        let violation = result.expect_err("mutated ordering must be flagged");
+        assert_replayable(name, model, &violation);
+    } else {
+        let report = result.unwrap_or_else(|v| panic!("{name}: shipped orderings failed: {v}"));
+        assert!(report.executions > 10, "{name}: suspiciously small space: {report:?}");
+    }
+}
+
+/// The violation's schedule string must round-trip and re-reach the
+/// exact same failure state, deterministically.
+fn assert_replayable(name: &str, model: fn(), violation: &Violation) {
+    let text = violation.schedule.to_string();
+    let parsed: Schedule = text.parse().expect("schedule string must parse");
+    assert_eq!(parsed, violation.schedule, "{name}: schedule string must round-trip");
+    for _ in 0..2 {
+        let replayed = check::replay(&opts(), model, &parsed)
+            .expect_err("replaying a violating schedule must reproduce the violation");
+        assert_eq!(replayed.state_hash, violation.state_hash, "{name}: replay diverged");
+        assert_eq!(replayed.message, violation.message, "{name}: replay found a different bug");
+    }
+}
+
+/// SPSC ring, in-band values: no loss, no duplication, no reordering,
+/// full-ring backpressure (two values fill the capacity-2 ring, so the
+/// CLOSED write wraps to slot 0 and must wait for the consumer), and a
+/// sticky CLOSED sentinel. Correct under every mutation — per-location
+/// coherence alone carries in-band values — so this is the control
+/// group proving the mutated arms don't flag spurious violations.
+fn ring_fifo_model() {
+    let q = Arc::new(ShardQueue::new(2));
+    {
+        let q = Arc::clone(&q);
+        check::spawn(move || {
+            let mut tail = 0usize;
+            for v in 1..=2u64 {
+                q.push(&mut tail, v);
+            }
+            q.close(&mut tail);
+        });
+    }
+    check::spawn(move || {
+        let mut head = 0usize;
+        let mut next = 1u64;
+        let mut spins = 0u32;
+        loop {
+            match q.poll(&mut head) {
+                Polled::Item(v) => {
+                    assert_eq!(v, next, "lost, duplicated or reordered value");
+                    next += 1;
+                }
+                Polled::Pending => backoff(&mut spins),
+                Polled::Closed => break,
+            }
+        }
+        assert_eq!(next, 3, "CLOSED arrived before every value drained");
+        // The sentinel stays in place: every later poll still reports
+        // Closed, never Pending and never a value.
+        assert_eq!(q.poll(&mut head), Polled::Closed);
+        assert_eq!(q.poll(&mut head), Polled::Closed);
+    });
+}
+
+/// The advertised contract beyond coherence: a popped index may point
+/// at data the producer wrote just before pushing. The side cell stands
+/// in for that plain data (relaxed on purpose — the *queue* must carry
+/// the happens-before edge). This is the test that must trip under
+/// `relaxed_publish` and `relaxed_consumer`.
+fn ring_transfer_model() {
+    let q = Arc::new(ShardQueue::new(2));
+    let side = Arc::new(SimAtomicU64::named("side", 0));
+    {
+        let (q, side) = (Arc::clone(&q), Arc::clone(&side));
+        check::spawn(move || {
+            let mut tail = 0usize;
+            for v in 1..=2u64 {
+                side.store(v, Ordering::Relaxed);
+                q.push(&mut tail, v);
+            }
+            q.close(&mut tail);
+        });
+    }
+    check::spawn(move || {
+        let mut head = 0usize;
+        let mut seen = 0u64;
+        let mut spins = 0u32;
+        loop {
+            match q.poll(&mut head) {
+                Polled::Item(v) => {
+                    let s = side.load(Ordering::Relaxed);
+                    assert!(s >= v, "popped {v} but its side data reads stale {s}");
+                    seen = v;
+                }
+                Polled::Pending => backoff(&mut spins),
+                Polled::Closed => break,
+            }
+        }
+        assert_eq!(seen, 2);
+    });
+}
+
+/// Seqlock pair consistency on the real `ClockCell`: the writer
+/// publishes the consistent pair (1.0, 1); a reader must observe
+/// either the initial (0.0, 0) or the new (1.0, 1) — never a mix.
+/// Trips under `seqlock_no_recheck` and `seqlock_relaxed_payload`.
+fn seqlock_model() {
+    let cell = Arc::new(ClockCell::default());
+    {
+        let cell = Arc::clone(&cell);
+        check::spawn(move || {
+            cell.publish(1.0, 1);
+        });
+    }
+    check::spawn(move || {
+        let (free, admitted) = cell.read();
+        assert_eq!(free, admitted as f64, "torn pair: ({free}, {admitted})");
+    });
+}
+
+#[test]
+fn ring_fifo_backpressure_and_closed_hold_in_every_arm() {
+    // Control group: in-band values are coherence-correct, so this
+    // verifies clean even in the mutated arms.
+    let report = check::check(&opts(), ring_fifo_model).unwrap_or_else(|v| panic!("{v}"));
+    assert!(report.executions > 10, "suspiciously small space: {report:?}");
+}
+
+#[test]
+fn ring_happens_before_transfer_gate() {
+    gate("ring_transfer", RING_MUTATED, ring_transfer_model);
+}
+
+#[test]
+fn seqlock_pair_consistency_gate() {
+    gate("seqlock", SEQLOCK_MUTATED, seqlock_model);
+}

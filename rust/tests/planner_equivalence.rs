@@ -59,7 +59,12 @@ fn reference_segment(pieces: &[Vec<LayerId>], i: usize, j: usize) -> Vec<LayerId
 }
 
 /// Layer 1: every interval × roster, oracle vs direct stage_cost walk.
-fn assert_interval_equivalence(name: &str, g: &ModelGraph, pieces: &[Vec<LayerId>], rosters: &[Vec<Device>]) {
+fn assert_interval_equivalence(
+    name: &str,
+    g: &ModelGraph,
+    pieces: &[Vec<LayerId>],
+    rosters: &[Vec<Device>],
+) {
     let meta = Arc::new(PieceMeta::build(g, pieces));
     assert!(meta.exact(), "{name}: zoo chain must validate for the oracle");
     let l = pieces.len();
@@ -186,7 +191,8 @@ fn dp_results_identical_under_latency_caps() {
 fn full_plans_identical_on_heterogeneous_cluster() {
     let cluster = Cluster::paper_heterogeneous();
     for (name, g, pieces) in zoo_cases() {
-        let fast: PipelinePlan = pico::pipeline::plan(&g, &pieces, &cluster, f64::INFINITY).unwrap();
+        let fast: PipelinePlan =
+            pico::pipeline::plan(&g, &pieces, &cluster, f64::INFINITY).unwrap();
         let dp = dp_pipeline_reference(&g, &pieces, &cluster.homogenized(), f64::INFINITY).unwrap();
         let slow = adapt_heterogeneous(&g, &pieces, &dp.stages, &cluster);
         assert_eq!(fast, slow, "{name}: facade plan must equal reference chain");

@@ -316,8 +316,7 @@ fn property_engine_batching_amortizes_fixed_cost() {
     for round in 0..8 {
         let n = rng.range(8, 32);
         let b = rng.range(2, 6);
-        let profiles =
-            vec![StageProfile { fixed: 0.02, per_item: 0.001 + rng.f64() * 0.002 }];
+        let profiles = vec![StageProfile { fixed: 0.02, per_item: 0.001 + rng.f64() * 0.002 }];
         let solo = run_pipeline(&[profiles.clone()], &vec![0.0; n], &EngineConfig::default());
         let cfg = EngineConfig { max_batch: b, ..EngineConfig::default() };
         let batched = run_pipeline(&[profiles], &vec![0.0; n], &cfg);
@@ -348,10 +347,7 @@ fn property_engine_replicas_balance_and_scale() {
         }
         let single = run_pipeline(&replicas[..1], &vec![0.0; n], &EngineConfig::default());
         let ratio = single.report.makespan / run.report.makespan;
-        assert!(
-            ratio > 0.9 * r as f64,
-            "round {round}: {r} replicas only {ratio:.2}x faster"
-        );
+        assert!(ratio > 0.9 * r as f64, "round {round}: {r} replicas only {ratio:.2}x faster");
     }
 }
 

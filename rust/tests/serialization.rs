@@ -84,8 +84,7 @@ fn every_shipped_config_parses() {
             continue;
         }
         seen += 1;
-        let cfg = Config::load(&path)
-            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        let cfg = Config::load(&path).unwrap_or_else(|e| panic!("{}: {e}", path.display()));
         assert!(!cfg.model.is_empty(), "{}", path.display());
         let cluster = cfg.cluster();
         assert!(!cluster.is_empty(), "{}: empty cluster", path.display());
