@@ -1,7 +1,9 @@
 //! Serving coordinator: the paper's Fig. 8 stage workflow as a threaded
 //! pipeline over real tensors, scheduled by the shared event engine.
 //!
-//! One worker thread per stage per replica, connected by channels. Each
+//! One worker thread per stage per replica, connected by
+//! [`crate::net`] transport links (in-process loopback by default;
+//! [`serve_remote`] swaps in any other transport). Each
 //! stage's main loop: take the micro-batch from the input queue, split
 //! every member's feature map into tiles (per the capacity-proportional
 //! partition from [`crate::cost::stage_splits`] — identical to the cost
@@ -27,6 +29,6 @@ pub use crate::engine::AdmissionPolicy;
 pub use adaptive::{serve_adaptive, AdaptiveServeReport};
 pub use compute::{Compute, NativeCompute, NullCompute, PjrtCompute};
 pub use serve::{
-    serve, serve_replicated, serve_replicated_with_profiles, Request, Response, ServeOptions,
-    ServeReport, StageServiceMetrics,
+    serve, serve_remote, serve_replicated, serve_replicated_with_profiles, Request, Response,
+    ServeOptions, ServeReport, StageServiceMetrics,
 };

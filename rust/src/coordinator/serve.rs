@@ -9,6 +9,14 @@
 //! same recurrence the analytical simulator uses, so predicted and
 //! served timings agree (see `rust/tests/agreement.rs`).
 //!
+//! Stage handoff goes through the [`crate::net`] transport trait:
+//! [`serve_remote`] runs each replica's worker chain over any
+//! [`Transport`] (framed handshake, sequenced batch frames, explicit
+//! close — all failures surface as typed [`PicoError::Transport`]),
+//! and [`serve_replicated`] is exactly that chain over an in-process
+//! [`Loopback`] with no deadline. Time stays *virtual* either way: the
+//! transport moves tensors, never the clock.
+//!
 //! [`serve`] is the single-replica, unit-batch, open-admission special
 //! case — the paper's plain Fig. 8 pipeline.
 
@@ -22,7 +30,12 @@ use super::compute::Compute;
 use crate::cluster::Cluster;
 use crate::cost::{segment_sinks, segment_tiles, stage_cost, stage_splits, LayerTile};
 use crate::engine::{run_pipeline, summarize, EngineConfig, ServiceStats, StageClock, StageProfile};
+use crate::error::PicoError;
 use crate::graph::{LayerId, ModelGraph};
+use crate::net::{
+    plan_hash, BatchMember, Endpoint, LinkId, LinkMetrics, LinkStats, Loopback, StageRx, StageTx,
+    Transport,
+};
 use crate::pipeline::PipelinePlan;
 use crate::runtime::Tensor;
 
@@ -83,10 +96,15 @@ pub struct ServeReport {
     pub stage_metrics: Vec<StageServiceMetrics>,
     /// Highest number of in-flight inter-stage messages observed at any
     /// instant (feeder handoff, stage links, collector). The bounded
-    /// `sync_channel` links cap this at O(stages × channel capacity)
-    /// regardless of how overloaded the run is — the backpressure
-    /// regression test pins it.
+    /// links cap this at O(stages × channel capacity) regardless of how
+    /// overloaded the run is — the backpressure regression test pins it.
     pub peak_resident_msgs: usize,
+    /// Per-link transport telemetry (one entry per hop of every
+    /// replica's chain): frames and wire bytes moved, observed send
+    /// time. Wall-clock-derived like `wall_secs`, so it is *not* part
+    /// of the exact sim↔serve agreement contract — it is the measured
+    /// network signal for bandwidth-aware adaptation.
+    pub link_metrics: Vec<LinkMetrics>,
     /// Wall-clock seconds the run took on this host.
     pub wall_secs: f64,
 }
@@ -113,23 +131,14 @@ pub struct StageServiceMetrics {
     pub observed: ServiceStats,
 }
 
-/// One batch member travelling between stage workers. Tensors are
-/// `Arc`-shared: forwarding a skip-connection feature to a later stage
-/// must not deep-copy megabytes per frame (§Perf log in EXPERIMENTS.md —
-/// this halved the coordinator's wall time).
-struct MsgMember {
-    id: u64,
-    t_submit: f64,
-    /// Every live tensor downstream stages still need.
-    live: HashMap<LayerId, Arc<Tensor>>,
-}
-
-/// A micro-batch in flight: members share stage traversal (and its
-/// amortized handshake cost); numerics stay per member.
-struct Msg {
-    members: Vec<MsgMember>,
-    /// Virtual time the batch is ready for the receiving stage.
-    t_ready: f64,
+/// Look up one live feature in a batch member's sorted live set.
+/// Tensors stay `Arc`-shared end to end: forwarding a skip-connection
+/// feature to a later stage must not deep-copy megabytes per frame
+/// (§Perf log in EXPERIMENTS.md — this halved the coordinator's wall
+/// time), and the loopback transport moves frames structurally to keep
+/// it that way.
+fn find_live(live: &[(LayerId, Arc<Tensor>)], id: LayerId) -> Option<&Arc<Tensor>> {
+    live.binary_search_by_key(&id, |(l, _)| *l).ok().map(|i| &live[i].1)
 }
 
 /// Live set after each stage of a plan: layers produced at or before it
@@ -210,21 +219,104 @@ pub fn serve_replicated_with_profiles(
     requests: Vec<Request>,
     opts: &ServeOptions,
 ) -> anyhow::Result<ServeReport> {
-    anyhow::ensure!(!plans.is_empty(), "no pipeline replicas");
+    let loopback = Loopback::default();
+    serve_transport(g, plans, cluster, timing, compute, requests, opts, &loopback)
+        .map_err(ChainError::into_anyhow)
+}
+
+/// Run `requests` through `plans` with stage handoff over an arbitrary
+/// [`Transport`] — the network serving entry point. The engine schedule
+/// pass, worker chain and virtual clocks are identical to
+/// [`serve_replicated`] (which is this function over a [`Loopback`]);
+/// only the medium under the frames changes, so a clean run agrees
+/// exactly with the in-process path (pinned by `rust/tests/net.rs`).
+/// Transport failures — handshake mismatch, dropped/duplicated frames,
+/// deadline expiry, mid-stream disconnect — surface as
+/// [`PicoError::Transport`]; everything else maps to
+/// [`PicoError::Internal`].
+pub fn serve_remote(
+    g: &ModelGraph,
+    plans: &[PipelinePlan],
+    cluster: &Cluster,
+    compute: &dyn Compute,
+    requests: Vec<Request>,
+    opts: &ServeOptions,
+    transport: &dyn Transport,
+) -> Result<ServeReport, PicoError> {
+    match serve_transport(g, plans, cluster, None, compute, requests, opts, transport) {
+        Ok(report) => Ok(report),
+        Err(ChainError::Typed(e)) => Err(e),
+        Err(ChainError::Other(e)) => Err(PicoError::Internal(format!("{e}"))),
+    }
+}
+
+/// Internal error channel of the serving chain: transport failures stay
+/// typed while arbitrary worker/validation errors remain `anyhow` —
+/// the vendored `anyhow` has no downcasting, so the split must be
+/// structural, not recovered from strings.
+#[derive(Debug)]
+pub(crate) enum ChainError {
+    Typed(PicoError),
+    Other(anyhow::Error),
+}
+
+impl From<PicoError> for ChainError {
+    fn from(e: PicoError) -> Self {
+        ChainError::Typed(e)
+    }
+}
+
+impl From<anyhow::Error> for ChainError {
+    fn from(e: anyhow::Error) -> Self {
+        ChainError::Other(e)
+    }
+}
+
+impl ChainError {
+    fn into_anyhow(self) -> anyhow::Error {
+        match self {
+            ChainError::Typed(e) => anyhow::anyhow!("{e}"),
+            ChainError::Other(e) => e,
+        }
+    }
+}
+
+macro_rules! chain_ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err(ChainError::Other(anyhow::anyhow!($($arg)*)));
+        }
+    };
+}
+
+/// The shared serving core: one engine pass, then per-replica worker
+/// chains handing batches across `transport` links.
+#[allow(clippy::too_many_arguments)] // the serving axes plus the medium
+pub(crate) fn serve_transport(
+    g: &ModelGraph,
+    plans: &[PipelinePlan],
+    cluster: &Cluster,
+    timing: Option<&[Vec<StageProfile>]>,
+    compute: &dyn Compute,
+    requests: Vec<Request>,
+    opts: &ServeOptions,
+    transport: &dyn Transport,
+) -> Result<ServeReport, ChainError> {
+    chain_ensure!(!plans.is_empty(), "no pipeline replicas");
     // Replicas must own disjoint devices: overlapping plans would
     // double-book a device's virtual time and report physically
     // impossible throughput.
     let mut owned: HashSet<usize> = HashSet::new();
     for (ri, plan) in plans.iter().enumerate() {
-        anyhow::ensure!(!plan.stages.is_empty(), "empty plan");
+        chain_ensure!(!plan.stages.is_empty(), "empty plan");
         for stage in &plan.stages {
             for &d in &stage.devices {
-                anyhow::ensure!(
+                chain_ensure!(
                     d < cluster.len(),
                     "replica {ri} references device {d} outside the {}-device cluster",
                     cluster.len()
                 );
-                anyhow::ensure!(
+                chain_ensure!(
                     owned.insert(d),
                     "device {d} is assigned to more than one replica (replica {ri})"
                 );
@@ -255,14 +347,14 @@ pub fn serve_replicated_with_profiles(
         })
         .collect();
     if let Some(t) = timing {
-        anyhow::ensure!(
+        chain_ensure!(
             t.len() == plans.len(),
             "timing override covers {} replicas, plans have {}",
             t.len(),
             plans.len()
         );
         for (ri, (tp, plan)) in t.iter().zip(plans).enumerate() {
-            anyhow::ensure!(
+            chain_ensure!(
                 tp.len() == plan.stages.len(),
                 "timing override replica {ri}: {} profiles for {} stages",
                 tp.len(),
@@ -306,31 +398,54 @@ pub fn serve_replicated_with_profiles(
     let resident = AtomicUsize::new(0);
     let peak_resident = AtomicUsize::new(0);
 
-    std::thread::scope(|scope| -> anyhow::Result<ServeReport> {
+    // Every hop of every replica's chain is one directed transport
+    // link: feeder -> s0 -> ... -> s{n-1} -> collector. Links come up
+    // front on the caller's thread (TCP connect/accept is sequential
+    // there), then each endpoint moves into the thread that owns it.
+    let hash = plan_hash(g, plans);
+    let mut link_stats: Vec<(LinkId, Arc<LinkStats>)> = Vec::new();
+    let mut feeder_txs: Vec<StageTx> = Vec::new();
+    let mut stage_ends: Vec<Vec<(StageRx, StageTx)>> = Vec::new();
+    let mut drain_rxs: Vec<StageRx> = Vec::new();
+    for (ri, plan) in plans.iter().enumerate() {
+        let n_stages = plan.stages.len();
+        let mut txs = Vec::with_capacity(n_stages + 1);
+        let mut rxs = Vec::with_capacity(n_stages + 1);
+        for li in 0..=n_stages {
+            let from = if li == 0 {
+                Endpoint::Feeder
+            } else {
+                Endpoint::Stage(li as u32 - 1)
+            };
+            let to = if li == n_stages {
+                Endpoint::Collector
+            } else {
+                Endpoint::Stage(li as u32)
+            };
+            let id = LinkId { replica: ri as u32, from, to };
+            let (tx, rx) = transport.link(&id, chan_cap)?;
+            let stats = Arc::new(LinkStats::default());
+            link_stats.push((id, stats.clone()));
+            txs.push(StageTx::new(id, tx, stats));
+            rxs.push(StageRx::new(id, rx));
+        }
+        let mut txs = txs.into_iter();
+        let mut rxs = rxs.into_iter();
+        feeder_txs.push(txs.next().expect("feeder link"));
+        let ends: Vec<(StageRx, StageTx)> = rxs.by_ref().take(n_stages).zip(txs).collect();
+        stage_ends.push(ends);
+        drain_rxs.push(rxs.next().expect("collector link"));
+    }
+
+    std::thread::scope(|scope| -> Result<ServeReport, ChainError> {
         let resident = &resident;
         let peak_resident = &peak_resident;
-        // Per-replica channel chains, all last stages feeding one
-        // collector.
-        let (col_tx, col_rx) = mpsc::sync_channel::<Msg>(chan_cap);
-        let mut frontends: Vec<mpsc::SyncSender<Msg>> = Vec::new();
+        // All replicas' drainers feed one in-process merge channel: the
+        // collector itself is local even when the stage hops are not.
+        let (merge_tx, merge_rx) = mpsc::sync_channel::<(f64, Vec<BatchMember>)>(chan_cap);
         let mut handles = Vec::new();
-        for (ri, plan) in plans.iter().enumerate() {
-            let n_stages = plan.stages.len();
-            let mut senders: Vec<mpsc::SyncSender<Msg>> = Vec::new();
-            let mut receivers: Vec<mpsc::Receiver<Msg>> = Vec::new();
-            for _ in 0..n_stages {
-                let (tx, rx) = mpsc::sync_channel::<Msg>(chan_cap);
-                senders.push(tx);
-                receivers.push(rx);
-            }
-            frontends.push(senders[0].clone());
-            for (si, stage) in plan.stages.iter().enumerate() {
-                let rx = receivers.remove(0);
-                let tx: mpsc::SyncSender<Msg> = if si + 1 < n_stages {
-                    senders[si + 1].clone()
-                } else {
-                    col_tx.clone()
-                };
+        for ((ri, plan), ends) in plans.iter().enumerate().zip(stage_ends) {
+            for ((si, stage), (mut rx, mut tx)) in plan.stages.iter().enumerate().zip(ends) {
                 let devs: Vec<&crate::cluster::Device> =
                     stage.devices.iter().map(|&i| &cluster.devices[i]).collect();
                 let seg = stage.layers.clone();
@@ -344,25 +459,27 @@ pub fn serve_replicated_with_profiles(
                     .collect();
                 let profile = profiles[ri][si];
                 let live = live_after[ri][si].clone();
-                handles.push(scope.spawn(move || -> anyhow::Result<()> {
+                handles.push(scope.spawn(move || -> Result<(), ChainError> {
+                    tx.hello(hash)?;
+                    rx.expect_hello(hash)?;
                     let mut clock = StageClock::default();
-                    while let Ok(msg) = rx.recv() {
+                    while let Some((t_ready, members)) = rx.recv_batch()? {
                         resident.fetch_sub(1, Ordering::Relaxed);
                         // Virtual pipeline timing: the same recurrence
                         // the engine's analytic pass applied — a batch
                         // of k occupies the stage for T_s(k).
                         let (_start, t_done) =
-                            clock.admit(msg.t_ready, profile.service(msg.members.len()));
+                            clock.admit(t_ready, profile.service(members.len()));
 
                         // Real numerics, per member: per-device tiles,
                         // gather, stitch.
-                        let mut out_members = Vec::with_capacity(msg.members.len());
-                        for member in msg.members {
+                        let mut out_members = Vec::with_capacity(members.len());
+                        for member in members {
                             let mut sink_parts: BTreeMap<LayerId, Vec<(usize, Tensor)>> =
                                 BTreeMap::new();
                             for tiles in &device_tiles {
                                 // Slice this device's feed slabs from
-                                // the live map.
+                                // the live set.
                                 let mut feeds: HashMap<LayerId, Tensor> = HashMap::new();
                                 for (&id, tile) in tiles {
                                     // Feed external producers AND an
@@ -373,7 +490,7 @@ pub fn serve_replicated_with_profiles(
                                     {
                                         continue;
                                     }
-                                    let full = member.live.get(&id).ok_or_else(|| {
+                                    let full = find_live(&member.live, id).ok_or_else(|| {
                                         anyhow::anyhow!("stage {si}: missing feed {id}")
                                     })?;
                                     let slab = if full.dims.len() == 3 {
@@ -411,28 +528,51 @@ pub fn serve_replicated_with_profiles(
                             // Forward upstream tensors still needed
                             // downstream (Arc clone: refcount bump, no
                             // copy).
-                            for (&id, t) in &member.live {
-                                if live.contains(&id) && !live_next.contains_key(&id) {
-                                    live_next.insert(id, t.clone());
+                            for (id, t) in &member.live {
+                                if live.contains(id) && !live_next.contains_key(id) {
+                                    live_next.insert(*id, t.clone());
                                 }
                             }
-                            out_members.push(MsgMember {
+                            let mut live_out: Vec<(LayerId, Arc<Tensor>)> =
+                                live_next.into_iter().collect();
+                            live_out.sort_unstable_by_key(|(id, _)| *id);
+                            out_members.push(BatchMember {
                                 id: member.id,
                                 t_submit: member.t_submit,
-                                live: live_next,
+                                live: live_out,
                             });
                         }
                         depth_inc(resident, peak_resident);
-                        if tx.send(Msg { members: out_members, t_ready: t_done }).is_err() {
+                        if !tx.send_batch(t_done, out_members)? {
                             break;
                         }
                     }
+                    tx.finish();
                     Ok(())
                 }));
             }
-            drop(senders); // workers hold their own clones
         }
-        drop(col_tx);
+
+        // One drainer per replica: owns the chain's last receive end,
+        // forwards finished batches into the merge channel. The merge
+        // hop is not depth-counted — each frame was already counted
+        // once over its real link, so the peak-resident bound is the
+        // same O(stages × capacity) as before.
+        let mut drainer_handles = Vec::new();
+        for mut rx in drain_rxs {
+            let merge = merge_tx.clone();
+            drainer_handles.push(scope.spawn(move || -> Result<(), ChainError> {
+                rx.expect_hello(hash)?;
+                while let Some((t_ready, members)) = rx.recv_batch()? {
+                    resident.fetch_sub(1, Ordering::Relaxed);
+                    if merge.send((t_ready, members)).is_err() {
+                        break;
+                    }
+                }
+                Ok(())
+            }));
+        }
+        drop(merge_tx);
 
         // Feed batches along the engine's schedule. A send can only
         // fail if a stage worker died; its own error surfaces at join.
@@ -440,57 +580,93 @@ pub fn serve_replicated_with_profiles(
         // blocks whenever the pipeline is full, and the collector below
         // must already be draining or the whole scope would deadlock.
         let batches = schedule.batches;
-        let feeder = scope.spawn(move || {
+        let feeder = scope.spawn(move || -> Result<(), ChainError> {
+            for ftx in feeder_txs.iter_mut() {
+                ftx.hello(hash)?;
+            }
             for bp in &batches {
                 let mut members = Vec::with_capacity(bp.members.len());
                 for &idx in &bp.members {
                     let r = inputs[idx].take().expect("engine dispatched a request twice");
-                    members.push(MsgMember {
+                    members.push(BatchMember {
                         id: r.id,
                         t_submit: r.t_submit,
-                        live: [(0usize, Arc::new(r.input))].into(),
+                        live: vec![(0usize, Arc::new(r.input))],
                     });
                 }
                 depth_inc(resident, peak_resident);
-                if frontends[bp.replica].send(Msg { members, t_ready: bp.admitted }).is_err() {
+                if !feeder_txs[bp.replica].send_batch(bp.admitted, members)? {
                     break;
                 }
             }
-            drop(frontends);
+            for ftx in feeder_txs.iter_mut() {
+                ftx.finish();
+            }
+            Ok(())
         });
 
         // Collect.
         let out_id = g.output_id();
         let mut responses = Vec::with_capacity(n_served);
-        while let Ok(msg) = col_rx.recv() {
-            resident.fetch_sub(1, Ordering::Relaxed);
-            for member in msg.members {
-                let output = member
-                    .live
-                    .get(&out_id)
+        while let Ok((t_ready, members)) = merge_rx.recv() {
+            for member in members {
+                let output = find_live(&member.live, out_id)
                     .map(|t| (**t).clone())
                     .ok_or_else(|| anyhow::anyhow!("response missing model output"))?;
                 responses.push(Response {
                     id: member.id,
                     output,
-                    t_done: msg.t_ready,
-                    latency: msg.t_ready - member.t_submit,
+                    t_done: t_ready,
+                    latency: t_ready - member.t_submit,
                 });
             }
         }
-        // Join workers BEFORE the completeness check so a compute error
-        // surfaces as itself, not as "lost responses".
-        feeder.join().map_err(|_| anyhow::anyhow!("feeder panicked"))?;
+        // Join BEFORE the completeness check so an error surfaces as
+        // itself, not as "lost responses" — and in dependency order
+        // (feeder, then workers upstream-first, then drainers) so the
+        // root cause wins over the downstream disconnects it causes.
+        let mut results: Vec<Result<(), ChainError>> = Vec::new();
+        results.push(
+            feeder
+                .join()
+                .map_err(|_| ChainError::Other(anyhow::anyhow!("feeder panicked")))
+                .and_then(|r| r),
+        );
         for h in handles {
-            h.join().map_err(|_| anyhow::anyhow!("stage worker panicked"))??;
+            results.push(
+                h.join()
+                    .map_err(|_| ChainError::Other(anyhow::anyhow!("stage worker panicked")))
+                    .and_then(|r| r),
+            );
+        }
+        for h in drainer_handles {
+            results.push(
+                h.join()
+                    .map_err(|_| ChainError::Other(anyhow::anyhow!("drainer panicked")))
+                    .and_then(|r| r),
+            );
+        }
+        for r in results {
+            r?;
         }
         responses.sort_by_key(|r| r.id);
-        anyhow::ensure!(
+        chain_ensure!(
             responses.len() == n_served,
             "lost responses: {} of {n_served}",
             responses.len()
         );
 
+        let link_metrics: Vec<LinkMetrics> = link_stats
+            .iter()
+            .map(|(id, s)| LinkMetrics {
+                replica: id.replica as usize,
+                from: id.from,
+                to: id.to,
+                frames: s.frames.load(Ordering::Relaxed),
+                bytes: s.bytes.load(Ordering::Relaxed),
+                send_secs: s.send_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+            })
+            .collect();
         let mut done: Vec<f64> = responses.iter().map(|r| r.t_done).collect();
         done.sort_by(f64::total_cmp);
         let latencies: Vec<f64> = responses.iter().map(|r| r.latency).collect();
@@ -506,6 +682,7 @@ pub fn serve_replicated_with_profiles(
             rejected,
             stage_metrics,
             peak_resident_msgs: peak_resident.load(Ordering::Relaxed),
+            link_metrics,
             wall_secs: wall_start.elapsed().as_secs_f64(),
         })
     })

@@ -86,6 +86,7 @@ use crate::graph::ModelGraph;
 use crate::json::{obj, Value};
 use crate::load::{self, LoadReport, LoadSpec};
 use crate::modelzoo;
+use crate::net;
 use crate::pipeline::{ExecutionMode, PipelinePlan, PlanContext, PlannerStats};
 use crate::runtime::{Engine, PipelineArtifacts, Tensor};
 use crate::sim::{self, SimReport};
@@ -125,13 +126,53 @@ pub struct ServeConfig {
     pub seed: u64,
     /// Explicit request stream (overrides `n_requests`/`seed`).
     pub requests: Option<Vec<Request>>,
+    /// Open-loop arrival process for generated requests: stamps each
+    /// generated request's `t_submit` from the seeded trace instead of
+    /// the default t = 0 backlog. Ignored when `requests` is given.
+    pub arrivals: Option<load::ArrivalProcess>,
     /// Engine admission/batching knobs.
     pub engine: ServeOptions,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { n_requests: 16, seed: 42, requests: None, engine: ServeOptions::default() }
+        ServeConfig {
+            n_requests: 16,
+            seed: 42,
+            requests: None,
+            arrivals: None,
+            engine: ServeOptions::default(),
+        }
+    }
+}
+
+/// Which transport carries inter-stage frames in
+/// [`DeploymentPlan::serve_remote`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RemoteTransport {
+    /// In-process framed channels — deadline-capable, no serialization.
+    Loopback,
+    /// Blocking localhost TCP: every frame round-trips through the wire
+    /// codec for real.
+    Tcp,
+}
+
+/// Transport knobs for [`DeploymentPlan::serve_remote`].
+#[derive(Debug, Clone)]
+pub struct RemoteConfig {
+    pub transport: RemoteTransport,
+    /// Per-link receive (and, on TCP, send) deadline: a stalled peer
+    /// surfaces as a typed [`PicoError::Transport`] within this bound
+    /// instead of hanging the chain. Default 30 s.
+    pub deadline: Option<Duration>,
+}
+
+impl Default for RemoteConfig {
+    fn default() -> Self {
+        RemoteConfig {
+            transport: RemoteTransport::Loopback,
+            deadline: Some(Duration::from_secs(30)),
+        }
     }
 }
 
@@ -520,10 +561,7 @@ impl DeploymentPlan {
         cfg: &ServeConfig,
     ) -> Result<coordinator::ServeReport, PicoError> {
         self.validate_pipelined_serving()?;
-        let requests = match &cfg.requests {
-            Some(r) => r.clone(),
-            None => self.gen_requests(cfg.n_requests, cfg.seed, matches!(backend, Backend::Null)),
-        };
+        let requests = self.requests_for(backend, cfg);
         let compute = self.make_compute(backend)?;
         coordinator::serve_replicated(
             &self.graph,
@@ -534,6 +572,46 @@ impl DeploymentPlan {
             &cfg.engine,
         )
         .map_err(|e| PicoError::Internal(format!("{e}")))
+    }
+
+    /// [`DeploymentPlan::serve`] with stage handoff over a real
+    /// transport — the network serving path. The engine schedule pass,
+    /// worker chain and virtual clocks are identical to `serve`, so a
+    /// clean run agrees exactly with it (pinned by `rust/tests/net.rs`);
+    /// the report additionally carries per-link frame/byte/time
+    /// telemetry, and any link failure — handshake mismatch, dropped or
+    /// duplicated frame, deadline expiry, mid-stream disconnect —
+    /// surfaces as a typed [`PicoError::Transport`] within the
+    /// configured deadline.
+    pub fn serve_remote(
+        &self,
+        backend: &Backend,
+        cfg: &ServeConfig,
+        remote: &RemoteConfig,
+    ) -> Result<coordinator::ServeReport, PicoError> {
+        self.validate_pipelined_serving()?;
+        let requests = self.requests_for(backend, cfg);
+        let compute = self.make_compute(backend)?;
+        match remote.transport {
+            RemoteTransport::Loopback => coordinator::serve_remote(
+                &self.graph,
+                &self.replicas,
+                &self.cluster,
+                compute.as_ref(),
+                requests,
+                &cfg.engine,
+                &net::Loopback { deadline: remote.deadline },
+            ),
+            RemoteTransport::Tcp => coordinator::serve_remote(
+                &self.graph,
+                &self.replicas,
+                &self.cluster,
+                compute.as_ref(),
+                requests,
+                &cfg.engine,
+                &net::TcpTransport::new(remote.deadline)?,
+            ),
+        }
     }
 
     /// Serve with the online-adaptation loop closed (paper §5.4):
@@ -553,10 +631,7 @@ impl DeploymentPlan {
         policy: &AdaptPolicy,
     ) -> Result<coordinator::AdaptiveServeReport, PicoError> {
         self.validate_pipelined_serving()?;
-        let requests = match &cfg.requests {
-            Some(r) => r.clone(),
-            None => self.gen_requests(cfg.n_requests, cfg.seed, matches!(backend, Backend::Null)),
-        };
+        let requests = self.requests_for(backend, cfg);
         let compute = self.make_compute(backend)?;
         let mut adapter = OnlineAdapter::new(
             &self.graph,
@@ -641,23 +716,38 @@ impl DeploymentPlan {
         Ok(sim::simulate_open_loop(&self.graph, &self.cluster, &self.replicas, spec))
     }
 
-    fn gen_requests(&self, n: usize, seed: u64, zeros: bool) -> Vec<Request> {
-        let (c, h, w) = self.graph.input_shape;
-        let mut rng = Rng::new(seed);
-        (0..n as u64)
-            .map(|id| Request {
-                id,
-                input: if zeros {
-                    Tensor::zeros(vec![c, h, w])
-                } else {
-                    Tensor::new(
-                        vec![c, h, w],
-                        (0..c * h * w).map(|_| rng.normal() as f32).collect(),
-                    )
-                },
-                t_submit: 0.0,
-            })
-            .collect()
+    /// The serving paths' shared request source: explicit stream if
+    /// given, else `n_requests` generated inputs with `t_submit`
+    /// stamped from `cfg.arrivals` (t = 0 backlog when `None`).
+    fn requests_for(&self, backend: &Backend, cfg: &ServeConfig) -> Vec<Request> {
+        match &cfg.requests {
+            Some(r) => r.clone(),
+            None => {
+                let (c, h, w) = self.graph.input_shape;
+                let zeros = matches!(backend, Backend::Null);
+                let mut rng = Rng::new(cfg.seed);
+                let submits: Vec<f64> = match &cfg.arrivals {
+                    Some(p) => p.generate(cfg.n_requests, cfg.seed),
+                    None => vec![0.0; cfg.n_requests],
+                };
+                submits
+                    .into_iter()
+                    .enumerate()
+                    .map(|(id, t_submit)| Request {
+                        id: id as u64,
+                        input: if zeros {
+                            Tensor::zeros(vec![c, h, w])
+                        } else {
+                            Tensor::new(
+                                vec![c, h, w],
+                                (0..c * h * w).map(|_| rng.normal() as f32).collect(),
+                            )
+                        },
+                        t_submit,
+                    })
+                    .collect()
+            }
+        }
     }
 
     /// Human-readable stage/device breakdown of the deployment.

@@ -28,9 +28,14 @@
 //! `coordinator::serve_replicated` drives the identical engine pass for
 //! admission/batching/dispatch decisions while its stage workers
 //! re-derive per-batch times from their own [`StageClock`]s and move
-//! real tensors. The sim↔serve agreement suite in
+//! real tensors. The pass is transport-agnostic: the same schedule
+//! feeds `coordinator::serve_remote`, where stage handoff crosses a
+//! [`crate::net`] link instead of an in-process channel — the transport
+//! moves tensors, never the clock, which is what keeps remote serving
+//! inside the same agreement contract. The sim↔serve agreement suite in
 //! `rust/tests/agreement.rs` pins the two views together across the
-//! whole model zoo. Throughput scaling of the replica scheduler is
+//! whole model zoo (and `rust/tests/net.rs` pins remote against
+//! in-process). Throughput scaling of the replica scheduler is
 //! measured in `benches/perf_engine.rs`.
 
 mod clock;

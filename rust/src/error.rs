@@ -32,6 +32,11 @@ pub enum PicoError {
     Unsupported(String),
     /// Reading or writing an artifact file failed.
     Io { path: String, msg: String },
+    /// An inter-stage transport link failed: handshake mismatch, codec
+    /// violation (truncated/corrupted/oversized frame), sequence gap
+    /// (dropped or duplicated frame), deadline expiry, or a peer that
+    /// disconnected mid-stream (see [`crate::net`]).
+    Transport(String),
     /// An internal invariant broke; carries the underlying message.
     Internal(String),
 }
@@ -64,6 +69,7 @@ impl fmt::Display for PicoError {
             PicoError::InvalidPlan(msg) => write!(f, "invalid plan artifact: {msg}"),
             PicoError::Unsupported(msg) => write!(f, "unsupported operation: {msg}"),
             PicoError::Io { path, msg } => write!(f, "io error on {path}: {msg}"),
+            PicoError::Transport(msg) => write!(f, "transport error: {msg}"),
             PicoError::Internal(msg) => write!(f, "internal error: {msg}"),
         }
     }

@@ -34,7 +34,9 @@
 //!   ([`baselines`]), the heterogeneous cluster model ([`cluster`]),
 //!   and — on top of the shared [`engine`] — the analytical simulator
 //!   ([`sim`]), the threaded serving [`coordinator`] that executes
-//!   real tensors through AOT artifacts ([`runtime`]), the open-loop
+//!   real tensors through AOT artifacts ([`runtime`]), the transport
+//!   layer ([`net`]) carrying inter-stage handoff over framed links
+//!   (loopback or TCP, with scripted fault injection), the open-loop
 //!   load harness ([`load`]) that stress-tests a deployment under
 //!   production-style arrival streams, and the concurrency model
 //!   checker ([`check`]) that exhaustively verifies the load layer's
@@ -95,6 +97,29 @@
 //! by `rust/tests/agreement.rs` (which, like every example and the CLI,
 //! goes through the facade).
 //!
+//! ## The wire: stage handoff behind a transport trait
+//!
+//! [`net`] owns everything between two stage workers. Frames are
+//! length-prefixed binary (`[u32 LE length][kind][body]`): a versioned
+//! handshake carrying [`net::WIRE_VERSION`], the deployment's
+//! [`net::plan_hash`] and the link identity; sequenced batch frames
+//! with each member's live tensor set; drain/swap control barriers; an
+//! explicit close. The compatibility rule mirrors the plan artifact's:
+//! a receiver accepts exactly its own wire version and rejects
+//! everything else typed — links are executable contracts, not
+//! best-effort streams. [`coordinator::serve_remote`] runs the same
+//! engine schedule over any [`net::Transport`]
+//! ([`deploy::DeploymentPlan::serve_remote`] is the facade entry);
+//! [`coordinator::serve_replicated`] is that chain over the in-process
+//! [`net::Loopback`]. Time stays virtual either way — the transport
+//! moves tensors, never the clock — so clean remote runs agree exactly
+//! with in-process serving, per-link byte/time telemetry lands in the
+//! report for network-aware adaptation, and every scripted fault
+//! ([`net::FaultyTransport`]) surfaces as a typed
+//! [`PicoError::Transport`] within the configured deadline
+//! (`rust/tests/net.rs`, codec property tests in
+//! `rust/tests/property.rs`).
+//!
 //! ## Open-loop serving at scale
 //!
 //! [`load`] is the closed-loop engine's production-traffic counterpart:
@@ -148,6 +173,7 @@ pub mod graph;
 pub mod json;
 pub mod load;
 pub mod modelzoo;
+pub mod net;
 pub mod partition;
 pub mod pipeline;
 pub mod runtime;

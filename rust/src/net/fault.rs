@@ -1,0 +1,232 @@
+//! Scripted fault injection for the transport layer.
+//!
+//! [`FaultyTransport`] wraps any [`Transport`] and applies a
+//! [`FaultScript`] — indexed by (link, frame number) exactly like
+//! [`crate::adapt::DriftScript`] is indexed by request number — to the
+//! sending side of each link. Frame 0 on every link is the handshake;
+//! with unit batches, frame `i + 1` carries request `i`'s batch, so a
+//! script targets a specific request's hop. Faults model the wireless
+//! failure modes the serving chain must convert into typed errors:
+//!
+//! * [`FaultAction::Drop`] — the frame vanishes; the receiver sees a
+//!   sequence gap on the next frame.
+//! * [`FaultAction::Delay`] — the frame stalls in flight; the
+//!   receiver's deadline fires.
+//! * [`FaultAction::Duplicate`] — the frame arrives twice; the
+//!   receiver sees a repeated sequence number.
+//! * [`FaultAction::Corrupt`] — the frame arrives semantically mangled
+//!   (hash-flipped handshake / scrambled sequence number). Byte-level
+//!   corruption of the codec itself is covered by the property tests
+//!   in `rust/tests/property.rs`.
+//! * [`FaultAction::Disconnect`] — the link dies mid-stream without a
+//!   close frame.
+
+use std::time::Duration;
+
+use super::frame::{Frame, LinkId};
+use super::{LinkRx, LinkTx, SendOutcome, Transport};
+use crate::error::PicoError;
+
+/// What happens to the targeted frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultAction {
+    /// Swallow the frame (network loss).
+    Drop,
+    /// Sleep this long before forwarding (congestion/stall).
+    Delay { secs: f64 },
+    /// Forward the frame twice (retransmit gone wrong).
+    Duplicate,
+    /// Forward a semantically mangled frame: a handshake's plan hash is
+    /// flipped, any other frame's sequence number is scrambled.
+    Corrupt,
+    /// Drop the underlying connection; this and all later sends on the
+    /// link report a closed peer, and the receiver sees a mid-stream
+    /// disconnect.
+    Disconnect,
+}
+
+/// One scripted fault: on `link`, the `at_frame`-th frame sent (0 =
+/// handshake) suffers `action`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultEvent {
+    pub link: LinkId,
+    pub at_frame: u64,
+    pub action: FaultAction,
+}
+
+/// A replayable fault schedule (the transport counterpart of
+/// [`crate::adapt::DriftScript`]).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultScript {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultScript {
+    /// No faults: the wrapper becomes a transparent passthrough.
+    pub fn none() -> FaultScript {
+        FaultScript::default()
+    }
+
+    /// A single fault.
+    pub fn one(link: LinkId, at_frame: u64, action: FaultAction) -> FaultScript {
+        FaultScript { events: vec![FaultEvent { link, at_frame, action }] }
+    }
+}
+
+/// A [`Transport`] decorator injecting the scripted faults.
+#[derive(Debug)]
+pub struct FaultyTransport<T> {
+    pub inner: T,
+    pub script: FaultScript,
+}
+
+impl<T: Transport> Transport for FaultyTransport<T> {
+    fn link(
+        &self,
+        id: &LinkId,
+        capacity: usize,
+    ) -> Result<(Box<dyn LinkTx>, Box<dyn LinkRx>), PicoError> {
+        let (tx, rx) = self.inner.link(id, capacity)?;
+        let events: Vec<(u64, FaultAction)> = self
+            .script
+            .events
+            .iter()
+            .filter(|e| e.link == *id)
+            .map(|e| (e.at_frame, e.action.clone()))
+            .collect();
+        Ok((Box::new(FaultyTx { inner: Some(tx), events, frame: 0 }), rx))
+    }
+}
+
+struct FaultyTx {
+    /// `None` after a scripted disconnect.
+    inner: Option<Box<dyn LinkTx>>,
+    events: Vec<(u64, FaultAction)>,
+    frame: u64,
+}
+
+fn corrupt(frame: Frame) -> Frame {
+    match frame {
+        Frame::Hello(mut h) => {
+            h.plan_hash ^= 0xDEAD_BEEF_DEAD_BEEF;
+            Frame::Hello(h)
+        }
+        Frame::Batch { seq, t_ready, members } => {
+            Frame::Batch { seq: seq.wrapping_add(1_000_003), t_ready, members }
+        }
+        Frame::Control { seq, barrier, epoch } => {
+            Frame::Control { seq: seq.wrapping_add(1_000_003), barrier, epoch }
+        }
+        Frame::Close { seq } => Frame::Close { seq: seq.wrapping_add(1_000_003) },
+    }
+}
+
+impl LinkTx for FaultyTx {
+    fn send(&mut self, frame: Frame) -> Result<SendOutcome, PicoError> {
+        let idx = self.frame;
+        self.frame += 1;
+        let action = self.events.iter().find(|(at, _)| *at == idx).map(|(_, a)| a.clone());
+        let Some(inner) = self.inner.as_mut() else {
+            return Ok(SendOutcome::PeerClosed);
+        };
+        match action {
+            None => inner.send(frame),
+            Some(FaultAction::Drop) => Ok(SendOutcome::Sent),
+            Some(FaultAction::Delay { secs }) => {
+                std::thread::sleep(Duration::from_secs_f64(secs.max(0.0)));
+                inner.send(frame)
+            }
+            Some(FaultAction::Duplicate) => match inner.send(frame.clone())? {
+                SendOutcome::Sent => inner.send(frame),
+                closed => Ok(closed),
+            },
+            Some(FaultAction::Corrupt) => inner.send(corrupt(frame)),
+            Some(FaultAction::Disconnect) => {
+                self.inner = None;
+                Ok(SendOutcome::PeerClosed)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{Endpoint, Loopback, Received};
+
+    fn id() -> LinkId {
+        LinkId { replica: 0, from: Endpoint::Feeder, to: Endpoint::Stage(0) }
+    }
+
+    #[test]
+    fn drop_swallows_exactly_the_targeted_frame() {
+        let t = FaultyTransport {
+            inner: Loopback::default(),
+            script: FaultScript::one(id(), 1, FaultAction::Drop),
+        };
+        let (mut tx, mut rx) = t.link(&id(), 8).unwrap();
+        for seq in 0..3 {
+            tx.send(Frame::Close { seq }).unwrap();
+        }
+        let seqs: Vec<u64> = (0..2)
+            .map(|_| match rx.recv().unwrap() {
+                Received::Frame(Frame::Close { seq }) => seq,
+                other => panic!("{other:?}"),
+            })
+            .collect();
+        assert_eq!(seqs, vec![0, 2], "frame 1 must vanish");
+    }
+
+    #[test]
+    fn duplicate_and_corrupt_rewrite_the_stream() {
+        let t = FaultyTransport {
+            inner: Loopback::default(),
+            script: FaultScript {
+                events: vec![
+                    FaultEvent { link: id(), at_frame: 0, action: FaultAction::Duplicate },
+                    FaultEvent { link: id(), at_frame: 2, action: FaultAction::Corrupt },
+                ],
+            },
+        };
+        let (mut tx, mut rx) = t.link(&id(), 8).unwrap();
+        tx.send(Frame::Close { seq: 0 }).unwrap();
+        tx.send(Frame::Close { seq: 1 }).unwrap();
+        let mut seqs = Vec::new();
+        for _ in 0..3 {
+            match rx.recv().unwrap() {
+                Received::Frame(Frame::Close { seq }) => seqs.push(seq),
+                other => panic!("{other:?}"),
+            }
+        }
+        assert_eq!(seqs, vec![0, 0, 1 + 1_000_003]);
+    }
+
+    #[test]
+    fn disconnect_kills_the_link_mid_stream() {
+        let t = FaultyTransport {
+            inner: Loopback::default(),
+            script: FaultScript::one(id(), 1, FaultAction::Disconnect),
+        };
+        let (mut tx, mut rx) = t.link(&id(), 8).unwrap();
+        assert_eq!(tx.send(Frame::Close { seq: 0 }).unwrap(), SendOutcome::Sent);
+        assert_eq!(tx.send(Frame::Close { seq: 1 }).unwrap(), SendOutcome::PeerClosed);
+        assert_eq!(tx.send(Frame::Close { seq: 2 }).unwrap(), SendOutcome::PeerClosed);
+        match rx.recv().unwrap() {
+            Received::Frame(Frame::Close { seq: 0 }) => {}
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(rx.recv().unwrap(), Received::Closed));
+    }
+
+    #[test]
+    fn faults_only_touch_their_own_link() {
+        let other = LinkId { replica: 1, ..id() };
+        let t = FaultyTransport {
+            inner: Loopback::default(),
+            script: FaultScript::one(other, 0, FaultAction::Drop),
+        };
+        let (mut tx, mut rx) = t.link(&id(), 8).unwrap();
+        tx.send(Frame::Close { seq: 0 }).unwrap();
+        assert!(matches!(rx.recv().unwrap(), Received::Frame(Frame::Close { seq: 0 })));
+    }
+}

@@ -1,0 +1,535 @@
+//! The wire codec: length-prefixed binary frames for stage handoff.
+//!
+//! Every frame travels as `[len: u32 LE][payload]` where `payload` is
+//! `[kind: u8][body]` and `len` counts the payload bytes. All integers
+//! and floats are little-endian. The four kinds:
+//!
+//! ```text
+//! kind 1  Hello    version u16 | plan_hash u64 | replica u32 | from ep | to ep
+//!                  ep = tag u8 (0 feeder / 1 stage / 2 collector) | index u32
+//! kind 2  Batch    seq u64 | t_ready f64 | n u32 | n x member
+//!                  member  = id u64 | t_submit f64 | k u32 | k x feature
+//!                  feature = layer u64 | ndims u8 | ndims x dim u32
+//!                            | elems u32 | elems x f32
+//! kind 3  Control  seq u64 | barrier u8 (0 drain / 1 swap) | epoch u64
+//! kind 4  Close    seq u64
+//! ```
+//!
+//! **Handshake compatibility rule** (mirrors the plan artifact's
+//! [`crate::deploy::PLAN_VERSION`] rule): `Hello.version` is bumped on
+//! any change an older reader would misinterpret; a receiver accepts
+//! exactly [`WIRE_VERSION`] and rejects everything else with a typed
+//! [`PicoError::Transport`] — frames are an executable contract between
+//! stage workers, so best-effort parsing of a foreign version is worse
+//! than failing loudly. The Hello also carries the deployment's plan
+//! hash and the link's (replica, from, to) identity, so two endpoints
+//! serving different plans — or wired to the wrong link — refuse each
+//! other before any tensor moves.
+//!
+//! Decoding is defensive: every read is bounds-checked, interior counts
+//! are validated against the remaining bytes *before* any allocation is
+//! sized from them, and the total frame length is capped at
+//! [`MAX_FRAME_BYTES`] — malformed input yields a typed error, never a
+//! panic, hang, or unbounded allocation.
+
+use std::sync::Arc;
+
+use crate::error::PicoError;
+use crate::graph::LayerId;
+use crate::runtime::Tensor;
+
+/// Wire protocol version carried (and checked) by every handshake.
+pub const WIRE_VERSION: u16 = 1;
+
+/// Hard cap on a single frame's payload bytes. Generous: the largest
+/// zoo feature (vgg16 input, 3x224x224 f32) is ~0.6 MB per member, so
+/// even a 64-member batch of large features stays far below it.
+pub const MAX_FRAME_BYTES: usize = 256 * 1024 * 1024;
+
+/// Minimum encoded bytes per batch member (id + t_submit + count) —
+/// used to bound interior counts before allocating.
+const MIN_MEMBER_BYTES: usize = 8 + 8 + 4;
+/// Minimum encoded bytes per live feature (layer + ndims + elems).
+const MIN_FEATURE_BYTES: usize = 8 + 1 + 4;
+
+/// One endpoint of an inter-stage link.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Endpoint {
+    /// The request feeder (upstream of stage 0).
+    Feeder,
+    /// Stage worker `s` of the replica's chain.
+    Stage(u32),
+    /// The response collector (downstream of the last stage).
+    Collector,
+}
+
+impl Endpoint {
+    fn tag_index(self) -> (u8, u32) {
+        match self {
+            Endpoint::Feeder => (0, 0),
+            Endpoint::Stage(s) => (1, s),
+            Endpoint::Collector => (2, 0),
+        }
+    }
+
+    fn from_tag_index(tag: u8, index: u32) -> Result<Endpoint, PicoError> {
+        match tag {
+            0 => Ok(Endpoint::Feeder),
+            1 => Ok(Endpoint::Stage(index)),
+            2 => Ok(Endpoint::Collector),
+            t => Err(PicoError::Transport(format!("unknown endpoint tag {t}"))),
+        }
+    }
+}
+
+impl std::fmt::Display for Endpoint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Endpoint::Feeder => write!(f, "feeder"),
+            Endpoint::Stage(s) => write!(f, "s{s}"),
+            Endpoint::Collector => write!(f, "collector"),
+        }
+    }
+}
+
+/// Identity of one directed link in a replica's stage chain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinkId {
+    pub replica: u32,
+    pub from: Endpoint,
+    pub to: Endpoint,
+}
+
+impl std::fmt::Display for LinkId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "r{} {}->{}", self.replica, self.from, self.to)
+    }
+}
+
+/// The versioned handshake: first frame on every link, both directions
+/// checked (see the module-level compatibility rule).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hello {
+    pub version: u16,
+    /// FNV-1a hash of the deployment's replica plans ([`super::plan_hash`]).
+    pub plan_hash: u64,
+    pub link: LinkId,
+}
+
+/// One request travelling inside a batch frame: its live feature set
+/// (every tensor downstream stages still need), sorted by layer id so
+/// the encoding — and therefore the byte stream — is deterministic.
+/// Tensors are `Arc`-shared: in-process transports forward the frame
+/// structurally without copying feature data.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchMember {
+    pub id: u64,
+    pub t_submit: f64,
+    pub live: Vec<(LayerId, Arc<Tensor>)>,
+}
+
+/// Barrier kind for control frames (drain/swap coordination — the plan
+/// hot-swap protocol's wire form).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Barrier {
+    Drain,
+    Swap,
+}
+
+/// Everything that can travel over a link. `seq` numbers (per link,
+/// starting at 0 after the handshake) let the receiver fail fast on
+/// dropped, duplicated or reordered frames.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    Hello(Hello),
+    Batch { seq: u64, t_ready: f64, members: Vec<BatchMember> },
+    Control { seq: u64, barrier: Barrier, epoch: u64 },
+    Close { seq: u64 },
+}
+
+impl Frame {
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Frame::Hello(_) => "hello",
+            Frame::Batch { .. } => "batch",
+            Frame::Control { .. } => "control",
+            Frame::Close { .. } => "close",
+        }
+    }
+
+    /// Encoded payload length (kind byte + body), computed without
+    /// serializing — telemetry uses this to count bytes on in-process
+    /// links that never materialize the encoding.
+    pub fn payload_len(&self) -> usize {
+        1 + match self {
+            Frame::Hello(_) => 2 + 8 + 4 + 2 * 5,
+            Frame::Batch { members, .. } => {
+                8 + 8
+                    + 4
+                    + members
+                        .iter()
+                        .map(|m| {
+                            MIN_MEMBER_BYTES
+                                + m.live
+                                    .iter()
+                                    .map(|(_, t)| {
+                                        MIN_FEATURE_BYTES + 4 * t.dims.len() + 4 * t.data.len()
+                                    })
+                                    .sum::<usize>()
+                        })
+                        .sum::<usize>()
+            }
+            Frame::Control { .. } => 8 + 1 + 8,
+            Frame::Close { .. } => 8,
+        }
+    }
+
+    /// Total bytes on the wire: 4-byte length prefix + payload.
+    pub fn wire_len(&self) -> usize {
+        4 + self.payload_len()
+    }
+
+    /// Serialize to full wire bytes (`[len][payload]`).
+    pub fn encode(&self) -> Vec<u8> {
+        let payload_len = self.payload_len();
+        let mut buf = Vec::with_capacity(4 + payload_len);
+        buf.extend_from_slice(&(payload_len as u32).to_le_bytes());
+        match self {
+            Frame::Hello(h) => {
+                buf.push(1);
+                buf.extend_from_slice(&h.version.to_le_bytes());
+                buf.extend_from_slice(&h.plan_hash.to_le_bytes());
+                buf.extend_from_slice(&h.link.replica.to_le_bytes());
+                for ep in [h.link.from, h.link.to] {
+                    let (tag, index) = ep.tag_index();
+                    buf.push(tag);
+                    buf.extend_from_slice(&index.to_le_bytes());
+                }
+            }
+            Frame::Batch { seq, t_ready, members } => {
+                buf.push(2);
+                buf.extend_from_slice(&seq.to_le_bytes());
+                buf.extend_from_slice(&t_ready.to_le_bytes());
+                buf.extend_from_slice(&(members.len() as u32).to_le_bytes());
+                for m in members {
+                    buf.extend_from_slice(&m.id.to_le_bytes());
+                    buf.extend_from_slice(&m.t_submit.to_le_bytes());
+                    buf.extend_from_slice(&(m.live.len() as u32).to_le_bytes());
+                    for (layer, t) in &m.live {
+                        buf.extend_from_slice(&(*layer as u64).to_le_bytes());
+                        buf.push(t.dims.len() as u8);
+                        for &d in &t.dims {
+                            buf.extend_from_slice(&(d as u32).to_le_bytes());
+                        }
+                        buf.extend_from_slice(&(t.data.len() as u32).to_le_bytes());
+                        for &x in &t.data {
+                            buf.extend_from_slice(&x.to_le_bytes());
+                        }
+                    }
+                }
+            }
+            Frame::Control { seq, barrier, epoch } => {
+                buf.push(3);
+                buf.extend_from_slice(&seq.to_le_bytes());
+                buf.push(match barrier {
+                    Barrier::Drain => 0,
+                    Barrier::Swap => 1,
+                });
+                buf.extend_from_slice(&epoch.to_le_bytes());
+            }
+            Frame::Close { seq } => {
+                buf.push(4);
+                buf.extend_from_slice(&seq.to_le_bytes());
+            }
+        }
+        debug_assert_eq!(buf.len(), 4 + payload_len, "payload_len out of sync with encode");
+        buf
+    }
+
+    /// Decode one payload (the bytes after the length prefix). Rejects
+    /// trailing garbage: the payload must be exactly one frame.
+    pub fn decode(payload: &[u8]) -> Result<Frame, PicoError> {
+        let mut r = Reader { buf: payload, pos: 0 };
+        let kind = r.u8()?;
+        let frame = match kind {
+            1 => {
+                let version = r.u16()?;
+                let plan_hash = r.u64()?;
+                let replica = r.u32()?;
+                let mut eps = [Endpoint::Feeder; 2];
+                for ep in &mut eps {
+                    let tag = r.u8()?;
+                    let index = r.u32()?;
+                    *ep = Endpoint::from_tag_index(tag, index)?;
+                }
+                Frame::Hello(Hello {
+                    version,
+                    plan_hash,
+                    link: LinkId { replica, from: eps[0], to: eps[1] },
+                })
+            }
+            2 => {
+                let seq = r.u64()?;
+                let t_ready = r.f64()?;
+                let n_members = r.count(MIN_MEMBER_BYTES, "batch members")?;
+                let mut members = Vec::with_capacity(n_members);
+                for _ in 0..n_members {
+                    let id = r.u64()?;
+                    let t_submit = r.f64()?;
+                    let n_live = r.count(MIN_FEATURE_BYTES, "live features")?;
+                    let mut live = Vec::with_capacity(n_live);
+                    for _ in 0..n_live {
+                        let layer = r.u64()? as usize;
+                        let ndims = r.u8()? as usize;
+                        let mut dims = Vec::with_capacity(ndims.min(16));
+                        for _ in 0..ndims {
+                            dims.push(r.u32()? as usize);
+                        }
+                        let n_elems = r.count(4, "feature elements")?;
+                        // Checked: dims are attacker-controlled, and a
+                        // plain product can overflow (a panic, exactly
+                        // what decoding must never do).
+                        let expect = dims
+                            .iter()
+                            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+                            .ok_or_else(|| {
+                                PicoError::Transport(format!(
+                                    "feature {layer}: dims {dims:?} overflow"
+                                ))
+                            })?;
+                        if expect != n_elems {
+                            return Err(PicoError::Transport(format!(
+                                "feature {layer}: {n_elems} elements do not fill dims {dims:?}"
+                            )));
+                        }
+                        let data = r.f32s(n_elems)?;
+                        if let Some(prev) = live.last().map(|(l, _)| *l) {
+                            if prev >= layer {
+                                return Err(PicoError::Transport(format!(
+                                    "live features out of order: layer {layer} after {prev}"
+                                )));
+                            }
+                        }
+                        live.push((layer, Arc::new(Tensor::new(dims, data))));
+                    }
+                    members.push(BatchMember { id, t_submit, live });
+                }
+                Frame::Batch { seq, t_ready, members }
+            }
+            3 => {
+                let seq = r.u64()?;
+                let barrier = match r.u8()? {
+                    0 => Barrier::Drain,
+                    1 => Barrier::Swap,
+                    b => {
+                        return Err(PicoError::Transport(format!("unknown barrier code {b}")));
+                    }
+                };
+                let epoch = r.u64()?;
+                Frame::Control { seq, barrier, epoch }
+            }
+            4 => Frame::Close { seq: r.u64()? },
+            k => return Err(PicoError::Transport(format!("unknown frame kind {k}"))),
+        };
+        if r.pos != payload.len() {
+            return Err(PicoError::Transport(format!(
+                "{} bytes of trailing garbage after {} frame",
+                payload.len() - r.pos,
+                frame.kind_name()
+            )));
+        }
+        Ok(frame)
+    }
+
+    /// Parse one `[len][payload]` frame from the front of `bytes`;
+    /// returns the frame and the wire bytes consumed. This is the exact
+    /// validation the TCP reader applies incrementally — exposed so the
+    /// codec property tests exercise the length-prefix checks too.
+    pub fn decode_wire(bytes: &[u8]) -> Result<(Frame, usize), PicoError> {
+        if bytes.len() < 4 {
+            return Err(PicoError::Transport(format!(
+                "truncated length prefix: {} of 4 bytes",
+                bytes.len()
+            )));
+        }
+        let len = u32::from_le_bytes(bytes[..4].try_into().unwrap()) as usize;
+        if len == 0 {
+            return Err(PicoError::Transport("empty frame (length prefix 0)".into()));
+        }
+        if len > MAX_FRAME_BYTES {
+            return Err(PicoError::Transport(format!(
+                "length prefix {len} exceeds the {MAX_FRAME_BYTES}-byte frame cap"
+            )));
+        }
+        if bytes.len() < 4 + len {
+            return Err(PicoError::Transport(format!(
+                "truncated frame: {} of {} payload bytes",
+                bytes.len() - 4,
+                len
+            )));
+        }
+        Ok((Frame::decode(&bytes[4..4 + len])?, 4 + len))
+    }
+}
+
+/// Bounds-checked little-endian reader over one frame payload.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl Reader<'_> {
+    fn take(&mut self, n: usize) -> Result<&[u8], PicoError> {
+        if self.buf.len() - self.pos < n {
+            return Err(PicoError::Transport(format!(
+                "truncated frame: needed {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn u8(&mut self) -> Result<u8, PicoError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, PicoError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, PicoError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, PicoError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, PicoError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Read a u32 count whose items need at least `min_bytes` each:
+    /// a count the remaining bytes cannot possibly hold is rejected
+    /// *before* any allocation is sized from it.
+    fn count(&mut self, min_bytes: usize, what: &str) -> Result<usize, PicoError> {
+        let n = self.u32()? as usize;
+        if n * min_bytes > self.remaining() {
+            return Err(PicoError::Transport(format!(
+                "{what} count {n} cannot fit in {} remaining bytes",
+                self.remaining()
+            )));
+        }
+        Ok(n)
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>, PicoError> {
+        let raw = self.take(4 * n)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_batch() -> Frame {
+        Frame::Batch {
+            seq: 7,
+            t_ready: 1.25,
+            members: vec![
+                BatchMember {
+                    id: 11,
+                    t_submit: 0.5,
+                    live: vec![
+                        (0, Arc::new(Tensor::new(vec![2, 3], vec![1.0, -2.5, 0.0, 3.5, 4.0, 5.0]))),
+                        (4, Arc::new(Tensor::new(vec![1], vec![9.75]))),
+                    ],
+                },
+                BatchMember { id: 12, t_submit: 0.625, live: vec![] },
+            ],
+        }
+    }
+
+    #[test]
+    fn every_frame_kind_round_trips() {
+        let frames = [
+            Frame::Hello(Hello {
+                version: WIRE_VERSION,
+                plan_hash: 0xDEADBEEF,
+                link: LinkId { replica: 3, from: Endpoint::Stage(1), to: Endpoint::Stage(2) },
+            }),
+            sample_batch(),
+            Frame::Control { seq: 1, barrier: Barrier::Drain, epoch: 9 },
+            Frame::Control { seq: 2, barrier: Barrier::Swap, epoch: 10 },
+            Frame::Close { seq: 3 },
+        ];
+        for f in frames {
+            let wire = f.encode();
+            assert_eq!(wire.len(), f.wire_len(), "wire_len mismatch for {}", f.kind_name());
+            let (back, used) = Frame::decode_wire(&wire).unwrap();
+            assert_eq!(used, wire.len());
+            assert_eq!(back, f);
+        }
+    }
+
+    #[test]
+    fn every_truncation_is_a_typed_error() {
+        let wire = sample_batch().encode();
+        for cut in 0..wire.len() {
+            let err = Frame::decode_wire(&wire[..cut])
+                .expect_err(&format!("prefix of {cut} bytes must not decode"));
+            assert!(matches!(err, PicoError::Transport(_)), "{err:?}");
+        }
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_before_reading() {
+        let mut wire = u32::MAX.to_le_bytes().to_vec();
+        wire.push(2);
+        let err = Frame::decode_wire(&wire).unwrap_err();
+        assert!(format!("{err}").contains("frame cap"), "{err}");
+    }
+
+    #[test]
+    fn interior_counts_are_bounded_by_remaining_bytes() {
+        // A batch frame claiming u32::MAX members in a tiny payload
+        // must fail fast, not allocate.
+        let mut payload = vec![2u8];
+        payload.extend_from_slice(&0u64.to_le_bytes());
+        payload.extend_from_slice(&0f64.to_le_bytes());
+        payload.extend_from_slice(&u32::MAX.to_le_bytes());
+        let err = Frame::decode(&payload).unwrap_err();
+        assert!(format!("{err}").contains("cannot fit"), "{err}");
+    }
+
+    #[test]
+    fn dims_data_mismatch_and_trailing_garbage_are_rejected() {
+        let mut wire = sample_batch().encode();
+        wire.extend_from_slice(&[0, 0, 0]);
+        let fixed_len = {
+            let mut w = wire.clone();
+            let len = (w.len() - 4) as u32;
+            w[..4].copy_from_slice(&len.to_le_bytes());
+            w
+        };
+        let err = Frame::decode_wire(&fixed_len).unwrap_err();
+        assert!(format!("{err}").contains("trailing garbage"), "{err}");
+
+        // Corrupt the first member's first dim (2 -> 3): the element
+        // count no longer fills the dims.
+        let mut payload = sample_batch().encode()[4..].to_vec();
+        let dim_off = 1 + 8 + 8 + 4 + 8 + 8 + 4 + 8 + 1;
+        assert_eq!(payload[dim_off], 2);
+        payload[dim_off] = 3;
+        let err = Frame::decode(&payload).unwrap_err();
+        assert!(format!("{err}").contains("do not fill"), "{err}");
+    }
+}

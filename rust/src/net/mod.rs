@@ -1,0 +1,495 @@
+//! # The transport layer: inter-stage handoff behind a trait.
+//!
+//! The paper's stages live on *wireless devices*, so the stage-worker
+//! chain must not assume shared memory. This module owns everything
+//! between two workers: the length-prefixed binary codec
+//! ([`frame::Frame`] — versioned handshake, batch + tensor payload,
+//! drain/swap control barriers, close; format and compatibility rule
+//! documented in [`frame`]), the [`Transport`] trait that hands out
+//! directed links, and two implementations:
+//!
+//! * [`Loopback`] — in-process bounded channels. Frames move
+//!   structurally (the `Arc`-shared tensors are never serialized), so
+//!   `coordinator::serve_replicated` is exactly `serve_remote` over a
+//!   `Loopback` with no deadline.
+//! * [`TcpTransport`] — blocking `std::net` TCP on localhost with
+//!   per-connection read/write deadlines; every frame round-trips
+//!   through the codec for real.
+//!
+//! [`FaultyTransport`] wraps either with a request-indexed
+//! [`FaultScript`] (drop / delay / duplicate / corrupt / disconnect)
+//! for the fault-injection suite in `rust/tests/net.rs`.
+//!
+//! ## Link protocol
+//!
+//! [`StageTx`] / [`StageRx`] wrap the raw byte-frame endpoints with the
+//! serving chain's rules: the first frame each way is a
+//! [`frame::Hello`] carrying [`frame::WIRE_VERSION`], the deployment's
+//! [`plan_hash`] and the link identity — any mismatch is a typed
+//! [`PicoError::Transport`] before tensors move. Every subsequent frame
+//! carries a per-link sequence number starting at 0; a gap means a
+//! dropped frame, a repeat means a duplicate, and either fails the
+//! receiver immediately rather than silently corrupting the response
+//! stream. A clean shutdown is an explicit `Close` frame; a link that
+//! dies without one (peer crash, cable pull) surfaces as a typed
+//! mid-stream-disconnect error. Receive deadlines bound every wait, so
+//! a stalled peer becomes a typed timeout, never a hang.
+//!
+//! Every [`StageTx`] records frames sent, wire bytes moved (computed
+//! from the codec even when a loopback link skips serialization) and
+//! observed send time into a shared [`LinkStats`]; the serving
+//! coordinator surfaces them as [`LinkMetrics`] in its report — the
+//! measured per-link signal a network-aware adapter consumes.
+
+mod fault;
+mod frame;
+mod tcp;
+
+pub use fault::{FaultAction, FaultEvent, FaultScript, FaultyTransport};
+pub use frame::{
+    Barrier, BatchMember, Endpoint, Frame, Hello, LinkId, MAX_FRAME_BYTES, WIRE_VERSION,
+};
+pub use tcp::TcpTransport;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::error::PicoError;
+use crate::graph::ModelGraph;
+use crate::pipeline::PipelinePlan;
+
+/// Outcome of a non-failing send.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SendOutcome {
+    Sent,
+    /// The receiving endpoint is gone (normal during teardown: the
+    /// sender winds down instead of erroring).
+    PeerClosed,
+}
+
+/// Outcome of a non-failing receive.
+#[derive(Debug)]
+pub enum Received {
+    Frame(Frame),
+    /// The sending endpoint is gone. Whether that is clean depends on
+    /// whether a `Close` frame arrived first — [`StageRx`] decides.
+    Closed,
+}
+
+/// Sending half of one directed link. Blocking; implementations honor
+/// their transport's write deadline.
+pub trait LinkTx: Send {
+    fn send(&mut self, frame: Frame) -> Result<SendOutcome, PicoError>;
+}
+
+/// Receiving half of one directed link. Blocking; implementations honor
+/// their transport's read deadline.
+pub trait LinkRx: Send {
+    fn recv(&mut self) -> Result<Received, PicoError>;
+}
+
+/// A factory of directed links. The serving coordinator asks for one
+/// link per hop of every replica's chain (feeder -> s0 -> ... ->
+/// collector) before spawning workers, then moves each endpoint into
+/// the thread that owns it.
+pub trait Transport {
+    /// Create the link `id` with room for `capacity` in-flight frames
+    /// (backpressure bound; TCP relies on socket buffers instead).
+    fn link(
+        &self,
+        id: &LinkId,
+        capacity: usize,
+    ) -> Result<(Box<dyn LinkTx>, Box<dyn LinkRx>), PicoError>;
+}
+
+/// In-process transport: bounded `mpsc::sync_channel`s moving frames
+/// structurally (no serialization — `Arc` tensors are shared, which is
+/// what keeps `serve_replicated`'s zero-copy forwarding note true).
+#[derive(Debug, Clone, Default)]
+pub struct Loopback {
+    /// Receive deadline per frame; `None` blocks indefinitely (the
+    /// trusted in-process default).
+    pub deadline: Option<Duration>,
+}
+
+struct LoopTx {
+    tx: mpsc::SyncSender<Frame>,
+}
+
+struct LoopRx {
+    rx: mpsc::Receiver<Frame>,
+    deadline: Option<Duration>,
+    id: LinkId,
+}
+
+impl LinkTx for LoopTx {
+    fn send(&mut self, frame: Frame) -> Result<SendOutcome, PicoError> {
+        match self.tx.send(frame) {
+            Ok(()) => Ok(SendOutcome::Sent),
+            Err(_) => Ok(SendOutcome::PeerClosed),
+        }
+    }
+}
+
+impl LinkRx for LoopRx {
+    fn recv(&mut self) -> Result<Received, PicoError> {
+        match self.deadline {
+            None => match self.rx.recv() {
+                Ok(f) => Ok(Received::Frame(f)),
+                Err(_) => Ok(Received::Closed),
+            },
+            Some(d) => match self.rx.recv_timeout(d) {
+                Ok(f) => Ok(Received::Frame(f)),
+                Err(mpsc::RecvTimeoutError::Disconnected) => Ok(Received::Closed),
+                Err(mpsc::RecvTimeoutError::Timeout) => Err(PicoError::Transport(format!(
+                    "link {}: receive timed out after {:.3}s",
+                    self.id,
+                    d.as_secs_f64()
+                ))),
+            },
+        }
+    }
+}
+
+impl Transport for Loopback {
+    fn link(
+        &self,
+        id: &LinkId,
+        capacity: usize,
+    ) -> Result<(Box<dyn LinkTx>, Box<dyn LinkRx>), PicoError> {
+        let (tx, rx) = mpsc::sync_channel::<Frame>(capacity.max(1));
+        Ok((
+            Box::new(LoopTx { tx }),
+            Box::new(LoopRx { rx, deadline: self.deadline, id: *id }),
+        ))
+    }
+}
+
+/// Shared per-link send telemetry, updated by [`StageTx`]. Atomics so
+/// the owning worker writes while the coordinator reads at the end.
+#[derive(Debug, Default)]
+pub struct LinkStats {
+    pub frames: AtomicU64,
+    pub bytes: AtomicU64,
+    pub send_nanos: AtomicU64,
+}
+
+/// One link's totals in a serving report: bytes moved and observed
+/// transfer (send-side) time — the measured per-link bandwidth signal
+/// for network-aware adaptation.
+#[derive(Debug, Clone)]
+pub struct LinkMetrics {
+    pub replica: usize,
+    pub from: Endpoint,
+    pub to: Endpoint,
+    /// Frames sent (handshake and close included).
+    pub frames: u64,
+    /// Wire bytes moved (length prefixes included; computed from the
+    /// codec even on loopback links that skip serialization).
+    pub bytes: u64,
+    /// Wall-clock seconds spent inside sends on this link.
+    pub send_secs: f64,
+}
+
+/// Sending half of a stage-chain hop: handshake, sequence stamping,
+/// telemetry, best-effort close.
+pub struct StageTx {
+    id: LinkId,
+    inner: Box<dyn LinkTx>,
+    next_seq: u64,
+    stats: Arc<LinkStats>,
+    peer_open: bool,
+}
+
+impl StageTx {
+    pub fn new(id: LinkId, inner: Box<dyn LinkTx>, stats: Arc<LinkStats>) -> StageTx {
+        StageTx { id, inner, next_seq: 0, stats, peer_open: true }
+    }
+
+    fn push(&mut self, frame: Frame) -> Result<bool, PicoError> {
+        if !self.peer_open {
+            return Ok(false);
+        }
+        let wire = frame.wire_len() as u64;
+        let t0 = Instant::now();
+        let outcome = self.inner.send(frame)?;
+        self.stats.send_nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        match outcome {
+            SendOutcome::Sent => {
+                self.stats.frames.fetch_add(1, Ordering::Relaxed);
+                self.stats.bytes.fetch_add(wire, Ordering::Relaxed);
+                Ok(true)
+            }
+            SendOutcome::PeerClosed => {
+                self.peer_open = false;
+                Ok(false)
+            }
+        }
+    }
+
+    /// Send the handshake (must be the first frame). Returns false when
+    /// the peer is already gone.
+    pub fn hello(&mut self, plan_hash: u64) -> Result<bool, PicoError> {
+        self.push(Frame::Hello(Hello { version: WIRE_VERSION, plan_hash, link: self.id }))
+    }
+
+    /// Send one sequenced batch. Returns false when the peer is gone
+    /// (teardown: the caller winds down).
+    pub fn send_batch(
+        &mut self,
+        t_ready: f64,
+        members: Vec<BatchMember>,
+    ) -> Result<bool, PicoError> {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.push(Frame::Batch { seq, t_ready, members })
+    }
+
+    /// Send one sequenced drain/swap barrier.
+    pub fn send_control(&mut self, barrier: Barrier, epoch: u64) -> Result<bool, PicoError> {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.push(Frame::Control { seq, barrier, epoch })
+    }
+
+    /// Best-effort clean shutdown: send the `Close` frame, swallowing
+    /// transport errors (the peer may legitimately be gone already).
+    pub fn finish(&mut self) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let _ = self.push(Frame::Close { seq });
+    }
+}
+
+/// Receiving half of a stage-chain hop: handshake verification,
+/// sequence checking, and the clean-close-vs-disconnect distinction.
+pub struct StageRx {
+    id: LinkId,
+    inner: Box<dyn LinkRx>,
+    next_seq: u64,
+}
+
+impl StageRx {
+    pub fn new(id: LinkId, inner: Box<dyn LinkRx>) -> StageRx {
+        StageRx { id, inner, next_seq: 0 }
+    }
+
+    fn check_seq(&mut self, seq: u64, kind: &str) -> Result<(), PicoError> {
+        if seq != self.next_seq {
+            return Err(PicoError::Transport(format!(
+                "link {}: {kind} frame seq {seq}, expected {} (a frame was dropped, duplicated \
+                 or reordered)",
+                self.id, self.next_seq
+            )));
+        }
+        self.next_seq += 1;
+        Ok(())
+    }
+
+    /// Verify the peer's handshake: first frame, exact wire version
+    /// (see the compatibility rule in [`frame`]), matching plan hash
+    /// and link identity.
+    pub fn expect_hello(&mut self, plan_hash: u64) -> Result<(), PicoError> {
+        match self.inner.recv()? {
+            Received::Closed => Err(PicoError::Transport(format!(
+                "link {}: peer disconnected during handshake",
+                self.id
+            ))),
+            Received::Frame(Frame::Hello(h)) => {
+                if h.version != WIRE_VERSION {
+                    return Err(PicoError::Transport(format!(
+                        "link {}: peer speaks wire version {} but this build reads exactly {}",
+                        self.id, h.version, WIRE_VERSION
+                    )));
+                }
+                if h.plan_hash != plan_hash {
+                    return Err(PicoError::Transport(format!(
+                        "link {}: handshake plan hash {:#x} does not match this deployment's \
+                         {plan_hash:#x} (peers are serving different plans)",
+                        self.id, h.plan_hash
+                    )));
+                }
+                if h.link != self.id {
+                    return Err(PicoError::Transport(format!(
+                        "link {}: handshake names link {} (mis-wired endpoints)",
+                        self.id, h.link
+                    )));
+                }
+                Ok(())
+            }
+            Received::Frame(f) => Err(PicoError::Transport(format!(
+                "link {}: expected handshake, got {} frame",
+                self.id,
+                f.kind_name()
+            ))),
+        }
+    }
+
+    /// Next in-sequence batch; `Ok(None)` on a clean `Close`. Control
+    /// barriers are sequence-checked and skipped (the serving chain
+    /// does not act on them yet). Any protocol violation — disconnect
+    /// without `Close`, sequence gap, stray handshake — is a typed
+    /// error.
+    pub fn recv_batch(&mut self) -> Result<Option<(f64, Vec<BatchMember>)>, PicoError> {
+        loop {
+            match self.inner.recv()? {
+                Received::Closed => {
+                    return Err(PicoError::Transport(format!(
+                        "link {}: peer disconnected mid-stream without a close frame",
+                        self.id
+                    )));
+                }
+                Received::Frame(Frame::Hello(_)) => {
+                    return Err(PicoError::Transport(format!(
+                        "link {}: unexpected second handshake",
+                        self.id
+                    )));
+                }
+                Received::Frame(Frame::Batch { seq, t_ready, members }) => {
+                    self.check_seq(seq, "batch")?;
+                    return Ok(Some((t_ready, members)));
+                }
+                Received::Frame(Frame::Control { seq, .. }) => {
+                    self.check_seq(seq, "control")?;
+                }
+                Received::Frame(Frame::Close { seq }) => {
+                    self.check_seq(seq, "close")?;
+                    return Ok(None);
+                }
+            }
+        }
+    }
+}
+
+/// FNV-1a 64 over the replica plans' canonical JSON (layer names
+/// resolved through the graph): both ends of every link must serve the
+/// same deployment, and the handshake carries this hash to prove it.
+pub fn plan_hash(g: &ModelGraph, plans: &[PipelinePlan]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    eat(g.name.as_bytes());
+    for plan in plans {
+        eat(plan.to_json(g).to_string().as_bytes());
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modelzoo;
+    use crate::runtime::Tensor;
+
+    fn link_id() -> LinkId {
+        LinkId { replica: 0, from: Endpoint::Stage(0), to: Endpoint::Stage(1) }
+    }
+
+    fn member(id: u64) -> BatchMember {
+        BatchMember {
+            id,
+            t_submit: 0.5,
+            live: vec![(0, Arc::new(Tensor::new(vec![2], vec![1.0, 2.0])))],
+        }
+    }
+
+    #[test]
+    fn stage_link_protocol_round_trips_over_loopback() {
+        let t = Loopback::default();
+        let id = link_id();
+        let (tx, rx) = t.link(&id, 4).unwrap();
+        let stats = Arc::new(LinkStats::default());
+        let mut tx = StageTx::new(id, tx, stats.clone());
+        let mut rx = StageRx::new(id, rx);
+        assert!(tx.hello(42).unwrap());
+        assert!(tx.send_batch(1.0, vec![member(7)]).unwrap());
+        assert!(tx.send_control(Barrier::Drain, 1).unwrap());
+        tx.finish();
+        rx.expect_hello(42).unwrap();
+        let (t_ready, members) = rx.recv_batch().unwrap().expect("one batch");
+        assert_eq!(t_ready, 1.0);
+        assert_eq!(members.len(), 1);
+        assert_eq!(members[0].id, 7);
+        // The control barrier is skipped; the close ends the stream.
+        assert!(rx.recv_batch().unwrap().is_none());
+        assert_eq!(stats.frames.load(Ordering::Relaxed), 4);
+        assert!(stats.bytes.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn handshake_rejects_wrong_plan_hash_version_and_link() {
+        let t = Loopback::default();
+        let id = link_id();
+        for (wire, needle) in [
+            (
+                Frame::Hello(Hello { version: WIRE_VERSION, plan_hash: 1, link: id }),
+                "plan hash",
+            ),
+            (
+                Frame::Hello(Hello { version: WIRE_VERSION + 1, plan_hash: 2, link: id }),
+                "wire version",
+            ),
+            (
+                Frame::Hello(Hello {
+                    version: WIRE_VERSION,
+                    plan_hash: 2,
+                    link: LinkId { replica: 9, ..id },
+                }),
+                "mis-wired",
+            ),
+            (Frame::Batch { seq: 0, t_ready: 0.0, members: vec![] }, "expected handshake"),
+        ] {
+            let (mut tx, rx) = t.link(&id, 4).unwrap();
+            tx.send(wire).unwrap();
+            let err = StageRx::new(id, rx).expect_hello(2).unwrap_err();
+            assert!(matches!(err, PicoError::Transport(_)));
+            assert!(format!("{err}").contains(needle), "{err}");
+        }
+    }
+
+    #[test]
+    fn sequence_gap_and_disconnect_are_typed_errors() {
+        let t = Loopback::default();
+        let id = link_id();
+        // Gap: seq 1 arrives first.
+        let (mut tx, rx) = t.link(&id, 4).unwrap();
+        tx.send(Frame::Batch { seq: 1, t_ready: 0.0, members: vec![] }).unwrap();
+        let mut srx = StageRx::new(id, rx);
+        let err = srx.recv_batch().unwrap_err();
+        assert!(format!("{err}").contains("dropped, duplicated"), "{err}");
+        // Disconnect without close.
+        let (tx, rx) = t.link(&id, 4).unwrap();
+        drop(tx);
+        let err = StageRx::new(id, rx).recv_batch().unwrap_err();
+        assert!(format!("{err}").contains("without a close"), "{err}");
+    }
+
+    #[test]
+    fn loopback_deadline_times_out_typed() {
+        let t = Loopback { deadline: Some(Duration::from_millis(20)) };
+        let id = link_id();
+        let (_tx, rx) = t.link(&id, 4).unwrap();
+        let err = StageRx::new(id, rx).recv_batch().unwrap_err();
+        assert!(matches!(err, PicoError::Transport(_)));
+        assert!(format!("{err}").contains("timed out"), "{err}");
+    }
+
+    #[test]
+    fn plan_hash_distinguishes_plans() {
+        let g = modelzoo::synthetic_chain(5);
+        let pieces = crate::partition::partition(&g, 5, None).unwrap().pieces;
+        let c = crate::cluster::Cluster::homogeneous_rpi(2, 1.0);
+        let plan = crate::pipeline::plan(&g, &pieces, &c, f64::INFINITY).unwrap();
+        let h1 = plan_hash(&g, std::slice::from_ref(&plan));
+        assert_eq!(h1, plan_hash(&g, std::slice::from_ref(&plan)), "deterministic");
+        let c1 = crate::cluster::Cluster::homogeneous_rpi(3, 1.0);
+        let plan2 = crate::pipeline::plan(&g, &pieces, &c1, f64::INFINITY).unwrap();
+        assert_ne!(h1, plan_hash(&g, std::slice::from_ref(&plan2)));
+    }
+}

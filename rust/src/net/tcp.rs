@@ -1,0 +1,270 @@
+//! Blocking `std::net` TCP transport with per-connection deadlines.
+//!
+//! One localhost listener per transport; every [`Transport::link`] call
+//! opens a dedicated connection (connect + accept are sequential on the
+//! caller's thread, so each accepted socket is the one just dialed) and
+//! each endpoint is then owned by the thread running that side of the
+//! chain — the per-connection-thread model, with the stage workers
+//! themselves as the connection threads. `TCP_NODELAY` is set (frames
+//! are latency-sensitive and self-contained) and the transport's
+//! deadline becomes each socket's read *and* write timeout, so a
+//! stalled or wedged peer surfaces as a typed
+//! [`PicoError::Transport`] timeout instead of a hang.
+//!
+//! Spanning real hosts needs only a listener on the remote side handing
+//! accepted sockets to the same [`TcpTx`]/[`TcpRx`] framing — the codec
+//! and link protocol are already host-agnostic.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::Duration;
+
+use super::frame::{Frame, LinkId, MAX_FRAME_BYTES};
+use super::{LinkRx, LinkTx, Received, SendOutcome, Transport};
+use crate::error::PicoError;
+
+/// TCP transport bound to an ephemeral localhost port.
+#[derive(Debug)]
+pub struct TcpTransport {
+    listener: TcpListener,
+    addr: SocketAddr,
+    /// Read/write timeout applied to every link's sockets.
+    pub deadline: Option<Duration>,
+}
+
+impl TcpTransport {
+    pub fn new(deadline: Option<Duration>) -> Result<TcpTransport, PicoError> {
+        let listener = TcpListener::bind("127.0.0.1:0")
+            .map_err(|e| PicoError::Transport(format!("bind 127.0.0.1:0: {e}")))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| PicoError::Transport(format!("local_addr: {e}")))?;
+        Ok(TcpTransport { listener, addr, deadline })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    fn configure(&self, stream: &TcpStream, id: &LinkId) -> Result<(), PicoError> {
+        let wrap = |what: &str, e: std::io::Error| {
+            PicoError::Transport(format!("link {id}: {what}: {e}"))
+        };
+        stream.set_nodelay(true).map_err(|e| wrap("set_nodelay", e))?;
+        stream.set_read_timeout(self.deadline).map_err(|e| wrap("set_read_timeout", e))?;
+        stream.set_write_timeout(self.deadline).map_err(|e| wrap("set_write_timeout", e))?;
+        Ok(())
+    }
+}
+
+impl Transport for TcpTransport {
+    fn link(
+        &self,
+        id: &LinkId,
+        _capacity: usize,
+    ) -> Result<(Box<dyn LinkTx>, Box<dyn LinkRx>), PicoError> {
+        let sender = TcpStream::connect(self.addr)
+            .map_err(|e| PicoError::Transport(format!("link {id}: connect {}: {e}", self.addr)))?;
+        let (receiver, _) = self
+            .listener
+            .accept()
+            .map_err(|e| PicoError::Transport(format!("link {id}: accept: {e}")))?;
+        self.configure(&sender, id)?;
+        self.configure(&receiver, id)?;
+        Ok((
+            Box::new(TcpTx { stream: sender, id: *id, deadline: self.deadline }),
+            Box::new(TcpRx { stream: receiver, id: *id, deadline: self.deadline }),
+        ))
+    }
+}
+
+fn is_peer_closed(kind: std::io::ErrorKind) -> bool {
+    matches!(
+        kind,
+        std::io::ErrorKind::BrokenPipe
+            | std::io::ErrorKind::ConnectionReset
+            | std::io::ErrorKind::ConnectionAborted
+    )
+}
+
+fn is_timeout(kind: std::io::ErrorKind) -> bool {
+    // Read/write timeouts surface as WouldBlock on unix and TimedOut on
+    // windows; treat both as the deadline firing.
+    matches!(kind, std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
+struct TcpTx {
+    stream: TcpStream,
+    id: LinkId,
+    deadline: Option<Duration>,
+}
+
+impl LinkTx for TcpTx {
+    fn send(&mut self, frame: Frame) -> Result<SendOutcome, PicoError> {
+        let wire = frame.encode();
+        match self.stream.write_all(&wire) {
+            Ok(()) => Ok(SendOutcome::Sent),
+            Err(e) if is_peer_closed(e.kind()) => Ok(SendOutcome::PeerClosed),
+            Err(e) if is_timeout(e.kind()) => Err(PicoError::Transport(format!(
+                "link {}: send timed out after {:.3}s",
+                self.id,
+                self.deadline.unwrap_or_default().as_secs_f64()
+            ))),
+            Err(e) => Err(PicoError::Transport(format!("link {}: send: {e}", self.id))),
+        }
+    }
+}
+
+struct TcpRx {
+    stream: TcpStream,
+    id: LinkId,
+    deadline: Option<Duration>,
+}
+
+impl TcpRx {
+    /// Fill `buf` completely. `Ok(false)` = clean EOF before the first
+    /// byte (only legal at a frame boundary, i.e. when `at_boundary`);
+    /// EOF mid-buffer is a typed truncation error.
+    fn read_full(&mut self, buf: &mut [u8], at_boundary: bool) -> Result<bool, PicoError> {
+        let mut got = 0;
+        while got < buf.len() {
+            match self.stream.read(&mut buf[got..]) {
+                Ok(0) => {
+                    if got == 0 && at_boundary {
+                        return Ok(false);
+                    }
+                    return Err(PicoError::Transport(format!(
+                        "link {}: connection closed mid-frame ({got} of {} bytes)",
+                        self.id,
+                        buf.len()
+                    )));
+                }
+                Ok(n) => got += n,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) if is_timeout(e.kind()) => {
+                    return Err(PicoError::Transport(format!(
+                        "link {}: receive timed out after {:.3}s",
+                        self.id,
+                        self.deadline.unwrap_or_default().as_secs_f64()
+                    )));
+                }
+                Err(e) if is_peer_closed(e.kind()) => {
+                    if got == 0 && at_boundary {
+                        return Ok(false);
+                    }
+                    return Err(PicoError::Transport(format!(
+                        "link {}: connection reset mid-frame",
+                        self.id
+                    )));
+                }
+                Err(e) => {
+                    return Err(PicoError::Transport(format!("link {}: recv: {e}", self.id)));
+                }
+            }
+        }
+        Ok(true)
+    }
+}
+
+impl LinkRx for TcpRx {
+    fn recv(&mut self) -> Result<Received, PicoError> {
+        let mut prefix = [0u8; 4];
+        if !self.read_full(&mut prefix, true)? {
+            return Ok(Received::Closed);
+        }
+        let len = u32::from_le_bytes(prefix) as usize;
+        if len == 0 {
+            return Err(PicoError::Transport(format!(
+                "link {}: empty frame (length prefix 0)",
+                self.id
+            )));
+        }
+        if len > MAX_FRAME_BYTES {
+            return Err(PicoError::Transport(format!(
+                "link {}: length prefix {len} exceeds the {MAX_FRAME_BYTES}-byte frame cap",
+                self.id
+            )));
+        }
+        let mut payload = vec![0u8; len];
+        self.read_full(&mut payload, false)?;
+        Frame::decode(&payload).map(Received::Frame)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{BatchMember, Endpoint};
+    use crate::runtime::Tensor;
+    use std::sync::Arc;
+
+    fn link_id() -> LinkId {
+        LinkId { replica: 0, from: Endpoint::Feeder, to: Endpoint::Stage(0) }
+    }
+
+    #[test]
+    fn frames_round_trip_bit_exactly_over_tcp() {
+        let t = TcpTransport::new(Some(Duration::from_secs(5))).unwrap();
+        let (mut tx, mut rx) = t.link(&link_id(), 4).unwrap();
+        let frame = Frame::Batch {
+            seq: 0,
+            t_ready: 0.125,
+            members: vec![BatchMember {
+                id: 3,
+                t_submit: 1e-9,
+                live: vec![(
+                    2,
+                    Arc::new(Tensor::new(vec![2, 2], vec![1.5, -0.25, f32::MIN_POSITIVE, 1e30])),
+                )],
+            }],
+        };
+        assert_eq!(tx.send(frame.clone()).unwrap(), SendOutcome::Sent);
+        match rx.recv().unwrap() {
+            Received::Frame(back) => assert_eq!(back, frame),
+            Received::Closed => panic!("peer closed"),
+        }
+        // Dropping the sender is a clean EOF at the frame boundary.
+        drop(tx);
+        assert!(matches!(rx.recv().unwrap(), Received::Closed));
+    }
+
+    #[test]
+    fn read_deadline_fires_as_typed_timeout() {
+        let t = TcpTransport::new(Some(Duration::from_millis(50))).unwrap();
+        let (_tx, mut rx) = t.link(&link_id(), 4).unwrap();
+        let start = std::time::Instant::now();
+        let err = rx.recv().unwrap_err();
+        assert!(matches!(err, PicoError::Transport(_)));
+        assert!(format!("{err}").contains("timed out"), "{err}");
+        assert!(start.elapsed() < Duration::from_secs(5), "deadline did not bound the wait");
+    }
+
+    /// A raw writer + framed reader pair, bypassing `TcpTx` so tests
+    /// can put torn bytes on the wire.
+    fn raw_pair(t: &TcpTransport) -> (TcpStream, TcpRx) {
+        let sender = TcpStream::connect(t.addr).unwrap();
+        let (receiver, _) = t.listener.accept().unwrap();
+        receiver.set_read_timeout(t.deadline).unwrap();
+        (sender, TcpRx { stream: receiver, id: link_id(), deadline: t.deadline })
+    }
+
+    #[test]
+    fn mid_frame_cut_is_a_typed_truncation_error() {
+        let t = TcpTransport::new(Some(Duration::from_secs(5))).unwrap();
+        let (mut raw, mut rx) = raw_pair(&t);
+        let wire = Frame::Close { seq: 0 }.encode();
+        raw.write_all(&wire[..wire.len() - 3]).unwrap();
+        drop(raw);
+        let err = rx.recv().unwrap_err();
+        assert!(format!("{err}").contains("mid-frame"), "{err}");
+    }
+
+    #[test]
+    fn oversized_prefix_is_rejected_without_allocating() {
+        let t = TcpTransport::new(Some(Duration::from_secs(5))).unwrap();
+        let (mut raw, mut rx) = raw_pair(&t);
+        raw.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        let err = rx.recv().unwrap_err();
+        assert!(format!("{err}").contains("frame cap"), "{err}");
+    }
+}

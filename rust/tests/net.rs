@@ -1,0 +1,260 @@
+//! Transport serving suite: `serve_remote` vs the in-process path, and
+//! fault injection.
+//!
+//! Two contracts under test. **Agreement**: a clean `serve_remote` run
+//! — over framed loopback or real TCP — produces *exactly* the report
+//! `serve`/`serve_replicated` does (response ids, completion times,
+//! latency quantiles to 1e-12, rejection sets, per-stage service
+//! metrics), because the transport moves tensors, never the virtual
+//! clock. **Fail-fast**: every scripted link fault (drop, delay,
+//! duplicate, corrupt, mid-stream disconnect) surfaces as a typed
+//! [`PicoError::Transport`] within the configured deadline — never a
+//! panic, never a hang, never a silently wrong answer.
+
+use std::time::{Duration, Instant};
+
+use pico::cluster::Cluster;
+use pico::coordinator::{self, NullCompute, Request, ServeOptions, ServeReport};
+use pico::deploy::{Backend, DeploymentPlan, RemoteConfig, RemoteTransport, Replicas, ServeConfig};
+use pico::engine::AdmissionPolicy;
+use pico::load::ArrivalProcess;
+use pico::modelzoo;
+use pico::net::{Endpoint, FaultAction, FaultScript, FaultyTransport, LinkId, Loopback};
+use pico::runtime::Tensor;
+use pico::PicoError;
+
+/// Same `PICO_TEST_SCALE` knob as `rust/tests/open_loop.rs` (sanitizer
+/// CI sets 0.02), with a smaller floor: the agreement contract needs a
+/// pipeline-full of traffic, not tens of thousands of requests.
+fn scaled(n: usize) -> usize {
+    match std::env::var("PICO_TEST_SCALE") {
+        Ok(s) => {
+            let f: f64 = s.parse().expect("PICO_TEST_SCALE must be a float");
+            ((n as f64 * f) as usize).max(8)
+        }
+        Err(_) => n,
+    }
+}
+
+/// Exact agreement between two serving reports: counts and ids,
+/// per-response times bitwise, quantiles to 1e-12, per-stage service
+/// metrics. Wall-clock-derived fields (`wall_secs`, `link_metrics`,
+/// `peak_resident_msgs`) are deliberately outside the contract.
+fn assert_reports_identical(a: &ServeReport, b: &ServeReport) {
+    assert_eq!(a.responses.len(), b.responses.len(), "response counts differ");
+    for (x, y) in a.responses.iter().zip(&b.responses) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.t_done, y.t_done, "request {}", x.id);
+        assert_eq!(x.latency, y.latency, "request {}", x.id);
+        assert_eq!(x.output, y.output, "request {} output diverged in transit", x.id);
+    }
+    assert_eq!(a.rejected, b.rejected, "shed sets differ");
+    for (p, q, what) in [
+        (a.makespan, b.makespan, "makespan"),
+        (a.period, b.period, "period"),
+        (a.throughput, b.throughput, "throughput"),
+        (a.mean_latency, b.mean_latency, "mean latency"),
+        (a.p50_latency, b.p50_latency, "p50"),
+        (a.p95_latency, b.p95_latency, "p95"),
+    ] {
+        assert!((p - q).abs() <= 1e-12, "{what}: {p} vs {q}");
+    }
+    assert_eq!(a.stage_metrics.len(), b.stage_metrics.len());
+    for (x, y) in a.stage_metrics.iter().zip(&b.stage_metrics) {
+        assert_eq!((x.replica, x.stage), (y.replica, y.stage));
+        assert_eq!(x.devices, y.devices);
+        assert_eq!(x.planned_service, y.planned_service);
+        assert_eq!(x.observed.batches, y.observed.batches);
+        assert_eq!(x.observed.items, y.observed.items);
+        assert_eq!(x.observed.ewma_per_item, y.observed.ewma_per_item);
+        assert_eq!(x.observed.mean_per_item, y.observed.mean_per_item);
+    }
+}
+
+/// Zoo subset: remote serving over framed loopback bit-agrees with the
+/// in-process path, across single- and multi-replica deployments.
+#[test]
+fn loopback_serve_remote_agrees_exactly_with_serve() {
+    for (model, devices, replicas) in
+        [("squeezenet", 4, 2), ("vgg16", 3, 1), ("squeezenet", 2, 1)]
+    {
+        let d = DeploymentPlan::builder()
+            .model(model)
+            .cluster(Cluster::homogeneous_rpi(devices, 1.0))
+            .replicas(Replicas::Fixed(replicas))
+            .build()
+            .unwrap();
+        let cfg = ServeConfig { n_requests: scaled(24), ..Default::default() };
+        let base = d.serve(&Backend::Null, &cfg).unwrap();
+        let remote = d.serve_remote(&Backend::Null, &cfg, &RemoteConfig::default()).unwrap();
+        assert_reports_identical(&base, &remote);
+        // Telemetry covers every hop of every replica's chain
+        // (feeder -> stages -> collector), and every link at least
+        // moved its handshake and close.
+        let hops: usize = d.replicas.iter().map(|p| p.stages.len() + 1).sum();
+        assert_eq!(remote.link_metrics.len(), hops, "{model}");
+        for l in &remote.link_metrics {
+            assert!(l.frames >= 2, "{model} link r{} {}->{}", l.replica, l.from, l.to);
+            assert!(l.bytes > 0, "{model} link r{} {}->{}", l.replica, l.from, l.to);
+        }
+    }
+}
+
+/// Real TCP: every frame round-trips through the wire codec and the
+/// run still bit-agrees — real numerics included — with loopback. With
+/// a single replica and unit batches every link carries exactly
+/// handshake + n batches + close, and loopback's codec-computed byte
+/// counts equal TCP's actually-serialized ones.
+#[test]
+fn tcp_serve_remote_is_bit_exact_with_full_frame_accounting() {
+    let d = DeploymentPlan::builder()
+        .graph(modelzoo::synthetic_chain(6))
+        .cluster(Cluster::homogeneous_rpi(3, 1.0))
+        .build()
+        .unwrap();
+    let n = scaled(12);
+    let cfg = ServeConfig { n_requests: n, ..Default::default() };
+    let backend = Backend::Native { seed: 7 };
+    let lo = d.serve_remote(&backend, &cfg, &RemoteConfig::default()).unwrap();
+    let tcp = d
+        .serve_remote(
+            &backend,
+            &cfg,
+            &RemoteConfig {
+                transport: RemoteTransport::Tcp,
+                deadline: Some(Duration::from_secs(30)),
+            },
+        )
+        .unwrap();
+    assert_reports_identical(&lo, &tcp);
+    assert_eq!(lo.link_metrics.len(), tcp.link_metrics.len());
+    for (a, b) in lo.link_metrics.iter().zip(&tcp.link_metrics) {
+        assert_eq!(a.frames, (n + 2) as u64, "link r{} {}->{}", a.replica, a.from, a.to);
+        assert_eq!(b.frames, (n + 2) as u64, "link r{} {}->{}", b.replica, b.from, b.to);
+        assert_eq!(
+            a.bytes, b.bytes,
+            "wire accounting differs on r{} {}->{}",
+            a.replica, a.from, a.to
+        );
+    }
+}
+
+/// The facade's open-loop arrivals knob: a seeded Poisson stream with a
+/// bounded shedding queue produces the same admissions, rejections and
+/// quantiles whether served in-process, over loopback, or over TCP.
+#[test]
+fn arrival_stamped_overload_agrees_across_transports() {
+    let d = DeploymentPlan::builder()
+        .model("squeezenet")
+        .cluster(Cluster::homogeneous_rpi(4, 1.0))
+        .replicas(Replicas::Fixed(2))
+        .build()
+        .unwrap();
+    let cfg = ServeConfig {
+        n_requests: scaled(64),
+        arrivals: Some(ArrivalProcess::Poisson { rate: 400.0 }),
+        engine: ServeOptions {
+            queue_capacity: Some(8),
+            admission: AdmissionPolicy::Shed,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let base = d.serve(&Backend::Null, &cfg).unwrap();
+    let lo = d.serve_remote(&Backend::Null, &cfg, &RemoteConfig::default()).unwrap();
+    let tcp = d
+        .serve_remote(
+            &Backend::Null,
+            &cfg,
+            &RemoteConfig {
+                transport: RemoteTransport::Tcp,
+                deadline: Some(Duration::from_secs(30)),
+            },
+        )
+        .unwrap();
+    // Arrivals actually spread out (not the t = 0 backlog default).
+    assert!(base.responses.iter().any(|r| r.t_done != base.responses[0].t_done));
+    assert_reports_identical(&base, &lo);
+    assert_reports_identical(&lo, &tcp);
+}
+
+fn fault_deployment() -> (DeploymentPlan, Vec<Request>) {
+    let d = DeploymentPlan::builder()
+        .graph(modelzoo::synthetic_chain(6))
+        .cluster(Cluster::homogeneous_rpi(3, 1.0))
+        .build()
+        .unwrap();
+    let (c, h, w) = d.graph.input_shape;
+    let requests = (0..8u64)
+        .map(|id| Request { id, input: Tensor::zeros(vec![c, h, w]), t_submit: 0.0 })
+        .collect();
+    (d, requests)
+}
+
+fn run_with_faults(script: FaultScript) -> Result<ServeReport, PicoError> {
+    let (d, requests) = fault_deployment();
+    // A short receive deadline on every link: a fault that silences a
+    // link must surface as a typed timeout, not a hang.
+    let transport = FaultyTransport {
+        inner: Loopback { deadline: Some(Duration::from_millis(250)) },
+        script,
+    };
+    coordinator::serve_remote(
+        &d.graph,
+        &d.replicas,
+        &d.cluster,
+        &NullCompute,
+        requests,
+        &ServeOptions::default(),
+        &transport,
+    )
+}
+
+/// Every fault mode, scripted request-indexed on the feeder link (frame
+/// 0 is the handshake; unit batches put request i in frame i + 1),
+/// fails fast with a typed `PicoError::Transport` — and well inside the
+/// deadline-derived bound, proving no retry loop or hang.
+#[test]
+fn every_scripted_fault_fails_fast_with_a_typed_transport_error() {
+    let link = LinkId { replica: 0, from: Endpoint::Feeder, to: Endpoint::Stage(0) };
+    let cases: Vec<(&str, FaultScript)> = vec![
+        ("drop request 0's frame", FaultScript::one(link, 1, FaultAction::Drop)),
+        ("stall past the deadline", FaultScript::one(link, 1, FaultAction::Delay { secs: 2.0 })),
+        ("duplicate request 0's frame", FaultScript::one(link, 1, FaultAction::Duplicate)),
+        ("corrupt the handshake", FaultScript::one(link, 0, FaultAction::Corrupt)),
+        ("corrupt request 1's frame", FaultScript::one(link, 2, FaultAction::Corrupt)),
+        ("disconnect mid-stream", FaultScript::one(link, 1, FaultAction::Disconnect)),
+    ];
+    for (name, script) in cases {
+        let start = Instant::now();
+        let err = run_with_faults(script).expect_err(name);
+        assert!(matches!(err, PicoError::Transport(_)), "{name}: {err:?}");
+        assert!(
+            start.elapsed() < Duration::from_secs(20),
+            "{name}: took {:?}, did not fail fast",
+            start.elapsed()
+        );
+    }
+}
+
+/// The fault wrapper with an empty script is a transparent passthrough:
+/// the run completes and agrees exactly with the in-process path.
+#[test]
+fn empty_fault_script_is_a_transparent_passthrough() {
+    let (d, requests) = fault_deployment();
+    let n = requests.len();
+    let transport = FaultyTransport { inner: Loopback::default(), script: FaultScript::none() };
+    let faulty = coordinator::serve_remote(
+        &d.graph,
+        &d.replicas,
+        &d.cluster,
+        &NullCompute,
+        requests,
+        &ServeOptions::default(),
+        &transport,
+    )
+    .unwrap();
+    let base =
+        d.serve(&Backend::Null, &ServeConfig { n_requests: n, ..Default::default() }).unwrap();
+    assert_reports_identical(&base, &faulty);
+}

@@ -16,9 +16,10 @@ use pico::load::{run_load, run_load_mutexed, run_load_reference, ArrivalProcess,
 
 /// Request-count knob for expensive runners: `PICO_TEST_SCALE=0.02`
 /// (set by the sanitizer CI jobs) shrinks the headline request counts
-/// so an instrumented run fits the job budget. Assertions below are
-/// written against `spec.n_requests`, not the literal counts, so the
-/// invariants hold at any scale.
+/// so an instrumented run fits the job budget. The transport suite in
+/// `rust/tests/net.rs` honors the same knob (with its own smaller
+/// floor). Assertions below are written against `spec.n_requests`, not
+/// the literal counts, so the invariants hold at any scale.
 fn scaled(n: usize) -> usize {
     match std::env::var("PICO_TEST_SCALE") {
         Ok(s) => {
@@ -56,7 +57,7 @@ fn facade_load_test_agrees_with_analytic_twin_exactly() {
     let threaded = d.load_test(&spec).unwrap();
     let analytic = d.simulate_open_loop(&spec).unwrap();
 
-    assert_eq!(threaded.offered, spec.n_requests);
+    assert_eq!(threaded.offered, spec.n_requests as u64);
     assert!(threaded.admitted > 0, "some requests must be admitted");
     assert!(threaded.shed_queue > 0, "overload must shed");
     // Exact count agreement — not a tolerance.
@@ -126,7 +127,7 @@ fn hundred_percent_shed_reports_defined_stats_through_facade() {
     };
     let rep = d.load_test(&spec).unwrap();
     assert_eq!(rep.admitted, 0);
-    assert_eq!(rep.shed_deadline, 2_000);
+    assert_eq!(rep.shed_deadline, spec.n_requests as u64);
     assert_eq!(rep.shed_rate, 1.0);
     for v in [rep.throughput, rep.mean_latency, rep.p50, rep.p95, rep.p99, rep.p999] {
         assert!(v == 0.0 && v.is_finite(), "expected defined 0.0, got {v}");
@@ -154,7 +155,7 @@ fn sustained_overload_stays_bounded_and_conserves_requests() {
         ..Default::default()
     };
     let rep = run_load(&replicas, &spec);
-    assert_eq!(rep.offered, spec.n_requests);
+    assert_eq!(rep.offered, spec.n_requests as u64);
     assert_eq!(rep.admitted + rep.shed_queue + rep.shed_deadline, rep.offered);
     assert!(rep.shed_rate > 0.5, "6x overload must shed most: {}", rep.shed_rate);
     // Admitted throughput sits at (not above) pipeline capacity:

@@ -377,3 +377,130 @@ fn property_sim_coordinator_consistency() {
         );
     }
 }
+
+// ---------------------------------------------------------------------
+// Transport codec properties (rust/src/net/frame.rs): round-trip under
+// random frames, and typed errors — never panics or hangs — under
+// truncation, corruption and hostile length prefixes.
+// ---------------------------------------------------------------------
+
+use pico::error::PicoError;
+use pico::net::{Barrier, BatchMember, Endpoint, Frame, Hello, LinkId, WIRE_VERSION};
+use std::sync::Arc;
+
+fn rand_endpoint(rng: &mut Rng) -> Endpoint {
+    match rng.below(3) {
+        0 => Endpoint::Feeder,
+        1 => Endpoint::Stage(rng.below(40) as u32),
+        _ => Endpoint::Collector,
+    }
+}
+
+fn rand_link(rng: &mut Rng) -> LinkId {
+    LinkId { replica: rng.below(8) as u32, from: rand_endpoint(rng), to: rand_endpoint(rng) }
+}
+
+fn rand_member(rng: &mut Rng) -> BatchMember {
+    // Live layer ids must be strictly ascending (the codec enforces
+    // the sorted-set invariant), so draw ids by accumulation.
+    let n_live = rng.range(1, 4);
+    let mut id = 0usize;
+    let live = (0..n_live)
+        .map(|_| {
+            id += rng.range(1, 5);
+            let rows = rng.range(1, 4);
+            let cols = rng.range(1, 6);
+            let data: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32).collect();
+            (id, Arc::new(Tensor::new(vec![rows, cols], data)))
+        })
+        .collect();
+    BatchMember { id: rng.next_u64(), t_submit: rng.f64() * 10.0, live }
+}
+
+fn rand_frame(rng: &mut Rng) -> Frame {
+    match rng.below(4) {
+        0 => Frame::Hello(Hello {
+            version: WIRE_VERSION,
+            plan_hash: rng.next_u64(),
+            link: rand_link(rng),
+        }),
+        1 => Frame::Batch {
+            seq: rng.next_u64(),
+            t_ready: rng.f64() * 100.0,
+            members: (0..rng.range(1, 4)).map(|_| rand_member(rng)).collect(),
+        },
+        2 => Frame::Control {
+            seq: rng.next_u64(),
+            barrier: if rng.below(2) == 0 {
+                Barrier::Drain
+            } else {
+                Barrier::Swap
+            },
+            epoch: rng.next_u64(),
+        },
+        _ => Frame::Close { seq: rng.next_u64() },
+    }
+}
+
+/// Every random frame round-trips bit-exactly through the wire codec,
+/// and `decode_wire` reports exactly the bytes it consumed.
+#[test]
+fn property_codec_round_trips_random_frames() {
+    let mut rng = Rng::new(0xC0DEC);
+    for round in 0..200 {
+        let frame = rand_frame(&mut rng);
+        let wire = frame.encode();
+        assert_eq!(wire.len(), frame.wire_len(), "round {round}");
+        let (back, used) = Frame::decode_wire(&wire).unwrap();
+        assert_eq!(used, wire.len(), "round {round}");
+        assert_eq!(back, frame, "round {round}");
+        // Trailing bytes after the frame are untouched, not consumed.
+        let mut extended = wire.clone();
+        extended.extend_from_slice(&[0xEE; 7]);
+        let (back2, used2) = Frame::decode_wire(&extended).unwrap();
+        assert_eq!((back2, used2), (frame, wire.len()), "round {round}");
+    }
+}
+
+/// Every strict prefix of a valid wire frame is a typed
+/// `PicoError::Transport` — truncation can never panic, hang, or
+/// silently decode.
+#[test]
+fn property_codec_truncation_is_always_typed() {
+    let mut rng = Rng::new(0x7256);
+    for round in 0..40 {
+        let wire = rand_frame(&mut rng).encode();
+        for cut in 0..wire.len() {
+            let err = Frame::decode_wire(&wire[..cut])
+                .expect_err(&format!("round {round}: prefix {cut}/{} decoded", wire.len()));
+            assert!(matches!(err, PicoError::Transport(_)), "round {round} cut {cut}: {err:?}");
+        }
+    }
+}
+
+/// Random single-byte corruption anywhere in the frame either decodes
+/// to *some* frame (the flip hit a payload byte) or fails typed; it
+/// must never panic. Oversized and undersized length prefixes are
+/// always typed errors.
+#[test]
+fn property_codec_corruption_never_panics() {
+    let mut rng = Rng::new(0xBADF00D);
+    for round in 0..150 {
+        let mut wire = rand_frame(&mut rng).encode();
+        let pos = rng.below(wire.len());
+        let flip = (rng.below(255) + 1) as u8;
+        wire[pos] ^= flip;
+        match Frame::decode_wire(&wire) {
+            Ok(_) => {}
+            Err(e) => assert!(matches!(e, PicoError::Transport(_)), "round {round}: {e:?}"),
+        }
+    }
+    // Hostile length prefixes: enormous (would allocate gigabytes if
+    // trusted) and zero. Both are typed rejections.
+    for prefix in [u32::MAX, (pico::net::MAX_FRAME_BYTES as u32) + 1, 0] {
+        let mut wire = prefix.to_le_bytes().to_vec();
+        wire.extend_from_slice(&[1, 2, 3]);
+        let err = Frame::decode_wire(&wire).expect_err("hostile prefix decoded");
+        assert!(matches!(err, PicoError::Transport(_)), "{err:?}");
+    }
+}

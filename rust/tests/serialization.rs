@@ -140,6 +140,7 @@ fn pico_error_display_and_matchability() {
         (PicoError::InvalidPlan("stage 0 has no devices".into()), "stage 0"),
         (PicoError::Unsupported("sync serve".into()), "sync serve"),
         (PicoError::Io { path: "/tmp/x".into(), msg: "denied".into() }, "/tmp/x"),
+        (PicoError::Transport("seq gap on r0 s0->s1".into()), "seq gap"),
         (PicoError::Internal("bug".into()), "bug"),
     ];
     for (err, needle) in cases {
@@ -157,6 +158,7 @@ fn pico_error_display_and_matchability() {
                 | PicoError::InvalidPlan(_)
                 | PicoError::Unsupported(_)
                 | PicoError::Io { .. }
+                | PicoError::Transport(_)
                 | PicoError::Internal(_)
         );
         assert!(matched);
