@@ -98,6 +98,60 @@ impl DriftScript {
     }
 }
 
+/// How a scripted serving failure behaves, from the recovery
+/// supervisor's point of view (the analytic mirror of
+/// [`crate::net::FaultAction`]: drop/delay/corrupt/disconnect all
+/// *present* as one of these two classes, and duplicates are absorbed
+/// by the receivers' dedup contract without interrupting anything).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailureKind {
+    /// The attempt dies but a bounded retry heals it: the supervisor
+    /// replays the in-flight requests on the same plan.
+    Transient,
+    /// The fault is confirmed as a device loss: the supervisor re-plans
+    /// on the shrunken membership and fails over (fill/drain swap).
+    DeviceDown,
+    /// A duplicated frame: receivers drop it by seq-number dedup; the
+    /// attempt is not interrupted at all.
+    Duplicated,
+}
+
+/// One scripted serving failure, indexed by *global dispatch order*:
+/// it strikes while request number `at_request` (0-based, counted
+/// across all attempts' completions) is in flight.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FailureEvent {
+    pub at_request: usize,
+    pub kind: FailureKind,
+}
+
+/// A deterministic failure schedule for the recovery loop — the
+/// membership/fault counterpart of [`DriftScript`], consumed by
+/// `sim::simulate_with_failures` and mirrored on the wire by
+/// [`crate::net::FaultScript`]. With unit batches, `at_request = r`
+/// corresponds to a wire fault on frame `r + 1` of a link (frame 0 is
+/// the handshake).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FailureScript {
+    pub events: Vec<FailureEvent>,
+}
+
+impl FailureScript {
+    /// No failures: recovery never engages.
+    pub fn none() -> FailureScript {
+        FailureScript::default()
+    }
+
+    /// A single failure.
+    pub fn one(at_request: usize, kind: FailureKind) -> FailureScript {
+        FailureScript { events: vec![FailureEvent { at_request, kind }] }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
 /// One round's observation of one pipeline stage: what the believed
 /// cluster predicted, what the (possibly drifted) cluster actually
 /// charged, and the engine's service-time telemetry.

@@ -32,3 +32,6 @@ pub use serve::{
     serve, serve_remote, serve_replicated, serve_replicated_with_profiles, Request, Response,
     ServeOptions, ServeReport, StageServiceMetrics,
 };
+pub(crate) use serve::{
+    aggregate_failures, finish_report, run_attempt, AttemptOutcome, ChainError, StageFailure,
+};

@@ -33,8 +33,8 @@ use crate::engine::{run_pipeline, summarize, EngineConfig, ServiceStats, StageCl
 use crate::error::PicoError;
 use crate::graph::{LayerId, ModelGraph};
 use crate::net::{
-    plan_hash, BatchMember, Endpoint, LinkId, LinkMetrics, LinkStats, Loopback, StageRx, StageTx,
-    Transport,
+    plan_hash, Barrier, BatchMember, Endpoint, LinkId, LinkMetrics, LinkStats, Loopback, StageRx,
+    StageTx, Transport,
 };
 use crate::pipeline::PipelinePlan;
 use crate::runtime::Tensor;
@@ -107,6 +107,12 @@ pub struct ServeReport {
     pub link_metrics: Vec<LinkMetrics>,
     /// Wall-clock seconds the run took on this host.
     pub wall_secs: f64,
+    /// Recovery telemetry: retries, replayed requests, membership
+    /// failovers, frames absorbed by the idempotent-re-send dedup
+    /// contract, secondary errors observed alongside a root cause, and
+    /// wall-clock downtime spent healing. All zeros on a clean
+    /// fail-fast run; populated by [`crate::recover`]'s supervisor.
+    pub recovery: crate::recover::RecoveryStats,
 }
 
 /// Count one message entering a channel; `recv` sides decrement
@@ -243,11 +249,8 @@ pub fn serve_remote(
     opts: &ServeOptions,
     transport: &dyn Transport,
 ) -> Result<ServeReport, PicoError> {
-    match serve_transport(g, plans, cluster, None, compute, requests, opts, transport) {
-        Ok(report) => Ok(report),
-        Err(ChainError::Typed(e)) => Err(e),
-        Err(ChainError::Other(e)) => Err(PicoError::Internal(format!("{e}"))),
-    }
+    serve_transport(g, plans, cluster, None, compute, requests, opts, transport)
+        .map_err(ChainError::into_pico)
 }
 
 /// Internal error channel of the serving chain: transport failures stay
@@ -279,6 +282,20 @@ impl ChainError {
             ChainError::Other(e) => e,
         }
     }
+
+    pub(crate) fn message(&self) -> String {
+        match self {
+            ChainError::Typed(e) => format!("{e}"),
+            ChainError::Other(e) => format!("{e}"),
+        }
+    }
+
+    pub(crate) fn into_pico(self) -> PicoError {
+        match self {
+            ChainError::Typed(e) => e,
+            ChainError::Other(e) => PicoError::Internal(format!("{e}")),
+        }
+    }
 }
 
 macro_rules! chain_ensure {
@@ -289,8 +306,78 @@ macro_rules! chain_ensure {
     };
 }
 
-/// The shared serving core: one engine pass, then per-replica worker
-/// chains handing batches across `transport` links.
+/// One thread's failure inside a serving attempt, attributed to the
+/// chain position that observed it. Failures come back in dependency
+/// order — feeder, stage workers upstream-first, then drainers — so the
+/// first entry is the root cause and later entries are usually the
+/// downstream cascade it triggered (a worker that errors drops its
+/// links, and every consumer behind them sees a mid-stream disconnect).
+#[derive(Debug)]
+pub(crate) struct StageFailure {
+    pub replica: usize,
+    /// Stage worker that observed the failure. A collector-link failure
+    /// is charged to the link's *sending* stage; `None` marks the
+    /// driver-local feeder thread (never a device-down candidate).
+    pub stage: Option<usize>,
+    pub error: ChainError,
+}
+
+/// Partial result of one serving attempt over a transport: everything
+/// that completed before a failure cascaded, plus every thread's error
+/// — the recovery supervisor's raw material. A clean attempt has an
+/// empty `failures` list and a complete `responses` set.
+pub(crate) struct AttemptOutcome {
+    /// Completed responses, sorted by request id (possibly a strict
+    /// subset of the admitted set when `failures` is non-empty).
+    pub responses: Vec<Response>,
+    /// (replica, request id) pairs the feeder actually dispatched: the
+    /// admission-journal source. `fed − completed` is the in-flight set
+    /// a replay must cover; never-fed requests are still queued.
+    pub fed_ids: Vec<(usize, u64)>,
+    pub failures: Vec<StageFailure>,
+    /// Frames skipped by receivers honoring the dedup contract.
+    pub duplicates_dropped: u64,
+    pub rejected: Vec<u64>,
+    pub n_served: usize,
+    pub stage_metrics: Vec<StageServiceMetrics>,
+    pub link_metrics: Vec<LinkMetrics>,
+    pub peak_resident_msgs: usize,
+}
+
+/// Collapse an attempt's failures into one error. The root cause (first
+/// in dependency order) carries the message; every concurrent secondary
+/// failure is counted and summarized in a suffix instead of being
+/// silently discarded (pre-recovery, the first error simply won and the
+/// rest vanished).
+pub(crate) fn aggregate_failures(mut failures: Vec<StageFailure>) -> ChainError {
+    if failures.is_empty() {
+        return ChainError::Other(anyhow::anyhow!("aggregate_failures called with no failures"));
+    }
+    let primary = failures.remove(0).error;
+    if failures.is_empty() {
+        return primary;
+    }
+    let extras: Vec<String> = failures.iter().map(|f| f.error.message()).collect();
+    let suffix = format!(
+        " (+{} concurrent failure{}: {})",
+        extras.len(),
+        if extras.len() == 1 { "" } else { "s" },
+        extras.join("; ")
+    );
+    match primary {
+        ChainError::Typed(PicoError::Transport(m)) => {
+            ChainError::Typed(PicoError::Transport(format!("{m}{suffix}")))
+        }
+        ChainError::Typed(PicoError::Internal(m)) => {
+            ChainError::Typed(PicoError::Internal(format!("{m}{suffix}")))
+        }
+        ChainError::Typed(e) => ChainError::Typed(e),
+        ChainError::Other(e) => ChainError::Other(anyhow::anyhow!("{e}{suffix}")),
+    }
+}
+
+/// The fail-fast serving core: one attempt, and any failure — with all
+/// its concurrent secondaries aggregated — is the result.
 #[allow(clippy::too_many_arguments)] // the serving axes plus the medium
 pub(crate) fn serve_transport(
     g: &ModelGraph,
@@ -302,6 +389,66 @@ pub(crate) fn serve_transport(
     opts: &ServeOptions,
     transport: &dyn Transport,
 ) -> Result<ServeReport, ChainError> {
+    let wall_start = Instant::now();
+    let out =
+        run_attempt(g, plans, cluster, timing, compute, requests, opts, transport, false, None)?;
+    if !out.failures.is_empty() {
+        return Err(aggregate_failures(out.failures));
+    }
+    Ok(finish_report(out, crate::recover::RecoveryStats::default(), wall_start))
+}
+
+/// Assemble a [`ServeReport`] from an outcome's responses + telemetry.
+/// Shared by the fail-fast path and the recovery supervisor (which
+/// hands in responses merged across attempts).
+pub(crate) fn finish_report(
+    out: AttemptOutcome,
+    recovery: crate::recover::RecoveryStats,
+    wall_start: Instant,
+) -> ServeReport {
+    let mut done: Vec<f64> = out.responses.iter().map(|r| r.t_done).collect();
+    done.sort_by(f64::total_cmp);
+    let latencies: Vec<f64> = out.responses.iter().map(|r| r.latency).collect();
+    let m = summarize(&done, &latencies);
+    ServeReport {
+        responses: out.responses,
+        makespan: m.makespan,
+        period: m.period,
+        throughput: m.throughput,
+        mean_latency: m.mean_latency,
+        p50_latency: m.p50_latency,
+        p95_latency: m.p95_latency,
+        rejected: out.rejected,
+        stage_metrics: out.stage_metrics,
+        peak_resident_msgs: out.peak_resident_msgs,
+        link_metrics: out.link_metrics,
+        wall_secs: wall_start.elapsed().as_secs_f64(),
+        recovery,
+    }
+}
+
+/// One serving attempt: one engine pass, then per-replica worker chains
+/// handing batches across `transport` links. Runtime failures do NOT
+/// abort the result — every completed response and every thread's error
+/// is collected into the outcome (only setup/validation problems return
+/// `Err`). `dedup` opts receivers into the idempotent re-send contract;
+/// `swap = (old_epoch, new_epoch)` makes every sender announce a
+/// `Drain(old)` + `Swap(new)` barrier pair right after its handshake —
+/// the wire form of the fill/drain plan swap, set by the recovery
+/// supervisor on the first attempt after a membership re-plan.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_attempt(
+    g: &ModelGraph,
+    plans: &[PipelinePlan],
+    cluster: &Cluster,
+    timing: Option<&[Vec<StageProfile>]>,
+    compute: &dyn Compute,
+    requests: Vec<Request>,
+    opts: &ServeOptions,
+    transport: &dyn Transport,
+    dedup: bool,
+    swap: Option<(u64, u64)>,
+) -> Result<AttemptOutcome, ChainError> {
     chain_ensure!(!plans.is_empty(), "no pipeline replicas");
     // Replicas must own disjoint devices: overlapping plans would
     // double-book a device's virtual time and report physically
@@ -323,7 +470,6 @@ pub(crate) fn serve_transport(
             }
         }
     }
-    let wall_start = Instant::now();
 
     // Per-replica stage profiles from the Eq. 7-11 cost model — the
     // exact inputs the simulator hands the engine. These are the
@@ -427,7 +573,7 @@ pub(crate) fn serve_transport(
             let stats = Arc::new(LinkStats::default());
             link_stats.push((id, stats.clone()));
             txs.push(StageTx::new(id, tx, stats));
-            rxs.push(StageRx::new(id, rx));
+            rxs.push(if dedup { StageRx::new_dedup(id, rx) } else { StageRx::new(id, rx) });
         }
         let mut txs = txs.into_iter();
         let mut rxs = rxs.into_iter();
@@ -437,13 +583,14 @@ pub(crate) fn serve_transport(
         drain_rxs.push(rxs.next().expect("collector link"));
     }
 
-    std::thread::scope(|scope| -> Result<ServeReport, ChainError> {
+    std::thread::scope(|scope| -> Result<AttemptOutcome, ChainError> {
         let resident = &resident;
         let peak_resident = &peak_resident;
         // All replicas' drainers feed one in-process merge channel: the
         // collector itself is local even when the stage hops are not.
         let (merge_tx, merge_rx) = mpsc::sync_channel::<(f64, Vec<BatchMember>)>(chan_cap);
         let mut handles = Vec::new();
+        let mut handle_meta: Vec<(usize, usize)> = Vec::new();
         for ((ri, plan), ends) in plans.iter().enumerate().zip(stage_ends) {
             for ((si, stage), (mut rx, mut tx)) in plan.stages.iter().enumerate().zip(ends) {
                 let devs: Vec<&crate::cluster::Device> =
@@ -459,8 +606,13 @@ pub(crate) fn serve_transport(
                     .collect();
                 let profile = profiles[ri][si];
                 let live = live_after[ri][si].clone();
-                handles.push(scope.spawn(move || -> Result<(), ChainError> {
+                handle_meta.push((ri, si));
+                handles.push(scope.spawn(move || -> Result<u64, ChainError> {
                     tx.hello(hash)?;
+                    if let Some((old, new)) = swap {
+                        tx.send_control(Barrier::Drain, old)?;
+                        tx.send_control(Barrier::Swap, new)?;
+                    }
                     rx.expect_hello(hash)?;
                     let mut clock = StageClock::default();
                     while let Some((t_ready, members)) = rx.recv_batch()? {
@@ -548,7 +700,7 @@ pub(crate) fn serve_transport(
                         }
                     }
                     tx.finish();
-                    Ok(())
+                    Ok(rx.duplicates_dropped())
                 }));
             }
         }
@@ -561,7 +713,7 @@ pub(crate) fn serve_transport(
         let mut drainer_handles = Vec::new();
         for mut rx in drain_rxs {
             let merge = merge_tx.clone();
-            drainer_handles.push(scope.spawn(move || -> Result<(), ChainError> {
+            drainer_handles.push(scope.spawn(move || -> Result<u64, ChainError> {
                 rx.expect_hello(hash)?;
                 while let Some((t_ready, members)) = rx.recv_batch()? {
                     resident.fetch_sub(1, Ordering::Relaxed);
@@ -569,7 +721,7 @@ pub(crate) fn serve_transport(
                         break;
                     }
                 }
-                Ok(())
+                Ok(rx.duplicates_dropped())
             }));
         }
         drop(merge_tx);
@@ -580,9 +732,20 @@ pub(crate) fn serve_transport(
         // blocks whenever the pipeline is full, and the collector below
         // must already be draining or the whole scope would deadlock.
         let batches = schedule.batches;
-        let feeder = scope.spawn(move || -> Result<(), ChainError> {
-            for ftx in feeder_txs.iter_mut() {
-                ftx.hello(hash)?;
+        let feeder = scope.spawn(move || -> (Vec<(usize, u64)>, Option<(usize, ChainError)>) {
+            let mut fed: Vec<(usize, u64)> = Vec::new();
+            for (ri, ftx) in feeder_txs.iter_mut().enumerate() {
+                let mut shake = || -> Result<(), PicoError> {
+                    ftx.hello(hash)?;
+                    if let Some((old, new)) = swap {
+                        ftx.send_control(Barrier::Drain, old)?;
+                        ftx.send_control(Barrier::Swap, new)?;
+                    }
+                    Ok(())
+                };
+                if let Err(e) = shake() {
+                    return (fed, Some((ri, e.into())));
+                }
             }
             for bp in &batches {
                 let mut members = Vec::with_capacity(bp.members.len());
@@ -594,15 +757,18 @@ pub(crate) fn serve_transport(
                         live: vec![(0usize, Arc::new(r.input))],
                     });
                 }
+                let ids: Vec<u64> = members.iter().map(|m| m.id).collect();
                 depth_inc(resident, peak_resident);
-                if !feeder_txs[bp.replica].send_batch(bp.admitted, members)? {
-                    break;
+                match feeder_txs[bp.replica].send_batch(bp.admitted, members) {
+                    Ok(true) => fed.extend(ids.into_iter().map(|id| (bp.replica, id))),
+                    Ok(false) => break,
+                    Err(e) => return (fed, Some((bp.replica, e.into()))),
                 }
             }
             for ftx in feeder_txs.iter_mut() {
                 ftx.finish();
             }
-            Ok(())
+            (fed, None)
         });
 
         // Collect.
@@ -622,39 +788,60 @@ pub(crate) fn serve_transport(
             }
         }
         // Join BEFORE the completeness check so an error surfaces as
-        // itself, not as "lost responses" — and in dependency order
+        // itself, not as "lost responses" — in dependency order
         // (feeder, then workers upstream-first, then drainers) so the
-        // root cause wins over the downstream disconnects it causes.
-        let mut results: Vec<Result<(), ChainError>> = Vec::new();
-        results.push(
-            feeder
-                .join()
-                .map_err(|_| ChainError::Other(anyhow::anyhow!("feeder panicked")))
-                .and_then(|r| r),
-        );
-        for h in handles {
-            results.push(
-                h.join()
-                    .map_err(|_| ChainError::Other(anyhow::anyhow!("stage worker panicked")))
-                    .and_then(|r| r),
-            );
+        // root cause lands first — and COLLECT every failure instead of
+        // short-circuiting: the downstream cascade stays visible to the
+        // recovery supervisor and the aggregated error message instead
+        // of being silently masked by the first error.
+        let mut failures: Vec<StageFailure> = Vec::new();
+        let mut duplicates_dropped = 0u64;
+        let (fed_ids, feeder_err) = match feeder.join() {
+            Ok(v) => v,
+            Err(_) => {
+                (Vec::new(), Some((0, ChainError::Other(anyhow::anyhow!("feeder panicked")))))
+            }
+        };
+        if let Some((ri, e)) = feeder_err {
+            failures.push(StageFailure { replica: ri, stage: None, error: e });
         }
-        for h in drainer_handles {
-            results.push(
-                h.join()
-                    .map_err(|_| ChainError::Other(anyhow::anyhow!("drainer panicked")))
-                    .and_then(|r| r),
-            );
+        for ((ri, si), h) in handle_meta.into_iter().zip(handles) {
+            match h.join() {
+                Ok(Ok(d)) => duplicates_dropped += d,
+                Ok(Err(e)) => {
+                    failures.push(StageFailure { replica: ri, stage: Some(si), error: e });
+                }
+                Err(_) => failures.push(StageFailure {
+                    replica: ri,
+                    stage: Some(si),
+                    error: ChainError::Other(anyhow::anyhow!("stage worker panicked")),
+                }),
+            }
         }
-        for r in results {
-            r?;
+        for (ri, h) in drainer_handles.into_iter().enumerate() {
+            // A collector-link failure is charged to the link's sending
+            // stage (the last real device of the replica's chain).
+            let last = plans[ri].stages.len().saturating_sub(1);
+            match h.join() {
+                Ok(Ok(d)) => duplicates_dropped += d,
+                Ok(Err(e)) => {
+                    failures.push(StageFailure { replica: ri, stage: Some(last), error: e });
+                }
+                Err(_) => failures.push(StageFailure {
+                    replica: ri,
+                    stage: Some(last),
+                    error: ChainError::Other(anyhow::anyhow!("drainer panicked")),
+                }),
+            }
         }
         responses.sort_by_key(|r| r.id);
-        chain_ensure!(
-            responses.len() == n_served,
-            "lost responses: {} of {n_served}",
-            responses.len()
-        );
+        if failures.is_empty() {
+            chain_ensure!(
+                responses.len() == n_served,
+                "lost responses: {} of {n_served}",
+                responses.len()
+            );
+        }
 
         let link_metrics: Vec<LinkMetrics> = link_stats
             .iter()
@@ -667,23 +854,16 @@ pub(crate) fn serve_transport(
                 send_secs: s.send_nanos.load(Ordering::Relaxed) as f64 / 1e9,
             })
             .collect();
-        let mut done: Vec<f64> = responses.iter().map(|r| r.t_done).collect();
-        done.sort_by(f64::total_cmp);
-        let latencies: Vec<f64> = responses.iter().map(|r| r.latency).collect();
-        let m = summarize(&done, &latencies);
-        Ok(ServeReport {
+        Ok(AttemptOutcome {
             responses,
-            makespan: m.makespan,
-            period: m.period,
-            throughput: m.throughput,
-            mean_latency: m.mean_latency,
-            p50_latency: m.p50_latency,
-            p95_latency: m.p95_latency,
+            fed_ids,
+            failures,
+            duplicates_dropped,
             rejected,
+            n_served,
             stage_metrics,
-            peak_resident_msgs: peak_resident.load(Ordering::Relaxed),
             link_metrics,
-            wall_secs: wall_start.elapsed().as_secs_f64(),
+            peak_resident_msgs: peak_resident.load(Ordering::Relaxed),
         })
     })
 }

@@ -165,6 +165,14 @@ pub struct RemoteConfig {
     /// surfaces as a typed [`PicoError::Transport`] within this bound
     /// instead of hanging the chain. Default 30 s.
     pub deadline: Option<Duration>,
+    /// Fault-tolerance policy. Disabled by default (fail-fast: the
+    /// first typed transport error aborts the run). When
+    /// `recovery.enabled` is set, [`DeploymentPlan::serve_remote`] runs
+    /// the chain under the [`crate::recover`] supervisor: transient
+    /// faults are retried with seeded backoff and idempotent replay,
+    /// and confirmed device loss triggers a membership re-plan onto the
+    /// survivors through this deployment's own `PlanContext`.
+    pub recovery: crate::recover::RecoveryConfig,
 }
 
 impl Default for RemoteConfig {
@@ -172,6 +180,7 @@ impl Default for RemoteConfig {
         RemoteConfig {
             transport: RemoteTransport::Loopback,
             deadline: Some(Duration::from_secs(30)),
+            recovery: crate::recover::RecoveryConfig::default(),
         }
     }
 }
@@ -592,6 +601,33 @@ impl DeploymentPlan {
         self.validate_pipelined_serving()?;
         let requests = self.requests_for(backend, cfg);
         let compute = self.make_compute(backend)?;
+        if remote.recovery.enabled {
+            let mut rp = self.membership_replanner();
+            return match remote.transport {
+                RemoteTransport::Loopback => crate::recover::serve_with_recovery(
+                    &self.graph,
+                    &self.replicas,
+                    &self.cluster,
+                    compute.as_ref(),
+                    requests,
+                    &cfg.engine,
+                    &net::Loopback { deadline: remote.deadline },
+                    &remote.recovery,
+                    Some(&mut rp),
+                ),
+                RemoteTransport::Tcp => crate::recover::serve_with_recovery(
+                    &self.graph,
+                    &self.replicas,
+                    &self.cluster,
+                    compute.as_ref(),
+                    requests,
+                    &cfg.engine,
+                    &net::TcpTransport::new(remote.deadline)?,
+                    &remote.recovery,
+                    Some(&mut rp),
+                ),
+            };
+        }
         match remote.transport {
             RemoteTransport::Loopback => coordinator::serve_remote(
                 &self.graph,
@@ -611,6 +647,52 @@ impl DeploymentPlan {
                 &cfg.engine,
                 &net::TcpTransport::new(remote.deadline)?,
             ),
+        }
+    }
+
+    /// Membership re-planner handed to the recovery supervisor: given
+    /// the dead device set, re-run Algorithm 2–3 on the survivor
+    /// subcluster through a fresh `PlanContext` over this deployment's
+    /// recorded `diameter`/`dc_parts`/`t_lim`, then remap stage device
+    /// slots back to original cluster indices. Replicas collapse to a
+    /// single pipeline on failover — with devices lost there is less
+    /// capacity to split, and one survivor pipeline keeps the drain/swap
+    /// barrier bookkeeping exact; a later churn-aware policy can
+    /// re-expand.
+    fn membership_replanner(
+        &self,
+    ) -> impl FnMut(&[usize]) -> Result<Vec<PipelinePlan>, PicoError> + '_ {
+        let ctx = PlanContext::new(&self.graph);
+        let t_lim = self.t_lim.unwrap_or(f64::INFINITY);
+        move |dead: &[usize]| -> Result<Vec<PipelinePlan>, PicoError> {
+            let survivors: Vec<usize> =
+                (0..self.cluster.len()).filter(|d| !dead.contains(d)).collect();
+            if survivors.is_empty() {
+                return Err(PicoError::InvalidPlan(
+                    "every device in the cluster is down; nothing to re-plan onto".into(),
+                ));
+            }
+            let sub = Cluster::new(
+                survivors.iter().map(|&i| self.cluster.devices[i].clone()).collect(),
+                self.cluster.network,
+            );
+            let pieces = ctx.pieces(self.diameter, self.dc_parts, None)?;
+            let meta = ctx.meta(self.diameter, self.dc_parts, &pieces);
+            let (mut plan, stats) =
+                crate::pipeline::plan_with_meta(&self.graph, &pieces, &meta, &sub, t_lim)
+                    .map_err(|e| {
+                        PicoError::InvalidPlan(format!(
+                            "re-plan on the {}-device survivor cluster failed: {e}",
+                            sub.len()
+                        ))
+                    })?;
+            ctx.note_dp(&stats);
+            for s in &mut plan.stages {
+                for d in &mut s.devices {
+                    *d = survivors[*d];
+                }
+            }
+            Ok(vec![plan])
         }
     }
 

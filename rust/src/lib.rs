@@ -36,11 +36,12 @@
 //!   ([`sim`]), the threaded serving [`coordinator`] that executes
 //!   real tensors through AOT artifacts ([`runtime`]), the transport
 //!   layer ([`net`]) carrying inter-stage handoff over framed links
-//!   (loopback or TCP, with scripted fault injection), the open-loop
-//!   load harness ([`load`]) that stress-tests a deployment under
-//!   production-style arrival streams, and the concurrency model
-//!   checker ([`check`]) that exhaustively verifies the load layer's
-//!   lock-free protocols.
+//!   (loopback or TCP, with scripted fault injection), the recovery
+//!   supervisor ([`recover`]) that heals transport faults and re-plans
+//!   around device loss, the open-loop load harness ([`load`]) that
+//!   stress-tests a deployment under production-style arrival streams,
+//!   and the concurrency model checker ([`check`]) that exhaustively
+//!   verifies the load layer's lock-free protocols.
 //! * **L2 (python/compile)** — jax model definitions lowered once to HLO
 //!   text (`make artifacts`); never on the request path.
 //! * **L1 (python/compile/kernels)** — Pallas conv/pool/dense kernels
@@ -120,6 +121,34 @@
 //! (`rust/tests/net.rs`, codec property tests in
 //! `rust/tests/property.rs`).
 //!
+//! ## Failure model: transient faults, device loss, exactly-once
+//!
+//! [`recover`] turns those typed faults into healing instead of
+//! fail-fast. The model has two failure classes. A **transient** fault
+//! (dropped/delayed/corrupted frame, mid-stream disconnect that a fresh
+//! connection survives) gets a bounded retry with seeded-jitter
+//! exponential backoff ([`recover::Backoff`] — deterministic per seed,
+//! capped). A **device-down** event — consecutive strikes on one
+//! (replica, stage) or a failed [`net::Barrier::Ping`] heartbeat
+//! probe — is *membership* drift: the supervisor hands the dead device
+//! set to a [`pipeline::PlanContext`]-backed re-planner, validates the
+//! survivors-only plan, and fails over with a `Drain(old epoch)` /
+//! `Swap(new epoch)` barrier pair on every link (the fill/drain-
+//! overlapped swap). Replay is **idempotent** by the per-link dedup
+//! contract: retry receivers skip already-seen sequence numbers (a
+//! counted no-op, never a re-execution), so the only at-most-once
+//! mechanism needed is the sequence number the wire already carries.
+//! The replay source is the per-replica [`recover::AdmissionJournal`] —
+//! a ring of fed-but-uncompleted requests bounded by the serving
+//! chain's channel depth, so journal memory can never outgrow what the
+//! pipeline physically holds in flight; admission sheds (never hangs)
+//! while capacity is degraded. The analytic twin
+//! [`sim::simulate_with_failures`], driven by the request-indexed
+//! [`adapt::FailureScript`], shares the counting kernel
+//! [`recover::attempt_outline`] with the threaded path and must agree
+//! on admitted/completed counts and every recovery counter
+//! (`rust/tests/recovery.rs`).
+//!
 //! ## Open-loop serving at scale
 //!
 //! [`load`] is the closed-loop engine's production-traffic counterpart:
@@ -176,6 +205,7 @@ pub mod modelzoo;
 pub mod net;
 pub mod partition;
 pub mod pipeline;
+pub mod recover;
 pub mod runtime;
 pub mod sim;
 pub mod util;

@@ -20,7 +20,17 @@
 //!   in `rust/tests/property.rs`.
 //! * [`FaultAction::Disconnect`] — the link dies mid-stream without a
 //!   close frame.
+//!
+//! Fault state is **per link identity, not per connection**: the frame
+//! counter and the fired/not-fired status of every event persist across
+//! `link()` calls on the same [`LinkId`]. A recovery retry that
+//! re-establishes a link therefore continues the frame count and never
+//! replays an already-consumed fault — scripted faults are genuinely
+//! *transient* (one-shot), which is what the recovery layer's
+//! bounded-retry contract assumes of the real world.
 
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use super::frame::{Frame, LinkId};
@@ -73,11 +83,27 @@ impl FaultScript {
     }
 }
 
+/// Frame counter + fired events for one link identity, shared across
+/// every connection ever opened on it (see the module docs).
+#[derive(Debug, Default)]
+struct LinkFaultState {
+    frame: u64,
+    /// Indices into the script's event list that already fired.
+    consumed: Vec<usize>,
+}
+
 /// A [`Transport`] decorator injecting the scripted faults.
 #[derive(Debug)]
 pub struct FaultyTransport<T> {
-    pub inner: T,
-    pub script: FaultScript,
+    inner: T,
+    script: FaultScript,
+    state: Arc<Mutex<HashMap<LinkId, LinkFaultState>>>,
+}
+
+impl<T> FaultyTransport<T> {
+    pub fn new(inner: T, script: FaultScript) -> FaultyTransport<T> {
+        FaultyTransport { inner, script, state: Arc::new(Mutex::new(HashMap::new())) }
+    }
 }
 
 impl<T: Transport> Transport for FaultyTransport<T> {
@@ -87,22 +113,33 @@ impl<T: Transport> Transport for FaultyTransport<T> {
         capacity: usize,
     ) -> Result<(Box<dyn LinkTx>, Box<dyn LinkRx>), PicoError> {
         let (tx, rx) = self.inner.link(id, capacity)?;
-        let events: Vec<(u64, FaultAction)> = self
+        let events: Vec<(usize, u64, FaultAction)> = self
             .script
             .events
             .iter()
-            .filter(|e| e.link == *id)
-            .map(|e| (e.at_frame, e.action.clone()))
+            .enumerate()
+            .filter(|(_, e)| e.link == *id)
+            .map(|(i, e)| (i, e.at_frame, e.action.clone()))
             .collect();
-        Ok((Box::new(FaultyTx { inner: Some(tx), events, frame: 0 }), rx))
+        Ok((
+            Box::new(FaultyTx {
+                inner: Some(tx),
+                events,
+                id: *id,
+                state: Arc::clone(&self.state),
+            }),
+            rx,
+        ))
     }
 }
 
 struct FaultyTx {
-    /// `None` after a scripted disconnect.
+    /// `None` after a scripted disconnect (connection-local: a fresh
+    /// `link()` call gets a live connection again).
     inner: Option<Box<dyn LinkTx>>,
-    events: Vec<(u64, FaultAction)>,
-    frame: u64,
+    events: Vec<(usize, u64, FaultAction)>,
+    id: LinkId,
+    state: Arc<Mutex<HashMap<LinkId, LinkFaultState>>>,
 }
 
 fn corrupt(frame: Frame) -> Frame {
@@ -123,9 +160,19 @@ fn corrupt(frame: Frame) -> Frame {
 
 impl LinkTx for FaultyTx {
     fn send(&mut self, frame: Frame) -> Result<SendOutcome, PicoError> {
-        let idx = self.frame;
-        self.frame += 1;
-        let action = self.events.iter().find(|(at, _)| *at == idx).map(|(_, a)| a.clone());
+        let action = {
+            let mut map = self.state.lock().unwrap();
+            let st = map.entry(self.id).or_default();
+            let idx = st.frame;
+            st.frame += 1;
+            match self.events.iter().find(|(i, at, _)| *at == idx && !st.consumed.contains(i)) {
+                Some((i, _, a)) => {
+                    st.consumed.push(*i);
+                    Some(a.clone())
+                }
+                None => None,
+            }
+        };
         let Some(inner) = self.inner.as_mut() else {
             return Ok(SendOutcome::PeerClosed);
         };
@@ -160,10 +207,8 @@ mod tests {
 
     #[test]
     fn drop_swallows_exactly_the_targeted_frame() {
-        let t = FaultyTransport {
-            inner: Loopback::default(),
-            script: FaultScript::one(id(), 1, FaultAction::Drop),
-        };
+        let script = FaultScript::one(id(), 1, FaultAction::Drop);
+        let t = FaultyTransport::new(Loopback::default(), script);
         let (mut tx, mut rx) = t.link(&id(), 8).unwrap();
         for seq in 0..3 {
             tx.send(Frame::Close { seq }).unwrap();
@@ -179,15 +224,15 @@ mod tests {
 
     #[test]
     fn duplicate_and_corrupt_rewrite_the_stream() {
-        let t = FaultyTransport {
-            inner: Loopback::default(),
-            script: FaultScript {
+        let t = FaultyTransport::new(
+            Loopback::default(),
+            FaultScript {
                 events: vec![
                     FaultEvent { link: id(), at_frame: 0, action: FaultAction::Duplicate },
                     FaultEvent { link: id(), at_frame: 2, action: FaultAction::Corrupt },
                 ],
             },
-        };
+        );
         let (mut tx, mut rx) = t.link(&id(), 8).unwrap();
         tx.send(Frame::Close { seq: 0 }).unwrap();
         tx.send(Frame::Close { seq: 1 }).unwrap();
@@ -203,10 +248,8 @@ mod tests {
 
     #[test]
     fn disconnect_kills_the_link_mid_stream() {
-        let t = FaultyTransport {
-            inner: Loopback::default(),
-            script: FaultScript::one(id(), 1, FaultAction::Disconnect),
-        };
+        let script = FaultScript::one(id(), 1, FaultAction::Disconnect);
+        let t = FaultyTransport::new(Loopback::default(), script);
         let (mut tx, mut rx) = t.link(&id(), 8).unwrap();
         assert_eq!(tx.send(Frame::Close { seq: 0 }).unwrap(), SendOutcome::Sent);
         assert_eq!(tx.send(Frame::Close { seq: 1 }).unwrap(), SendOutcome::PeerClosed);
@@ -221,12 +264,35 @@ mod tests {
     #[test]
     fn faults_only_touch_their_own_link() {
         let other = LinkId { replica: 1, ..id() };
-        let t = FaultyTransport {
-            inner: Loopback::default(),
-            script: FaultScript::one(other, 0, FaultAction::Drop),
-        };
+        let script = FaultScript::one(other, 0, FaultAction::Drop);
+        let t = FaultyTransport::new(Loopback::default(), script);
         let (mut tx, mut rx) = t.link(&id(), 8).unwrap();
         tx.send(Frame::Close { seq: 0 }).unwrap();
         assert!(matches!(rx.recv().unwrap(), Received::Frame(Frame::Close { seq: 0 })));
+    }
+
+    #[test]
+    fn fault_state_persists_across_reconnects_and_events_fire_once() {
+        // Disconnect at frame 1, then reconnect: the fresh connection
+        // must be live (the fault was transient) and the frame counter
+        // must continue — the consumed event never re-fires.
+        let script = FaultScript::one(id(), 1, FaultAction::Disconnect);
+        let t = FaultyTransport::new(Loopback::default(), script);
+        let (mut tx, mut rx) = t.link(&id(), 8).unwrap();
+        assert_eq!(tx.send(Frame::Close { seq: 0 }).unwrap(), SendOutcome::Sent);
+        assert_eq!(tx.send(Frame::Close { seq: 1 }).unwrap(), SendOutcome::PeerClosed);
+        assert!(matches!(rx.recv().unwrap(), Received::Frame(Frame::Close { seq: 0 })));
+        assert!(matches!(rx.recv().unwrap(), Received::Closed));
+
+        let (mut tx2, mut rx2) = t.link(&id(), 8).unwrap();
+        for seq in 0..3 {
+            assert_eq!(tx2.send(Frame::Close { seq }).unwrap(), SendOutcome::Sent, "seq {seq}");
+        }
+        for seq in 0..3 {
+            match rx2.recv().unwrap() {
+                Received::Frame(Frame::Close { seq: got }) => assert_eq!(got, seq),
+                other => panic!("{other:?}"),
+            }
+        }
     }
 }

@@ -11,7 +11,7 @@
 //!                  member  = id u64 | t_submit f64 | k u32 | k x feature
 //!                  feature = layer u64 | ndims u8 | ndims x dim u32
 //!                            | elems u32 | elems x f32
-//! kind 3  Control  seq u64 | barrier u8 (0 drain / 1 swap) | epoch u64
+//! kind 3  Control  seq u64 | barrier u8 (0 drain / 1 swap / 2 ping) | epoch u64
 //! kind 4  Close    seq u64
 //! ```
 //!
@@ -39,7 +39,9 @@ use crate::graph::LayerId;
 use crate::runtime::Tensor;
 
 /// Wire protocol version carried (and checked) by every handshake.
-pub const WIRE_VERSION: u16 = 1;
+/// v2 added the `Ping` barrier code (2) — a v1 reader would reject it
+/// as an unknown barrier, so the version was bumped per the rule below.
+pub const WIRE_VERSION: u16 = 2;
 
 /// Hard cap on a single frame's payload bytes. Generous: the largest
 /// zoo feature (vgg16 input, 3x224x224 f32) is ~0.6 MB per member, so
@@ -53,7 +55,7 @@ const MIN_MEMBER_BYTES: usize = 8 + 8 + 4;
 const MIN_FEATURE_BYTES: usize = 8 + 1 + 4;
 
 /// One endpoint of an inter-stage link.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Endpoint {
     /// The request feeder (upstream of stage 0).
     Feeder,
@@ -93,7 +95,7 @@ impl std::fmt::Display for Endpoint {
 }
 
 /// Identity of one directed link in a replica's stage chain.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct LinkId {
     pub replica: u32,
     pub from: Endpoint,
@@ -129,11 +131,16 @@ pub struct BatchMember {
 }
 
 /// Barrier kind for control frames (drain/swap coordination — the plan
-/// hot-swap protocol's wire form).
+/// hot-swap protocol's wire form — plus the recovery layer's liveness
+/// probe).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Barrier {
     Drain,
     Swap,
+    /// Heartbeat: carries no data, only proves the link (and the peer
+    /// behind it) is still alive. Receivers treat it like any other
+    /// control frame — seq-checked, then skipped.
+    Ping,
 }
 
 /// Everything that can travel over a link. `seq` numbers (per link,
@@ -234,6 +241,7 @@ impl Frame {
                 buf.push(match barrier {
                     Barrier::Drain => 0,
                     Barrier::Swap => 1,
+                    Barrier::Ping => 2,
                 });
                 buf.extend_from_slice(&epoch.to_le_bytes());
             }
@@ -321,6 +329,7 @@ impl Frame {
                 let barrier = match r.u8()? {
                     0 => Barrier::Drain,
                     1 => Barrier::Swap,
+                    2 => Barrier::Ping,
                     b => {
                         return Err(PicoError::Transport(format!("unknown barrier code {b}")));
                     }
@@ -469,7 +478,8 @@ mod tests {
             sample_batch(),
             Frame::Control { seq: 1, barrier: Barrier::Drain, epoch: 9 },
             Frame::Control { seq: 2, barrier: Barrier::Swap, epoch: 10 },
-            Frame::Close { seq: 3 },
+            Frame::Control { seq: 3, barrier: Barrier::Ping, epoch: 0 },
+            Frame::Close { seq: 4 },
         ];
         for f in frames {
             let wire = f.encode();

@@ -35,6 +35,16 @@
 //! mid-stream-disconnect error. Receive deadlines bound every wait, so
 //! a stalled peer becomes a typed timeout, never a hang.
 //!
+//! **Idempotent re-send (the recovery dedup contract):** a receiver
+//! built with [`StageRx::new_dedup`] treats an *already-seen* sequence
+//! number (`seq < expected`) as a retransmit — the frame is counted in
+//! [`StageRx::duplicates_dropped`] and skipped, never re-delivered, so
+//! a sender may safely re-send after an ambiguous failure and
+//! `Duplicate` faults become no-ops by construction. A sequence *gap*
+//! (`seq > expected`) stays fatal in both modes: dedup makes re-sends
+//! idempotent, it never papers over loss. The fail-fast [`StageRx::new`]
+//! default is unchanged.
+//!
 //! Every [`StageTx`] records frames sent, wire bytes moved (computed
 //! from the codec even when a loopback link skips serialization) and
 //! observed send time into a shared [`LinkStats`]; the serving
@@ -269,15 +279,39 @@ pub struct StageRx {
     id: LinkId,
     inner: Box<dyn LinkRx>,
     next_seq: u64,
+    /// When set, an already-seen sequence number is a skipped
+    /// retransmit instead of a fatal protocol violation (see the
+    /// module-level dedup contract). Gaps stay fatal either way.
+    dedup: bool,
+    duplicates: u64,
 }
 
 impl StageRx {
     pub fn new(id: LinkId, inner: Box<dyn LinkRx>) -> StageRx {
-        StageRx { id, inner, next_seq: 0 }
+        StageRx { id, inner, next_seq: 0, dedup: false, duplicates: 0 }
     }
 
-    fn check_seq(&mut self, seq: u64, kind: &str) -> Result<(), PicoError> {
+    /// A receiver honoring the idempotent re-send contract: duplicate
+    /// sequence numbers are dropped (and counted), not fatal.
+    pub fn new_dedup(id: LinkId, inner: Box<dyn LinkRx>) -> StageRx {
+        StageRx { dedup: true, ..StageRx::new(id, inner) }
+    }
+
+    /// Retransmitted frames dropped by the dedup contract so far
+    /// (always 0 for a fail-fast receiver).
+    pub fn duplicates_dropped(&self) -> u64 {
+        self.duplicates
+    }
+
+    /// Returns `Ok(true)` for a fresh in-sequence frame, `Ok(false)`
+    /// for a dedup-dropped retransmit, and a typed error for a gap (or
+    /// any mismatch when dedup is off).
+    fn check_seq(&mut self, seq: u64, kind: &str) -> Result<bool, PicoError> {
         if seq != self.next_seq {
+            if self.dedup && seq < self.next_seq {
+                self.duplicates += 1;
+                return Ok(false);
+            }
             return Err(PicoError::Transport(format!(
                 "link {}: {kind} frame seq {seq}, expected {} (a frame was dropped, duplicated \
                  or reordered)",
@@ -285,7 +319,7 @@ impl StageRx {
             )));
         }
         self.next_seq += 1;
-        Ok(())
+        Ok(true)
     }
 
     /// Verify the peer's handshake: first frame, exact wire version
@@ -348,15 +382,17 @@ impl StageRx {
                     )));
                 }
                 Received::Frame(Frame::Batch { seq, t_ready, members }) => {
-                    self.check_seq(seq, "batch")?;
-                    return Ok(Some((t_ready, members)));
+                    if self.check_seq(seq, "batch")? {
+                        return Ok(Some((t_ready, members)));
+                    }
                 }
                 Received::Frame(Frame::Control { seq, .. }) => {
                     self.check_seq(seq, "control")?;
                 }
                 Received::Frame(Frame::Close { seq }) => {
-                    self.check_seq(seq, "close")?;
-                    return Ok(None);
+                    if self.check_seq(seq, "close")? {
+                        return Ok(None);
+                    }
                 }
             }
         }
@@ -468,6 +504,23 @@ mod tests {
         drop(tx);
         let err = StageRx::new(id, rx).recv_batch().unwrap_err();
         assert!(format!("{err}").contains("without a close"), "{err}");
+    }
+
+    #[test]
+    fn dedup_receiver_skips_retransmits_but_not_gaps() {
+        let t = Loopback::default();
+        let id = link_id();
+        let (mut tx, rx) = t.link(&id, 8).unwrap();
+        tx.send(Frame::Batch { seq: 0, t_ready: 0.0, members: vec![member(1)] }).unwrap();
+        tx.send(Frame::Batch { seq: 0, t_ready: 0.0, members: vec![member(1)] }).unwrap();
+        tx.send(Frame::Batch { seq: 1, t_ready: 0.0, members: vec![member(2)] }).unwrap();
+        tx.send(Frame::Batch { seq: 3, t_ready: 0.0, members: vec![] }).unwrap();
+        let mut srx = StageRx::new_dedup(id, rx);
+        assert_eq!(srx.recv_batch().unwrap().expect("batch").1[0].id, 1);
+        assert_eq!(srx.recv_batch().unwrap().expect("batch").1[0].id, 2);
+        assert_eq!(srx.duplicates_dropped(), 1, "the retransmit is counted, not re-delivered");
+        let err = srx.recv_batch().unwrap_err();
+        assert!(format!("{err}").contains("dropped, duplicated"), "gaps stay fatal: {err}");
     }
 
     #[test]

@@ -1,0 +1,642 @@
+//! Supervision and recovery for the transport serving path (the
+//! fault-tolerance layer over [`crate::coordinator::serve_remote`]).
+//!
+//! PR 8 made transport faults *visible* — every drop, delay, duplicate,
+//! corruption and disconnect surfaces as a typed
+//! [`PicoError::Transport`] — but the serving chain still failed fast:
+//! one bad frame killed the whole run. For long-lived cooperative
+//! inference on flaky wireless links that is the wrong default, so this
+//! module wraps the fail-fast core ([`coordinator::run_attempt`]) in a
+//! supervisor loop:
+//!
+//! 1. **Detection.** A failed attempt returns *every* thread's error,
+//!    attributed to the (replica, stage) that observed it, in
+//!    dependency order — root cause first, downstream cascade after.
+//!    The supervisor keeps per-(replica, stage) strike counts; a stage
+//!    whose consecutive strikes reach
+//!    [`RecoveryConfig::device_down_after`], or whose incoming link
+//!    fails a [`Barrier::Ping`] heartbeat probe, is classified
+//!    *device-down*. Everything else (including feeder-local failures)
+//!    is *transient*.
+//! 2. **Recovery.** Transient faults get a bounded retry with
+//!    seeded-jitter exponential [`Backoff`]. Replay is idempotent by
+//!    construction: retry attempts run receivers in dedup mode (see the
+//!    idempotent re-send contract in [`crate::net`]), so a frame that
+//!    actually arrived twice is skipped by its per-link sequence number
+//!    and counted, never re-executed. The requests to replay come from
+//!    the per-replica [`AdmissionJournal`] — a bounded ring of
+//!    fed-but-uncompleted requests whose capacity follows the
+//!    bounded-channel depth of the serving chain, so the journal can
+//!    never grow past what the pipeline can physically hold in flight.
+//! 3. **Elastic re-plan.** A confirmed device-down event is membership
+//!    drift: the supervisor hands the dead device set to the caller's
+//!    re-planner (the deploy facade plugs in a
+//!    [`crate::pipeline::PlanContext`]-backed one, so re-planning never
+//!    re-partitions), validates that no dead device is reused, bumps
+//!    the plan epoch, and re-runs the pending requests on the new plan.
+//!    The first attempt after a failover announces a
+//!    `Drain(old epoch)` + `Swap(new epoch)` barrier pair on every
+//!    link — the wire form of the fill/drain-overlapped swap — and
+//!    admission keeps shedding (never hangs) while capacity is reduced.
+//!
+//! Exactly-once: a request id is merged into the final report the first
+//! time it completes; the journal drops it the same moment, so a replay
+//! can only ever cover ids that have *not* completed. A duplicate
+//! completion (which the dedup contract should make impossible) is a
+//! hard [`PicoError::Internal`], not a silent overwrite.
+//!
+//! The analytic twin lives in [`crate::sim::simulate_with_failures`],
+//! driven by the request-indexed [`crate::adapt::FailureScript`]; the
+//! shared counting kernel is [`attempt_outline`], so the simulated and
+//! threaded recovery paths agree on admitted/completed counts and on
+//! every recovery counter (pinned by `rust/tests/recovery.rs`).
+
+use std::collections::{HashMap, HashSet};
+use std::time::Instant;
+
+use crate::adapt::{FailureKind, FailureScript};
+use crate::cluster::Cluster;
+use crate::coordinator::{
+    aggregate_failures, finish_report, run_attempt, AttemptOutcome, Compute, Request, Response,
+    ServeOptions, ServeReport,
+};
+use crate::error::PicoError;
+use crate::graph::ModelGraph;
+use crate::net::{Barrier, Frame, LinkId, Received, SendOutcome, Transport};
+use crate::pipeline::PipelinePlan;
+use crate::util::Rng;
+
+/// Recovery policy knobs. `enabled: false` (the default) preserves the
+/// pre-recovery fail-fast contract exactly.
+#[derive(Debug, Clone)]
+pub struct RecoveryConfig {
+    /// Master switch: off = fail fast on the first transport error.
+    pub enabled: bool,
+    /// Transient-retry budget for the whole serving session (failovers
+    /// have their own bound: the cluster can only shrink so many times).
+    pub max_retries: u32,
+    /// Base backoff delay in wall-clock seconds (doubles per retry).
+    pub backoff_base: f64,
+    /// Hard cap on a single backoff delay, seconds.
+    pub backoff_cap: f64,
+    /// Seed of the backoff jitter — same seed, same schedule.
+    pub seed: u64,
+    /// Consecutive strikes on one (replica, stage) that confirm the
+    /// stage's device set as down (the Ping probe can confirm earlier).
+    pub device_down_after: u32,
+}
+
+impl Default for RecoveryConfig {
+    fn default() -> Self {
+        RecoveryConfig {
+            enabled: false,
+            max_retries: 4,
+            backoff_base: 0.01,
+            backoff_cap: 0.25,
+            seed: 0xC0FFEE,
+            device_down_after: 2,
+        }
+    }
+}
+
+/// Recovery telemetry carried on [`ServeReport`]. All zeros on a clean
+/// (or fail-fast) run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RecoveryStats {
+    /// Transient retries performed.
+    pub retries: u64,
+    /// Requests re-dispatched by retries and failovers (a request
+    /// replayed twice counts twice).
+    pub replays: u64,
+    /// Membership re-plans (device-down failovers) executed.
+    pub failovers: u64,
+    /// Frames receivers skipped under the idempotent re-send contract.
+    pub duplicates_dropped: u64,
+    /// Concurrent secondary errors observed alongside root causes
+    /// (pre-recovery these were silently masked by first-error-wins).
+    pub secondary_errors: u64,
+    /// Wall-clock seconds spent on failed attempts and backoff sleeps.
+    pub downtime_secs: f64,
+}
+
+/// Seeded-jitter exponential backoff: attempt `k` sleeps
+/// `min(cap, base·2^k) · (0.5 + 0.5·u)` with `u` drawn from a
+/// deterministic [`Rng`] — the same seed always produces the same
+/// schedule (pinned by a property test), every delay is positive, and
+/// no delay exceeds `cap`.
+#[derive(Debug, Clone)]
+pub struct Backoff {
+    base: f64,
+    cap: f64,
+    rng: Rng,
+}
+
+impl Backoff {
+    pub fn new(base: f64, cap: f64, seed: u64) -> Backoff {
+        Backoff { base: base.max(0.0), cap: cap.max(0.0), rng: Rng::new(seed) }
+    }
+
+    pub fn from_config(cfg: &RecoveryConfig) -> Backoff {
+        Backoff::new(cfg.backoff_base, cfg.backoff_cap, cfg.seed)
+    }
+
+    /// Delay in seconds before retry number `attempt` (0-based).
+    pub fn next_delay(&mut self, attempt: u32) -> f64 {
+        let exp = self.base * 2f64.powi(attempt.min(62) as i32);
+        let jitter = 0.5 + 0.5 * self.rng.f64();
+        exp.min(self.cap) * jitter
+    }
+}
+
+/// Bounded ring of fed-but-uncompleted requests for one replica — the
+/// replay source. The capacity follows the serving chain's bounded
+/// channel depth, so by construction the journal holds at most what the
+/// pipeline can have in flight; overflowing it means the accounting is
+/// broken and is reported as a typed error, never silent growth.
+#[derive(Debug)]
+pub struct AdmissionJournal {
+    cap: usize,
+    live: HashMap<u64, Request>,
+}
+
+impl AdmissionJournal {
+    pub fn new(cap: usize) -> AdmissionJournal {
+        AdmissionJournal { cap: cap.max(1), live: HashMap::new() }
+    }
+
+    /// Journal capacity for a serving configuration: every link of the
+    /// deepest chain can hold `chan_cap` frames plus one in each
+    /// worker's hands.
+    pub fn cap_for(opts: &ServeOptions, stages_max: usize) -> usize {
+        let chan_cap = opts.queue_capacity.unwrap_or(64).max(1);
+        chan_cap * (stages_max + 2) + stages_max + 2
+    }
+
+    /// Record a dispatched-but-uncompleted request.
+    pub fn admit(&mut self, r: Request) -> Result<(), PicoError> {
+        if self.live.len() >= self.cap {
+            return Err(PicoError::Internal(format!(
+                "admission journal overflow: {} in-flight requests exceed the {}-slot bound",
+                self.live.len() + 1,
+                self.cap
+            )));
+        }
+        self.live.insert(r.id, r);
+        Ok(())
+    }
+
+    /// Drop a completed request; returns whether it was journaled.
+    pub fn complete(&mut self, id: u64) -> bool {
+        self.live.remove(&id).is_some()
+    }
+
+    pub fn len(&self) -> usize {
+        self.live.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live.is_empty()
+    }
+
+    /// Take every journaled request, sorted by id — the replay batch.
+    pub fn drain(&mut self) -> Vec<Request> {
+        let mut v: Vec<Request> = self.live.drain().map(|(_, r)| r).collect();
+        v.sort_by_key(|r| r.id);
+        v
+    }
+}
+
+/// Heartbeat-probe a link: open a fresh connection on `id`, send one
+/// `Control::Ping` frame and expect it back. A transient fault leaves
+/// the link probe-able (the fresh connection is live); a down device
+/// refuses, errors, or stays silent until the transport deadline.
+pub fn probe_link(transport: &dyn Transport, id: &LinkId) -> bool {
+    let Ok((mut tx, mut rx)) = transport.link(id, 1) else {
+        return false;
+    };
+    match tx.send(Frame::Control { seq: 0, barrier: Barrier::Ping, epoch: 0 }) {
+        Ok(SendOutcome::Sent) => {}
+        _ => return false,
+    }
+    matches!(
+        rx.recv(),
+        Ok(Received::Frame(Frame::Control { barrier: Barrier::Ping, .. }))
+    )
+}
+
+/// One attempt of the shared recovery counting kernel: how many
+/// requests it was handed, how many completed, and what (if anything)
+/// ended it early.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AttemptSpec {
+    /// Requests dispatched into this attempt.
+    pub dispatched: usize,
+    /// Requests that completed before the attempt ended.
+    pub completed: usize,
+    /// `None` = the attempt finished cleanly.
+    pub after: Option<FailureKind>,
+}
+
+/// Output of [`attempt_outline`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecoveryOutline {
+    pub attempts: Vec<AttemptSpec>,
+    pub stats: RecoveryStats,
+    /// False when the retry budget ran out before the stream completed.
+    pub healed: bool,
+}
+
+/// The deterministic counting kernel shared by the analytic twin
+/// ([`crate::sim::simulate_with_failures`]) and the recovery tests:
+/// given `n_admitted` requests and a request-indexed [`FailureScript`],
+/// derive the attempt structure and recovery counters the supervisor
+/// must produce.
+///
+/// Semantics (unit batches, completed-prefix rule): a Transient or
+/// DeviceDown event at global completion index `r` interrupts the
+/// current attempt after it completed `r − completed_so_far` requests —
+/// exactly what a wire fault on the frame carrying request `r` does to
+/// the threaded chain. Duplicated events never interrupt; receivers
+/// absorb them and count `duplicates_dropped`. Events targeting an
+/// index that already completed, or one past the stream, never fire.
+pub fn attempt_outline(
+    n_admitted: usize,
+    script: &FailureScript,
+    cfg: &RecoveryConfig,
+) -> RecoveryOutline {
+    let mut events = script.events.clone();
+    events.sort_by_key(|e| e.at_request);
+    let mut stats = RecoveryStats::default();
+    let mut attempts = Vec::new();
+    let mut completed_total = 0usize;
+    let mut healed = true;
+    let mut ei = 0usize;
+    loop {
+        let dispatched = n_admitted - completed_total;
+        // Next event that interrupts this attempt; duplicates along the
+        // way are absorbed.
+        let mut interrupting = None;
+        while ei < events.len() {
+            let e = events[ei];
+            ei += 1;
+            if e.at_request >= n_admitted {
+                continue; // past the stream: the frame is never sent
+            }
+            if e.kind == FailureKind::Duplicated {
+                stats.duplicates_dropped += 1;
+                continue;
+            }
+            if e.at_request < completed_total {
+                continue; // target already completed in a prior attempt
+            }
+            interrupting = Some(e);
+            break;
+        }
+        match interrupting {
+            None => {
+                attempts.push(AttemptSpec { dispatched, completed: dispatched, after: None });
+                break;
+            }
+            Some(e) => {
+                let done = e.at_request - completed_total;
+                attempts.push(AttemptSpec { dispatched, completed: done, after: Some(e.kind) });
+                completed_total += done;
+                let pending = n_admitted - completed_total;
+                match e.kind {
+                    FailureKind::Transient => {
+                        if stats.retries >= cfg.max_retries as u64 {
+                            healed = false;
+                            break;
+                        }
+                        stats.retries += 1;
+                        stats.replays += pending as u64;
+                    }
+                    FailureKind::DeviceDown => {
+                        stats.failovers += 1;
+                        stats.replays += pending as u64;
+                    }
+                    FailureKind::Duplicated => unreachable!("duplicates never interrupt"),
+                }
+            }
+        }
+    }
+    RecoveryOutline { attempts, stats, healed }
+}
+
+/// Re-planner callback: given the dead device set (cluster indices),
+/// produce replacement replica plans over the survivors.
+pub type Replanner<'a> = &'a mut dyn FnMut(&[usize]) -> Result<Vec<PipelinePlan>, PicoError>;
+
+/// The supervised serving entry point: [`coordinator::serve_remote`]
+/// semantics, plus detection / bounded retry / journal replay /
+/// elastic failover per the module docs. With `cfg.enabled == false`
+/// this *is* `serve_remote` (fail fast, zeroed recovery telemetry).
+///
+/// `replanner` is consulted only on a confirmed device-down event; when
+/// none is configured, device loss is a typed [`PicoError::Transport`]
+/// (the supervisor sheds the pending requests instead of hanging).
+#[allow(clippy::too_many_arguments)] // the serving axes plus the recovery policy
+pub fn serve_with_recovery(
+    g: &ModelGraph,
+    plans: &[PipelinePlan],
+    cluster: &Cluster,
+    compute: &dyn Compute,
+    requests: Vec<Request>,
+    opts: &ServeOptions,
+    transport: &dyn Transport,
+    cfg: &RecoveryConfig,
+    mut replanner: Option<Replanner<'_>>,
+) -> Result<ServeReport, PicoError> {
+    if !cfg.enabled {
+        return crate::coordinator::serve_remote(
+            g, plans, cluster, compute, requests, opts, transport,
+        );
+    }
+    let wall_start = Instant::now();
+    let mut stats = RecoveryStats::default();
+    let mut backoff = Backoff::from_config(cfg);
+    let mut current_plans: Vec<PipelinePlan> = plans.to_vec();
+    let mut pending: Vec<Request> = requests;
+    pending.sort_by_key(|r| r.id);
+
+    let mut responses: Vec<Response> = Vec::new();
+    let mut seen: HashSet<u64> = HashSet::new();
+    let mut rejected_total: Vec<u64> = Vec::new();
+    let mut strikes: HashMap<(usize, usize), u32> = HashMap::new();
+    let mut dead: Vec<usize> = Vec::new();
+    let mut epoch = 0u64;
+    let mut swap: Option<(u64, u64)> = None;
+    let mut peak_resident = 0usize;
+    let mut last_metrics: Option<(Vec<_>, Vec<_>)> = None;
+
+    // Every transient retry and every failover consumes one round; the
+    // cluster can shrink at most `cluster.len()` times, so this bound
+    // is unreachable unless the accounting itself is broken.
+    let max_rounds = cfg.max_retries as usize + cluster.len() + 2;
+    for _round in 0..=max_rounds {
+        let attempt_start = Instant::now();
+        // Replay copies: `pending` moves into the attempt, the journal
+        // keeps the uncompleted ones alive for the next one.
+        let mut keep: HashMap<u64, Request> =
+            pending.iter().map(|r| (r.id, r.clone())).collect();
+        let attempt_reqs = std::mem::take(&mut pending);
+        let out = run_attempt(
+            g,
+            &current_plans,
+            cluster,
+            None,
+            compute,
+            attempt_reqs,
+            opts,
+            transport,
+            true,
+            swap.take(),
+        )
+        .map_err(crate::coordinator::ChainError::into_pico)?;
+
+        stats.duplicates_dropped += out.duplicates_dropped;
+        peak_resident = peak_resident.max(out.peak_resident_msgs);
+        last_metrics = Some((out.stage_metrics, out.link_metrics));
+        for r in out.responses {
+            if !seen.insert(r.id) {
+                return Err(PicoError::Internal(format!(
+                    "request {} completed twice despite the dedup contract",
+                    r.id
+                )));
+            }
+            keep.remove(&r.id);
+            responses.push(r);
+        }
+        for id in out.rejected {
+            // Shed is final: degraded capacity degrades gracefully
+            // instead of re-queueing forever.
+            keep.remove(&id);
+            rejected_total.push(id);
+        }
+
+        // Rebuild the per-replica admission journals from this
+        // attempt's dispatch record: fed-but-uncompleted requests are
+        // the in-flight set a replay must cover.
+        let stages_max = current_plans.iter().map(|p| p.stages.len()).max().unwrap_or(1);
+        let cap = AdmissionJournal::cap_for(opts, stages_max);
+        let mut journals: Vec<AdmissionJournal> =
+            (0..current_plans.len()).map(|_| AdmissionJournal::new(cap)).collect();
+        let mut fed: HashSet<u64> = HashSet::new();
+        for &(ri, id) in &out.fed_ids {
+            fed.insert(id);
+            if let Some(r) = keep.get(&id) {
+                journals[ri].admit(r.clone())?;
+            }
+        }
+        let mut next: Vec<Request> = Vec::new();
+        for j in journals.iter_mut() {
+            next.extend(j.drain());
+        }
+        // Never-fed requests are still queued, not in any journal.
+        next.extend(keep.into_values().filter(|r| !fed.contains(&r.id)));
+        next.sort_by_key(|r| r.id);
+
+        if out.failures.is_empty() {
+            if !next.is_empty() {
+                return Err(PicoError::Internal(format!(
+                    "clean attempt left {} requests unaccounted for",
+                    next.len()
+                )));
+            }
+            responses.sort_by_key(|r| r.id);
+            rejected_total.sort_unstable();
+            let n_served = responses.len();
+            let (stage_metrics, link_metrics) = last_metrics.unwrap_or_default();
+            let merged = AttemptOutcome {
+                responses,
+                fed_ids: Vec::new(),
+                failures: Vec::new(),
+                duplicates_dropped: stats.duplicates_dropped,
+                rejected: rejected_total,
+                n_served,
+                stage_metrics,
+                link_metrics,
+                peak_resident_msgs: peak_resident,
+            };
+            return Ok(finish_report(merged, stats, wall_start));
+        }
+
+        // Classify the root cause; everything behind it is the cascade.
+        stats.secondary_errors += out.failures.len() as u64 - 1;
+        let root_replica = out.failures[0].replica;
+        let root_stage = out.failures[0].stage;
+        let agg = aggregate_failures(out.failures);
+        let down = match root_stage {
+            // The feeder is driver-local: its failures are never a
+            // remote device loss.
+            None => false,
+            Some(si) => {
+                let s = strikes.entry((root_replica, si)).or_insert(0);
+                *s += 1;
+                let incoming = LinkId {
+                    replica: root_replica as u32,
+                    from: if si == 0 {
+                        crate::net::Endpoint::Feeder
+                    } else {
+                        crate::net::Endpoint::Stage(si as u32 - 1)
+                    },
+                    to: crate::net::Endpoint::Stage(si as u32),
+                };
+                *s >= cfg.device_down_after || !probe_link(transport, &incoming)
+            }
+        };
+
+        if down {
+            let si = root_stage.expect("device-down requires a stage");
+            let Some(rp) = replanner.as_mut() else {
+                return Err(PicoError::Transport(format!(
+                    "replica {root_replica} stage {si} confirmed down and no re-planner is \
+                     configured; shedding {} pending requests: {}",
+                    next.len(),
+                    agg.message()
+                )));
+            };
+            for &d in &current_plans[root_replica].stages[si].devices {
+                if !dead.contains(&d) {
+                    dead.push(d);
+                }
+            }
+            dead.sort_unstable();
+            let new_plans = rp(&dead)?;
+            for (ri, p) in new_plans.iter().enumerate() {
+                for s in &p.stages {
+                    if let Some(&d) = s.devices.iter().find(|d| dead.contains(d)) {
+                        return Err(PicoError::InvalidPlan(format!(
+                            "re-plan assigns dead device {d} to replica {ri}"
+                        )));
+                    }
+                }
+            }
+            stats.failovers += 1;
+            stats.replays += next.len() as u64;
+            stats.downtime_secs += attempt_start.elapsed().as_secs_f64();
+            // Fill/drain-overlapped swap: the next attempt's senders
+            // announce Drain(old) + Swap(new) right after their hello.
+            swap = Some((epoch, epoch + 1));
+            epoch += 1;
+            current_plans = new_plans;
+            strikes.clear();
+        } else {
+            if stats.retries >= cfg.max_retries as u64 {
+                return Err(PicoError::Transport(format!(
+                    "recovery exhausted after {} retries; shedding {} pending requests: {}",
+                    cfg.max_retries,
+                    next.len(),
+                    agg.message()
+                )));
+            }
+            let delay = backoff.next_delay(stats.retries as u32);
+            stats.retries += 1;
+            stats.replays += next.len() as u64;
+            stats.downtime_secs += attempt_start.elapsed().as_secs_f64() + delay;
+            std::thread::sleep(std::time::Duration::from_secs_f64(delay));
+        }
+        pending = next;
+    }
+    Err(PicoError::Internal(format!(
+        "recovery loop exceeded its {max_rounds}-round bound without converging"
+    )))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapt::FailureEvent;
+    use crate::net::{Endpoint, Loopback};
+    use crate::runtime::Tensor;
+
+    #[test]
+    fn backoff_is_deterministic_capped_and_positive() {
+        let mut a = Backoff::new(0.01, 0.25, 7);
+        let mut b = Backoff::new(0.01, 0.25, 7);
+        let mut c = Backoff::new(0.01, 0.25, 8);
+        let da: Vec<f64> = (0..12).map(|k| a.next_delay(k)).collect();
+        let db: Vec<f64> = (0..12).map(|k| b.next_delay(k)).collect();
+        let dc: Vec<f64> = (0..12).map(|k| c.next_delay(k)).collect();
+        assert_eq!(da, db, "same seed, same schedule");
+        assert_ne!(da, dc, "different seed, different jitter");
+        for (k, &d) in da.iter().enumerate() {
+            assert!(d > 0.0, "delay {k} must be positive");
+            assert!(d <= 0.25, "delay {k} = {d} exceeds the cap");
+        }
+        // Early delays grow roughly exponentially before the cap bites.
+        assert!(da[0] <= 0.01 && da[2] <= 0.04);
+    }
+
+    #[test]
+    fn journal_bounds_and_drains_sorted() {
+        let mut j = AdmissionJournal::new(2);
+        let req = |id: u64| Request { id, input: Tensor::zeros(vec![1, 1, 1]), t_submit: 0.0 };
+        j.admit(req(5)).unwrap();
+        j.admit(req(3)).unwrap();
+        assert!(j.admit(req(9)).is_err(), "over-cap admit must fail typed");
+        assert!(j.complete(5));
+        assert!(!j.complete(5), "double-complete is a no-op");
+        j.admit(req(9)).unwrap();
+        let ids: Vec<u64> = j.drain().iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![3, 9], "drain is id-sorted");
+        assert!(j.is_empty());
+    }
+
+    #[test]
+    fn outline_counts_transient_retry_and_failover() {
+        let cfg = RecoveryConfig { enabled: true, ..RecoveryConfig::default() };
+        // Single transient at request 3 of 8: attempt 1 completes 3,
+        // attempt 2 replays the remaining 5.
+        let o = attempt_outline(8, &FailureScript::one(3, FailureKind::Transient), &cfg);
+        assert!(o.healed);
+        assert_eq!(
+            o.attempts,
+            vec![
+                AttemptSpec { dispatched: 8, completed: 3, after: Some(FailureKind::Transient) },
+                AttemptSpec { dispatched: 5, completed: 5, after: None },
+            ]
+        );
+        assert_eq!(o.stats.retries, 1);
+        assert_eq!(o.stats.replays, 5);
+        assert_eq!(o.stats.failovers, 0);
+        // Device-down counts a failover, not a retry.
+        let o = attempt_outline(8, &FailureScript::one(2, FailureKind::DeviceDown), &cfg);
+        assert!(o.healed);
+        assert_eq!(o.stats.failovers, 1);
+        assert_eq!(o.stats.retries, 0);
+        assert_eq!(o.stats.replays, 6);
+        // Duplicates never interrupt: one attempt, one dropped frame.
+        let o = attempt_outline(8, &FailureScript::one(4, FailureKind::Duplicated), &cfg);
+        assert_eq!(o.attempts.len(), 1);
+        assert_eq!(o.attempts[0].completed, 8);
+        assert_eq!(o.stats.duplicates_dropped, 1);
+        // Past-the-stream events never fire.
+        let o = attempt_outline(4, &FailureScript::one(9, FailureKind::Transient), &cfg);
+        assert_eq!(o.attempts.len(), 1);
+        assert_eq!(o.stats.retries, 0);
+    }
+
+    #[test]
+    fn outline_exhausts_bounded_retries() {
+        let cfg =
+            RecoveryConfig { enabled: true, max_retries: 1, ..RecoveryConfig::default() };
+        let script = FailureScript {
+            events: vec![
+                FailureEvent { at_request: 1, kind: FailureKind::Transient },
+                FailureEvent { at_request: 2, kind: FailureKind::Transient },
+                FailureEvent { at_request: 3, kind: FailureKind::Transient },
+            ],
+        };
+        let o = attempt_outline(6, &script, &cfg);
+        assert!(!o.healed, "third strike exceeds the 1-retry budget");
+        assert_eq!(o.stats.retries, 1);
+    }
+
+    #[test]
+    fn ping_probe_succeeds_on_a_live_loopback() {
+        let t = Loopback::default();
+        let id = LinkId { replica: 0, from: Endpoint::Feeder, to: Endpoint::Stage(0) };
+        assert!(probe_link(&t, &id));
+    }
+}

@@ -15,15 +15,18 @@
 //! `rust/tests/agreement.rs`).
 
 use crate::adapt::{
-    drive_adaptation, AdaptController, DriftScript, ReplanRecord, RoundResult,
+    drive_adaptation, AdaptController, DriftScript, FailureKind, FailureScript, ReplanRecord,
+    RoundResult,
 };
 use crate::baselines::{halo_fraction, SyncSchedule};
 use crate::cluster::Cluster;
 use crate::cost::{stage_cost, StageCost};
-use crate::engine::{run_pipeline, EngineConfig, StageProfile, TimingReport};
+use crate::engine::{run_pipeline, summarize, EngineConfig, StageProfile, TimingReport};
+use crate::error::PicoError;
 use crate::graph::{LayerId, ModelGraph, Shape};
 use crate::load::{self, LoadReport, LoadSpec};
 use crate::pipeline::{PipelinePlan, PlannerStats};
+use crate::recover::{attempt_outline, RecoveryConfig, RecoveryStats};
 
 /// Per-device simulation outcome.
 #[derive(Debug, Clone, Default)]
@@ -329,6 +332,112 @@ pub fn simulate_adaptive(
         round_ends: trace.round_ends,
         planner: None,
     }
+}
+
+/// Analytic outcome of a failure-injected simulation run — the twin of
+/// [`crate::recover::serve_with_recovery`]'s [`crate::coordinator::ServeReport`].
+#[derive(Debug, Clone)]
+pub struct FailureSimReport {
+    /// Requests admitted by the first engine pass (shed requests never
+    /// enter the recovery protocol on either path).
+    pub admitted: usize,
+    /// Requests that completed across all attempts.
+    pub completed: usize,
+    /// Timing summary over the merged completions (virtual time).
+    pub timing: TimingReport,
+    /// Membership re-plans executed (device-down failovers).
+    pub replans: usize,
+    /// Recovery counters from the shared counting kernel
+    /// ([`crate::recover::attempt_outline`]) — must agree exactly with
+    /// the threaded supervisor's under the same script and config
+    /// (`downtime_secs` stays 0: the analytic path has no wall clock).
+    pub recovery: RecoveryStats,
+    /// False iff the script exhausts `cfg.max_retries` (the threaded
+    /// path errors typed in that case; the sim reports the partial run).
+    pub healed: bool,
+}
+
+/// Analytic twin of [`crate::recover::serve_with_recovery`]: play a
+/// request-indexed [`FailureScript`] against the plan set's cost-model
+/// stage profiles. Each [`crate::recover::AttemptSpec`] from the shared
+/// counting kernel becomes one engine pass over the still-pending
+/// arrivals (at their *original* submit times — the threaded supervisor
+/// re-feeds pending requests with their original `t_submit`, so virtual
+/// completion times match); the completed prefix is harvested, and a
+/// device-down attempt switches to `replacement`'s profiles before the
+/// next pass, mirroring the drain/swap failover.
+///
+/// Agreement scope (pinned by `rust/tests/recovery.rs`): exact on
+/// admitted/completed counts and every recovery counter for any script;
+/// exact on makespan (to float noise) for transient-only scripts under
+/// non-shedding admission with a single replica and unit batches — the
+/// regime where request index ↔ wire frame is the identity the
+/// [`FailureScript`] contract assumes.
+#[allow(clippy::too_many_arguments)] // mirrors serve_with_recovery's axes
+pub fn simulate_with_failures(
+    g: &ModelGraph,
+    cluster: &Cluster,
+    plans: &[PipelinePlan],
+    arrivals: &[f64],
+    opts: &EngineConfig,
+    script: &FailureScript,
+    cfg: &RecoveryConfig,
+    replacement: Option<&[PipelinePlan]>,
+) -> Result<FailureSimReport, PicoError> {
+    if plans.is_empty() {
+        return Err(PicoError::InvalidPlan("need at least one pipeline replica".into()));
+    }
+    let mut profiles = replica_profiles(g, cluster, plans);
+
+    // Pass 0 decides the admitted set: shed requests are rejected once
+    // and never replayed, exactly as the supervisor sheds them.
+    let first = run_pipeline(&profiles, arrivals, opts);
+    let rejected: std::collections::HashSet<usize> = first.rejected.iter().copied().collect();
+    let mut pending: Vec<usize> =
+        (0..arrivals.len()).filter(|i| !rejected.contains(i)).collect();
+    let admitted = pending.len();
+
+    let outline = attempt_outline(admitted, script, cfg);
+    let mut replans = 0usize;
+    let mut done_times: Vec<f64> = Vec::new();
+    let mut latencies: Vec<f64> = Vec::new();
+    for spec in &outline.attempts {
+        let attempt_arrivals: Vec<f64> = pending.iter().map(|&i| arrivals[i]).collect();
+        let run = run_pipeline(&profiles, &attempt_arrivals, opts);
+        // Completed prefix: the attempt delivered requests [0, completed)
+        // of this attempt's dispatch order before the fault struck.
+        for j in run.jobs.iter().filter(|j| j.index < spec.completed) {
+            done_times.push(j.done);
+            latencies.push(j.done - arrivals[pending[j.index]]);
+        }
+        pending = pending.split_off(spec.completed);
+        if spec.after == Some(FailureKind::DeviceDown) {
+            let rep = replacement.ok_or_else(|| {
+                PicoError::InvalidPlan(
+                    "failure script injects a device-down event but no replacement \
+                     plan set was provided"
+                        .into(),
+                )
+            })?;
+            if rep.is_empty() {
+                return Err(PicoError::InvalidPlan(
+                    "replacement plan set is empty".into(),
+                ));
+            }
+            profiles = replica_profiles(g, cluster, rep);
+            replans += 1;
+        }
+    }
+    done_times.sort_by(f64::total_cmp);
+    let timing = summarize(&done_times, &latencies);
+    Ok(FailureSimReport {
+        admitted,
+        completed: done_times.len(),
+        timing,
+        replans,
+        recovery: outline.stats,
+        healed: outline.healed,
+    })
 }
 
 /// Simulate a synchronous baseline schedule (LW/EFL/OFL/CE).

@@ -9,7 +9,11 @@
 //! clock. **Fail-fast**: every scripted link fault (drop, delay,
 //! duplicate, corrupt, mid-stream disconnect) surfaces as a typed
 //! [`PicoError::Transport`] within the configured deadline — never a
-//! panic, never a hang, never a silently wrong answer.
+//! panic, never a hang, never a silently wrong answer. And under the
+//! [`pico::recover`] supervisor the very same fault scripts *heal*:
+//! every admitted request completes exactly once within a bounded
+//! wall-clock budget — every fault mode runs twice here, once per
+//! contract.
 
 use std::time::{Duration, Instant};
 
@@ -20,6 +24,7 @@ use pico::engine::AdmissionPolicy;
 use pico::load::ArrivalProcess;
 use pico::modelzoo;
 use pico::net::{Endpoint, FaultAction, FaultScript, FaultyTransport, LinkId, Loopback};
+use pico::recover::{serve_with_recovery, RecoveryConfig};
 use pico::runtime::Tensor;
 use pico::PicoError;
 
@@ -123,6 +128,7 @@ fn tcp_serve_remote_is_bit_exact_with_full_frame_accounting() {
             &RemoteConfig {
                 transport: RemoteTransport::Tcp,
                 deadline: Some(Duration::from_secs(30)),
+                ..Default::default()
             },
         )
         .unwrap();
@@ -169,6 +175,7 @@ fn arrival_stamped_overload_agrees_across_transports() {
             &RemoteConfig {
                 transport: RemoteTransport::Tcp,
                 deadline: Some(Duration::from_secs(30)),
+                ..Default::default()
             },
         )
         .unwrap();
@@ -195,10 +202,8 @@ fn run_with_faults(script: FaultScript) -> Result<ServeReport, PicoError> {
     let (d, requests) = fault_deployment();
     // A short receive deadline on every link: a fault that silences a
     // link must surface as a typed timeout, not a hang.
-    let transport = FaultyTransport {
-        inner: Loopback { deadline: Some(Duration::from_millis(250)) },
-        script,
-    };
+    let transport =
+        FaultyTransport::new(Loopback { deadline: Some(Duration::from_millis(250)) }, script);
     coordinator::serve_remote(
         &d.graph,
         &d.replicas,
@@ -237,13 +242,70 @@ fn every_scripted_fault_fails_fast_with_a_typed_transport_error() {
     }
 }
 
+/// The same chain under the recovery supervisor (no re-planner: every
+/// one-shot fault here is transient once its scripted event fires).
+fn run_with_recovery(script: FaultScript) -> Result<ServeReport, PicoError> {
+    let (d, requests) = fault_deployment();
+    let transport =
+        FaultyTransport::new(Loopback { deadline: Some(Duration::from_millis(250)) }, script);
+    serve_with_recovery(
+        &d.graph,
+        &d.replicas,
+        &d.cluster,
+        &NullCompute,
+        requests,
+        &ServeOptions::default(),
+        &transport,
+        &RecoveryConfig { enabled: true, ..Default::default() },
+        None,
+    )
+}
+
+/// Twin of [`every_scripted_fault_fails_fast_with_a_typed_transport_error`]
+/// with recovery enabled: the same one-shot fault scripts heal instead
+/// of aborting. Every admitted request completes exactly once (no loss,
+/// no duplicate execution), at least one recovery counter records the
+/// fault, and the whole run stays inside a bounded wall-clock budget —
+/// retry, not hang.
+#[test]
+fn every_scripted_fault_heals_under_recovery_exactly_once() {
+    let link = LinkId { replica: 0, from: Endpoint::Feeder, to: Endpoint::Stage(0) };
+    let cases: Vec<(&str, FaultScript)> = vec![
+        ("drop request 0's frame", FaultScript::one(link, 1, FaultAction::Drop)),
+        ("stall past the deadline", FaultScript::one(link, 1, FaultAction::Delay { secs: 2.0 })),
+        ("duplicate request 0's frame", FaultScript::one(link, 1, FaultAction::Duplicate)),
+        ("corrupt the handshake", FaultScript::one(link, 0, FaultAction::Corrupt)),
+        ("corrupt request 1's frame", FaultScript::one(link, 2, FaultAction::Corrupt)),
+        ("disconnect mid-stream", FaultScript::one(link, 1, FaultAction::Disconnect)),
+    ];
+    for (name, script) in cases {
+        let start = Instant::now();
+        let report = run_with_recovery(script).unwrap_or_else(|e| panic!("{name}: {e:?}"));
+        let mut ids: Vec<u64> = report.responses.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..8u64).collect::<Vec<_>>(), "{name}: exactly-once violated");
+        assert!(report.rejected.is_empty(), "{name}: nothing should be shed");
+        let r = &report.recovery;
+        assert!(
+            r.retries + r.failovers + r.duplicates_dropped > 0,
+            "{name}: fault never registered: {r:?}"
+        );
+        assert_eq!(r.failovers, 0, "{name}: one-shot faults are transient, not device-down");
+        assert!(
+            start.elapsed() < Duration::from_secs(20),
+            "{name}: took {:?}, recovery did not stay bounded",
+            start.elapsed()
+        );
+    }
+}
+
 /// The fault wrapper with an empty script is a transparent passthrough:
 /// the run completes and agrees exactly with the in-process path.
 #[test]
 fn empty_fault_script_is_a_transparent_passthrough() {
     let (d, requests) = fault_deployment();
     let n = requests.len();
-    let transport = FaultyTransport { inner: Loopback::default(), script: FaultScript::none() };
+    let transport = FaultyTransport::new(Loopback::default(), FaultScript::none());
     let faulty = coordinator::serve_remote(
         &d.graph,
         &d.replicas,

@@ -431,10 +431,10 @@ fn rand_frame(rng: &mut Rng) -> Frame {
         },
         2 => Frame::Control {
             seq: rng.next_u64(),
-            barrier: if rng.below(2) == 0 {
-                Barrier::Drain
-            } else {
-                Barrier::Swap
+            barrier: match rng.below(3) {
+                0 => Barrier::Drain,
+                1 => Barrier::Swap,
+                _ => Barrier::Ping,
             },
             epoch: rng.next_u64(),
         },
@@ -474,6 +474,43 @@ fn property_codec_truncation_is_always_typed() {
             let err = Frame::decode_wire(&wire[..cut])
                 .expect_err(&format!("round {round}: prefix {cut}/{} decoded", wire.len()));
             assert!(matches!(err, PicoError::Transport(_)), "round {round} cut {cut}: {err:?}");
+        }
+    }
+}
+
+/// Recovery backoff properties under random configurations: the
+/// schedule is a pure function of the seed (same seed → identical
+/// delays, different seed → different jitter), every delay is strictly
+/// positive and never exceeds the cap, and the pre-cap envelope is
+/// monotone in the attempt number (exponential growth up to jitter:
+/// attempt k's *maximum* possible delay never shrinks).
+#[test]
+fn property_recovery_backoff_deterministic_and_capped() {
+    let mut rng = Rng::new(0xBAC0FF);
+    for round in 0..50 {
+        let base = 1e-4 + rng.f64() * 0.01;
+        let cap = base * (1.0 + rng.f64() * 100.0);
+        let seed = rng.next_u64();
+        let mut a = pico::recover::Backoff::new(base, cap, seed);
+        let mut b = pico::recover::Backoff::new(base, cap, seed);
+        let mut c = pico::recover::Backoff::new(base, cap, seed ^ 0x9E3779B97F4A7C15);
+        let da: Vec<f64> = (0..16).map(|k| a.next_delay(k)).collect();
+        let db: Vec<f64> = (0..16).map(|k| b.next_delay(k)).collect();
+        let dc: Vec<f64> = (0..16).map(|k| c.next_delay(k)).collect();
+        assert_eq!(da, db, "round {round}: same seed must replay the same schedule");
+        assert_ne!(da, dc, "round {round}: different seed must change the jitter");
+        for (k, &d) in da.iter().enumerate() {
+            assert!(d > 0.0, "round {round} attempt {k}: delay must be positive");
+            assert!(d <= cap + 1e-15, "round {round} attempt {k}: {d} exceeds cap {cap}");
+            let envelope = (base * 2f64.powi(k as i32)).min(cap);
+            assert!(
+                d <= envelope + 1e-15,
+                "round {round} attempt {k}: {d} above envelope {envelope}"
+            );
+            assert!(
+                d >= 0.5 * envelope - 1e-15,
+                "round {round} attempt {k}: {d} below half-envelope {envelope}"
+            );
         }
     }
 }

@@ -1,0 +1,413 @@
+//! Recovery-supervisor suite: the [`pico::recover`] layer over the
+//! transport serving chain.
+//!
+//! Contracts under test. **Exactly-once**: under recovery, every
+//! admitted request completes exactly once whatever the scripted fault
+//! — no loss, no duplicate execution. **Elastic membership**: a
+//! confirmed device-down event triggers exactly one re-plan onto the
+//! survivors, with zero in-flight loss, and the healed run never places
+//! work on a dead device. **Bounded**: retry budgets exhaust into typed
+//! errors (shed, never hang). **Twin agreement**: the analytic
+//! [`pico::sim::simulate_with_failures`] and the threaded supervisor
+//! share one counting kernel and must agree on admitted/completed
+//! counts, every recovery counter, and (for like-for-like schedules)
+//! virtual makespan.
+
+use std::time::{Duration, Instant};
+
+use pico::adapt::{FailureKind, FailureScript};
+use pico::cluster::Cluster;
+use pico::coordinator::{NullCompute, Request, ServeOptions, ServeReport};
+use pico::deploy::{Backend, DeploymentPlan, RemoteConfig, ServeConfig};
+use pico::modelzoo;
+use pico::net::{Endpoint, FaultAction, FaultScript, FaultyTransport, LinkId, Loopback};
+use pico::pipeline::PipelinePlan;
+use pico::recover::{serve_with_recovery, RecoveryConfig, RecoveryStats};
+use pico::runtime::Tensor;
+use pico::sim::simulate_with_failures;
+use pico::PicoError;
+
+const N: usize = 8;
+
+fn deployment() -> (DeploymentPlan, Vec<Request>) {
+    let d = DeploymentPlan::builder()
+        .graph(modelzoo::synthetic_chain(6))
+        .cluster(Cluster::homogeneous_rpi(3, 1.0))
+        .build()
+        .unwrap();
+    let (c, h, w) = d.graph.input_shape;
+    let requests = (0..N as u64)
+        .map(|id| Request { id, input: Tensor::zeros(vec![c, h, w]), t_submit: 0.0 })
+        .collect();
+    (d, requests)
+}
+
+fn feeder_link() -> LinkId {
+    LinkId { replica: 0, from: Endpoint::Feeder, to: Endpoint::Stage(0) }
+}
+
+fn faulty(script: FaultScript) -> FaultyTransport<Loopback> {
+    FaultyTransport::new(Loopback { deadline: Some(Duration::from_millis(250)) }, script)
+}
+
+/// Supervisor seed for this run: the CI chaos matrix sets
+/// `PICO_CHAOS_SEED` to vary the backoff jitter schedule across arms;
+/// every assertion in this suite is seed-independent by design.
+fn chaos_seed() -> u64 {
+    std::env::var("PICO_CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+fn enabled() -> RecoveryConfig {
+    RecoveryConfig { enabled: true, seed: chaos_seed(), ..RecoveryConfig::default() }
+}
+
+fn assert_exactly_once(report: &ServeReport, what: &str) {
+    let mut ids: Vec<u64> = report.responses.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..N as u64).collect::<Vec<_>>(), "{what}: exactly-once violated");
+    assert!(report.rejected.is_empty(), "{what}: nothing should be shed");
+}
+
+/// Re-plan onto the survivors by re-running the full planner on the
+/// surviving subcluster and remapping device slots back to original
+/// cluster indices — the same shape as the deploy facade's
+/// `PlanContext`-backed re-planner, kept self-contained here so the
+/// test can count invocations.
+fn survivor_plan(d: &DeploymentPlan, dead: &[usize]) -> Result<Vec<PipelinePlan>, PicoError> {
+    let survivors: Vec<usize> =
+        (0..d.cluster.len()).filter(|x| !dead.contains(x)).collect();
+    let sub = Cluster::new(
+        survivors.iter().map(|&i| d.cluster.devices[i].clone()).collect(),
+        d.cluster.network,
+    );
+    let sd = DeploymentPlan::builder().graph(d.graph.clone()).cluster(sub).build()?;
+    let mut plan = sd.replicas[0].clone();
+    for s in &mut plan.stages {
+        for dv in &mut s.devices {
+            *dv = survivors[*dv];
+        }
+    }
+    Ok(vec![plan])
+}
+
+/// A transient wire fault on the frame carrying request r heals with
+/// exactly one retry replaying exactly the n − r uncompleted requests
+/// (the completed-prefix rule), and the counters match the shared
+/// counting kernel's prediction for the equivalent `FailureScript`.
+#[test]
+fn transient_fault_counters_match_the_shared_outline() {
+    let (d, requests) = deployment();
+    let transport = faulty(FaultScript::one(feeder_link(), 4, FaultAction::Drop));
+    let report = serve_with_recovery(
+        &d.graph,
+        &d.replicas,
+        &d.cluster,
+        &NullCompute,
+        requests,
+        &ServeOptions::default(),
+        &transport,
+        &enabled(),
+        None,
+    )
+    .unwrap();
+    assert_exactly_once(&report, "drop request 3");
+    // Frame 4 carries request 3: attempt 1 completes requests 0..3,
+    // the retry replays the other 5.
+    let r = &report.recovery;
+    assert_eq!(r.retries, 1, "{r:?}");
+    assert_eq!(r.replays, (N - 3) as u64, "{r:?}");
+    assert_eq!(r.failovers, 0, "{r:?}");
+    assert_eq!(r.duplicates_dropped, 0, "{r:?}");
+    assert!(r.downtime_secs > 0.0, "failed attempt + backoff must be accounted");
+
+    let outline = pico::recover::attempt_outline(
+        N,
+        &FailureScript::one(3, FailureKind::Transient),
+        &enabled(),
+    );
+    assert!(outline.healed);
+    assert_eq!(outline.stats.retries, r.retries);
+    assert_eq!(outline.stats.replays, r.replays);
+    assert_eq!(outline.stats.failovers, r.failovers);
+    assert_eq!(outline.stats.duplicates_dropped, r.duplicates_dropped);
+}
+
+/// A device-down event (first strike confirms, `device_down_after: 1`)
+/// triggers exactly one membership re-plan: the re-planner runs once,
+/// every request still completes exactly once, and the healed schedule
+/// never touches the dead stage's devices.
+#[test]
+fn device_down_replans_exactly_once_with_zero_loss() {
+    let (d, requests) = deployment();
+    let dead_devices = {
+        let mut v = d.replicas[0].stages[0].devices.clone();
+        v.sort_unstable();
+        v
+    };
+    let transport = faulty(FaultScript::one(feeder_link(), 1, FaultAction::Disconnect));
+    let mut replan_calls = 0usize;
+    let mut rp = |dead: &[usize]| -> Result<Vec<PipelinePlan>, PicoError> {
+        replan_calls += 1;
+        assert_eq!(dead, dead_devices.as_slice(), "dead set is the struck stage's devices");
+        survivor_plan(&d, dead)
+    };
+    let report = serve_with_recovery(
+        &d.graph,
+        &d.replicas,
+        &d.cluster,
+        &NullCompute,
+        requests,
+        &ServeOptions::default(),
+        &transport,
+        &RecoveryConfig { device_down_after: 1, ..enabled() },
+        Some(&mut rp),
+    )
+    .unwrap();
+    assert_eq!(replan_calls, 1, "exactly one membership re-plan");
+    assert_exactly_once(&report, "device down");
+    let r = &report.recovery;
+    assert_eq!(r.failovers, 1, "{r:?}");
+    assert_eq!(r.retries, 0, "first strike confirms down, no transient retry: {r:?}");
+    assert_eq!(r.replays, N as u64, "disconnect at frame 1 completes nothing: {r:?}");
+    // The healed schedule runs on survivors only.
+    for m in &report.stage_metrics {
+        for dv in &dead_devices {
+            assert!(
+                !m.devices.contains(dv),
+                "stage r{} s{} still uses dead device {dv}",
+                m.replica,
+                m.stage
+            );
+        }
+    }
+}
+
+/// Without a configured re-planner, confirmed device loss is a typed
+/// shed — a `PicoError::Transport` naming the down stage — never a
+/// hang.
+#[test]
+fn device_down_without_a_replanner_sheds_typed() {
+    let (d, requests) = deployment();
+    let transport = faulty(FaultScript::one(feeder_link(), 1, FaultAction::Disconnect));
+    let start = Instant::now();
+    let err = serve_with_recovery(
+        &d.graph,
+        &d.replicas,
+        &d.cluster,
+        &NullCompute,
+        requests,
+        &ServeOptions::default(),
+        &transport,
+        &RecoveryConfig { device_down_after: 1, ..enabled() },
+        None,
+    )
+    .expect_err("device down with no re-planner must fail typed");
+    assert!(matches!(err, PicoError::Transport(_)), "{err:?}");
+    assert!(format!("{err}").contains("no re-planner"), "{err}");
+    assert!(start.elapsed() < Duration::from_secs(20), "took {:?}", start.elapsed());
+}
+
+/// An exhausted transient-retry budget is a typed error carrying the
+/// budget and the shed count — bounded recovery, not an infinite loop.
+#[test]
+fn retry_budget_exhaustion_is_a_typed_transport_error() {
+    let (d, requests) = deployment();
+    let transport = faulty(FaultScript::one(feeder_link(), 1, FaultAction::Drop));
+    let start = Instant::now();
+    let err = serve_with_recovery(
+        &d.graph,
+        &d.replicas,
+        &d.cluster,
+        &NullCompute,
+        requests,
+        &ServeOptions::default(),
+        &transport,
+        &RecoveryConfig { max_retries: 0, ..enabled() },
+        None,
+    )
+    .expect_err("zero retry budget must exhaust on the first transient fault");
+    assert!(matches!(err, PicoError::Transport(_)), "{err:?}");
+    assert!(format!("{err}").contains("recovery exhausted"), "{err}");
+    assert!(start.elapsed() < Duration::from_secs(20), "took {:?}", start.elapsed());
+}
+
+/// The analytic twin agrees with the threaded supervisor: same
+/// admitted/completed counts, identical recovery counters, and — with
+/// both paths re-running the identical engine pass per attempt —
+/// virtual makespan to float noise. One transient and one duplicated
+/// scenario.
+#[test]
+fn sim_twin_agrees_with_the_threaded_supervisor() {
+    let (d, requests) = deployment();
+    let arrivals = vec![0.0; N];
+    let opts = ServeOptions::default();
+
+    // Transient at request 3.
+    let transport = faulty(FaultScript::one(feeder_link(), 4, FaultAction::Drop));
+    let served = serve_with_recovery(
+        &d.graph,
+        &d.replicas,
+        &d.cluster,
+        &NullCompute,
+        requests.clone(),
+        &opts,
+        &transport,
+        &enabled(),
+        None,
+    )
+    .unwrap();
+    let sim = simulate_with_failures(
+        &d.graph,
+        &d.cluster,
+        &d.replicas,
+        &arrivals,
+        &opts,
+        &FailureScript::one(3, FailureKind::Transient),
+        &enabled(),
+        None,
+    )
+    .unwrap();
+    assert!(sim.healed);
+    assert_eq!(sim.admitted, N);
+    assert_eq!(sim.completed, served.responses.len());
+    assert_eq!(sim.recovery.retries, served.recovery.retries);
+    assert_eq!(sim.recovery.replays, served.recovery.replays);
+    assert_eq!(sim.recovery.failovers, served.recovery.failovers);
+    assert_eq!(sim.recovery.duplicates_dropped, served.recovery.duplicates_dropped);
+    assert_eq!(sim.replans, 0);
+    assert!(
+        (sim.timing.makespan - served.makespan).abs() <= 1e-9,
+        "transient: sim {} vs served {}",
+        sim.timing.makespan,
+        served.makespan
+    );
+
+    // Duplicated frame at request 2: absorbed by the dedup contract on
+    // both paths — one clean attempt, one counted no-op.
+    let transport = faulty(FaultScript::one(feeder_link(), 3, FaultAction::Duplicate));
+    let served = serve_with_recovery(
+        &d.graph,
+        &d.replicas,
+        &d.cluster,
+        &NullCompute,
+        requests,
+        &opts,
+        &transport,
+        &enabled(),
+        None,
+    )
+    .unwrap();
+    let sim = simulate_with_failures(
+        &d.graph,
+        &d.cluster,
+        &d.replicas,
+        &arrivals,
+        &opts,
+        &FailureScript::one(2, FailureKind::Duplicated),
+        &enabled(),
+        None,
+    )
+    .unwrap();
+    assert_eq!(served.recovery.retries, 0, "{:?}", served.recovery);
+    assert_eq!(served.recovery.duplicates_dropped, 1);
+    assert_eq!(sim.recovery.duplicates_dropped, 1);
+    assert_eq!(sim.completed, served.responses.len());
+    assert!(
+        (sim.timing.makespan - served.makespan).abs() <= 1e-9,
+        "duplicate: sim {} vs served {}",
+        sim.timing.makespan,
+        served.makespan
+    );
+}
+
+/// Device-down agreement: the sim twin with a replacement plan set
+/// mirrors the threaded failover — one re-plan, full completion, same
+/// counters, same post-failover makespan.
+#[test]
+fn sim_twin_mirrors_the_threaded_failover() {
+    let (d, requests) = deployment();
+    let dead_devices = d.replicas[0].stages[0].devices.clone();
+    let replacement = survivor_plan(&d, &dead_devices).unwrap();
+    let transport = faulty(FaultScript::one(feeder_link(), 1, FaultAction::Disconnect));
+    let mut rp = |dead: &[usize]| survivor_plan(&d, dead);
+    let served = serve_with_recovery(
+        &d.graph,
+        &d.replicas,
+        &d.cluster,
+        &NullCompute,
+        requests,
+        &ServeOptions::default(),
+        &transport,
+        &RecoveryConfig { device_down_after: 1, ..enabled() },
+        Some(&mut rp),
+    )
+    .unwrap();
+    let sim = simulate_with_failures(
+        &d.graph,
+        &d.cluster,
+        &d.replicas,
+        &vec![0.0; N],
+        &ServeOptions::default(),
+        &FailureScript::one(0, FailureKind::DeviceDown),
+        &RecoveryConfig { device_down_after: 1, ..enabled() },
+        Some(&replacement),
+    )
+    .unwrap();
+    assert_eq!(sim.replans, 1);
+    assert_eq!(sim.recovery.failovers, served.recovery.failovers);
+    assert_eq!(sim.recovery.replays, served.recovery.replays);
+    assert_eq!(sim.completed, served.responses.len());
+    assert!(
+        (sim.timing.makespan - served.makespan).abs() <= 1e-9,
+        "failover: sim {} vs served {}",
+        sim.timing.makespan,
+        served.makespan
+    );
+}
+
+/// The sim twin refuses a device-down script without a replacement plan
+/// set — the analytic mirror of "confirmed down, no re-planner".
+#[test]
+fn sim_twin_requires_a_replacement_for_device_down() {
+    let (d, _) = deployment();
+    let err = simulate_with_failures(
+        &d.graph,
+        &d.cluster,
+        &d.replicas,
+        &vec![0.0; N],
+        &ServeOptions::default(),
+        &FailureScript::one(0, FailureKind::DeviceDown),
+        &enabled(),
+        None,
+    )
+    .expect_err("device-down without replacement must fail typed");
+    assert!(matches!(err, PicoError::InvalidPlan(_)), "{err:?}");
+}
+
+/// Facade wiring: `RemoteConfig::default()` keeps recovery off (the
+/// fail-fast contract), and a recovery-enabled clean run over loopback
+/// produces the identical schedule with all-zero recovery telemetry.
+#[test]
+fn facade_recovery_clean_run_matches_fail_fast() {
+    let (d, _) = deployment();
+    assert!(!RemoteConfig::default().recovery.enabled, "recovery must be opt-in");
+    let cfg = ServeConfig { n_requests: N, ..Default::default() };
+    let base = d.serve_remote(&Backend::Null, &cfg, &RemoteConfig::default()).unwrap();
+    let rec = d
+        .serve_remote(
+            &Backend::Null,
+            &cfg,
+            &RemoteConfig { recovery: enabled(), ..Default::default() },
+        )
+        .unwrap();
+    assert_eq!(base.responses.len(), rec.responses.len());
+    for (x, y) in base.responses.iter().zip(&rec.responses) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.t_done, y.t_done, "request {}", x.id);
+    }
+    assert_eq!(base.recovery, RecoveryStats::default());
+    assert_eq!(rec.recovery, RecoveryStats::default());
+}
