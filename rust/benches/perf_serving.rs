@@ -38,6 +38,15 @@
 //!       "throughput_per_s": f64,     // admitted / virtual makespan
 //!       "p99_s": f64, "shed_rate": f64 }, ...
 //!   ],
+//!   "data_plane": {               // the slab hot path: squeezenet over
+//!     "model": string,            // framed loopback, timing backend
+//!     "devices": u64,
+//!     "stages": u64,
+//!     "requests": u64,
+//!     "payload_bytes_per_request": u64, // feature data across all hops
+//!     "wire_bytes_per_request": f64,    // + frame/member headers
+//!     "requests_per_wall_s": f64
+//!   },
 //!   "generated_by": string
 //! }
 //! ```
@@ -49,6 +58,8 @@
 //!   is NOT armed (CI sets it so a dropped env line cannot silently
 //!   turn the perf job into a no-op).
 
+use pico::cluster::Cluster;
+use pico::deploy::{Backend, DeploymentPlan, RemoteConfig, ServeConfig};
 use pico::engine::StageProfile;
 use pico::load::{run_load, run_load_mutexed, ArrivalProcess, LoadSpec};
 use pico::util::Table;
@@ -171,6 +182,46 @@ fn main() {
     ]);
     t.print();
 
+    // 3. Data-plane bytes: the slab hot path. One squeezenet replica
+    // over framed loopback with the timing-only backend — real feature
+    // geometry, zero-cost compute, so the measurement is the handoff
+    // itself. Per-request payload bytes are pinned to the planner's
+    // boundary-cut prediction (the zero-copy refactor's accounting
+    // contract), so a regression that re-widens a wire window fails
+    // here as well as in tests.
+    let dp_devices = 4usize;
+    let d = DeploymentPlan::builder()
+        .model("squeezenet")
+        .cluster(Cluster::homogeneous_rpi(dp_devices, 1.0))
+        .build()
+        .expect("squeezenet deployment");
+    let dp_requests = 256usize;
+    let dp_cfg = ServeConfig { n_requests: dp_requests, ..Default::default() };
+    let dp = d.serve_remote(&Backend::Null, &dp_cfg, &RemoteConfig::default()).expect("serve");
+    let plan = &d.replicas[0];
+    let segments: Vec<Vec<usize>> = plan.stages.iter().map(|s| s.layers.clone()).collect();
+    let rosters: Vec<Vec<&pico::cluster::Device>> = plan
+        .stages
+        .iter()
+        .map(|s| s.devices.iter().map(|&i| &d.cluster.devices[i]).collect())
+        .collect();
+    let predicted: u64 = pico::cost::plan_link_bytes(&d.graph, &segments, &rosters).iter().sum();
+    let payload: u64 = dp.link_metrics.iter().map(|l| l.payload_bytes).sum();
+    let wire: u64 = dp.link_metrics.iter().map(|l| l.bytes).sum();
+    assert_eq!(
+        payload,
+        dp_requests as u64 * predicted,
+        "slab payload bytes drifted from the oracle's boundary-cut prediction"
+    );
+    let payload_per_req = payload / dp_requests as u64;
+    let wire_per_req = wire as f64 / dp_requests as f64;
+    let dp_rate = dp_requests as f64 / dp.wall_secs.max(1e-9);
+    println!(
+        "data plane: squeezenet x{dp_devices} devices, {} stages — {payload_per_req} feature \
+         bytes/request ({wire_per_req:.0} on the wire), {dp_rate:.0} req/wall-s over loopback",
+        plan.stages.len()
+    );
+
     let json = format!(
         "{{\n  \"case\": \"3-stage constant pipeline {STAGE_MS:?}ms, Poisson open loop\",\n  \
          \"profile_ms\": [{}, {}, {}],\n  \"headline\": {{\n    \
@@ -178,6 +229,11 @@ fn main() {
          \"rate_per_sec\": {rate:.1},\n    \"sharded_wall_s\": {:.4},\n    \
          \"mutexed_wall_s\": {:.4},\n    \"speedup\": {:.3},\n    \"admitted\": {},\n    \
          \"shed_rate\": {:.4},\n    \"p99_s\": {:.6}\n  }},\n  \"scaling\": [\n{}\n  ],\n  \
+         \"data_plane\": {{\n    \"model\": \"squeezenet\",\n    \"devices\": {dp_devices},\n    \
+         \"stages\": {},\n    \"requests\": {dp_requests},\n    \
+         \"payload_bytes_per_request\": {payload_per_req},\n    \
+         \"wire_bytes_per_request\": {wire_per_req:.1},\n    \
+         \"requests_per_wall_s\": {dp_rate:.1}\n  }},\n  \
          \"generated_by\": \"benches/perf_serving.rs (cargo bench --bench perf_serving)\"\n}}\n",
         STAGE_MS[0], STAGE_MS[1], STAGE_MS[2],
         sharded.wall_secs,
@@ -187,6 +243,7 @@ fn main() {
         sharded.shed_rate,
         sharded.p99,
         scaling_rows.join(",\n"),
+        plan.stages.len(),
     );
     let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_serving.json");
     if let Err(e) = std::fs::write(&out, &json) {

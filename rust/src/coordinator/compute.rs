@@ -6,17 +6,18 @@ use std::sync::Arc;
 use crate::cost::{segment_sinks, LayerTile};
 use crate::graph::{LayerId, ModelGraph, Shape};
 use crate::runtime::reference::Weights;
-use crate::runtime::{run_stage, Backend, Engine, PipelineArtifacts, Tensor};
+use crate::runtime::{run_stage, Backend, Engine, PipelineArtifacts, RowSlab, Tensor};
 
-/// A thread-safe stage computer.
+/// A thread-safe stage computer. Feeds and results are [`RowSlab`]
+/// views in global row coordinates (see `runtime::slab`).
 pub trait Compute: Send + Sync {
     fn run(
         &self,
         g: &ModelGraph,
         segment: &[LayerId],
         tiles: &BTreeMap<LayerId, LayerTile>,
-        feeds: &HashMap<LayerId, Tensor>,
-    ) -> anyhow::Result<HashMap<LayerId, Tensor>>;
+        feeds: &HashMap<LayerId, RowSlab>,
+    ) -> anyhow::Result<HashMap<LayerId, RowSlab>>;
 }
 
 /// Pure-rust kernels (any tile shape).
@@ -30,19 +31,19 @@ impl Compute for NativeCompute {
         g: &ModelGraph,
         segment: &[LayerId],
         tiles: &BTreeMap<LayerId, LayerTile>,
-        feeds: &HashMap<LayerId, Tensor>,
-    ) -> anyhow::Result<HashMap<LayerId, Tensor>> {
+        feeds: &HashMap<LayerId, RowSlab>,
+    ) -> anyhow::Result<HashMap<LayerId, RowSlab>> {
         run_stage(g, segment, tiles, feeds, &Backend::Native { weights: &self.weights })
     }
 }
 
-/// Timing-only backend: emits correctly-shaped zero tensors for every
+/// Timing-only backend: emits correctly-shaped zero slabs for every
 /// sink tile without running any kernel. The coordinator's clocks are
 /// virtual, so this backend exercises the full serving machinery
-/// (admission, batching, replica dispatch, tile geometry, stitch,
-/// live-set forwarding) at negligible cost — it is what the sim↔serve
-/// agreement matrix and the `perf_engine` bench drive full-size zoo
-/// models with.
+/// (admission, batching, replica dispatch, tile geometry, slab
+/// assembly, live-set forwarding) at negligible cost — it is what the
+/// sim↔serve agreement matrix and the `perf_engine` bench drive
+/// full-size zoo models with.
 pub struct NullCompute;
 
 impl Compute for NullCompute {
@@ -51,17 +52,19 @@ impl Compute for NullCompute {
         g: &ModelGraph,
         segment: &[LayerId],
         tiles: &BTreeMap<LayerId, LayerTile>,
-        _feeds: &HashMap<LayerId, Tensor>,
-    ) -> anyhow::Result<HashMap<LayerId, Tensor>> {
+        _feeds: &HashMap<LayerId, RowSlab>,
+    ) -> anyhow::Result<HashMap<LayerId, RowSlab>> {
         let mut out = HashMap::new();
         for &s in &segment_sinks(g, segment) {
             if let Some(tile) = tiles.get(&s) {
                 let rows = tile.out_iv.1 - tile.out_iv.0;
-                let t = match g.shape(s) {
-                    Shape::Chw(c, _, w) => Tensor::zeros(vec![c, rows, w]),
-                    Shape::Flat(n) => Tensor::zeros(vec![n]),
+                let slab = match g.shape(s) {
+                    Shape::Chw(c, _, w) => {
+                        RowSlab::from_tensor(Tensor::zeros(vec![c, rows, w]), tile.out_iv.0)
+                    }
+                    Shape::Flat(n) => RowSlab::from_tensor(Tensor::zeros(vec![n]), 0),
                 };
-                out.insert(s, t);
+                out.insert(s, slab);
             }
         }
         Ok(out)
@@ -93,8 +96,8 @@ impl Compute for PjrtCompute {
         g: &ModelGraph,
         segment: &[LayerId],
         tiles: &BTreeMap<LayerId, LayerTile>,
-        feeds: &HashMap<LayerId, Tensor>,
-    ) -> anyhow::Result<HashMap<LayerId, Tensor>> {
+        feeds: &HashMap<LayerId, RowSlab>,
+    ) -> anyhow::Result<HashMap<LayerId, RowSlab>> {
         run_stage(
             g,
             segment,

@@ -19,6 +19,19 @@
 //!
 //! [`serve`] is the single-replica, unit-batch, open-admission special
 //! case — the paper's plain Fig. 8 pipeline.
+//!
+//! **The data plane is zero-copy.** Features move as
+//! [`crate::runtime::RowSlab`] views over `Arc`-shared buffers: each
+//! stage worker *narrows* its per-device feed windows out of the
+//! incoming live set (a view, not a row copy), assembles the device
+//! tiles of every sink into one multi-part view (no inter-tile
+//! stitch), and forwards each feature narrowed to its boundary's wire
+//! window — the union of rows downstream tiles actually read, halo
+//! included, per [`crate::cost::plan_wire_windows`]. The collector is
+//! the only place a full feature is materialized. Per-link
+//! `payload_bytes` in [`ServeReport::link_metrics`] therefore equals
+//! the planner's [`crate::cost::plan_link_bytes`] boundary-cut
+//! prediction exactly (pinned by `rust/tests/net.rs`).
 
 use std::collections::{BTreeMap, HashMap, HashSet};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -28,7 +41,9 @@ use std::time::Instant;
 
 use super::compute::Compute;
 use crate::cluster::Cluster;
-use crate::cost::{segment_sinks, segment_tiles, stage_cost, stage_splits, LayerTile};
+use crate::cost::{
+    plan_stage_tiles, plan_wire_windows, segment_sinks, stage_cost, Interval, LayerTile,
+};
 use crate::engine::{run_pipeline, summarize, EngineConfig, ServiceStats, StageClock, StageProfile};
 use crate::error::PicoError;
 use crate::graph::{LayerId, ModelGraph};
@@ -37,7 +52,7 @@ use crate::net::{
     StageTx, Transport,
 };
 use crate::pipeline::PipelinePlan;
-use crate::runtime::Tensor;
+use crate::runtime::{RowSlab, SlabSet, Tensor};
 
 /// An inference request entering the pipeline.
 #[derive(Debug, Clone)]
@@ -135,16 +150,6 @@ pub struct StageServiceMetrics {
     pub planned_service: f64,
     /// Engine-observed service telemetry (per-item EWMA / mean).
     pub observed: ServiceStats,
-}
-
-/// Look up one live feature in a batch member's sorted live set.
-/// Tensors stay `Arc`-shared end to end: forwarding a skip-connection
-/// feature to a later stage must not deep-copy megabytes per frame
-/// (§Perf log in EXPERIMENTS.md — this halved the coordinator's wall
-/// time), and the loopback transport moves frames structurally to keep
-/// it that way.
-fn find_live(live: &[(LayerId, Arc<Tensor>)], id: LayerId) -> Option<&Arc<Tensor>> {
-    live.binary_search_by_key(&id, |(l, _)| *l).ok().map(|i| &live[i].1)
 }
 
 /// Live set after each stage of a plan: layers produced at or before it
@@ -513,6 +518,30 @@ pub(crate) fn run_attempt(
     let live_after: Vec<Vec<HashSet<LayerId>>> =
         plans.iter().map(|plan| live_sets(g, plan)).collect();
 
+    // Tile geometry is per (replica, stage, device), never per frame —
+    // and each hop's wire windows derive from the *downstream* stages'
+    // tiles — so the whole map comes up front, from the same `cost`
+    // functions whose `plan_link_bytes` prices this data plane.
+    let plan_segments: Vec<Vec<Vec<LayerId>>> =
+        plans.iter().map(|p| p.stages.iter().map(|s| s.layers.clone()).collect()).collect();
+    let stage_tiles: Vec<Vec<Vec<BTreeMap<LayerId, LayerTile>>>> = plans
+        .iter()
+        .zip(&plan_segments)
+        .map(|(plan, segs)| {
+            let rosters: Vec<Vec<&crate::cluster::Device>> = plan
+                .stages
+                .iter()
+                .map(|s| s.devices.iter().map(|&i| &cluster.devices[i]).collect())
+                .collect();
+            plan_stage_tiles(g, segs, &rosters)
+        })
+        .collect();
+    let hop_windows: Vec<Vec<BTreeMap<LayerId, Interval>>> = plan_segments
+        .iter()
+        .zip(&stage_tiles)
+        .map(|(segs, tiles)| plan_wire_windows(g, segs, tiles))
+        .collect();
+
     // One deterministic engine pass decides admission, batching and
     // replica dispatch for the whole request stream.
     let arrivals: Vec<f64> = requests.iter().map(|r| r.t_submit).collect();
@@ -591,19 +620,15 @@ pub(crate) fn run_attempt(
         let (merge_tx, merge_rx) = mpsc::sync_channel::<(f64, Vec<BatchMember>)>(chan_cap);
         let mut handles = Vec::new();
         let mut handle_meta: Vec<(usize, usize)> = Vec::new();
-        for ((ri, plan), ends) in plans.iter().enumerate().zip(stage_ends) {
-            for ((si, stage), (mut rx, mut tx)) in plan.stages.iter().enumerate().zip(ends) {
-                let devs: Vec<&crate::cluster::Device> =
-                    stage.devices.iter().map(|&i| &cluster.devices[i]).collect();
+        for (((ri, plan), ends), tiles_r) in
+            plans.iter().enumerate().zip(stage_ends).zip(&stage_tiles)
+        {
+            for (((si, stage), (mut rx, mut tx)), device_tiles) in
+                plan.stages.iter().enumerate().zip(ends).zip(tiles_r)
+            {
                 let seg = stage.layers.clone();
                 let sinks = segment_sinks(g, &seg);
-                // Tile geometry is per (stage, device), not per frame:
-                // compute it once, outside the worker loop.
-                let device_tiles: Vec<BTreeMap<LayerId, LayerTile>> = stage_splits(g, &seg, &devs)
-                    .iter()
-                    .filter(|s| !s.is_empty())
-                    .map(|sink_out| segment_tiles(g, &seg, sink_out))
-                    .collect();
+                let windows = &hop_windows[ri][si];
                 let profile = profiles[ri][si];
                 let live = live_after[ri][si].clone();
                 handle_meta.push((ri, si));
@@ -623,16 +648,17 @@ pub(crate) fn run_attempt(
                         let (_start, t_done) =
                             clock.admit(t_ready, profile.service(members.len()));
 
-                        // Real numerics, per member: per-device tiles,
-                        // gather, stitch.
+                        // Real numerics, per member: narrow per-device
+                        // feed views, compute, assemble sink tiles into
+                        // multi-part views — no row is copied on this
+                        // path.
                         let mut out_members = Vec::with_capacity(members.len());
                         for member in members {
-                            let mut sink_parts: BTreeMap<LayerId, Vec<(usize, Tensor)>> =
-                                BTreeMap::new();
-                            for tiles in &device_tiles {
-                                // Slice this device's feed slabs from
-                                // the live set.
-                                let mut feeds: HashMap<LayerId, Tensor> = HashMap::new();
+                            let mut sink_parts: BTreeMap<LayerId, Vec<RowSlab>> = BTreeMap::new();
+                            for tiles in device_tiles {
+                                // Narrow this device's feed windows out
+                                // of the live set (view, not a copy).
+                                let mut feeds: HashMap<LayerId, RowSlab> = HashMap::new();
                                 for (&id, tile) in tiles {
                                     // Feed external producers AND an
                                     // in-segment model input (its
@@ -642,13 +668,13 @@ pub(crate) fn run_attempt(
                                     {
                                         continue;
                                     }
-                                    let full = find_live(&member.live, id).ok_or_else(|| {
+                                    let full = member.live.get(id).ok_or_else(|| {
                                         anyhow::anyhow!("stage {si}: missing feed {id}")
                                     })?;
-                                    let slab = if full.dims.len() == 3 {
-                                        full.slice_rows(tile.out_iv.0, tile.out_iv.1)
+                                    let slab = if full.is_flat() {
+                                        full.clone()
                                     } else {
-                                        (**full).clone()
+                                        full.narrow(tile.out_iv.0, tile.out_iv.1)
                                     };
                                     feeds.insert(id, slab);
                                 }
@@ -656,38 +682,58 @@ pub(crate) fn run_attempt(
                                 for &s in &sinks {
                                     if let Some(t) = out.remove(&s) {
                                         // take ownership — no tile copy
-                                        sink_parts
-                                            .entry(s)
-                                            .or_default()
-                                            .push((tiles[&s].out_iv.0, t));
+                                        sink_parts.entry(s).or_default().push(t);
                                     }
                                 }
                             }
-                            // Stitch sink tiles (row order) into full
-                            // features.
-                            let mut live_next: HashMap<LayerId, Arc<Tensor>> = HashMap::new();
+                            // Assemble sink tiles (row order) into one
+                            // multi-part view per feature. Buffers stay
+                            // `Arc`-shared end to end — forwarding a
+                            // skip-connection feature must not
+                            // deep-copy megabytes per frame (§Perf log
+                            // in EXPERIMENTS.md), and the collector is
+                            // the only place a full feature is
+                            // materialized.
+                            let mut live_next: HashMap<LayerId, RowSlab> = HashMap::new();
                             for (s, mut parts) in sink_parts {
-                                parts.sort_by_key(|(r0, _)| *r0);
-                                let slabs: Vec<Tensor> =
-                                    parts.into_iter().map(|(_, t)| t).collect();
-                                let full = if slabs.len() == 1 {
-                                    slabs.into_iter().next().unwrap()
+                                parts.sort_by_key(|p| p.rows().0);
+                                let full = if parts.len() == 1 {
+                                    parts.into_iter().next().unwrap()
                                 } else {
-                                    Tensor::stitch_rows(&slabs)
+                                    let r0 = parts[0].rows().0;
+                                    let r1 = parts.last().unwrap().rows().1;
+                                    let bufs: Vec<(Arc<Tensor>, usize)> = parts
+                                        .iter()
+                                        .map(|p| match p.shared() {
+                                            Some(b) => (b.clone(), p.rows().0),
+                                            None => (Arc::new(p.materialize()), p.rows().0),
+                                        })
+                                        .collect();
+                                    RowSlab::from_parts(bufs, r0, r1)
                                 };
-                                live_next.insert(s, Arc::new(full));
+                                live_next.insert(s, full);
                             }
-                            // Forward upstream tensors still needed
-                            // downstream (Arc clone: refcount bump, no
-                            // copy).
-                            for (id, t) in &member.live {
+                            // Forward upstream features still needed
+                            // downstream (view clones: refcount bumps).
+                            for (id, s) in member.live.iter() {
                                 if live.contains(id) && !live_next.contains_key(id) {
-                                    live_next.insert(*id, t.clone());
+                                    live_next.insert(*id, s.clone());
                                 }
                             }
-                            let mut live_out: Vec<(LayerId, Arc<Tensor>)> =
-                                live_next.into_iter().collect();
-                            live_out.sort_unstable_by_key(|(id, _)| *id);
+                            // Only the boundary cut crosses the hop:
+                            // narrow every forwarded feature to the
+                            // rows downstream tiles will read (halo
+                            // included; flat features move whole). This
+                            // keeps link payload bytes equal to
+                            // `cost::plan_link_bytes`.
+                            let mut live_out = SlabSet::new();
+                            for (id, s) in live_next {
+                                let s = match windows.get(&id) {
+                                    Some(&(a, b)) if !s.is_flat() => s.narrow(a, b),
+                                    _ => s,
+                                };
+                                live_out.insert(id, s);
+                            }
                             out_members.push(BatchMember {
                                 id: member.id,
                                 t_submit: member.t_submit,
@@ -754,7 +800,10 @@ pub(crate) fn run_attempt(
                     members.push(BatchMember {
                         id: r.id,
                         t_submit: r.t_submit,
-                        live: vec![(0usize, Arc::new(r.input))],
+                        live: SlabSet::from_sorted(vec![(
+                            0usize,
+                            RowSlab::from_tensor(r.input, 0),
+                        )]),
                     });
                 }
                 let ids: Vec<u64> = members.iter().map(|m| m.id).collect();
@@ -776,8 +825,12 @@ pub(crate) fn run_attempt(
         let mut responses = Vec::with_capacity(n_served);
         while let Ok((t_ready, members)) = merge_rx.recv() {
             for member in members {
-                let output = find_live(&member.live, out_id)
-                    .map(|t| (**t).clone())
+                // The single stitch of the data plane: gather the
+                // output view's parts into the response frame.
+                let output = member
+                    .live
+                    .get(out_id)
+                    .map(RowSlab::materialize)
                     .ok_or_else(|| anyhow::anyhow!("response missing model output"))?;
                 responses.push(Response {
                     id: member.id,
@@ -851,6 +904,7 @@ pub(crate) fn run_attempt(
                 to: id.to,
                 frames: s.frames.load(Ordering::Relaxed),
                 bytes: s.bytes.load(Ordering::Relaxed),
+                payload_bytes: s.payload_bytes.load(Ordering::Relaxed),
                 send_secs: s.send_nanos.load(Ordering::Relaxed) as f64 / 1e9,
             })
             .collect();

@@ -10,7 +10,11 @@
 //! * [`oracle`] — the planner's O(1) interval cost oracle: per-piece
 //!   prefix aggregates ([`PieceMeta`]) plus lazy per-end-piece suffix
 //!   tables ([`CostOracle`]) that answer `Ts(i, j, m)` without
-//!   re-walking the graph, bit-identically to [`stage_cost`].
+//!   re-walking the graph, bit-identically to [`stage_cost`]. It also
+//!   hosts the serving data plane's analytic twin: [`plan_stage_tiles`]
+//!   / [`plan_wire_windows`] / [`plan_link_bytes`] predict exactly the
+//!   slab windows (and therefore payload bytes) the coordinator
+//!   forwards across each inter-stage hop.
 
 pub mod feature;
 pub mod flops;
@@ -20,7 +24,9 @@ pub mod stage;
 pub use feature::{
     proportional_splits, required_rows, row_splits, segment_tiles, Interval, LayerTile,
 };
-pub use oracle::{CostOracle, OracleStats, PieceMeta};
+pub use oracle::{
+    plan_link_bytes, plan_stage_tiles, plan_wire_windows, CostOracle, OracleStats, PieceMeta,
+};
 pub use flops::{
     halo_rows, ideal_segment_flops, layer_flops, piece_redundancy, segment_flops, segment_sinks,
     total_flops,

@@ -37,10 +37,12 @@
 //! results are bit-identical to the reference path, which
 //! `rust/tests/planner_equivalence.rs` pins across the model zoo.
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use super::feature::{proportional_splits, required_rows, Interval};
-use super::flops::{layer_flops, layer_param_bytes};
+use super::feature::{proportional_splits, required_rows, segment_tiles, Interval, LayerTile};
+use super::flops::{layer_flops, layer_param_bytes, segment_sinks};
+use super::stage::stage_splits;
 use crate::cluster::{Device, Network};
 use crate::graph::{LayerId, ModelGraph, Op, Shape};
 
@@ -667,6 +669,122 @@ fn record_cross(
     }
 }
 
+/// Per-device tile geometry for every stage of a serving plan: the
+/// [`stage_splits`] + [`segment_tiles`] composition, with devices whose
+/// sink split is empty dropped — exactly the per-(stage, device) tiles
+/// the serving coordinator's workers compute with. `segments[si]` is
+/// stage `si`'s layer segment, `rosters[si]` its device roster.
+pub fn plan_stage_tiles(
+    g: &ModelGraph,
+    segments: &[Vec<LayerId>],
+    rosters: &[Vec<&Device>],
+) -> Vec<Vec<BTreeMap<LayerId, LayerTile>>> {
+    assert_eq!(segments.len(), rosters.len(), "one device roster per stage");
+    segments
+        .iter()
+        .zip(rosters)
+        .map(|(seg, devs)| {
+            stage_splits(g, seg, devs)
+                .iter()
+                .filter(|s| !s.is_empty())
+                .map(|sink_out| segment_tiles(g, seg, sink_out))
+                .collect()
+        })
+        .collect()
+}
+
+/// The row window of every feature crossing each stage boundary. For
+/// boundary `si` (the hop out of stage `si`) this is the union, over
+/// every *downstream* stage's device tiles, of the rows each
+/// externally-fed feature must supply — halo rows included, straight
+/// from the Eq. 2–3 geometry in `stage_tiles` (as produced by
+/// [`plan_stage_tiles`]). Flat features carry no window (they always
+/// move whole), and the model output is pinned to full height on its
+/// final hop so the collector can materialize the response frame.
+///
+/// This is the serving data plane's narrowing contract: stage workers
+/// forward exactly these windows across each link, nothing more.
+pub fn plan_wire_windows(
+    g: &ModelGraph,
+    segments: &[Vec<LayerId>],
+    stage_tiles: &[Vec<BTreeMap<LayerId, LayerTile>>],
+) -> Vec<BTreeMap<LayerId, Interval>> {
+    let n_stages = segments.len();
+    let mut windows: Vec<BTreeMap<LayerId, Interval>> = vec![BTreeMap::new(); n_stages];
+    for (si, win) in windows.iter_mut().enumerate() {
+        for (seg, tiles_d) in segments.iter().zip(stage_tiles).skip(si + 1) {
+            for tiles in tiles_d {
+                for (&id, tile) in tiles {
+                    // Count feed windows only: external producers plus
+                    // an in-segment model input (fed, not computed).
+                    if seg.contains(&id) && g.layer(id).op != Op::Input {
+                        continue;
+                    }
+                    let e = win.entry(id).or_insert(tile.out_iv);
+                    e.0 = e.0.min(tile.out_iv.0);
+                    e.1 = e.1.max(tile.out_iv.1);
+                }
+            }
+        }
+    }
+    let out = g.output_id();
+    if let Some(last) = windows.last_mut() {
+        last.insert(out, (0, g.shape(out).height().max(1)));
+    }
+    windows
+}
+
+/// Feature-data bytes one request moves across each hop of a serving
+/// chain, in hop order `feeder→s0, s0→s1, …, s_last→collector`
+/// (`segments.len() + 1` entries). Hop 0 carries the whole input
+/// frame; every later hop carries the sending stage's forwarded live
+/// set — its sinks plus still-needed upstream features — narrowed to
+/// the [`plan_wire_windows`] boundary cut (flat features whole).
+///
+/// This is the analytic twin of the serving data plane: on a clean run
+/// each link's `ServeReport::link_metrics[..].payload_bytes` equals
+/// `n_requests ×` this prediction, a contract pinned by
+/// `rust/tests/net.rs`.
+pub fn plan_link_bytes(
+    g: &ModelGraph,
+    segments: &[Vec<LayerId>],
+    rosters: &[Vec<&Device>],
+) -> Vec<u64> {
+    let tiles = plan_stage_tiles(g, segments, rosters);
+    let windows = plan_wire_windows(g, segments, &tiles);
+    let mut hops = Vec::with_capacity(segments.len() + 1);
+    hops.push(slab_bytes(g, 0, g.shape(0).height().max(1)) as u64);
+    // Features crossing each boundary: the workers' sink + live-set
+    // forwarding recurrence (a non-sink upstream feature keeps moving
+    // while any later stage still consumes it).
+    let mut live: Vec<LayerId> = vec![0];
+    for (si, seg) in segments.iter().enumerate() {
+        let mut crossing = segment_sinks(g, seg);
+        for &id in &live {
+            let consumed_later = segments[si + 1..]
+                .iter()
+                .flatten()
+                .any(|&c| g.layer(c).inputs.contains(&id));
+            if consumed_later && !crossing.contains(&id) {
+                crossing.push(id);
+            }
+        }
+        let bytes: u64 = crossing
+            .iter()
+            .map(|&id| {
+                let rows = match windows[si].get(&id) {
+                    Some(&(a, b)) => b - a,
+                    None => g.shape(id).height().max(1),
+                };
+                slab_bytes(g, id, rows) as u64
+            })
+            .sum();
+        hops.push(bytes);
+        live = crossing;
+    }
+    hops
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -820,6 +938,39 @@ mod tests {
                 let want = stage_cost(&g, &seg, &devs, &c.network).total;
                 assert_eq!(oracle.interval_cost(i, j).to_bits(), want.to_bits(), "({i},{j})");
             }
+        }
+    }
+
+    #[test]
+    fn plan_link_bytes_covers_endpoints_and_never_exceeds_full_features() {
+        let g = modelzoo::synthetic_chain(8);
+        let pieces = partition::partition(&g, 5, None).unwrap().pieces;
+        let cluster = Cluster::homogeneous_rpi(4, 1.0);
+        let plan = crate::pipeline::plan(&g, &pieces, &cluster, f64::INFINITY).unwrap();
+        assert!(plan.stages.len() > 1, "want a real pipeline");
+        let segments: Vec<Vec<LayerId>> =
+            plan.stages.iter().map(|s| s.layers.clone()).collect();
+        let rosters: Vec<Vec<&Device>> = plan
+            .stages
+            .iter()
+            .map(|s| s.devices.iter().map(|&i| &cluster.devices[i]).collect())
+            .collect();
+        let hops = plan_link_bytes(&g, &segments, &rosters);
+        assert_eq!(hops.len(), plan.stages.len() + 1);
+        assert_eq!(hops[0], g.shape(0).bytes() as u64, "feeder hop = whole input frame");
+        let out = g.output_id();
+        assert_eq!(
+            *hops.last().unwrap(),
+            g.shape(out).bytes() as u64,
+            "collector hop = whole output"
+        );
+        // Every interior cut moves something, and never more than the
+        // crossing features' full-height bytes (the pre-slab volume).
+        let windows = plan_wire_windows(&g, &segments, &plan_stage_tiles(&g, &segments, &rosters));
+        for (si, &b) in hops.iter().enumerate().skip(1) {
+            assert!(b > 0, "hop {si} moves no bytes");
+            let full: u64 = windows[si - 1].keys().map(|&id| g.shape(id).bytes() as u64).sum();
+            assert!(b <= full, "hop {si}: windowed {b} exceeds full-feature {full}");
         }
     }
 

@@ -34,9 +34,11 @@
 //!   ([`baselines`]), the heterogeneous cluster model ([`cluster`]),
 //!   and — on top of the shared [`engine`] — the analytical simulator
 //!   ([`sim`]), the threaded serving [`coordinator`] that executes
-//!   real tensors through AOT artifacts ([`runtime`]), the transport
-//!   layer ([`net`]) carrying inter-stage handoff over framed links
-//!   (loopback or TCP, with scripted fault injection), the recovery
+//!   real tensors through AOT artifacts ([`runtime`], whose
+//!   [`runtime::RowSlab`] views are the zero-copy data plane below),
+//!   the transport layer ([`net`]) carrying inter-stage handoff over
+//!   framed links (loopback or TCP, with scripted fault injection),
+//!   the recovery
 //!   supervisor ([`recover`]) that heals transport faults and re-plans
 //!   around device loss, the open-loop load harness ([`load`]) that
 //!   stress-tests a deployment under production-style arrival streams,
@@ -98,13 +100,38 @@
 //! by `rust/tests/agreement.rs` (which, like every example and the CLI,
 //! goes through the facade).
 //!
+//! ## The data plane: row-slab views, copies in exactly two places
+//!
+//! Feature maps move through serving as [`runtime::RowSlab`] views — an
+//! `Arc`-shared row-contiguous buffer (or several abutting/overlapping
+//! ones) plus a window of global feature rows — collected per request
+//! in a [`runtime::SlabSet`]. Ownership and aliasing rules: a backing
+//! buffer is immutable once shared (producers finish the `Tensor`,
+//! then wrap it), so halo rows requested by several downstream tiles
+//! alias the same allocation safely; feed slicing is
+//! [`runtime::RowSlab::narrow`] (an `Arc` clone, never data), and
+//! stage workers assemble device-tile outputs with
+//! [`runtime::RowSlab::from_parts`] instead of stitching a full
+//! feature. Copies are allowed in exactly two places on the request
+//! path: [`runtime::RowSlab::pad`] (a kernel needs one contiguous,
+//! possibly bordered input buffer) and the collector's final stitch
+//! ([`runtime::RowSlab::materialize`] — the wire's window gather is the
+//! same copy when a frame is actually serialized). Each inter-stage hop
+//! forwards every live feature narrowed to its boundary's wire window —
+//! the union of rows downstream tiles read, per
+//! [`cost::plan_wire_windows`] — so measured per-link feature bytes
+//! ([`net::LinkMetrics::payload_bytes`]) equal the planner's
+//! [`cost::plan_link_bytes`] boundary-cut prediction exactly (pinned in
+//! `rust/tests/net.rs`; view semantics in `rust/tests/property.rs`).
+//!
 //! ## The wire: stage handoff behind a transport trait
 //!
 //! [`net`] owns everything between two stage workers. Frames are
 //! length-prefixed binary (`[u32 LE length][kind][body]`): a versioned
 //! handshake carrying [`net::WIRE_VERSION`], the deployment's
 //! [`net::plan_hash`] and the link identity; sequenced batch frames
-//! with each member's live tensor set; drain/swap control barriers; an
+//! with each member's live slab-window set (tagged flat/slab feature
+//! encoding since wire v3); drain/swap control barriers; an
 //! explicit close. The compatibility rule mirrors the plan artifact's:
 //! a receiver accepts exactly its own wire version and rejects
 //! everything else typed — links are executable contracts, not

@@ -9,11 +9,20 @@
 //!                  ep = tag u8 (0 feeder / 1 stage / 2 collector) | index u32
 //! kind 2  Batch    seq u64 | t_ready f64 | n u32 | n x member
 //!                  member  = id u64 | t_submit f64 | k u32 | k x feature
-//!                  feature = layer u64 | ndims u8 | ndims x dim u32
-//!                            | elems u32 | elems x f32
+//!                  feature = layer u64 | tag u8
+//!                    tag 0 (flat) elems u32 | elems x f32
+//!                    tag 1 (slab) c u32 | w u32 | r0 u32 | rows u32
+//!                                 | c*rows*w x f32
 //! kind 3  Control  seq u64 | barrier u8 (0 drain / 1 swap / 2 ping) | epoch u64
 //! kind 4  Close    seq u64
 //! ```
+//!
+//! A slab feature carries only its **window** — global feature rows
+//! `[r0, r0+rows)` gathered channel-major — so a hop moves exactly the
+//! cut/halo bytes its consumer needs, never the full feature map.
+//! Overlapping backing parts are deduplicated by the gather (each
+//! window row is written once); the decoder rebuilds a single-buffer
+//! [`RowSlab`] at the same global offset.
 //!
 //! **Handshake compatibility rule** (mirrors the plan artifact's
 //! [`crate::deploy::PLAN_VERSION`] rule): `Hello.version` is bumped on
@@ -32,16 +41,16 @@
 //! [`MAX_FRAME_BYTES`] — malformed input yields a typed error, never a
 //! panic, hang, or unbounded allocation.
 
-use std::sync::Arc;
-
 use crate::error::PicoError;
 use crate::graph::LayerId;
-use crate::runtime::Tensor;
+use crate::runtime::{RowSlab, SlabSet, Tensor};
 
 /// Wire protocol version carried (and checked) by every handshake.
-/// v2 added the `Ping` barrier code (2) — a v1 reader would reject it
-/// as an unknown barrier, so the version was bumped per the rule below.
-pub const WIRE_VERSION: u16 = 2;
+/// v2 added the `Ping` barrier code (2); v3 replaced the batch frame's
+/// whole-tensor features with row-slab windows (tagged flat/slab
+/// encoding, global row offsets) — a v2 reader would misparse the
+/// feature body, so the version was bumped per the rule below.
+pub const WIRE_VERSION: u16 = 3;
 
 /// Hard cap on a single frame's payload bytes. Generous: the largest
 /// zoo feature (vgg16 input, 3x224x224 f32) is ~0.6 MB per member, so
@@ -51,7 +60,7 @@ pub const MAX_FRAME_BYTES: usize = 256 * 1024 * 1024;
 /// Minimum encoded bytes per batch member (id + t_submit + count) —
 /// used to bound interior counts before allocating.
 const MIN_MEMBER_BYTES: usize = 8 + 8 + 4;
-/// Minimum encoded bytes per live feature (layer + ndims + elems).
+/// Minimum encoded bytes per live feature (layer + tag + flat elems).
 const MIN_FEATURE_BYTES: usize = 8 + 1 + 4;
 
 /// One endpoint of an inter-stage link.
@@ -118,16 +127,17 @@ pub struct Hello {
     pub link: LinkId,
 }
 
-/// One request travelling inside a batch frame: its live feature set
-/// (every tensor downstream stages still need), sorted by layer id so
-/// the encoding — and therefore the byte stream — is deterministic.
-/// Tensors are `Arc`-shared: in-process transports forward the frame
-/// structurally without copying feature data.
+/// One request travelling inside a batch frame: its live slab set
+/// (every feature window downstream stages still need), sorted by layer
+/// id so the encoding — and therefore the byte stream — is
+/// deterministic. Slabs are `Arc`-backed views: in-process transports
+/// forward the frame structurally without copying feature data, and the
+/// wire gathers only each slab's window.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BatchMember {
     pub id: u64,
     pub t_submit: f64,
-    pub live: Vec<(LayerId, Arc<Tensor>)>,
+    pub live: SlabSet,
 }
 
 /// Barrier kind for control frames (drain/swap coordination — the plan
@@ -154,6 +164,16 @@ pub enum Frame {
     Close { seq: u64 },
 }
 
+/// Encoded bytes of one live feature (header + window data).
+fn feature_len(s: &RowSlab) -> usize {
+    if s.is_flat() {
+        MIN_FEATURE_BYTES + 4 * s.window_elems()
+    } else {
+        // layer + tag + (c, w, r0, rows) + window data
+        8 + 1 + 16 + 4 * s.window_elems()
+    }
+}
+
 impl Frame {
     pub fn kind_name(&self) -> &'static str {
         match self {
@@ -177,17 +197,27 @@ impl Frame {
                         .iter()
                         .map(|m| {
                             MIN_MEMBER_BYTES
-                                + m.live
-                                    .iter()
-                                    .map(|(_, t)| {
-                                        MIN_FEATURE_BYTES + 4 * t.dims.len() + 4 * t.data.len()
-                                    })
-                                    .sum::<usize>()
+                                + m.live.iter().map(|(_, s)| feature_len(s)).sum::<usize>()
                         })
                         .sum::<usize>()
             }
             Frame::Control { .. } => 8 + 1 + 8,
             Frame::Close { .. } => 8,
+        }
+    }
+
+    /// Feature **data** bytes inside this frame: the f32 window
+    /// payloads of a batch, excluding every header (frame, member and
+    /// feature). This is the quantity the planner's `cost::oracle`
+    /// predicts as boundary-cut volume, so telemetry tracks it
+    /// separately from [`Frame::wire_len`].
+    pub fn payload_data_len(&self) -> usize {
+        match self {
+            Frame::Batch { members, .. } => members
+                .iter()
+                .map(|m| m.live.iter().map(|(_, s)| 4 * s.window_elems()).sum::<usize>())
+                .sum(),
+            _ => 0,
         }
     }
 
@@ -222,15 +252,29 @@ impl Frame {
                     buf.extend_from_slice(&m.id.to_le_bytes());
                     buf.extend_from_slice(&m.t_submit.to_le_bytes());
                     buf.extend_from_slice(&(m.live.len() as u32).to_le_bytes());
-                    for (layer, t) in &m.live {
+                    for (layer, s) in m.live.iter() {
                         buf.extend_from_slice(&(*layer as u64).to_le_bytes());
-                        buf.push(t.dims.len() as u8);
-                        for &d in &t.dims {
-                            buf.extend_from_slice(&(d as u32).to_le_bytes());
-                        }
-                        buf.extend_from_slice(&(t.data.len() as u32).to_le_bytes());
-                        for &x in &t.data {
-                            buf.extend_from_slice(&x.to_le_bytes());
+                        if s.is_flat() {
+                            buf.push(0);
+                            let t = s.view();
+                            buf.extend_from_slice(&(t.data.len() as u32).to_le_bytes());
+                            for &x in &t.data {
+                                buf.extend_from_slice(&x.to_le_bytes());
+                            }
+                        } else {
+                            buf.push(1);
+                            let (c, w) = s.cw();
+                            let (r0, r1) = s.rows();
+                            for v in [c, w, r0, r1 - r0] {
+                                buf.extend_from_slice(&(v as u32).to_le_bytes());
+                            }
+                            for ch in 0..c {
+                                for r in r0..r1 {
+                                    for &x in s.row(ch, r) {
+                                        buf.extend_from_slice(&x.to_le_bytes());
+                                    }
+                                }
+                            }
                         }
                     }
                 }
@@ -285,32 +329,50 @@ impl Frame {
                     let id = r.u64()?;
                     let t_submit = r.f64()?;
                     let n_live = r.count(MIN_FEATURE_BYTES, "live features")?;
-                    let mut live = Vec::with_capacity(n_live);
+                    let mut live: Vec<(LayerId, RowSlab)> = Vec::with_capacity(n_live);
                     for _ in 0..n_live {
                         let layer = r.u64()? as usize;
-                        let ndims = r.u8()? as usize;
-                        let mut dims = Vec::with_capacity(ndims.min(16));
-                        for _ in 0..ndims {
-                            dims.push(r.u32()? as usize);
-                        }
-                        let n_elems = r.count(4, "feature elements")?;
-                        // Checked: dims are attacker-controlled, and a
-                        // plain product can overflow (a panic, exactly
-                        // what decoding must never do).
-                        let expect = dims
-                            .iter()
-                            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
-                            .ok_or_else(|| {
-                                PicoError::Transport(format!(
-                                    "feature {layer}: dims {dims:?} overflow"
-                                ))
-                            })?;
-                        if expect != n_elems {
-                            return Err(PicoError::Transport(format!(
-                                "feature {layer}: {n_elems} elements do not fill dims {dims:?}"
-                            )));
-                        }
-                        let data = r.f32s(n_elems)?;
+                        let slab = match r.u8()? {
+                            0 => {
+                                let n_elems = r.count(4, "feature elements")?;
+                                let data = r.f32s(n_elems)?;
+                                RowSlab::from_tensor(Tensor::new(vec![n_elems], data), 0)
+                            }
+                            1 => {
+                                let c = r.u32()? as usize;
+                                let w = r.u32()? as usize;
+                                let r0 = r.u32()? as usize;
+                                let rows = r.u32()? as usize;
+                                if c == 0 || w == 0 || rows == 0 {
+                                    return Err(PicoError::Transport(format!(
+                                        "feature {layer}: empty slab window \
+                                         ({c}x{rows}x{w} at row {r0})"
+                                    )));
+                                }
+                                // Checked: the geometry is attacker-
+                                // controlled, and a plain product can
+                                // overflow (a panic, exactly what
+                                // decoding must never do).
+                                let elems = c
+                                    .checked_mul(rows)
+                                    .and_then(|v| v.checked_mul(w))
+                                    .filter(|&v| v <= r.remaining() / 4)
+                                    .ok_or_else(|| {
+                                        PicoError::Transport(format!(
+                                            "feature {layer}: slab {c}x{rows}x{w} cannot fit \
+                                             in {} remaining bytes",
+                                            r.remaining()
+                                        ))
+                                    })?;
+                                let data = r.f32s(elems)?;
+                                RowSlab::from_tensor(Tensor::new(vec![c, rows, w], data), r0)
+                            }
+                            t => {
+                                return Err(PicoError::Transport(format!(
+                                    "feature {layer}: unknown slab tag {t}"
+                                )));
+                            }
+                        };
                         if let Some(prev) = live.last().map(|(l, _)| *l) {
                             if prev >= layer {
                                 return Err(PicoError::Transport(format!(
@@ -318,9 +380,9 @@ impl Frame {
                                 )));
                             }
                         }
-                        live.push((layer, Arc::new(Tensor::new(dims, data))));
+                        live.push((layer, slab));
                     }
-                    members.push(BatchMember { id, t_submit, live });
+                    members.push(BatchMember { id, t_submit, live: SlabSet::from_sorted(live) });
                 }
                 Frame::Batch { seq, t_ready, members }
             }
@@ -448,8 +510,10 @@ impl Reader<'_> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Arc;
 
     fn sample_batch() -> Frame {
+        let chw = Tensor::new(vec![2, 2, 3], (0..12).map(|i| i as f32 - 4.5).collect());
         Frame::Batch {
             seq: 7,
             t_ready: 1.25,
@@ -457,12 +521,13 @@ mod tests {
                 BatchMember {
                     id: 11,
                     t_submit: 0.5,
-                    live: vec![
-                        (0, Arc::new(Tensor::new(vec![2, 3], vec![1.0, -2.5, 0.0, 3.5, 4.0, 5.0]))),
-                        (4, Arc::new(Tensor::new(vec![1], vec![9.75]))),
-                    ],
+                    live: SlabSet::from_sorted(vec![
+                        // global rows [5, 7) of some larger feature
+                        (0, RowSlab::from_tensor(chw, 5)),
+                        (4, RowSlab::from_tensor(Tensor::new(vec![1], vec![9.75]), 0)),
+                    ]),
                 },
-                BatchMember { id: 12, t_submit: 0.625, live: vec![] },
+                BatchMember { id: 12, t_submit: 0.625, live: SlabSet::new() },
             ],
         }
     }
@@ -487,6 +552,44 @@ mod tests {
             let (back, used) = Frame::decode_wire(&wire).unwrap();
             assert_eq!(used, wire.len());
             assert_eq!(back, f);
+        }
+    }
+
+    #[test]
+    fn narrowed_and_multi_part_slabs_gather_on_the_wire() {
+        let t = Tensor::new(vec![1, 6, 2], (0..12).map(|i| i as f32).collect());
+        // A zero-copy narrow of a bigger buffer and an overlapping
+        // two-part assembly: the wire must carry each window row once.
+        let narrowed = RowSlab::from_tensor(t.clone(), 0).narrow(2, 5);
+        let parts = RowSlab::from_parts(
+            vec![
+                (Arc::new(t.slice_rows(0, 4)), 0usize),
+                (Arc::new(t.slice_rows(3, 6)), 3),
+            ],
+            0,
+            6,
+        );
+        let f = Frame::Batch {
+            seq: 0,
+            t_ready: 0.0,
+            members: vec![BatchMember {
+                id: 1,
+                t_submit: 0.0,
+                live: SlabSet::from_sorted(vec![(0, narrowed), (2, parts)]),
+            }],
+        };
+        // 3 + 6 window rows x width 2 x 4 bytes, overlap deduplicated
+        assert_eq!(f.payload_data_len(), (3 + 6) * 2 * 4);
+        let wire = f.encode();
+        assert_eq!(wire.len(), f.wire_len());
+        let (back, _) = Frame::decode_wire(&wire).unwrap();
+        assert_eq!(back, f, "gathered windows decode semantically equal");
+        match back {
+            Frame::Batch { members, .. } => {
+                let s = members[0].live.get(0).unwrap();
+                assert_eq!(s.rows(), (2, 5), "global offset survives the wire");
+            }
+            _ => unreachable!(),
         }
     }
 
@@ -520,8 +623,30 @@ mod tests {
         assert!(format!("{err}").contains("cannot fit"), "{err}");
     }
 
+    /// Byte offset of the first feature's `rows` field in the sample
+    /// batch payload: kind, seq, t_ready, n, id, t_submit, k, layer,
+    /// tag, c, w, r0.
+    const ROWS_OFF: usize = 1 + 8 + 8 + 4 + 8 + 8 + 4 + 8 + 1 + 4 + 4 + 4;
+
     #[test]
-    fn dims_data_mismatch_and_trailing_garbage_are_rejected() {
+    fn slab_geometry_lies_are_rejected() {
+        // Inflated rows: the implied element count exceeds the bytes
+        // actually present — typed error before any allocation.
+        let mut payload = sample_batch().encode()[4..].to_vec();
+        assert_eq!(payload[ROWS_OFF], 2, "sample layout drifted");
+        payload[ROWS_OFF] = 200;
+        let err = Frame::decode(&payload).unwrap_err();
+        assert!(format!("{err}").contains("cannot fit"), "{err}");
+
+        // Zeroed rows: an empty slab window is meaningless.
+        let mut payload = sample_batch().encode()[4..].to_vec();
+        payload[ROWS_OFF] = 0;
+        let err = Frame::decode(&payload).unwrap_err();
+        assert!(format!("{err}").contains("empty slab window"), "{err}");
+    }
+
+    #[test]
+    fn trailing_garbage_is_rejected() {
         let mut wire = sample_batch().encode();
         wire.extend_from_slice(&[0, 0, 0]);
         let fixed_len = {
@@ -532,14 +657,5 @@ mod tests {
         };
         let err = Frame::decode_wire(&fixed_len).unwrap_err();
         assert!(format!("{err}").contains("trailing garbage"), "{err}");
-
-        // Corrupt the first member's first dim (2 -> 3): the element
-        // count no longer fills the dims.
-        let mut payload = sample_batch().encode()[4..].to_vec();
-        let dim_off = 1 + 8 + 8 + 4 + 8 + 8 + 4 + 8 + 1;
-        assert_eq!(payload[dim_off], 2);
-        payload[dim_off] = 3;
-        let err = Frame::decode(&payload).unwrap_err();
-        assert!(format!("{err}").contains("do not fill"), "{err}");
     }
 }

@@ -3,15 +3,15 @@
 //! The paper's stages live on *wireless devices*, so the stage-worker
 //! chain must not assume shared memory. This module owns everything
 //! between two workers: the length-prefixed binary codec
-//! ([`frame::Frame`] — versioned handshake, batch + tensor payload,
-//! drain/swap control barriers, close; format and compatibility rule
-//! documented in [`frame`]), the [`Transport`] trait that hands out
-//! directed links, and two implementations:
+//! ([`frame::Frame`] — versioned handshake, batch + slab-window
+//! payload, drain/swap control barriers, close; format and
+//! compatibility rule documented in [`frame`]), the [`Transport`] trait
+//! that hands out directed links, and two implementations:
 //!
 //! * [`Loopback`] — in-process bounded channels. Frames move
-//!   structurally (the `Arc`-shared tensors are never serialized), so
-//!   `coordinator::serve_replicated` is exactly `serve_remote` over a
-//!   `Loopback` with no deadline.
+//!   structurally (the `Arc`-backed slab views are never serialized),
+//!   so `coordinator::serve_replicated` is exactly `serve_remote` over
+//!   a `Loopback` with no deadline.
 //! * [`TcpTransport`] — blocking `std::net` TCP on localhost with
 //!   per-connection read/write deadlines; every frame round-trips
 //!   through the codec for real.
@@ -46,10 +46,12 @@
 //! default is unchanged.
 //!
 //! Every [`StageTx`] records frames sent, wire bytes moved (computed
-//! from the codec even when a loopback link skips serialization) and
-//! observed send time into a shared [`LinkStats`]; the serving
-//! coordinator surfaces them as [`LinkMetrics`] in its report — the
-//! measured per-link signal a network-aware adapter consumes.
+//! from the codec even when a loopback link skips serialization),
+//! feature-data payload bytes (the slab windows alone — the quantity
+//! the cost oracle predicts) and observed send time into a shared
+//! [`LinkStats`]; the serving coordinator surfaces them as
+//! [`LinkMetrics`] in its report — the measured per-link signal a
+//! network-aware adapter consumes.
 
 mod fault;
 mod frame;
@@ -183,6 +185,9 @@ impl Transport for Loopback {
 pub struct LinkStats {
     pub frames: AtomicU64,
     pub bytes: AtomicU64,
+    /// Feature data bytes only (slab windows, no frame/member/feature
+    /// headers) — see [`Frame::payload_data_len`].
+    pub payload_bytes: AtomicU64,
     pub send_nanos: AtomicU64,
 }
 
@@ -199,6 +204,12 @@ pub struct LinkMetrics {
     /// Wire bytes moved (length prefixes included; computed from the
     /// codec even on loopback links that skip serialization).
     pub bytes: u64,
+    /// Feature **data** bytes moved: the f32 slab windows inside batch
+    /// frames, excluding every header. This is the quantity the
+    /// planner's `cost::oracle` predicts as boundary-cut volume
+    /// (`cost::plan_link_bytes`), so the two are directly comparable —
+    /// the pinned oracle-agreement contract in `rust/tests/net.rs`.
+    pub payload_bytes: u64,
     /// Wall-clock seconds spent inside sends on this link.
     pub send_secs: f64,
 }
@@ -223,6 +234,7 @@ impl StageTx {
             return Ok(false);
         }
         let wire = frame.wire_len() as u64;
+        let data = frame.payload_data_len() as u64;
         let t0 = Instant::now();
         let outcome = self.inner.send(frame)?;
         self.stats.send_nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
@@ -230,6 +242,7 @@ impl StageTx {
             SendOutcome::Sent => {
                 self.stats.frames.fetch_add(1, Ordering::Relaxed);
                 self.stats.bytes.fetch_add(wire, Ordering::Relaxed);
+                self.stats.payload_bytes.fetch_add(data, Ordering::Relaxed);
                 Ok(true)
             }
             SendOutcome::PeerClosed => {
@@ -421,18 +434,15 @@ pub fn plan_hash(g: &ModelGraph, plans: &[PipelinePlan]) -> u64 {
 mod tests {
     use super::*;
     use crate::modelzoo;
-    use crate::runtime::Tensor;
+    use crate::runtime::{RowSlab, SlabSet, Tensor};
 
     fn link_id() -> LinkId {
         LinkId { replica: 0, from: Endpoint::Stage(0), to: Endpoint::Stage(1) }
     }
 
     fn member(id: u64) -> BatchMember {
-        BatchMember {
-            id,
-            t_submit: 0.5,
-            live: vec![(0, Arc::new(Tensor::new(vec![2], vec![1.0, 2.0])))],
-        }
+        let slab = RowSlab::from_tensor(Tensor::new(vec![2], vec![1.0, 2.0]), 0);
+        BatchMember { id, t_submit: 0.5, live: SlabSet::from_sorted(vec![(0, slab)]) }
     }
 
     #[test]
@@ -456,6 +466,8 @@ mod tests {
         assert!(rx.recv_batch().unwrap().is_none());
         assert_eq!(stats.frames.load(Ordering::Relaxed), 4);
         assert!(stats.bytes.load(Ordering::Relaxed) > 0);
+        let data = stats.payload_bytes.load(Ordering::Relaxed);
+        assert_eq!(data, 8, "exactly the batch's 2 f32s of feature data");
     }
 
     #[test]

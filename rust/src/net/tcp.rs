@@ -195,8 +195,7 @@ impl LinkRx for TcpRx {
 mod tests {
     use super::*;
     use crate::net::{BatchMember, Endpoint};
-    use crate::runtime::Tensor;
-    use std::sync::Arc;
+    use crate::runtime::{RowSlab, SlabSet, Tensor};
 
     fn link_id() -> LinkId {
         LinkId { replica: 0, from: Endpoint::Feeder, to: Endpoint::Stage(0) }
@@ -206,16 +205,17 @@ mod tests {
     fn frames_round_trip_bit_exactly_over_tcp() {
         let t = TcpTransport::new(Some(Duration::from_secs(5))).unwrap();
         let (mut tx, mut rx) = t.link(&link_id(), 4).unwrap();
+        let slab = RowSlab::from_tensor(
+            Tensor::new(vec![2, 1, 2], vec![1.5, -0.25, f32::MIN_POSITIVE, 1e30]),
+            4,
+        );
         let frame = Frame::Batch {
             seq: 0,
             t_ready: 0.125,
             members: vec![BatchMember {
                 id: 3,
                 t_submit: 1e-9,
-                live: vec![(
-                    2,
-                    Arc::new(Tensor::new(vec![2, 2], vec![1.5, -0.25, f32::MIN_POSITIVE, 1e30])),
-                )],
+                live: SlabSet::from_sorted(vec![(2, slab)]),
             }],
         };
         assert_eq!(tx.send(frame.clone()).unwrap(), SendOutcome::Sent);

@@ -2,11 +2,19 @@
 //! backend. This is the rust twin of `python/compile/plan.py::
 //! run_stage_tile` — the integration tests pin the two to the same
 //! numbers through the golden io vectors.
+//!
+//! Feeds and results are [`RowSlab`] views in **global** row
+//! coordinates: slicing a kernel's required input rows out of a feed is
+//! a zero-copy [`RowSlab::narrow`], and the single copy per conv/pool
+//! tile happens inside [`RowSlab::pad`] when the kernel needs a
+//! bordered contiguous buffer (none at all when padding is zero and the
+//! window is a whole buffer).
 
 use std::collections::{BTreeMap, HashMap};
 
 use super::engine::{artifact_key, dense_key, Engine, PipelineArtifacts};
 use super::reference::{self, Weights};
+use super::slab::RowSlab;
 use super::tensor::Tensor;
 use crate::cost::{required_rows, LayerTile};
 use crate::graph::{LayerId, ModelGraph, Op};
@@ -23,40 +31,37 @@ pub enum Backend<'a> {
 /// Execute `segment` for one device.
 ///
 /// `tiles` comes from [`crate::cost::segment_tiles`] for this device's
-/// sink split; `feeds` maps each external feed layer to the row slab
-/// covering `tiles[feed].out_iv`. Returns every in-segment layer's
-/// produced slab (callers read the sinks).
+/// sink split; `feeds` maps each external feed layer to a slab view
+/// covering at least `tiles[feed].out_iv` (global rows). Returns every
+/// in-segment layer's produced slab (callers read the sinks).
 pub fn run_stage(
     g: &ModelGraph,
     segment: &[LayerId],
     tiles: &BTreeMap<LayerId, LayerTile>,
-    feeds: &HashMap<LayerId, Tensor>,
+    feeds: &HashMap<LayerId, RowSlab>,
     backend: &Backend,
-) -> anyhow::Result<HashMap<LayerId, Tensor>> {
-    // avail: layer → (tensor slab, first global row of the slab)
-    let mut avail: HashMap<LayerId, (Tensor, usize)> = HashMap::new();
-    for (&id, t) in feeds {
-        let tile = tiles
-            .get(&id)
-            .ok_or_else(|| anyhow::anyhow!("feed {} not in tile map", g.layer(id).name))?;
-        avail.insert(id, (t.clone(), tile.out_iv.0));
+) -> anyhow::Result<HashMap<LayerId, RowSlab>> {
+    let mut avail: HashMap<LayerId, RowSlab> = HashMap::new();
+    for (&id, slab) in feeds {
+        anyhow::ensure!(tiles.contains_key(&id), "feed {} not in tile map", g.layer(id).name);
+        avail.insert(id, slab.clone());
     }
     let mut out = HashMap::new();
     for &id in segment {
         let l = g.layer(id);
         let tile = tiles[&id];
-        let y = match l.op {
+        let y: RowSlab = match l.op {
             Op::Conv | Op::MaxPool | Op::AvgPool => {
                 let src = l.inputs[0];
-                let (src_t, src_row0) = avail
+                let src_s = avail
                     .get(&src)
                     .ok_or_else(|| anyhow::anyhow!("{}: missing input slab", l.name))?;
                 let req = required_rows(g, id, tile.out_iv);
                 let h_src = g.shape(src).height();
                 let lo = req.0.max(0) as usize;
                 let hi = (req.1.min(h_src as isize)) as usize;
-                let slab = src_t.slice_rows(lo - src_row0, hi - src_row0);
-                match backend {
+                let slab = src_s.narrow(lo, hi);
+                let t = match backend {
                     Backend::Native { weights } => {
                         let fill = if l.op == Op::MaxPool {
                             f32::NEG_INFINITY
@@ -78,48 +83,51 @@ pub fn run_stage(
                         // Padding is baked into the artifact; feed the raw slab.
                         let key =
                             artifact_key(&l.name, tile.in_rows, tile.pad_top, tile.pad_bottom);
-                        artifacts.executable(engine, &key)?.run(&slab)?
+                        artifacts.executable(engine, &key)?.run(&slab.view())?
                     }
-                }
+                };
+                RowSlab::from_tensor(t, tile.out_iv.0)
             }
             Op::Add | Op::Concat => {
                 let mut xs = Vec::new();
                 for &src in &l.inputs {
-                    let (src_t, src_row0) = avail
+                    let src_s = avail
                         .get(&src)
                         .ok_or_else(|| anyhow::anyhow!("{}: missing input slab", l.name))?;
-                    xs.push(src_t.slice_rows(tile.out_iv.0 - src_row0, tile.out_iv.1 - src_row0));
+                    xs.push(src_s.narrow(tile.out_iv.0, tile.out_iv.1));
                 }
-                if l.op == Op::Add {
-                    Tensor::add(&xs)
+                let t = if l.op == Op::Add {
+                    RowSlab::add(&xs)
                 } else {
-                    Tensor::concat_channels(&xs)
-                }
+                    RowSlab::concat(&xs)
+                };
+                RowSlab::from_tensor(t, tile.out_iv.0)
             }
             Op::Flatten => {
                 let src = l.inputs[0];
-                let (src_t, src_row0) = &avail[&src];
+                let src_s = &avail[&src];
                 anyhow::ensure!(
-                    *src_row0 == 0 && src_t.chw().1 == g.shape(src).height(),
+                    src_s.rows() == (0, g.shape(src).height()),
                     "{}: flatten requires the full feature",
                     l.name
                 );
-                src_t.flatten()
+                RowSlab::from_tensor(src_s.view().flatten(), 0)
             }
             Op::Dense => {
                 let src = l.inputs[0];
-                let (src_t, _) = &avail[&src];
-                match backend {
+                let x = avail[&src].view();
+                let t = match backend {
                     Backend::Native { weights } => {
                         let wts = weights
                             .get(&id)
                             .ok_or_else(|| anyhow::anyhow!("{}: missing weights", l.name))?;
-                        reference::dense(src_t, l, wts)
+                        reference::dense(&x, l, wts)
                     }
                     Backend::Pjrt { engine, artifacts } => {
-                        artifacts.executable(engine, &dense_key(&l.name))?.run(src_t)?
+                        artifacts.executable(engine, &dense_key(&l.name))?.run(&x)?
                     }
-                }
+                };
+                RowSlab::from_tensor(t, 0)
             }
             // The model input can land inside the first stage's segment
             // (Algorithm 1 puts it in the first piece): its "computation"
@@ -129,7 +137,7 @@ pub fn run_stage(
                 .cloned()
                 .ok_or_else(|| anyhow::anyhow!("input layer not fed"))?,
         };
-        avail.insert(id, (y.clone(), tile.out_iv.0));
+        avail.insert(id, y.clone());
         out.insert(id, y);
     }
     Ok(out)
@@ -164,9 +172,10 @@ pub fn run_full_native(
         .map(|&s| (s, (0, g.shape(s).height().max(1))))
         .collect();
     let tiles = crate::cost::segment_tiles(g, &segment, &sink_out);
-    let feeds: HashMap<LayerId, Tensor> = [(0usize, input.clone())].into();
+    let feeds: HashMap<LayerId, RowSlab> =
+        [(0usize, RowSlab::from_tensor(input.clone(), 0))].into();
     let out = run_stage(g, &segment, &tiles, &feeds, &Backend::Native { weights })?;
-    Ok(out[&g.output_id()].clone())
+    Ok(out[&g.output_id()].materialize())
 }
 
 #[cfg(test)]
@@ -174,9 +183,10 @@ mod tests {
     use super::*;
     use crate::cost::{row_splits, segment_tiles};
     use crate::modelzoo;
+    use std::sync::Arc;
 
     /// The core runtime invariant (paper Eq. 2-3): executing a stage
-    /// split across devices and stitching the sink slabs reproduces the
+    /// split across devices and assembling the sink slabs reproduces the
     /// unsplit computation bit-exactly (same fp32 op order per tile).
     fn check_split_equals_whole(name: &str, model: crate::graph::ModelGraph, splits: &[usize]) {
         let g = model;
@@ -188,9 +198,10 @@ mod tests {
             (0..c * h * w).map(|_| rng.normal() as f32).collect(),
         );
         let whole = run_full_native(&g, &weights, &input).unwrap();
+        let input_slab = RowSlab::from_tensor(input, 0);
 
         // Split every spatial prefix stage `parts` ways at the last
-        // spatial layer, run per-device, stitch, then run the head.
+        // spatial layer, run per-device, assemble, then run the head.
         for &parts in splits {
             let segment: Vec<LayerId> = (1..g.n_layers()).collect();
             let sinks = crate::cost::segment_sinks(&g, &segment);
@@ -201,23 +212,27 @@ mod tests {
             if h_sink < parts {
                 continue;
             }
-            let mut slabs = Vec::new();
+            let mut slabs: Vec<(Arc<Tensor>, usize)> = Vec::new();
             for iv in row_splits(h_sink, parts) {
-                let sink_out: BTreeMap<LayerId, (usize, usize)> = [(sink, iv)].into();
+                let sink_out: std::collections::BTreeMap<LayerId, (usize, usize)> =
+                    [(sink, iv)].into();
                 let tiles = segment_tiles(&g, &segment, &sink_out);
                 let in_iv = tiles[&0].out_iv;
-                let feeds: HashMap<LayerId, Tensor> =
-                    [(0usize, input.slice_rows(in_iv.0, in_iv.1))].into();
+                // a zero-copy narrow of the one shared input buffer
+                let feeds: HashMap<LayerId, RowSlab> =
+                    [(0usize, input_slab.narrow(in_iv.0, in_iv.1))].into();
                 let out = run_stage(&g, &segment, &tiles, &feeds, &Backend::Native {
                     weights: &weights,
                 })
                 .unwrap();
-                slabs.push(out[&sink].clone());
+                let s = &out[&sink];
+                assert!(s.is_flat() || s.rows() == iv, "{name}: sink window");
+                slabs.push((s.shared().expect("sink is a whole buffer").clone(), iv.0));
             }
-            let stitched = if g.shape(sink).height() > 0 && slabs[0].dims.len() == 3 {
-                Tensor::stitch_rows(&slabs)
+            let stitched = if g.shape(sink).height() > 0 && slabs[0].0.dims.len() == 3 {
+                RowSlab::from_parts(slabs, 0, h_sink).materialize()
             } else {
-                slabs[0].clone()
+                (*slabs[0].0).clone()
             };
             assert!(
                 stitched.max_abs_diff(&whole) < 1e-4,

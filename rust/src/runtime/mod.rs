@@ -9,15 +9,20 @@
 //! * [`engine`] — PJRT engine: loads the HLO-text artifacts produced by
 //!   `python/compile/aot.py` (L2/L1) and executes them on the XLA CPU
 //!   client. Python never runs here — artifacts are ahead-of-time.
+//! * [`slab`] — zero-copy row-slab views: `Arc`-shared buffers + global
+//!   row windows, the unit every request payload moves in (narrow/split
+//!   are views; copies happen only at `pad` and the collector stitch).
 //! * [`executor`] — stage executor: drives one device's share of a stage
 //!   segment (tile geometry from [`crate::cost::segment_tiles`]) through
-//!   either backend.
+//!   either backend, consuming and producing row slabs.
 
 pub mod engine;
 pub mod executor;
 pub mod reference;
+pub mod slab;
 pub mod tensor;
 
 pub use engine::{artifact_key, Engine, PipelineArtifacts};
 pub use executor::{run_stage, Backend};
+pub use slab::{RowSlab, SlabSet};
 pub use tensor::Tensor;

@@ -1,0 +1,450 @@
+//! Zero-copy row-slab views over shared tensor buffers (§5.3).
+//!
+//! The paper splits feature maps "by directly operating the frame tensor
+//! data in the memory space"; [`RowSlab`] is that idea as an owned view:
+//! an `Arc`-shared row-contiguous buffer (or several abutting/overlapping
+//! ones) plus a window of **global** feature rows `[r0, r1)`. Narrowing a
+//! view ([`RowSlab::narrow`]) and assembling device-tile outputs into a
+//! stage result ([`RowSlab::from_parts`]) clone `Arc`s, never data.
+//!
+//! Copies are allowed in exactly two places on the request path:
+//!
+//! * [`RowSlab::pad`] — a kernel needs a contiguous (possibly bordered)
+//!   input buffer, gathered from the view in a single pass;
+//! * [`RowSlab::materialize`] — the collector stitches the final output
+//!   (and the wire gathers a window into one frame). Between stages,
+//!   nothing materializes.
+//!
+//! Aliasing rules: a part's buffer is immutable once wrapped in an `Arc`
+//! (producers build the `Tensor` first, then share it), so overlapping
+//! windows — halo rows requested by several downstream tiles — alias
+//! safely. When parts overlap, the overlap holds identical values by
+//! construction (each global row is computed once per stage); readers may
+//! take any covering part, and the gather takes the first in ascending
+//! `row0` order.
+
+use std::borrow::Cow;
+use std::sync::Arc;
+
+use super::tensor::Tensor;
+use crate::graph::LayerId;
+
+/// One shared buffer holding global rows `[row0, row0 + h)`.
+#[derive(Debug, Clone)]
+struct SlabPart {
+    buf: Arc<Tensor>,
+    row0: usize,
+}
+
+impl SlabPart {
+    fn h(&self) -> usize {
+        self.buf.chw().1
+    }
+    fn end(&self) -> usize {
+        self.row0 + self.h()
+    }
+}
+
+/// A view of feature rows `[r0, r1)` (global coordinates) over one or
+/// more shared buffers, or a whole flat (1-D) tensor.
+///
+/// Flat tensors (`Flatten`/`Dense` outputs) are modelled as a single
+/// part with the degenerate window `[0, 1)` — they are never split.
+#[derive(Debug, Clone)]
+pub struct RowSlab {
+    parts: Vec<SlabPart>,
+    r0: usize,
+    r1: usize,
+    flat: bool,
+}
+
+impl RowSlab {
+    /// Wrap an owned tensor as a view of its full extent, with its first
+    /// row at global row `row0` (0 for flat tensors).
+    pub fn from_tensor(t: Tensor, row0: usize) -> RowSlab {
+        RowSlab::from_arc(Arc::new(t), row0)
+    }
+
+    /// Share an existing buffer as a full-extent view starting at global
+    /// row `row0`.
+    pub fn from_arc(buf: Arc<Tensor>, row0: usize) -> RowSlab {
+        if buf.dims.len() == 3 {
+            let h = buf.chw().1;
+            RowSlab { r0: row0, r1: row0 + h, parts: vec![SlabPart { buf, row0 }], flat: false }
+        } else {
+            assert_eq!(row0, 0, "flat tensors live at global row 0");
+            RowSlab { parts: vec![SlabPart { buf, row0: 0 }], r0: 0, r1: 1, flat: true }
+        }
+    }
+
+    /// Assemble a view `[r0, r1)` from `(buffer, row0)` parts — the
+    /// stage worker's replacement for `Tensor::stitch_rows`: device-tile
+    /// outputs become one logical feature without copying. Parts must be
+    /// CHW with identical (c, w), sorted ascending by `row0`, and must
+    /// cover every row of the window (overlap is fine).
+    pub fn from_parts(parts: Vec<(Arc<Tensor>, usize)>, r0: usize, r1: usize) -> RowSlab {
+        assert!(!parts.is_empty() && r0 < r1, "empty slab window [{r0},{r1})");
+        let (c, _, w) = parts[0].0.chw();
+        let parts: Vec<SlabPart> =
+            parts.into_iter().map(|(buf, row0)| SlabPart { buf, row0 }).collect();
+        let mut cover = r0;
+        for (i, p) in parts.iter().enumerate() {
+            let (pc, _, pw) = p.buf.chw();
+            assert_eq!((pc, pw), (c, w), "slab part shape mismatch");
+            if i > 0 {
+                assert!(p.row0 >= parts[i - 1].row0, "slab parts out of order");
+            }
+            assert!(p.row0 <= cover, "gap before global row {} in slab [{r0},{r1})", p.row0);
+            cover = cover.max(p.end());
+        }
+        assert!(cover >= r1, "slab parts cover only [{r0},{cover}) of [{r0},{r1})");
+        RowSlab { parts, r0, r1, flat: false }
+    }
+
+    /// Global window `[r0, r1)`. Flat slabs report `(0, 1)`.
+    pub fn rows(&self) -> (usize, usize) {
+        (self.r0, self.r1)
+    }
+
+    pub fn is_flat(&self) -> bool {
+        self.flat
+    }
+
+    /// (channels, width) of a CHW slab.
+    pub fn cw(&self) -> (usize, usize) {
+        let (c, _, w) = self.parts[0].buf.chw();
+        (c, w)
+    }
+
+    /// f32 elements inside the window (flat: the whole vector).
+    pub fn window_elems(&self) -> usize {
+        if self.flat {
+            self.parts[0].buf.len()
+        } else {
+            let (c, w) = self.cw();
+            c * (self.r1 - self.r0) * w
+        }
+    }
+
+    /// Zero-copy narrowing to global rows `[a, b)`: parts that do not
+    /// intersect the new window are dropped, the rest are `Arc`-cloned.
+    /// Flat slabs only admit the identity narrow `(0, 1)`.
+    pub fn narrow(&self, a: usize, b: usize) -> RowSlab {
+        assert!(
+            self.r0 <= a && a < b && b <= self.r1,
+            "narrow [{a},{b}) outside window [{},{})",
+            self.r0,
+            self.r1
+        );
+        if self.flat {
+            return self.clone();
+        }
+        let parts: Vec<SlabPart> =
+            self.parts.iter().filter(|p| p.row0 < b && p.end() > a).cloned().collect();
+        RowSlab { parts, r0: a, r1: b, flat: false }
+    }
+
+    /// The backing buffer, when the window is exactly one whole buffer —
+    /// the zero-copy fast path for forwarding and PJRT dispatch.
+    pub fn shared(&self) -> Option<&Arc<Tensor>> {
+        match &self.parts[..] {
+            [p] if self.flat || (p.row0 == self.r0 && p.end() == self.r1) => Some(&p.buf),
+            _ => None,
+        }
+    }
+
+    /// Every distinct backing buffer (test hook for zero-copy
+    /// assertions via `Arc::ptr_eq` / `Arc::strong_count`).
+    pub fn backings(&self) -> impl Iterator<Item = &Arc<Tensor>> {
+        self.parts.iter().map(|p| &p.buf)
+    }
+
+    /// One channel's row `r` (global coordinates), read from the first
+    /// covering part.
+    pub fn row(&self, ch: usize, r: usize) -> &[f32] {
+        debug_assert!(!self.flat && self.r0 <= r && r < self.r1);
+        let p = self
+            .parts
+            .iter()
+            .find(|p| p.row0 <= r && r < p.end())
+            .unwrap_or_else(|| panic!("no slab part covers global row {r}"));
+        let (_, h, w) = p.buf.chw();
+        let base = ch * h * w + (r - p.row0) * w;
+        &p.buf.data[base..base + w]
+    }
+
+    /// Gather the window into an owned `[c, r1-r0, w]` tensor (flat:
+    /// clone of the vector) — the collector-stitch / wire-gather copy.
+    pub fn materialize(&self) -> Tensor {
+        if self.flat {
+            return (*self.parts[0].buf).clone();
+        }
+        if let Some(buf) = self.shared() {
+            return (**buf).clone();
+        }
+        let (c, w) = self.cw();
+        let rows = self.r1 - self.r0;
+        let mut data = Vec::with_capacity(c * rows * w);
+        for ch in 0..c {
+            for r in self.r0..self.r1 {
+                data.extend_from_slice(self.row(ch, r));
+            }
+        }
+        Tensor::new(vec![c, rows, w], data)
+    }
+
+    /// The window as a tensor, borrowing the backing buffer when the
+    /// window is exactly one whole buffer and copying otherwise.
+    pub fn view(&self) -> Cow<'_, Tensor> {
+        match self.shared() {
+            Some(buf) => Cow::Borrowed(&**buf),
+            None => Cow::Owned(self.materialize()),
+        }
+    }
+
+    /// Gather + border-pad in a single copy: the kernel-input path
+    /// (`value` fills the border; −inf for maxpool tiles). With zero
+    /// padding this degrades to [`RowSlab::view`] (no copy on the
+    /// fast path).
+    pub fn pad(&self, t: usize, b: usize, l: usize, r: usize, value: f32) -> Cow<'_, Tensor> {
+        assert!(!self.flat, "pad on a flat slab");
+        if t == 0 && b == 0 && l == 0 && r == 0 {
+            return self.view();
+        }
+        let (c, w) = self.cw();
+        let rows = self.r1 - self.r0;
+        let (nh, nw) = (rows + t + b, w + l + r);
+        let mut out = Tensor::new(vec![c, nh, nw], vec![value; c * nh * nw]);
+        for ch in 0..c {
+            for row in 0..rows {
+                let dst = ch * nh * nw + (row + t) * nw + l;
+                out.data[dst..dst + w].copy_from_slice(self.row(ch, self.r0 + row));
+            }
+        }
+        Cow::Owned(out)
+    }
+
+    /// Elementwise sum of same-window views (the Add connector), read
+    /// directly from the parts — no per-input slice copies.
+    pub fn add(xs: &[RowSlab]) -> Tensor {
+        assert!(!xs.is_empty());
+        let (c, w) = xs[0].cw();
+        let (r0, r1) = xs[0].rows();
+        let mut out = Tensor::zeros(vec![c, r1 - r0, w]);
+        for x in xs {
+            assert_eq!((x.cw(), x.rows()), ((c, w), (r0, r1)), "add window mismatch");
+            for ch in 0..c {
+                for r in r0..r1 {
+                    let dst = ch * (r1 - r0) * w + (r - r0) * w;
+                    for (o, v) in out.data[dst..dst + w].iter_mut().zip(x.row(ch, r)) {
+                        *o += v;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Channel concat of same-window views (the Concat connector).
+    pub fn concat(xs: &[RowSlab]) -> Tensor {
+        assert!(!xs.is_empty());
+        let (r0, r1) = xs[0].rows();
+        let w = xs[0].cw().1;
+        let c: usize = xs.iter().map(|x| x.cw().0).sum();
+        let mut data = Vec::with_capacity(c * (r1 - r0) * w);
+        for x in xs {
+            assert_eq!((x.cw().1, x.rows()), (w, (r0, r1)), "concat window mismatch");
+            for ch in 0..x.cw().0 {
+                for r in r0..r1 {
+                    data.extend_from_slice(x.row(ch, r));
+                }
+            }
+        }
+        Tensor::new(vec![c, r1 - r0, w], data)
+    }
+}
+
+impl PartialEq for RowSlab {
+    /// Semantic equality: same kind, same global window, same
+    /// materialized values — the backing layout (one buffer or many,
+    /// whole or narrowed) is invisible, so a slab that round-tripped
+    /// through the wire's single-buffer gather compares equal to the
+    /// multi-part original.
+    fn eq(&self, other: &RowSlab) -> bool {
+        self.flat == other.flat
+            && (self.r0, self.r1) == (other.r0, other.r1)
+            && self.materialize() == other.materialize()
+    }
+}
+
+/// A request's live payload: per-layer slabs, sorted ascending by layer
+/// id — the zero-copy replacement for `Vec<(LayerId, Arc<Tensor>)>`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SlabSet {
+    entries: Vec<(LayerId, RowSlab)>,
+}
+
+impl SlabSet {
+    pub fn new() -> SlabSet {
+        SlabSet::default()
+    }
+
+    /// Build from entries already sorted (strictly ascending) by layer.
+    pub fn from_sorted(entries: Vec<(LayerId, RowSlab)>) -> SlabSet {
+        debug_assert!(entries.windows(2).all(|p| p[0].0 < p[1].0), "slab set not sorted");
+        SlabSet { entries }
+    }
+
+    /// Insert or replace the slab for `id`, keeping the set sorted.
+    pub fn insert(&mut self, id: LayerId, slab: RowSlab) {
+        match self.entries.binary_search_by_key(&id, |e| e.0) {
+            Ok(i) => self.entries[i].1 = slab,
+            Err(i) => self.entries.insert(i, (id, slab)),
+        }
+    }
+
+    pub fn get(&self, id: LayerId) -> Option<&RowSlab> {
+        self.entries.binary_search_by_key(&id, |e| e.0).ok().map(|i| &self.entries[i].1)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &(LayerId, RowSlab)> {
+        self.entries.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(dims: Vec<usize>) -> Tensor {
+        let n: usize = dims.iter().product();
+        Tensor::new(dims, (0..n).map(|i| i as f32).collect())
+    }
+
+    #[test]
+    fn full_view_round_trips_and_shares() {
+        let t = seq(vec![2, 6, 3]);
+        let slab = RowSlab::from_tensor(t.clone(), 0);
+        assert_eq!(slab.rows(), (0, 6));
+        assert_eq!(slab.materialize(), t);
+        let buf = slab.shared().unwrap().clone();
+        assert_eq!(&*buf, &t);
+        // materialize on the shared fast path clones the same buffer
+        assert!(matches!(slab.view(), Cow::Borrowed(_)));
+    }
+
+    #[test]
+    fn narrow_matches_slice_rows_and_never_copies() {
+        let t = seq(vec![2, 6, 3]);
+        let arc = Arc::new(t.clone());
+        let slab = RowSlab::from_arc(Arc::clone(&arc), 0);
+        for (a, b) in [(0, 2), (1, 5), (3, 6), (0, 6)] {
+            let n = slab.narrow(a, b);
+            assert_eq!(n.materialize(), t.slice_rows(a, b), "[{a},{b})");
+            // the view still aliases the original allocation
+            assert!(n.backings().all(|buf| Arc::ptr_eq(buf, &arc)));
+        }
+    }
+
+    #[test]
+    fn offset_windows_use_global_rows() {
+        let t = seq(vec![1, 4, 2]);
+        let slab = RowSlab::from_tensor(t.clone(), 10); // global rows [10,14)
+        assert_eq!(slab.rows(), (10, 14));
+        assert_eq!(slab.narrow(11, 13).materialize(), t.slice_rows(1, 3));
+        assert_eq!(slab.row(0, 12), &t.data[4..6]);
+    }
+
+    #[test]
+    fn multi_part_gather_matches_stitch() {
+        let t = seq(vec![2, 7, 3]);
+        let parts: Vec<(Arc<Tensor>, usize)> = [(0usize, 3usize), (3, 5), (5, 7)]
+            .iter()
+            .map(|&(a, b)| (Arc::new(t.slice_rows(a, b)), a))
+            .collect();
+        let slab = RowSlab::from_parts(parts, 0, 7);
+        assert!(slab.shared().is_none());
+        assert_eq!(slab.materialize(), t);
+        assert_eq!(slab.narrow(2, 6).materialize(), t.slice_rows(2, 6));
+    }
+
+    #[test]
+    fn overlapping_halo_parts_agree_with_the_flat_feature() {
+        // Two device tiles with a shared halo row: [0,4) and [3,7).
+        let t = seq(vec![2, 7, 3]);
+        let parts = vec![
+            (Arc::new(t.slice_rows(0, 4)), 0usize),
+            (Arc::new(t.slice_rows(3, 7)), 3),
+        ];
+        let slab = RowSlab::from_parts(parts, 0, 7);
+        assert_eq!(slab.materialize(), t);
+        // a window living entirely inside the overlap
+        assert_eq!(slab.narrow(3, 4).materialize(), t.slice_rows(3, 4));
+    }
+
+    #[test]
+    fn pad_matches_tensor_pad() {
+        let t = seq(vec![2, 5, 3]);
+        let slab = RowSlab::from_tensor(t.clone(), 0).narrow(1, 4);
+        let got = slab.pad(1, 2, 1, 1, f32::NEG_INFINITY);
+        assert_eq!(&*got, &t.slice_rows(1, 4).pad(1, 2, 1, 1, f32::NEG_INFINITY));
+        // zero padding borrows instead of copying
+        assert!(matches!(RowSlab::from_tensor(t, 0).pad(0, 0, 0, 0, 0.0), Cow::Borrowed(_)));
+    }
+
+    #[test]
+    fn add_and_concat_match_tensor_ops() {
+        let a = seq(vec![2, 4, 3]);
+        let b = Tensor::new(vec![2, 4, 3], a.data.iter().map(|v| v * 2.0).collect());
+        let (sa, sb) = (RowSlab::from_tensor(a.clone(), 0), RowSlab::from_tensor(b.clone(), 0));
+        assert_eq!(RowSlab::add(&[sa.clone(), sb.clone()]), Tensor::add(&[a.clone(), b.clone()]));
+        assert_eq!(RowSlab::concat(&[sa, sb]), Tensor::concat_channels(&[a, b]));
+    }
+
+    #[test]
+    fn flat_slabs_pass_through() {
+        let t = seq(vec![5]);
+        let slab = RowSlab::from_tensor(t.clone(), 0);
+        assert!(slab.is_flat());
+        assert_eq!(slab.rows(), (0, 1));
+        assert_eq!(slab.window_elems(), 5);
+        assert_eq!(slab.materialize(), t);
+        assert_eq!(slab.narrow(0, 1).materialize(), t);
+        assert!(slab.shared().is_some());
+    }
+
+    #[test]
+    fn slab_set_sorts_and_replaces() {
+        let mut set = SlabSet::new();
+        set.insert(3, RowSlab::from_tensor(seq(vec![1, 2, 2]), 0));
+        set.insert(1, RowSlab::from_tensor(seq(vec![4]), 0));
+        set.insert(3, RowSlab::from_tensor(seq(vec![1, 3, 2]), 0));
+        let ids: Vec<usize> = set.iter().map(|e| e.0).collect();
+        assert_eq!(ids, vec![1, 3]);
+        assert_eq!(set.get(3).unwrap().rows(), (0, 3));
+        assert!(set.get(2).is_none());
+        assert_eq!(set.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "cover only")]
+    fn gapped_parts_are_rejected() {
+        let t = seq(vec![1, 6, 2]);
+        let parts = vec![(Arc::new(t.slice_rows(0, 2)), 0usize)];
+        RowSlab::from_parts(parts, 0, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside window")]
+    fn narrow_outside_window_panics() {
+        RowSlab::from_tensor(seq(vec![1, 4, 2]), 2).narrow(0, 3);
+    }
+}

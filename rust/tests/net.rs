@@ -23,7 +23,10 @@ use pico::deploy::{Backend, DeploymentPlan, RemoteConfig, RemoteTransport, Repli
 use pico::engine::AdmissionPolicy;
 use pico::load::ArrivalProcess;
 use pico::modelzoo;
-use pico::net::{Endpoint, FaultAction, FaultScript, FaultyTransport, LinkId, Loopback};
+use pico::net::{
+    Endpoint, FaultAction, FaultScript, FaultyTransport, Frame, Hello, LinkId, Loopback, StageRx,
+    Transport, WIRE_VERSION,
+};
 use pico::recover::{serve_with_recovery, RecoveryConfig};
 use pico::runtime::Tensor;
 use pico::PicoError;
@@ -142,6 +145,86 @@ fn tcp_serve_remote_is_bit_exact_with_full_frame_accounting() {
             "wire accounting differs on r{} {}->{}",
             a.replica, a.from, a.to
         );
+    }
+}
+
+/// A peer still speaking the previous wire version is rejected at the
+/// handshake with a typed [`PicoError::Transport`] naming both versions
+/// — fail-fast, before any tensor moves, never a hang or a panic.
+#[test]
+fn stale_wire_version_hello_fails_fast_naming_both_versions() {
+    let t = Loopback::default();
+    let id = LinkId { replica: 0, from: Endpoint::Feeder, to: Endpoint::Stage(0) };
+    let (mut tx, rx) = t.link(&id, 4).unwrap();
+    tx.send(Frame::Hello(Hello { version: WIRE_VERSION - 1, plan_hash: 42, link: id })).unwrap();
+    let start = Instant::now();
+    let err = StageRx::new(id, rx).expect_hello(42).unwrap_err();
+    assert!(matches!(err, PicoError::Transport(_)), "{err:?}");
+    let msg = format!("{err}");
+    assert!(
+        msg.contains(&format!("peer speaks wire version {}", WIRE_VERSION - 1)),
+        "stale version not named: {msg}"
+    );
+    assert!(
+        msg.contains(&format!("reads exactly {WIRE_VERSION}")),
+        "expected version not named: {msg}"
+    );
+    assert!(start.elapsed() < Duration::from_secs(5), "version check did not fail fast");
+}
+
+/// The zero-copy data plane's accounting contract: per-link feature
+/// payload bytes equal `n_requests ×` the planner's boundary-cut
+/// prediction [`pico::cost::plan_link_bytes`] — exactly, link by link,
+/// both in-process (loopback) and over real TCP serialization. The
+/// tolerance for frame/member headers lives in `bytes`, never in
+/// `payload_bytes`.
+#[test]
+fn payload_bytes_equal_the_oracle_boundary_cut_prediction() {
+    for (model, devices) in [("squeezenet", 4), ("vgg16", 3)] {
+        let d = DeploymentPlan::builder()
+            .model(model)
+            .cluster(Cluster::homogeneous_rpi(devices, 1.0))
+            .build()
+            .unwrap();
+        let plan = &d.replicas[0];
+        assert!(plan.stages.len() >= 2, "{model}: want a multi-stage pipeline");
+        let segments: Vec<Vec<usize>> = plan.stages.iter().map(|s| s.layers.clone()).collect();
+        let rosters: Vec<Vec<&pico::cluster::Device>> = plan
+            .stages
+            .iter()
+            .map(|s| s.devices.iter().map(|&i| &d.cluster.devices[i]).collect())
+            .collect();
+        let hops = pico::cost::plan_link_bytes(&d.graph, &segments, &rosters);
+        assert_eq!(hops.len(), plan.stages.len() + 1, "{model}: one prediction per hop");
+        let (c, h, w) = d.graph.input_shape;
+        assert_eq!(hops[0], 4 * (c * h * w) as u64, "{model}: hop 0 is the full input");
+
+        let n = scaled(12);
+        let cfg = ServeConfig { n_requests: n, ..Default::default() };
+        let tcp = RemoteConfig {
+            transport: RemoteTransport::Tcp,
+            deadline: Some(Duration::from_secs(30)),
+            ..Default::default()
+        };
+        for (label, remote) in [("loopback", RemoteConfig::default()), ("tcp", tcp)] {
+            let report = d.serve_remote(&Backend::Null, &cfg, &remote).unwrap();
+            assert_eq!(report.link_metrics.len(), hops.len(), "{model} over {label}");
+            for (li, l) in report.link_metrics.iter().enumerate() {
+                assert_eq!(
+                    l.payload_bytes,
+                    n as u64 * hops[li],
+                    "{model} over {label}: link r{} {}->{} moved {} feature bytes, oracle \
+                     predicts {} per request x {n}",
+                    l.replica,
+                    l.from,
+                    l.to,
+                    l.payload_bytes,
+                    hops[li],
+                );
+                // Wire bytes = payload + frame/member/feature headers.
+                assert!(l.bytes > l.payload_bytes, "{model} over {label}: headers are free?");
+            }
+        }
     }
 }
 

@@ -11,7 +11,7 @@ use pico::cost::LayerTile;
 use pico::engine::{run_pipeline, AdmissionPolicy, EngineConfig, StageProfile};
 use pico::graph::{LayerId, ModelGraph};
 use pico::runtime::executor::{model_weights, run_full_native};
-use pico::runtime::Tensor;
+use pico::runtime::{RowSlab, SlabSet, Tensor};
 use pico::util::Rng;
 use pico::{modelzoo, partition, pipeline};
 
@@ -76,8 +76,8 @@ impl Compute for FaultyCompute {
         g: &ModelGraph,
         segment: &[LayerId],
         tiles: &BTreeMap<LayerId, LayerTile>,
-        feeds: &HashMap<LayerId, Tensor>,
-    ) -> anyhow::Result<HashMap<LayerId, Tensor>> {
+        feeds: &HashMap<LayerId, RowSlab>,
+    ) -> anyhow::Result<HashMap<LayerId, RowSlab>> {
         let k = self.poison.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
         if k == 5 {
             anyhow::bail!("injected device failure");
@@ -400,20 +400,37 @@ fn rand_link(rng: &mut Rng) -> LinkId {
     LinkId { replica: rng.below(8) as u32, from: rand_endpoint(rng), to: rand_endpoint(rng) }
 }
 
+fn rand_slab(rng: &mut Rng) -> RowSlab {
+    if rng.below(4) == 0 {
+        // Flat (Flatten/Dense) feature: tag 0 on the wire.
+        let n = rng.range(1, 6);
+        let data: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        return RowSlab::from_tensor(Tensor::new(vec![n], data), 0);
+    }
+    let (c, h, w) = (rng.range(1, 3), rng.range(2, 6), rng.range(1, 4));
+    let r0 = rng.below(7);
+    let data: Vec<f32> = (0..c * h * w).map(|_| rng.normal() as f32).collect();
+    let slab = RowSlab::from_tensor(Tensor::new(vec![c, h, w], data), r0);
+    if rng.below(2) == 0 {
+        // A strict sub-window exercises the wire's gather path.
+        let a = r0 + rng.below(h);
+        let b = a + 1 + rng.below(r0 + h - a);
+        slab.narrow(a, b)
+    } else {
+        slab
+    }
+}
+
 fn rand_member(rng: &mut Rng) -> BatchMember {
     // Live layer ids must be strictly ascending (the codec enforces
     // the sorted-set invariant), so draw ids by accumulation.
     let n_live = rng.range(1, 4);
     let mut id = 0usize;
-    let live = (0..n_live)
-        .map(|_| {
-            id += rng.range(1, 5);
-            let rows = rng.range(1, 4);
-            let cols = rng.range(1, 6);
-            let data: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32).collect();
-            (id, Arc::new(Tensor::new(vec![rows, cols], data)))
-        })
-        .collect();
+    let mut live = SlabSet::new();
+    for _ in 0..n_live {
+        id += rng.range(1, 5);
+        live.insert(id, rand_slab(rng));
+    }
     BatchMember { id: rng.next_u64(), t_submit: rng.f64() * 10.0, live }
 }
 
@@ -539,5 +556,128 @@ fn property_codec_corruption_never_panics() {
         wire.extend_from_slice(&[1, 2, 3]);
         let err = Frame::decode_wire(&wire).expect_err("hostile prefix decoded");
         assert!(matches!(err, PicoError::Transport(_)), "{err:?}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Row-slab view properties (rust/src/runtime/slab.rs): random shapes ×
+// random row splits round-trip bit-exactly, agree with the legacy copy
+// path, and never touch the backing buffers.
+// ---------------------------------------------------------------------
+
+fn rand_chw(rng: &mut Rng, c_max: usize, h: (usize, usize), w_max: usize) -> Tensor {
+    let (c, h, w) = (rng.range(1, c_max), rng.range(h.0, h.1), rng.range(1, w_max));
+    Tensor::new(vec![c, h, w], (0..c * h * w).map(|_| rng.normal() as f32).collect())
+}
+
+/// Random features cut into random device splits — each part optionally
+/// extended by halo rows, so neighbours overlap — reassemble through
+/// `from_parts` into exactly the original feature, and every nested
+/// `narrow` agrees bit-exactly with the legacy `slice_rows` copy.
+#[test]
+fn property_slab_halo_splits_round_trip_bit_exactly() {
+    let mut rng = Rng::new(0x51AB);
+    for round in 0..100 {
+        let t = rand_chw(&mut rng, 3, (2, 12), 5);
+        let h = t.chw().1;
+        let mut cuts = vec![0usize];
+        while *cuts.last().unwrap() < h {
+            cuts.push((cuts.last().unwrap() + rng.range(1, 4)).min(h));
+        }
+        let mut parts: Vec<(Arc<Tensor>, usize)> = Vec::new();
+        let mut prev_row0 = 0usize;
+        for p in cuts.windows(2) {
+            let a = p[0].saturating_sub(rng.below(3)).max(prev_row0); // halo above
+            let b = (p[1] + rng.below(3)).min(h); // halo below
+            prev_row0 = a;
+            parts.push((Arc::new(t.slice_rows(a, b)), a));
+        }
+        let slab = RowSlab::from_parts(parts, 0, h);
+        assert_eq!(slab.rows(), (0, h), "round {round}");
+        assert_eq!(slab.materialize(), t, "round {round}: gather != original");
+        let a = rng.below(h);
+        let b = a + 1 + rng.below(h - a);
+        let narrowed = slab.narrow(a, b);
+        assert_eq!(narrowed.materialize(), t.slice_rows(a, b), "round {round}: [{a},{b})");
+        // Narrowing a narrow stays consistent (the stage-chain case:
+        // every boundary re-narrows what the previous one forwarded).
+        let m = a + rng.below(b - a);
+        let n = m + 1 + rng.below(b - m);
+        assert_eq!(narrowed.narrow(m, n).materialize(), t.slice_rows(m, n), "round {round}");
+    }
+}
+
+/// RowSlab vs the legacy copy path on exact stage geometry: abutting
+/// device tiles assembled with `from_parts` equal `Tensor::stitch_rows`
+/// of the same tiles, and each per-device fetch window equals the
+/// corresponding `slice_rows`.
+#[test]
+fn property_slab_agrees_with_legacy_slice_and_stitch() {
+    let mut rng = Rng::new(0x5717C4);
+    for round in 0..60 {
+        let t = rand_chw(&mut rng, 4, (2, 10), 5);
+        let h = t.chw().1;
+        let mut cuts = vec![0usize];
+        while *cuts.last().unwrap() < h {
+            cuts.push((cuts.last().unwrap() + rng.range(1, 5)).min(h));
+        }
+        let tiles: Vec<Tensor> = cuts.windows(2).map(|p| t.slice_rows(p[0], p[1])).collect();
+        let slab = RowSlab::from_parts(
+            cuts.windows(2).zip(&tiles).map(|(p, x)| (Arc::new(x.clone()), p[0])).collect(),
+            0,
+            h,
+        );
+        assert_eq!(slab.materialize(), Tensor::stitch_rows(&tiles), "round {round}");
+        for p in cuts.windows(2) {
+            assert_eq!(
+                slab.narrow(p[0], p[1]).materialize(),
+                t.slice_rows(p[0], p[1]),
+                "round {round}: tile [{},{})",
+                p[0],
+                p[1]
+            );
+        }
+    }
+}
+
+/// The zero-copy contract itself: every view reachable through
+/// `from_parts`/`narrow` aliases the original allocations (`Arc::ptr_eq`
+/// on every backing), and reading through views leaves the backing
+/// bytes untouched.
+#[test]
+fn property_slab_views_alias_and_never_write() {
+    let mut rng = Rng::new(0xA11A5);
+    for round in 0..50 {
+        let t = rand_chw(&mut rng, 3, (4, 10), 4);
+        let h = t.chw().1;
+        let k = rng.range(1, h - 1);
+        let halo = rng.below(3).min(k);
+        let lo = Arc::new(t.slice_rows(0, k));
+        let hi = Arc::new(t.slice_rows(k - halo, h));
+        let snapshot = (lo.data.clone(), hi.data.clone());
+        let slab = RowSlab::from_parts(
+            vec![(Arc::clone(&lo), 0), (Arc::clone(&hi), k - halo)],
+            0,
+            h,
+        );
+        let a = rng.below(h);
+        let b = a + 1 + rng.below(h - a);
+        let narrowed = slab.narrow(a, b);
+        for view in [&slab, &narrowed] {
+            for buf in view.backings() {
+                assert!(
+                    Arc::ptr_eq(buf, &lo) || Arc::ptr_eq(buf, &hi),
+                    "round {round}: a view allocated a new backing buffer"
+                );
+            }
+        }
+        // Reads gather into fresh memory, never into the backings.
+        let _ = narrowed.materialize();
+        let _ = narrowed.pad(1, 1, 1, 1, 0.0);
+        assert_eq!(lo.data, snapshot.0, "round {round}: low backing mutated");
+        assert_eq!(hi.data, snapshot.1, "round {round}: high backing mutated");
+        // A whole-buffer window hands back the very same allocation.
+        let whole = RowSlab::from_arc(Arc::clone(&lo), 0);
+        assert!(Arc::ptr_eq(whole.shared().unwrap(), &lo), "round {round}");
     }
 }
